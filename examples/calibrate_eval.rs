@@ -1,0 +1,70 @@
+//! OSDT end to end on one task: Phase-1 calibration on the first sequence,
+//! profile persistence, Phase-2 evaluation, and the comparison against the
+//! Fast-dLLM baselines — a miniature of Table 1 for a single task.
+//!
+//!     cargo run --release --example calibrate_eval -- [task] [n]
+//!     (defaults: synth-math 48)
+
+use anyhow::Result;
+
+use osdt::bench::{self, RunOpts};
+use osdt::decode::Engine;
+use osdt::model::ModelConfig;
+use osdt::policy::{Calibrator, DynamicMode, Metric, ProfileStore, StaticThreshold};
+use osdt::runtime::ModelRuntime;
+use osdt::tokenizer::Tokenizer;
+use osdt::workload::Dataset;
+
+fn main() -> Result<()> {
+    osdt::util::logging::init();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let task = args.first().map(String::as_str).unwrap_or("synth-math");
+    let n: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(48);
+
+    let cfg = ModelConfig::load("artifacts")?;
+    let rt = ModelRuntime::load(&cfg)?;
+    let tok = Tokenizer::from_config(&cfg)?;
+    let ds = Dataset::load(cfg.artifact_dir.join("data"), task)?;
+
+    // ---- Phase 1: one-shot calibration (Algorithm 1, lines 3-6) -----------
+    let engine = Engine::new(&rt);
+    let layout = tok.layout_prompt(&cfg, &ds.examples[0].prompt)?;
+    let cal = engine.decode(layout, &StaticThreshold::new(bench::CALIBRATION_TAU))?;
+    println!(
+        "calibration sequence: {} steps, signature length {}",
+        cal.steps,
+        cal.trace.signature().len()
+    );
+    let profile = Calibrator::calibrate(&cal.trace, DynamicMode::Block, Metric::Q1);
+    let store = ProfileStore::new("profiles")?;
+    let path = store.save(task, &profile)?;
+    println!("profile saved -> {}", path.display());
+
+    // ---- Phase 2: evaluate OSDT vs baselines --------------------------------
+    let opts = RunOpts { n, ..Default::default() };
+    let specs = [
+        "osdt:block:q1:0.75:0.2",
+        "static:0.9",
+        "factor:0.95",
+        "sequential:1",
+    ];
+    let mut rows = Vec::new();
+    for spec in specs {
+        let row = bench::run_eval(&rt, &tok, &ds, spec, &opts)?;
+        rows.push(vec![
+            row.policy.clone(),
+            format!("{:.2}", row.accuracy * 100.0),
+            format!("{:.1}", row.tokens_per_sec),
+            format!("{:.1}", row.mean_steps),
+            format!("{:.1}", row.mean_latency_ms),
+        ]);
+    }
+    println!(
+        "\n{}",
+        bench::render_table(
+            &["policy", "acc%", "tokens/s", "steps/seq", "latency ms"],
+            &rows
+        )
+    );
+    Ok(())
+}

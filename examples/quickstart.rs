@@ -1,0 +1,56 @@
+//! Quickstart: load the AOT artifacts, decode a few prompts under different
+//! threshold policies, and print completions + step counts.
+//!
+//!     cargo run --release --example quickstart
+//!
+//! Shows the core trade-off the paper studies: sequential decoding spends
+//! one forward pass per token; threshold policies commit many tokens per
+//! pass at some accuracy risk.
+
+use anyhow::Result;
+
+use osdt::decode::Engine;
+use osdt::model::ModelConfig;
+use osdt::policy::{FactorThreshold, Policy, SequentialTopK, StaticThreshold};
+use osdt::runtime::ModelRuntime;
+use osdt::tokenizer::Tokenizer;
+
+fn main() -> Result<()> {
+    osdt::util::logging::init();
+    let cfg = ModelConfig::load("artifacts")?;
+    let rt = ModelRuntime::load(&cfg)?;
+    let tok = Tokenizer::from_config(&cfg)?;
+    let engine = Engine::new(&rt);
+
+    let prompts = [
+        "Q: 3+4-2=?",
+        "Q: class of bab? (A) rok (B) lum (C) dax (D) fen",
+        "op: rev | in: abc",
+    ];
+    let policies: Vec<(&str, Box<dyn Policy>)> = vec![
+        ("sequential (LLaDA)", Box::new(SequentialTopK::new(1))),
+        ("static τ=0.9 (Fast-dLLM)", Box::new(StaticThreshold::new(0.9))),
+        ("factor 0.95 (Fast-dLLM)", Box::new(FactorThreshold::new(0.95))),
+    ];
+
+    for prompt in prompts {
+        println!("\n=== {prompt}");
+        for (name, policy) in &policies {
+            let layout = tok.layout_prompt(&cfg, prompt)?;
+            let t0 = std::time::Instant::now();
+            let res = engine.decode(layout, policy.as_ref())?;
+            let dt = t0.elapsed().as_secs_f64();
+            println!(
+                "  {name:<26} steps={:<3} tokens/s={:<7.1} -> {}",
+                res.steps,
+                cfg.gen_len as f64 / dt,
+                tok.decode_until_eos(res.gen_tokens(&cfg)),
+            );
+        }
+    }
+    println!(
+        "\n(OSDT itself needs a one-shot calibration pass — see \
+         examples/calibrate_eval.rs and the `osdt eval` subcommand.)"
+    );
+    Ok(())
+}

@@ -1,0 +1,114 @@
+//! End-to-end serving driver (the repository's headline validation run):
+//! starts the coordinator + TCP server on the real model, replays a
+//! Poisson-arrival multi-task trace through real sockets with several
+//! client threads, and reports latency percentiles + throughput per policy.
+//!
+//!     cargo run --release --example serve_e2e -- [n_requests] [rate_rps]
+//!     (defaults: 36 requests at 4 rps)
+//!
+//! The run is recorded in EXPERIMENTS.md §E2E.
+
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use osdt::coordinator::{Coordinator, CoordinatorConfig};
+use osdt::model::ModelConfig;
+use osdt::runtime::ModelRuntime;
+use osdt::server::{Client, Server};
+use osdt::util::stats::Histogram;
+use osdt::workload::{mixed_trace, Dataset};
+
+fn main() -> Result<()> {
+    osdt::util::logging::init();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let n: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(36);
+    let rate: f64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(4.0);
+
+    // ---- stack: coordinator (2 workers, batching) + TCP server ------------
+    let cfg = ModelConfig::load("artifacts")?;
+    let ccfg = CoordinatorConfig {
+        workers: 2,
+        max_batch: 4,
+        batch_wait: Duration::from_millis(4),
+        ..Default::default()
+    };
+    let coord = Arc::new(Coordinator::start(ccfg, cfg.clone(), |wid| {
+        log::info!("worker {wid}: loading PJRT runtime");
+        let cfg = ModelConfig::load("artifacts")?;
+        ModelRuntime::load(&cfg)
+    })?);
+    let server = Server::start("127.0.0.1:0", coord.clone())?;
+    let addr = server.addr;
+    println!("serving on {addr} (2 workers, max batch 4)");
+
+    // ---- workload: Poisson mixture over the three tasks --------------------
+    let datasets = Dataset::load_all(cfg.artifact_dir.join("data"))?;
+    let trace = mixed_trace(&datasets, rate, n, 42);
+    let policy = "osdt:block:q1:0.75:0.2";
+    println!("replaying {n} requests at ~{rate} rps, policy {policy}");
+
+    let lat = Arc::new(Mutex::new(Histogram::latency()));
+    let ok = Arc::new(std::sync::atomic::AtomicU64::new(0));
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    // 4 client connections round-robin the trace, honoring arrival times
+    for c in 0..4usize {
+        let reqs: Vec<_> = trace
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| i % 4 == c)
+            .map(|(_, r)| r.clone())
+            .collect();
+        let lat = lat.clone();
+        let ok = ok.clone();
+        handles.push(std::thread::spawn(move || -> Result<()> {
+            let mut client = Client::connect(addr)?;
+            for r in reqs {
+                let due = Duration::from_secs_f64(r.at);
+                if let Some(wait) = due.checked_sub(t0.elapsed()) {
+                    std::thread::sleep(wait);
+                }
+                let sent = Instant::now();
+                let resp = client.generate(&r.task, &r.prompt, policy)?;
+                let e2e_us = sent.elapsed().as_secs_f64() * 1e6;
+                lat.lock().unwrap().record(e2e_us);
+                if resp.error.is_none() {
+                    ok.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                }
+            }
+            Ok(())
+        }));
+    }
+    for h in handles {
+        h.join().expect("client thread")?;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    // ---- report -------------------------------------------------------------
+    let lat = lat.lock().unwrap();
+    let done = ok.load(std::sync::atomic::Ordering::Relaxed);
+    println!("\n== end-to-end serving report ==");
+    println!("requests          : {done}/{n} ok in {wall:.2}s");
+    println!("request rate      : {:.2} rps (offered ~{rate})", n as f64 / wall);
+    println!(
+        "gen throughput    : {:.1} tokens/s",
+        (done as usize * cfg.gen_len) as f64 / wall
+    );
+    println!(
+        "latency e2e       : p50 {:.0}ms p95 {:.0}ms p99 {:.0}ms max {:.0}ms",
+        lat.quantile(0.5) / 1e3,
+        lat.quantile(0.95) / 1e3,
+        lat.quantile(0.99) / 1e3,
+        lat.max / 1e3
+    );
+    let mut mc = Client::connect(addr)?;
+    println!("\n== server metrics ==\n{}", mc.metrics()?);
+    server.stop();
+    match Arc::try_unwrap(coord) {
+        Ok(c) => c.shutdown(),
+        Err(_) => {}
+    }
+    Ok(())
+}

@@ -1,0 +1,79 @@
+//! Confidence-signature explorer: reproduces the paper's two observations
+//! (Figures 1–2) interactively on the real model — U-shaped step-block mean
+//! confidence and near-1 pairwise cosine similarity across inputs — and
+//! prints the calibrated thresholds each (mode, metric) pair would derive.
+//!
+//!     cargo run --release --example trace_confidence -- [task] [n]
+//!     (defaults: synth-math 6)
+
+use anyhow::Result;
+
+use osdt::bench;
+use osdt::model::ModelConfig;
+use osdt::policy::{Calibrator, DynamicMode, Metric};
+use osdt::runtime::ModelRuntime;
+use osdt::tokenizer::Tokenizer;
+use osdt::workload::Dataset;
+
+fn main() -> Result<()> {
+    osdt::util::logging::init();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let task = args.first().map(String::as_str).unwrap_or("synth-math");
+    let n: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(6);
+
+    let cfg = ModelConfig::load("artifacts")?;
+    let rt = ModelRuntime::load(&cfg)?;
+    let tok = Tokenizer::from_config(&cfg)?;
+    let ds = Dataset::load(cfg.artifact_dir.join("data"), task)?;
+
+    let traces = bench::collect_traces(&rt, &tok, &ds, n, bench::CALIBRATION_TAU)?;
+
+    // Figure 1: step-block mean confidence trajectory
+    let sig = bench::mean_signature(&traces);
+    print!(
+        "{}",
+        bench::ascii_plot(
+            &sig,
+            14,
+            &format!("{task}: step-block mean confidence ({n} inputs averaged)")
+        )
+    );
+
+    // Figure 2: pairwise cosine similarity
+    let m = bench::cosine_matrix(&traces);
+    let mut lo = f64::INFINITY;
+    let mut sum = 0.0;
+    let mut cnt = 0.0;
+    for i in 0..m.len() {
+        for j in 0..m.len() {
+            if i != j {
+                lo = lo.min(m[i][j]);
+                sum += m[i][j];
+                cnt += 1.0;
+            }
+        }
+    }
+    print!(
+        "{}",
+        bench::ascii_heatmap(&m, 0.9, 1.0, &format!("{task}: pairwise cosine"))
+    );
+    println!("off-diagonal cosine: mean {:.4}, min {:.4}\n", sum / cnt, lo);
+
+    // What each calibration (mode, metric) derives from trace #0
+    println!("calibrated thresholds from input 0:");
+    for metric in [Metric::Mean, Metric::Q1, Metric::Median, Metric::Q3] {
+        let p = Calibrator::calibrate(&traces[0], DynamicMode::Block, metric);
+        let taus: Vec<String> = (0..cfg.num_blocks)
+            .map(|b| format!("{:.3}", p.tau(b, 0)))
+            .collect();
+        println!("  block mode, {:<12} tau = [{}]", metric.as_str(), taus.join(", "));
+    }
+    let p = Calibrator::calibrate(&traces[0], DynamicMode::StepBlock, Metric::Median);
+    println!(
+        "  step-block q2, block 0 first steps: {:?}",
+        (0..traces[0].per_block[0].len().min(6))
+            .map(|s| (p.tau(0, s) * 1000.0).round() / 1000.0)
+            .collect::<Vec<_>>()
+    );
+    Ok(())
+}

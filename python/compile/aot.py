@@ -1,0 +1,237 @@
+"""AOT entrypoint: train (cached), lower every serving variant to HLO text,
+and emit all build artifacts consumed by the Rust coordinator.
+
+Interchange is HLO **text**, not serialized HloModuleProto: jax >= 0.5 emits
+protos with 64-bit instruction ids which the image's xla_extension 0.5.1
+rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids, so text
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs under artifacts/:
+  model_config.json          geometry + vocab + param order + variant table
+  weights.bin                OSDTW001 tensor container (frozen order)
+  checkpoint.npz             training checkpoint (cache for rebuilds)
+  fwd_conf_b{1,2,4}.hlo.txt  (weights..., tokens)                -> (conf, argmax)
+  fwd_full_kv_b1.hlo.txt     (weights..., tokens)                -> (conf, argmax, k$, v$)
+  fwd_window_b1.hlo.txt      (weights..., win_tokens, start, k$, v$) -> (conf, argmax)
+  logits_b1.hlo.txt          (weights..., tokens)                -> (logits,)  [debug]
+  data/<task>.eval.jsonl     synthetic eval datasets
+
+Weights are HLO *parameters* (not baked constants): the Rust runtime loads
+weights.bin once, uploads each tensor, and reuses the buffers every call.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import struct
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import data as data_mod
+from . import model as model_mod
+from . import train as train_mod
+
+BATCH_SIZES = (1, 2, 4)
+WINDOW = data_mod.BLOCK_LEN
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True so the
+    Rust side always unwraps a tuple, regardless of arity)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def write_weights_bin(path: str, params) -> None:
+    """OSDTW001 container: [magic][n][per tensor: name_len name dtype_code
+    ndim dims... f32 payload]. Little-endian throughout."""
+    order = model_mod.param_order()
+    assert set(order) == set(params), "param_order drifted from init_params"
+    with open(path, "wb") as f:
+        f.write(b"OSDTW001")
+        f.write(struct.pack("<I", len(order)))
+        for name in order:
+            arr = np.asarray(params[name], dtype=np.float32)
+            nb = name.encode()
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<B", 0))  # dtype code 0 = f32
+            f.write(struct.pack("<B", arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            f.write(arr.tobytes(order="C"))
+
+
+def _weights_tuple(params):
+    """Params as a positional tuple in frozen order (HLO parameter list)."""
+    return tuple(params[k] for k in model_mod.param_order())
+
+
+def _from_tuple(ws):
+    order = model_mod.param_order()
+    return dict(zip(order, ws))
+
+
+def lower_variants(params, out_dir: str) -> dict:
+    """Lower every serving variant; returns the variant table for
+    model_config.json."""
+    order = model_mod.param_order()
+    n_w = len(order)
+    shapes = {k: tuple(int(d) for d in np.asarray(params[k]).shape) for k in order}
+    w_specs = tuple(
+        jax.ShapeDtypeStruct(shapes[k], jnp.float32) for k in order
+    )
+    s = model_mod.SEQ_LEN
+    lhs = model_mod.N_LAYERS, model_mod.N_HEADS, s, model_mod.HEAD_DIM
+    variants = {}
+
+    def emit(name, fn, *arg_specs):
+        lowered = jax.jit(fn).lower(*w_specs, *arg_specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        print(f"[aot] {fname}: {len(text) / 1e6:.2f} MB")
+        return fname
+
+    for b in BATCH_SIZES:
+        def fwd_conf(*args, _b=b):
+            ws, tokens = args[:n_w], args[n_w]
+            return model_mod.fwd_conf(_from_tuple(ws), tokens, use_pallas=True)
+
+        fname = emit(
+            f"fwd_conf_b{b}", fwd_conf, jax.ShapeDtypeStruct((b, s), jnp.int32)
+        )
+        variants[f"fwd_conf_b{b}"] = {
+            "file": fname,
+            "batch": b,
+            "inputs": ["weights...", f"tokens i32[{b},{s}]"],
+            "outputs": [f"conf f32[{b},{s}]", f"argmax i32[{b},{s}]"],
+        }
+
+    def fwd_full_kv(*args):
+        ws, tokens = args[:n_w], args[n_w]
+        return model_mod.fwd_full_kv(_from_tuple(ws), tokens, use_pallas=True)
+
+    fname = emit(
+        "fwd_full_kv_b1", fwd_full_kv, jax.ShapeDtypeStruct((1, s), jnp.int32)
+    )
+    variants["fwd_full_kv_b1"] = {
+        "file": fname,
+        "batch": 1,
+        "inputs": ["weights...", f"tokens i32[1,{s}]"],
+        "outputs": [
+            f"conf f32[1,{s}]",
+            f"argmax i32[1,{s}]",
+            f"k_cache f32{list(lhs)}",
+            f"v_cache f32{list(lhs)}",
+        ],
+    }
+
+    def fwd_window(*args):
+        ws = args[:n_w]
+        win_tokens, start, kc, vc = args[n_w : n_w + 4]
+        return model_mod.fwd_window(
+            _from_tuple(ws), win_tokens, start, kc, vc, use_pallas=True
+        )
+
+    fname = emit(
+        "fwd_window_b1",
+        fwd_window,
+        jax.ShapeDtypeStruct((1, WINDOW), jnp.int32),
+        jax.ShapeDtypeStruct((), jnp.int32),
+        jax.ShapeDtypeStruct(lhs, jnp.float32),
+        jax.ShapeDtypeStruct(lhs, jnp.float32),
+    )
+    variants["fwd_window_b1"] = {
+        "file": fname,
+        "batch": 1,
+        "inputs": [
+            "weights...",
+            f"window_tokens i32[1,{WINDOW}]",
+            "start i32[]",
+            f"k_cache f32{list(lhs)}",
+            f"v_cache f32{list(lhs)}",
+        ],
+        "outputs": [f"conf f32[1,{WINDOW}]", f"argmax i32[1,{WINDOW}]"],
+    }
+
+    def logits_fn(*args):
+        ws, tokens = args[:n_w], args[n_w]
+        return (model_mod.fwd_logits(_from_tuple(ws), tokens, use_pallas=True),)
+
+    fname = emit("logits_b1", logits_fn, jax.ShapeDtypeStruct((1, s), jnp.int32))
+    variants["logits_b1"] = {
+        "file": fname,
+        "batch": 1,
+        "inputs": ["weights...", f"tokens i32[1,{s}]"],
+        "outputs": [f"logits f32[1,{s},{model_mod.VOCAB}]"],
+    }
+    return variants
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--train-steps", type=int, default=train_mod.TRAIN_STEPS)
+    ap.add_argument(
+        "--retrain", action="store_true", help="ignore cached checkpoint"
+    )
+    args = ap.parse_args()
+
+    out = args.out_dir
+    os.makedirs(out, exist_ok=True)
+    ckpt = os.path.join(out, "checkpoint.npz")
+
+    if os.path.exists(ckpt) and not args.retrain:
+        print(f"[aot] loading cached checkpoint {ckpt}")
+        params = train_mod.load_checkpoint(ckpt)
+    else:
+        print(f"[aot] training {args.train_steps} steps ...")
+        params, _ = train_mod.train(steps=args.train_steps)
+        train_mod.save_checkpoint(ckpt, params)
+
+    write_weights_bin(os.path.join(out, "weights.bin"), params)
+    variants = lower_variants(params, out)
+
+    cfg = model_mod.model_config()
+    cfg["variants"] = variants
+    cfg["weights_file"] = "weights.bin"
+    with open(os.path.join(out, "model_config.json"), "w") as f:
+        json.dump(cfg, f, indent=1)
+
+    data_mod.write_datasets(os.path.join(out, "data"))
+    write_golden(params, os.path.join(out, "golden_fwd.json"))
+    print("[aot] done")
+
+
+def write_golden(params, path: str) -> None:
+    """Cross-language golden vector: the Rust integration test compares its
+    PJRT execution of the artifacts against these JAX-computed values."""
+    from . import vocab
+
+    prompt = "Q: 3+4-2=?"
+    ids = [vocab.BOS] + vocab.encode(prompt)
+    ids += [vocab.PAD] * (data_mod.PROMPT_LEN - len(ids))
+    ids += [vocab.MASK] * data_mod.GEN_LEN
+    toks = jnp.asarray([ids], jnp.int32)
+    conf, arg = model_mod.fwd_conf(params, toks, use_pallas=True)
+    gold = {
+        "prompt": prompt,
+        "conf_64_72": [float(x) for x in np.asarray(conf[0, 64:72])],
+        "argmax_64_72": [int(x) for x in np.asarray(arg[0, 64:72])],
+    }
+    with open(path, "w") as f:
+        json.dump(gold, f)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,224 @@
+"""Synthetic task generators — the stand-ins for GPQA / GSM8K / HumanEval.
+
+Three tasks with the same evaluation *contracts* as the paper's benchmarks
+(see DESIGN.md §1):
+
+- ``synth-qa``   (GPQA analog): 4-way multiple-choice over a fixed synthetic
+  knowledge base the model memorises at train time (closed-book retrieval).
+- ``synth-math`` (GSM8K analog): 2-op arithmetic chains decoded with
+  intermediate steps and a ``#### <answer>`` tail.
+- ``synth-code`` (HumanEval analog): string-transform programs whose output
+  is *executed* by the Rust-side interpreter and judged functionally.
+
+Everything is deterministic given the seed. The eval JSONL files written by
+``write_datasets`` are the ground truth the Rust workload/eval modules load.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import random
+from dataclasses import dataclass
+
+from . import vocab
+
+# ---------------------------------------------------------------------------
+# Sequence geometry — must match model.py / model_config.json.
+# ---------------------------------------------------------------------------
+PROMPT_LEN = 64      # prompt region, [BOS] + text + [PAD]...
+BLOCK_LEN = 32       # semi-AR block size (paper uses 32)
+NUM_BLOCKS = 3
+GEN_LEN = BLOCK_LEN * NUM_BLOCKS
+SEQ_LEN = PROMPT_LEN + GEN_LEN
+
+TASKS = ("synth-qa", "synth-math", "synth-code")
+
+# ---------------------------------------------------------------------------
+# synth-qa: fixed knowledge base entity -> class
+# ---------------------------------------------------------------------------
+QA_CLASSES = ["rok", "lum", "dax", "fen"]
+_QA_CONSONANTS = "bcdfghjklmnpqrstvwxz"
+_QA_VOWELS = "aeiou"
+
+
+def qa_knowledge_base(seed: int = 7, n_entities: int = 128) -> dict[str, str]:
+    """Deterministic entity->class map. The model memorises this at train
+    time; eval questions query the same KB (closed-book, like GPQA's fixed
+    expert knowledge)."""
+    rng = random.Random(seed)
+    entities: list[str] = []
+    seen = set()
+    while len(entities) < n_entities:
+        e = (
+            rng.choice(_QA_CONSONANTS)
+            + rng.choice(_QA_VOWELS)
+            + rng.choice(_QA_CONSONANTS)
+        )
+        if e not in seen:
+            seen.add(e)
+            entities.append(e)
+    return {e: rng.choice(QA_CLASSES) for e in entities}
+
+
+def make_qa_example(kb: dict[str, str], rng: random.Random) -> dict:
+    # fixed option order: the model must recall the entity's class from its
+    # memorised KB (closed-book, like GPQA's fixed expert knowledge) and
+    # name the matching letter
+    entity = rng.choice(sorted(kb))
+    truth = kb[entity]
+    order = QA_CLASSES[:]
+    letter = "ABCD"[order.index(truth)]
+    opts = " ".join(f"({l}) {c}" for l, c in zip("ABCD", order))
+    prompt = f"Q: class of {entity}? {opts}"
+    completion = f"A: ({letter}) {truth} #### {letter}"
+    return {
+        "task": "synth-qa",
+        "prompt": prompt,
+        "completion": completion,
+        "answer": letter,
+        "meta": {"entity": entity, "class": truth, "options": order},
+    }
+
+
+# ---------------------------------------------------------------------------
+# synth-math: small arithmetic chains with worked steps
+# ---------------------------------------------------------------------------
+
+def make_math_example(rng: random.Random) -> dict:
+    # single-digit operands, 2 ops, intermediates in 0..18 — hard enough to
+    # show accuracy/throughput trade-offs, easy enough for a ~0.6M-param
+    # char model to learn at build time (GSM8K's *contract*, scaled down)
+    n_ops = 2
+    acc = rng.randint(1, 9)
+    terms = [str(acc)]
+    steps = []
+    for _ in range(n_ops):
+        op = rng.choice(["+", "-"])
+        operand = rng.randint(1, 9)
+        if op == "-" and acc - operand < 0:
+            op = "+"
+        nxt = acc + operand if op == "+" else acc - operand
+        steps.append(f"{acc}{op}{operand}={nxt}")
+        terms.append(f"{op}{operand}")
+        acc = nxt
+    prompt = f"Q: {''.join(terms)}=?"
+    completion = f"A: {'; '.join(steps)}. #### {acc}"
+    return {
+        "task": "synth-math",
+        "prompt": prompt,
+        "completion": completion,
+        "answer": str(acc),
+        "meta": {"expr": "".join(terms), "value": acc},
+    }
+
+
+# ---------------------------------------------------------------------------
+# synth-code: string-transform programs (functionally evaluated)
+# ---------------------------------------------------------------------------
+CODE_OPS = ("rev", "dup", "rot1", "swap", "drop2")
+
+
+def run_code_op(op: str, s: str) -> str:
+    """The reference interpreter. The Rust eval module implements the exact
+    same semantics (property-tested against these via shared fixtures)."""
+    if op == "rev":
+        return s[::-1]
+    if op == "dup":
+        return "".join(c + c for c in s)
+    if op == "rot1":
+        return "".join(chr((ord(c) - 97 + 1) % 26 + 97) for c in s)
+    if op == "swap":
+        out = list(s)
+        for i in range(0, len(s) - 1, 2):
+            out[i], out[i + 1] = out[i + 1], out[i]
+        return "".join(out)
+    if op == "drop2":
+        return "".join(c for i, c in enumerate(s) if i % 2 == 0)
+    raise ValueError(f"unknown op {op}")
+
+
+def make_code_example(rng: random.Random) -> dict:
+    op = rng.choice(CODE_OPS)
+    n = rng.randint(3, 5)
+    s = "".join(rng.choice("abcdefghijklmnopqrstuvwxyz") for _ in range(n))
+    out = run_code_op(op, s)
+    prompt = f"op: {op} | in: {s}"
+    completion = f"out: {out}"
+    return {
+        "task": "synth-code",
+        "prompt": prompt,
+        "completion": completion,
+        "answer": out,
+        "meta": {"op": op, "input": s},
+    }
+
+
+# ---------------------------------------------------------------------------
+# Tokenisation into the fixed sequence layout
+# ---------------------------------------------------------------------------
+
+def encode_example(prompt: str, completion: str) -> tuple[list[int], list[int]]:
+    """Return (tokens, loss_mask) of length SEQ_LEN.
+
+    Prompt region: [BOS] prompt [PAD]*. Gen region: completion [EOS]* —
+    the EOS fill teaches the model to terminate, which is what produces the
+    late-step confidence dynamics the paper observes.
+    loss_mask is 1 exactly on the gen region (LLaDA SFT objective).
+    """
+    p = [vocab.BOS] + vocab.encode(prompt)
+    if len(p) > PROMPT_LEN:
+        raise ValueError(f"prompt too long: {len(p)} > {PROMPT_LEN}")
+    p = p + [vocab.PAD] * (PROMPT_LEN - len(p))
+    c = vocab.encode(completion)
+    if len(c) > GEN_LEN - 1:
+        raise ValueError(f"completion too long: {len(c)} > {GEN_LEN - 1}")
+    c = c + [vocab.EOS] * (GEN_LEN - len(c))
+    mask = [0] * PROMPT_LEN + [1] * GEN_LEN
+    return p + c, mask
+
+
+def make_example(task: str, kb: dict[str, str], rng: random.Random) -> dict:
+    if task == "synth-qa":
+        return make_qa_example(kb, rng)
+    if task == "synth-math":
+        return make_math_example(rng)
+    if task == "synth-code":
+        return make_code_example(rng)
+    raise ValueError(f"unknown task {task}")
+
+
+def training_batch_stream(seed: int, batch_size: int):
+    """Infinite stream of (tokens, loss_mask) batches over the task mixture."""
+    import numpy as np
+
+    kb = qa_knowledge_base()
+    rng = random.Random(seed)
+    while True:
+        toks, masks = [], []
+        for _ in range(batch_size):
+            ex = make_example(rng.choice(TASKS), kb, rng)
+            t, m = encode_example(ex["prompt"], ex["completion"])
+            toks.append(t)
+            masks.append(m)
+        yield np.asarray(toks, dtype=np.int32), np.asarray(masks, dtype=np.int32)
+
+
+def write_datasets(out_dir: str, n_eval: int = 160, seed: int = 1234) -> None:
+    """Write per-task eval JSONL files consumed by the Rust workload module.
+
+    Eval uses a *different* seed stream than training, so questions are
+    unseen combinations (though the qa KB and op/char distributions are the
+    same — that is the point: task-level, not instance-level, structure).
+    """
+    os.makedirs(out_dir, exist_ok=True)
+    kb = qa_knowledge_base()
+    for ti, task in enumerate(TASKS):
+        rng = random.Random(seed + 1000 * ti)  # str hash is not stable across runs
+        path = os.path.join(out_dir, f"{task}.eval.jsonl")
+        with open(path, "w") as f:
+            for _ in range(n_eval):
+                ex = make_example(task, kb, rng)
+                # validate it fits the sequence layout
+                encode_example(ex["prompt"], ex["completion"])
+                f.write(json.dumps(ex) + "\n")

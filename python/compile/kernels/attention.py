@@ -1,0 +1,87 @@
+"""L1 Pallas kernel: flash-style bidirectional attention.
+
+TPU mapping (DESIGN.md §2): the CUDA threadblock/shared-memory tiling of the
+original GPU setting becomes a VMEM tiling expressed with ``BlockSpec``:
+
+- grid = (heads, q_blocks); each program instance owns one (head, q-tile),
+- the KV loop is an inner ``fori_loop`` over k-tiles, so the online-softmax
+  accumulator for a q-tile never leaves VMEM (one HBM write per output tile),
+- both contractions are plain ``(block_q, d) x (d, block_k)`` matmuls so a
+  real TPU lowering maps them onto the MXU systolic array.
+
+``interpret=True`` is mandatory on this image: the CPU PJRT plugin cannot run
+Mosaic custom-calls. Numerics are validated against ``ref.attention_ref`` by
+``python/tests/test_kernels.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, block_k: int, kv_len: int):
+    """One (head, q-tile) program: online-softmax over k-tiles."""
+    q = q_ref[0].astype(jnp.float32)  # (block_q, d)
+    head_dim = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(head_dim, jnp.float32))
+    block_q = q.shape[0]
+    num_k_blocks = kv_len // block_k
+
+    def body(kb, carry):
+        acc, m_i, l_i = carry
+        k = jax.lax.dynamic_slice_in_dim(k_ref[0], kb * block_k, block_k, 0)
+        v = jax.lax.dynamic_slice_in_dim(v_ref[0], kb * block_k, block_k, 0)
+        s = (q @ k.astype(jnp.float32).T) * scale          # (bq, bk) — MXU
+        m_new = jnp.maximum(m_i, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m_i - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_new = l_i * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[:, None] + p @ v.astype(jnp.float32)  # MXU
+        return acc, m_new, l_new
+
+    acc0 = jnp.zeros((block_q, head_dim), jnp.float32)
+    m0 = jnp.full((block_q,), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((block_q,), jnp.float32)
+    acc, _, l_i = jax.lax.fori_loop(0, num_k_blocks, body, (acc0, m0, l0))
+    o_ref[0] = (acc / l_i[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_k"))
+def attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    block_q: int = 32,
+    block_k: int = 32,
+) -> jnp.ndarray:
+    """Flash attention over q=(heads, q_len, d), k/v=(heads, kv_len, d).
+
+    q_len and kv_len may differ (the KV-window decode variant attends a
+    32-token window against the full cached sequence); both must divide
+    evenly into their tile sizes (the model's sequence layout guarantees
+    this: 160 = 5 x 32)."""
+    heads, q_len, head_dim = q.shape
+    kv_len = k.shape[1]
+    if q_len % block_q or kv_len % block_k:
+        raise ValueError(f"lens {q_len}/{kv_len} not divisible by {block_q}/{block_k}")
+    grid = (heads, q_len // block_q)
+    return pl.pallas_call(
+        functools.partial(_attn_kernel, block_k=block_k, kv_len=kv_len),
+        grid=grid,
+        in_specs=[
+            # one q-tile per program
+            pl.BlockSpec((1, block_q, head_dim), lambda h, qb: (h, qb, 0)),
+            # full K/V rows for this head stay resident; the kernel slices
+            # k-tiles out of them (VMEM footprint: kv_len*d, tiny here)
+            pl.BlockSpec((1, kv_len, head_dim), lambda h, qb: (h, 0, 0)),
+            pl.BlockSpec((1, kv_len, head_dim), lambda h, qb: (h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, head_dim), lambda h, qb: (h, qb, 0)),
+        out_shape=jax.ShapeDtypeStruct((heads, q_len, head_dim), q.dtype),
+        interpret=True,  # CPU PJRT cannot execute Mosaic custom-calls
+    )(q, k, v)

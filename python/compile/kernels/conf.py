@@ -1,0 +1,85 @@
+"""L1 Pallas kernel: fused softmax-confidence + argmax.
+
+The OSDT/Fast-dLLM scoring path needs, for every position j, only
+``conf[j] = max_v softmax(logits[j])`` and ``argmax[j]`` — not the softmax
+itself. Materialising a (seq, vocab) softmax in HBM each denoising step is
+pure waste; this kernel reduces each vocab row to two scalars in one pass:
+
+    running max  m, running sum  z = sum exp(l - m)   (rescaled on new max)
+    conf = exp(m - m) / z = 1 / z,   argmax = index attaining m
+
+Grid = seq tiles; vocab is swept in VMEM-resident tiles via an inner loop.
+HBM traffic per step drops from O(seq*vocab) to O(seq) on the output side —
+the TPU restatement of the paper's "cut redundant work on the scoring path".
+
+interpret=True for CPU PJRT; validated against ``ref.confidence_ref``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _conf_kernel(x_ref, conf_ref, arg_ref, *, block_v: int, vocab: int):
+    """One seq-tile program: streaming max/sum/argmax over vocab tiles."""
+    block_s = x_ref.shape[0]
+    num_v = vocab // block_v
+
+    def body(vb, carry):
+        m_i, z_i, a_i = carry
+        x = jax.lax.dynamic_slice_in_dim(x_ref[...], vb * block_v, block_v, 1)
+        x = x.astype(jnp.float32)                       # (bs, bv)
+        tile_m = jnp.max(x, axis=-1)
+        tile_a = jnp.argmax(x, axis=-1).astype(jnp.int32) + vb * block_v
+        m_new = jnp.maximum(m_i, tile_m)
+        z_new = z_i * jnp.exp(m_i - m_new) + jnp.sum(
+            jnp.exp(x - m_new[:, None]), axis=-1
+        )
+        # strict '>' keeps the first (lowest-id) maximum, matching jnp.argmax
+        a_new = jnp.where(tile_m > m_i, tile_a, a_i)
+        return m_new, z_new, a_new
+
+    m0 = jnp.full((block_s,), -jnp.inf, jnp.float32)
+    z0 = jnp.zeros((block_s,), jnp.float32)
+    a0 = jnp.zeros((block_s,), jnp.int32)
+    _, z, a = jax.lax.fori_loop(0, num_v, body, (m0, z0, a0))
+    conf_ref[...] = 1.0 / z
+    arg_ref[...] = a
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "block_v"))
+def confidence(
+    logits: jnp.ndarray, *, block_s: int = 32, block_v: int = 64
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """(seq, vocab) logits -> (conf (seq,) f32, argmax (seq,) i32).
+
+    vocab is padded to a multiple of block_v with -inf (padding can never win
+    the max, so numerics are unchanged).
+    """
+    seq, vocab = logits.shape
+    if seq % block_s:
+        raise ValueError(f"seq {seq} not divisible by block_s {block_s}")
+    pad_v = (-vocab) % block_v
+    if pad_v:
+        logits = jnp.pad(
+            logits, ((0, 0), (0, pad_v)), constant_values=-jnp.inf
+        )
+        vocab += pad_v
+    return pl.pallas_call(
+        functools.partial(_conf_kernel, block_v=block_v, vocab=vocab),
+        grid=(seq // block_s,),
+        in_specs=[pl.BlockSpec((block_s, vocab), lambda sb: (sb, 0))],
+        out_specs=[
+            pl.BlockSpec((block_s,), lambda sb: (sb,)),
+            pl.BlockSpec((block_s,), lambda sb: (sb,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((seq,), jnp.float32),
+            jax.ShapeDtypeStruct((seq,), jnp.int32),
+        ],
+        interpret=True,  # CPU PJRT cannot execute Mosaic custom-calls
+    )(logits)

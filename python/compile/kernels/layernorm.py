@@ -1,0 +1,63 @@
+"""L1 Pallas kernel: row-parallel LayerNorm (+ optional affine).
+
+The model applies LayerNorm 2·L+1 times per forward; fusing the two
+reduction passes (mean, variance) and the normalisation into one
+VMEM-resident sweep removes two HBM round-trips per call relative to the
+naive lowering.
+
+TPU mapping: grid = row tiles; each program instance owns a
+(block_rows, d_model) tile in VMEM, computes mean/var with row-wise
+reductions (VPU), normalises and applies the affine in-place, and writes
+the tile back once. d_model stays resident — for this model (d=64..256) a
+tile is a few KiB, far under the VMEM budget.
+
+interpret=True as everywhere (CPU PJRT); validated against
+``ref.layernorm_ref`` by python/tests/test_kernels.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ln_kernel(x_ref, g_ref, b_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)  # (block_rows, d)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) * (x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    o_ref[...] = (y * g_ref[...] + b_ref[...]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "eps"))
+def layernorm(
+    x: jnp.ndarray,
+    g: jnp.ndarray,
+    b: jnp.ndarray,
+    *,
+    block_rows: int = 32,
+    eps: float = 1e-5,
+) -> jnp.ndarray:
+    """LayerNorm over the last axis of (rows, d); rows must divide evenly
+    into block_rows tiles (the model's sequence layout guarantees this)."""
+    rows, d = x.shape
+    if g.shape != (d,) or b.shape != (d,):
+        raise ValueError(f"affine shapes {g.shape}/{b.shape} != ({d},)")
+    br = min(block_rows, rows)
+    if rows % br:
+        raise ValueError(f"rows {rows} not divisible by block_rows {br}")
+    return pl.pallas_call(
+        functools.partial(_ln_kernel, eps=eps),
+        grid=(rows // br,),
+        in_specs=[
+            pl.BlockSpec((br, d), lambda r: (r, 0)),
+            pl.BlockSpec((d,), lambda r: (0,)),
+            pl.BlockSpec((d,), lambda r: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, d), lambda r: (r, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, d), x.dtype),
+        interpret=True,  # CPU PJRT cannot execute Mosaic custom-calls
+    )(x, g, b)

@@ -1,0 +1,54 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the *correctness ground truth*: pytest asserts the Pallas kernels
+(interpret=True) match these to tight tolerances across hypothesis-generated
+shapes. They are also the implementations used on the training path (Pallas
+has no autodiff without a custom VJP, and training does not need the fused
+kernels).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """Bidirectional (unmasked) multi-head attention.
+
+    Shapes: q,k,v = (heads, seq, head_dim) -> (heads, seq, head_dim).
+    Softmax computed in f32 regardless of input dtype.
+    """
+    head_dim = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(head_dim, jnp.float32))
+    logits = (
+        jnp.einsum("hqd,hkd->hqk", q.astype(jnp.float32), k.astype(jnp.float32))
+        * scale
+    )
+    w = jnp.exp(logits - jnp.max(logits, axis=-1, keepdims=True))
+    w = w / jnp.sum(w, axis=-1, keepdims=True)
+    return jnp.einsum("hqk,hkd->hqd", w, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def layernorm_ref(
+    x: jnp.ndarray, g: jnp.ndarray, b: jnp.ndarray, eps: float = 1e-5
+) -> jnp.ndarray:
+    """LayerNorm over the last axis, f32 statistics."""
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    return (((xf - mu) / jnp.sqrt(var + eps)) * g + b).astype(x.dtype)
+
+
+def confidence_ref(logits: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-position greedy confidence and candidate token.
+
+    logits: (seq, vocab) -> (conf (seq,) f32, argmax (seq,) i32).
+    conf[j] = max_v softmax(logits[j])[v] = 1 / sum_v exp(l_v - max_l).
+    argmax ties break toward the lower id (matches the Pallas kernel).
+    """
+    x = logits.astype(jnp.float32)
+    m = jnp.max(x, axis=-1, keepdims=True)
+    z = jnp.sum(jnp.exp(x - m), axis=-1)
+    conf = 1.0 / z
+    arg = jnp.argmax(x, axis=-1).astype(jnp.int32)
+    return conf, arg

@@ -1,0 +1,290 @@
+"""L2: the MDLM mask predictor (tiny LLaDA-style transformer) in JAX.
+
+Bidirectional (no causal mask) pre-LN transformer over the fixed sequence
+layout of data.py: ``[BOS] prompt [PAD]... || gen region``. The gen region is
+what diffusion decoding fills in; the network predicts token distributions
+at every position simultaneously (mask-predictor semantics).
+
+Three inference variants are AOT-lowered by aot.py:
+
+- ``fwd_conf``     tokens -> (conf, argmax)                 (no-cache path)
+- ``fwd_full_kv``  tokens -> (conf, argmax, k_cache, v_cache)
+                   (block-start refresh of the Fast-dLLM dual cache)
+- ``fwd_window``   (window_tokens, start, k_cache, v_cache) -> (conf, argmax)
+                   (within-block steps: only the 32-token window is
+                   recomputed; all other K/V come from the cache)
+
+The training path (train.py) uses the same ``fwd_logits`` with
+``use_pallas=False`` so the graph is autodiff-able; the AOT path flips the
+Pallas kernels on so the serving artifacts actually contain the L1 kernels.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import data as data_mod
+from . import vocab
+from .kernels import ref
+from .kernels.attention import attention as pallas_attention
+from .kernels.conf import confidence as pallas_confidence
+from .kernels.layernorm import layernorm as pallas_layernorm
+
+# ---------------------------------------------------------------------------
+# Geometry — frozen alongside the trained weights.
+# ---------------------------------------------------------------------------
+D_MODEL = 64
+N_LAYERS = 4
+N_HEADS = 4
+HEAD_DIM = D_MODEL // N_HEADS
+D_FF = 256
+SEQ_LEN = data_mod.SEQ_LEN
+VOCAB = vocab.VOCAB_SIZE
+
+Params = dict[str, Any]
+
+
+def init_params(seed: int = 0) -> Params:
+    """Scaled-normal init. Layout (and therefore weights.bin order) is
+    ``param_order()`` — frozen."""
+    key = jax.random.PRNGKey(seed)
+    ks = iter(jax.random.split(key, 8 + 12 * N_LAYERS))
+
+    def normal(shape, scale):
+        return (jax.random.normal(next(ks), shape) * scale).astype(jnp.float32)
+
+    p: Params = {
+        "tok_emb": normal((VOCAB, D_MODEL), 0.02),
+        "pos_emb": normal((SEQ_LEN, D_MODEL), 0.02),
+        "lnf_g": jnp.ones((D_MODEL,), jnp.float32),
+        "lnf_b": jnp.zeros((D_MODEL,), jnp.float32),
+        "head": normal((D_MODEL, VOCAB), 0.02),
+    }
+    for l in range(N_LAYERS):
+        p[f"l{l}.ln1_g"] = jnp.ones((D_MODEL,), jnp.float32)
+        p[f"l{l}.ln1_b"] = jnp.zeros((D_MODEL,), jnp.float32)
+        p[f"l{l}.wq"] = normal((D_MODEL, D_MODEL), 0.02)
+        p[f"l{l}.wk"] = normal((D_MODEL, D_MODEL), 0.02)
+        p[f"l{l}.wv"] = normal((D_MODEL, D_MODEL), 0.02)
+        # residual-branch projections scaled down by depth (GPT-2 style)
+        p[f"l{l}.wo"] = normal((D_MODEL, D_MODEL), 0.02 / (2 * N_LAYERS) ** 0.5)
+        p[f"l{l}.ln2_g"] = jnp.ones((D_MODEL,), jnp.float32)
+        p[f"l{l}.ln2_b"] = jnp.zeros((D_MODEL,), jnp.float32)
+        p[f"l{l}.w1"] = normal((D_MODEL, D_FF), 0.02)
+        p[f"l{l}.b1"] = jnp.zeros((D_FF,), jnp.float32)
+        p[f"l{l}.w2"] = normal((D_FF, D_MODEL), 0.02 / (2 * N_LAYERS) ** 0.5)
+        p[f"l{l}.b2"] = jnp.zeros((D_MODEL,), jnp.float32)
+    return p
+
+
+def param_order() -> list[str]:
+    """Frozen flattening order for weights.bin / HLO parameter lists."""
+    names = ["tok_emb", "pos_emb"]
+    for l in range(N_LAYERS):
+        names += [
+            f"l{l}.{n}"
+            for n in (
+                "ln1_g", "ln1_b", "wq", "wk", "wv", "wo",
+                "ln2_g", "ln2_b", "w1", "b1", "w2", "b2",
+            )
+        ]
+    names += ["lnf_g", "lnf_b", "head"]
+    return names
+
+
+def _ln(x, g, b, eps=1e-5, use_pallas: bool = False):
+    if use_pallas and LN_PALLAS and x.ndim == 2:
+        return pallas_layernorm(x, g, b, eps=eps)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def _split_heads(x):  # (S, D) -> (H, S, Dh)
+    s = x.shape[0]
+    return x.reshape(s, N_HEADS, HEAD_DIM).transpose(1, 0, 2)
+
+
+def _merge_heads(x):  # (H, S, Dh) -> (S, D)
+    return x.transpose(1, 0, 2).reshape(x.shape[1], D_MODEL)
+
+
+# L1 kernel tile sizes — tunable at AOT time (perf pass; see DESIGN.md
+# §Perf). Defaults match the 32-token block structure; larger q-tiles trade
+# grid-iteration overhead for VMEM footprint.
+ATTN_BLOCK_Q = 32
+ATTN_BLOCK_K = 32
+CONF_BLOCK_V = 64
+# The Pallas LayerNorm is validated (tests) and TPU-targeted, but measured
+# 12% slower than XLA's native LN fusion under CPU interpret mode, so the
+# CPU serving artifacts leave it off (EXPERIMENTS.md §Perf, iteration 2).
+LN_PALLAS = False
+
+
+def _attend(q, k, v, use_pallas: bool):
+    if not use_pallas:
+        return ref.attention_ref(q, k, v)
+    bq = min(ATTN_BLOCK_Q, q.shape[1])
+    bk = min(ATTN_BLOCK_K, k.shape[1])
+    return pallas_attention(q, k, v, block_q=bq, block_k=bk)
+
+
+def _layer(p: Params, l: int, h, use_pallas: bool, kv_splice=None, kv_out=None):
+    """One transformer block over (S, D) hidden.
+
+    kv_splice: optional fn (k_w, v_w) -> (k_full, v_full) used by the window
+    variant, where attention keys/values span the full cached sequence while
+    ``h`` covers only the active window.
+    kv_out: optional list collecting (k, v) per layer (cache refresh).
+    """
+    a_in = _ln(h, p[f"l{l}.ln1_g"], p[f"l{l}.ln1_b"], use_pallas=use_pallas)
+    q = _split_heads(a_in @ p[f"l{l}.wq"])
+    k = _split_heads(a_in @ p[f"l{l}.wk"])
+    v = _split_heads(a_in @ p[f"l{l}.wv"])
+    if kv_out is not None:
+        kv_out.append((k, v))
+    if kv_splice is not None:
+        k, v = kv_splice(k, v)
+    att = _merge_heads(_attend(q, k, v, use_pallas)) @ p[f"l{l}.wo"]
+    h = h + att
+    m_in = _ln(h, p[f"l{l}.ln2_g"], p[f"l{l}.ln2_b"], use_pallas=use_pallas)
+    m = jax.nn.gelu(m_in @ p[f"l{l}.w1"] + p[f"l{l}.b1"]) @ p[f"l{l}.w2"] + p[f"l{l}.b2"]
+    return h + m
+
+
+def _fwd_hidden(p: Params, tokens: jnp.ndarray, use_pallas: bool, kv_out=None):
+    """tokens (S,) int32 -> final hidden (S, D)."""
+    h = p["tok_emb"][tokens] + p["pos_emb"]
+    for l in range(N_LAYERS):
+        h = _layer(p, l, h, use_pallas, kv_out=kv_out)
+    return _ln(h, p["lnf_g"], p["lnf_b"], use_pallas=use_pallas)
+
+
+def fwd_logits(p: Params, tokens: jnp.ndarray, use_pallas: bool = False):
+    """(B, S) int32 -> (B, S, V) f32 logits."""
+
+    def one(t):
+        return _fwd_hidden(p, t, use_pallas) @ p["head"]
+
+    return jax.vmap(one)(tokens)
+
+
+def _reduce_conf(logits2d, use_pallas: bool):
+    if use_pallas:
+        return pallas_confidence(logits2d, block_v=CONF_BLOCK_V)
+    return ref.confidence_ref(logits2d)
+
+
+def fwd_conf(p: Params, tokens: jnp.ndarray, use_pallas: bool = True):
+    """(B, S) -> (conf (B,S) f32, argmax (B,S) i32) — the serving hot path.
+
+    The (B*S, V) logits are reduced by the fused Pallas confidence kernel;
+    full logits never leave the computation.
+    """
+    b, s = tokens.shape
+    logits = fwd_logits(p, tokens, use_pallas).reshape(b * s, VOCAB)
+    conf, arg = _reduce_conf(logits, use_pallas)
+    return conf.reshape(b, s), arg.reshape(b, s)
+
+
+# ---------------------------------------------------------------------------
+# Fast-dLLM dual-cache variants (batch 1, matching the paper's serving setup)
+# ---------------------------------------------------------------------------
+
+def fwd_full_kv(p: Params, tokens: jnp.ndarray, use_pallas: bool = True):
+    """(1, S) -> (conf (1,S), argmax (1,S), k_cache, v_cache (L,H,S,Dh)).
+
+    Run at each block boundary: refreshes every layer's K/V (prefix *and*
+    suffix — the DualCache design) for reuse by fwd_window within the block.
+    """
+    kv: list[tuple[jnp.ndarray, jnp.ndarray]] = []
+    hidden = _fwd_hidden(p, tokens[0], use_pallas, kv_out=kv)
+    logits = hidden @ p["head"]
+    conf, arg = _reduce_conf(logits, use_pallas)
+    k_cache = jnp.stack([k for k, _ in kv])
+    v_cache = jnp.stack([v for _, v in kv])
+    return conf[None, :], arg[None, :], k_cache, v_cache
+
+
+def fwd_window(
+    p: Params,
+    window_tokens: jnp.ndarray,  # (1, W) i32
+    start: jnp.ndarray,          # () i32 — absolute position of the window
+    k_cache: jnp.ndarray,        # (L, H, S, Dh) f32
+    v_cache: jnp.ndarray,
+    use_pallas: bool = True,
+):
+    """Within-block step: recompute only the active window.
+
+    The window's own K/V are refreshed and spliced into the cached full-
+    sequence K/V (dynamic_update_slice at ``start``); queries come from the
+    window only. Everything outside the window uses stale K/V — exactly the
+    Fast-dLLM DualCache approximation.
+    Returns (conf (1, W) f32, argmax (1, W) i32).
+    """
+    t = window_tokens[0]
+    w = t.shape[0]
+    pos = jax.lax.dynamic_slice_in_dim(p["pos_emb"], start, w, 0)
+    h = p["tok_emb"][t] + pos
+
+    for l in range(N_LAYERS):
+        def splice(k_w, v_w, _l=l):
+            kf = jax.lax.dynamic_update_slice(k_cache[_l], k_w, (0, start, 0))
+            vf = jax.lax.dynamic_update_slice(v_cache[_l], v_w, (0, start, 0))
+            return kf, vf
+
+        h = _layer(p, l, h, use_pallas, kv_splice=splice)
+    logits = _ln(h, p["lnf_g"], p["lnf_b"], use_pallas=use_pallas) @ p["head"]
+    conf, arg = _reduce_conf(logits, use_pallas)
+    return conf[None, :], arg[None, :]
+
+
+# ---------------------------------------------------------------------------
+# Training objective (LLaDA SFT): random-ratio masking over the gen region,
+# 1/t-weighted CE on masked positions.
+# ---------------------------------------------------------------------------
+
+def diffusion_loss(p: Params, tokens, loss_mask, key):
+    """tokens (B,S) i32 clean sequences; loss_mask (B,S) {0,1} gen region.
+
+    t ~ U(eps, 1) per example; each gen-region token is replaced by [MASK]
+    w.p. t; loss = sum over masked positions of CE / t, normalised.
+    """
+    b, s = tokens.shape
+    kt, km = jax.random.split(key)
+    t = jax.random.uniform(kt, (b, 1), minval=0.05, maxval=1.0)
+    u = jax.random.uniform(km, (b, s))
+    masked = (u < t) & (loss_mask == 1)
+    noised = jnp.where(masked, vocab.MASK, tokens)
+    logits = fwd_logits(p, noised, use_pallas=False)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    tok_lp = jnp.take_along_axis(logp, tokens[..., None], axis=-1)[..., 0]
+    w = masked.astype(jnp.float32) / t
+    return -jnp.sum(tok_lp * w) / (jnp.sum(w) + 1e-8)
+
+
+def model_config() -> dict:
+    """Emitted into artifacts/model_config.json — the Rust side's single
+    source of truth for geometry + vocab."""
+    return {
+        "d_model": D_MODEL,
+        "n_layers": N_LAYERS,
+        "n_heads": N_HEADS,
+        "head_dim": HEAD_DIM,
+        "d_ff": D_FF,
+        "vocab_size": VOCAB,
+        "seq_len": SEQ_LEN,
+        "prompt_len": data_mod.PROMPT_LEN,
+        "gen_len": data_mod.GEN_LEN,
+        "block_len": data_mod.BLOCK_LEN,
+        "num_blocks": data_mod.NUM_BLOCKS,
+        "pad_id": vocab.PAD,
+        "mask_id": vocab.MASK,
+        "bos_id": vocab.BOS,
+        "eos_id": vocab.EOS,
+        "vocab": vocab.vocab_table(),
+        "param_order": param_order(),
+    }

@@ -1,0 +1,47 @@
+"""Character-level vocabulary for the tiny MDLM.
+
+Single source of truth: the Rust tokenizer loads the exact same table from
+``artifacts/model_config.json`` (emitted by aot.py), so the two sides can
+never drift.
+
+Layout (stable ids):
+  0..3   special: [PAD], [MASK], [BOS], [EOS]
+  4..    printable characters used by the synthetic tasks
+"""
+
+from __future__ import annotations
+
+PAD, MASK, BOS, EOS = 0, 1, 2, 3
+SPECIALS = ["[PAD]", "[MASK]", "[BOS]", "[EOS]"]
+
+# Every character any synthetic task can emit. Order is frozen — changing it
+# invalidates trained weights.
+_CHARS = (
+    "abcdefghijklmnopqrstuvwxyz"
+    "ABCDEFGHIJKLMNOPQRSTUVWXYZ"
+    "0123456789"
+    " .,:;?!#+-*/=()<>'\"_|"
+)
+
+CHAR_TO_ID = {c: i + len(SPECIALS) for i, c in enumerate(_CHARS)}
+ID_TO_CHAR = {i: c for c, i in CHAR_TO_ID.items()}
+VOCAB_SIZE = len(SPECIALS) + len(_CHARS)
+
+
+def encode(text: str) -> list[int]:
+    """Encode a string to token ids. Unknown characters are a hard error —
+    the task generators own the character set."""
+    try:
+        return [CHAR_TO_ID[c] for c in text]
+    except KeyError as e:  # pragma: no cover - generator bug guard
+        raise ValueError(f"character not in vocab: {e.args[0]!r}") from e
+
+
+def decode(ids) -> str:
+    """Decode ids to text, dropping special tokens."""
+    return "".join(ID_TO_CHAR[int(i)] for i in ids if int(i) >= len(SPECIALS))
+
+
+def vocab_table() -> list[str]:
+    """Id -> surface form table, for model_config.json."""
+    return SPECIALS + list(_CHARS)

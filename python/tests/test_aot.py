@@ -1,0 +1,127 @@
+"""AOT path: weights.bin container format, HLO text emission, and (when the
+build artifacts exist) consistency of the committed artifacts."""
+
+import json
+import os
+import struct
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model as M
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def _tiny_params():
+    # full init is cheap enough
+    return M.init_params(1)
+
+
+def read_weights_bin(path):
+    """Reference reader mirroring the Rust loader (format spec test)."""
+    out = {}
+    with open(path, "rb") as f:
+        assert f.read(8) == b"OSDTW001"
+        (n,) = struct.unpack("<I", f.read(4))
+        for _ in range(n):
+            (ln,) = struct.unpack("<I", f.read(4))
+            name = f.read(ln).decode()
+            (dcode,) = struct.unpack("<B", f.read(1))
+            assert dcode == 0
+            (ndim,) = struct.unpack("<B", f.read(1))
+            shape = struct.unpack(f"<{ndim}I", f.read(4 * ndim)) if ndim else ()
+            cnt = int(np.prod(shape)) if ndim else 1
+            out[name] = np.frombuffer(
+                f.read(4 * cnt), dtype="<f4"
+            ).reshape(shape)
+        assert f.read() == b""  # no trailing bytes
+    return out
+
+
+def test_weights_bin_roundtrip(tmp_path):
+    params = _tiny_params()
+    path = str(tmp_path / "w.bin")
+    aot.write_weights_bin(path, params)
+    back = read_weights_bin(path)
+    assert list(back) == M.param_order()
+    for k in params:
+        np.testing.assert_array_equal(back[k], np.asarray(params[k]))
+
+
+def test_hlo_text_emission_small_fn():
+    lowered = jax.jit(lambda x: (x * 2 + 1,)).lower(
+        jax.ShapeDtypeStruct((4,), jnp.float32)
+    )
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert "ROOT" in text
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "model_config.json")),
+    reason="artifacts not built",
+)
+class TestBuiltArtifacts:
+    """Validation of the committed build outputs (runs after `make
+    artifacts`)."""
+
+    @pytest.fixture(scope="class")
+    def cfg(self):
+        with open(os.path.join(ART, "model_config.json")) as f:
+            return json.load(f)
+
+    def test_config_matches_code(self, cfg):
+        mc = M.model_config()
+        for k in ("d_model", "n_layers", "vocab_size", "seq_len", "vocab",
+                  "param_order", "block_len", "num_blocks"):
+            assert cfg[k] == mc[k]
+
+    def test_variant_files_exist(self, cfg):
+        assert set(cfg["variants"]) >= {
+            "fwd_conf_b1", "fwd_full_kv_b1", "fwd_window_b1", "logits_b1",
+        }
+        for v in cfg["variants"].values():
+            p = os.path.join(ART, v["file"])
+            assert os.path.exists(p), p
+            head = open(p).read(200)
+            assert "HloModule" in head
+
+    def test_weights_match_checkpoint(self, cfg):
+        w = read_weights_bin(os.path.join(ART, "weights.bin"))
+        z = np.load(os.path.join(ART, "checkpoint.npz"))
+        for k in cfg["param_order"]:
+            np.testing.assert_array_equal(w[k], z[k].astype(np.float32))
+
+    def test_checkpoint_beats_chance(self, cfg):
+        """The trained mask predictor must beat chance at reconstructing a
+        fully-masked completion's first block — i.e. training actually
+        happened (accuracy checks proper live in the Rust eval)."""
+        from compile import data as D, train as T, vocab
+
+        params = T.load_checkpoint(os.path.join(ART, "checkpoint.npz"))
+        kb = D.qa_knowledge_base()
+        import random
+
+        rng = random.Random(99)
+        hits = total = 0
+        for _ in range(8):
+            ex = D.make_example("synth-math", kb, rng)
+            toks, _ = D.encode_example(ex["prompt"], ex["completion"])
+            noised = list(toks)
+            for j in range(D.PROMPT_LEN, D.SEQ_LEN):
+                noised[j] = vocab.MASK
+            _, arg = M.fwd_conf(
+                params, jnp.asarray([noised], jnp.int32), use_pallas=False
+            )
+            arg = np.asarray(arg[0])
+            # score only the real completion chars of the first block
+            for j in range(D.PROMPT_LEN, D.PROMPT_LEN + D.BLOCK_LEN):
+                if toks[j] != vocab.EOS:
+                    total += 1
+                    hits += int(arg[j] == toks[j])
+        assert total > 0
+        # chance is ~1/87; trained single-shot infill should far exceed it
+        assert hits / total > 0.15, f"acc {hits}/{total}"

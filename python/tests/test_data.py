@@ -1,0 +1,108 @@
+"""Synthetic task generators: determinism, well-formedness, encodability."""
+
+import json
+import random
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import data as D
+from compile import vocab
+
+
+def test_kb_deterministic():
+    assert D.qa_knowledge_base() == D.qa_knowledge_base()
+    kb = D.qa_knowledge_base()
+    assert len(kb) == 128
+    assert set(kb.values()) <= set(D.QA_CLASSES)
+
+
+@pytest.mark.parametrize("task", D.TASKS)
+def test_examples_deterministic(task):
+    kb = D.qa_knowledge_base()
+    a = [D.make_example(task, kb, random.Random(5)) for _ in range(3)]
+    b = [D.make_example(task, kb, random.Random(5)) for _ in range(3)]
+    assert a == b
+
+
+@pytest.mark.parametrize("task", D.TASKS)
+def test_examples_fit_layout_and_vocab(task):
+    """500 samples per task must encode into the fixed sequence layout."""
+    kb = D.qa_knowledge_base()
+    rng = random.Random(11)
+    for _ in range(500):
+        ex = D.make_example(task, kb, rng)
+        toks, mask = D.encode_example(ex["prompt"], ex["completion"])
+        assert len(toks) == D.SEQ_LEN and len(mask) == D.SEQ_LEN
+        assert sum(mask) == D.GEN_LEN
+        assert all(0 <= t < vocab.VOCAB_SIZE for t in toks)
+
+
+def test_math_answers_correct():
+    rng = random.Random(2)
+    for _ in range(300):
+        ex = D.make_math_example(rng)
+        expr, val = ex["meta"]["expr"], ex["meta"]["value"]
+        assert eval(expr) == val == int(ex["answer"])
+        assert 0 <= val <= 99
+        assert ex["completion"].endswith(f"#### {val}")
+
+
+def test_qa_answer_letter_matches_options():
+    kb = D.qa_knowledge_base()
+    rng = random.Random(3)
+    for _ in range(300):
+        ex = D.make_qa_example(kb, rng)
+        letter, opts = ex["answer"], ex["meta"]["options"]
+        assert opts["ABCD".index(letter)] == ex["meta"]["class"]
+        assert kb[ex["meta"]["entity"]] == ex["meta"]["class"]
+
+
+@settings(deadline=None, max_examples=200)
+@given(
+    op=st.sampled_from(D.CODE_OPS),
+    s=st.text(alphabet="abcdefghijklmnopqrstuvwxyz", min_size=1, max_size=12),
+)
+def test_code_ops_properties(op, s):
+    out = D.run_code_op(op, s)
+    if op == "rev":
+        assert D.run_code_op("rev", out) == s  # involution
+    elif op == "dup":
+        assert len(out) == 2 * len(s) and out[::2] == s
+    elif op == "rot1":
+        assert len(out) == len(s)
+        assert all(
+            (ord(b) - ord(a)) % 26 == 1 for a, b in zip(s, out)
+        )
+    elif op == "swap":
+        assert D.run_code_op("swap", out) == s  # involution
+    elif op == "drop2":
+        assert out == s[::2]
+
+
+def test_write_datasets(tmp_path):
+    D.write_datasets(str(tmp_path), n_eval=10)
+    for task in D.TASKS:
+        lines = (tmp_path / f"{task}.eval.jsonl").read_text().splitlines()
+        assert len(lines) == 10
+        for line in lines:
+            ex = json.loads(line)
+            assert ex["task"] == task
+            assert "prompt" in ex and "answer" in ex and "meta" in ex
+
+
+def test_write_datasets_deterministic(tmp_path):
+    d1, d2 = tmp_path / "a", tmp_path / "b"
+    D.write_datasets(str(d1), n_eval=5)
+    D.write_datasets(str(d2), n_eval=5)
+    for task in D.TASKS:
+        assert (d1 / f"{task}.eval.jsonl").read_text() == (
+            d2 / f"{task}.eval.jsonl"
+        ).read_text()
+
+
+def test_train_stream_shapes():
+    stream = D.training_batch_stream(seed=0, batch_size=8)
+    toks, mask = next(stream)
+    assert toks.shape == (8, D.SEQ_LEN) and mask.shape == (8, D.SEQ_LEN)
+    assert toks.dtype.name == "int32"

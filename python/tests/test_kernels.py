@@ -1,0 +1,194 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes/dtypes/values; assert_allclose against ref.py.
+This is the CORE correctness signal for the kernels that end up inside the
+AOT artifacts.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.attention import attention
+from compile.kernels.conf import confidence
+
+# Keep hypothesis deadlines off: interpret-mode pallas is slow per call.
+COMMON = dict(deadline=None, max_examples=20)
+
+
+def rand(rng, shape, dtype, scale=1.0):
+    x = rng.standard_normal(shape) * scale
+    return jnp.asarray(x, dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+@settings(**COMMON)
+@given(
+    heads=st.sampled_from([1, 2, 4]),
+    q_tiles=st.integers(1, 4),
+    kv_tiles=st.integers(1, 5),
+    head_dim=st.sampled_from([8, 16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+    scale=st.sampled_from([0.1, 1.0, 5.0]),
+)
+def test_attention_matches_ref(heads, q_tiles, kv_tiles, head_dim, seed, scale):
+    rng = np.random.default_rng(seed)
+    q = rand(rng, (heads, 32 * q_tiles, head_dim), jnp.float32, scale)
+    k = rand(rng, (heads, 32 * kv_tiles, head_dim), jnp.float32, scale)
+    v = rand(rng, (heads, 32 * kv_tiles, head_dim), jnp.float32, scale)
+    got = attention(q, k, v)
+    want = ref.attention_ref(q, k, v)
+    # 1e-4: the online softmax accumulates in a different order than the
+    # two-pass reference; at scale=5 (logit std ~25) f32 rounding differs
+    # by up to ~5e-5 on isolated elements.
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4, rtol=1e-4)
+
+
+@settings(**COMMON)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_attention_bf16(seed):
+    """bf16 inputs: kernel accumulates in f32, so results should agree with
+    the f32-accumulating reference at bf16 tolerance."""
+    rng = np.random.default_rng(seed)
+    q = rand(rng, (2, 64, 16), jnp.bfloat16)
+    k = rand(rng, (2, 64, 16), jnp.bfloat16)
+    v = rand(rng, (2, 64, 16), jnp.bfloat16)
+    got = attention(q, k, v).astype(jnp.float32)
+    want = ref.attention_ref(q, k, v).astype(jnp.float32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=3e-2, rtol=3e-2)
+
+
+def test_attention_block_shape_mismatch_raises():
+    q = jnp.zeros((1, 33, 16), jnp.float32)
+    k = jnp.zeros((1, 32, 16), jnp.float32)
+    with pytest.raises(ValueError):
+        attention(q, k, k)
+
+
+def test_attention_uniform_values():
+    """All-equal K rows -> attention output equals mean of V rows."""
+    q = jnp.ones((1, 32, 8), jnp.float32)
+    k = jnp.ones((1, 64, 8), jnp.float32)
+    v = jnp.tile(jnp.arange(64, dtype=jnp.float32)[None, :, None], (1, 1, 8))
+    got = attention(q, k, v)
+    np.testing.assert_allclose(np.asarray(got), 31.5, atol=1e-4)
+
+
+def test_attention_one_hot_softmax():
+    """A single dominant key should receive ~all attention mass."""
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(np.full((1, 32, 8), 3.0), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 64, 8)) * 0.01, jnp.float32)
+    k = k.at[0, 17].set(30.0)  # dominant key aligned with all queries
+    v = rand(rng, (1, 64, 8), jnp.float32)
+    got = attention(q, k, v)
+    want = jnp.tile(v[0, 17][None, None, :], (1, 32, 1))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# confidence
+# ---------------------------------------------------------------------------
+
+@settings(**COMMON)
+@given(
+    seq_tiles=st.integers(1, 5),
+    vocab=st.sampled_from([5, 64, 87, 128, 130, 200]),
+    seed=st.integers(0, 2**31 - 1),
+    scale=st.sampled_from([0.1, 1.0, 10.0]),
+)
+def test_confidence_matches_ref(seq_tiles, vocab, seed, scale):
+    rng = np.random.default_rng(seed)
+    x = rand(rng, (32 * seq_tiles, vocab), jnp.float32, scale)
+    c, a = confidence(x)
+    cr, ar = ref.confidence_ref(x)
+    np.testing.assert_allclose(np.asarray(c), np.asarray(cr), atol=1e-6, rtol=1e-5)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(ar))
+
+
+def test_confidence_tie_breaks_low_id():
+    """Exactly tied maxima resolve to the lowest vocab id (jnp.argmax
+    semantics, which the Rust side relies on for determinism)."""
+    x = np.zeros((32, 87), np.float32)
+    x[:, 10] = 5.0
+    x[:, 70] = 5.0  # tie across two vocab tiles
+    c, a = confidence(jnp.asarray(x))
+    assert np.all(np.asarray(a) == 10)
+
+
+def test_confidence_peaked_distribution():
+    """A very peaked row must give conf ~ 1."""
+    x = np.full((32, 87), -20.0, np.float32)
+    x[:, 3] = 20.0
+    c, a = confidence(jnp.asarray(x))
+    np.testing.assert_allclose(np.asarray(c), 1.0, atol=1e-6)
+    assert np.all(np.asarray(a) == 3)
+
+
+def test_confidence_uniform_distribution():
+    """Uniform logits -> conf = 1/vocab."""
+    x = jnp.zeros((32, 87), jnp.float32)
+    c, _ = confidence(x)
+    np.testing.assert_allclose(np.asarray(c), 1.0 / 87, rtol=1e-5)
+
+
+def test_confidence_extreme_logits_finite():
+    rng = np.random.default_rng(1)
+    x = rand(rng, (32, 87), jnp.float32, 300.0)
+    c, _ = confidence(x)
+    assert np.all(np.isfinite(np.asarray(c)))
+    assert np.all((np.asarray(c) > 0) & (np.asarray(c) <= 1.0 + 1e-6))
+
+
+# ---------------------------------------------------------------------------
+# layernorm
+# ---------------------------------------------------------------------------
+
+from compile.kernels.layernorm import layernorm  # noqa: E402
+
+
+@settings(**COMMON)
+@given(
+    row_tiles=st.integers(1, 5),
+    d=st.sampled_from([8, 64, 96, 256]),
+    seed=st.integers(0, 2**31 - 1),
+    scale=st.sampled_from([0.01, 1.0, 50.0]),
+)
+def test_layernorm_matches_ref(row_tiles, d, seed, scale):
+    rng = np.random.default_rng(seed)
+    x = rand(rng, (32 * row_tiles, d), jnp.float32, scale)
+    g = rand(rng, (d,), jnp.float32)
+    b = rand(rng, (d,), jnp.float32)
+    got = layernorm(x, g, b)
+    want = ref.layernorm_ref(x, g, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5, rtol=2e-5)
+
+
+def test_layernorm_output_stats():
+    """With identity affine, each row must have ~zero mean, ~unit variance."""
+    rng = np.random.default_rng(3)
+    x = rand(rng, (32, 64), jnp.float32, 7.0)
+    y = np.asarray(layernorm(x, jnp.ones(64), jnp.zeros(64)))
+    np.testing.assert_allclose(y.mean(axis=-1), 0.0, atol=1e-5)
+    np.testing.assert_allclose(y.var(axis=-1), 1.0, atol=1e-3)
+
+
+def test_layernorm_shape_validation():
+    x = jnp.zeros((32, 8), jnp.float32)
+    with pytest.raises(ValueError):
+        layernorm(x, jnp.ones(9), jnp.zeros(9))
+    with pytest.raises(ValueError):
+        layernorm(jnp.zeros((33, 8), jnp.float32), jnp.ones(8), jnp.zeros(8))
+
+
+def test_layernorm_constant_rows_finite():
+    """A constant row has zero variance; eps must keep the output finite."""
+    x = jnp.full((32, 16), 3.0, jnp.float32)
+    y = np.asarray(layernorm(x, jnp.ones(16), jnp.zeros(16)))
+    assert np.all(np.isfinite(y))
+    np.testing.assert_allclose(y, 0.0, atol=1e-3)

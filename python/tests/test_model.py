@@ -1,0 +1,138 @@
+"""L2 correctness: model variants, shapes, cache consistency, loss."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import data as D
+from compile import model as M
+from compile import vocab
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(0)
+
+
+@pytest.fixture(scope="module")
+def tokens():
+    rng = np.random.default_rng(0)
+    return jnp.asarray(
+        rng.integers(0, M.VOCAB, size=(2, M.SEQ_LEN)), jnp.int32
+    )
+
+
+def test_param_order_covers_params(params):
+    assert set(M.param_order()) == set(params)
+    assert len(M.param_order()) == len(set(M.param_order()))
+
+
+def test_logits_shape(params, tokens):
+    logits = M.fwd_logits(params, tokens)
+    assert logits.shape == (2, M.SEQ_LEN, M.VOCAB)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_fwd_conf_pallas_vs_ref(params, tokens):
+    c1, a1 = M.fwd_conf(params, tokens, use_pallas=True)
+    c2, a2 = M.fwd_conf(params, tokens, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(c1), np.asarray(c2), atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(a1), np.asarray(a2))
+
+
+def test_fwd_conf_is_max_softmax(params, tokens):
+    """conf must equal max softmax of the logits path."""
+    logits = M.fwd_logits(params, tokens, use_pallas=False)
+    probs = jax.nn.softmax(logits, axis=-1)
+    c, a = M.fwd_conf(params, tokens, use_pallas=False)
+    np.testing.assert_allclose(
+        np.asarray(c), np.asarray(jnp.max(probs, axis=-1)), atol=1e-5
+    )
+    np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(jnp.argmax(logits, axis=-1))
+    )
+
+
+def test_full_kv_matches_fwd_conf(params, tokens):
+    """The cache-refresh variant must produce identical conf/argmax to the
+    plain forward (it is the same computation, plus K/V outputs)."""
+    c1, a1 = M.fwd_conf(params, tokens[:1], use_pallas=False)
+    c2, a2, kc, vc = M.fwd_full_kv(params, tokens[:1], use_pallas=False)
+    np.testing.assert_allclose(np.asarray(c1), np.asarray(c2), atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(a1), np.asarray(a2))
+    L, H, S, Dh = M.N_LAYERS, M.N_HEADS, M.SEQ_LEN, M.HEAD_DIM
+    assert kc.shape == (L, H, S, Dh) and vc.shape == (L, H, S, Dh)
+
+
+def test_window_consistent_with_full_on_fresh_cache(params, tokens):
+    """With a just-refreshed cache and unchanged tokens, the window variant
+    must reproduce the full forward's conf/argmax on the window — the
+    Fast-dLLM DualCache exactness condition at step 0 of a block."""
+    t = tokens[:1]
+    c_full, a_full, kc, vc = M.fwd_full_kv(params, t, use_pallas=False)
+    start = D.PROMPT_LEN + D.BLOCK_LEN  # second gen block
+    win = t[:, start : start + D.BLOCK_LEN]
+    c_w, a_w = M.fwd_window(
+        params, win, jnp.asarray(start, jnp.int32), kc, vc, use_pallas=False
+    )
+    np.testing.assert_allclose(
+        np.asarray(c_w[0]),
+        np.asarray(c_full[0, start : start + D.BLOCK_LEN]),
+        atol=1e-5,
+    )
+    np.testing.assert_array_equal(
+        np.asarray(a_w[0]), np.asarray(a_full[0, start : start + D.BLOCK_LEN])
+    )
+
+
+def test_window_pallas_vs_ref(params, tokens):
+    t = tokens[:1]
+    _, _, kc, vc = M.fwd_full_kv(params, t, use_pallas=False)
+    start = jnp.asarray(D.PROMPT_LEN, jnp.int32)
+    win = t[:, D.PROMPT_LEN : D.PROMPT_LEN + D.BLOCK_LEN]
+    c1, a1 = M.fwd_window(params, win, start, kc, vc, use_pallas=True)
+    c2, a2 = M.fwd_window(params, win, start, kc, vc, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(c1), np.asarray(c2), atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(a1), np.asarray(a2))
+
+
+def test_diffusion_loss_finite_and_decreases_on_memorize(params):
+    """Loss is finite; a few SGD steps on one batch reduce it (sanity that
+    gradients flow through the full graph)."""
+    stream = D.training_batch_stream(seed=3, batch_size=4)
+    toks, mask = next(stream)
+    toks, mask = jnp.asarray(toks), jnp.asarray(mask)
+    key = jax.random.PRNGKey(0)
+    l0 = M.diffusion_loss(params, toks, mask, key)
+    assert bool(jnp.isfinite(l0))
+    p = params
+    grad_fn = jax.jit(jax.grad(M.diffusion_loss))
+    for i in range(5):
+        g = grad_fn(p, toks, mask, key)
+        p = {k: p[k] - 0.5 * g[k] for k in p}
+    l1 = M.diffusion_loss(p, toks, mask, key)
+    assert float(l1) < float(l0)
+
+
+def test_mask_token_changes_predictions(params, tokens):
+    """Masking a position must change the model's output there (the mask
+    embedding is real signal, not ignored)."""
+    t = np.asarray(tokens[:1]).copy()
+    c0, _ = M.fwd_conf(params, jnp.asarray(t), use_pallas=False)
+    t[0, D.PROMPT_LEN] = vocab.MASK
+    c1, _ = M.fwd_conf(params, jnp.asarray(t), use_pallas=False)
+    assert not np.allclose(np.asarray(c0), np.asarray(c1))
+
+
+def test_model_config_complete():
+    cfg = M.model_config()
+    for key in (
+        "d_model", "n_layers", "vocab_size", "seq_len", "prompt_len",
+        "gen_len", "block_len", "num_blocks", "mask_id", "eos_id",
+        "vocab", "param_order",
+    ):
+        assert key in cfg
+    assert len(cfg["vocab"]) == cfg["vocab_size"]
+    assert cfg["prompt_len"] + cfg["gen_len"] == cfg["seq_len"]
+    assert cfg["block_len"] * cfg["num_blocks"] == cfg["gen_len"]

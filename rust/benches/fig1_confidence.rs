@@ -1,0 +1,52 @@
+//! Figure 1 reproduction: step-block mean token confidence trajectories for
+//! the three tasks (decoded with the static τ=0.9 policy, averaged over N
+//! inputs). The paper's observation: confidence starts low, peaks
+//! mid-process, and drops near the final steps, with distinct levels per
+//! task.
+//!
+//!     cargo bench --bench fig1_confidence [-- --n 8]
+
+use anyhow::Result;
+
+use osdt::bench::{ascii_plot, collect_traces, mean_signature, write_csv, CALIBRATION_TAU};
+use osdt::config::Args;
+use osdt::model::ModelConfig;
+use osdt::runtime::ModelRuntime;
+use osdt::tokenizer::Tokenizer;
+use osdt::workload::{Dataset, TASKS};
+
+fn main() -> Result<()> {
+    osdt::util::logging::init();
+    let args = Args::parse(std::env::args().skip(1).collect::<Vec<_>>(), &["n"])?;
+    let n: usize = args.get_parse("n", 8)?;
+
+    let cfg = ModelConfig::load("artifacts")?;
+    let rt = ModelRuntime::load(&cfg)?;
+    let tok = Tokenizer::from_config(&cfg)?;
+
+    let mut csv = Vec::new();
+    println!("=== Figure 1: step-block mean token confidence (n={n} inputs) ===\n");
+    for task in TASKS {
+        let ds = Dataset::load(cfg.artifact_dir.join("data"), task)?;
+        let traces = collect_traces(&rt, &tok, &ds, n, CALIBRATION_TAU)?;
+        let sig = mean_signature(&traces);
+        print!("{}", ascii_plot(&sig, 12, &format!("{task} ({} steps)", sig.len())));
+        println!();
+        // structural check: mid of block 0 above its endpoints
+        let b0_len = traces[0].per_block[0].len().min(sig.len());
+        if b0_len >= 3 {
+            let (first, mid, last) =
+                (sig[0], sig[b0_len / 2], sig[b0_len - 1]);
+            println!(
+                "  block-0 shape: start {first:.3} -> mid {mid:.3} -> end {last:.3} {}\n",
+                if mid > first && mid > last { "(U-shaped: PASS)" } else { "(WARN: not U-shaped)" }
+            );
+        }
+        for (i, v) in sig.iter().enumerate() {
+            csv.push(vec![task.to_string(), i.to_string(), format!("{v}")]);
+        }
+    }
+    write_csv("results/fig1_confidence.csv", &["task", "step", "mean_conf"], &csv)?;
+    println!("csv -> results/fig1_confidence.csv");
+    Ok(())
+}

@@ -1,0 +1,58 @@
+//! Figure 2 reproduction: pairwise cosine similarity of step-block mean
+//! confidence vectors across inputs of each task. The paper's observation:
+//! values near 1.0 everywhere — a *task-level* confidence signature — which
+//! is what licenses one-shot calibration.
+//!
+//!     cargo bench --bench fig2_cosine [-- --n 10]
+
+use anyhow::Result;
+
+use osdt::bench::{ascii_heatmap, collect_traces, cosine_matrix, write_csv, CALIBRATION_TAU};
+use osdt::config::Args;
+use osdt::model::ModelConfig;
+use osdt::runtime::ModelRuntime;
+use osdt::tokenizer::Tokenizer;
+use osdt::workload::{Dataset, TASKS};
+
+fn main() -> Result<()> {
+    osdt::util::logging::init();
+    let args = Args::parse(std::env::args().skip(1).collect::<Vec<_>>(), &["n"])?;
+    let n: usize = args.get_parse("n", 10)?;
+
+    let cfg = ModelConfig::load("artifacts")?;
+    let rt = ModelRuntime::load(&cfg)?;
+    let tok = Tokenizer::from_config(&cfg)?;
+
+    let mut csv = Vec::new();
+    println!("=== Figure 2: pairwise cosine similarity (n={n} inputs/task) ===\n");
+    for task in TASKS {
+        let ds = Dataset::load(cfg.artifact_dir.join("data"), task)?;
+        let traces = collect_traces(&rt, &tok, &ds, n, CALIBRATION_TAU)?;
+        let m = cosine_matrix(&traces);
+        let (mut lo, mut sum, mut cnt) = (f64::INFINITY, 0.0, 0.0);
+        for i in 0..m.len() {
+            for j in 0..m.len() {
+                if i != j {
+                    lo = lo.min(m[i][j]);
+                    sum += m[i][j];
+                    cnt += 1.0;
+                }
+                csv.push(vec![
+                    task.to_string(),
+                    i.to_string(),
+                    j.to_string(),
+                    format!("{}", m[i][j]),
+                ]);
+            }
+        }
+        let mean = sum / cnt;
+        print!("{}", ascii_heatmap(&m, 0.9, 1.0, task));
+        println!(
+            "  off-diagonal: mean {mean:.4}, min {lo:.4} {}\n",
+            if mean > 0.95 { "(near-1: PASS)" } else { "(WARN: below paper's near-1)" }
+        );
+    }
+    write_csv("results/fig2_cosine.csv", &["task", "i", "j", "cosine"], &csv)?;
+    println!("csv -> results/fig2_cosine.csv");
+    Ok(())
+}

@@ -1,0 +1,106 @@
+//! Whole-stack perf profile (the §Perf measurement tool):
+//!   1. per-variant forward-pass latency (exec vs host-transfer split),
+//!   2. lockstep batch scaling (b1/b2/b4) — L2+runtime efficiency,
+//!   3. dual-KV-cache speedup — the window-pass fast path,
+//!   4. end-to-end decode throughput per policy.
+//!
+//!     cargo bench --bench perf_engine [-- --reps 20]
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use osdt::cache::{flops_full, flops_window, CacheConfig};
+use osdt::config::Args;
+use osdt::decode::Engine;
+use osdt::model::ModelConfig;
+use osdt::policy::StaticThreshold;
+use osdt::runtime::ModelRuntime;
+use osdt::tokenizer::Tokenizer;
+
+fn main() -> Result<()> {
+    osdt::util::logging::init();
+    let args = Args::parse(std::env::args().skip(1).collect::<Vec<_>>(), &["reps"])?;
+    let reps: usize = args.get_parse("reps", 20)?;
+
+    let cfg = ModelConfig::load("artifacts")?;
+    let rt = ModelRuntime::load(&cfg)?;
+    let tok = Tokenizer::from_config(&cfg)?;
+    let layout = tok.layout_prompt(&cfg, "Q: 3+4-2=?")?;
+
+    // ---- 1. per-variant latency --------------------------------------------
+    println!("=== fwd-pass latency ({reps} reps, f32, seq {}) ===", cfg.seq_len);
+    let time_variant = |name: &str, f: &mut dyn FnMut() -> Result<()>| -> Result<f64> {
+        f()?; // warm
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            f()?;
+        }
+        let ms = t0.elapsed().as_secs_f64() * 1e3 / reps as f64;
+        println!("  {name:<18} {ms:8.2} ms");
+        Ok(ms)
+    };
+    let l1 = layout.clone();
+    let full_ms = time_variant("fwd_conf b1", &mut || {
+        rt.fwd_conf(&[l1.clone()]).map(|_| ())
+    })?;
+    for b in [2usize, 4] {
+        let batch: Vec<Vec<u32>> = (0..b).map(|_| layout.clone()).collect();
+        let ms = time_variant(&format!("fwd_conf b{b}"), &mut || {
+            rt.fwd_conf(&batch).map(|_| ())
+        })?;
+        println!(
+            "    -> batch efficiency: {:.2}x ideal {b}x ({:.1}%)",
+            full_ms * b as f64 / ms,
+            full_ms * b as f64 / ms / b as f64 * 100.0
+        );
+    }
+    let kv_ms = time_variant("fwd_full_kv b1", &mut || {
+        rt.fwd_full_kv(&layout).map(|_| ())
+    })?;
+    let (_, cache) = rt.fwd_full_kv(&layout)?;
+    let win = layout[cfg.block_range(0)].to_vec();
+    let win_ms = time_variant("fwd_window b1", &mut || {
+        rt.fwd_window(&win, cfg.prompt_len, &cache).map(|_| ())
+    })?;
+    println!(
+        "  window/full cost : measured {:.2} vs analytic FLOP ratio {:.2}",
+        win_ms / full_ms,
+        flops_window(&cfg) / flops_full(&cfg)
+    );
+    println!("  full_kv overhead : {:.2}x of fwd_conf (extra K/V outputs)", kv_ms / full_ms);
+
+    // ---- 2. exec vs transfer split ------------------------------------------
+    let st = rt.stats();
+    println!(
+        "\n=== runtime split (cumulative) ===\n  exec {:.1} ms, host transfer {:.1} ms ({:.1}% transfer)",
+        st.exec_micros as f64 / 1e3,
+        st.transfer_micros as f64 / 1e3,
+        st.transfer_micros as f64 / (st.exec_micros + st.transfer_micros).max(1) as f64 * 100.0
+    );
+
+    // ---- 3/4. end-to-end decode throughput ----------------------------------
+    println!("\n=== end-to-end decode (static:0.9) ===");
+    for (label, cache_cfg) in [
+        ("no cache", CacheConfig::disabled()),
+        ("dual KV cache", CacheConfig::block_boundary()),
+    ] {
+        let engine = Engine::with_cache(&rt, cache_cfg);
+        let p = StaticThreshold::new(0.9);
+        let t0 = Instant::now();
+        let mut steps = 0;
+        let n = 10;
+        for _ in 0..n {
+            let res = engine.decode(layout.clone(), &p)?;
+            steps += res.steps;
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        println!(
+            "  {label:<14} {:7.1} tokens/s  ({:.1} steps/seq, {:.1} ms/seq)",
+            (n * cfg.gen_len) as f64 / dt,
+            steps as f64 / n as f64,
+            dt * 1e3 / n as f64
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,123 @@
+//! Serving-systems bench: end-to-end latency vs offered load through the
+//! coordinator + router, comparing decode policies under the same Poisson
+//! arrival trace. The systems-level restatement of Table 1: a policy that
+//! spends fewer forward passes per sequence sustains a higher arrival rate
+//! before queueing delay blows up.
+//!
+//!     cargo bench --bench serving_load [-- --n 24 --rates 1,2,4]
+//!
+//! Runs on the real PJRT model (1 worker replica, batch 1, matching the
+//! paper's serving setup).
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use osdt::bench::{render_table, write_csv};
+use osdt::config::Args;
+use osdt::coordinator::{Coordinator, CoordinatorConfig, Request};
+use osdt::model::ModelConfig;
+use osdt::runtime::ModelRuntime;
+use osdt::util::stats::Histogram;
+use osdt::workload::{poisson_trace, Dataset};
+
+fn main() -> Result<()> {
+    osdt::util::logging::init();
+    let args = Args::parse(std::env::args().skip(1).collect::<Vec<_>>(), &["n", "rates"])?;
+    let n: usize = args.get_parse("n", 24)?;
+    let rates: Vec<f64> = args
+        .get_or("rates", "2,6,12")
+        .split(',')
+        .map(|s| s.parse().unwrap())
+        .collect();
+
+    let cfg = ModelConfig::load("artifacts")?;
+    let ds = Dataset::load(cfg.artifact_dir.join("data"), "synth-math")?;
+
+    let mut rows = Vec::new();
+    let mut csv = Vec::new();
+    for policy in ["osdt:block:q1:0.75:0.2", "static:0.9", "sequential:1"] {
+        for &rate in &rates {
+            let coord = Arc::new(Coordinator::start(
+                CoordinatorConfig {
+                    workers: 1,
+                    max_batch: 1,
+                    batch_wait: Duration::from_millis(1),
+                    ..Default::default()
+                },
+                cfg.clone(),
+                |_| {
+                    let cfg = ModelConfig::load("artifacts")?;
+                    ModelRuntime::load(&cfg)
+                },
+            )?);
+            // warm the OSDT profile so calibration isn't in the timed region
+            let _ = coord.generate("synth-math", &ds.examples[0].prompt, policy)?;
+
+            let trace = poisson_trace(&ds, rate, n, 7);
+            let mut lat = Histogram::latency();
+            let t0 = Instant::now();
+            let mut pending = Vec::new();
+            for r in &trace {
+                let due = Duration::from_secs_f64(r.at);
+                if let Some(wait) = due.checked_sub(t0.elapsed()) {
+                    std::thread::sleep(wait);
+                }
+                pending.push((
+                    Instant::now(),
+                    coord.submit(Request {
+                        id: 0,
+                        task: r.task.clone(),
+                        prompt: r.prompt.clone(),
+                        policy: policy.into(),
+                    }),
+                ));
+            }
+            let mut ok = 0;
+            for (sent, rx) in pending {
+                let resp = rx.recv()?;
+                if resp.error.is_none() {
+                    ok += 1;
+                }
+                lat.record(sent.elapsed().as_secs_f64() * 1e6);
+            }
+            let wall = t0.elapsed().as_secs_f64();
+            let p50 = lat.quantile(0.5) / 1e3;
+            let p95 = lat.quantile(0.95) / 1e3;
+            eprintln!("[load] {policy} @{rate}rps: p50 {p50:.0}ms p95 {p95:.0}ms");
+            rows.push(vec![
+                policy.to_string(),
+                format!("{rate}"),
+                format!("{ok}/{n}"),
+                format!("{:.0}", p50),
+                format!("{:.0}", p95),
+                format!("{:.1}", (ok * cfg.gen_len) as f64 / wall),
+            ]);
+            csv.push(vec![
+                policy.to_string(),
+                format!("{rate}"),
+                format!("{}", lat.quantile(0.5)),
+                format!("{}", lat.quantile(0.95)),
+                format!("{}", (ok * cfg.gen_len) as f64 / wall),
+            ]);
+            drop(coord);
+        }
+        rows.push(vec![String::new(); 6]);
+    }
+    println!("\n=== serving latency vs offered load (n={n}/point) ===");
+    println!(
+        "{}",
+        render_table(
+            &["policy", "rps", "ok", "p50 ms", "p95 ms", "tokens/s"],
+            &rows
+        )
+    );
+    write_csv(
+        "results/serving_load.csv",
+        &["policy", "rate", "p50_us", "p95_us", "tokens_per_sec"],
+        &csv,
+    )?;
+    println!("csv -> results/serving_load.csv");
+    Ok(())
+}

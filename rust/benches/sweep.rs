@@ -1,0 +1,127 @@
+//! Figures 3–5 reproduction: the OSDT hyperparameter sweep — dynamic mode M
+//! × metric μ × cap κ × slack ε — reporting the accuracy/throughput point
+//! for every combination, per task.
+//!
+//!     cargo bench --bench sweep                 # reduced grid, all tasks
+//!     cargo bench --bench sweep -- --task math  # one task
+//!     cargo bench --bench sweep -- --full       # the paper's full grid
+//!
+//! Full grid (paper §4.1): μ ∈ {mean,q1,q2,q3,min-whisker},
+//! κ ∈ {0.75,0.8,0.85,0.9,0.95}, ε ∈ {0.01,0.05,0.1,0.15,0.2}, M ∈ {block,
+//! step-block} = 250 points/task. The reduced default keeps `cargo bench`
+//! under a few minutes on CPU.
+
+use anyhow::Result;
+
+use osdt::bench::{render_table, run_eval, write_csv, RunOpts};
+use osdt::config::Args;
+use osdt::model::ModelConfig;
+use osdt::runtime::ModelRuntime;
+use osdt::tokenizer::Tokenizer;
+use osdt::workload::Dataset;
+
+fn main() -> Result<()> {
+    osdt::util::logging::init();
+    let args = Args::parse(
+        std::env::args().skip(1).collect::<Vec<_>>(),
+        &["task", "n"],
+    )?;
+    let n: usize = args.get_parse("n", 6)?;
+    let full = args.has("full");
+    let task_filter = args.get("task").map(|t| {
+        if t.starts_with("synth-") {
+            t.to_string()
+        } else {
+            format!("synth-{t}")
+        }
+    });
+
+    let (modes, metrics, kappas, epsilons): (
+        Vec<&str>,
+        Vec<&str>,
+        Vec<f64>,
+        Vec<f64>,
+    ) = if full {
+        (
+            vec!["block", "step-block"],
+            vec!["mean", "q1", "q2", "q3", "min-whisker"],
+            vec![0.75, 0.8, 0.85, 0.9, 0.95],
+            vec![0.01, 0.05, 0.1, 0.15, 0.2],
+        )
+    } else {
+        (
+            vec!["block", "step-block"],
+            vec!["q1", "q2"],
+            vec![0.75, 0.85, 0.95],
+            vec![0.05, 0.2],
+        )
+    };
+
+    let cfg = ModelConfig::load("artifacts")?;
+    let rt = ModelRuntime::load(&cfg)?;
+    let tok = Tokenizer::from_config(&cfg)?;
+
+    let tasks: Vec<String> = match &task_filter {
+        Some(t) => vec![t.clone()],
+        None => osdt::workload::TASKS.iter().map(|s| s.to_string()).collect(),
+    };
+
+    let mut csv = Vec::new();
+    for task in &tasks {
+        let ds = Dataset::load(cfg.artifact_dir.join("data"), task)?;
+        let opts = RunOpts { n, ..Default::default() };
+        let mut best: Vec<(f64, f64, String)> = Vec::new(); // (acc, thru, spec)
+        let total = modes.len() * metrics.len() * kappas.len() * epsilons.len();
+        let mut done = 0usize;
+        for mode in &modes {
+            for metric in &metrics {
+                for &kappa in &kappas {
+                    for &eps in &epsilons {
+                        let spec = format!("osdt:{mode}:{metric}:{kappa}:{eps}");
+                        let row = run_eval(&rt, &tok, &ds, &spec, &opts)?;
+                        done += 1;
+                        if done % 10 == 0 {
+                            eprintln!("[sweep] {task}: {done}/{total}");
+                        }
+                        csv.push(vec![
+                            task.clone(),
+                            mode.to_string(),
+                            metric.to_string(),
+                            format!("{kappa}"),
+                            format!("{eps}"),
+                            format!("{}", row.accuracy),
+                            format!("{}", row.tokens_per_sec),
+                            format!("{}", row.mean_steps),
+                        ]);
+                        best.push((row.accuracy, row.tokens_per_sec, spec));
+                    }
+                }
+            }
+        }
+        // Pareto frontier: points not dominated in (acc, thru)
+        let mut frontier: Vec<&(f64, f64, String)> = best
+            .iter()
+            .filter(|(a, t, _)| {
+                !best
+                    .iter()
+                    .any(|(a2, t2, _)| (*a2 > *a && *t2 >= *t) || (*a2 >= *a && *t2 > *t))
+            })
+            .collect();
+        frontier.sort_by(|x, y| y.0.partial_cmp(&x.0).unwrap());
+        println!("\n=== {task}: Pareto frontier of the sweep ({} points) ===", best.len());
+        let rows: Vec<Vec<String>> = frontier
+            .iter()
+            .map(|(a, t, s)| {
+                vec![s.clone(), format!("{:.2}", a * 100.0), format!("{t:.1}")]
+            })
+            .collect();
+        println!("{}", render_table(&["spec", "acc%", "tokens/s"], &rows));
+    }
+    write_csv(
+        "results/sweep.csv",
+        &["task", "mode", "metric", "kappa", "epsilon", "accuracy", "tokens_per_sec", "steps"],
+        &csv,
+    )?;
+    println!("csv -> results/sweep.csv ({} rows)", csv.len());
+    Ok(())
+}

@@ -1,0 +1,368 @@
+//! Shared benchmark harness (the offline registry has no criterion).
+//!
+//! Provides the experiment runners used by every `benches/*.rs` target and
+//! by the examples: dataset evaluation under a policy (accuracy + tokens/s,
+//! the Table 1 row), trajectory capture (Figures 1–2), plain-text tables,
+//! CSV emission, and ASCII plots/heatmaps so results render in a terminal
+//! the way the paper's figures render on a page.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::cache::CacheConfig;
+use crate::config::parse_policy_spec;
+use crate::decode::{Engine, ForwardModel};
+use crate::eval::EvalStats;
+use crate::policy::{
+    Calibrator, CalibrationTrace, Osdt, Policy, PolicySpec, StaticThreshold,
+};
+use crate::tokenizer::Tokenizer;
+use crate::workload::Dataset;
+
+/// Calibration decode policy for OSDT runs (paper: Fast-dLLM static τ=0.9).
+pub const CALIBRATION_TAU: f64 = 0.9;
+
+/// One accuracy/throughput measurement — a row of Table 1 or a sweep point.
+#[derive(Clone, Debug)]
+pub struct EvalRow {
+    pub task: String,
+    pub policy: String,
+    pub n: usize,
+    pub accuracy: f64,
+    pub tokens_per_sec: f64,
+    pub mean_steps: f64,
+    pub mean_latency_ms: f64,
+    /// wall-clock excluded calibration (paper reports steady-state)
+    pub calibration_ms: f64,
+    /// mean argmax-fallback activations per sequence (A2 ablation)
+    pub mean_fallback: f64,
+}
+
+/// Options for a dataset evaluation run.
+#[derive(Clone, Debug)]
+pub struct RunOpts {
+    /// number of eval examples (clamped to dataset size)
+    pub n: usize,
+    pub cache: CacheConfig,
+    /// index of the calibration sequence within the dataset (Algorithm 1
+    /// uses the first; the calib-choice ablation varies this)
+    pub calibration_index: usize,
+}
+
+impl Default for RunOpts {
+    fn default() -> Self {
+        RunOpts { n: 64, cache: CacheConfig::disabled(), calibration_index: 0 }
+    }
+}
+
+/// Evaluate `policy_spec` over a dataset with the real decode loop:
+/// calibrates first if the spec is OSDT (on `opts.calibration_index`), then
+/// decodes `n` evaluation sequences, scoring accuracy and throughput.
+pub fn run_eval<M: ForwardModel>(
+    model: &M,
+    tok: &Tokenizer,
+    ds: &Dataset,
+    policy_spec: &str,
+    opts: &RunOpts,
+) -> Result<EvalRow> {
+    let cfg = model.config().clone();
+    let engine = Engine::with_cache(model, opts.cache);
+    let spec = parse_policy_spec(policy_spec)?;
+
+    // ---- Phase 1 (OSDT only): one-shot calibration --------------------------
+    let mut calibration_ms = 0.0;
+    let policy: Box<dyn Policy> = match &spec {
+        PolicySpec::Osdt { mode, metric, kappa, epsilon } => {
+            let idx = opts.calibration_index % ds.len();
+            let layout = tok.layout_prompt(&cfg, &ds.examples[idx].prompt)?;
+            let t0 = Instant::now();
+            let cal = engine.decode(layout, &StaticThreshold::new(CALIBRATION_TAU))?;
+            calibration_ms = t0.elapsed().as_secs_f64() * 1e3;
+            let profile = Calibrator::calibrate(&cal.trace, *mode, *metric);
+            Box::new(Osdt::from_profile(profile, *kappa, *epsilon))
+        }
+        other => other.build()?,
+    };
+
+    // ---- Phase 2: timed evaluation ------------------------------------------
+    let n = opts.n.min(ds.len());
+    let mut stats = EvalStats::default();
+    let mut total_steps = 0usize;
+    let mut total_fallback = 0usize;
+    let mut total_latency = 0.0f64;
+    let t_run = Instant::now();
+    for ex in ds.examples.iter().take(n) {
+        let layout = tok.layout_prompt(&cfg, &ex.prompt)?;
+        let t0 = Instant::now();
+        let res = engine.decode(layout, policy.as_ref())?;
+        total_latency += t0.elapsed().as_secs_f64() * 1e3;
+        total_steps += res.steps;
+        total_fallback += res.fallback_steps;
+        let completion = tok.decode_until_eos(res.gen_tokens(&cfg));
+        stats.record(ex, &completion);
+    }
+    let wall = t_run.elapsed().as_secs_f64();
+    Ok(EvalRow {
+        task: ds.task.clone(),
+        policy: policy_spec.to_string(),
+        n,
+        accuracy: stats.accuracy(),
+        tokens_per_sec: (n * cfg.gen_len) as f64 / wall.max(1e-9),
+        mean_steps: total_steps as f64 / n.max(1) as f64,
+        mean_latency_ms: total_latency / n.max(1) as f64,
+        calibration_ms,
+        mean_fallback: total_fallback as f64 / n.max(1) as f64,
+    })
+}
+
+/// Decode `n` sequences with the static calibration policy and return their
+/// traces — the raw material of Figures 1 and 2.
+pub fn collect_traces<M: ForwardModel>(
+    model: &M,
+    tok: &Tokenizer,
+    ds: &Dataset,
+    n: usize,
+    tau: f64,
+) -> Result<Vec<CalibrationTrace>> {
+    let cfg = model.config().clone();
+    let engine = Engine::new(model);
+    let p = StaticThreshold::new(tau);
+    ds.examples
+        .iter()
+        .take(n.min(ds.len()))
+        .map(|ex| {
+            let layout = tok.layout_prompt(&cfg, &ex.prompt)?;
+            Ok(engine.decode(layout, &p)?.trace)
+        })
+        .collect()
+}
+
+/// Pad/truncate signatures to a common length (block boundaries differ by a
+/// step or two across inputs) then mean-pool: the Figure 1 series.
+pub fn mean_signature(traces: &[CalibrationTrace]) -> Vec<f64> {
+    let len = traces.iter().map(|t| t.signature().len()).min().unwrap_or(0);
+    if len == 0 {
+        return vec![];
+    }
+    let mut acc = vec![0.0; len];
+    for t in traces {
+        for (a, v) in acc.iter_mut().zip(t.signature()) {
+            *a += v;
+        }
+    }
+    for a in &mut acc {
+        *a /= traces.len() as f64;
+    }
+    acc
+}
+
+/// All-pairs cosine-similarity matrix of trace signatures (Figure 2).
+pub fn cosine_matrix(traces: &[CalibrationTrace]) -> Vec<Vec<f64>> {
+    let sigs: Vec<Vec<f64>> = traces.iter().map(|t| t.signature()).collect();
+    let len = sigs.iter().map(Vec::len).min().unwrap_or(0);
+    let n = sigs.len();
+    let mut m = vec![vec![0.0; n]; n];
+    for i in 0..n {
+        for j in 0..n {
+            m[i][j] = crate::util::stats::cosine(&sigs[i][..len], &sigs[j][..len])
+                .unwrap_or(f64::NAN);
+        }
+    }
+    m
+}
+
+// ---------------------------------------------------------------------------
+// Rendering helpers
+// ---------------------------------------------------------------------------
+
+/// Fixed-width text table.
+pub fn render_table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let line = |cells: Vec<String>| -> String {
+        cells
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:width$}", c, width = widths[i]))
+            .collect::<Vec<_>>()
+            .join("  ")
+    };
+    let mut out = line(headers.iter().map(|s| s.to_string()).collect());
+    out.push('\n');
+    out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+    out.push('\n');
+    for row in rows {
+        out.push_str(&line(row.clone()));
+        out.push('\n');
+    }
+    out
+}
+
+/// ASCII line plot (rows = resolution, series rendered with `*`).
+pub fn ascii_plot(series: &[f64], height: usize, title: &str) -> String {
+    if series.is_empty() {
+        return format!("{title}: (empty)\n");
+    }
+    let lo = series.iter().cloned().fold(f64::INFINITY, f64::min);
+    let hi = series.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let span = (hi - lo).max(1e-9);
+    let mut grid = vec![vec![' '; series.len()]; height];
+    for (x, &v) in series.iter().enumerate() {
+        let y = ((v - lo) / span * (height - 1) as f64).round() as usize;
+        grid[height - 1 - y][x] = '*';
+    }
+    let mut out = format!("{title}  [min {lo:.3}, max {hi:.3}]\n");
+    for row in grid {
+        out.push('|');
+        out.extend(row);
+        out.push('\n');
+    }
+    out.push('+');
+    out.push_str(&"-".repeat(series.len()));
+    out.push('\n');
+    out
+}
+
+/// ASCII heatmap with a 5-level ramp (for the Figure 2 cosine matrix).
+pub fn ascii_heatmap(m: &[Vec<f64>], lo: f64, hi: f64, title: &str) -> String {
+    let ramp = [' ', '.', '+', '#', '@'];
+    let mut out = format!("{title}  [{lo:.2}..{hi:.2}] ramp ' .+#@'\n");
+    for row in m {
+        for &v in row {
+            let t = ((v - lo) / (hi - lo)).clamp(0.0, 1.0);
+            let idx = (t * (ramp.len() - 1) as f64).round() as usize;
+            out.push(ramp[idx]);
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// CSV emission (results dumped next to the textual report).
+pub fn write_csv(path: &str, headers: &[&str], rows: &[Vec<String>]) -> Result<()> {
+    let mut text = headers.join(",");
+    text.push('\n');
+    for row in rows {
+        text.push_str(&row.join(","));
+        text.push('\n');
+    }
+    if let Some(dir) = std::path::Path::new(path).parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(path, text)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::fixtures::tiny_config;
+    use crate::sim::SimModel;
+    use crate::workload::Example;
+
+    fn sim_dataset(n: usize) -> Dataset {
+        Dataset {
+            task: "synth-math".into(),
+            examples: (0..n)
+                .map(|i| Example {
+                    task: "synth-math".into(),
+                    prompt: format!("Q: {i}+1=?"),
+                    answer: format!("{}", i + 1),
+                    code_op: None,
+                })
+                .collect(),
+        }
+    }
+
+    fn tok() -> Tokenizer {
+        Tokenizer::from_config(&tiny_config()).unwrap()
+    }
+
+    #[test]
+    fn run_eval_static_vs_osdt_on_sim() {
+        let m = SimModel::math_like(2);
+        let ds = sim_dataset(12);
+        let t = tok();
+        let stat = run_eval(&m, &t, &ds, "static:0.9", &RunOpts::default()).unwrap();
+        let osdt = run_eval(
+            &m,
+            &t,
+            &ds,
+            "osdt:block:q1:0.75:0.2",
+            &RunOpts::default(),
+        )
+        .unwrap();
+        assert_eq!(stat.n, 12);
+        assert!(stat.tokens_per_sec > 0.0);
+        assert!(osdt.calibration_ms > 0.0, "OSDT must calibrate");
+        // OSDT's q1*(1-eps) thresholds are laxer than static 0.9 on the
+        // simulator -> fewer steps
+        assert!(
+            osdt.mean_steps <= stat.mean_steps,
+            "osdt {} vs static {}",
+            osdt.mean_steps,
+            stat.mean_steps
+        );
+    }
+
+    #[test]
+    fn traces_and_signature_shapes() {
+        let m = SimModel::qa_like(4);
+        let ds = sim_dataset(6);
+        let traces = collect_traces(&m, &tok(), &ds, 4, 0.9).unwrap();
+        assert_eq!(traces.len(), 4);
+        let sig = mean_signature(&traces);
+        assert!(!sig.is_empty());
+        let cm = cosine_matrix(&traces);
+        assert_eq!(cm.len(), 4);
+        for i in 0..4 {
+            assert!((cm[i][i] - 1.0).abs() < 1e-9);
+            for j in 0..4 {
+                assert!(cm[i][j] > 0.9, "cosine {}", cm[i][j]);
+            }
+        }
+    }
+
+    #[test]
+    fn render_table_aligns() {
+        let t = render_table(
+            &["a", "long-header"],
+            &[
+                vec!["1".into(), "2".into()],
+                vec!["wide-cell".into(), "3".into()],
+            ],
+        );
+        let lines: Vec<&str> = t.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].contains("long-header"));
+    }
+
+    #[test]
+    fn ascii_plot_and_heatmap_render() {
+        let p = ascii_plot(&[0.1, 0.5, 0.9, 0.5, 0.1], 5, "u-shape");
+        assert!(p.contains('*'));
+        let h = ascii_heatmap(&[vec![1.0, 0.0], vec![0.5, 1.0]], 0.0, 1.0, "hm");
+        assert!(h.contains('@'));
+    }
+
+    #[test]
+    fn csv_written() {
+        let path = std::env::temp_dir().join(format!("osdt_csv_{}.csv", std::process::id()));
+        write_csv(
+            path.to_str().unwrap(),
+            &["x", "y"],
+            &[vec!["1".into(), "2".into()]],
+        )
+        .unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "x,y\n1,2\n");
+        std::fs::remove_file(path).ok();
+    }
+}

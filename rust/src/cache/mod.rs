@@ -1,0 +1,148 @@
+//! Fast-dLLM dual KV-cache management: configuration (when to refresh),
+//! accounting (passes, analytic FLOPs saved), and the cost model used in
+//! EXPERIMENTS.md to report the cache's effect independently of CPU noise.
+//!
+//! Mechanism recap (Fast-dLLM "DualCache"): at each block boundary a full
+//! forward refreshes K/V for *all* positions (prefix and suffix — suffix
+//! K/V of still-masked future blocks change slowly); within the block, only
+//! the active `block_len` window is recomputed, attending against the
+//! cached K/V. Optionally the cache can be re-refreshed every
+//! `refresh_interval` window steps to bound staleness (an ablation knob;
+//! the paper's baseline uses block-boundary refresh only).
+
+use crate::model::ModelConfig;
+
+/// Cache behaviour for the decode engine.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CacheConfig {
+    pub enabled: bool,
+    /// If > 0: force a full refresh after this many consecutive window
+    /// steps within a block. 0 = refresh at block boundaries only.
+    pub refresh_interval: usize,
+}
+
+impl CacheConfig {
+    pub fn disabled() -> Self {
+        CacheConfig { enabled: false, refresh_interval: 0 }
+    }
+
+    pub fn block_boundary() -> Self {
+        CacheConfig { enabled: true, refresh_interval: 0 }
+    }
+
+    pub fn with_refresh_interval(n: usize) -> Self {
+        CacheConfig { enabled: true, refresh_interval: n }
+    }
+}
+
+impl Default for CacheConfig {
+    fn default() -> Self {
+        CacheConfig::disabled()
+    }
+}
+
+/// Analytic FLOP model of the two forward variants (used for the cache
+/// ablation and the §Perf roofline discussion; counts multiply-adds as 2).
+pub fn flops_full(cfg: &ModelConfig) -> f64 {
+    let s = cfg.seq_len as f64;
+    let d = cfg.d_model as f64;
+    let ff = cfg.d_ff as f64;
+    let v = cfg.vocab_size as f64;
+    let l = cfg.n_layers as f64;
+    // per layer: qkv+out projections (4*d^2) + mlp (2*d*ff); attention
+    // scores+mix: 4*s*d per query row
+    let per_tok = l * (2.0 * 4.0 * d * d + 2.0 * 2.0 * d * ff + 2.0 * 2.0 * s * d);
+    s * (per_tok + 2.0 * d * v)
+}
+
+/// Window pass: only `block_len` query rows, but attention still spans the
+/// full cached sequence.
+pub fn flops_window(cfg: &ModelConfig) -> f64 {
+    let s = cfg.seq_len as f64;
+    let w = cfg.block_len as f64;
+    let d = cfg.d_model as f64;
+    let ff = cfg.d_ff as f64;
+    let v = cfg.vocab_size as f64;
+    let l = cfg.n_layers as f64;
+    let per_tok = l * (2.0 * 4.0 * d * d + 2.0 * 2.0 * d * ff + 2.0 * 2.0 * s * d);
+    w * (per_tok + 2.0 * d * v)
+}
+
+/// Pass accounting for one decode (or an aggregated run).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct CacheStats {
+    pub full_passes: u64,
+    pub window_passes: u64,
+}
+
+impl CacheStats {
+    pub fn add_decode(&mut self, full: usize, window: usize) {
+        self.full_passes += full as u64;
+        self.window_passes += window as u64;
+    }
+
+    /// Total analytic FLOPs under this pass mix.
+    pub fn total_flops(&self, cfg: &ModelConfig) -> f64 {
+        self.full_passes as f64 * flops_full(cfg)
+            + self.window_passes as f64 * flops_window(cfg)
+    }
+
+    /// FLOPs if every pass had been a full forward (the no-cache cost of
+    /// the same number of policy steps).
+    pub fn nocache_flops(&self, cfg: &ModelConfig) -> f64 {
+        (self.full_passes + self.window_passes) as f64 * flops_full(cfg)
+    }
+
+    /// Fraction of forward-pass compute the cache eliminated.
+    pub fn savings(&self, cfg: &ModelConfig) -> f64 {
+        let base = self.nocache_flops(cfg);
+        if base == 0.0 {
+            0.0
+        } else {
+            1.0 - self.total_flops(cfg) / base
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::fixtures::tiny_config;
+
+    #[test]
+    fn window_cheaper_than_full() {
+        let cfg = tiny_config();
+        let full = flops_full(&cfg);
+        let win = flops_window(&cfg);
+        assert!(win < full);
+        // ratio should be ~ block_len / seq_len = 0.2 for this geometry
+        let ratio = win / full;
+        assert!((0.15..0.3).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn stats_savings() {
+        let cfg = tiny_config();
+        let mut st = CacheStats::default();
+        st.add_decode(3, 27); // 3 blocks refreshed, 27 window steps
+        assert_eq!(st.full_passes, 3);
+        let s = st.savings(&cfg);
+        assert!(s > 0.5, "savings {s}");
+        assert!(s < 1.0);
+    }
+
+    #[test]
+    fn no_window_passes_no_savings() {
+        let cfg = tiny_config();
+        let mut st = CacheStats::default();
+        st.add_decode(10, 0);
+        assert_eq!(st.savings(&cfg), 0.0);
+    }
+
+    #[test]
+    fn config_constructors() {
+        assert!(!CacheConfig::disabled().enabled);
+        assert!(CacheConfig::block_boundary().enabled);
+        assert_eq!(CacheConfig::with_refresh_interval(4).refresh_interval, 4);
+    }
+}

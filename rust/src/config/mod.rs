@@ -1,0 +1,275 @@
+//! Configuration substrate: typed configs for the engine / policies /
+//! server plus a small CLI argument parser (the registry has no clap).
+//!
+//! Policies are configured by a compact spec string used uniformly across
+//! the CLI, the benches and the wire protocol:
+//!
+//!   sequential[:k]              LLaDA fixed-quota baseline (default k=1)
+//!   static[:tau]                Fast-dLLM global threshold (default 0.9)
+//!   factor[:f]                  Fast-dLLM factor schedule (default 0.95)
+//!   osdt:MODE:METRIC:KAPPA:EPS  e.g. osdt:block:q1:0.75:0.2
+//!                                    osdt:step-block:q2:0.75:0.2
+
+use std::collections::VecDeque;
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use crate::policy::{DynamicMode, Metric, PolicySpec};
+
+/// Engine-level configuration.
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    /// Directory holding model_config.json / weights.bin / *.hlo.txt.
+    pub artifact_dir: PathBuf,
+    /// Use the Fast-dLLM dual KV cache (fwd_full_kv + fwd_window) instead
+    /// of full recomputation every step.
+    pub kv_cache: bool,
+    /// Greedy-confidence decode temperature is fixed at 1.0 (paper setting);
+    /// kept here to document the choice.
+    pub temperature: f32,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            artifact_dir: PathBuf::from("artifacts"),
+            kv_cache: false,
+            temperature: 1.0,
+        }
+    }
+}
+
+/// Server configuration.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    pub addr: String,
+    /// Engine worker threads (each owns a PJRT executable set).
+    pub workers: usize,
+    /// Dynamic batcher window: max requests per batch.
+    pub max_batch: usize,
+    /// Dynamic batcher window: max wait before dispatching a partial batch.
+    pub batch_wait_ms: u64,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            addr: "127.0.0.1:7474".into(),
+            workers: 1,
+            max_batch: 4,
+            batch_wait_ms: 5,
+        }
+    }
+}
+
+/// Parse a policy spec string (see module docs).
+pub fn parse_policy_spec(s: &str) -> Result<PolicySpec> {
+    let parts: Vec<&str> = s.split(':').collect();
+    let fl = |x: &str, what: &str| -> Result<f64> {
+        x.parse::<f64>().with_context(|| format!("bad {what}: {x:?}"))
+    };
+    match parts[0] {
+        "sequential" => {
+            let k = if parts.len() > 1 {
+                parts[1].parse::<usize>().context("bad k")?
+            } else {
+                1
+            };
+            if k == 0 {
+                bail!("sequential k must be >= 1");
+            }
+            Ok(PolicySpec::Sequential { k })
+        }
+        "static" => {
+            let tau = if parts.len() > 1 { fl(parts[1], "tau")? } else { 0.9 };
+            if !(0.0..=1.0).contains(&tau) {
+                bail!("tau must be in [0,1]");
+            }
+            Ok(PolicySpec::Static { tau })
+        }
+        "factor" => {
+            let f = if parts.len() > 1 { fl(parts[1], "factor")? } else { 0.95 };
+            if !(0.0..=1.0).contains(&f) {
+                bail!("factor must be in [0,1]");
+            }
+            Ok(PolicySpec::Factor { factor: f })
+        }
+        "osdt" => {
+            if parts.len() != 5 {
+                bail!("osdt spec is osdt:MODE:METRIC:KAPPA:EPS, got {s:?}");
+            }
+            let mode = match parts[1] {
+                "block" => DynamicMode::Block,
+                "step-block" | "stepblock" => DynamicMode::StepBlock,
+                m => bail!("unknown osdt mode {m:?}"),
+            };
+            let metric = Metric::parse(parts[2])?;
+            let kappa = fl(parts[3], "kappa")?;
+            let epsilon = fl(parts[4], "epsilon")?;
+            if !(0.0..=1.0).contains(&kappa) || !(0.0..1.0).contains(&epsilon) {
+                bail!("kappa in [0,1], epsilon in [0,1) required");
+            }
+            Ok(PolicySpec::Osdt {
+                mode,
+                metric,
+                kappa,
+                epsilon,
+            })
+        }
+        other => bail!(
+            "unknown policy {other:?} (expected sequential|static|factor|osdt)"
+        ),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CLI argument parser
+// ---------------------------------------------------------------------------
+
+/// Simple `--flag value` / `--flag` / positional parser with typed getters.
+/// No short flags, no combined `--k=v` — kept intentionally small.
+#[derive(Debug)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: Vec<(String, Option<String>)>,
+}
+
+impl Args {
+    /// Parse from raw args (without argv[0]). `value_flags` lists flags
+    /// that consume a following value; all other `--x` are boolean.
+    pub fn parse(raw: impl IntoIterator<Item = String>, value_flags: &[&str]) -> Result<Args> {
+        let mut q: VecDeque<String> = raw.into_iter().collect();
+        let mut positional = Vec::new();
+        let mut flags = Vec::new();
+        while let Some(a) = q.pop_front() {
+            if let Some(name) = a.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    flags.push((k.to_string(), Some(v.to_string())));
+                } else if value_flags.contains(&name) {
+                    let v = q
+                        .pop_front()
+                        .with_context(|| format!("--{name} needs a value"))?;
+                    flags.push((name.to_string(), Some(v)));
+                } else {
+                    flags.push((name.to_string(), None));
+                }
+            } else {
+                positional.push(a);
+            }
+        }
+        Ok(Args { positional, flags })
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.flags.iter().any(|(k, _)| k == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags
+            .iter()
+            .rev()
+            .find(|(k, _)| k == name)
+            .and_then(|(_, v)| v.as_deref())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<T>()
+                .map_err(|e| anyhow::anyhow!("--{name} {v:?}: {e}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_policy_specs() {
+        assert!(matches!(
+            parse_policy_spec("sequential").unwrap(),
+            PolicySpec::Sequential { k: 1 }
+        ));
+        assert!(matches!(
+            parse_policy_spec("sequential:3").unwrap(),
+            PolicySpec::Sequential { k: 3 }
+        ));
+        match parse_policy_spec("static:0.85").unwrap() {
+            PolicySpec::Static { tau } => assert!((tau - 0.85).abs() < 1e-12),
+            _ => panic!(),
+        }
+        match parse_policy_spec("osdt:block:q1:0.75:0.2").unwrap() {
+            PolicySpec::Osdt { mode, metric, kappa, epsilon } => {
+                assert_eq!(mode, DynamicMode::Block);
+                assert_eq!(metric, Metric::Q1);
+                assert!((kappa - 0.75).abs() < 1e-12);
+                assert!((epsilon - 0.2).abs() < 1e-12);
+            }
+            _ => panic!(),
+        }
+        match parse_policy_spec("osdt:step-block:mean:0.9:0.05").unwrap() {
+            PolicySpec::Osdt { mode, metric, .. } => {
+                assert_eq!(mode, DynamicMode::StepBlock);
+                assert_eq!(metric, Metric::Mean);
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn rejects_bad_specs() {
+        for bad in [
+            "unknown",
+            "static:2.0",
+            "sequential:0",
+            "osdt:block:q1:0.75",          // missing eps
+            "osdt:spiral:q1:0.75:0.2",     // bad mode
+            "osdt:block:q9:0.75:0.2",      // bad metric
+            "osdt:block:q1:0.75:1.0",      // eps out of range
+        ] {
+            assert!(parse_policy_spec(bad).is_err(), "{bad} should fail");
+        }
+    }
+
+    #[test]
+    fn args_basic() {
+        let a = Args::parse(
+            sv(&["serve", "--addr", "0.0.0.0:1", "--verbose", "x"]),
+            &["addr"],
+        )
+        .unwrap();
+        assert_eq!(a.positional, vec!["serve", "x"]);
+        assert_eq!(a.get("addr"), Some("0.0.0.0:1"));
+        assert!(a.has("verbose"));
+        assert!(!a.has("quiet"));
+    }
+
+    #[test]
+    fn args_equals_form_and_typed() {
+        let a = Args::parse(sv(&["--n=42", "--rate=1.5"]), &[]).unwrap();
+        assert_eq!(a.get_parse::<usize>("n", 0).unwrap(), 42);
+        assert!((a.get_parse::<f64>("rate", 0.0).unwrap() - 1.5).abs() < 1e-12);
+        assert_eq!(a.get_parse::<usize>("missing", 7).unwrap(), 7);
+        let b = Args::parse(sv(&["--n=x"]), &[]).unwrap();
+        assert!(b.get_parse::<usize>("n", 0).is_err());
+    }
+
+    #[test]
+    fn args_missing_value_errors() {
+        assert!(Args::parse(sv(&["--addr"]), &["addr"]).is_err());
+    }
+}

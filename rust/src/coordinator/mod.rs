@@ -1,0 +1,516 @@
+//! The serving coordinator: request queue, dynamic batcher, engine worker
+//! threads, and OSDT calibration lifecycle management.
+//!
+//! Shape follows the vLLM-router pattern scaled to this model: a leader
+//! (the [`Coordinator`]) owns a queue; N workers each own a full PJRT
+//! runtime (the `xla` client is not `Sync`) and pull batches off the queue.
+//!
+//! OSDT's two-phase structure lives here (Algorithm 1 at serving level):
+//! the **first request of a task** that asks for an OSDT policy is decoded
+//! with the static calibration policy while its trace is recorded; the
+//! resulting profile is stored in the shared [`ProfileStore`] cache and
+//! every subsequent request of that task reuses it. Calibration is
+//! per-(task, mode, metric) and happens at most once.
+
+pub mod router;
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::cache::CacheConfig;
+use crate::config::parse_policy_spec;
+use crate::decode::{DecodeResult, Engine, ForwardModel};
+use crate::metrics::Registry;
+use crate::model::ModelConfig;
+use crate::policy::{Calibrator, Osdt, Policy, PolicySpec, Profile, StaticThreshold};
+use crate::tokenizer::Tokenizer;
+
+/// Calibration decode policy (Phase 1 uses Fast-dLLM's static default).
+const CALIBRATION_TAU: f64 = 0.9;
+
+/// A generation request.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    pub task: String,
+    pub prompt: String,
+    /// Policy spec string, e.g. "osdt:block:q1:0.75:0.2".
+    pub policy: String,
+}
+
+/// A completed generation.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub completion: String,
+    pub steps: usize,
+    pub full_passes: usize,
+    pub window_passes: usize,
+    pub latency_ms: f64,
+    /// gen-region tokens per second of wall-clock decode time
+    pub tokens_per_sec: f64,
+    /// true iff this request performed the task's calibration run
+    pub calibrated: bool,
+    pub error: Option<String>,
+}
+
+impl Response {
+    fn failure(id: u64, err: impl std::fmt::Display) -> Self {
+        Response {
+            id,
+            completion: String::new(),
+            steps: 0,
+            full_passes: 0,
+            window_passes: 0,
+            latency_ms: 0.0,
+            tokens_per_sec: 0.0,
+            calibrated: false,
+            error: Some(err.to_string()),
+        }
+    }
+}
+
+struct Job {
+    req: Request,
+    resp: Sender<Response>,
+    enqueued: Instant,
+}
+
+/// Shared OSDT profile cache keyed by (task, mode, metric).
+type ProfileKey = (String, &'static str, &'static str);
+pub type SharedProfiles = Arc<Mutex<HashMap<ProfileKey, Profile>>>;
+
+/// Coordinator options.
+#[derive(Clone, Debug)]
+pub struct CoordinatorConfig {
+    pub workers: usize,
+    pub max_batch: usize,
+    pub batch_wait: Duration,
+    pub cache: CacheConfig,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            workers: 1,
+            max_batch: 4,
+            batch_wait: Duration::from_millis(5),
+            cache: CacheConfig::disabled(),
+        }
+    }
+}
+
+pub struct Coordinator {
+    tx: Option<Sender<Job>>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    pub metrics: Arc<Registry>,
+    pub profiles: SharedProfiles,
+    next_id: AtomicU64,
+}
+
+impl Coordinator {
+    /// Spawn workers, each building its own forward model via `factory`.
+    pub fn start<M, F>(cfg: CoordinatorConfig, model_cfg: ModelConfig, factory: F) -> Result<Self>
+    where
+        M: ForwardModel,
+        F: Fn(usize) -> Result<M> + Send + Sync + Clone + 'static,
+    {
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let metrics = Arc::new(Registry::new());
+        let profiles: SharedProfiles = Arc::new(Mutex::new(HashMap::new()));
+        let tok = Tokenizer::from_config(&model_cfg)?;
+
+        let mut handles = Vec::new();
+        for wid in 0..cfg.workers.max(1) {
+            let rx = rx.clone();
+            let metrics = metrics.clone();
+            let profiles = profiles.clone();
+            let factory = factory.clone();
+            let model_cfg = model_cfg.clone();
+            let tok = tok.clone();
+            let ccfg = cfg.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("osdt-worker-{wid}"))
+                    .spawn(move || {
+                        let model = match factory(wid) {
+                            Ok(m) => m,
+                            Err(e) => {
+                                log::error!("worker {wid}: model init failed: {e:#}");
+                                return;
+                            }
+                        };
+                        worker_loop(
+                            wid, &model, &model_cfg, &tok, &ccfg, &rx, &metrics, &profiles,
+                        );
+                    })
+                    .context("spawning worker")?,
+            );
+        }
+        Ok(Coordinator {
+            tx: Some(tx),
+            handles,
+            metrics,
+            profiles,
+            next_id: AtomicU64::new(1),
+        })
+    }
+
+    /// Submit a request; returns the channel its response will arrive on.
+    pub fn submit(&self, mut req: Request) -> Receiver<Response> {
+        if req.id == 0 {
+            req.id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        }
+        let (rtx, rrx) = channel();
+        self.metrics.add("requests_submitted", 1);
+        if let Some(tx) = &self.tx {
+            if tx
+                .send(Job { req, resp: rtx, enqueued: Instant::now() })
+                .is_err()
+            {
+                // workers gone; receiver will see a closed channel
+            }
+        }
+        rrx
+    }
+
+    /// Convenience: submit and block for the response.
+    pub fn generate(&self, task: &str, prompt: &str, policy: &str) -> Result<Response> {
+        let rx = self.submit(Request {
+            id: 0,
+            task: task.into(),
+            prompt: prompt.into(),
+            policy: policy.into(),
+        });
+        rx.recv().context("coordinator dropped the request")
+    }
+
+    /// Graceful shutdown: close the queue, join workers.
+    pub fn shutdown(mut self) {
+        self.tx.take(); // closes the channel
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.tx.take();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Build the policy for a request, running calibration if needed.
+/// Returns (policy, calibrated_now).
+fn resolve_policy<M: ForwardModel>(
+    spec: &PolicySpec,
+    task: &str,
+    engine: &Engine<'_, M>,
+    tok: &Tokenizer,
+    model_cfg: &ModelConfig,
+    prompt: &str,
+    profiles: &SharedProfiles,
+) -> Result<(Box<dyn Policy>, Option<DecodeResult>)> {
+    match spec {
+        PolicySpec::Osdt { mode, metric, kappa, epsilon } => {
+            let key = (task.to_string(), mode.as_str(), metric.as_str());
+            if let Some(p) = profiles.lock().unwrap().get(&key).cloned() {
+                return Ok((Box::new(Osdt::from_profile(p, *kappa, *epsilon)), None));
+            }
+            // Phase 1: calibrate on THIS sequence with the static policy
+            let layout = tok.layout_prompt(model_cfg, prompt)?;
+            let cal = engine.decode(layout, &StaticThreshold::new(CALIBRATION_TAU))?;
+            let profile = Calibrator::calibrate(&cal.trace, *mode, *metric);
+            profiles
+                .lock()
+                .unwrap()
+                .insert(key, profile.clone());
+            Ok((
+                Box::new(Osdt::from_profile(profile, *kappa, *epsilon)),
+                Some(cal),
+            ))
+        }
+        other => Ok((other.build()?, None)),
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn worker_loop<M: ForwardModel>(
+    wid: usize,
+    model: &M,
+    model_cfg: &ModelConfig,
+    tok: &Tokenizer,
+    cfg: &CoordinatorConfig,
+    rx: &Arc<Mutex<Receiver<Job>>>,
+    metrics: &Arc<Registry>,
+    profiles: &SharedProfiles,
+) {
+    let engine = Engine::with_cache(model, cfg.cache);
+    log::info!("worker {wid} ready (cache={:?})", cfg.cache);
+    loop {
+        // ---- gather a batch -------------------------------------------------
+        let first = {
+            let guard = rx.lock().unwrap();
+            match guard.recv() {
+                Ok(j) => j,
+                Err(_) => break, // queue closed
+            }
+        };
+        let mut jobs = vec![first];
+        // batching only helps the uncached path (cached decode is batch-1).
+        // NOTE: the gather must use try_lock — an idle sibling worker parks
+        // inside `recv()` *holding* the shared-receiver mutex, so a blocking
+        // lock here deadlocks until the next request arrives.
+        if !cfg.cache.enabled {
+            let deadline = Instant::now() + cfg.batch_wait;
+            while jobs.len() < cfg.max_batch.min(model.max_batch()) {
+                let remaining = deadline.saturating_duration_since(Instant::now());
+                if remaining.is_zero() {
+                    break;
+                }
+                match rx.try_lock() {
+                    Ok(guard) => match guard.recv_timeout(remaining) {
+                        Ok(j) => jobs.push(j),
+                        Err(RecvTimeoutError::Timeout) => break,
+                        Err(RecvTimeoutError::Disconnected) => break,
+                    },
+                    Err(std::sync::TryLockError::WouldBlock) => {
+                        // a sibling holds the queue; it will take the next
+                        // job anyway — stop gathering and decode what we have
+                        break;
+                    }
+                    Err(std::sync::TryLockError::Poisoned(_)) => break,
+                }
+            }
+        }
+        metrics.set_gauge("last_batch_size", jobs.len() as i64);
+
+        // ---- resolve policies / layouts; split off failures & calibrations --
+        let mut ready: Vec<(Job, Vec<u32>, Box<dyn Policy>)> = Vec::new();
+        for job in jobs {
+            metrics.observe_us(
+                "queue_wait",
+                job.enqueued.elapsed().as_secs_f64() * 1e6,
+            );
+            let t0 = Instant::now();
+            let spec = match parse_policy_spec(&job.req.policy) {
+                Ok(s) => s,
+                Err(e) => {
+                    metrics.add("requests_failed", 1);
+                    let _ = job.resp.send(Response::failure(job.req.id, e));
+                    continue;
+                }
+            };
+            match resolve_policy(
+                &spec, &job.req.task, &engine, tok, model_cfg, &job.req.prompt, profiles,
+            ) {
+                Err(e) => {
+                    metrics.add("requests_failed", 1);
+                    let _ = job.resp.send(Response::failure(job.req.id, format!("{e:#}")));
+                }
+                Ok((_, Some(cal))) => {
+                    // calibration run doubles as this request's decode
+                    metrics.add("calibrations", 1);
+                    let resp =
+                        make_response(&job.req, &cal, t0, model_cfg, tok, true);
+                    record_metrics(metrics, &resp, model_cfg);
+                    let _ = job.resp.send(resp);
+                }
+                Ok((policy, None)) => match tok.layout_prompt(model_cfg, &job.req.prompt) {
+                    Ok(layout) => ready.push((job, layout, policy)),
+                    Err(e) => {
+                        metrics.add("requests_failed", 1);
+                        let _ = job
+                            .resp
+                            .send(Response::failure(job.req.id, format!("{e:#}")));
+                    }
+                },
+            }
+        }
+        if ready.is_empty() {
+            continue;
+        }
+
+        // ---- decode ---------------------------------------------------------
+        let t0 = Instant::now();
+        if cfg.cache.enabled || ready.len() == 1 {
+            for (job, layout, policy) in ready {
+                let t1 = Instant::now();
+                match engine.decode(layout, policy.as_ref()) {
+                    Ok(res) => {
+                        let resp =
+                            make_response(&job.req, &res, t1, model_cfg, tok, false);
+                        record_metrics(metrics, &resp, model_cfg);
+                        let _ = job.resp.send(resp);
+                    }
+                    Err(e) => {
+                        metrics.add("requests_failed", 1);
+                        let _ = job
+                            .resp
+                            .send(Response::failure(job.req.id, format!("{e:#}")));
+                    }
+                }
+            }
+        } else {
+            let layouts: Vec<Vec<u32>> =
+                ready.iter().map(|(_, l, _)| l.clone()).collect();
+            let policies: Vec<&dyn Policy> =
+                ready.iter().map(|(_, _, p)| p.as_ref()).collect();
+            match engine.decode_batch(layouts, &policies) {
+                Ok(results) => {
+                    for ((job, _, _), res) in ready.into_iter().zip(results) {
+                        let resp = make_response(&job.req, &res, t0, model_cfg, tok, false);
+                        record_metrics(metrics, &resp, model_cfg);
+                        let _ = job.resp.send(resp);
+                    }
+                }
+                Err(e) => {
+                    let msg = format!("{e:#}");
+                    for (job, _, _) in ready {
+                        metrics.add("requests_failed", 1);
+                        let _ = job.resp.send(Response::failure(job.req.id, &msg));
+                    }
+                }
+            }
+        }
+    }
+    log::info!("worker {wid} exiting");
+}
+
+fn make_response(
+    req: &Request,
+    res: &DecodeResult,
+    started: Instant,
+    cfg: &ModelConfig,
+    tok: &Tokenizer,
+    calibrated: bool,
+) -> Response {
+    let latency = started.elapsed().as_secs_f64();
+    Response {
+        id: req.id,
+        completion: tok.decode_until_eos(res.gen_tokens(cfg)),
+        steps: res.steps,
+        full_passes: res.full_passes,
+        window_passes: res.window_passes,
+        latency_ms: latency * 1e3,
+        tokens_per_sec: cfg.gen_len as f64 / latency.max(1e-9),
+        calibrated,
+        error: None,
+    }
+}
+
+fn record_metrics(metrics: &Registry, resp: &Response, cfg: &ModelConfig) {
+    metrics.add("requests_completed", 1);
+    metrics.add("tokens_generated", cfg.gen_len as u64);
+    metrics.add("decode_steps", resp.steps as u64);
+    metrics.observe_us("request_latency", resp.latency_ms * 1e3);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::fixtures::tiny_config;
+    use crate::sim::SimModel;
+
+    fn start_sim(cfg: CoordinatorConfig) -> Coordinator {
+        Coordinator::start(cfg, tiny_config(), |_wid| Ok(SimModel::math_like(5)))
+            .unwrap()
+    }
+
+    #[test]
+    fn serves_static_request() {
+        let c = start_sim(CoordinatorConfig::default());
+        let r = c.generate("synth-math", "Q: 1+2=?", "static:0.9").unwrap();
+        assert!(r.error.is_none(), "{:?}", r.error);
+        assert!(r.steps > 0);
+        assert!(r.tokens_per_sec > 0.0);
+        assert!(!r.calibrated);
+        c.shutdown();
+    }
+
+    #[test]
+    fn first_osdt_request_calibrates_then_reuses() {
+        let c = start_sim(CoordinatorConfig::default());
+        let spec = "osdt:block:q1:0.75:0.2";
+        let r1 = c.generate("synth-math", "Q: 1+2=?", spec).unwrap();
+        assert!(r1.calibrated, "first OSDT request must calibrate");
+        let r2 = c.generate("synth-math", "Q: 3+4=?", spec).unwrap();
+        assert!(!r2.calibrated, "profile must be reused");
+        assert_eq!(c.metrics.counter_value("calibrations"), 1);
+        // a different task calibrates separately
+        let r3 = c.generate("synth-qa", "Q: class of x?", spec).unwrap();
+        assert!(r3.calibrated);
+        assert_eq!(c.metrics.counter_value("calibrations"), 2);
+        c.shutdown();
+    }
+
+    #[test]
+    fn bad_policy_returns_error_response() {
+        let c = start_sim(CoordinatorConfig::default());
+        let r = c.generate("synth-math", "Q: 1+1=?", "warp:9").unwrap();
+        assert!(r.error.is_some());
+        assert_eq!(c.metrics.counter_value("requests_failed"), 1);
+        c.shutdown();
+    }
+
+    #[test]
+    fn oversized_prompt_fails_cleanly() {
+        let c = start_sim(CoordinatorConfig::default());
+        let long = "x".repeat(500);
+        let r = c.generate("synth-math", &long, "static:0.9").unwrap();
+        assert!(r.error.is_some());
+        c.shutdown();
+    }
+
+    #[test]
+    fn concurrent_requests_all_complete() {
+        let c = Arc::new(start_sim(CoordinatorConfig {
+            workers: 2,
+            ..CoordinatorConfig::default()
+        }));
+        let mut rxs = Vec::new();
+        for i in 0..16 {
+            rxs.push(c.submit(Request {
+                id: 0,
+                task: "synth-math".into(),
+                prompt: format!("Q: {i}+1=?"),
+                policy: "static:0.85".into(),
+            }));
+        }
+        for rx in rxs {
+            let r = rx.recv().unwrap();
+            assert!(r.error.is_none(), "{:?}", r.error);
+        }
+        assert_eq!(c.metrics.counter_value("requests_completed"), 16);
+        Arc::try_unwrap(c).ok().map(Coordinator::shutdown);
+    }
+
+    #[test]
+    fn cached_mode_serves() {
+        let c = start_sim(CoordinatorConfig {
+            cache: CacheConfig::block_boundary(),
+            ..CoordinatorConfig::default()
+        });
+        let r = c.generate("synth-math", "Q: 5+5=?", "static:0.9").unwrap();
+        assert!(r.error.is_none());
+        assert!(r.window_passes > 0, "cache path must use window passes");
+        c.shutdown();
+    }
+
+    #[test]
+    fn sequential_policy_spec_works_end_to_end() {
+        let c = start_sim(CoordinatorConfig::default());
+        let r = c.generate("synth-math", "Q: 2+2=?", "sequential:1").unwrap();
+        assert_eq!(r.steps, tiny_config().gen_len);
+        c.shutdown();
+    }
+}

@@ -1,0 +1,289 @@
+//! Multi-replica request router (the vLLM-router analog for this stack).
+//!
+//! A [`Router`] fronts several [`Coordinator`] replicas and places each
+//! request according to a [`RoutingPolicy`]:
+//!
+//! - `RoundRobin`       — uniform spread.
+//! - `LeastOutstanding` — join-the-shortest-queue by in-flight count.
+//! - `TaskAffinity`     — hash the task name to a home replica, spilling to
+//!   the least-loaded one when the home replica is overloaded. This is the
+//!   OSDT-aware policy: calibration profiles are *per-task*, so keeping a
+//!   task on one replica means exactly one calibration per task per process
+//!   and warm profile reuse thereafter (the paper's one-shot property made
+//!   into a placement rule).
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::Receiver;
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use super::{Coordinator, Request, Response};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RoutingPolicy {
+    RoundRobin,
+    LeastOutstanding,
+    TaskAffinity {
+        /// spill to least-loaded when home has this many more in-flight
+        /// requests than the least-loaded replica
+        spill_margin: usize,
+    },
+}
+
+impl RoutingPolicy {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "round-robin" | "rr" => RoutingPolicy::RoundRobin,
+            "least-outstanding" | "lo" => RoutingPolicy::LeastOutstanding,
+            "task-affinity" | "affinity" => {
+                RoutingPolicy::TaskAffinity { spill_margin: 4 }
+            }
+            other => bail!("unknown routing policy {other:?}"),
+        })
+    }
+}
+
+struct Replica {
+    coordinator: Arc<Coordinator>,
+    outstanding: AtomicUsize,
+    routed_total: AtomicU64,
+}
+
+pub struct Router {
+    replicas: Vec<Replica>,
+    policy: RoutingPolicy,
+    rr_cursor: AtomicUsize,
+}
+
+/// FNV-1a, stable across runs (task -> home replica).
+fn fnv1a(s: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in s.as_bytes() {
+        h ^= u64::from(*b);
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+impl Router {
+    pub fn new(replicas: Vec<Arc<Coordinator>>, policy: RoutingPolicy) -> Result<Self> {
+        if replicas.is_empty() {
+            bail!("router needs at least one replica");
+        }
+        Ok(Router {
+            replicas: replicas
+                .into_iter()
+                .map(|coordinator| Replica {
+                    coordinator,
+                    outstanding: AtomicUsize::new(0),
+                    routed_total: AtomicU64::new(0),
+                })
+                .collect(),
+            policy,
+            rr_cursor: AtomicUsize::new(0),
+        })
+    }
+
+    pub fn replica_count(&self) -> usize {
+        self.replicas.len()
+    }
+
+    /// Requests routed to each replica so far.
+    pub fn routed_counts(&self) -> Vec<u64> {
+        self.replicas
+            .iter()
+            .map(|r| r.routed_total.load(Ordering::Relaxed))
+            .collect()
+    }
+
+    /// In-flight per replica (requests submitted whose response has not yet
+    /// been *observed through* [`RoutedResponse`]).
+    pub fn outstanding(&self) -> Vec<usize> {
+        self.replicas
+            .iter()
+            .map(|r| r.outstanding.load(Ordering::Relaxed))
+            .collect()
+    }
+
+    fn least_loaded(&self) -> usize {
+        (0..self.replicas.len())
+            .min_by_key(|&i| self.replicas[i].outstanding.load(Ordering::Relaxed))
+            .unwrap()
+    }
+
+    /// Pick a replica index for this request.
+    pub fn place(&self, req: &Request) -> usize {
+        match self.policy {
+            RoutingPolicy::RoundRobin => {
+                self.rr_cursor.fetch_add(1, Ordering::Relaxed) % self.replicas.len()
+            }
+            RoutingPolicy::LeastOutstanding => self.least_loaded(),
+            RoutingPolicy::TaskAffinity { spill_margin } => {
+                let home = (fnv1a(&req.task) as usize) % self.replicas.len();
+                let least = self.least_loaded();
+                let home_load = self.replicas[home].outstanding.load(Ordering::Relaxed);
+                let least_load =
+                    self.replicas[least].outstanding.load(Ordering::Relaxed);
+                if home_load > least_load + spill_margin {
+                    least // overload spill
+                } else {
+                    home
+                }
+            }
+        }
+    }
+
+    /// Route and submit; the returned handle decrements the in-flight count
+    /// when the response is received.
+    pub fn submit(&self, req: Request) -> RoutedResponse<'_> {
+        let idx = self.place(&req);
+        let replica = &self.replicas[idx];
+        replica.outstanding.fetch_add(1, Ordering::Relaxed);
+        replica.routed_total.fetch_add(1, Ordering::Relaxed);
+        let rx = replica.coordinator.submit(req);
+        RoutedResponse { router: self, replica: idx, rx }
+    }
+
+    /// Convenience blocking call.
+    pub fn generate(&self, task: &str, prompt: &str, policy: &str) -> Result<Response> {
+        self.submit(Request {
+            id: 0,
+            task: task.into(),
+            prompt: prompt.into(),
+            policy: policy.into(),
+        })
+        .recv()
+    }
+}
+
+/// A pending routed request.
+pub struct RoutedResponse<'r> {
+    router: &'r Router,
+    replica: usize,
+    rx: Receiver<Response>,
+}
+
+impl RoutedResponse<'_> {
+    pub fn replica(&self) -> usize {
+        self.replica
+    }
+
+    pub fn recv(self) -> Result<Response> {
+        let out = self.rx.recv();
+        self.router.replicas[self.replica]
+            .outstanding
+            .fetch_sub(1, Ordering::Relaxed);
+        out.map_err(|_| anyhow::anyhow!("replica {} dropped the request", self.replica))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::CoordinatorConfig;
+    use crate::model::fixtures::tiny_config;
+    use crate::sim::SimModel;
+
+    fn replica() -> Arc<Coordinator> {
+        Arc::new(
+            Coordinator::start(CoordinatorConfig::default(), tiny_config(), |_| {
+                Ok(SimModel::math_like(1))
+            })
+            .unwrap(),
+        )
+    }
+
+    fn req(task: &str, i: usize) -> Request {
+        Request {
+            id: 0,
+            task: task.into(),
+            prompt: format!("Q: {i}+1=?"),
+            policy: "static:0.9".into(),
+        }
+    }
+
+    #[test]
+    fn round_robin_spreads_evenly() {
+        let r = Router::new(vec![replica(), replica(), replica()], RoutingPolicy::RoundRobin)
+            .unwrap();
+        let pending: Vec<_> = (0..9).map(|i| r.submit(req("synth-math", i))).collect();
+        assert_eq!(r.routed_counts(), vec![3, 3, 3]);
+        for p in pending {
+            assert!(p.recv().unwrap().error.is_none());
+        }
+        assert_eq!(r.outstanding(), vec![0, 0, 0]);
+    }
+
+    #[test]
+    fn task_affinity_pins_tasks() {
+        let r = Router::new(
+            vec![replica(), replica(), replica()],
+            RoutingPolicy::TaskAffinity { spill_margin: 100 },
+        )
+        .unwrap();
+        let a0 = r.place(&req("synth-math", 0));
+        let a1 = r.place(&req("synth-math", 1));
+        assert_eq!(a0, a1, "same task -> same replica");
+        // osdt flows: exactly one calibration per task across the fleet
+        let pending: Vec<_> = (0..6)
+            .map(|i| {
+                r.submit(Request {
+                    policy: "osdt:block:q1:0.75:0.2".into(),
+                    ..req("synth-math", i)
+                })
+            })
+            .collect();
+        let calibrated: usize = pending
+            .into_iter()
+            .map(|p| usize::from(p.recv().unwrap().calibrated))
+            .sum();
+        assert_eq!(calibrated, 1, "task affinity -> one calibration");
+    }
+
+    #[test]
+    fn affinity_spills_under_load() {
+        let r = Router::new(
+            vec![replica(), replica()],
+            RoutingPolicy::TaskAffinity { spill_margin: 0 },
+        )
+        .unwrap();
+        let home = r.place(&req("synth-math", 0));
+        // saturate the home replica's in-flight count artificially
+        let held: Vec<_> = (0..3).map(|i| r.submit(req("synth-math", i))).collect();
+        // with margin 0 and home loaded, the next placement must spill
+        let spilled = r.place(&req("synth-math", 99));
+        assert_ne!(spilled, home, "overloaded home must spill");
+        for h in held {
+            h.recv().unwrap();
+        }
+    }
+
+    #[test]
+    fn least_outstanding_prefers_idle() {
+        let r = Router::new(
+            vec![replica(), replica()],
+            RoutingPolicy::LeastOutstanding,
+        )
+        .unwrap();
+        let held = r.submit(req("synth-math", 0));
+        let second = r.place(&req("synth-math", 1));
+        assert_ne!(second, held.replica());
+        held.recv().unwrap();
+    }
+
+    #[test]
+    fn policy_parse() {
+        assert_eq!(RoutingPolicy::parse("rr").unwrap(), RoutingPolicy::RoundRobin);
+        assert!(matches!(
+            RoutingPolicy::parse("task-affinity").unwrap(),
+            RoutingPolicy::TaskAffinity { .. }
+        ));
+        assert!(RoutingPolicy::parse("warp").is_err());
+    }
+
+    #[test]
+    fn empty_router_rejected() {
+        assert!(Router::new(vec![], RoutingPolicy::RoundRobin).is_err());
+    }
+}

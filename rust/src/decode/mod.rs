@@ -1,0 +1,416 @@
+//! The semi-autoregressive block diffusion decode engine (DESIGN.md §4).
+//!
+//! Sequence = prompt ‖ gen region, gen region split into `num_blocks`
+//! contiguous blocks decoded left-to-right. Within a block, denoising steps
+//! repeat until no `[MASK]` remains: a forward pass produces per-position
+//! greedy confidence + candidate token; the active [`Policy`] selects which
+//! masked positions to commit (always ≥ 1 — liveness).
+//!
+//! Two execution paths:
+//! - **no-cache**: every step is a full forward (`fwd_conf`), batchable
+//!   across sequences (continuous batching happens in the coordinator);
+//! - **dual KV cache** (Fast-dLLM): one `fwd_full_kv` at each block start
+//!   refreshes the cache *and* provides the step-0 prediction; subsequent
+//!   steps run the cheap `fwd_window` variant over the active block only.
+
+use anyhow::{bail, Result};
+
+use crate::model::ModelConfig;
+use crate::policy::{CalibrationTrace, Policy, StepContext};
+use crate::runtime::{ConfOut, KvCache};
+
+/// Abstraction over the PJRT runtime so the engine, tests, and the analytic
+/// simulator share one decode loop. `ModelRuntime` implements this; so does
+/// `sim::SimModel`.
+pub trait ForwardModel {
+    fn config(&self) -> &ModelConfig;
+    fn max_batch(&self) -> usize;
+    fn fwd_conf(&self, batch_tokens: &[Vec<u32>]) -> Result<ConfOut>;
+    fn fwd_full_kv(&self, tokens: &[u32]) -> Result<(ConfOut, KvCache)>;
+    fn fwd_window(&self, window: &[u32], start: usize, cache: &KvCache) -> Result<ConfOut>;
+}
+
+impl ForwardModel for crate::runtime::ModelRuntime {
+    fn config(&self) -> &ModelConfig {
+        self.config()
+    }
+    fn max_batch(&self) -> usize {
+        self.max_batch()
+    }
+    fn fwd_conf(&self, batch_tokens: &[Vec<u32>]) -> Result<ConfOut> {
+        crate::runtime::ModelRuntime::fwd_conf(self, batch_tokens)
+    }
+    fn fwd_full_kv(&self, tokens: &[u32]) -> Result<(ConfOut, KvCache)> {
+        crate::runtime::ModelRuntime::fwd_full_kv(self, tokens)
+    }
+    fn fwd_window(&self, window: &[u32], start: usize, cache: &KvCache) -> Result<ConfOut> {
+        crate::runtime::ModelRuntime::fwd_window(self, window, start, cache)
+    }
+}
+
+/// Outcome of decoding one sequence.
+#[derive(Clone, Debug)]
+pub struct DecodeResult {
+    /// Full final sequence (prompt region + committed gen region).
+    pub tokens: Vec<u32>,
+    /// Total denoising steps (policy decisions) across blocks.
+    pub steps: usize,
+    /// Forward passes, split by kind (full == fwd_conf or fwd_full_kv).
+    pub full_passes: usize,
+    pub window_passes: usize,
+    /// Steps where the policy's raw rule selected nothing and the argmax
+    /// fallback committed the single most confident position.
+    pub fallback_steps: usize,
+    /// Per-(block, step) masked-position confidences — calibration input
+    /// and Figure 1/2 raw material. Always recorded (cheap: few KB).
+    pub trace: CalibrationTrace,
+}
+
+impl DecodeResult {
+    /// The gen-region tokens.
+    pub fn gen_tokens(&self, cfg: &ModelConfig) -> &[u32] {
+        &self.tokens[cfg.gen_range()]
+    }
+}
+
+/// Per-sequence decode state (shared by the single and batched loops).
+struct SeqState {
+    tokens: Vec<u32>,
+    block: usize,
+    step_in_block: usize,
+    steps: usize,
+    fallback_steps: usize,
+    trace: CalibrationTrace,
+    done: bool,
+}
+
+impl SeqState {
+    fn new(tokens: Vec<u32>, cfg: &ModelConfig) -> Result<Self> {
+        if tokens.len() != cfg.seq_len {
+            bail!("layout length {} != seq_len {}", tokens.len(), cfg.seq_len);
+        }
+        Ok(SeqState {
+            tokens,
+            block: 0,
+            step_in_block: 0,
+            steps: 0,
+            fallback_steps: 0,
+            trace: CalibrationTrace::new(cfg.num_blocks),
+            done: false,
+        })
+    }
+
+    /// Masked positions (absolute) of the current block.
+    fn masked(&self, cfg: &ModelConfig) -> Vec<usize> {
+        cfg.block_range(self.block)
+            .filter(|&p| self.tokens[p] == cfg.mask_id)
+            .collect()
+    }
+
+    /// Run one policy decision given fresh conf/argmax covering the whole
+    /// sequence (`offset`=0) or the active window (`offset`=window start).
+    /// Returns the number of committed tokens.
+    fn advance(
+        &mut self,
+        cfg: &ModelConfig,
+        policy: &dyn Policy,
+        conf: &[f32],
+        argmax: &[u32],
+        offset: usize,
+    ) -> usize {
+        let masked = self.masked(cfg);
+        debug_assert!(!masked.is_empty(), "advance on completed block");
+        let local_conf: Vec<f32> = masked.iter().map(|&p| conf[p - offset]).collect();
+        self.trace
+            .record(self.block, self.step_in_block, &local_conf);
+        let ctx = StepContext {
+            block: self.block,
+            step: self.step_in_block,
+            conf: &local_conf,
+        };
+        let (sel, fell_back) = policy.select_explain(&ctx);
+        if fell_back {
+            self.fallback_steps += 1;
+        }
+        debug_assert!(!sel.is_empty(), "policy liveness violated");
+        for &i in &sel {
+            let pos = masked[i];
+            self.tokens[pos] = argmax[pos - offset];
+        }
+        self.steps += 1;
+        self.step_in_block += 1;
+        // roll over completed blocks
+        while self.block < cfg.num_blocks && self.masked(cfg).is_empty() {
+            self.block += 1;
+            self.step_in_block = 0;
+            if self.block == cfg.num_blocks {
+                self.done = true;
+                break;
+            }
+        }
+        if self.block >= cfg.num_blocks {
+            self.done = true;
+        }
+        sel.len()
+    }
+
+    fn into_result(self, full_passes: usize, window_passes: usize) -> DecodeResult {
+        DecodeResult {
+            tokens: self.tokens,
+            steps: self.steps,
+            full_passes,
+            window_passes,
+            fallback_steps: self.fallback_steps,
+            trace: self.trace,
+        }
+    }
+}
+
+/// The decode engine: one forward model + execution options.
+pub struct Engine<'m, M: ForwardModel> {
+    model: &'m M,
+    /// Fast-dLLM dual KV cache behaviour.
+    pub cache: crate::cache::CacheConfig,
+}
+
+impl<'m, M: ForwardModel> Engine<'m, M> {
+    pub fn new(model: &'m M) -> Self {
+        Engine { model, cache: crate::cache::CacheConfig::disabled() }
+    }
+
+    pub fn with_kv_cache(model: &'m M) -> Self {
+        Engine { model, cache: crate::cache::CacheConfig::block_boundary() }
+    }
+
+    pub fn with_cache(model: &'m M, cache: crate::cache::CacheConfig) -> Self {
+        Engine { model, cache }
+    }
+
+    pub fn model(&self) -> &M {
+        self.model
+    }
+
+    /// Decode one sequence (batch 1 — the paper's serving setup).
+    pub fn decode(&self, layout: Vec<u32>, policy: &dyn Policy) -> Result<DecodeResult> {
+        if self.cache.enabled {
+            self.decode_cached(layout, policy)
+        } else {
+            Ok(self
+                .decode_batch(vec![layout], &[policy])?
+                .pop()
+                .expect("one result"))
+        }
+    }
+
+    /// Lockstep-batched decode without KV cache: each iteration runs one
+    /// batched forward over all unfinished sequences, then one policy
+    /// decision per sequence. Sequences finish independently.
+    pub fn decode_batch(
+        &self,
+        layouts: Vec<Vec<u32>>,
+        policies: &[&dyn Policy],
+    ) -> Result<Vec<DecodeResult>> {
+        let cfg = self.model.config();
+        if layouts.len() != policies.len() {
+            bail!("{} layouts vs {} policies", layouts.len(), policies.len());
+        }
+        if layouts.len() > self.model.max_batch() {
+            bail!(
+                "batch {} exceeds model max batch {}",
+                layouts.len(),
+                self.model.max_batch()
+            );
+        }
+        let mut states = layouts
+            .into_iter()
+            .map(|l| SeqState::new(l, cfg))
+            .collect::<Result<Vec<_>>>()?;
+        let mut full_passes = vec![0usize; states.len()];
+
+        loop {
+            let active: Vec<usize> = (0..states.len())
+                .filter(|&i| !states[i].done)
+                .collect();
+            if active.is_empty() {
+                break;
+            }
+            let batch: Vec<Vec<u32>> =
+                active.iter().map(|&i| states[i].tokens.clone()).collect();
+            let out = self.model.fwd_conf(&batch)?;
+            for (bi, &i) in active.iter().enumerate() {
+                states[i].advance(cfg, policies[i], &out.conf[bi], &out.argmax[bi], 0);
+                full_passes[i] += 1;
+            }
+        }
+        Ok(states
+            .into_iter()
+            .zip(full_passes)
+            .map(|(s, fp)| s.into_result(fp, 0))
+            .collect())
+    }
+
+    /// Dual-KV-cache decode (batch 1): full pass at each block start (cache
+    /// refresh + step-0 prediction), window passes within the block, with
+    /// optional staleness-bounded re-refresh (`cache.refresh_interval`).
+    fn decode_cached(&self, layout: Vec<u32>, policy: &dyn Policy) -> Result<DecodeResult> {
+        let cfg = self.model.config();
+        let mut st = SeqState::new(layout, cfg)?;
+        let mut full_passes = 0usize;
+        let mut window_passes = 0usize;
+
+        while !st.done {
+            let block = st.block;
+            let range = cfg.block_range(block);
+            // block start: refresh cache, use its prediction for step 0
+            let (out, mut cache) = self.model.fwd_full_kv(&st.tokens)?;
+            full_passes += 1;
+            st.advance(cfg, policy, &out.conf[0], &out.argmax[0], 0);
+            let mut since_refresh = 0usize;
+            // within-block steps on the window path
+            while !st.done && st.block == block {
+                if self.cache.refresh_interval > 0
+                    && since_refresh >= self.cache.refresh_interval
+                {
+                    let (out, fresh) = self.model.fwd_full_kv(&st.tokens)?;
+                    cache = fresh;
+                    full_passes += 1;
+                    since_refresh = 0;
+                    st.advance(cfg, policy, &out.conf[0], &out.argmax[0], 0);
+                } else {
+                    let window: Vec<u32> = st.tokens[range.clone()].to_vec();
+                    let out = self.model.fwd_window(&window, range.start, &cache)?;
+                    window_passes += 1;
+                    since_refresh += 1;
+                    st.advance(cfg, policy, &out.conf[0], &out.argmax[0], range.start);
+                }
+            }
+        }
+        Ok(st.into_result(full_passes, window_passes))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::policy::{SequentialTopK, StaticThreshold};
+    use crate::sim::SimModel;
+
+    fn sim() -> SimModel {
+        SimModel::math_like(7)
+    }
+
+    fn masked_layout(m: &SimModel) -> Vec<u32> {
+        m.layout_from_seed(1)
+    }
+
+    #[test]
+    fn sequential_top1_takes_gen_len_steps() {
+        let m = sim();
+        let eng = Engine::new(&m);
+        let res = eng
+            .decode(masked_layout(&m), &SequentialTopK::new(1))
+            .unwrap();
+        let cfg = m.config();
+        assert_eq!(res.steps, cfg.gen_len, "one token per step");
+        assert_eq!(res.full_passes, cfg.gen_len);
+        // nothing masked remains
+        assert!(res.tokens[cfg.gen_range()]
+            .iter()
+            .all(|&t| t != cfg.mask_id));
+    }
+
+    #[test]
+    fn static_threshold_fewer_steps_than_sequential() {
+        let m = sim();
+        let eng = Engine::new(&m);
+        let seq = eng
+            .decode(masked_layout(&m), &SequentialTopK::new(1))
+            .unwrap();
+        let par = eng
+            .decode(masked_layout(&m), &StaticThreshold::new(0.9))
+            .unwrap();
+        assert!(par.steps < seq.steps, "{} !< {}", par.steps, seq.steps);
+    }
+
+    #[test]
+    fn trace_covers_every_step() {
+        let m = sim();
+        let eng = Engine::new(&m);
+        let res = eng
+            .decode(masked_layout(&m), &StaticThreshold::new(0.9))
+            .unwrap();
+        assert_eq!(res.trace.total_steps(), res.steps);
+    }
+
+    #[test]
+    fn blocks_decode_left_to_right() {
+        // after decoding, every token is set; trace must show blocks in
+        // order with no interleaving (block b only starts once b-1 done)
+        let m = sim();
+        let eng = Engine::new(&m);
+        let res = eng
+            .decode(masked_layout(&m), &StaticThreshold::new(0.8))
+            .unwrap();
+        for b in 0..m.config().num_blocks {
+            assert!(
+                !res.trace.per_block[b].is_empty(),
+                "block {b} has no steps"
+            );
+        }
+    }
+
+    #[test]
+    fn batched_results_match_individual() {
+        let m = sim();
+        let eng = Engine::new(&m);
+        let p = StaticThreshold::new(0.85);
+        let l1 = m.layout_from_seed(10);
+        let l2 = m.layout_from_seed(20);
+        let solo1 = eng.decode(l1.clone(), &p).unwrap();
+        let solo2 = eng.decode(l2.clone(), &p).unwrap();
+        let both = eng
+            .decode_batch(vec![l1, l2], &[&p, &p])
+            .unwrap();
+        assert_eq!(both[0].tokens, solo1.tokens);
+        assert_eq!(both[1].tokens, solo2.tokens);
+        assert_eq!(both[0].steps, solo1.steps);
+        assert_eq!(both[1].steps, solo2.steps);
+    }
+
+    #[test]
+    fn cached_and_uncached_agree_when_model_is_cache_exact() {
+        // SimModel's window path reproduces its full path exactly, so the
+        // cached decode must produce identical tokens & steps.
+        let m = sim();
+        let plain = Engine::new(&m);
+        let cached = Engine::with_kv_cache(&m);
+        let p = StaticThreshold::new(0.9);
+        let a = plain.decode(masked_layout(&m), &p).unwrap();
+        let b = cached.decode(masked_layout(&m), &p).unwrap();
+        assert_eq!(a.tokens, b.tokens);
+        assert_eq!(a.steps, b.steps);
+        // cache path must be cheaper in full passes
+        assert_eq!(b.full_passes, m.config().num_blocks);
+        assert_eq!(b.window_passes, b.steps - b.full_passes);
+    }
+
+    #[test]
+    fn rejects_wrong_layout_len() {
+        let m = sim();
+        let eng = Engine::new(&m);
+        assert!(eng.decode(vec![0; 3], &SequentialTopK::new(1)).is_err());
+    }
+
+    #[test]
+    fn rejects_oversized_batch() {
+        let m = sim();
+        let eng = Engine::new(&m);
+        let p = SequentialTopK::new(1);
+        let layouts: Vec<Vec<u32>> = (0..m.max_batch() + 1)
+            .map(|i| m.layout_from_seed(i as u64))
+            .collect();
+        let policies: Vec<&dyn crate::policy::Policy> =
+            layouts.iter().map(|_| &p as &dyn crate::policy::Policy).collect();
+        assert!(eng.decode_batch(layouts, &policies).is_err());
+    }
+}

@@ -1,0 +1,210 @@
+//! Evaluation substrate: task-specific answer extraction + scoring, and the
+//! string-transform interpreter that makes `synth-code` a *functional*
+//! benchmark (HumanEval's pass@1 contract: the generated output is judged
+//! by execution semantics, not string match against a reference).
+
+use anyhow::{bail, Result};
+
+use crate::workload::Example;
+
+/// The reference interpreter for synth-code programs — semantics identical
+/// to `python/compile/data.py::run_code_op` (cross-checked by tests against
+/// shared fixtures).
+pub fn run_code_op(op: &str, s: &str) -> Result<String> {
+    Ok(match op {
+        "rev" => s.chars().rev().collect(),
+        "dup" => s.chars().flat_map(|c| [c, c]).collect(),
+        "rot1" => s
+            .chars()
+            .map(|c| {
+                if c.is_ascii_lowercase() {
+                    (((c as u8 - b'a' + 1) % 26) + b'a') as char
+                } else {
+                    c
+                }
+            })
+            .collect(),
+        "swap" => {
+            let mut v: Vec<char> = s.chars().collect();
+            let mut i = 0;
+            while i + 1 < v.len() {
+                v.swap(i, i + 1);
+                i += 2;
+            }
+            v.into_iter().collect()
+        }
+        "drop2" => s.chars().step_by(2).collect(),
+        _ => bail!("unknown op {op:?}"),
+    })
+}
+
+/// Extract the final answer from a generated completion, per task:
+/// - synth-qa / synth-math: the token after the last `####` marker;
+/// - synth-code: the text after `out:` (trimmed at whitespace-end).
+pub fn extract_answer(task: &str, completion: &str) -> Option<String> {
+    match task {
+        "synth-qa" | "synth-math" => {
+            let idx = completion.rfind("####")?;
+            let tail = completion[idx + 4..].trim();
+            let ans: String = tail
+                .chars()
+                .take_while(|c| !c.is_whitespace())
+                .collect();
+            (!ans.is_empty()).then_some(ans)
+        }
+        "synth-code" => {
+            let idx = completion.rfind("out:")?;
+            let tail = completion[idx + 4..].trim();
+            let ans: String = tail
+                .chars()
+                .take_while(|c| c.is_ascii_lowercase())
+                .collect();
+            (!ans.is_empty()).then_some(ans)
+        }
+        _ => None,
+    }
+}
+
+/// Score one generated completion against its example.
+/// synth-code is judged *functionally*: the extracted output must equal the
+/// interpreter's result on the prompt's (op, input).
+pub fn is_correct(ex: &Example, completion: &str) -> bool {
+    let Some(got) = extract_answer(&ex.task, completion) else {
+        return false;
+    };
+    match &ex.code_op {
+        Some((op, input)) => match run_code_op(op, input) {
+            Ok(expected) => got == expected,
+            Err(_) => false,
+        },
+        None => got == ex.answer,
+    }
+}
+
+/// Accuracy aggregation over a run.
+#[derive(Clone, Debug, Default)]
+pub struct EvalStats {
+    pub total: usize,
+    pub correct: usize,
+    /// completions with no extractable answer (format failure)
+    pub malformed: usize,
+}
+
+impl EvalStats {
+    pub fn record(&mut self, ex: &Example, completion: &str) {
+        self.total += 1;
+        if extract_answer(&ex.task, completion).is_none() {
+            self.malformed += 1;
+        }
+        if is_correct(ex, completion) {
+            self.correct += 1;
+        }
+    }
+
+    pub fn accuracy(&self) -> f64 {
+        if self.total == 0 {
+            f64::NAN
+        } else {
+            self.correct as f64 / self.total as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ex(task: &str, answer: &str, code: Option<(&str, &str)>) -> Example {
+        Example {
+            task: task.into(),
+            prompt: String::new(),
+            answer: answer.into(),
+            code_op: code.map(|(a, b)| (a.into(), b.into())),
+        }
+    }
+
+    #[test]
+    fn code_ops_match_python_semantics() {
+        // fixtures generated from python data.run_code_op
+        let cases = [
+            ("rev", "abcdef", "fedcba"),
+            ("dup", "abc", "aabbcc"),
+            ("rot1", "azb", "bac"),
+            ("swap", "abcde", "badce"),
+            ("drop2", "abcdef", "ace"),
+            ("rev", "a", "a"),
+            ("swap", "ab", "ba"),
+            ("drop2", "a", "a"),
+            ("rot1", "zzz", "aaa"),
+        ];
+        for (op, inp, want) in cases {
+            assert_eq!(run_code_op(op, inp).unwrap(), want, "{op}({inp})");
+        }
+        assert!(run_code_op("nope", "x").is_err());
+    }
+
+    #[test]
+    fn extract_math_and_qa() {
+        assert_eq!(
+            extract_answer("synth-math", "A: 3+4=7. #### 7").as_deref(),
+            Some("7")
+        );
+        assert_eq!(
+            extract_answer("synth-qa", "A: (C) dax #### C").as_deref(),
+            Some("C")
+        );
+        // last marker wins
+        assert_eq!(
+            extract_answer("synth-math", "#### 3 junk #### 12").as_deref(),
+            Some("12")
+        );
+        assert_eq!(extract_answer("synth-math", "no marker"), None);
+        assert_eq!(extract_answer("synth-math", "#### "), None);
+    }
+
+    #[test]
+    fn extract_code() {
+        assert_eq!(
+            extract_answer("synth-code", "out: fedcba").as_deref(),
+            Some("fedcba")
+        );
+        assert_eq!(
+            extract_answer("synth-code", "out: abc  extra").as_deref(),
+            Some("abc")
+        );
+        assert_eq!(extract_answer("synth-code", "nothing"), None);
+    }
+
+    #[test]
+    fn code_judged_functionally_not_textually() {
+        // even if the dataset's recorded answer were wrong, execution wins
+        let mut e = ex("synth-code", "WRONG", Some(("rev", "ab")));
+        assert!(is_correct(&e, "out: ba"));
+        assert!(!is_correct(&e, "out: ab"));
+        e.code_op = Some(("dup".into(), "xy".into()));
+        assert!(is_correct(&e, "out: xxyy"));
+    }
+
+    #[test]
+    fn qa_math_exact_match() {
+        let m = ex("synth-math", "56", None);
+        assert!(is_correct(&m, "A: steps. #### 56"));
+        assert!(!is_correct(&m, "A: steps. #### 57"));
+        let q = ex("synth-qa", "B", None);
+        assert!(is_correct(&q, "A: (B) rok #### B"));
+        assert!(!is_correct(&q, "A: (B) rok #### D"));
+    }
+
+    #[test]
+    fn stats_aggregate() {
+        let mut st = EvalStats::default();
+        let m = ex("synth-math", "5", None);
+        st.record(&m, "#### 5");
+        st.record(&m, "#### 6");
+        st.record(&m, "garbage");
+        assert_eq!(st.total, 3);
+        assert_eq!(st.correct, 1);
+        assert_eq!(st.malformed, 1);
+        assert!((st.accuracy() - 1.0 / 3.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,47 @@
+//! # OSDT — One-Shot Dynamic Thresholding for Diffusion Language Models
+//!
+//! A serving stack for masked diffusion language models (MDLM) reproducing
+//! *"Beyond Static Cutoffs: One-Shot Dynamic Thresholding for Diffusion
+//! Language Models"* (Shen & Ro, 2025).
+//!
+//! Three-layer architecture (see DESIGN.md):
+//! - **L3 (this crate)**: the coordinator — decode engine, threshold
+//!   policies (OSDT + Fast-dLLM baselines), dual KV-cache manager,
+//!   continuous batcher, TCP server, workload generation, evaluation,
+//!   metrics.
+//! - **L2/L1 (python/, build-time only)**: the JAX mask predictor with
+//!   Pallas kernels, AOT-lowered to HLO text artifacts loaded here via
+//!   PJRT. Python never runs on the request path.
+//!
+//! Quick start (after `make artifacts`):
+//! ```no_run
+//! use osdt::model::ModelConfig;
+//! use osdt::runtime::ModelRuntime;
+//! use osdt::decode::Engine;
+//! use osdt::policy::StaticThreshold;
+//! use osdt::tokenizer::Tokenizer;
+//!
+//! let cfg = ModelConfig::load("artifacts").unwrap();
+//! let rt = ModelRuntime::load(&cfg).unwrap();
+//! let tok = Tokenizer::from_config(&cfg).unwrap();
+//! let engine = Engine::new(&rt);
+//! let layout = tok.layout_prompt(&cfg, "Q: 3+4=?").unwrap();
+//! let out = engine.decode(layout, &StaticThreshold::new(0.9)).unwrap();
+//! println!("{}", tok.decode_until_eos(out.gen_tokens(&cfg)));
+//! ```
+
+pub mod bench;
+pub mod cache;
+pub mod config;
+pub mod coordinator;
+pub mod decode;
+pub mod eval;
+pub mod metrics;
+pub mod model;
+pub mod policy;
+pub mod runtime;
+pub mod server;
+pub mod sim;
+pub mod tokenizer;
+pub mod util;
+pub mod workload;

@@ -1,0 +1,252 @@
+//! `osdt` — CLI for the OSDT diffusion-LM serving stack.
+//!
+//! Subcommands:
+//!   generate   decode one prompt and print the completion
+//!   serve      run the TCP JSON-line server
+//!   eval       accuracy/throughput of a policy over a task's eval split
+//!   calibrate  run Phase-1 calibration for a task and persist the profile
+//!   traces     dump confidence trajectories (Figure 1 raw data)
+//!   info       print model/artifact metadata
+//!
+//! Common flags: --artifacts DIR (default "artifacts"), --policy SPEC,
+//! --task NAME, --cache, --n N. Policy specs: see `config` module docs.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use osdt::bench::{self, RunOpts};
+use osdt::cache::CacheConfig;
+use osdt::config::Args;
+use osdt::coordinator::{Coordinator, CoordinatorConfig};
+use osdt::decode::Engine;
+use osdt::model::ModelConfig;
+use osdt::policy::{Calibrator, DynamicMode, Metric, ProfileStore, StaticThreshold};
+use osdt::runtime::ModelRuntime;
+use osdt::server::Server;
+use osdt::tokenizer::Tokenizer;
+use osdt::workload::Dataset;
+
+const VALUE_FLAGS: &[&str] = &[
+    "artifacts", "policy", "task", "prompt", "n", "addr", "workers",
+    "max-batch", "batch-wait-ms", "mode", "metric", "profile-dir", "tau",
+    "refresh-interval", "save",
+];
+
+fn main() {
+    osdt::util::logging::init();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(raw: Vec<String>) -> Result<()> {
+    let args = Args::parse(raw, VALUE_FLAGS)?;
+    let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
+    match cmd {
+        "generate" => cmd_generate(&args),
+        "serve" => cmd_serve(&args),
+        "eval" => cmd_eval(&args),
+        "calibrate" => cmd_calibrate(&args),
+        "traces" => cmd_traces(&args),
+        "info" => cmd_info(&args),
+        "help" | "--help" => {
+            print!("{HELP}");
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}; try `osdt help`"),
+    }
+}
+
+const HELP: &str = "\
+osdt — One-Shot Dynamic Thresholding serving stack
+
+USAGE: osdt <COMMAND> [FLAGS]
+
+COMMANDS:
+  generate   --prompt 'Q: 3+4=?' [--policy static:0.9] [--cache]
+  serve      [--addr 127.0.0.1:7474] [--workers 1] [--max-batch 4] [--cache]
+  eval       --task synth-math [--policy osdt:block:q1:0.75:0.2] [--n 64]
+  calibrate  --task synth-math [--mode block] [--metric q1] [--profile-dir profiles]
+  traces     --task synth-math [--n 8] [--tau 0.9]
+  info
+
+COMMON FLAGS:
+  --artifacts DIR   artifact directory (default: artifacts)
+  --cache           enable the Fast-dLLM dual KV cache path
+  --refresh-interval N  cache staleness bound (window steps; 0 = block only)
+
+POLICY SPECS:
+  sequential[:k] | static[:tau] | factor[:f] | osdt:MODE:METRIC:KAPPA:EPS
+  e.g. osdt:step-block:q2:0.75:0.2
+";
+
+fn load_stack(args: &Args) -> Result<(ModelConfig, ModelRuntime, Tokenizer)> {
+    let dir = args.get_or("artifacts", "artifacts");
+    let cfg = ModelConfig::load(dir)
+        .with_context(|| format!("loading artifacts from {dir} (run `make artifacts`?)"))?;
+    let rt = ModelRuntime::load(&cfg)?;
+    let tok = Tokenizer::from_config(&cfg)?;
+    Ok((cfg, rt, tok))
+}
+
+fn cache_config(args: &Args) -> Result<CacheConfig> {
+    if args.has("cache") {
+        let r = args.get_parse::<usize>("refresh-interval", 0)?;
+        Ok(if r > 0 {
+            CacheConfig::with_refresh_interval(r)
+        } else {
+            CacheConfig::block_boundary()
+        })
+    } else {
+        Ok(CacheConfig::disabled())
+    }
+}
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    let prompt = args.get("prompt").context("--prompt required")?.to_string();
+    let policy_spec = args.get_or("policy", "static:0.9");
+    let (cfg, rt, tok) = load_stack(args)?;
+    let engine = Engine::with_cache(&rt, cache_config(args)?);
+    let spec = osdt::config::parse_policy_spec(policy_spec)?;
+    if spec.needs_profile() {
+        bail!("`generate` decodes a single prompt; OSDT needs a profile — use `eval` or `serve`");
+    }
+    let layout = tok.layout_prompt(&cfg, &prompt)?;
+    let t0 = std::time::Instant::now();
+    let res = engine.decode(layout, spec.build()?.as_ref())?;
+    let dt = t0.elapsed().as_secs_f64();
+    println!("{}", tok.decode_until_eos(res.gen_tokens(&cfg)));
+    eprintln!(
+        "steps={} full={} window={} latency={:.1}ms tokens/s={:.1}",
+        res.steps,
+        res.full_passes,
+        res.window_passes,
+        dt * 1e3,
+        cfg.gen_len as f64 / dt
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let dir = args.get_or("artifacts", "artifacts").to_string();
+    let cfg = ModelConfig::load(&dir)?;
+    let ccfg = CoordinatorConfig {
+        workers: args.get_parse("workers", 1usize)?,
+        max_batch: args.get_parse("max-batch", 4usize)?,
+        batch_wait: std::time::Duration::from_millis(
+            args.get_parse("batch-wait-ms", 5u64)?,
+        ),
+        cache: cache_config(args)?,
+    };
+    let coord = Arc::new(Coordinator::start(ccfg, cfg, move |wid| {
+        log::info!("worker {wid}: loading runtime from {dir}");
+        let cfg = ModelConfig::load(&dir)?;
+        ModelRuntime::load(&cfg)
+    })?);
+    let addr = args.get_or("addr", "127.0.0.1:7474");
+    let server = Server::start(addr, coord)?;
+    println!("osdt serving on {}", server.addr);
+    // serve until killed
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let task = args.get("task").context("--task required")?.to_string();
+    let policy = args.get_or("policy", "osdt:block:q1:0.75:0.2");
+    let (cfg, rt, tok) = load_stack(args)?;
+    let ds = Dataset::load(cfg.artifact_dir.join("data"), &task)?;
+    let opts = RunOpts {
+        n: args.get_parse("n", 64usize)?,
+        cache: cache_config(args)?,
+        calibration_index: 0,
+    };
+    let row = bench::run_eval(&rt, &tok, &ds, policy, &opts)?;
+    println!(
+        "{}",
+        bench::render_table(
+            &["task", "policy", "n", "acc%", "tokens/s", "steps", "lat ms", "cal ms"],
+            &[vec![
+                row.task,
+                row.policy,
+                row.n.to_string(),
+                format!("{:.2}", row.accuracy * 100.0),
+                format!("{:.1}", row.tokens_per_sec),
+                format!("{:.1}", row.mean_steps),
+                format!("{:.1}", row.mean_latency_ms),
+                format!("{:.1}", row.calibration_ms),
+            ]],
+        )
+    );
+    Ok(())
+}
+
+fn cmd_calibrate(args: &Args) -> Result<()> {
+    let task = args.get("task").context("--task required")?.to_string();
+    let mode = match args.get_or("mode", "block") {
+        "block" => DynamicMode::Block,
+        "step-block" => DynamicMode::StepBlock,
+        m => bail!("bad --mode {m:?}"),
+    };
+    let metric = Metric::parse(args.get_or("metric", "q1"))?;
+    let (cfg, rt, tok) = load_stack(args)?;
+    let ds = Dataset::load(cfg.artifact_dir.join("data"), &task)?;
+    let engine = Engine::with_cache(&rt, cache_config(args)?);
+    let layout = tok.layout_prompt(&cfg, &ds.examples[0].prompt)?;
+    let cal = engine.decode(layout, &StaticThreshold::new(bench::CALIBRATION_TAU))?;
+    let profile = Calibrator::calibrate(&cal.trace, mode, metric);
+    let store = ProfileStore::new(args.get_or("profile-dir", "profiles"))?;
+    let path = store.save(&task, &profile)?;
+    println!("calibrated {task} ({} steps) -> {}", cal.steps, path.display());
+    Ok(())
+}
+
+fn cmd_traces(args: &Args) -> Result<()> {
+    let task = args.get("task").context("--task required")?.to_string();
+    let n = args.get_parse("n", 8usize)?;
+    let tau = args.get_parse("tau", bench::CALIBRATION_TAU)?;
+    let (cfg, rt, tok) = load_stack(args)?;
+    let ds = Dataset::load(cfg.artifact_dir.join("data"), &task)?;
+    let traces = bench::collect_traces(&rt, &tok, &ds, n, tau)?;
+    if let Some(path) = args.get("save") {
+        let doc = osdt::util::json::Json::Arr(
+            traces.iter().map(|t| t.to_json()).collect(),
+        );
+        std::fs::write(path, format!("{doc}\n"))?;
+        eprintln!("saved {} traces -> {path}", traces.len());
+    }
+    let sig = bench::mean_signature(&traces);
+    print!(
+        "{}",
+        bench::ascii_plot(&sig, 12, &format!("{task}: step-block mean confidence"))
+    );
+    let m = bench::cosine_matrix(&traces);
+    print!(
+        "{}",
+        bench::ascii_heatmap(&m, 0.9, 1.0, &format!("{task}: pairwise cosine"))
+    );
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let dir = args.get_or("artifacts", "artifacts");
+    let cfg = ModelConfig::load(dir)?;
+    println!("artifact dir : {}", cfg.artifact_dir.display());
+    println!(
+        "model        : d={} layers={} heads={} ff={} vocab={}",
+        cfg.d_model, cfg.n_layers, cfg.n_heads, cfg.d_ff, cfg.vocab_size
+    );
+    println!(
+        "sequence     : prompt {} + gen {} ({} blocks x {})",
+        cfg.prompt_len, cfg.gen_len, cfg.num_blocks, cfg.block_len
+    );
+    println!("variants     :");
+    for (name, v) in &cfg.variants {
+        println!("  {name} (batch {})", v.batch);
+    }
+    Ok(())
+}

@@ -1,0 +1,197 @@
+//! Serving metrics substrate: counters, gauges, latency histograms, and a
+//! Prometheus-style text exposition. Shared across coordinator threads via
+//! `Arc<Registry>`; histograms sit behind a mutex (recording is off the
+//! per-token hot path — it happens once per request / per step batch).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::stats::Histogram;
+
+#[derive(Default)]
+pub struct Registry {
+    counters: Mutex<BTreeMap<String, std::sync::Arc<AtomicU64>>>,
+    gauges: Mutex<BTreeMap<String, std::sync::Arc<AtomicI64>>>,
+    histograms: Mutex<BTreeMap<String, std::sync::Arc<Mutex<Histogram>>>>,
+    start: Option<Instant>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Registry {
+            start: Some(Instant::now()),
+            ..Default::default()
+        }
+    }
+
+    pub fn counter(&self, name: &str) -> std::sync::Arc<AtomicU64> {
+        self.counters
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .clone()
+    }
+
+    pub fn add(&self, name: &str, v: u64) {
+        self.counter(name).fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn counter_value(&self, name: &str) -> u64 {
+        self.counter(name).load(Ordering::Relaxed)
+    }
+
+    pub fn gauge(&self, name: &str) -> std::sync::Arc<AtomicI64> {
+        self.gauges
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .clone()
+    }
+
+    pub fn set_gauge(&self, name: &str, v: i64) {
+        self.gauge(name).store(v, Ordering::Relaxed);
+    }
+
+    pub fn histogram(&self, name: &str) -> std::sync::Arc<Mutex<Histogram>> {
+        self.histograms
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_insert_with(|| std::sync::Arc::new(Mutex::new(Histogram::latency())))
+            .clone()
+    }
+
+    /// Record a latency observation in microseconds.
+    pub fn observe_us(&self, name: &str, us: f64) {
+        self.histogram(name).lock().unwrap().record(us);
+    }
+
+    pub fn uptime_secs(&self) -> f64 {
+        self.start.map(|s| s.elapsed().as_secs_f64()).unwrap_or(0.0)
+    }
+
+    /// Prometheus-ish text exposition (counters, gauges, histogram
+    /// mean/p50/p95/p99/max).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for (name, c) in self.counters.lock().unwrap().iter() {
+            out.push_str(&format!(
+                "osdt_{name}_total {}\n",
+                c.load(Ordering::Relaxed)
+            ));
+        }
+        for (name, g) in self.gauges.lock().unwrap().iter() {
+            out.push_str(&format!("osdt_{name} {}\n", g.load(Ordering::Relaxed)));
+        }
+        for (name, h) in self.histograms.lock().unwrap().iter() {
+            let h = h.lock().unwrap();
+            if h.n == 0 {
+                continue;
+            }
+            out.push_str(&format!("osdt_{name}_count {}\n", h.n));
+            out.push_str(&format!("osdt_{name}_mean_us {:.1}\n", h.mean()));
+            for (q, label) in [(0.5, "p50"), (0.95, "p95"), (0.99, "p99")] {
+                out.push_str(&format!(
+                    "osdt_{name}_{label}_us {:.1}\n",
+                    h.quantile(q)
+                ));
+            }
+            out.push_str(&format!("osdt_{name}_max_us {:.1}\n", h.max));
+        }
+        out
+    }
+}
+
+/// RAII latency scope: records elapsed microseconds into `registry` at drop.
+pub struct LatencyScope<'a> {
+    registry: &'a Registry,
+    name: &'a str,
+    start: Instant,
+}
+
+impl<'a> LatencyScope<'a> {
+    pub fn new(registry: &'a Registry, name: &'a str) -> Self {
+        LatencyScope {
+            registry,
+            name,
+            start: Instant::now(),
+        }
+    }
+}
+
+impl Drop for LatencyScope<'_> {
+    fn drop(&mut self) {
+        self.registry
+            .observe_us(self.name, self.start.elapsed().as_secs_f64() * 1e6);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let r = Registry::new();
+        r.add("requests", 2);
+        r.add("requests", 3);
+        assert_eq!(r.counter_value("requests"), 5);
+        assert_eq!(r.counter_value("other"), 0);
+    }
+
+    #[test]
+    fn gauges_set() {
+        let r = Registry::new();
+        r.set_gauge("queue_depth", 7);
+        r.set_gauge("queue_depth", 3);
+        assert_eq!(r.gauge("queue_depth").load(Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn histogram_and_render() {
+        let r = Registry::new();
+        for i in 1..=100 {
+            r.observe_us("step", i as f64 * 100.0);
+        }
+        r.add("tokens", 42);
+        let text = r.render();
+        assert!(text.contains("osdt_tokens_total 42"), "{text}");
+        assert!(text.contains("osdt_step_count 100"), "{text}");
+        assert!(text.contains("osdt_step_p50_us"), "{text}");
+    }
+
+    #[test]
+    fn latency_scope_records() {
+        let r = Registry::new();
+        {
+            let _s = LatencyScope::new(&r, "op");
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        let h = r.histogram("op");
+        let h = h.lock().unwrap();
+        assert_eq!(h.n, 1);
+        assert!(h.mean() >= 1000.0, "mean {}", h.mean());
+    }
+
+    #[test]
+    fn shared_across_threads() {
+        let r = std::sync::Arc::new(Registry::new());
+        let mut handles = vec![];
+        for _ in 0..8 {
+            let r = r.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..1000 {
+                    r.add("n", 1);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(r.counter_value("n"), 8000);
+    }
+}

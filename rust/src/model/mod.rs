@@ -1,0 +1,284 @@
+//! Model metadata: the Rust-side mirror of `artifacts/model_config.json`,
+//! the single source of truth emitted by the python build (geometry, vocab,
+//! special tokens, parameter order, HLO variant table).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// One AOT-lowered HLO variant (e.g. `fwd_conf_b1`).
+#[derive(Clone, Debug)]
+pub struct VariantInfo {
+    pub name: String,
+    pub file: String,
+    pub batch: usize,
+}
+
+/// Parsed model configuration.
+#[derive(Clone, Debug)]
+pub struct ModelConfig {
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub d_ff: usize,
+    pub vocab_size: usize,
+    pub seq_len: usize,
+    pub prompt_len: usize,
+    pub gen_len: usize,
+    pub block_len: usize,
+    pub num_blocks: usize,
+    pub pad_id: u32,
+    pub mask_id: u32,
+    pub bos_id: u32,
+    pub eos_id: u32,
+    /// id -> surface form (specials keep their bracket names)
+    pub vocab: Vec<String>,
+    /// frozen flattening order of weight tensors
+    pub param_order: Vec<String>,
+    pub variants: BTreeMap<String, VariantInfo>,
+    pub weights_file: String,
+    /// directory the config was loaded from (artifact root)
+    pub artifact_dir: PathBuf,
+}
+
+impl ModelConfig {
+    pub fn load(artifact_dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = artifact_dir.as_ref();
+        let path = dir.join("model_config.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text).context("parsing model_config.json")?;
+        Self::from_json(&j, dir)
+    }
+
+    pub fn from_json(j: &Json, dir: &Path) -> Result<Self> {
+        let us = |k: &str| -> Result<usize> {
+            j.req(k)
+                .and_then(|v| v.as_usize().ok_or_else(|| format!("{k} not usize")))
+                .map_err(anyhow::Error::msg)
+        };
+        let u32f = |k: &str| -> Result<u32> {
+            j.req(k)
+                .and_then(|v| v.as_u32().ok_or_else(|| format!("{k} not u32")))
+                .map_err(anyhow::Error::msg)
+        };
+        let strs = |k: &str| -> Result<Vec<String>> {
+            j.req(k)
+                .map_err(anyhow::Error::msg)?
+                .as_arr()
+                .context(format!("{k} not array"))?
+                .iter()
+                .map(|v| {
+                    v.as_str()
+                        .map(str::to_string)
+                        .context(format!("{k} element not string"))
+                })
+                .collect()
+        };
+
+        let mut variants = BTreeMap::new();
+        let vobj = j
+            .req("variants")
+            .map_err(anyhow::Error::msg)?
+            .as_obj()
+            .context("variants not object")?;
+        for (name, v) in vobj {
+            variants.insert(
+                name.clone(),
+                VariantInfo {
+                    name: name.clone(),
+                    file: v
+                        .req("file")
+                        .map_err(anyhow::Error::msg)?
+                        .as_str()
+                        .context("variant file not string")?
+                        .to_string(),
+                    batch: v
+                        .req("batch")
+                        .map_err(anyhow::Error::msg)?
+                        .as_usize()
+                        .context("variant batch not usize")?,
+                },
+            );
+        }
+
+        let cfg = ModelConfig {
+            d_model: us("d_model")?,
+            n_layers: us("n_layers")?,
+            n_heads: us("n_heads")?,
+            head_dim: us("head_dim")?,
+            d_ff: us("d_ff")?,
+            vocab_size: us("vocab_size")?,
+            seq_len: us("seq_len")?,
+            prompt_len: us("prompt_len")?,
+            gen_len: us("gen_len")?,
+            block_len: us("block_len")?,
+            num_blocks: us("num_blocks")?,
+            pad_id: u32f("pad_id")?,
+            mask_id: u32f("mask_id")?,
+            bos_id: u32f("bos_id")?,
+            eos_id: u32f("eos_id")?,
+            vocab: strs("vocab")?,
+            param_order: strs("param_order")?,
+            variants,
+            weights_file: j
+                .req("weights_file")
+                .map_err(anyhow::Error::msg)?
+                .as_str()
+                .context("weights_file not string")?
+                .to_string(),
+            artifact_dir: dir.to_path_buf(),
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.vocab.len() != self.vocab_size {
+            bail!(
+                "vocab table len {} != vocab_size {}",
+                self.vocab.len(),
+                self.vocab_size
+            );
+        }
+        if self.prompt_len + self.gen_len != self.seq_len {
+            bail!("prompt_len + gen_len != seq_len");
+        }
+        if self.block_len * self.num_blocks != self.gen_len {
+            bail!("block_len * num_blocks != gen_len");
+        }
+        if self.d_model != self.n_heads * self.head_dim {
+            bail!("d_model != n_heads * head_dim");
+        }
+        for id in [self.pad_id, self.mask_id, self.bos_id, self.eos_id] {
+            if id as usize >= self.vocab_size {
+                bail!("special id {id} out of vocab");
+            }
+        }
+        Ok(())
+    }
+
+    /// Gen-region index range [prompt_len, seq_len).
+    pub fn gen_range(&self) -> std::ops::Range<usize> {
+        self.prompt_len..self.seq_len
+    }
+
+    /// Absolute index range of gen block `b`.
+    pub fn block_range(&self, b: usize) -> std::ops::Range<usize> {
+        assert!(b < self.num_blocks, "block {b} out of range");
+        let start = self.prompt_len + b * self.block_len;
+        start..start + self.block_len
+    }
+
+    pub fn variant(&self, name: &str) -> Result<&VariantInfo> {
+        self.variants
+            .get(name)
+            .with_context(|| format!("variant '{name}' not in model_config.json"))
+    }
+
+    pub fn hlo_path(&self, v: &VariantInfo) -> PathBuf {
+        self.artifact_dir.join(&v.file)
+    }
+
+    pub fn weights_path(&self) -> PathBuf {
+        self.artifact_dir.join(&self.weights_file)
+    }
+}
+
+pub mod fixtures {
+    use super::*;
+
+    /// In-memory config mirroring the python geometry — used by unit tests
+    /// and by the analytic simulator (`sim::SimModel`), neither of which
+    /// needs built artifacts.
+    pub fn tiny_config() -> ModelConfig {
+        let mut vocab: Vec<String> = ["[PAD]", "[MASK]", "[BOS]", "[EOS]"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let chars = "abcdefghijklmnopqrstuvwxyz\
+                     ABCDEFGHIJKLMNOPQRSTUVWXYZ\
+                     0123456789 .,:;?!#+-*/=()<>'\"_|";
+        vocab.extend(chars.chars().map(|c| c.to_string()));
+        ModelConfig {
+            d_model: 64,
+            n_layers: 4,
+            n_heads: 4,
+            head_dim: 16,
+            d_ff: 256,
+            vocab_size: vocab.len(),
+            seq_len: 160,
+            prompt_len: 64,
+            gen_len: 96,
+            block_len: 32,
+            num_blocks: 3,
+            pad_id: 0,
+            mask_id: 1,
+            bos_id: 2,
+            eos_id: 3,
+            vocab,
+            param_order: vec![],
+            variants: BTreeMap::new(),
+            weights_file: "weights.bin".into(),
+            artifact_dir: PathBuf::from("artifacts"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::fixtures::tiny_config;
+    use super::*;
+
+    #[test]
+    fn tiny_config_valid() {
+        tiny_config().validate().unwrap();
+    }
+
+    #[test]
+    fn block_ranges_tile_gen_region() {
+        let cfg = tiny_config();
+        let mut covered = vec![];
+        for b in 0..cfg.num_blocks {
+            covered.extend(cfg.block_range(b));
+        }
+        assert_eq!(covered, cfg.gen_range().collect::<Vec<_>>());
+    }
+
+    #[test]
+    #[should_panic]
+    fn block_out_of_range_panics() {
+        tiny_config().block_range(3);
+    }
+
+    #[test]
+    fn from_json_roundtrip() {
+        let text = r#"{
+            "d_model": 8, "n_layers": 1, "n_heads": 2, "head_dim": 4,
+            "d_ff": 16, "vocab_size": 5, "seq_len": 12, "prompt_len": 4,
+            "gen_len": 8, "block_len": 4, "num_blocks": 2,
+            "pad_id": 0, "mask_id": 1, "bos_id": 2, "eos_id": 3,
+            "vocab": ["[PAD]","[MASK]","[BOS]","[EOS]","a"],
+            "param_order": ["w"],
+            "variants": {"fwd_conf_b1": {"file": "f.hlo.txt", "batch": 1}},
+            "weights_file": "weights.bin"
+        }"#;
+        let j = Json::parse(text).unwrap();
+        let cfg = ModelConfig::from_json(&j, Path::new("/tmp/x")).unwrap();
+        assert_eq!(cfg.variant("fwd_conf_b1").unwrap().batch, 1);
+        assert!(cfg.variant("nope").is_err());
+        assert_eq!(cfg.hlo_path(cfg.variant("fwd_conf_b1").unwrap()),
+                   PathBuf::from("/tmp/x/f.hlo.txt"));
+    }
+
+    #[test]
+    fn invalid_config_rejected() {
+        let mut cfg = tiny_config();
+        cfg.gen_len = 95; // breaks both sums
+        assert!(cfg.validate().is_err());
+    }
+}

@@ -1,0 +1,218 @@
+//! Beyond one-shot: an online-adaptive extension of OSDT (the direction the
+//! paper's conclusion sketches — "reusable task-level confidence signatures
+//! for more general-purpose algorithmic and systems innovations").
+//!
+//! `AdaptiveOsdt` starts from a one-shot profile and keeps refining it with
+//! an exponential moving average over the traces of every sequence it
+//! decodes:
+//!
+//! ```text
+//! τ_new[u] = (1 − α) · τ_old[u] + α · μ(conf_u of the latest sequence)
+//! ```
+//!
+//! α = 0 reduces exactly to OSDT; α = 1 is "always use the latest sequence"
+//! (instance-level, which the paper argues is unnecessary). The A5 ablation
+//! compares the three regimes.
+
+use std::sync::RwLock;
+
+use super::{Calibrator, CalibrationTrace, DynamicMode, Metric, Osdt, Policy, Profile, StepContext};
+
+pub struct AdaptiveOsdt {
+    mode: DynamicMode,
+    metric: Metric,
+    kappa: f64,
+    epsilon: f64,
+    alpha: f64,
+    inner: RwLock<Osdt>,
+    observed: RwLock<u64>,
+}
+
+impl AdaptiveOsdt {
+    pub fn new(
+        initial: Profile,
+        kappa: f64,
+        epsilon: f64,
+        alpha: f64,
+    ) -> Self {
+        assert!((0.0..=1.0).contains(&alpha), "alpha in [0,1]");
+        let mode = initial.mode;
+        let metric = initial.metric;
+        AdaptiveOsdt {
+            mode,
+            metric,
+            kappa,
+            epsilon,
+            alpha,
+            inner: RwLock::new(Osdt::from_profile(initial, kappa, epsilon)),
+            observed: RwLock::new(0),
+        }
+    }
+
+    /// Fold a decoded sequence's trace into the profile (EMA per unit).
+    /// Units present in only one of (old, new) keep the available value.
+    pub fn observe(&self, trace: &CalibrationTrace) {
+        if self.alpha == 0.0 {
+            *self.observed.write().unwrap() += 1;
+            return; // pure one-shot
+        }
+        let fresh = Calibrator::calibrate(trace, self.mode, self.metric);
+        let current = self.inner.read().unwrap().profile().clone();
+        let blended = blend(&current, &fresh, self.alpha, self.metric);
+        *self.inner.write().unwrap() = Osdt::from_profile(blended, self.kappa, self.epsilon);
+        *self.observed.write().unwrap() += 1;
+    }
+
+    pub fn observed(&self) -> u64 {
+        *self.observed.read().unwrap()
+    }
+
+    pub fn snapshot(&self) -> Profile {
+        self.inner.read().unwrap().profile().clone()
+    }
+}
+
+fn blend(old: &Profile, new: &Profile, alpha: f64, metric: Metric) -> Profile {
+    let nb = old.num_blocks().max(new.num_blocks());
+    match old.mode {
+        DynamicMode::Block => {
+            let taus = (0..nb)
+                .map(|b| {
+                    let o = old.tau(b, 0);
+                    let n = new.tau(b, 0);
+                    (1.0 - alpha) * o + alpha * n
+                })
+                .collect();
+            Profile::block(taus, metric)
+        }
+        DynamicMode::StepBlock => {
+            // blend step-wise up to the max calibrated depth of either
+            // profile; tau() clamping fills the shorter one
+            let taus = (0..nb)
+                .map(|b| {
+                    let depth = old.steps_in_block(b).max(new.steps_in_block(b)).max(1);
+                    (0..depth)
+                        .map(|s| (1.0 - alpha) * old.tau(b, s) + alpha * new.tau(b, s))
+                        .collect()
+                })
+                .collect();
+            Profile::step_block(taus, metric)
+        }
+    }
+}
+
+impl Policy for AdaptiveOsdt {
+    fn select_raw(&self, ctx: &StepContext) -> Vec<usize> {
+        self.inner.read().unwrap().select_raw(ctx)
+    }
+
+    fn name(&self) -> String {
+        format!(
+            "adaptive-osdt-{}-{}-a{}",
+            self.mode.as_str(),
+            self.metric.as_str(),
+            self.alpha
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn trace_with_level(level: f32) -> CalibrationTrace {
+        let mut t = CalibrationTrace::new(2);
+        t.record(0, 0, &[level; 4]);
+        t.record(0, 1, &[level; 2]);
+        t.record(1, 0, &[level; 3]);
+        t
+    }
+
+    #[test]
+    fn alpha_zero_is_pure_one_shot() {
+        let init = Profile::block(vec![0.5, 0.5], Metric::Mean);
+        let p = AdaptiveOsdt::new(init.clone(), 1.0, 0.0, 0.0);
+        p.observe(&trace_with_level(0.9));
+        p.observe(&trace_with_level(0.9));
+        assert_eq!(p.snapshot(), init);
+        assert_eq!(p.observed(), 2);
+    }
+
+    #[test]
+    fn ema_moves_toward_observations() {
+        let init = Profile::block(vec![0.2, 0.2], Metric::Mean);
+        let p = AdaptiveOsdt::new(init, 1.0, 0.0, 0.5);
+        p.observe(&trace_with_level(0.8));
+        let after1 = p.snapshot().tau(0, 0);
+        assert!((after1 - 0.5).abs() < 1e-5, "{after1}"); // 0.5*0.2+0.5*0.8
+        p.observe(&trace_with_level(0.8));
+        let after2 = p.snapshot().tau(0, 0);
+        assert!(after2 > after1, "monotone approach");
+        assert!(after2 < 0.81);
+    }
+
+    #[test]
+    fn alpha_one_tracks_latest() {
+        let init = Profile::block(vec![0.1, 0.1], Metric::Mean);
+        let p = AdaptiveOsdt::new(init, 1.0, 0.0, 1.0);
+        p.observe(&trace_with_level(0.7));
+        assert!((p.snapshot().tau(0, 0) - 0.7).abs() < 1e-5);
+        p.observe(&trace_with_level(0.3));
+        assert!((p.snapshot().tau(0, 0) - 0.3).abs() < 1e-5);
+    }
+
+    #[test]
+    fn step_block_blending_preserves_depth() {
+        let init = Profile::step_block(vec![vec![0.2, 0.4], vec![0.6]], Metric::Q1);
+        let p = AdaptiveOsdt::new(init, 1.0, 0.0, 0.5);
+        let mut t = CalibrationTrace::new(2);
+        t.record(0, 0, &[0.8; 4]);
+        t.record(0, 1, &[0.8; 4]);
+        t.record(0, 2, &[0.8; 4]); // deeper than the initial profile
+        t.record(1, 0, &[0.8; 4]);
+        p.observe(&t);
+        let snap = p.snapshot();
+        assert_eq!(snap.steps_in_block(0), 3);
+        // step 2 blends old clamped value (0.4) with new 0.8
+        assert!((snap.tau(0, 2) - 0.6).abs() < 1e-5, "{}", snap.tau(0, 2));
+    }
+
+    #[test]
+    fn selection_uses_blended_threshold() {
+        let init = Profile::block(vec![0.95], Metric::Mean);
+        let p = AdaptiveOsdt::new(init, 1.0, 0.0, 1.0);
+        let conf = [0.5f32, 0.6];
+        // initially strict -> fallback picks argmax only
+        let s0 = p.select(&StepContext { block: 0, step: 0, conf: &conf });
+        assert_eq!(s0, vec![1]);
+        // after observing a low-confidence task, both clear the threshold
+        p.observe(&trace_with_level(0.3));
+        let s1 = p.select(&StepContext { block: 0, step: 0, conf: &conf });
+        assert_eq!(s1, vec![0, 1]);
+    }
+
+    #[test]
+    fn concurrent_observe_and_select() {
+        let init = Profile::block(vec![0.5, 0.5], Metric::Mean);
+        let p = std::sync::Arc::new(AdaptiveOsdt::new(init, 1.0, 0.0, 0.2));
+        let mut handles = vec![];
+        for i in 0..4 {
+            let p = p.clone();
+            handles.push(std::thread::spawn(move || {
+                for j in 0..200 {
+                    if (i + j) % 2 == 0 {
+                        p.observe(&trace_with_level(0.7));
+                    } else {
+                        let conf = [0.4f32, 0.9];
+                        let s = p.select(&StepContext { block: 0, step: 0, conf: &conf });
+                        assert!(!s.is_empty());
+                    }
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(p.observed(), 400);
+    }
+}

@@ -1,0 +1,228 @@
+//! Phase 1 of OSDT (Algorithm 1, lines 3–6): decode one sequence with the
+//! standard static policy while recording per-(block, step) confidence
+//! vectors, then reduce them with metric μ into a threshold profile.
+//!
+//! The trace is also the raw material for Figures 1 & 2 (step-block mean
+//! confidence trajectories and their pairwise cosine similarity).
+
+use super::{DynamicMode, Metric, Profile};
+
+/// Raw confidences observed during one decoded sequence:
+/// `per_block[b][s]` = confidences of the masked positions of block `b`
+/// at its denoising step `s` (before committing).
+#[derive(Clone, Debug, Default)]
+pub struct CalibrationTrace {
+    pub per_block: Vec<Vec<Vec<f64>>>,
+}
+
+impl CalibrationTrace {
+    pub fn new(num_blocks: usize) -> Self {
+        CalibrationTrace {
+            per_block: vec![Vec::new(); num_blocks],
+        }
+    }
+
+    /// Record the masked-position confidences at (block, step). Steps must
+    /// arrive in order for each block.
+    pub fn record(&mut self, block: usize, step: usize, conf: &[f32]) {
+        let steps = &mut self.per_block[block];
+        assert_eq!(step, steps.len(), "steps must be recorded in order");
+        steps.push(conf.iter().map(|&c| f64::from(c)).collect());
+    }
+
+    /// Step-block mean-confidence vector, flattened in (block, step) order —
+    /// the paper's "confidence signature" used for Figures 1–2.
+    pub fn signature(&self) -> Vec<f64> {
+        self.per_block
+            .iter()
+            .flat_map(|steps| {
+                steps.iter().map(|v| {
+                    if v.is_empty() {
+                        0.0
+                    } else {
+                        v.iter().sum::<f64>() / v.len() as f64
+                    }
+                })
+            })
+            .collect()
+    }
+
+    /// Total number of denoising steps across blocks.
+    pub fn total_steps(&self) -> usize {
+        self.per_block.iter().map(Vec::len).sum()
+    }
+
+    /// JSON persistence — traces are the raw experimental record behind
+    /// Figures 1–2 and calibration; `osdt traces --save` archives them.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![(
+            "per_block",
+            Json::Arr(
+                self.per_block
+                    .iter()
+                    .map(|steps| {
+                        Json::Arr(steps.iter().map(|v| Json::from_f64s(v)).collect())
+                    })
+                    .collect(),
+            ),
+        )])
+    }
+
+    pub fn from_json(j: &crate::util::json::Json) -> Result<Self, String> {
+        let blocks = j
+            .req("per_block")?
+            .as_arr()
+            .ok_or("per_block not an array")?;
+        let mut per_block = Vec::with_capacity(blocks.len());
+        for b in blocks {
+            let steps = b.as_arr().ok_or("block not an array")?;
+            let mut out_steps = Vec::with_capacity(steps.len());
+            for s in steps {
+                let row = s.as_arr().ok_or("step not an array")?;
+                let vals: Option<Vec<f64>> =
+                    row.iter().map(crate::util::json::Json::as_f64).collect();
+                out_steps.push(vals.ok_or("confidences must be numbers")?);
+            }
+            per_block.push(out_steps);
+        }
+        Ok(CalibrationTrace { per_block })
+    }
+}
+
+/// CALIBRATE(conf, M, μ) — reduce a trace to a threshold profile.
+pub struct Calibrator;
+
+impl Calibrator {
+    pub fn calibrate(
+        trace: &CalibrationTrace,
+        mode: DynamicMode,
+        metric: Metric,
+    ) -> Profile {
+        match mode {
+            DynamicMode::Block => {
+                // unit = block: pool confidences across all steps of a block
+                let taus = trace
+                    .per_block
+                    .iter()
+                    .map(|steps| {
+                        let pooled: Vec<f64> =
+                            steps.iter().flatten().copied().collect();
+                        // an empty block (shouldn't happen in practice)
+                        // gets a permissive threshold of 0
+                        metric.reduce(&pooled).unwrap_or(0.0)
+                    })
+                    .collect();
+                Profile::block(taus, metric)
+            }
+            DynamicMode::StepBlock => {
+                // unit = (block, step): one τ per calibration step
+                let taus = trace
+                    .per_block
+                    .iter()
+                    .map(|steps| {
+                        steps
+                            .iter()
+                            .map(|v| metric.reduce(v).unwrap_or(0.0))
+                            .collect::<Vec<f64>>()
+                    })
+                    .collect();
+                Profile::step_block(taus, metric)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo_trace() -> CalibrationTrace {
+        let mut t = CalibrationTrace::new(2);
+        t.record(0, 0, &[0.2, 0.4, 0.6]); // mean 0.4
+        t.record(0, 1, &[0.8, 1.0]);      // mean 0.9
+        t.record(1, 0, &[0.5, 0.5]);      // mean 0.5
+        t
+    }
+
+    #[test]
+    fn signature_is_step_means() {
+        let sig = demo_trace().signature();
+        let want = [0.4, 0.9, 0.5];
+        assert_eq!(sig.len(), 3);
+        for (a, b) in sig.iter().zip(want) {
+            assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn block_mode_pools_steps() {
+        let p = Calibrator::calibrate(&demo_trace(), DynamicMode::Block, Metric::Mean);
+        // block 0 pooled: (0.2+0.4+0.6+0.8+1.0)/5 = 0.6
+        assert!((p.tau(0, 0) - 0.6).abs() < 1e-6);
+        assert!((p.tau(0, 99) - 0.6).abs() < 1e-6); // step-independent
+        assert!((p.tau(1, 0) - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn step_block_mode_per_step() {
+        let p =
+            Calibrator::calibrate(&demo_trace(), DynamicMode::StepBlock, Metric::Mean);
+        assert!((p.tau(0, 0) - 0.4).abs() < 1e-6);
+        assert!((p.tau(0, 1) - 0.9).abs() < 1e-6);
+        // beyond calibrated depth clamps to last calibrated step
+        assert!((p.tau(0, 7) - 0.9).abs() < 1e-6);
+        assert!((p.tau(1, 0) - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn metrics_differ_on_skewed_data() {
+        let mut t = CalibrationTrace::new(1);
+        t.record(0, 0, &[0.1, 0.9, 0.92, 0.94, 0.96]);
+        let mean = Calibrator::calibrate(&t, DynamicMode::Block, Metric::Mean);
+        let q1 = Calibrator::calibrate(&t, DynamicMode::Block, Metric::Q1);
+        let q3 = Calibrator::calibrate(&t, DynamicMode::Block, Metric::Q3);
+        assert!(q1.tau(0, 0) < mean.tau(0, 0) || q1.tau(0, 0) < q3.tau(0, 0));
+        assert!(q1.tau(0, 0) <= q3.tau(0, 0));
+    }
+
+    #[test]
+    #[should_panic(expected = "steps must be recorded in order")]
+    fn out_of_order_step_panics() {
+        let mut t = CalibrationTrace::new(1);
+        t.record(0, 1, &[0.5]);
+    }
+
+    #[test]
+    fn total_steps() {
+        assert_eq!(demo_trace().total_steps(), 3);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let t = demo_trace();
+        let back = CalibrationTrace::from_json(&t.to_json()).unwrap();
+        assert_eq!(back.per_block.len(), t.per_block.len());
+        for (a, b) in back.per_block.iter().flatten().zip(t.per_block.iter().flatten()) {
+            assert_eq!(a.len(), b.len());
+            for (x, y) in a.iter().zip(b) {
+                assert!((x - y).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn from_json_rejects_malformed() {
+        use crate::util::json::Json;
+        for bad in [
+            r#"{}"#,
+            r#"{"per_block": 3}"#,
+            r#"{"per_block": [[["x"]]]}"#,
+        ] {
+            assert!(
+                CalibrationTrace::from_json(&Json::parse(bad).unwrap()).is_err(),
+                "{bad}"
+            );
+        }
+    }
+}

@@ -1,0 +1,259 @@
+//! Threshold policies for parallel diffusion decoding — the paper's core
+//! subject. Four policies share one interface:
+//!
+//! - [`SequentialTopK`]  — LLaDA baseline: fixed per-step quota, top-k by
+//!   confidence (k=1 reproduces strictly sequential unmasking).
+//! - [`StaticThreshold`] — Fast-dLLM fixed: commit every masked position
+//!   with confidence > τ (global, static).
+//! - [`FactorThreshold`] — Fast-dLLM factor: commit positions with
+//!   confidence ≥ f · max-confidence of the step (relative cutoff; see
+//!   DESIGN.md for the interpretation).
+//! - [`Osdt`]            — the paper's One-Shot Dynamic Thresholding:
+//!   per-block or per-(block, step) thresholds derived from a single
+//!   calibration run, with cap κ and slack ε (Algorithm 1).
+//!
+//! Every policy guarantees **liveness**: if its raw rule selects nothing,
+//! the most confident masked position is committed (the paper's argmax
+//! fallback, line 19–21 of Algorithm 1). This invariant is property-tested.
+
+mod adaptive;
+mod calibrate;
+mod factor;
+mod osdt;
+mod profile;
+mod static_thresh;
+mod topk;
+
+pub use adaptive::AdaptiveOsdt;
+pub use calibrate::{CalibrationTrace, Calibrator};
+pub use factor::FactorThreshold;
+pub use osdt::Osdt;
+pub use profile::{Profile, ProfileStore};
+pub use static_thresh::StaticThreshold;
+pub use topk::SequentialTopK;
+
+use anyhow::{bail, Result};
+
+/// OSDT dynamic mode M (paper §4.1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DynamicMode {
+    Block,
+    StepBlock,
+}
+
+impl DynamicMode {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            DynamicMode::Block => "block",
+            DynamicMode::StepBlock => "step-block",
+        }
+    }
+}
+
+/// OSDT threshold metric μ (paper §4.1): statistic over calibration
+/// confidences. q2 == median.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Metric {
+    Mean,
+    Q1,
+    Median,
+    Q3,
+    MinWhisker,
+}
+
+impl Metric {
+    pub fn parse(s: &str) -> Result<Metric> {
+        Ok(match s {
+            "mean" => Metric::Mean,
+            "q1" => Metric::Q1,
+            "q2" | "median" => Metric::Median,
+            "q3" => Metric::Q3,
+            "min-whisker" | "minwhisker" => Metric::MinWhisker,
+            _ => bail!("unknown metric {s:?} (mean|q1|q2|q3|min-whisker)"),
+        })
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Metric::Mean => "mean",
+            Metric::Q1 => "q1",
+            Metric::Median => "q2",
+            Metric::Q3 => "q3",
+            Metric::MinWhisker => "min-whisker",
+        }
+    }
+
+    /// Reduce a set of calibration confidences to a threshold.
+    pub fn reduce(&self, values: &[f64]) -> Option<f64> {
+        let s = crate::util::stats::summarize(values)?;
+        Some(match self {
+            Metric::Mean => s.mean,
+            Metric::Q1 => s.q1,
+            Metric::Median => s.median,
+            Metric::Q3 => s.q3,
+            Metric::MinWhisker => {
+                let mut sorted = values.to_vec();
+                sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                s.min_whisker(&sorted)
+            }
+        })
+    }
+}
+
+/// Declarative policy description (CLI / wire / bench sweeps).
+#[derive(Clone, Debug, PartialEq)]
+pub enum PolicySpec {
+    Sequential { k: usize },
+    Static { tau: f64 },
+    Factor { factor: f64 },
+    Osdt {
+        mode: DynamicMode,
+        metric: Metric,
+        kappa: f64,
+        epsilon: f64,
+    },
+}
+
+impl PolicySpec {
+    /// Canonical spec string (inverse of `config::parse_policy_spec`).
+    pub fn to_spec_string(&self) -> String {
+        match self {
+            PolicySpec::Sequential { k } => format!("sequential:{k}"),
+            PolicySpec::Static { tau } => format!("static:{tau}"),
+            PolicySpec::Factor { factor } => format!("factor:{factor}"),
+            PolicySpec::Osdt { mode, metric, kappa, epsilon } => format!(
+                "osdt:{}:{}:{}:{}",
+                mode.as_str(),
+                metric.as_str(),
+                kappa,
+                epsilon
+            ),
+        }
+    }
+
+    /// Whether this spec needs a calibration profile to instantiate.
+    pub fn needs_profile(&self) -> bool {
+        matches!(self, PolicySpec::Osdt { .. })
+    }
+
+    /// Instantiate a profile-free policy. OSDT must go through
+    /// [`Osdt::from_profile`].
+    pub fn build(&self) -> Result<Box<dyn Policy>> {
+        Ok(match self {
+            PolicySpec::Sequential { k } => Box::new(SequentialTopK::new(*k)),
+            PolicySpec::Static { tau } => Box::new(StaticThreshold::new(*tau)),
+            PolicySpec::Factor { factor } => Box::new(FactorThreshold::new(*factor)),
+            PolicySpec::Osdt { .. } => {
+                bail!("OSDT needs a calibration profile; use Osdt::from_profile")
+            }
+        })
+    }
+}
+
+/// Everything a policy may consult at one denoising step.
+pub struct StepContext<'a> {
+    /// Current gen block index (0-based).
+    pub block: usize,
+    /// Denoising step index *within* the current block (0-based).
+    pub step: usize,
+    /// Confidences of the still-masked positions of the current block
+    /// (parallel to the engine's masked-position list).
+    pub conf: &'a [f32],
+}
+
+/// A threshold policy: selects which masked positions to commit.
+pub trait Policy: Send {
+    /// Raw selection rule. Returns indices **into `ctx.conf`**. May return
+    /// an empty set — the engine-facing [`Policy::select`] applies the
+    /// argmax fallback.
+    fn select_raw(&self, ctx: &StepContext) -> Vec<usize>;
+
+    /// Human-readable name for logs/benches.
+    fn name(&self) -> String;
+
+    /// Selection with the liveness fallback (Algorithm 1 lines 19–21):
+    /// never returns an empty set for a non-empty `ctx.conf`.
+    fn select(&self, ctx: &StepContext) -> Vec<usize> {
+        self.select_explain(ctx).0
+    }
+
+    /// As [`Policy::select`], also reporting whether the argmax fallback
+    /// fired (the A2 ablation measures how often each policy relies on it).
+    fn select_explain(&self, ctx: &StepContext) -> (Vec<usize>, bool) {
+        let picked = self.select_raw(ctx);
+        if !picked.is_empty() || ctx.conf.is_empty() {
+            return (picked, false);
+        }
+        (vec![argmax(ctx.conf)], true)
+    }
+}
+
+/// Index of the maximum confidence (ties -> lowest index, deterministic).
+pub fn argmax(conf: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &c) in conf.iter().enumerate() {
+        if c > conf[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn metric_parse_roundtrip() {
+        for m in [Metric::Mean, Metric::Q1, Metric::Median, Metric::Q3, Metric::MinWhisker] {
+            assert_eq!(Metric::parse(m.as_str()).unwrap(), m);
+        }
+        assert!(Metric::parse("q5").is_err());
+    }
+
+    #[test]
+    fn metric_reduce_matches_stats() {
+        let xs = [0.1, 0.2, 0.3, 0.4, 0.5];
+        assert!((Metric::Mean.reduce(&xs).unwrap() - 0.3).abs() < 1e-12);
+        assert!((Metric::Q1.reduce(&xs).unwrap() - 0.2).abs() < 1e-12);
+        assert!((Metric::Median.reduce(&xs).unwrap() - 0.3).abs() < 1e-12);
+        assert!((Metric::Q3.reduce(&xs).unwrap() - 0.4).abs() < 1e-12);
+        assert!(Metric::Mean.reduce(&[]).is_none());
+    }
+
+    #[test]
+    fn argmax_tie_breaks_low() {
+        assert_eq!(argmax(&[0.5, 0.9, 0.9, 0.1]), 1);
+        assert_eq!(argmax(&[0.5]), 0);
+    }
+
+    #[test]
+    fn spec_string_roundtrip() {
+        use crate::config::parse_policy_spec;
+        for spec in [
+            PolicySpec::Sequential { k: 2 },
+            PolicySpec::Static { tau: 0.9 },
+            PolicySpec::Factor { factor: 0.95 },
+            PolicySpec::Osdt {
+                mode: DynamicMode::StepBlock,
+                metric: Metric::Median,
+                kappa: 0.75,
+                epsilon: 0.2,
+            },
+        ] {
+            let s = spec.to_spec_string();
+            assert_eq!(parse_policy_spec(&s).unwrap(), spec, "{s}");
+        }
+    }
+
+    #[test]
+    fn fallback_guarantees_progress() {
+        // a static policy with impossible tau still commits one position
+        let p = StaticThreshold::new(0.99);
+        let ctx = StepContext { block: 0, step: 0, conf: &[0.1, 0.5, 0.3] };
+        assert_eq!(p.select(&ctx), vec![1]);
+        // empty conf -> empty selection (block already done)
+        let ctx2 = StepContext { block: 0, step: 0, conf: &[] };
+        assert!(p.select(&ctx2).is_empty());
+    }
+}

@@ -1,0 +1,183 @@
+//! Phase 2 of One-Shot Dynamic Thresholding (Algorithm 1, lines 8–22).
+//!
+//! Given a calibrated [`Profile`], each step applies
+//!
+//! ```text
+//! τ      = T[b]            (block mode)      or  T[b][s]  (step-block)
+//! τ_eff  = min(τ, κ) · (1 − ε)
+//! S      = { j masked : conf[j] > τ_eff }
+//! if S = ∅ : S = { argmax conf }             (liveness fallback)
+//! ```
+//!
+//! κ (cap) bounds overly strict calibrated thresholds from above; ε (slack)
+//! uniformly relaxes them to buy parallelism. Both are the paper's §4.1
+//! hyperparameters.
+
+use super::{Policy, Profile, StepContext};
+
+#[derive(Clone, Debug)]
+pub struct Osdt {
+    profile: Profile,
+    kappa: f64,
+    epsilon: f64,
+}
+
+impl Osdt {
+    pub fn from_profile(profile: Profile, kappa: f64, epsilon: f64) -> Self {
+        assert!((0.0..=1.0).contains(&kappa), "kappa in [0,1]");
+        assert!((0.0..1.0).contains(&epsilon), "epsilon in [0,1)");
+        Osdt {
+            profile,
+            kappa,
+            epsilon,
+        }
+    }
+
+    /// The effective threshold used at (block, step) — exposed for tests
+    /// and the sweep benches.
+    pub fn tau_eff(&self, block: usize, step: usize) -> f64 {
+        self.profile.tau(block, step).min(self.kappa) * (1.0 - self.epsilon)
+    }
+
+    pub fn profile(&self) -> &Profile {
+        &self.profile
+    }
+}
+
+impl Policy for Osdt {
+    fn select_raw(&self, ctx: &StepContext) -> Vec<usize> {
+        let cut = self.tau_eff(ctx.block, ctx.step);
+        (0..ctx.conf.len())
+            .filter(|&i| f64::from(ctx.conf[i]) > cut)
+            .collect()
+    }
+
+    fn name(&self) -> String {
+        format!(
+            "osdt-{}-{}-k{}-e{}",
+            self.profile.mode.as_str(),
+            self.profile.metric.as_str(),
+            self.kappa,
+            self.epsilon
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::policy::Metric;
+    use crate::util::{prop, rng::Rng};
+
+    fn block_profile() -> Profile {
+        Profile::block(vec![0.9, 0.5, 0.95], Metric::Mean)
+    }
+
+    #[test]
+    fn tau_eff_applies_cap_and_slack() {
+        let p = Osdt::from_profile(block_profile(), 0.8, 0.1);
+        // block 0: min(0.9, 0.8)*(0.9) = 0.72
+        assert!((p.tau_eff(0, 0) - 0.72).abs() < 1e-12);
+        // block 1: min(0.5, 0.8)*0.9 = 0.45
+        assert!((p.tau_eff(1, 0) - 0.45).abs() < 1e-12);
+    }
+
+    #[test]
+    fn step_block_lookup_by_step() {
+        let prof = Profile::step_block(
+            vec![vec![0.2, 0.9], vec![0.6]],
+            Metric::Median,
+        );
+        let p = Osdt::from_profile(prof, 1.0, 0.0);
+        let low = StepContext { block: 0, step: 0, conf: &[0.3, 0.5] };
+        let hi = StepContext { block: 0, step: 1, conf: &[0.3, 0.5] };
+        // step 0: τ=0.2 -> both above
+        assert_eq!(p.select(&low), vec![0, 1]);
+        // step 1: τ=0.9 -> none above -> fallback argmax
+        assert_eq!(p.select(&hi), vec![1]);
+    }
+
+    #[test]
+    fn slack_strictly_increases_selection() {
+        let prof = Profile::block(vec![0.8], Metric::Mean);
+        let strict = Osdt::from_profile(prof.clone(), 1.0, 0.0);
+        let relaxed = Osdt::from_profile(prof, 1.0, 0.2);
+        let conf = [0.7f32, 0.78, 0.85, 0.3];
+        let ctx = StepContext { block: 0, step: 0, conf: &conf };
+        let s1 = strict.select(&ctx);
+        let s2 = relaxed.select(&ctx);
+        assert!(s2.len() >= s1.len());
+        for i in &s1 {
+            assert!(s2.contains(i), "relaxed must be a superset");
+        }
+    }
+
+    #[test]
+    fn prop_monotone_in_kappa_and_epsilon() {
+        // lower kappa / higher epsilon -> lower tau_eff -> superset selection
+        prop::forall(
+            "osdt-monotonicity",
+            200,
+            |r: &mut Rng| {
+                let taus = prop::gen_f64_vec(r, 1, 4, 0.0, 1.0);
+                let conf: Vec<f32> = prop::gen_f64_vec(r, 1, 40, 0.0, 1.0)
+                    .into_iter()
+                    .map(|x| x as f32)
+                    .collect();
+                let k1 = r.next_f64();
+                let k2 = k1 * r.next_f64(); // k2 <= k1
+                let e1 = r.next_f64() * 0.9;
+                let e2 = e1 + (0.99 - e1) * r.next_f64() * 0.99; // e2 >= e1
+                (taus, conf, k1, k2, e1, e2)
+            },
+            |(taus, conf, k1, k2, e1, e2)| {
+                let prof = Profile::block(taus.clone(), Metric::Mean);
+                let a = Osdt::from_profile(prof.clone(), *k1, *e1);
+                let b = Osdt::from_profile(prof.clone(), *k2, *e1);
+                let c = Osdt::from_profile(prof.clone(), *k1, *e2);
+                let block = (taus.len().max(1)) - 1;
+                let ctx = StepContext { block, step: 0, conf };
+                let sa = a.select(&ctx);
+                for (name, other) in [("kappa", b.select(&ctx)), ("eps", c.select(&ctx))] {
+                    for i in &sa {
+                        if !other.contains(i) {
+                            return Err(format!(
+                                "relaxing {name} dropped index {i}: {sa:?} -> {other:?}"
+                            ));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_liveness() {
+        prop::forall(
+            "osdt-liveness",
+            200,
+            |r: &mut Rng| {
+                let taus = prop::gen_f64_vec(r, 1, 3, 0.5, 1.0);
+                let conf: Vec<f32> = prop::gen_f64_vec(r, 1, 30, 0.0, 0.4)
+                    .into_iter()
+                    .map(|x| x as f32)
+                    .collect();
+                (taus, conf)
+            },
+            |(taus, conf)| {
+                // conf all below taus -> must still commit exactly the argmax
+                let p = Osdt::from_profile(
+                    Profile::block(taus.clone(), Metric::Mean),
+                    1.0,
+                    0.0,
+                );
+                let sel = p.select(&StepContext { block: 0, step: 0, conf });
+                if sel.is_empty() {
+                    return Err("liveness violated".into());
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,258 @@
+//! Calibrated threshold profiles + on-disk persistence.
+//!
+//! A `Profile` is the output of Phase 1 (calibration) and the input to the
+//! OSDT policy in Phase 2. `ProfileStore` persists profiles as JSON under a
+//! directory keyed by (task, mode, metric) so a calibration can be reused
+//! across server restarts — the "reusable task-level confidence signature"
+//! the paper's conclusion points at.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+use super::{DynamicMode, Metric};
+
+/// Calibrated thresholds at block or step-block granularity.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Profile {
+    pub mode: DynamicMode,
+    pub metric: Metric,
+    /// Block mode: taus[b]. Step-block mode: taus_sb[b][s].
+    block_taus: Vec<f64>,
+    step_block_taus: Vec<Vec<f64>>,
+}
+
+impl Profile {
+    pub fn block(taus: Vec<f64>, metric: Metric) -> Self {
+        Profile {
+            mode: DynamicMode::Block,
+            metric,
+            block_taus: taus,
+            step_block_taus: vec![],
+        }
+    }
+
+    pub fn step_block(taus: Vec<Vec<f64>>, metric: Metric) -> Self {
+        Profile {
+            mode: DynamicMode::StepBlock,
+            metric,
+            block_taus: vec![],
+            step_block_taus: taus,
+        }
+    }
+
+    pub fn num_blocks(&self) -> usize {
+        match self.mode {
+            DynamicMode::Block => self.block_taus.len(),
+            DynamicMode::StepBlock => self.step_block_taus.len(),
+        }
+    }
+
+    /// Calibrated step depth of block `b` (block mode: 1 if present).
+    pub fn steps_in_block(&self, b: usize) -> usize {
+        match self.mode {
+            DynamicMode::Block => usize::from(b < self.block_taus.len()),
+            DynamicMode::StepBlock => {
+                self.step_block_taus.get(b).map(Vec::len).unwrap_or(0)
+            }
+        }
+    }
+
+    /// τ lookup (Algorithm 1 lines 13–16). Blocks beyond the calibrated
+    /// range clamp to the last block; steps beyond the calibrated depth of
+    /// a block clamp to its last step.
+    pub fn tau(&self, block: usize, step: usize) -> f64 {
+        match self.mode {
+            DynamicMode::Block => {
+                let b = block.min(self.block_taus.len().saturating_sub(1));
+                self.block_taus.get(b).copied().unwrap_or(0.0)
+            }
+            DynamicMode::StepBlock => {
+                let b = block.min(self.step_block_taus.len().saturating_sub(1));
+                match self.step_block_taus.get(b) {
+                    None => 0.0,
+                    Some(steps) if steps.is_empty() => 0.0,
+                    Some(steps) => {
+                        let s = step.min(steps.len() - 1);
+                        steps[s]
+                    }
+                }
+            }
+        }
+    }
+
+    // -- JSON persistence ----------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        let taus = match self.mode {
+            DynamicMode::Block => Json::from_f64s(&self.block_taus),
+            DynamicMode::StepBlock => Json::Arr(
+                self.step_block_taus
+                    .iter()
+                    .map(|v| Json::from_f64s(v))
+                    .collect(),
+            ),
+        };
+        Json::obj(vec![
+            ("mode", Json::Str(self.mode.as_str().into())),
+            ("metric", Json::Str(self.metric.as_str().into())),
+            ("taus", taus),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Profile> {
+        let mode = match j.req("mode").map_err(anyhow::Error::msg)?.as_str() {
+            Some("block") => DynamicMode::Block,
+            Some("step-block") => DynamicMode::StepBlock,
+            m => bail!("bad profile mode {m:?}"),
+        };
+        let metric = Metric::parse(
+            j.req("metric")
+                .map_err(anyhow::Error::msg)?
+                .as_str()
+                .context("metric not a string")?,
+        )?;
+        let taus = j
+            .req("taus")
+            .map_err(anyhow::Error::msg)?
+            .as_arr()
+            .context("taus not an array")?;
+        Ok(match mode {
+            DynamicMode::Block => {
+                let v: Option<Vec<f64>> = taus.iter().map(Json::as_f64).collect();
+                Profile::block(v.context("taus must be numbers")?, metric)
+            }
+            DynamicMode::StepBlock => {
+                let mut out = Vec::with_capacity(taus.len());
+                for row in taus {
+                    let row = row.as_arr().context("taus rows must be arrays")?;
+                    let v: Option<Vec<f64>> = row.iter().map(Json::as_f64).collect();
+                    out.push(v.context("taus must be numbers")?);
+                }
+                Profile::step_block(out, metric)
+            }
+        })
+    }
+}
+
+/// Directory-backed profile store: one JSON file per (task, mode, metric).
+pub struct ProfileStore {
+    dir: PathBuf,
+}
+
+impl ProfileStore {
+    pub fn new(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("creating {}", dir.display()))?;
+        Ok(ProfileStore { dir })
+    }
+
+    fn path(&self, task: &str, mode: DynamicMode, metric: Metric) -> PathBuf {
+        self.dir
+            .join(format!("{task}.{}.{}.json", mode.as_str(), metric.as_str()))
+    }
+
+    pub fn save(&self, task: &str, profile: &Profile) -> Result<PathBuf> {
+        let path = self.path(task, profile.mode, profile.metric);
+        let mut doc = profile.to_json();
+        if let Json::Obj(m) = &mut doc {
+            m.insert("task".into(), Json::Str(task.into()));
+        }
+        std::fs::write(&path, format!("{doc}\n"))
+            .with_context(|| format!("writing {}", path.display()))?;
+        Ok(path)
+    }
+
+    pub fn load(&self, task: &str, mode: DynamicMode, metric: Metric) -> Result<Profile> {
+        let path = self.path(task, mode, metric);
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Profile::from_json(&Json::parse(&text)?)
+    }
+
+    pub fn exists(&self, task: &str, mode: DynamicMode, metric: Metric) -> bool {
+        self.path(task, mode, metric).exists()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tau_clamps_block_mode() {
+        let p = Profile::block(vec![0.5, 0.7], Metric::Mean);
+        assert_eq!(p.tau(0, 0), 0.5);
+        assert_eq!(p.tau(1, 3), 0.7);
+        assert_eq!(p.tau(9, 0), 0.7); // clamp to last block
+    }
+
+    #[test]
+    fn tau_clamps_step_block_mode() {
+        let p = Profile::step_block(vec![vec![0.3, 0.6], vec![0.9]], Metric::Q1);
+        assert_eq!(p.tau(0, 0), 0.3);
+        assert_eq!(p.tau(0, 1), 0.6);
+        assert_eq!(p.tau(0, 5), 0.6); // clamp step
+        assert_eq!(p.tau(1, 0), 0.9);
+        assert_eq!(p.tau(5, 5), 0.9); // clamp block then step
+    }
+
+    #[test]
+    fn empty_profile_is_permissive() {
+        let p = Profile::block(vec![], Metric::Mean);
+        assert_eq!(p.tau(0, 0), 0.0);
+        let q = Profile::step_block(vec![vec![]], Metric::Mean);
+        assert_eq!(q.tau(0, 0), 0.0);
+    }
+
+    #[test]
+    fn json_roundtrip_block() {
+        let p = Profile::block(vec![0.25, 0.5, 0.75], Metric::Q3);
+        let back = Profile::from_json(&p.to_json()).unwrap();
+        assert_eq!(p, back);
+    }
+
+    #[test]
+    fn json_roundtrip_step_block() {
+        let p = Profile::step_block(
+            vec![vec![0.1, 0.2], vec![0.3], vec![]],
+            Metric::MinWhisker,
+        );
+        let back = Profile::from_json(&p.to_json()).unwrap();
+        assert_eq!(p, back);
+    }
+
+    #[test]
+    fn store_roundtrip() {
+        let dir = std::env::temp_dir().join(format!(
+            "osdt_profile_test_{}",
+            std::process::id()
+        ));
+        let store = ProfileStore::new(&dir).unwrap();
+        let p = Profile::block(vec![0.6, 0.7, 0.8], Metric::Q1);
+        assert!(!store.exists("synth-math", DynamicMode::Block, Metric::Q1));
+        store.save("synth-math", &p).unwrap();
+        assert!(store.exists("synth-math", DynamicMode::Block, Metric::Q1));
+        let back = store
+            .load("synth-math", DynamicMode::Block, Metric::Q1)
+            .unwrap();
+        assert_eq!(p, back);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn from_json_rejects_malformed() {
+        for bad in [
+            r#"{"mode":"spiral","metric":"q1","taus":[]}"#,
+            r#"{"mode":"block","metric":"zzz","taus":[]}"#,
+            r#"{"mode":"block","metric":"q1","taus":["a"]}"#,
+            r#"{"mode":"block","metric":"q1"}"#,
+        ] {
+            let j = Json::parse(bad).unwrap();
+            assert!(Profile::from_json(&j).is_err(), "{bad}");
+        }
+    }
+}

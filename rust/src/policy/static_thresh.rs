@@ -1,0 +1,87 @@
+//! Fast-dLLM fixed-threshold baseline: commit every masked position whose
+//! confidence exceeds a single static global τ (the paper compares against
+//! τ = 0.9).
+
+use super::{Policy, StepContext};
+
+#[derive(Clone, Debug)]
+pub struct StaticThreshold {
+    tau: f64,
+}
+
+impl StaticThreshold {
+    pub fn new(tau: f64) -> Self {
+        assert!((0.0..=1.0).contains(&tau), "tau must be in [0,1]");
+        StaticThreshold { tau }
+    }
+
+    pub fn tau(&self) -> f64 {
+        self.tau
+    }
+}
+
+impl Policy for StaticThreshold {
+    fn select_raw(&self, ctx: &StepContext) -> Vec<usize> {
+        (0..ctx.conf.len())
+            .filter(|&i| f64::from(ctx.conf[i]) > self.tau)
+            .collect()
+    }
+
+    fn name(&self) -> String {
+        format!("static-tau{}", self.tau)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, rng::Rng};
+
+    #[test]
+    fn selects_above_threshold() {
+        let p = StaticThreshold::new(0.5);
+        let ctx = StepContext { block: 0, step: 0, conf: &[0.4, 0.6, 0.5, 0.9] };
+        assert_eq!(p.select(&ctx), vec![1, 3]); // 0.5 is NOT > 0.5
+    }
+
+    #[test]
+    fn fallback_when_none_above() {
+        let p = StaticThreshold::new(0.95);
+        let ctx = StepContext { block: 0, step: 0, conf: &[0.4, 0.6, 0.5] };
+        assert_eq!(p.select(&ctx), vec![1]);
+    }
+
+    #[test]
+    fn prop_selected_iff_above_tau_or_fallback() {
+        prop::forall(
+            "static-selection-rule",
+            200,
+            |r: &mut Rng| {
+                let tau = r.next_f64();
+                let conf: Vec<f32> = prop::gen_f64_vec(r, 1, 50, 0.0, 1.0)
+                    .into_iter()
+                    .map(|x| x as f32)
+                    .collect();
+                (tau, conf)
+            },
+            |(tau, conf)| {
+                let p = StaticThreshold::new(*tau);
+                let sel = p.select(&StepContext { block: 0, step: 0, conf });
+                if sel.is_empty() {
+                    return Err("liveness violated".into());
+                }
+                let above: Vec<usize> = (0..conf.len())
+                    .filter(|&i| f64::from(conf[i]) > *tau)
+                    .collect();
+                if above.is_empty() {
+                    if sel.len() != 1 || conf[sel[0]] < conf.iter().cloned().fold(f32::MIN, f32::max) {
+                        return Err("fallback must pick the max".into());
+                    }
+                } else if sel != above {
+                    return Err(format!("sel {sel:?} != above {above:?}"));
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,112 @@
+//! LLaDA-style sequential baseline: a fixed quota of k positions per step,
+//! chosen by highest confidence. k=1 is strictly sequential unmasking; the
+//! paper's fixed-step schedules correspond to k = block_len / steps.
+
+use super::{Policy, StepContext};
+
+#[derive(Clone, Debug)]
+pub struct SequentialTopK {
+    k: usize,
+}
+
+impl SequentialTopK {
+    pub fn new(k: usize) -> Self {
+        assert!(k >= 1, "k must be >= 1");
+        SequentialTopK { k }
+    }
+}
+
+impl Policy for SequentialTopK {
+    fn select_raw(&self, ctx: &StepContext) -> Vec<usize> {
+        let n = ctx.conf.len();
+        if n == 0 {
+            return vec![];
+        }
+        let k = self.k.min(n);
+        // indices sorted by confidence descending (stable on ties: lower
+        // index wins, keeping decode deterministic)
+        let mut idx: Vec<usize> = (0..n).collect();
+        idx.sort_by(|&a, &b| {
+            ctx.conf[b]
+                .partial_cmp(&ctx.conf[a])
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(&b))
+        });
+        idx.truncate(k);
+        idx
+    }
+
+    fn name(&self) -> String {
+        format!("sequential-top{}", self.k)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, rng::Rng};
+
+    fn ctx(conf: &[f32]) -> StepContext<'_> {
+        StepContext { block: 0, step: 0, conf }
+    }
+
+    #[test]
+    fn picks_top1() {
+        let p = SequentialTopK::new(1);
+        assert_eq!(p.select(&ctx(&[0.2, 0.9, 0.5])), vec![1]);
+    }
+
+    #[test]
+    fn picks_topk_in_confidence_order() {
+        let p = SequentialTopK::new(2);
+        assert_eq!(p.select(&ctx(&[0.2, 0.9, 0.5, 0.8])), vec![1, 3]);
+    }
+
+    #[test]
+    fn k_larger_than_remaining() {
+        let p = SequentialTopK::new(10);
+        let mut got = p.select(&ctx(&[0.2, 0.9]));
+        got.sort_unstable();
+        assert_eq!(got, vec![0, 1]);
+    }
+
+    #[test]
+    fn ties_break_toward_lower_index() {
+        let p = SequentialTopK::new(1);
+        assert_eq!(p.select(&ctx(&[0.5, 0.5, 0.5])), vec![0]);
+    }
+
+    #[test]
+    fn prop_always_selects_exactly_min_k_n() {
+        prop::forall(
+            "topk-cardinality",
+            200,
+            |r: &mut Rng| {
+                let k = 1 + r.below(8) as usize;
+                let conf = prop::gen_f64_vec(r, 1, 40, 0.0, 1.0)
+                    .into_iter()
+                    .map(|x| x as f32)
+                    .collect::<Vec<_>>();
+                (k, conf)
+            },
+            |(k, conf)| {
+                let p = SequentialTopK::new(*k);
+                let sel = p.select(&StepContext { block: 0, step: 0, conf });
+                if sel.len() != (*k).min(conf.len()) {
+                    return Err(format!("|S|={} want {}", sel.len(), k.min(&conf.len())));
+                }
+                // selected confidences dominate unselected ones
+                let min_sel = sel
+                    .iter()
+                    .map(|&i| conf[i])
+                    .fold(f32::INFINITY, f32::min);
+                for (i, &c) in conf.iter().enumerate() {
+                    if !sel.contains(&i) && c > min_sel {
+                        return Err(format!("unselected {i} has conf {c} > {min_sel}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

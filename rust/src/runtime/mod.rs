@@ -1,0 +1,347 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts, compiles them on the CPU
+//! PJRT client, keeps the model weights resident as device buffers, and
+//! exposes typed forward-pass entry points to the decode engine.
+//!
+//! Adapted from /opt/xla-example/load_hlo: HLO **text** -> `HloModuleProto`
+//! -> `XlaComputation` -> `client.compile`. All execution goes through
+//! `execute_b` (device buffers) so weights are uploaded exactly once.
+//!
+//! One `ModelRuntime` is *not* Sync; each engine worker thread owns its own
+//! (the PJRT CPU client is cheap and executables compile in milliseconds).
+
+pub mod weights;
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::ModelConfig;
+use weights::Tensor;
+
+/// Forward-pass result for a batch: per-sequence confidence and candidate
+/// token arrays over the full sequence (or window).
+#[derive(Clone, Debug)]
+pub struct ConfOut {
+    pub conf: Vec<Vec<f32>>,
+    pub argmax: Vec<Vec<u32>>,
+}
+
+/// Host-side copy of the dual KV cache (layers, heads, seq, head_dim) —
+/// opaque to callers; produced by `fwd_full_kv`, consumed by `fwd_window`.
+#[derive(Clone, Debug)]
+pub struct KvCache {
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+    pub dims: [usize; 4],
+}
+
+/// Counters the perf pass and benches read.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RuntimeStats {
+    pub fwd_calls: u64,
+    pub fwd_full_kv_calls: u64,
+    pub fwd_window_calls: u64,
+    pub exec_micros: u64,
+    pub transfer_micros: u64,
+}
+
+pub struct ModelRuntime {
+    client: xla::PjRtClient,
+    cfg: ModelConfig,
+    /// weight tensors resident on device, in frozen param order
+    weight_bufs: Vec<xla::PjRtBuffer>,
+    executables: BTreeMap<String, xla::PjRtLoadedExecutable>,
+    /// batch sizes with a compiled fwd_conf variant, ascending
+    conf_batches: Vec<usize>,
+    stats: std::cell::Cell<RuntimeStats>,
+}
+
+impl ModelRuntime {
+    /// Load weights + compile every variant listed in model_config.json.
+    pub fn load(cfg: &ModelConfig) -> Result<Self> {
+        let t0 = Instant::now();
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+
+        let tensors = weights::load_weights(cfg.weights_path())?;
+        let by_name: BTreeMap<&str, &Tensor> =
+            tensors.iter().map(|t| (t.name.as_str(), t)).collect();
+        let mut weight_bufs = Vec::with_capacity(cfg.param_order.len());
+        for name in &cfg.param_order {
+            let t = by_name
+                .get(name.as_str())
+                .with_context(|| format!("weights.bin missing tensor {name}"))?;
+            let buf = client
+                .buffer_from_host_buffer::<f32>(&t.data, &t.shape, None)
+                .with_context(|| format!("uploading {name}"))?;
+            weight_bufs.push(buf);
+        }
+
+        let mut executables = BTreeMap::new();
+        let mut conf_batches = Vec::new();
+        for (name, v) in &cfg.variants {
+            let path = cfg.hlo_path(v);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compiling variant {name}"))?;
+            executables.insert(name.clone(), exe);
+            if let Some(b) = name.strip_prefix("fwd_conf_b") {
+                conf_batches.push(b.parse::<usize>().context("variant batch suffix")?);
+            }
+        }
+        conf_batches.sort_unstable();
+        if conf_batches.is_empty() {
+            bail!("no fwd_conf_b* variants in model_config.json");
+        }
+        log::info!(
+            "runtime ready: {} weights, {} variants, {:.2}s",
+            weight_bufs.len(),
+            executables.len(),
+            t0.elapsed().as_secs_f64()
+        );
+        Ok(ModelRuntime {
+            client,
+            cfg: cfg.clone(),
+            weight_bufs,
+            executables,
+            conf_batches,
+            stats: std::cell::Cell::new(RuntimeStats::default()),
+        })
+    }
+
+    pub fn config(&self) -> &ModelConfig {
+        &self.cfg
+    }
+
+    pub fn stats(&self) -> RuntimeStats {
+        self.stats.get()
+    }
+
+    /// Largest compiled fwd_conf batch size.
+    pub fn max_batch(&self) -> usize {
+        *self.conf_batches.last().unwrap()
+    }
+
+    /// Smallest compiled batch size that fits `n` sequences.
+    pub fn pick_batch(&self, n: usize) -> usize {
+        self.conf_batches
+            .iter()
+            .copied()
+            .find(|&b| b >= n)
+            .unwrap_or_else(|| self.max_batch())
+    }
+
+    fn bump(&self, f: impl FnOnce(&mut RuntimeStats)) {
+        let mut s = self.stats.get();
+        f(&mut s);
+        self.stats.set(s);
+    }
+
+    fn exe(&self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        self.executables
+            .get(name)
+            .with_context(|| format!("variant {name} not loaded"))
+    }
+
+    fn tokens_buffer(&self, flat: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer::<i32>(flat, dims, None)
+            .context("uploading tokens")
+    }
+
+    /// Run one executable over weights ++ extra args; returns the
+    /// decomposed output tuple as host literals.
+    fn run(&self, name: &str, extra: &[xla::PjRtBuffer]) -> Result<Vec<xla::Literal>> {
+        let exe = self.exe(name)?;
+        let mut args: Vec<&xla::PjRtBuffer> = self.weight_bufs.iter().collect();
+        args.extend(extra.iter());
+        let t0 = Instant::now();
+        let result = exe
+            .execute_b(&args)
+            .with_context(|| format!("executing {name}"))?;
+        let exec_us = t0.elapsed().as_micros() as u64;
+        let t1 = Instant::now();
+        let lit = result[0][0]
+            .to_literal_sync()
+            .context("fetching output tuple")?;
+        let parts = lit.to_tuple().context("decomposing output tuple")?;
+        let transfer_us = t1.elapsed().as_micros() as u64;
+        self.bump(|s| {
+            s.exec_micros += exec_us;
+            s.transfer_micros += transfer_us;
+        });
+        Ok(parts)
+    }
+
+    /// Full forward over a batch of token sequences (each of len seq_len):
+    /// per-position confidence + greedy candidate. `batch` may be any size
+    /// up to `max_batch`; sequences are padded to the compiled batch shape
+    /// and the padding rows are dropped from the output.
+    pub fn fwd_conf(&self, batch_tokens: &[Vec<u32>]) -> Result<ConfOut> {
+        let n = batch_tokens.len();
+        if n == 0 {
+            return Ok(ConfOut { conf: vec![], argmax: vec![] });
+        }
+        let s = self.cfg.seq_len;
+        let b = self.pick_batch(n);
+        if n > b {
+            bail!("batch {n} exceeds max compiled batch {b}");
+        }
+        let mut flat = Vec::with_capacity(b * s);
+        for seq in batch_tokens {
+            if seq.len() != s {
+                bail!("sequence length {} != {s}", seq.len());
+            }
+            flat.extend(seq.iter().map(|&t| t as i32));
+        }
+        flat.resize(b * s, self.cfg.pad_id as i32); // padding rows
+        let tok_buf = self.tokens_buffer(&flat, &[b, s])?;
+        let parts = self.run(&format!("fwd_conf_b{b}"), &[tok_buf])?;
+        self.bump(|st| st.fwd_calls += 1);
+        let (conf, argmax) = unpack_conf(&parts, n, s)?;
+        Ok(ConfOut { conf, argmax })
+    }
+
+    /// Block-boundary forward (batch 1): conf/argmax plus refreshed dual
+    /// KV cache.
+    pub fn fwd_full_kv(&self, tokens: &[u32]) -> Result<(ConfOut, KvCache)> {
+        let s = self.cfg.seq_len;
+        if tokens.len() != s {
+            bail!("sequence length {} != {s}", tokens.len());
+        }
+        let flat: Vec<i32> = tokens.iter().map(|&t| t as i32).collect();
+        let tok_buf = self.tokens_buffer(&flat, &[1, s])?;
+        let parts = self.run("fwd_full_kv_b1", &[tok_buf])?;
+        if parts.len() != 4 {
+            bail!("fwd_full_kv output arity {} != 4", parts.len());
+        }
+        self.bump(|st| st.fwd_full_kv_calls += 1);
+        let (conf, argmax) = unpack_conf(&parts[..2], 1, s)?;
+        let dims = [
+            self.cfg.n_layers,
+            self.cfg.n_heads,
+            s,
+            self.cfg.head_dim,
+        ];
+        let kv = KvCache {
+            k: parts[2].to_vec::<f32>().context("k_cache")?,
+            v: parts[3].to_vec::<f32>().context("v_cache")?,
+            dims,
+        };
+        let want: usize = dims.iter().product();
+        if kv.k.len() != want || kv.v.len() != want {
+            bail!("kv cache size {} != {want}", kv.k.len());
+        }
+        Ok((ConfOut { conf, argmax }, kv))
+    }
+
+    /// Within-block forward (batch 1): recompute only the `block_len`
+    /// window at absolute position `start`, attending against the cache.
+    pub fn fwd_window(
+        &self,
+        window_tokens: &[u32],
+        start: usize,
+        cache: &KvCache,
+    ) -> Result<ConfOut> {
+        let w = self.cfg.block_len;
+        if window_tokens.len() != w {
+            bail!("window length {} != {w}", window_tokens.len());
+        }
+        let flat: Vec<i32> = window_tokens.iter().map(|&t| t as i32).collect();
+        let tok_buf = self.tokens_buffer(&flat, &[1, w])?;
+        let start_buf = self
+            .client
+            .buffer_from_host_buffer::<i32>(&[start as i32], &[], None)
+            .context("uploading start scalar")?;
+        let k_buf = self
+            .client
+            .buffer_from_host_buffer::<f32>(&cache.k, &cache.dims, None)
+            .context("uploading k cache")?;
+        let v_buf = self
+            .client
+            .buffer_from_host_buffer::<f32>(&cache.v, &cache.dims, None)
+            .context("uploading v cache")?;
+        let parts = self.run("fwd_window_b1", &[tok_buf, start_buf, k_buf, v_buf])?;
+        self.bump(|st| st.fwd_window_calls += 1);
+        let (conf, argmax) = unpack_conf(&parts, 1, w)?;
+        Ok(ConfOut { conf, argmax })
+    }
+
+    /// Debug entry: full logits for one sequence, row-major (seq, vocab).
+    pub fn logits(&self, tokens: &[u32]) -> Result<Vec<f32>> {
+        let s = self.cfg.seq_len;
+        if tokens.len() != s {
+            bail!("sequence length {} != {s}", tokens.len());
+        }
+        let flat: Vec<i32> = tokens.iter().map(|&t| t as i32).collect();
+        let tok_buf = self.tokens_buffer(&flat, &[1, s])?;
+        let parts = self.run("logits_b1", &[tok_buf])?;
+        parts[0].to_vec::<f32>().context("logits payload")
+    }
+}
+
+/// Split (conf f32[B,S], argmax i32[B,S]) literals into per-sequence rows,
+/// keeping only the first `n` rows (the rest is batch padding).
+fn unpack_conf(
+    parts: &[xla::Literal],
+    n: usize,
+    s: usize,
+) -> Result<(Vec<Vec<f32>>, Vec<Vec<u32>>)> {
+    if parts.len() < 2 {
+        bail!("expected (conf, argmax) outputs, got {}", parts.len());
+    }
+    let conf_flat = parts[0].to_vec::<f32>().context("conf payload")?;
+    let arg_flat = parts[1].to_vec::<i32>().context("argmax payload")?;
+    if conf_flat.len() < n * s || arg_flat.len() < n * s {
+        bail!(
+            "conf/argmax payload too small: {} / {} < {}",
+            conf_flat.len(),
+            arg_flat.len(),
+            n * s
+        );
+    }
+    let conf = (0..n)
+        .map(|i| conf_flat[i * s..(i + 1) * s].to_vec())
+        .collect();
+    let argmax = (0..n)
+        .map(|i| {
+            arg_flat[i * s..(i + 1) * s]
+                .iter()
+                .map(|&x| x as u32)
+                .collect()
+        })
+        .collect();
+    Ok((conf, argmax))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unpack_conf_splits_rows() {
+        let conf = xla::Literal::vec1(&[0.1f32, 0.2, 0.3, 0.4]);
+        let arg = xla::Literal::vec1(&[1i32, 2, 3, 4]);
+        let (c, a) = unpack_conf(&[conf, arg], 2, 2).unwrap();
+        assert_eq!(c, vec![vec![0.1, 0.2], vec![0.3, 0.4]]);
+        assert_eq!(a, vec![vec![1, 2], vec![3, 4]]);
+    }
+
+    #[test]
+    fn unpack_conf_drops_padding_rows() {
+        let conf = xla::Literal::vec1(&[0.1f32, 0.2, 0.3, 0.4]);
+        let arg = xla::Literal::vec1(&[1i32, 2, 3, 4]);
+        let (c, _) = unpack_conf(&[conf, arg], 1, 2).unwrap();
+        assert_eq!(c, vec![vec![0.1, 0.2]]);
+    }
+
+    #[test]
+    fn unpack_conf_rejects_short_payload() {
+        let conf = xla::Literal::vec1(&[0.1f32]);
+        let arg = xla::Literal::vec1(&[1i32]);
+        assert!(unpack_conf(&[conf, arg], 1, 2).is_err());
+    }
+}

@@ -1,0 +1,178 @@
+//! Loader for the `OSDTW001` tensor container emitted by
+//! `python/compile/aot.py::write_weights_bin`.
+//!
+//! Format (little-endian):
+//!   magic    8 bytes  "OSDTW001"
+//!   count    u32
+//!   repeat count times:
+//!     name_len u32, name bytes (utf-8)
+//!     dtype    u8   (0 = f32; the only dtype this model uses)
+//!     ndim     u8
+//!     dims     u32 * ndim
+//!     payload  f32 * prod(dims), C order
+
+use std::io::Read;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// One named tensor.
+#[derive(Clone, Debug)]
+pub struct Tensor {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product::<usize>().max(
+            // scalars: ndim == 0 -> one element
+            if self.shape.is_empty() { 1 } else { 0 },
+        )
+    }
+}
+
+/// All tensors in file order (which is the frozen `param_order`).
+pub fn load_weights(path: impl AsRef<Path>) -> Result<Vec<Tensor>> {
+    let path = path.as_ref();
+    let bytes = std::fs::read(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    parse_weights(&bytes).with_context(|| format!("parsing {}", path.display()))
+}
+
+pub fn parse_weights(bytes: &[u8]) -> Result<Vec<Tensor>> {
+    let mut r = bytes;
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic).context("truncated magic")?;
+    if &magic != b"OSDTW001" {
+        bail!("bad magic {:?}", String::from_utf8_lossy(&magic));
+    }
+    let count = read_u32(&mut r)? as usize;
+    if count > 100_000 {
+        bail!("implausible tensor count {count}");
+    }
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        let name_len = read_u32(&mut r)? as usize;
+        if name_len > 4096 {
+            bail!("implausible name length {name_len}");
+        }
+        let mut name = vec![0u8; name_len];
+        r.read_exact(&mut name).context("truncated name")?;
+        let name = String::from_utf8(name).context("name not utf-8")?;
+        let mut head = [0u8; 2];
+        r.read_exact(&mut head).context("truncated header")?;
+        let (dtype, ndim) = (head[0], head[1] as usize);
+        if dtype != 0 {
+            bail!("tensor {name}: unsupported dtype code {dtype}");
+        }
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(read_u32(&mut r)? as usize);
+        }
+        let n: usize = if shape.is_empty() { 1 } else { shape.iter().product() };
+        if n > 1 << 28 {
+            bail!("tensor {name}: implausible element count {n}");
+        }
+        let mut payload = vec![0u8; 4 * n];
+        r.read_exact(&mut payload)
+            .with_context(|| format!("truncated payload for {name}"))?;
+        let data: Vec<f32> = payload
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        out.push(Tensor { name, shape, data });
+    }
+    if !r.is_empty() {
+        bail!("{} trailing bytes after last tensor", r.len());
+    }
+    Ok(out)
+}
+
+fn read_u32(r: &mut &[u8]) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b).context("truncated u32")?;
+    Ok(u32::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Mirror of the python writer, for roundtrip tests.
+    pub fn write_weights(tensors: &[Tensor]) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(b"OSDTW001");
+        out.extend_from_slice(&(tensors.len() as u32).to_le_bytes());
+        for t in tensors {
+            out.extend_from_slice(&(t.name.len() as u32).to_le_bytes());
+            out.extend_from_slice(t.name.as_bytes());
+            out.push(0);
+            out.push(t.shape.len() as u8);
+            for &d in &t.shape {
+                out.extend_from_slice(&(d as u32).to_le_bytes());
+            }
+            for &x in &t.data {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        out
+    }
+
+    fn demo() -> Vec<Tensor> {
+        vec![
+            Tensor {
+                name: "a".into(),
+                shape: vec![2, 3],
+                data: vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0],
+            },
+            Tensor { name: "scalar".into(), shape: vec![], data: vec![7.5] },
+        ]
+    }
+
+    #[test]
+    fn roundtrip() {
+        let bytes = write_weights(&demo());
+        let back = parse_weights(&bytes).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back[0].name, "a");
+        assert_eq!(back[0].shape, vec![2, 3]);
+        assert_eq!(back[0].data, demo()[0].data);
+        assert_eq!(back[1].shape, Vec::<usize>::new());
+        assert_eq!(back[1].element_count(), 1);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let mut bytes = write_weights(&demo());
+        bytes[0] = b'X';
+        assert!(parse_weights(&bytes).is_err());
+    }
+
+    #[test]
+    fn rejects_truncation() {
+        let bytes = write_weights(&demo());
+        for cut in [4, 11, 13, 20, bytes.len() - 1] {
+            assert!(parse_weights(&bytes[..cut]).is_err(), "cut {cut}");
+        }
+    }
+
+    #[test]
+    fn rejects_trailing_garbage() {
+        let mut bytes = write_weights(&demo());
+        bytes.push(0);
+        assert!(parse_weights(&bytes).is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_dtype() {
+        let mut t = demo();
+        t.truncate(1);
+        let mut bytes = write_weights(&t);
+        // dtype byte is right after magic+count+name_len+name
+        let idx = 8 + 4 + 4 + 1;
+        bytes[idx] = 9;
+        assert!(parse_weights(&bytes).is_err());
+    }
+}

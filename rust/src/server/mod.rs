@@ -1,0 +1,371 @@
+//! TCP JSON-line serving front-end + client library.
+//!
+//! Wire protocol (one JSON object per line, both directions):
+//!
+//! ```text
+//! -> {"task":"synth-math","prompt":"Q: 3+4=?","policy":"osdt:block:q1:0.75:0.2"}
+//! <- {"id":1,"completion":"A: 3+4=7. #### 7","steps":9,"latency_ms":52.1,
+//!     "tokens_per_sec":1843.2,"full_passes":9,"window_passes":0,
+//!     "calibrated":false}
+//! -> {"cmd":"metrics"}
+//! <- {"metrics":"osdt_requests_completed_total 12\n..."}
+//! -> {"cmd":"ping"}
+//! <- {"pong":true}
+//! ```
+//!
+//! Built on std::net + threads (the offline registry has no tokio); one
+//! thread per connection, responses written in completion order per
+//! connection.
+
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::{Coordinator, Request, Response};
+use crate::util::json::Json;
+
+/// Serialize a coordinator response to its wire form.
+pub fn response_to_json(r: &Response) -> Json {
+    let mut pairs = vec![
+        ("id", Json::Num(r.id as f64)),
+        ("completion", Json::Str(r.completion.clone())),
+        ("steps", Json::Num(r.steps as f64)),
+        ("full_passes", Json::Num(r.full_passes as f64)),
+        ("window_passes", Json::Num(r.window_passes as f64)),
+        ("latency_ms", Json::Num(r.latency_ms)),
+        ("tokens_per_sec", Json::Num(r.tokens_per_sec)),
+        ("calibrated", Json::Bool(r.calibrated)),
+    ];
+    if let Some(e) = &r.error {
+        pairs.push(("error", Json::Str(e.clone())));
+    }
+    Json::obj(pairs)
+}
+
+/// Parse a wire response back into a [`Response`] (client side).
+pub fn response_from_json(j: &Json) -> Result<Response> {
+    let num = |k: &str| -> Result<f64> {
+        j.req(k)
+            .map_err(anyhow::Error::msg)?
+            .as_f64()
+            .with_context(|| format!("{k} not a number"))
+    };
+    Ok(Response {
+        id: num("id")? as u64,
+        completion: j
+            .req("completion")
+            .map_err(anyhow::Error::msg)?
+            .as_str()
+            .context("completion not a string")?
+            .to_string(),
+        steps: num("steps")? as usize,
+        full_passes: num("full_passes")? as usize,
+        window_passes: num("window_passes")? as usize,
+        latency_ms: num("latency_ms")?,
+        tokens_per_sec: num("tokens_per_sec")?,
+        calibrated: j
+            .get("calibrated")
+            .and_then(Json::as_bool)
+            .unwrap_or(false),
+        error: j.get("error").and_then(Json::as_str).map(str::to_string),
+    })
+}
+
+/// A running server; dropping/`stop()` halts the accept loop.
+pub struct Server {
+    pub addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind `addr` (use port 0 for an ephemeral port) and serve requests on
+    /// `coordinator` until stopped.
+    pub fn start(addr: &str, coordinator: Arc<Coordinator>) -> Result<Server> {
+        let listener = TcpListener::bind(addr)
+            .with_context(|| format!("binding {addr}"))?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let handle = std::thread::Builder::new()
+            .name("osdt-accept".into())
+            .spawn(move || {
+                log::info!("server listening on {local}");
+                while !stop2.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, peer)) => {
+                            log::debug!("connection from {peer}");
+                            let coord = coordinator.clone();
+                            let _ = std::thread::Builder::new()
+                                .name("osdt-conn".into())
+                                .spawn(move || {
+                                    if let Err(e) = handle_conn(stream, &coord) {
+                                        log::debug!("connection ended: {e:#}");
+                                    }
+                                });
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(std::time::Duration::from_millis(5));
+                        }
+                        Err(e) => {
+                            log::warn!("accept error: {e}");
+                            break;
+                        }
+                    }
+                }
+            })?;
+        Ok(Server { addr: local, stop, accept_handle: Some(handle) })
+    }
+
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.accept_handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.accept_handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn handle_conn(stream: TcpStream, coord: &Coordinator) -> Result<()> {
+    let reader = BufReader::new(stream.try_clone()?);
+    let mut writer = BufWriter::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let reply = match Json::parse(&line) {
+            Err(e) => Json::obj(vec![("error", Json::Str(format!("bad json: {e}")))]),
+            Ok(j) => {
+                if let Some(cmd) = j.get("cmd").and_then(Json::as_str) {
+                    match cmd {
+                        "ping" => Json::obj(vec![("pong", Json::Bool(true))]),
+                        "metrics" => Json::obj(vec![(
+                            "metrics",
+                            Json::Str(coord.metrics.render()),
+                        )]),
+                        other => Json::obj(vec![(
+                            "error",
+                            Json::Str(format!("unknown cmd {other:?}")),
+                        )]),
+                    }
+                } else {
+                    match request_from_json(&j) {
+                        Err(e) => {
+                            Json::obj(vec![("error", Json::Str(format!("{e:#}")))])
+                        }
+                        Ok(req) => {
+                            let rx = coord.submit(req);
+                            match rx.recv() {
+                                Ok(resp) => response_to_json(&resp),
+                                Err(_) => Json::obj(vec![(
+                                    "error",
+                                    Json::Str("coordinator shut down".into()),
+                                )]),
+                            }
+                        }
+                    }
+                }
+            }
+        };
+        writeln!(writer, "{reply}")?;
+        writer.flush()?;
+    }
+    Ok(())
+}
+
+fn request_from_json(j: &Json) -> Result<Request> {
+    let s = |k: &str| -> Result<String> {
+        j.req(k)
+            .map_err(anyhow::Error::msg)?
+            .as_str()
+            .map(str::to_string)
+            .with_context(|| format!("{k} not a string"))
+    };
+    Ok(Request {
+        id: j.get("id").and_then(Json::as_f64).unwrap_or(0.0) as u64,
+        task: s("task")?,
+        prompt: s("prompt")?,
+        policy: s("policy")?,
+    })
+}
+
+/// Blocking line-protocol client.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+}
+
+impl Client {
+    pub fn connect(addr: impl std::net::ToSocketAddrs) -> Result<Client> {
+        let stream = TcpStream::connect(addr).context("connecting")?;
+        stream.set_nodelay(true).ok();
+        Ok(Client {
+            reader: BufReader::new(stream.try_clone()?),
+            writer: BufWriter::new(stream),
+        })
+    }
+
+    fn roundtrip(&mut self, msg: &Json) -> Result<Json> {
+        writeln!(self.writer, "{msg}")?;
+        self.writer.flush()?;
+        let mut line = String::new();
+        if self.reader.read_line(&mut line)? == 0 {
+            bail!("server closed the connection");
+        }
+        Ok(Json::parse(&line)?)
+    }
+
+    pub fn ping(&mut self) -> Result<bool> {
+        let j = self.roundtrip(&Json::obj(vec![("cmd", Json::Str("ping".into()))]))?;
+        Ok(j.get("pong").and_then(Json::as_bool).unwrap_or(false))
+    }
+
+    pub fn metrics(&mut self) -> Result<String> {
+        let j =
+            self.roundtrip(&Json::obj(vec![("cmd", Json::Str("metrics".into()))]))?;
+        Ok(j.get("metrics")
+            .and_then(Json::as_str)
+            .unwrap_or("")
+            .to_string())
+    }
+
+    pub fn generate(&mut self, task: &str, prompt: &str, policy: &str) -> Result<Response> {
+        let msg = Json::obj(vec![
+            ("task", Json::Str(task.into())),
+            ("prompt", Json::Str(prompt.into())),
+            ("policy", Json::Str(policy.into())),
+        ]);
+        let j = self.roundtrip(&msg)?;
+        if j.get("id").is_none() {
+            if let Some(e) = j.get("error").and_then(Json::as_str) {
+                bail!("server error: {e}");
+            }
+        }
+        response_from_json(&j)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::CoordinatorConfig;
+    use crate::model::fixtures::tiny_config;
+    use crate::sim::SimModel;
+
+    fn start_stack() -> (Server, Arc<Coordinator>) {
+        let coord = Arc::new(
+            Coordinator::start(CoordinatorConfig::default(), tiny_config(), |_| {
+                Ok(SimModel::math_like(3))
+            })
+            .unwrap(),
+        );
+        let server = Server::start("127.0.0.1:0", coord.clone()).unwrap();
+        (server, coord)
+    }
+
+    #[test]
+    fn ping_and_metrics() {
+        let (server, _coord) = start_stack();
+        let mut c = Client::connect(server.addr).unwrap();
+        assert!(c.ping().unwrap());
+        // counters appear once a request has flowed through
+        c.generate("synth-math", "Q: 1+1=?", "static:0.9").unwrap();
+        let m = c.metrics().unwrap();
+        assert!(m.contains("osdt_requests_submitted_total"), "{m}");
+        assert!(m.contains("osdt_requests_completed_total 1"), "{m}");
+        server.stop();
+    }
+
+    #[test]
+    fn generate_over_wire() {
+        let (server, _coord) = start_stack();
+        let mut c = Client::connect(server.addr).unwrap();
+        let r = c
+            .generate("synth-math", "Q: 1+2=?", "static:0.9")
+            .unwrap();
+        assert!(r.error.is_none(), "{:?}", r.error);
+        assert!(r.steps > 0);
+        assert!(!r.completion.is_empty());
+        server.stop();
+    }
+
+    #[test]
+    fn malformed_json_gets_error_line() {
+        let (server, _coord) = start_stack();
+        let stream = TcpStream::connect(server.addr).unwrap();
+        let mut w = BufWriter::new(stream.try_clone().unwrap());
+        let mut r = BufReader::new(stream);
+        writeln!(w, "this is not json").unwrap();
+        w.flush().unwrap();
+        let mut line = String::new();
+        r.read_line(&mut line).unwrap();
+        assert!(line.contains("error"), "{line}");
+        server.stop();
+    }
+
+    #[test]
+    fn missing_fields_rejected() {
+        let (server, _coord) = start_stack();
+        let mut c = Client::connect(server.addr).unwrap();
+        let j = c
+            .roundtrip(&Json::obj(vec![("task", Json::Str("synth-math".into()))]))
+            .unwrap();
+        assert!(j.get("error").is_some());
+        server.stop();
+    }
+
+    #[test]
+    fn multiple_clients() {
+        let (server, coord) = start_stack();
+        let addr = server.addr;
+        let mut handles = vec![];
+        for i in 0..4 {
+            handles.push(std::thread::spawn(move || {
+                let mut c = Client::connect(addr).unwrap();
+                let r = c
+                    .generate("synth-math", &format!("Q: {i}+1=?"), "static:0.8")
+                    .unwrap();
+                assert!(r.error.is_none());
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(coord.metrics.counter_value("requests_completed"), 4);
+        server.stop();
+    }
+
+    #[test]
+    fn response_json_roundtrip() {
+        let r = Response {
+            id: 7,
+            completion: "A: #### 5".into(),
+            steps: 12,
+            full_passes: 3,
+            window_passes: 9,
+            latency_ms: 41.5,
+            tokens_per_sec: 2314.0,
+            calibrated: true,
+            error: None,
+        };
+        let back = response_from_json(&response_to_json(&r)).unwrap();
+        assert_eq!(back.id, 7);
+        assert_eq!(back.completion, r.completion);
+        assert_eq!(back.steps, 12);
+        assert!(back.calibrated);
+        assert!(back.error.is_none());
+    }
+}

@@ -1,0 +1,296 @@
+//! Analytic confidence simulator — a deterministic [`ForwardModel`] with
+//! the *structure* the paper observes (Figures 1–2): per-block confidence
+//! that starts low, peaks mid-denoising and dips near block completion, and
+//! trajectories that are near-identical across inputs of the same task.
+//!
+//! Used by unit/property tests of the decode engine and policies (no
+//! artifacts needed) and by the policy-only benches, where thousands of
+//! decodes per second matter. The real-model benches use the PJRT runtime.
+
+use anyhow::Result;
+
+use crate::decode::ForwardModel;
+use crate::model::{fixtures::tiny_config, ModelConfig};
+use crate::runtime::{ConfOut, KvCache};
+
+/// Task-level confidence signature parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct SimTask {
+    /// confidence at the start of a block
+    pub base: f64,
+    /// peak amplitude above base (mid-denoising)
+    pub amp: f64,
+    /// per-position noise amplitude (the instance-level variation; small,
+    /// matching the paper's cosine ≈ 1 observation)
+    pub noise: f64,
+    /// per-block additive offset (blocks differ — the "block-wise
+    /// fluctuation" observation)
+    pub block_offsets: [f64; 3],
+}
+
+/// Deterministic stand-in for the mask predictor.
+#[derive(Clone, Debug)]
+pub struct SimModel {
+    cfg: ModelConfig,
+    task: SimTask,
+    seed: u64,
+}
+
+fn hash2(a: u64, b: u64) -> u64 {
+    let mut x = a
+        .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        .wrapping_add(b)
+        .wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x ^= x >> 31;
+    x = x.wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 29)
+}
+
+impl SimModel {
+    pub fn new(task: SimTask, seed: u64) -> Self {
+        SimModel { cfg: tiny_config(), task, seed }
+    }
+
+    /// GSM8K-analog signature: high peak, moderate base.
+    pub fn math_like(seed: u64) -> Self {
+        SimModel::new(
+            SimTask {
+                base: 0.55,
+                amp: 0.42,
+                noise: 0.03,
+                block_offsets: [0.0, -0.05, -0.1],
+            },
+            seed,
+        )
+    }
+
+    /// GPQA-analog: lower confidence overall, stronger step structure.
+    pub fn qa_like(seed: u64) -> Self {
+        SimModel::new(
+            SimTask {
+                base: 0.4,
+                amp: 0.5,
+                noise: 0.04,
+                block_offsets: [0.05, -0.08, -0.02],
+            },
+            seed,
+        )
+    }
+
+    /// HumanEval-analog: sharp, high-confidence once context builds.
+    pub fn code_like(seed: u64) -> Self {
+        SimModel::new(
+            SimTask {
+                base: 0.5,
+                amp: 0.48,
+                noise: 0.02,
+                block_offsets: [-0.03, 0.0, -0.12],
+            },
+            seed,
+        )
+    }
+
+    /// A fully-masked layout whose prompt region varies with `seed`
+    /// (different "inputs" of the same task).
+    pub fn layout_from_seed(&self, seed: u64) -> Vec<u32> {
+        let cfg = &self.cfg;
+        let mut t = vec![cfg.bos_id];
+        for i in 1..cfg.prompt_len / 2 {
+            // chars live at ids >= 4
+            t.push(4 + (hash2(seed, i as u64) % 60) as u32);
+        }
+        t.resize(cfg.prompt_len, cfg.pad_id);
+        t.resize(cfg.seq_len, cfg.mask_id);
+        t
+    }
+
+    /// Confidence of `pos` given the masked count of its block — the pure
+    /// function both the full and window paths evaluate (which is what
+    /// makes the dual-cache path exact for the simulator).
+    fn conf_at(&self, block: usize, masked_in_block: usize, pos: usize) -> f32 {
+        let progress = 1.0 - masked_in_block as f64 / self.cfg.block_len as f64;
+        let curve = self.task.base
+            + self.task.amp * (std::f64::consts::PI * progress).sin()
+            + self.task.block_offsets[block.min(2)];
+        let n = hash2(self.seed, (pos as u64) << 20 | masked_in_block as u64);
+        let noise = ((n % 10_000) as f64 / 10_000.0 - 0.5) * 2.0 * self.task.noise;
+        (curve + noise).clamp(0.01, 0.999) as f32
+    }
+
+    fn candidate(&self, pos: usize) -> u32 {
+        4 + (hash2(self.seed ^ 0xC0FFEE, pos as u64) % 60) as u32
+    }
+
+    /// conf/argmax over an index range, reading block structure from the
+    /// provided tokens (offset = absolute position of `tokens[0]`).
+    fn score(&self, tokens: &[u32], offset: usize) -> (Vec<f32>, Vec<u32>) {
+        let cfg = &self.cfg;
+        // masked counts per block, computed from whatever slice we see
+        let mut masked = vec![0usize; cfg.num_blocks];
+        for (i, &t) in tokens.iter().enumerate() {
+            let pos = offset + i;
+            if t == cfg.mask_id && pos >= cfg.prompt_len {
+                masked[(pos - cfg.prompt_len) / cfg.block_len] += 1;
+            }
+        }
+        let mut conf = Vec::with_capacity(tokens.len());
+        let mut arg = Vec::with_capacity(tokens.len());
+        for i in 0..tokens.len() {
+            let pos = offset + i;
+            if pos < cfg.prompt_len {
+                conf.push(0.99);
+            } else {
+                let b = (pos - cfg.prompt_len) / cfg.block_len;
+                conf.push(self.conf_at(b, masked[b], pos));
+            }
+            arg.push(self.candidate(pos));
+        }
+        (conf, arg)
+    }
+}
+
+impl ForwardModel for SimModel {
+    fn config(&self) -> &ModelConfig {
+        &self.cfg
+    }
+
+    fn max_batch(&self) -> usize {
+        4
+    }
+
+    fn fwd_conf(&self, batch_tokens: &[Vec<u32>]) -> Result<ConfOut> {
+        let mut conf = Vec::new();
+        let mut argmax = Vec::new();
+        for seq in batch_tokens {
+            let (c, a) = self.score(seq, 0);
+            conf.push(c);
+            argmax.push(a);
+        }
+        Ok(ConfOut { conf, argmax })
+    }
+
+    fn fwd_full_kv(&self, tokens: &[u32]) -> Result<(ConfOut, KvCache)> {
+        let (c, a) = self.score(tokens, 0);
+        let dims = [
+            self.cfg.n_layers,
+            self.cfg.n_heads,
+            self.cfg.seq_len,
+            self.cfg.head_dim,
+        ];
+        // the simulator's "cache" carries no information — its conf is a
+        // pure function of visible tokens
+        let n: usize = dims.iter().product();
+        Ok((
+            ConfOut { conf: vec![c], argmax: vec![a] },
+            KvCache { k: vec![0.0; n], v: vec![0.0; n], dims },
+        ))
+    }
+
+    fn fwd_window(&self, window: &[u32], start: usize, _cache: &KvCache) -> Result<ConfOut> {
+        let (c, a) = self.score(window, start);
+        Ok(ConfOut { conf: vec![c], argmax: vec![a] })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::decode::Engine;
+    use crate::policy::{Calibrator, DynamicMode, Metric, StaticThreshold};
+    use crate::util::stats::cosine;
+
+    #[test]
+    fn deterministic() {
+        let m = SimModel::math_like(3);
+        let l = m.layout_from_seed(5);
+        let a = m.fwd_conf(&[l.clone()]).unwrap();
+        let b = m.fwd_conf(&[l]).unwrap();
+        assert_eq!(a.conf, b.conf);
+        assert_eq!(a.argmax, b.argmax);
+    }
+
+    #[test]
+    fn u_shaped_trajectory() {
+        // decode sequentially and look at the block-0 step means: the mid
+        // region must exceed both ends (paper Figure 1 structure)
+        let m = SimModel::math_like(3);
+        let eng = Engine::new(&m);
+        let res = eng
+            .decode(m.layout_from_seed(1), &crate::policy::SequentialTopK::new(1))
+            .unwrap();
+        let sig = res.trace.signature();
+        let b0 = &sig[..m.config().block_len];
+        let first = b0[0];
+        let mid = b0[b0.len() / 2];
+        let last = b0[b0.len() - 1];
+        assert!(mid > first + 0.1, "mid {mid} !> first {first}");
+        assert!(mid > last + 0.1, "mid {mid} !> last {last}");
+    }
+
+    #[test]
+    fn signatures_near_identical_across_inputs() {
+        // the paper's Figure 2 observation, reproduced in the simulator:
+        // cosine similarity of step-block signatures across inputs ~ 1
+        let m = SimModel::qa_like(9);
+        let eng = Engine::new(&m);
+        let p = StaticThreshold::new(0.9);
+        let sigs: Vec<Vec<f64>> = (0..4)
+            .map(|s| {
+                eng.decode(m.layout_from_seed(s), &p)
+                    .unwrap()
+                    .trace
+                    .signature()
+            })
+            .collect();
+        for i in 0..sigs.len() {
+            for j in (i + 1)..sigs.len() {
+                let n = sigs[i].len().min(sigs[j].len());
+                let c = cosine(&sigs[i][..n], &sigs[j][..n]).unwrap();
+                assert!(c > 0.99, "cosine {c} between {i},{j}");
+            }
+        }
+    }
+
+    #[test]
+    fn calibration_transfers_across_inputs() {
+        // calibrate on input 0; OSDT on input 1 must not be slower than
+        // sequential and must finish (liveness under transferred taus)
+        let m = SimModel::math_like(11);
+        let eng = Engine::new(&m);
+        let cal = eng
+            .decode(m.layout_from_seed(0), &StaticThreshold::new(0.9))
+            .unwrap();
+        let profile =
+            Calibrator::calibrate(&cal.trace, DynamicMode::Block, Metric::Q1);
+        let osdt = crate::policy::Osdt::from_profile(profile, 0.9, 0.1);
+        let res = eng.decode(m.layout_from_seed(1), &osdt).unwrap();
+        assert!(res.steps <= m.config().gen_len);
+        assert!(res.steps >= m.config().num_blocks);
+    }
+
+    #[test]
+    fn tasks_have_distinct_signatures() {
+        let eng_cfgs = [
+            SimModel::math_like(1),
+            SimModel::qa_like(1),
+            SimModel::code_like(1),
+        ];
+        let p = crate::policy::SequentialTopK::new(1);
+        let mut means = vec![];
+        for m in &eng_cfgs {
+            let eng = Engine::new(m);
+            let res = eng.decode(m.layout_from_seed(0), &p).unwrap();
+            let sig = res.trace.signature();
+            means.push(sig.iter().sum::<f64>() / sig.len() as f64);
+        }
+        // the three tasks must be pairwise separated (distinct signatures)
+        for i in 0..3 {
+            for j in (i + 1)..3 {
+                assert!(
+                    (means[i] - means[j]).abs() > 0.01,
+                    "tasks {i},{j} indistinct: {means:?}"
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,167 @@
+//! Character tokenizer — the Rust mirror of `python/compile/vocab.py`,
+//! constructed from the vocab table in `model_config.json` so the two sides
+//! cannot drift.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+use crate::model::ModelConfig;
+
+#[derive(Clone, Debug)]
+pub struct Tokenizer {
+    char_to_id: HashMap<char, u32>,
+    id_to_char: Vec<Option<char>>,
+    pub pad_id: u32,
+    pub mask_id: u32,
+    pub bos_id: u32,
+    pub eos_id: u32,
+    pub vocab_size: usize,
+}
+
+impl Tokenizer {
+    pub fn from_config(cfg: &ModelConfig) -> Result<Self> {
+        let mut char_to_id = HashMap::new();
+        let mut id_to_char = vec![None; cfg.vocab.len()];
+        for (id, surf) in cfg.vocab.iter().enumerate() {
+            if surf.starts_with('[') && surf.ends_with(']') && surf.len() > 2 {
+                continue; // special token
+            }
+            let mut chars = surf.chars();
+            let c = match (chars.next(), chars.next()) {
+                (Some(c), None) => c,
+                _ => bail!("non-special vocab entry {surf:?} is not one char"),
+            };
+            if char_to_id.insert(c, id as u32).is_some() {
+                bail!("duplicate vocab char {c:?}");
+            }
+            id_to_char[id] = Some(c);
+        }
+        Ok(Tokenizer {
+            char_to_id,
+            id_to_char,
+            pad_id: cfg.pad_id,
+            mask_id: cfg.mask_id,
+            bos_id: cfg.bos_id,
+            eos_id: cfg.eos_id,
+            vocab_size: cfg.vocab.len(),
+        })
+    }
+
+    /// Encode text; errors on characters outside the frozen charset.
+    pub fn encode(&self, text: &str) -> Result<Vec<u32>> {
+        text.chars()
+            .map(|c| {
+                self.char_to_id
+                    .get(&c)
+                    .copied()
+                    .ok_or_else(|| anyhow::anyhow!("character {c:?} not in vocab"))
+            })
+            .collect()
+    }
+
+    /// Decode ids, dropping special tokens (PAD/MASK/BOS/EOS and anything
+    /// else without a surface char).
+    pub fn decode(&self, ids: &[u32]) -> String {
+        ids.iter()
+            .filter_map(|&id| self.id_to_char.get(id as usize).copied().flatten())
+            .collect()
+    }
+
+    /// Decode ids, stopping at the first EOS (the visible answer text).
+    pub fn decode_until_eos(&self, ids: &[u32]) -> String {
+        let end = ids
+            .iter()
+            .position(|&id| id == self.eos_id)
+            .unwrap_or(ids.len());
+        self.decode(&ids[..end])
+    }
+
+    /// Build the full fixed-layout sequence for a prompt:
+    /// `[BOS] prompt [PAD]... || [MASK] * gen_len` (mirrors
+    /// `data.encode_example`, with the gen region masked for decoding).
+    pub fn layout_prompt(&self, cfg: &ModelConfig, prompt: &str) -> Result<Vec<u32>> {
+        let mut ids = vec![self.bos_id];
+        ids.extend(self.encode(prompt)?);
+        if ids.len() > cfg.prompt_len {
+            bail!(
+                "prompt too long: {} tokens > {}",
+                ids.len(),
+                cfg.prompt_len
+            );
+        }
+        ids.resize(cfg.prompt_len, self.pad_id);
+        ids.resize(cfg.seq_len, self.mask_id);
+        Ok(ids)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::fixtures::tiny_config;
+
+    fn tok() -> Tokenizer {
+        Tokenizer::from_config(&tiny_config()).unwrap()
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let t = tok();
+        let text = "Q: 17+5-9=? A: ok! (B) <x|y>";
+        let ids = t.encode(text).unwrap();
+        assert_eq!(t.decode(&ids), text);
+    }
+
+    #[test]
+    fn rejects_unknown_chars() {
+        assert!(tok().encode("héllo").is_err());
+        assert!(tok().encode("\n").is_err());
+    }
+
+    #[test]
+    fn decode_skips_specials() {
+        let t = tok();
+        let mut ids = vec![t.bos_id];
+        ids.extend(t.encode("ab").unwrap());
+        ids.push(t.eos_id);
+        ids.push(t.pad_id);
+        assert_eq!(t.decode(&ids), "ab");
+    }
+
+    #[test]
+    fn decode_until_eos_stops() {
+        let t = tok();
+        let mut ids = t.encode("yes").unwrap();
+        ids.push(t.eos_id);
+        ids.extend(t.encode("garbage").unwrap());
+        assert_eq!(t.decode_until_eos(&ids), "yes");
+    }
+
+    #[test]
+    fn layout_prompt_shape() {
+        let cfg = tiny_config();
+        let t = tok();
+        let ids = t.layout_prompt(&cfg, "Q: 1+1=?").unwrap();
+        assert_eq!(ids.len(), cfg.seq_len);
+        assert_eq!(ids[0], t.bos_id);
+        // padding after prompt
+        assert_eq!(ids[cfg.prompt_len - 1], t.pad_id);
+        // gen region fully masked
+        assert!(ids[cfg.prompt_len..].iter().all(|&i| i == t.mask_id));
+    }
+
+    #[test]
+    fn layout_prompt_too_long_rejected() {
+        let cfg = tiny_config();
+        let t = tok();
+        let long = "x".repeat(cfg.prompt_len);
+        assert!(t.layout_prompt(&cfg, &long).is_err());
+    }
+
+    #[test]
+    fn vocab_matches_python_size() {
+        // python vocab.py: 4 specials + 83 chars = 87
+        assert_eq!(tok().vocab_size, 87);
+    }
+}

@@ -1,0 +1,10 @@
+//! Foundation substrates built from scratch for the offline environment
+//! (no serde / rand / proptest / criterion in the vendored registry):
+//! PRNG, JSON, statistics, property testing, logging, timing.
+
+pub mod json;
+pub mod logging;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod timer;

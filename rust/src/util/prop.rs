@@ -1,0 +1,162 @@
+//! Property-testing substrate (the offline registry has no proptest).
+//!
+//! Deterministic: each case derives from a fixed master seed, and failures
+//! report the per-case seed so a counterexample reproduces exactly with
+//! `forall_seeded`. Includes a simple greedy shrinker for cases generated
+//! through `Shrinkable` generators.
+
+use super::rng::Rng;
+
+/// Default number of cases per property.
+pub const DEFAULT_CASES: usize = 128;
+
+/// Run `prop` on `cases` inputs drawn by `gen`. Panics with the case seed
+/// and Debug form of the failing input.
+pub fn forall<T, G, P>(name: &str, cases: usize, gen: G, prop: P)
+where
+    T: std::fmt::Debug,
+    G: Fn(&mut Rng) -> T,
+    P: Fn(&T) -> Result<(), String>,
+{
+    forall_seeded(name, 0xD1F5_u64, cases, gen, prop)
+}
+
+/// As `forall` with an explicit master seed (use the seed printed by a
+/// failure to replay it).
+pub fn forall_seeded<T, G, P>(name: &str, master: u64, cases: usize, gen: G, prop: P)
+where
+    T: std::fmt::Debug,
+    G: Fn(&mut Rng) -> T,
+    P: Fn(&T) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = master
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add(case as u64);
+        let mut rng = Rng::new(seed);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property '{name}' failed on case {case} (seed {seed:#x}):\n  \
+                 input: {input:?}\n  error: {msg}"
+            );
+        }
+    }
+}
+
+/// Run a property over inputs with greedy shrinking: on failure, repeatedly
+/// try the candidates from `shrink` until none fails, then report the local
+/// minimum.
+pub fn forall_shrink<T, G, S, P>(name: &str, cases: usize, gen: G, shrink: S, prop: P)
+where
+    T: std::fmt::Debug + Clone,
+    G: Fn(&mut Rng) -> T,
+    S: Fn(&T) -> Vec<T>,
+    P: Fn(&T) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = 0xBEEF_u64
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add(case as u64);
+        let mut rng = Rng::new(seed);
+        let input = gen(&mut rng);
+        if let Err(first_msg) = prop(&input) {
+            // greedy descent
+            let mut cur = input;
+            let mut msg = first_msg;
+            'outer: loop {
+                for cand in shrink(&cur) {
+                    if let Err(m) = prop(&cand) {
+                        cur = cand;
+                        msg = m;
+                        continue 'outer;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property '{name}' failed on case {case} (seed {seed:#x})\n  \
+                 shrunk input: {cur:?}\n  error: {msg}"
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Common generators
+// ---------------------------------------------------------------------------
+
+/// Vec of f64 in [lo, hi) with length in [min_len, max_len].
+pub fn gen_f64_vec(
+    rng: &mut Rng,
+    min_len: usize,
+    max_len: usize,
+    lo: f64,
+    hi: f64,
+) -> Vec<f64> {
+    let n = rng.range_inclusive(min_len as i64, max_len as i64) as usize;
+    (0..n).map(|_| lo + rng.next_f64() * (hi - lo)).collect()
+}
+
+/// Shrink a vec by halving length and zeroing elements.
+pub fn shrink_vec<T: Clone + Default>(v: &[T]) -> Vec<Vec<T>> {
+    let mut out = Vec::new();
+    if !v.is_empty() {
+        out.push(v[..v.len() / 2].to_vec());
+        out.push(v[1..].to_vec());
+        let mut z = v.to_vec();
+        z[0] = T::default();
+        if v.len() > 1 {
+            out.push(z);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        forall("sum-commutes", 64, |r| (r.below(100), r.below(100)), |&(a, b)| {
+            if a + b == b + a {
+                Ok(())
+            } else {
+                Err("math broke".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_panics_with_context() {
+        forall("always-fails", 8, |r| r.below(10), |_| Err("nope".into()));
+    }
+
+    #[test]
+    #[should_panic(expected = "shrunk input: []")]
+    fn shrinker_reaches_minimal_case() {
+        // fails for every vec (incl. empty) -> shrinker must reach []
+        forall_shrink(
+            "shrinks-to-empty",
+            4,
+            |r| gen_f64_vec(r, 3, 10, 0.0, 1.0),
+            |v| shrink_vec(v),
+            |_| Err("always".into()),
+        );
+    }
+
+    #[test]
+    fn generators_respect_bounds() {
+        forall("gen-bounds", 64, |r| gen_f64_vec(r, 2, 5, -1.0, 1.0), |v| {
+            if v.len() < 2 || v.len() > 5 {
+                return Err(format!("len {}", v.len()));
+            }
+            if v.iter().any(|x| !(-1.0..1.0).contains(x)) {
+                return Err("out of range".into());
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,273 @@
+//! Statistics substrate: descriptive stats, quantiles (the paper's threshold
+//! metrics μ), cosine similarity (Figure 2), and streaming histograms for
+//! latency/throughput metrics.
+
+/// Descriptive statistics over a slice. Quantiles use the nearest-rank
+/// linear-interpolation convention (numpy default), which is what the
+/// paper's box-plot metrics (Q1/median/Q3/min-whisker) are defined against.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub q1: f64,
+    pub median: f64,
+    pub q3: f64,
+    pub max: f64,
+}
+
+pub fn summarize(xs: &[f64]) -> Option<Summary> {
+    if xs.is_empty() {
+        return None;
+    }
+    let n = xs.len();
+    let mean = xs.iter().sum::<f64>() / n as f64;
+    let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Some(Summary {
+        n,
+        mean,
+        std: var.sqrt(),
+        min: sorted[0],
+        q1: quantile_sorted(&sorted, 0.25),
+        median: quantile_sorted(&sorted, 0.5),
+        q3: quantile_sorted(&sorted, 0.75),
+        max: sorted[n - 1],
+    })
+}
+
+impl Summary {
+    /// Tukey lower whisker: smallest observation >= Q1 - 1.5*IQR.
+    /// This is the paper's "min-whisker" threshold metric.
+    pub fn min_whisker(&self, sorted: &[f64]) -> f64 {
+        let fence = self.q1 - 1.5 * (self.q3 - self.q1);
+        sorted
+            .iter()
+            .copied()
+            .find(|&x| x >= fence)
+            .unwrap_or(self.min)
+    }
+}
+
+/// Linear-interpolation quantile over an ascending-sorted slice.
+pub fn quantile_sorted(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    assert!((0.0..=1.0).contains(&q));
+    let h = q * (sorted.len() - 1) as f64;
+    let lo = h.floor() as usize;
+    let hi = h.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        sorted[lo] + (h - lo as f64) * (sorted[hi] - sorted[lo])
+    }
+}
+
+/// Cosine similarity between two equal-length vectors; None if either has
+/// zero norm or lengths differ.
+pub fn cosine(a: &[f64], b: &[f64]) -> Option<f64> {
+    if a.len() != b.len() || a.is_empty() {
+        return None;
+    }
+    let dot: f64 = a.iter().zip(b).map(|(x, y)| x * y).sum();
+    let na: f64 = a.iter().map(|x| x * x).sum::<f64>().sqrt();
+    let nb: f64 = b.iter().map(|x| x * x).sum::<f64>().sqrt();
+    if na == 0.0 || nb == 0.0 {
+        return None;
+    }
+    Some(dot / (na * nb))
+}
+
+/// Fixed-bound log-bucketed histogram for latencies (microseconds).
+/// Lock-free-enough for our use: owned per-thread or behind a Mutex.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    /// bucket i covers [lo * g^i, lo * g^(i+1))
+    counts: Vec<u64>,
+    lo: f64,
+    growth: f64,
+    pub n: u64,
+    pub sum: f64,
+    pub max: f64,
+    pub min: f64,
+}
+
+impl Histogram {
+    /// Covers [lo_us, hi_us] with ~`buckets` log-spaced buckets.
+    pub fn new(lo: f64, hi: f64, buckets: usize) -> Self {
+        assert!(lo > 0.0 && hi > lo && buckets >= 2);
+        let growth = (hi / lo).powf(1.0 / buckets as f64);
+        Histogram {
+            counts: vec![0; buckets + 2], // +underflow +overflow
+            lo,
+            growth,
+            n: 0,
+            sum: 0.0,
+            max: f64::NEG_INFINITY,
+            min: f64::INFINITY,
+        }
+    }
+
+    /// Default latency histogram: 1us .. 100s, ~1.5% resolution.
+    pub fn latency() -> Self {
+        Histogram::new(1.0, 1e8, 1200)
+    }
+
+    pub fn record(&mut self, x: f64) {
+        self.n += 1;
+        self.sum += x;
+        self.max = self.max.max(x);
+        self.min = self.min.min(x);
+        let idx = if x < self.lo {
+            0
+        } else {
+            let i = ((x / self.lo).ln() / self.growth.ln()).floor() as usize + 1;
+            i.min(self.counts.len() - 1)
+        };
+        self.counts[idx] += 1;
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            f64::NAN
+        } else {
+            self.sum / self.n as f64
+        }
+    }
+
+    /// Approximate quantile from bucket midpoints (exact at bucket
+    /// resolution; clamped by observed min/max).
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.n == 0 {
+            return f64::NAN;
+        }
+        let target = (q * self.n as f64).ceil().max(1.0) as u64;
+        let mut acc = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                let est = if i == 0 {
+                    self.lo
+                } else {
+                    self.lo * self.growth.powf(i as f64 - 0.5)
+                };
+                return est.clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    pub fn merge(&mut self, other: &Histogram) {
+        assert_eq!(self.counts.len(), other.counts.len());
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.n += other.n;
+        self.sum += other.sum;
+        self.max = self.max.max(other.max);
+        self.min = self.min.min(other.min);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn assert_close(a: f64, b: f64, tol: f64) {
+        assert!((a - b).abs() <= tol, "{a} vs {b}");
+    }
+
+    #[test]
+    fn summary_basic() {
+        let s = summarize(&[1.0, 2.0, 3.0, 4.0, 5.0]).unwrap();
+        assert_eq!(s.n, 5);
+        assert_close(s.mean, 3.0, 1e-12);
+        assert_close(s.median, 3.0, 1e-12);
+        assert_close(s.q1, 2.0, 1e-12);
+        assert_close(s.q3, 4.0, 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+    }
+
+    #[test]
+    fn summary_empty() {
+        assert!(summarize(&[]).is_none());
+    }
+
+    #[test]
+    fn quantile_interpolates() {
+        let xs = [0.0, 10.0];
+        assert_close(quantile_sorted(&xs, 0.5), 5.0, 1e-12);
+        assert_close(quantile_sorted(&xs, 0.25), 2.5, 1e-12);
+        assert_eq!(quantile_sorted(&[7.0], 0.9), 7.0);
+    }
+
+    #[test]
+    fn min_whisker_excludes_outliers() {
+        // bulk at 0.8..1.0 with one extreme outlier at 0.01
+        let mut xs: Vec<f64> = (0..20).map(|i| 0.8 + 0.01 * i as f64).collect();
+        xs.push(0.01);
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let s = summarize(&xs).unwrap();
+        let w = s.min_whisker(&xs);
+        assert!(w >= 0.8, "whisker {w} should skip the outlier");
+        assert!(w <= s.q1);
+    }
+
+    #[test]
+    fn min_whisker_equals_min_when_no_outliers() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        let s = summarize(&xs).unwrap();
+        assert_eq!(s.min_whisker(&xs), 1.0);
+    }
+
+    #[test]
+    fn cosine_cases() {
+        assert_close(cosine(&[1.0, 0.0], &[1.0, 0.0]).unwrap(), 1.0, 1e-12);
+        assert_close(cosine(&[1.0, 0.0], &[0.0, 1.0]).unwrap(), 0.0, 1e-12);
+        assert_close(cosine(&[1.0, 2.0], &[-1.0, -2.0]).unwrap(), -1.0, 1e-12);
+        assert!(cosine(&[0.0], &[1.0]).is_none());
+        assert!(cosine(&[1.0], &[1.0, 2.0]).is_none());
+        assert!(cosine(&[], &[]).is_none());
+    }
+
+    #[test]
+    fn histogram_quantiles_are_sane() {
+        let mut h = Histogram::latency();
+        for i in 1..=10_000u64 {
+            h.record(i as f64); // 1..10000 us uniform
+        }
+        assert_eq!(h.n, 10_000);
+        let p50 = h.quantile(0.5);
+        let p99 = h.quantile(0.99);
+        assert!((p50 / 5000.0 - 1.0).abs() < 0.1, "p50 {p50}");
+        assert!((p99 / 9900.0 - 1.0).abs() < 0.1, "p99 {p99}");
+        assert_close(h.mean(), 5000.5, 1.0);
+    }
+
+    #[test]
+    fn histogram_overflow_underflow() {
+        let mut h = Histogram::new(10.0, 100.0, 4);
+        h.record(1.0); // underflow
+        h.record(1e9); // overflow
+        assert_eq!(h.n, 2);
+        assert!(h.quantile(0.01) >= 1.0);
+        assert!(h.quantile(0.99) <= 1e9);
+    }
+
+    #[test]
+    fn histogram_merge() {
+        let mut a = Histogram::latency();
+        let mut b = Histogram::latency();
+        for i in 0..100 {
+            a.record(100.0 + i as f64);
+            b.record(10_000.0 + i as f64);
+        }
+        a.merge(&b);
+        assert_eq!(a.n, 200);
+        assert!(a.quantile(0.25) < 1000.0);
+        assert!(a.quantile(0.75) > 5000.0);
+    }
+}

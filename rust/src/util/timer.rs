@@ -1,0 +1,90 @@
+//! Micro-timing helpers for the perf pass and the bench harness.
+
+use std::time::{Duration, Instant};
+
+/// Measure a closure, returning (result, elapsed).
+pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, Duration) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed())
+}
+
+/// A stopwatch accumulating named segments — used to attribute step time
+/// between forward-pass execution and coordinator overhead in §Perf.
+#[derive(Debug, Default)]
+pub struct SegmentTimer {
+    segments: Vec<(String, Duration)>,
+}
+
+impl SegmentTimer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn measure<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.add(name, t0.elapsed());
+        out
+    }
+
+    pub fn add(&mut self, name: &str, d: Duration) {
+        if let Some((_, acc)) = self.segments.iter_mut().find(|(n, _)| n == name) {
+            *acc += d;
+        } else {
+            self.segments.push((name.to_string(), d));
+        }
+    }
+
+    pub fn total(&self) -> Duration {
+        self.segments.iter().map(|(_, d)| *d).sum()
+    }
+
+    pub fn get(&self, name: &str) -> Option<Duration> {
+        self.segments
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, d)| *d)
+    }
+
+    /// "name: 12.3ms (45.6%)" lines, largest first.
+    pub fn report(&self) -> String {
+        let total = self.total().as_secs_f64().max(1e-12);
+        let mut rows: Vec<_> = self.segments.iter().collect();
+        rows.sort_by(|a, b| b.1.cmp(&a.1));
+        rows.iter()
+            .map(|(n, d)| {
+                format!(
+                    "{n}: {:.3}ms ({:.1}%)",
+                    d.as_secs_f64() * 1e3,
+                    d.as_secs_f64() / total * 100.0
+                )
+            })
+            .collect::<Vec<_>>()
+            .join("\n")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_segments() {
+        let mut t = SegmentTimer::new();
+        t.add("a", Duration::from_millis(10));
+        t.add("a", Duration::from_millis(5));
+        t.add("b", Duration::from_millis(1));
+        assert_eq!(t.get("a").unwrap(), Duration::from_millis(15));
+        assert_eq!(t.total(), Duration::from_millis(16));
+        let rep = t.report();
+        assert!(rep.starts_with("a:"), "{rep}");
+    }
+
+    #[test]
+    fn time_it_returns_value() {
+        let (v, d) = time_it(|| 42);
+        assert_eq!(v, 42);
+        assert!(d.as_nanos() > 0);
+    }
+}

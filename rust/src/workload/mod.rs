@@ -1,0 +1,229 @@
+//! Workload substrate: loading the synthetic eval datasets emitted by the
+//! python build, and open/closed-loop request generation for the serving
+//! benches.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{parse_jsonl, Json};
+use crate::util::rng::Rng;
+
+pub const TASKS: [&str; 3] = ["synth-qa", "synth-math", "synth-code"];
+
+/// One evaluation example (mirror of data.py's JSONL schema).
+#[derive(Clone, Debug)]
+pub struct Example {
+    pub task: String,
+    pub prompt: String,
+    /// Ground-truth final answer (task-specific interpretation; see eval/).
+    pub answer: String,
+    /// synth-code: operation + input for functional evaluation.
+    pub code_op: Option<(String, String)>,
+}
+
+impl Example {
+    pub fn from_json(j: &Json) -> Result<Example> {
+        let s = |k: &str| -> Result<String> {
+            j.req(k)
+                .map_err(anyhow::Error::msg)?
+                .as_str()
+                .map(str::to_string)
+                .with_context(|| format!("{k} not a string"))
+        };
+        let task = s("task")?;
+        let code_op = if task == "synth-code" {
+            let meta = j.req("meta").map_err(anyhow::Error::msg)?;
+            let g = |k: &str| -> Result<String> {
+                meta.req(k)
+                    .map_err(anyhow::Error::msg)?
+                    .as_str()
+                    .map(str::to_string)
+                    .with_context(|| format!("meta.{k} not a string"))
+            };
+            Some((g("op")?, g("input")?))
+        } else {
+            None
+        };
+        Ok(Example { task, prompt: s("prompt")?, answer: s("answer")?, code_op })
+    }
+}
+
+/// A task's eval split.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub task: String,
+    pub examples: Vec<Example>,
+}
+
+impl Dataset {
+    /// Load `<dir>/<task>.eval.jsonl`.
+    pub fn load(data_dir: impl AsRef<Path>, task: &str) -> Result<Dataset> {
+        if !TASKS.contains(&task) {
+            bail!("unknown task {task:?} (expected one of {TASKS:?})");
+        }
+        let path = data_dir.as_ref().join(format!("{task}.eval.jsonl"));
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let examples = parse_jsonl(&text)?
+            .iter()
+            .map(Example::from_json)
+            .collect::<Result<Vec<_>>>()
+            .with_context(|| format!("parsing {}", path.display()))?;
+        if examples.is_empty() {
+            bail!("dataset {task} is empty");
+        }
+        for e in &examples {
+            if e.task != task {
+                bail!("example task {:?} != dataset {task:?}", e.task);
+            }
+        }
+        Ok(Dataset { task: task.to_string(), examples })
+    }
+
+    pub fn load_all(data_dir: impl AsRef<Path>) -> Result<Vec<Dataset>> {
+        TASKS
+            .iter()
+            .map(|t| Dataset::load(data_dir.as_ref(), t))
+            .collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.examples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.examples.is_empty()
+    }
+}
+
+/// A timed request for the serving benches.
+#[derive(Clone, Debug)]
+pub struct TimedRequest {
+    /// Offset from trace start, seconds.
+    pub at: f64,
+    pub task: String,
+    pub prompt: String,
+}
+
+/// Open-loop Poisson arrival trace over a dataset (rate = requests/sec).
+pub fn poisson_trace(ds: &Dataset, rate: f64, n: usize, seed: u64) -> Vec<TimedRequest> {
+    assert!(rate > 0.0 && n > 0);
+    let mut rng = Rng::new(seed);
+    let mut t = 0.0;
+    (0..n)
+        .map(|_| {
+            t += rng.exponential(rate);
+            let ex = rng.choose(&ds.examples);
+            TimedRequest { at: t, task: ds.task.clone(), prompt: ex.prompt.clone() }
+        })
+        .collect()
+}
+
+/// Round-robin mixture trace across several datasets (multi-tenant load).
+pub fn mixed_trace(
+    datasets: &[Dataset],
+    rate: f64,
+    n: usize,
+    seed: u64,
+) -> Vec<TimedRequest> {
+    assert!(!datasets.is_empty());
+    let mut rng = Rng::new(seed ^ 0x5EED);
+    let mut t = 0.0;
+    (0..n)
+        .map(|i| {
+            t += rng.exponential(rate);
+            let ds = &datasets[i % datasets.len()];
+            let ex = rng.choose(&ds.examples);
+            TimedRequest { at: t, task: ds.task.clone(), prompt: ex.prompt.clone() }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo_dataset() -> Dataset {
+        Dataset {
+            task: "synth-math".into(),
+            examples: (0..5)
+                .map(|i| Example {
+                    task: "synth-math".into(),
+                    prompt: format!("Q: {i}+1=?"),
+                    answer: format!("{}", i + 1),
+                    code_op: None,
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn example_from_json() {
+        let j = Json::parse(
+            r#"{"task":"synth-code","prompt":"op: rev | in: ab","completion":"out: ba",
+                "answer":"ba","meta":{"op":"rev","input":"ab"}}"#,
+        )
+        .unwrap();
+        let e = Example::from_json(&j).unwrap();
+        assert_eq!(e.answer, "ba");
+        assert_eq!(e.code_op, Some(("rev".into(), "ab".into())));
+    }
+
+    #[test]
+    fn example_rejects_missing_fields() {
+        let j = Json::parse(r#"{"task":"synth-qa"}"#).unwrap();
+        assert!(Example::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn poisson_trace_monotone_and_rate() {
+        let ds = demo_dataset();
+        let trace = poisson_trace(&ds, 10.0, 2000, 1);
+        assert_eq!(trace.len(), 2000);
+        for w in trace.windows(2) {
+            assert!(w[1].at >= w[0].at);
+        }
+        let total = trace.last().unwrap().at;
+        let rate = 2000.0 / total;
+        assert!((rate - 10.0).abs() < 1.0, "rate {rate}");
+    }
+
+    #[test]
+    fn mixed_trace_alternates_tasks() {
+        let mut qa = demo_dataset();
+        qa.task = "synth-qa".into();
+        for e in &mut qa.examples {
+            e.task = "synth-qa".into();
+        }
+        let trace = mixed_trace(&[demo_dataset(), qa], 5.0, 10, 3);
+        assert_eq!(trace[0].task, "synth-math");
+        assert_eq!(trace[1].task, "synth-qa");
+    }
+
+    #[test]
+    fn load_rejects_unknown_task() {
+        assert!(Dataset::load("/nonexistent", "nope").is_err());
+    }
+
+    #[test]
+    fn loads_real_datasets_when_present() {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("artifacts")
+            .join("data");
+        if !dir.exists() {
+            eprintln!("skipping: artifacts/data absent");
+            return;
+        }
+        for ds in Dataset::load_all(&dir).unwrap() {
+            assert!(ds.len() >= 100, "{} too small", ds.task);
+            for e in &ds.examples {
+                assert!(!e.prompt.is_empty());
+                assert!(!e.answer.is_empty());
+                if ds.task == "synth-code" {
+                    assert!(e.code_op.is_some());
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,257 @@
+//! Integration tests of the full L3 serving stack (coordinator + server +
+//! policies + decode) over the analytic simulator — fast, artifact-free,
+//! exercising cross-module composition and concurrency.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use osdt::cache::CacheConfig;
+use osdt::coordinator::{Coordinator, CoordinatorConfig, Request};
+use osdt::decode::{Engine, ForwardModel};
+use osdt::model::fixtures::tiny_config;
+use osdt::policy::{
+    Calibrator, DynamicMode, Metric, Osdt, ProfileStore, SequentialTopK,
+    StaticThreshold,
+};
+use osdt::server::{Client, Server};
+use osdt::sim::SimModel;
+use osdt::util::prop;
+use osdt::util::rng::Rng;
+
+fn sim_coordinator(workers: usize) -> Arc<Coordinator> {
+    Arc::new(
+        Coordinator::start(
+            CoordinatorConfig {
+                workers,
+                max_batch: 4,
+                batch_wait: Duration::from_millis(2),
+                cache: CacheConfig::disabled(),
+            },
+            tiny_config(),
+            |_| Ok(SimModel::math_like(11)),
+        )
+        .unwrap(),
+    )
+}
+
+#[test]
+fn full_stack_over_sockets_with_batching() {
+    let coord = sim_coordinator(1);
+    let server = Server::start("127.0.0.1:0", coord.clone()).unwrap();
+    let addr = server.addr;
+    let mut handles = vec![];
+    for c in 0..8 {
+        handles.push(std::thread::spawn(move || {
+            let mut client = Client::connect(addr).unwrap();
+            let r = client
+                .generate("synth-math", &format!("Q: {c}+1=?"), "static:0.85")
+                .unwrap();
+            assert!(r.error.is_none(), "{:?}", r.error);
+            assert!(r.steps > 0);
+            r.steps
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    assert_eq!(coord.metrics.counter_value("requests_completed"), 8);
+    // with 8 concurrent requests and a 1-worker batcher, at least one batch
+    // should have been > 1 (dynamic batching engaged)
+    let bs = coord.metrics.gauge("last_batch_size");
+    assert!(bs.load(std::sync::atomic::Ordering::Relaxed) >= 1);
+    server.stop();
+}
+
+#[test]
+fn osdt_calibration_shared_across_connections() {
+    let coord = sim_coordinator(2);
+    let server = Server::start("127.0.0.1:0", coord.clone()).unwrap();
+    let addr = server.addr;
+    let spec = "osdt:step-block:q2:0.75:0.2";
+    let mut c1 = Client::connect(addr).unwrap();
+    let r1 = c1.generate("synth-math", "Q: 1+1=?", spec).unwrap();
+    assert!(r1.calibrated);
+    // second connection, same task: must reuse the shared profile
+    let mut c2 = Client::connect(addr).unwrap();
+    let r2 = c2.generate("synth-math", "Q: 2+2=?", spec).unwrap();
+    assert!(!r2.calibrated);
+    assert_eq!(coord.metrics.counter_value("calibrations"), 1);
+    server.stop();
+}
+
+#[test]
+fn mixed_policies_in_one_batch() {
+    let coord = sim_coordinator(1);
+    let mut rxs = vec![];
+    for (i, pol) in ["static:0.9", "sequential:1", "factor:0.95", "static:0.7"]
+        .iter()
+        .enumerate()
+    {
+        rxs.push((
+            *pol,
+            coord.submit(Request {
+                id: 0,
+                task: "synth-math".into(),
+                prompt: format!("Q: {i}+3=?"),
+                policy: pol.to_string(),
+            }),
+        ));
+    }
+    let cfg = tiny_config();
+    for (pol, rx) in rxs {
+        let r = rx.recv().unwrap();
+        assert!(r.error.is_none(), "{pol}: {:?}", r.error);
+        if pol == "sequential:1" {
+            assert_eq!(r.steps, cfg.gen_len, "sequential quota is exact");
+        } else {
+            assert!(r.steps < cfg.gen_len, "{pol} must parallelise");
+        }
+    }
+}
+
+#[test]
+fn profile_store_roundtrip_through_decode() {
+    // calibrate -> persist -> reload -> decode: the offline workflow
+    let m = SimModel::qa_like(3);
+    let engine = Engine::new(&m);
+    let cal = engine
+        .decode(m.layout_from_seed(0), &StaticThreshold::new(0.9))
+        .unwrap();
+    let profile = Calibrator::calibrate(&cal.trace, DynamicMode::StepBlock, Metric::Q1);
+    let dir = std::env::temp_dir().join(format!("osdt_it_{}", std::process::id()));
+    let store = ProfileStore::new(&dir).unwrap();
+    store.save("synth-qa", &profile).unwrap();
+    let loaded = store
+        .load("synth-qa", DynamicMode::StepBlock, Metric::Q1)
+        .unwrap();
+    assert_eq!(profile, loaded);
+    let osdt = Osdt::from_profile(loaded, 0.75, 0.2);
+    let res = engine.decode(m.layout_from_seed(5), &osdt).unwrap();
+    assert!(res.steps >= tiny_config().num_blocks);
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn prop_decode_invariants_across_policies_and_tasks() {
+    // for random policies/tasks/seeds: decode terminates, fills the gen
+    // region, never exceeds gen_len steps, takes at least num_blocks steps,
+    // and trace length == steps
+    prop::forall(
+        "decode-invariants",
+        60,
+        |r: &mut Rng| {
+            let task = r.below(3);
+            let policy = r.below(4);
+            let tau = 0.3 + r.next_f64() * 0.69;
+            let seed = r.next_u64();
+            (task, policy, tau, seed)
+        },
+        |&(task, policy, tau, seed)| {
+            let m = match task {
+                0 => SimModel::math_like(seed),
+                1 => SimModel::qa_like(seed),
+                _ => SimModel::code_like(seed),
+            };
+            let engine = Engine::new(&m);
+            let p: Box<dyn osdt::policy::Policy> = match policy {
+                0 => Box::new(SequentialTopK::new(1 + (seed % 4) as usize)),
+                1 => Box::new(StaticThreshold::new(tau)),
+                2 => Box::new(osdt::policy::FactorThreshold::new(tau)),
+                _ => {
+                    let cal = engine
+                        .decode(m.layout_from_seed(0), &StaticThreshold::new(0.9))
+                        .map_err(|e| e.to_string())?;
+                    let prof = Calibrator::calibrate(
+                        &cal.trace,
+                        DynamicMode::Block,
+                        Metric::Q1,
+                    );
+                    Box::new(Osdt::from_profile(prof, tau, 0.1))
+                }
+            };
+            let cfg = m.config().clone();
+            let res = engine
+                .decode(m.layout_from_seed(seed ^ 0xAB), p.as_ref())
+                .map_err(|e| e.to_string())?;
+            if res.gen_tokens(&cfg).iter().any(|&t| t == cfg.mask_id) {
+                return Err("masks remain".into());
+            }
+            if res.steps > cfg.gen_len {
+                return Err(format!("steps {} > gen_len", res.steps));
+            }
+            if res.steps < cfg.num_blocks {
+                return Err(format!("steps {} < num_blocks", res.steps));
+            }
+            if res.trace.total_steps() != res.steps {
+                return Err("trace/steps mismatch".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_cached_equals_uncached_on_simulator() {
+    // the simulator's window path is exact, so the dual-cache decode must
+    // match the plain decode bit-for-bit across random settings
+    prop::forall(
+        "cache-exactness",
+        40,
+        |r: &mut Rng| (r.next_u64(), 0.4 + r.next_f64() * 0.55),
+        |&(seed, tau)| {
+            let m = SimModel::math_like(seed);
+            let plain = Engine::new(&m);
+            let cached = Engine::with_kv_cache(&m);
+            let p = StaticThreshold::new(tau);
+            let a = plain
+                .decode(m.layout_from_seed(seed), &p)
+                .map_err(|e| e.to_string())?;
+            let b = cached
+                .decode(m.layout_from_seed(seed), &p)
+                .map_err(|e| e.to_string())?;
+            if a.tokens != b.tokens {
+                return Err("tokens differ".into());
+            }
+            if a.steps != b.steps {
+                return Err(format!("steps {} vs {}", a.steps, b.steps));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_osdt_throughput_monotone_in_epsilon() {
+    // more slack -> laxer thresholds -> no more steps than before
+    prop::forall(
+        "epsilon-monotone-steps",
+        30,
+        |r: &mut Rng| (r.next_u64(), r.next_f64() * 0.3),
+        |&(seed, e1)| {
+            let m = SimModel::math_like(seed);
+            let engine = Engine::new(&m);
+            let cal = engine
+                .decode(m.layout_from_seed(0), &StaticThreshold::new(0.9))
+                .map_err(|e| e.to_string())?;
+            let prof =
+                Calibrator::calibrate(&cal.trace, DynamicMode::Block, Metric::Median);
+            let e2 = e1 + 0.3;
+            let a = engine
+                .decode(
+                    m.layout_from_seed(9),
+                    &Osdt::from_profile(prof.clone(), 1.0, e1),
+                )
+                .map_err(|e| e.to_string())?;
+            let b = engine
+                .decode(
+                    m.layout_from_seed(9),
+                    &Osdt::from_profile(prof, 1.0, e2),
+                )
+                .map_err(|e| e.to_string())?;
+            if b.steps > a.steps {
+                return Err(format!("eps {e2} took {} > {} steps", b.steps, a.steps));
+            }
+            Ok(())
+        },
+    );
+}
