@@ -42,10 +42,10 @@ fn main() -> Result<()> {
     };
     let l1 = layout.clone();
     let full_ms = time_variant("fwd_conf b1", &mut || {
-        rt.fwd_conf(&[l1.clone()]).map(|_| ())
+        rt.fwd_conf(&[l1.as_slice()]).map(|_| ())
     })?;
     for b in [2usize, 4] {
-        let batch: Vec<Vec<u32>> = (0..b).map(|_| layout.clone()).collect();
+        let batch: Vec<&[u32]> = (0..b).map(|_| layout.as_slice()).collect();
         let ms = time_variant(&format!("fwd_conf b{b}"), &mut || {
             rt.fwd_conf(&batch).map(|_| ())
         })?;

@@ -1,31 +1,42 @@
 //! Serving-systems bench: end-to-end latency vs offered load through the
-//! coordinator + router, comparing decode policies under the same Poisson
-//! arrival trace. The systems-level restatement of Table 1: a policy that
-//! spends fewer forward passes per sequence sustains a higher arrival rate
-//! before queueing delay blows up.
+//! coordinator, comparing decode policies under the same arrival trace —
+//! and, for each, the dual-KV-cache path against full recomputation. The
+//! systems-level restatement of Table 1: a policy that spends fewer
+//! forward passes per sequence sustains a higher arrival rate before
+//! queueing delay blows up, and the continuous-batching scheduler lets the
+//! cache and batching stack (the old lockstep batcher forced batch 1
+//! whenever the cache was on).
 //!
-//!     cargo bench --bench serving_load [-- --n 24 --rates 1,2,4]
+//!     cargo bench --bench serving_load [-- --n 24 --rates 1,2,4 --workers 1 --max-batch 4]
 //!
-//! Runs on the real PJRT model (1 worker replica, batch 1, matching the
-//! paper's serving setup).
+//! Reported per point: p50/p95 latency, tokens/s, and mean/peak batch
+//! occupancy (from the coordinator's scheduler metrics). Runs on the real
+//! PJRT model over a mixed multi-task workload.
 
+use std::sync::atomic::Ordering;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
 use osdt::bench::{render_table, write_csv};
+use osdt::cache::CacheConfig;
 use osdt::config::Args;
 use osdt::coordinator::{Coordinator, CoordinatorConfig, Request};
 use osdt::model::ModelConfig;
 use osdt::runtime::ModelRuntime;
 use osdt::util::stats::Histogram;
-use osdt::workload::{poisson_trace, Dataset};
+use osdt::workload::{mixed_trace, Dataset};
 
 fn main() -> Result<()> {
     osdt::util::logging::init();
-    let args = Args::parse(std::env::args().skip(1).collect::<Vec<_>>(), &["n", "rates"])?;
+    let args = Args::parse(
+        std::env::args().skip(1).collect::<Vec<_>>(),
+        &["n", "rates", "workers", "max-batch"],
+    )?;
     let n: usize = args.get_parse("n", 24)?;
+    let workers: usize = args.get_parse("workers", 1)?;
+    let max_batch: usize = args.get_parse("max-batch", 4)?;
     let rates: Vec<f64> = args
         .get_or("rates", "2,6,12")
         .split(',')
@@ -33,89 +44,131 @@ fn main() -> Result<()> {
         .collect();
 
     let cfg = ModelConfig::load("artifacts")?;
-    let ds = Dataset::load(cfg.artifact_dir.join("data"), "synth-math")?;
+    let data_dir = cfg.artifact_dir.join("data");
+    // mixed multi-task workload: the same trace drives every configuration
+    let datasets = vec![
+        Dataset::load(&data_dir, "synth-math")?,
+        Dataset::load(&data_dir, "synth-qa")?,
+    ];
 
     let mut rows = Vec::new();
     let mut csv = Vec::new();
     for policy in ["osdt:block:q1:0.75:0.2", "static:0.9", "sequential:1"] {
-        for &rate in &rates {
-            let coord = Arc::new(Coordinator::start(
-                CoordinatorConfig {
-                    workers: 1,
-                    max_batch: 1,
-                    batch_wait: Duration::from_millis(1),
-                    ..Default::default()
-                },
-                cfg.clone(),
-                |_| {
-                    let cfg = ModelConfig::load("artifacts")?;
-                    ModelRuntime::load(&cfg)
-                },
-            )?);
-            // warm the OSDT profile so calibration isn't in the timed region
-            let _ = coord.generate("synth-math", &ds.examples[0].prompt, policy)?;
+        for (cache_label, cache) in [
+            ("off", CacheConfig::disabled()),
+            ("on", CacheConfig::block_boundary()),
+        ] {
+            for &rate in &rates {
+                let coord = Arc::new(Coordinator::start(
+                    CoordinatorConfig {
+                        workers,
+                        max_batch,
+                        batch_wait: Duration::from_millis(2),
+                        cache,
+                    },
+                    cfg.clone(),
+                    |_| {
+                        let cfg = ModelConfig::load("artifacts")?;
+                        ModelRuntime::load(&cfg)
+                    },
+                )?);
+                // warm the OSDT profiles so calibration isn't in the timed
+                // region (one calibration per task)
+                for ds in &datasets {
+                    let _ = coord.generate(&ds.task, &ds.examples[0].prompt, policy)?;
+                }
+                // snapshot the scheduler counters so the warm-up's solo
+                // decodes don't dilute the timed region's occupancy
+                let steps0 = coord.metrics.counter_value("scheduler_steps");
+                let seq_steps0 = coord.metrics.counter_value("scheduled_seq_steps");
 
-            let trace = poisson_trace(&ds, rate, n, 7);
-            let mut lat = Histogram::latency();
-            let t0 = Instant::now();
-            let mut pending = Vec::new();
-            for r in &trace {
-                let due = Duration::from_secs_f64(r.at);
-                if let Some(wait) = due.checked_sub(t0.elapsed()) {
-                    std::thread::sleep(wait);
+                let trace = mixed_trace(&datasets, rate, n, 7);
+                let mut lat = Histogram::latency();
+                let t0 = Instant::now();
+                let mut pending = Vec::new();
+                for r in &trace {
+                    let due = Duration::from_secs_f64(r.at);
+                    if let Some(wait) = due.checked_sub(t0.elapsed()) {
+                        std::thread::sleep(wait);
+                    }
+                    pending.push((
+                        Instant::now(),
+                        coord.submit(Request {
+                            id: 0,
+                            task: r.task.clone(),
+                            prompt: r.prompt.clone(),
+                            policy: policy.into(),
+                        }),
+                    ));
                 }
-                pending.push((
-                    Instant::now(),
-                    coord.submit(Request {
-                        id: 0,
-                        task: r.task.clone(),
-                        prompt: r.prompt.clone(),
-                        policy: policy.into(),
-                    }),
-                ));
-            }
-            let mut ok = 0;
-            for (sent, rx) in pending {
-                let resp = rx.recv()?;
-                if resp.error.is_none() {
-                    ok += 1;
+                let mut ok = 0;
+                for (sent, rx) in pending {
+                    let resp = rx.recv()?;
+                    if resp.error.is_none() {
+                        ok += 1;
+                    }
+                    lat.record(sent.elapsed().as_secs_f64() * 1e6);
                 }
-                lat.record(sent.elapsed().as_secs_f64() * 1e6);
+                let wall = t0.elapsed().as_secs_f64();
+                let steps =
+                    (coord.metrics.counter_value("scheduler_steps") - steps0).max(1);
+                let seq_steps =
+                    coord.metrics.counter_value("scheduled_seq_steps") - seq_steps0;
+                let occ_mean = seq_steps as f64 / steps as f64;
+                let occ_peak = coord
+                    .metrics
+                    .gauge("batch_occupancy_peak")
+                    .load(Ordering::Relaxed);
+                let tokens_per_sec = (ok * cfg.gen_len) as f64 / wall;
+                let p50 = lat.quantile(0.5) / 1e3;
+                let p95 = lat.quantile(0.95) / 1e3;
+                eprintln!(
+                    "[load] {policy} cache={cache_label} @{rate}rps: \
+                     p50 {p50:.0}ms p95 {p95:.0}ms occ {occ_mean:.2} (peak {occ_peak})"
+                );
+                rows.push(vec![
+                    policy.to_string(),
+                    cache_label.to_string(),
+                    format!("{rate}"),
+                    format!("{ok}/{n}"),
+                    format!("{p50:.0}"),
+                    format!("{p95:.0}"),
+                    format!("{tokens_per_sec:.1}"),
+                    format!("{occ_mean:.2}"),
+                    format!("{occ_peak}"),
+                ]);
+                csv.push(vec![
+                    policy.to_string(),
+                    cache_label.to_string(),
+                    format!("{rate}"),
+                    format!("{}", lat.quantile(0.5)),
+                    format!("{}", lat.quantile(0.95)),
+                    format!("{tokens_per_sec}"),
+                    format!("{occ_mean}"),
+                    format!("{occ_peak}"),
+                ]);
+                drop(coord);
             }
-            let wall = t0.elapsed().as_secs_f64();
-            let p50 = lat.quantile(0.5) / 1e3;
-            let p95 = lat.quantile(0.95) / 1e3;
-            eprintln!("[load] {policy} @{rate}rps: p50 {p50:.0}ms p95 {p95:.0}ms");
-            rows.push(vec![
-                policy.to_string(),
-                format!("{rate}"),
-                format!("{ok}/{n}"),
-                format!("{:.0}", p50),
-                format!("{:.0}", p95),
-                format!("{:.1}", (ok * cfg.gen_len) as f64 / wall),
-            ]);
-            csv.push(vec![
-                policy.to_string(),
-                format!("{rate}"),
-                format!("{}", lat.quantile(0.5)),
-                format!("{}", lat.quantile(0.95)),
-                format!("{}", (ok * cfg.gen_len) as f64 / wall),
-            ]);
-            drop(coord);
         }
-        rows.push(vec![String::new(); 6]);
+        rows.push(vec![String::new(); 9]);
     }
-    println!("\n=== serving latency vs offered load (n={n}/point) ===");
+    println!("\n=== serving latency vs offered load (n={n}/point, mixed workload) ===");
     println!(
         "{}",
         render_table(
-            &["policy", "rps", "ok", "p50 ms", "p95 ms", "tokens/s"],
+            &[
+                "policy", "cache", "rps", "ok", "p50 ms", "p95 ms", "tokens/s",
+                "occ mean", "occ peak"
+            ],
             &rows
         )
     );
     write_csv(
         "results/serving_load.csv",
-        &["policy", "rate", "p50_us", "p95_us", "tokens_per_sec"],
+        &[
+            "policy", "cache", "rate", "p50_us", "p95_us", "tokens_per_sec",
+            "occ_mean", "occ_peak",
+        ],
         &csv,
     )?;
     println!("csv -> results/serving_load.csv");

@@ -1,9 +1,15 @@
-//! The serving coordinator: request queue, dynamic batcher, engine worker
-//! threads, and OSDT calibration lifecycle management.
+//! The serving coordinator: shared request queue, continuous-batching
+//! worker loops, and OSDT calibration lifecycle management (DESIGN.md §6).
 //!
 //! Shape follows the vLLM-router pattern scaled to this model: a leader
-//! (the [`Coordinator`]) owns a queue; N workers each own a full PJRT
-//! runtime (the `xla` client is not `Sync`) and pull batches off the queue.
+//! (the [`Coordinator`]) owns a Condvar-backed FIFO [`JobQueue`]; N workers
+//! each own a full PJRT runtime (the `xla` client is not `Sync`) and drive
+//! a [`StepScheduler`]. Requests are admitted into a worker's scheduler at
+//! any step boundary, share forward passes with whatever is already
+//! decoding — KV cache on or off — and retire the moment they finish. This
+//! replaces the old lockstep gather (an `Arc<Mutex<Receiver>>` shared
+//! between workers, with a documented try_lock dance to avoid deadlocking
+//! on an idle sibling parked inside `recv()` holding the mutex).
 //!
 //! OSDT's two-phase structure lives here (Algorithm 1 at serving level):
 //! the **first request of a task** that asks for an OSDT policy is decoded
@@ -11,20 +17,26 @@
 //! resulting profile is stored in the shared [`ProfileStore`] cache and
 //! every subsequent request of that task reuses it. Calibration is
 //! per-(task, mode, metric) and happens at most once.
+//!
+//! Worker-loop metrics: `queue_depth` (gauge), `batch_occupancy` (gauge +
+//! unitless histogram, with a `batch_occupancy_peak` high-water gauge),
+//! `admission_wait` (histogram, enqueue → scheduler admission), and the
+//! `scheduler_steps` / `scheduled_seq_steps` counters whose ratio is the
+//! mean occupancy.
 
 pub mod router;
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
 use crate::cache::CacheConfig;
 use crate::config::parse_policy_spec;
-use crate::decode::{DecodeResult, Engine, ForwardModel};
+use crate::decode::{DecodeResult, Engine, ForwardModel, StepScheduler};
 use crate::metrics::Registry;
 use crate::model::ModelConfig;
 use crate::policy::{Calibrator, Osdt, Policy, PolicySpec, Profile, StaticThreshold};
@@ -32,6 +44,13 @@ use crate::tokenizer::Tokenizer;
 
 /// Calibration decode policy (Phase 1 uses Fast-dLLM's static default).
 const CALIBRATION_TAU: f64 = 0.9;
+
+/// How long an idle worker parks on the queue before re-checking.
+const IDLE_POLL: Duration = Duration::from_millis(50);
+
+/// How long a calibration-triggering request may be parked while the
+/// worker is busy before it is run anyway (stalling co-scheduled peers).
+const CALIBRATION_DEFER_MAX: Duration = Duration::from_millis(500);
 
 /// A generation request.
 #[derive(Clone, Debug)]
@@ -89,7 +108,12 @@ pub type SharedProfiles = Arc<Mutex<HashMap<ProfileKey, Profile>>>;
 #[derive(Clone, Debug)]
 pub struct CoordinatorConfig {
     pub workers: usize,
+    /// Per-worker continuous-batching slot count (clamped to the model's
+    /// compiled max batch).
     pub max_batch: usize,
+    /// How long an idle worker holds its first job to let concurrent
+    /// arrivals join the same first step. Later arrivals join mid-flight at
+    /// step boundaries regardless.
     pub batch_wait: Duration,
     pub cache: CacheConfig,
 }
@@ -105,8 +129,98 @@ impl Default for CoordinatorConfig {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Job queue
+// ---------------------------------------------------------------------------
+
+struct QueueInner {
+    jobs: VecDeque<Job>,
+    closed: bool,
+}
+
+/// Multi-consumer FIFO job queue (Mutex + Condvar). Closing wakes every
+/// waiter; queued jobs are still drained after close so shutdown is
+/// graceful.
+struct JobQueue {
+    inner: Mutex<QueueInner>,
+    cv: Condvar,
+}
+
+enum Popped {
+    Job(Box<Job>),
+    Empty,
+    Closed,
+}
+
+impl JobQueue {
+    fn new() -> Self {
+        JobQueue {
+            inner: Mutex::new(QueueInner { jobs: VecDeque::new(), closed: false }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Enqueue; returns false (dropping nothing but the caller's hope) if
+    /// the queue is closed.
+    fn push(&self, job: Job) -> bool {
+        {
+            let mut g = self.inner.lock().unwrap();
+            if g.closed {
+                return false;
+            }
+            g.jobs.push_back(job);
+        }
+        self.cv.notify_one();
+        true
+    }
+
+    fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+
+    /// Non-blocking pop. `Closed` only once the queue is both closed and
+    /// drained.
+    fn try_pop(&self) -> Popped {
+        let mut g = self.inner.lock().unwrap();
+        match g.jobs.pop_front() {
+            Some(j) => Popped::Job(Box::new(j)),
+            None if g.closed => Popped::Closed,
+            None => Popped::Empty,
+        }
+    }
+
+    /// Blocking pop with a deadline.
+    fn pop_timeout(&self, timeout: Duration) -> Popped {
+        let deadline = Instant::now() + timeout;
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(j) = g.jobs.pop_front() {
+                return Popped::Job(Box::new(j));
+            }
+            if g.closed {
+                return Popped::Closed;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Popped::Empty;
+            }
+            let (guard, _timeout) = self.cv.wait_timeout(g, deadline - now).unwrap();
+            g = guard;
+        }
+    }
+
+    fn depth(&self) -> usize {
+        self.inner.lock().unwrap().jobs.len()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Coordinator
+// ---------------------------------------------------------------------------
+
 pub struct Coordinator {
-    tx: Option<Sender<Job>>,
+    queue: Arc<JobQueue>,
     handles: Vec<std::thread::JoinHandle<()>>,
     pub metrics: Arc<Registry>,
     pub profiles: SharedProfiles,
@@ -117,18 +231,17 @@ impl Coordinator {
     /// Spawn workers, each building its own forward model via `factory`.
     pub fn start<M, F>(cfg: CoordinatorConfig, model_cfg: ModelConfig, factory: F) -> Result<Self>
     where
-        M: ForwardModel,
+        M: ForwardModel + 'static,
         F: Fn(usize) -> Result<M> + Send + Sync + Clone + 'static,
     {
-        let (tx, rx) = channel::<Job>();
-        let rx = Arc::new(Mutex::new(rx));
+        let queue = Arc::new(JobQueue::new());
         let metrics = Arc::new(Registry::new());
         let profiles: SharedProfiles = Arc::new(Mutex::new(HashMap::new()));
         let tok = Tokenizer::from_config(&model_cfg)?;
 
         let mut handles = Vec::new();
         for wid in 0..cfg.workers.max(1) {
-            let rx = rx.clone();
+            let queue = queue.clone();
             let metrics = metrics.clone();
             let profiles = profiles.clone();
             let factory = factory.clone();
@@ -147,14 +260,15 @@ impl Coordinator {
                             }
                         };
                         worker_loop(
-                            wid, &model, &model_cfg, &tok, &ccfg, &rx, &metrics, &profiles,
+                            wid, &model, &model_cfg, &tok, &ccfg, &queue, &metrics,
+                            &profiles,
                         );
                     })
                     .context("spawning worker")?,
             );
         }
         Ok(Coordinator {
-            tx: Some(tx),
+            queue,
             handles,
             metrics,
             profiles,
@@ -169,14 +283,15 @@ impl Coordinator {
         }
         let (rtx, rrx) = channel();
         self.metrics.add("requests_submitted", 1);
-        if let Some(tx) = &self.tx {
-            if tx
-                .send(Job { req, resp: rtx, enqueued: Instant::now() })
-                .is_err()
-            {
-                // workers gone; receiver will see a closed channel
-            }
+        if self
+            .queue
+            .push(Job { req, resp: rtx, enqueued: Instant::now() })
+        {
+            self.metrics
+                .set_gauge("queue_depth", self.queue.depth() as i64);
         }
+        // if the queue is closed the sender was dropped and the receiver
+        // observes a closed channel
         rrx
     }
 
@@ -191,9 +306,10 @@ impl Coordinator {
         rx.recv().context("coordinator dropped the request")
     }
 
-    /// Graceful shutdown: close the queue, join workers.
+    /// Graceful shutdown: close the queue, join workers (queued jobs are
+    /// still served first).
     pub fn shutdown(mut self) {
-        self.tx.take(); // closes the channel
+        self.queue.close();
         for h in self.handles.drain(..) {
             let _ = h.join();
         }
@@ -202,15 +318,19 @@ impl Coordinator {
 
 impl Drop for Coordinator {
     fn drop(&mut self) {
-        self.tx.take();
+        self.queue.close();
         for h in self.handles.drain(..) {
             let _ = h.join();
         }
     }
 }
 
+// ---------------------------------------------------------------------------
+// Worker loop
+// ---------------------------------------------------------------------------
+
 /// Build the policy for a request, running calibration if needed.
-/// Returns (policy, calibrated_now).
+/// Returns (policy, calibration decode if this request calibrated).
 fn resolve_policy<M: ForwardModel>(
     spec: &PolicySpec,
     task: &str,
@@ -243,6 +363,92 @@ fn resolve_policy<M: ForwardModel>(
     }
 }
 
+/// A request admitted into the scheduler, awaiting retirement.
+struct Inflight {
+    job: Job,
+    admitted: Instant,
+}
+
+/// Whether admitting this job right now would trigger a Phase-1
+/// calibration decode (an uncalibrated OSDT spec for its task).
+fn needs_calibration(job: &Job, profiles: &SharedProfiles) -> bool {
+    match parse_policy_spec(&job.req.policy) {
+        Ok(PolicySpec::Osdt { mode, metric, .. }) => {
+            let key = (job.req.task.clone(), mode.as_str(), metric.as_str());
+            !profiles.lock().unwrap().contains_key(&key)
+        }
+        _ => false,
+    }
+}
+
+/// Parse + resolve one job and admit it into the scheduler. Requests that
+/// fail, or whose calibration decode doubles as their response, are
+/// answered immediately and never enter the scheduler.
+#[allow(clippy::too_many_arguments)]
+fn admit_job<M: ForwardModel>(
+    job: Job,
+    sched: &mut StepScheduler<'_, M, Box<dyn Policy>>,
+    inflight: &mut HashMap<u64, Inflight>,
+    next_seq: &mut u64,
+    engine: &Engine<'_, M>,
+    tok: &Tokenizer,
+    model_cfg: &ModelConfig,
+    metrics: &Registry,
+    profiles: &SharedProfiles,
+) {
+    metrics.observe_us(
+        "admission_wait",
+        job.enqueued.elapsed().as_secs_f64() * 1e6,
+    );
+    let t0 = Instant::now();
+    let spec = match parse_policy_spec(&job.req.policy) {
+        Ok(s) => s,
+        Err(e) => {
+            metrics.add("requests_failed", 1);
+            let _ = job.resp.send(Response::failure(job.req.id, e));
+            return;
+        }
+    };
+    match resolve_policy(
+        &spec, &job.req.task, engine, tok, model_cfg, &job.req.prompt, profiles,
+    ) {
+        Err(e) => {
+            metrics.add("requests_failed", 1);
+            let _ = job.resp.send(Response::failure(job.req.id, format!("{e:#}")));
+        }
+        Ok((_, Some(cal))) => {
+            // calibration run doubles as this request's decode
+            metrics.add("calibrations", 1);
+            let resp = make_response(&job.req, &cal, t0, model_cfg, tok, true);
+            record_metrics(metrics, &resp, model_cfg);
+            let _ = job.resp.send(resp);
+        }
+        Ok((policy, None)) => match tok.layout_prompt(model_cfg, &job.req.prompt) {
+            Ok(layout) => {
+                let id = *next_seq;
+                *next_seq += 1;
+                match sched.admit(id, layout, policy) {
+                    Ok(()) => {
+                        inflight.insert(id, Inflight { job, admitted: Instant::now() });
+                    }
+                    Err(e) => {
+                        metrics.add("requests_failed", 1);
+                        let _ = job
+                            .resp
+                            .send(Response::failure(job.req.id, format!("{e:#}")));
+                    }
+                }
+            }
+            Err(e) => {
+                metrics.add("requests_failed", 1);
+                let _ = job
+                    .resp
+                    .send(Response::failure(job.req.id, format!("{e:#}")));
+            }
+        },
+    }
+}
+
 #[allow(clippy::too_many_arguments)]
 fn worker_loop<M: ForwardModel>(
     wid: usize,
@@ -250,136 +456,135 @@ fn worker_loop<M: ForwardModel>(
     model_cfg: &ModelConfig,
     tok: &Tokenizer,
     cfg: &CoordinatorConfig,
-    rx: &Arc<Mutex<Receiver<Job>>>,
+    queue: &Arc<JobQueue>,
     metrics: &Arc<Registry>,
     profiles: &SharedProfiles,
 ) {
     let engine = Engine::with_cache(model, cfg.cache);
-    log::info!("worker {wid} ready (cache={:?})", cfg.cache);
-    loop {
-        // ---- gather a batch -------------------------------------------------
-        let first = {
-            let guard = rx.lock().unwrap();
-            match guard.recv() {
-                Ok(j) => j,
-                Err(_) => break, // queue closed
-            }
+    let mut sched = engine.scheduler::<Box<dyn Policy>>(cfg.max_batch);
+    let max_active = sched.max_active();
+    let mut inflight: HashMap<u64, Inflight> = HashMap::new();
+    // calibration decodes run inline and would stall co-scheduled peers, so
+    // while the scheduler is busy they are parked here (with their park
+    // time) and run once the worker drains, or after CALIBRATION_DEFER_MAX
+    let mut deferred: VecDeque<(Job, Instant)> = VecDeque::new();
+    let mut next_seq: u64 = 0;
+    log::info!(
+        "worker {wid} ready (cache={:?}, slots={max_active})",
+        cfg.cache
+    );
+    macro_rules! admit {
+        ($job:expr) => {
+            admit_job(
+                $job, &mut sched, &mut inflight, &mut next_seq, &engine, tok,
+                model_cfg, metrics, profiles,
+            )
         };
-        let mut jobs = vec![first];
-        // batching only helps the uncached path (cached decode is batch-1).
-        // NOTE: the gather must use try_lock — an idle sibling worker parks
-        // inside `recv()` *holding* the shared-receiver mutex, so a blocking
-        // lock here deadlocks until the next request arrives.
-        if !cfg.cache.enabled {
-            let deadline = Instant::now() + cfg.batch_wait;
-            while jobs.len() < cfg.max_batch.min(model.max_batch()) {
-                let remaining = deadline.saturating_duration_since(Instant::now());
-                if remaining.is_zero() {
-                    break;
-                }
-                match rx.try_lock() {
-                    Ok(guard) => match guard.recv_timeout(remaining) {
-                        Ok(j) => jobs.push(j),
-                        Err(RecvTimeoutError::Timeout) => break,
-                        Err(RecvTimeoutError::Disconnected) => break,
-                    },
-                    Err(std::sync::TryLockError::WouldBlock) => {
-                        // a sibling holds the queue; it will take the next
-                        // job anyway — stop gathering and decode what we have
-                        break;
-                    }
-                    Err(std::sync::TryLockError::Poisoned(_)) => break,
-                }
+    }
+    loop {
+        // ---- admission: fill free slots at the step boundary ---------------
+        if sched.is_idle() {
+            // nothing to stall: run parked calibration jobs first
+            while let Some((job, _parked)) = deferred.pop_front() {
+                admit!(job);
             }
+        } else if deferred
+            .front()
+            .is_some_and(|(_, parked)| parked.elapsed() > CALIBRATION_DEFER_MAX)
+        {
+            // escape hatch: a parked calibration eventually runs anyway
+            // rather than waiting forever for the worker to drain
+            let (job, _parked) = deferred.pop_front().expect("front checked");
+            admit!(job);
         }
-        metrics.set_gauge("last_batch_size", jobs.len() as i64);
-
-        // ---- resolve policies / layouts; split off failures & calibrations --
-        let mut ready: Vec<(Job, Vec<u32>, Box<dyn Policy>)> = Vec::new();
-        for job in jobs {
-            metrics.observe_us(
-                "queue_wait",
-                job.enqueued.elapsed().as_secs_f64() * 1e6,
-            );
-            let t0 = Instant::now();
-            let spec = match parse_policy_spec(&job.req.policy) {
-                Ok(s) => s,
-                Err(e) => {
-                    metrics.add("requests_failed", 1);
-                    let _ = job.resp.send(Response::failure(job.req.id, e));
-                    continue;
-                }
-            };
-            match resolve_policy(
-                &spec, &job.req.task, &engine, tok, model_cfg, &job.req.prompt, profiles,
-            ) {
-                Err(e) => {
-                    metrics.add("requests_failed", 1);
-                    let _ = job.resp.send(Response::failure(job.req.id, format!("{e:#}")));
-                }
-                Ok((_, Some(cal))) => {
-                    // calibration run doubles as this request's decode
-                    metrics.add("calibrations", 1);
-                    let resp =
-                        make_response(&job.req, &cal, t0, model_cfg, tok, true);
-                    record_metrics(metrics, &resp, model_cfg);
-                    let _ = job.resp.send(resp);
-                }
-                Ok((policy, None)) => match tok.layout_prompt(model_cfg, &job.req.prompt) {
-                    Ok(layout) => ready.push((job, layout, policy)),
-                    Err(e) => {
-                        metrics.add("requests_failed", 1);
-                        let _ = job
-                            .resp
-                            .send(Response::failure(job.req.id, format!("{e:#}")));
-                    }
-                },
-            }
-        }
-        if ready.is_empty() {
-            continue;
-        }
-
-        // ---- decode ---------------------------------------------------------
-        let t0 = Instant::now();
-        if cfg.cache.enabled || ready.len() == 1 {
-            for (job, layout, policy) in ready {
-                let t1 = Instant::now();
-                match engine.decode(layout, policy.as_ref()) {
-                    Ok(res) => {
-                        let resp =
-                            make_response(&job.req, &res, t1, model_cfg, tok, false);
-                        record_metrics(metrics, &resp, model_cfg);
-                        let _ = job.resp.send(resp);
-                    }
-                    Err(e) => {
-                        metrics.add("requests_failed", 1);
-                        let _ = job
-                            .resp
-                            .send(Response::failure(job.req.id, format!("{e:#}")));
+        if sched.is_idle() {
+            match queue.pop_timeout(IDLE_POLL) {
+                Popped::Closed => break,
+                Popped::Empty => continue,
+                Popped::Job(job) => {
+                    admit!(*job);
+                    // batching window: let concurrent arrivals share the
+                    // first step instead of trailing one step behind
+                    let deadline = Instant::now() + cfg.batch_wait;
+                    while sched.scheduled_len() < max_active {
+                        let left = deadline.saturating_duration_since(Instant::now());
+                        if left.is_zero() {
+                            break;
+                        }
+                        match queue.pop_timeout(left) {
+                            Popped::Job(job) => {
+                                // a calibration here would stall the peers
+                                // already admitted this window — park it
+                                if !sched.is_idle() && needs_calibration(&job, profiles)
+                                {
+                                    metrics.add("calibrations_deferred", 1);
+                                    deferred.push_back((*job, Instant::now()));
+                                } else {
+                                    admit!(*job);
+                                }
+                            }
+                            _ => break,
+                        }
                     }
                 }
             }
         } else {
-            let layouts: Vec<Vec<u32>> =
-                ready.iter().map(|(_, l, _)| l.clone()).collect();
-            let policies: Vec<&dyn Policy> =
-                ready.iter().map(|(_, _, p)| p.as_ref()).collect();
-            match engine.decode_batch(layouts, &policies) {
-                Ok(results) => {
-                    for ((job, _, _), res) in ready.into_iter().zip(results) {
-                        let resp = make_response(&job.req, &res, t0, model_cfg, tok, false);
-                        record_metrics(metrics, &resp, model_cfg);
-                        let _ = job.resp.send(resp);
+            while sched.scheduled_len() < max_active {
+                match queue.try_pop() {
+                    Popped::Job(job) => {
+                        if needs_calibration(&job, profiles) {
+                            metrics.add("calibrations_deferred", 1);
+                            deferred.push_back((*job, Instant::now()));
+                        } else {
+                            admit!(*job);
+                        }
                     }
+                    _ => break,
                 }
-                Err(e) => {
-                    let msg = format!("{e:#}");
-                    for (job, _, _) in ready {
-                        metrics.add("requests_failed", 1);
-                        let _ = job.resp.send(Response::failure(job.req.id, &msg));
-                    }
+            }
+        }
+        metrics.set_gauge("queue_depth", queue.depth() as i64);
+        if sched.is_idle() {
+            continue; // admissions failed or were served by calibration
+        }
+
+        // ---- one scheduler step: every active sequence advances ------------
+        match sched.step() {
+            Ok(report) => {
+                if report.occupancy > 0 {
+                    metrics.add("scheduler_steps", 1);
+                    metrics.add("scheduled_seq_steps", report.occupancy as u64);
+                    metrics.set_gauge("batch_occupancy", report.occupancy as i64);
+                    metrics.max_gauge("batch_occupancy_peak", report.occupancy as i64);
+                    metrics.observe("batch_occupancy", report.occupancy as f64);
                 }
+                for (id, res) in report.retired {
+                    let Some(inf) = inflight.remove(&id) else {
+                        log::warn!("worker {wid}: retired unknown sequence {id}");
+                        continue;
+                    };
+                    let resp =
+                        make_response(&inf.job.req, &res, inf.admitted, model_cfg, tok, false);
+                    record_metrics(metrics, &resp, model_cfg);
+                    let _ = inf.job.resp.send(resp);
+                }
+                if sched.is_idle() {
+                    // don't leave a phantom occupancy on the gauge once the
+                    // worker drains (peak + histogram keep the history)
+                    metrics.set_gauge("batch_occupancy", 0);
+                }
+            }
+            Err(e) => {
+                // a failed forward pass poisons every scheduled sequence:
+                // fail them all and restart from an empty scheduler
+                let msg = format!("{e:#}");
+                log::error!("worker {wid}: scheduler step failed: {msg}");
+                for (_, inf) in inflight.drain() {
+                    metrics.add("requests_failed", 1);
+                    let _ = inf.job.resp.send(Response::failure(inf.job.req.id, &msg));
+                }
+                sched = engine.scheduler::<Box<dyn Policy>>(max_active);
+                metrics.set_gauge("batch_occupancy", 0);
             }
         }
     }
@@ -507,10 +712,112 @@ mod tests {
     }
 
     #[test]
+    fn cached_coordinator_forms_batches() {
+        // the acceptance bar for the continuous-batching refactor: with the
+        // KV cache ON (the config the old lockstep gather refused to batch)
+        // a single worker must still co-schedule concurrent requests
+        let c = start_sim(CoordinatorConfig {
+            workers: 1,
+            max_batch: 4,
+            batch_wait: Duration::from_millis(50),
+            cache: CacheConfig::block_boundary(),
+        });
+        let mut rxs = Vec::new();
+        for i in 0..8 {
+            rxs.push(c.submit(Request {
+                id: 0,
+                task: "synth-math".into(),
+                prompt: format!("Q: {i}+2=?"),
+                policy: "static:0.9".into(),
+            }));
+        }
+        for rx in rxs {
+            let r = rx.recv().unwrap();
+            assert!(r.error.is_none(), "{:?}", r.error);
+            assert!(r.window_passes > 0, "cached path must use window passes");
+        }
+        let peak = c
+            .metrics
+            .gauge("batch_occupancy_peak")
+            .load(Ordering::Relaxed);
+        assert!(peak >= 2, "cache-on batching must form real batches (peak {peak})");
+        assert!(c.metrics.counter_value("scheduler_steps") > 0);
+        assert!(
+            c.metrics.counter_value("scheduled_seq_steps")
+                > c.metrics.counter_value("scheduler_steps"),
+            "mean occupancy must exceed 1"
+        );
+        c.shutdown();
+    }
+
+    #[test]
+    fn batched_responses_match_solo_responses() {
+        // continuous batching must not change decoded tokens: run the same
+        // prompts through a batching coordinator and a solo engine
+        let cfg = tiny_config();
+        let m = SimModel::math_like(5);
+        let engine = Engine::with_kv_cache(&m);
+        let tok = Tokenizer::from_config(&cfg).unwrap();
+        let c = start_sim(CoordinatorConfig {
+            workers: 1,
+            max_batch: 4,
+            batch_wait: Duration::from_millis(50),
+            cache: CacheConfig::block_boundary(),
+        });
+        let prompts: Vec<String> = (0..4).map(|i| format!("Q: {i}+3=?")).collect();
+        let rxs: Vec<_> = prompts
+            .iter()
+            .map(|p| {
+                c.submit(Request {
+                    id: 0,
+                    task: "synth-math".into(),
+                    prompt: p.clone(),
+                    policy: "static:0.9".into(),
+                })
+            })
+            .collect();
+        for (p, rx) in prompts.iter().zip(rxs) {
+            let served = rx.recv().unwrap();
+            assert!(served.error.is_none(), "{:?}", served.error);
+            let layout = tok.layout_prompt(&cfg, p).unwrap();
+            let solo = engine
+                .decode(layout, &StaticThreshold::new(0.9))
+                .unwrap();
+            assert_eq!(
+                served.completion,
+                tok.decode_until_eos(solo.gen_tokens(&cfg)),
+                "batched completion differs for {p}"
+            );
+            assert_eq!(served.steps, solo.steps, "{p}");
+        }
+        c.shutdown();
+    }
+
+    #[test]
     fn sequential_policy_spec_works_end_to_end() {
         let c = start_sim(CoordinatorConfig::default());
         let r = c.generate("synth-math", "Q: 2+2=?", "sequential:1").unwrap();
         assert_eq!(r.steps, tiny_config().gen_len);
         c.shutdown();
+    }
+
+    #[test]
+    fn shutdown_serves_already_queued_jobs() {
+        let c = start_sim(CoordinatorConfig::default());
+        let rxs: Vec<_> = (0..6)
+            .map(|i| {
+                c.submit(Request {
+                    id: 0,
+                    task: "synth-math".into(),
+                    prompt: format!("Q: {i}+4=?"),
+                    policy: "static:0.9".into(),
+                })
+            })
+            .collect();
+        c.shutdown(); // closes the queue; queued jobs must still be served
+        for rx in rxs {
+            let r = rx.recv().expect("queued job dropped at shutdown");
+            assert!(r.error.is_none(), "{:?}", r.error);
+        }
     }
 }

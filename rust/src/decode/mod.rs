@@ -1,4 +1,4 @@
-//! The semi-autoregressive block diffusion decode engine (DESIGN.md §4).
+//! The semi-autoregressive block diffusion decode engine (DESIGN.md §4–§5).
 //!
 //! Sequence = prompt ‖ gen region, gen region split into `num_blocks`
 //! contiguous blocks decoded left-to-right. Within a block, denoising steps
@@ -6,17 +6,29 @@
 //! greedy confidence + candidate token; the active [`Policy`] selects which
 //! masked positions to commit (always ≥ 1 — liveness).
 //!
-//! Two execution paths:
-//! - **no-cache**: every step is a full forward (`fwd_conf`), batchable
-//!   across sequences (continuous batching happens in the coordinator);
-//! - **dual KV cache** (Fast-dLLM): one `fwd_full_kv` at each block start
-//!   refreshes the cache *and* provides the step-0 prediction; subsequent
-//!   steps run the cheap `fwd_window` variant over the active block only.
+//! Execution is one loop over resumable per-sequence state machines:
+//!
+//! - [`DecodeTask`] holds one sequence's decode state — including its
+//!   Fast-dLLM dual KV cache — and exposes a `needs() -> PassKind` /
+//!   `apply(..)` step API;
+//! - [`StepScheduler`] drives many tasks with continuous batching: FIFO
+//!   admission at any step boundary, compatible passes grouped into shared
+//!   forwards, finished sequences retired immediately;
+//! - [`Engine`] is the convenience facade: `decode` / `decode_batch` build
+//!   a scheduler, admit, and drain. Cached and uncached, solo and batched
+//!   all run the same scheduler loop, so batching × KV cache × any policy
+//!   compose.
 
-use anyhow::{bail, Result};
+pub mod scheduler;
+pub mod task;
+
+pub use scheduler::{PolicyRef, StepReport, StepScheduler};
+pub use task::{DecodeTask, PassKind};
+
+use anyhow::{bail, Context, Result};
 
 use crate::model::ModelConfig;
-use crate::policy::{CalibrationTrace, Policy, StepContext};
+use crate::policy::{CalibrationTrace, Policy};
 use crate::runtime::{ConfOut, KvCache};
 
 /// Abstraction over the PJRT runtime so the engine, tests, and the analytic
@@ -25,9 +37,48 @@ use crate::runtime::{ConfOut, KvCache};
 pub trait ForwardModel {
     fn config(&self) -> &ModelConfig;
     fn max_batch(&self) -> usize;
-    fn fwd_conf(&self, batch_tokens: &[Vec<u32>]) -> Result<ConfOut>;
+    /// Full forward over a batch of borrowed sequences: per-position
+    /// confidence + greedy candidate per row.
+    fn fwd_conf(&self, batch_tokens: &[&[u32]]) -> Result<ConfOut>;
+    /// Block-boundary forward (batch 1): conf/argmax plus a refreshed dual
+    /// KV cache.
     fn fwd_full_kv(&self, tokens: &[u32]) -> Result<(ConfOut, KvCache)>;
+    /// Within-block forward (batch 1) attending against `cache`.
     fn fwd_window(&self, window: &[u32], start: usize, cache: &KvCache) -> Result<ConfOut>;
+    /// Batched window pass: same-shape windows from different sequences
+    /// share one forward. Row `i` must equal `fwd_window(windows[i],
+    /// starts[i], caches[i])` — the scheduler relies on this to keep
+    /// batched results token-identical to solo decode. The default loops
+    /// over [`ForwardModel::fwd_window`]; backends with a compiled batched
+    /// variant override it.
+    fn fwd_window_batch(
+        &self,
+        windows: &[&[u32]],
+        starts: &[usize],
+        caches: &[&KvCache],
+    ) -> Result<ConfOut> {
+        if windows.len() != starts.len() || windows.len() != caches.len() {
+            bail!(
+                "window batch arity mismatch: {} windows, {} starts, {} caches",
+                windows.len(),
+                starts.len(),
+                caches.len()
+            );
+        }
+        let mut conf = Vec::with_capacity(windows.len());
+        let mut argmax = Vec::with_capacity(windows.len());
+        for ((window, &start), cache) in windows.iter().zip(starts).zip(caches) {
+            let out = self.fwd_window(window, start, cache)?;
+            match (out.conf.into_iter().next(), out.argmax.into_iter().next()) {
+                (Some(c), Some(a)) => {
+                    conf.push(c);
+                    argmax.push(a);
+                }
+                _ => bail!("fwd_window returned no rows"),
+            }
+        }
+        Ok(ConfOut { conf, argmax })
+    }
 }
 
 impl ForwardModel for crate::runtime::ModelRuntime {
@@ -37,7 +88,7 @@ impl ForwardModel for crate::runtime::ModelRuntime {
     fn max_batch(&self) -> usize {
         self.max_batch()
     }
-    fn fwd_conf(&self, batch_tokens: &[Vec<u32>]) -> Result<ConfOut> {
+    fn fwd_conf(&self, batch_tokens: &[&[u32]]) -> Result<ConfOut> {
         crate::runtime::ModelRuntime::fwd_conf(self, batch_tokens)
     }
     fn fwd_full_kv(&self, tokens: &[u32]) -> Result<(ConfOut, KvCache)> {
@@ -45,6 +96,14 @@ impl ForwardModel for crate::runtime::ModelRuntime {
     }
     fn fwd_window(&self, window: &[u32], start: usize, cache: &KvCache) -> Result<ConfOut> {
         crate::runtime::ModelRuntime::fwd_window(self, window, start, cache)
+    }
+    fn fwd_window_batch(
+        &self,
+        windows: &[&[u32]],
+        starts: &[usize],
+        caches: &[&KvCache],
+    ) -> Result<ConfOut> {
+        crate::runtime::ModelRuntime::fwd_window_batch(self, windows, starts, caches)
     }
 }
 
@@ -73,100 +132,8 @@ impl DecodeResult {
     }
 }
 
-/// Per-sequence decode state (shared by the single and batched loops).
-struct SeqState {
-    tokens: Vec<u32>,
-    block: usize,
-    step_in_block: usize,
-    steps: usize,
-    fallback_steps: usize,
-    trace: CalibrationTrace,
-    done: bool,
-}
-
-impl SeqState {
-    fn new(tokens: Vec<u32>, cfg: &ModelConfig) -> Result<Self> {
-        if tokens.len() != cfg.seq_len {
-            bail!("layout length {} != seq_len {}", tokens.len(), cfg.seq_len);
-        }
-        Ok(SeqState {
-            tokens,
-            block: 0,
-            step_in_block: 0,
-            steps: 0,
-            fallback_steps: 0,
-            trace: CalibrationTrace::new(cfg.num_blocks),
-            done: false,
-        })
-    }
-
-    /// Masked positions (absolute) of the current block.
-    fn masked(&self, cfg: &ModelConfig) -> Vec<usize> {
-        cfg.block_range(self.block)
-            .filter(|&p| self.tokens[p] == cfg.mask_id)
-            .collect()
-    }
-
-    /// Run one policy decision given fresh conf/argmax covering the whole
-    /// sequence (`offset`=0) or the active window (`offset`=window start).
-    /// Returns the number of committed tokens.
-    fn advance(
-        &mut self,
-        cfg: &ModelConfig,
-        policy: &dyn Policy,
-        conf: &[f32],
-        argmax: &[u32],
-        offset: usize,
-    ) -> usize {
-        let masked = self.masked(cfg);
-        debug_assert!(!masked.is_empty(), "advance on completed block");
-        let local_conf: Vec<f32> = masked.iter().map(|&p| conf[p - offset]).collect();
-        self.trace
-            .record(self.block, self.step_in_block, &local_conf);
-        let ctx = StepContext {
-            block: self.block,
-            step: self.step_in_block,
-            conf: &local_conf,
-        };
-        let (sel, fell_back) = policy.select_explain(&ctx);
-        if fell_back {
-            self.fallback_steps += 1;
-        }
-        debug_assert!(!sel.is_empty(), "policy liveness violated");
-        for &i in &sel {
-            let pos = masked[i];
-            self.tokens[pos] = argmax[pos - offset];
-        }
-        self.steps += 1;
-        self.step_in_block += 1;
-        // roll over completed blocks
-        while self.block < cfg.num_blocks && self.masked(cfg).is_empty() {
-            self.block += 1;
-            self.step_in_block = 0;
-            if self.block == cfg.num_blocks {
-                self.done = true;
-                break;
-            }
-        }
-        if self.block >= cfg.num_blocks {
-            self.done = true;
-        }
-        sel.len()
-    }
-
-    fn into_result(self, full_passes: usize, window_passes: usize) -> DecodeResult {
-        DecodeResult {
-            tokens: self.tokens,
-            steps: self.steps,
-            full_passes,
-            window_passes,
-            fallback_steps: self.fallback_steps,
-            trace: self.trace,
-        }
-    }
-}
-
-/// The decode engine: one forward model + execution options.
+/// The decode engine: one forward model + execution options. A thin facade
+/// over [`StepScheduler`] for the run-to-completion cases.
 pub struct Engine<'m, M: ForwardModel> {
     model: &'m M,
     /// Fast-dLLM dual KV cache behaviour.
@@ -190,102 +157,50 @@ impl<'m, M: ForwardModel> Engine<'m, M> {
         self.model
     }
 
-    /// Decode one sequence (batch 1 — the paper's serving setup).
-    pub fn decode(&self, layout: Vec<u32>, policy: &dyn Policy) -> Result<DecodeResult> {
-        if self.cache.enabled {
-            self.decode_cached(layout, policy)
-        } else {
-            Ok(self
-                .decode_batch(vec![layout], &[policy])?
-                .pop()
-                .expect("one result"))
-        }
+    /// A fresh scheduler with this engine's model and cache configuration —
+    /// the entry point for drivers that admit/retire sequences themselves
+    /// (the coordinator's continuous-batching worker loop).
+    pub fn scheduler<P: PolicyRef>(&self, max_active: usize) -> StepScheduler<'m, M, P> {
+        StepScheduler::new(self.model, self.cache, max_active)
     }
 
-    /// Lockstep-batched decode without KV cache: each iteration runs one
-    /// batched forward over all unfinished sequences, then one policy
-    /// decision per sequence. Sequences finish independently.
+    /// Decode one sequence (batch 1 — the paper's serving setup).
+    pub fn decode(&self, layout: Vec<u32>, policy: &dyn Policy) -> Result<DecodeResult> {
+        let mut sched = self.scheduler::<&dyn Policy>(1);
+        sched.admit(0, layout, policy)?;
+        let mut results = sched.drain()?;
+        if results.len() != 1 {
+            bail!("scheduler retired {} sequences for one admission", results.len());
+        }
+        Ok(results.pop().expect("checked length").1)
+    }
+
+    /// Decode many sequences through the step scheduler. Up to the model's
+    /// max batch run concurrently (sharing forward passes); the rest queue
+    /// FIFO and join as slots free up, so any number of sequences is
+    /// accepted. Sequences finish independently; results come back in input
+    /// order. Works with the KV cache on or off.
     pub fn decode_batch(
         &self,
         layouts: Vec<Vec<u32>>,
         policies: &[&dyn Policy],
     ) -> Result<Vec<DecodeResult>> {
-        let cfg = self.model.config();
         if layouts.len() != policies.len() {
             bail!("{} layouts vs {} policies", layouts.len(), policies.len());
         }
-        if layouts.len() > self.model.max_batch() {
-            bail!(
-                "batch {} exceeds model max batch {}",
-                layouts.len(),
-                self.model.max_batch()
-            );
+        let n = layouts.len();
+        let mut sched = self.scheduler::<&dyn Policy>(self.model.max_batch());
+        for (i, (layout, &policy)) in layouts.into_iter().zip(policies).enumerate() {
+            sched.admit(i as u64, layout, policy)?;
         }
-        let mut states = layouts
-            .into_iter()
-            .map(|l| SeqState::new(l, cfg))
-            .collect::<Result<Vec<_>>>()?;
-        let mut full_passes = vec![0usize; states.len()];
-
-        loop {
-            let active: Vec<usize> = (0..states.len())
-                .filter(|&i| !states[i].done)
-                .collect();
-            if active.is_empty() {
-                break;
-            }
-            let batch: Vec<Vec<u32>> =
-                active.iter().map(|&i| states[i].tokens.clone()).collect();
-            let out = self.model.fwd_conf(&batch)?;
-            for (bi, &i) in active.iter().enumerate() {
-                states[i].advance(cfg, policies[i], &out.conf[bi], &out.argmax[bi], 0);
-                full_passes[i] += 1;
-            }
+        let mut out: Vec<Option<DecodeResult>> = (0..n).map(|_| None).collect();
+        for (id, res) in sched.drain()? {
+            out[id as usize] = Some(res);
         }
-        Ok(states
-            .into_iter()
-            .zip(full_passes)
-            .map(|(s, fp)| s.into_result(fp, 0))
-            .collect())
-    }
-
-    /// Dual-KV-cache decode (batch 1): full pass at each block start (cache
-    /// refresh + step-0 prediction), window passes within the block, with
-    /// optional staleness-bounded re-refresh (`cache.refresh_interval`).
-    fn decode_cached(&self, layout: Vec<u32>, policy: &dyn Policy) -> Result<DecodeResult> {
-        let cfg = self.model.config();
-        let mut st = SeqState::new(layout, cfg)?;
-        let mut full_passes = 0usize;
-        let mut window_passes = 0usize;
-
-        while !st.done {
-            let block = st.block;
-            let range = cfg.block_range(block);
-            // block start: refresh cache, use its prediction for step 0
-            let (out, mut cache) = self.model.fwd_full_kv(&st.tokens)?;
-            full_passes += 1;
-            st.advance(cfg, policy, &out.conf[0], &out.argmax[0], 0);
-            let mut since_refresh = 0usize;
-            // within-block steps on the window path
-            while !st.done && st.block == block {
-                if self.cache.refresh_interval > 0
-                    && since_refresh >= self.cache.refresh_interval
-                {
-                    let (out, fresh) = self.model.fwd_full_kv(&st.tokens)?;
-                    cache = fresh;
-                    full_passes += 1;
-                    since_refresh = 0;
-                    st.advance(cfg, policy, &out.conf[0], &out.argmax[0], 0);
-                } else {
-                    let window: Vec<u32> = st.tokens[range.clone()].to_vec();
-                    let out = self.model.fwd_window(&window, range.start, &cache)?;
-                    window_passes += 1;
-                    since_refresh += 1;
-                    st.advance(cfg, policy, &out.conf[0], &out.argmax[0], range.start);
-                }
-            }
-        }
-        Ok(st.into_result(full_passes, window_passes))
+        out.into_iter()
+            .enumerate()
+            .map(|(i, r)| r.with_context(|| format!("sequence {i} never retired")))
+            .collect()
     }
 }
 
@@ -395,6 +310,27 @@ mod tests {
     }
 
     #[test]
+    fn cached_batched_decode_matches_solo_cached() {
+        // batching never changes per-sequence results, cache on or off
+        let m = sim();
+        let eng = Engine::with_kv_cache(&m);
+        let p = StaticThreshold::new(0.88);
+        let layouts: Vec<Vec<u32>> = (0..3).map(|i| m.layout_from_seed(30 + i)).collect();
+        let solos: Vec<DecodeResult> = layouts
+            .iter()
+            .map(|l| eng.decode(l.clone(), &p).unwrap())
+            .collect();
+        let policies: Vec<&dyn Policy> = vec![&p, &p, &p];
+        let batched = eng.decode_batch(layouts, &policies).unwrap();
+        for (b, s) in batched.iter().zip(&solos) {
+            assert_eq!(b.tokens, s.tokens);
+            assert_eq!(b.steps, s.steps);
+            assert_eq!(b.full_passes, s.full_passes);
+            assert_eq!(b.window_passes, s.window_passes);
+        }
+    }
+
+    #[test]
     fn rejects_wrong_layout_len() {
         let m = sim();
         let eng = Engine::new(&m);
@@ -402,15 +338,26 @@ mod tests {
     }
 
     #[test]
-    fn rejects_oversized_batch() {
+    fn oversized_batch_queues_and_completes() {
+        // more sequences than the model's max batch: the scheduler queues
+        // the overflow and every sequence still matches its solo decode
         let m = sim();
         let eng = Engine::new(&m);
-        let p = SequentialTopK::new(1);
-        let layouts: Vec<Vec<u32>> = (0..m.max_batch() + 1)
-            .map(|i| m.layout_from_seed(i as u64))
+        let p = StaticThreshold::new(0.85);
+        let n = m.max_batch() + 3;
+        let layouts: Vec<Vec<u32>> =
+            (0..n).map(|i| m.layout_from_seed(i as u64)).collect();
+        let solos: Vec<DecodeResult> = layouts
+            .iter()
+            .map(|l| eng.decode(l.clone(), &p).unwrap())
             .collect();
-        let policies: Vec<&dyn crate::policy::Policy> =
-            layouts.iter().map(|_| &p as &dyn crate::policy::Policy).collect();
-        assert!(eng.decode_batch(layouts, &policies).is_err());
+        let policies: Vec<&dyn Policy> =
+            layouts.iter().map(|_| &p as &dyn Policy).collect();
+        let batched = eng.decode_batch(layouts, &policies).unwrap();
+        assert_eq!(batched.len(), n);
+        for (b, s) in batched.iter().zip(&solos) {
+            assert_eq!(b.tokens, s.tokens);
+            assert_eq!(b.steps, s.steps);
+        }
     }
 }

@@ -1,0 +1,340 @@
+//! [`DecodeTask`]: one sequence's decode state as a resumable step machine
+//! (DESIGN.md §4).
+//!
+//! A task advances one policy decision at a time. Between decisions it is
+//! inert data, so any driver — the batch-1 [`super::Engine`] loop, the
+//! continuous-batching [`super::StepScheduler`], a test harness — can hold
+//! thousands of tasks and interleave them freely. The contract per step:
+//!
+//! 1. ask [`DecodeTask::needs`] which forward pass the task requires;
+//! 2. run that pass (batching compatible passes across tasks);
+//! 3. for [`PassKind::FullKv`], [`DecodeTask::install_cache`] the fresh
+//!    K/V first;
+//! 4. feed the task's output row to [`DecodeTask::apply`].
+//!
+//! The task owns its per-sequence dual KV cache, which is what lets cached
+//! and uncached execution share one driver loop: the cache is just another
+//! piece of per-task state that `needs()` consults.
+
+use anyhow::{bail, Result};
+
+use crate::cache::CacheConfig;
+use crate::model::ModelConfig;
+use crate::policy::{CalibrationTrace, Policy, StepContext};
+use crate::runtime::KvCache;
+
+use super::DecodeResult;
+
+/// The forward pass a task requires for its next step.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PassKind {
+    /// Full uncached forward over the whole sequence; batchable across
+    /// tasks via [`super::ForwardModel::fwd_conf`].
+    Full,
+    /// Block-boundary (or staleness-triggered) full forward that also
+    /// refreshes this task's dual KV cache (`fwd_full_kv`, batch 1).
+    FullKv,
+    /// Window forward over the active block at absolute position `start`,
+    /// attending against the installed cache; batchable across tasks via
+    /// [`super::ForwardModel::fwd_window_batch`].
+    Window { start: usize },
+    /// Sequence complete — retire the task.
+    Done,
+}
+
+/// Resumable per-sequence decode state (public successor of the engine's
+/// old private `SeqState`, which was locked inside two run-to-completion
+/// loops).
+#[derive(Clone, Debug)]
+pub struct DecodeTask {
+    tokens: Vec<u32>,
+    block: usize,
+    step_in_block: usize,
+    steps: usize,
+    full_passes: usize,
+    window_passes: usize,
+    fallback_steps: usize,
+    trace: CalibrationTrace,
+    done: bool,
+    cache_cfg: CacheConfig,
+    /// Per-sequence dual KV cache; `None` until the first block-boundary
+    /// refresh, and dropped again whenever the active block changes.
+    cache: Option<KvCache>,
+    /// Window steps since the last cache refresh (staleness bound).
+    since_refresh: usize,
+}
+
+impl DecodeTask {
+    /// Build a task from a full-sequence layout (prompt ‖ gen region).
+    /// Blocks that arrive with no masked positions are skipped immediately,
+    /// so a fully-committed layout is born `Done`.
+    pub fn new(tokens: Vec<u32>, cfg: &ModelConfig, cache_cfg: CacheConfig) -> Result<Self> {
+        if tokens.len() != cfg.seq_len {
+            bail!("layout length {} != seq_len {}", tokens.len(), cfg.seq_len);
+        }
+        let mut task = DecodeTask {
+            tokens,
+            block: 0,
+            step_in_block: 0,
+            steps: 0,
+            full_passes: 0,
+            window_passes: 0,
+            fallback_steps: 0,
+            trace: CalibrationTrace::new(cfg.num_blocks),
+            done: false,
+            cache_cfg,
+            cache: None,
+            since_refresh: 0,
+        };
+        while task.block < cfg.num_blocks && task.masked(cfg).is_empty() {
+            task.block += 1;
+        }
+        if task.block >= cfg.num_blocks {
+            task.done = true;
+        }
+        Ok(task)
+    }
+
+    /// Which forward pass this task needs next.
+    pub fn needs(&self, cfg: &ModelConfig) -> PassKind {
+        if self.done {
+            return PassKind::Done;
+        }
+        if !self.cache_cfg.enabled {
+            return PassKind::Full;
+        }
+        let stale = self.cache_cfg.refresh_interval > 0
+            && self.since_refresh >= self.cache_cfg.refresh_interval;
+        if self.cache.is_none() || stale {
+            return PassKind::FullKv;
+        }
+        PassKind::Window { start: cfg.block_range(self.block).start }
+    }
+
+    /// Full token sequence (prompt region + committed + remaining masks).
+    pub fn tokens(&self) -> &[u32] {
+        &self.tokens
+    }
+
+    /// The active block's token window (input of a [`PassKind::Window`]).
+    pub fn window(&self, cfg: &ModelConfig) -> &[u32] {
+        &self.tokens[cfg.block_range(self.block)]
+    }
+
+    /// The installed dual KV cache, if any.
+    pub fn cache(&self) -> Option<&KvCache> {
+        self.cache.as_ref()
+    }
+
+    /// Install a freshly refreshed cache (after a `FullKv` pass, before the
+    /// matching [`DecodeTask::apply`]).
+    pub fn install_cache(&mut self, cache: KvCache) {
+        self.cache = Some(cache);
+        self.since_refresh = 0;
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.done
+    }
+
+    /// Active gen block (meaningful while `!is_done()`).
+    pub fn block(&self) -> usize {
+        self.block
+    }
+
+    /// Policy decisions taken so far.
+    pub fn steps(&self) -> usize {
+        self.steps
+    }
+
+    /// Masked positions (absolute) of the current block.
+    fn masked(&self, cfg: &ModelConfig) -> Vec<usize> {
+        cfg.block_range(self.block)
+            .filter(|&p| self.tokens[p] == cfg.mask_id)
+            .collect()
+    }
+
+    /// Run one policy decision on fresh conf/argmax produced by a `kind`
+    /// pass (`Full`/`FullKv` rows cover the whole sequence; `Window` rows
+    /// cover the active block). Returns the number of committed tokens.
+    pub fn apply(
+        &mut self,
+        cfg: &ModelConfig,
+        policy: &dyn Policy,
+        kind: PassKind,
+        conf: &[f32],
+        argmax: &[u32],
+    ) -> usize {
+        debug_assert!(!self.done, "apply on a finished task");
+        let offset = match kind {
+            PassKind::Window { start } => start,
+            _ => 0,
+        };
+        let masked = self.masked(cfg);
+        debug_assert!(!masked.is_empty(), "apply on completed block");
+        let local_conf: Vec<f32> = masked.iter().map(|&p| conf[p - offset]).collect();
+        self.trace
+            .record(self.block, self.step_in_block, &local_conf);
+        let ctx = StepContext {
+            block: self.block,
+            step: self.step_in_block,
+            conf: &local_conf,
+        };
+        let (sel, fell_back) = policy.select_explain(&ctx);
+        if fell_back {
+            self.fallback_steps += 1;
+        }
+        debug_assert!(!sel.is_empty(), "policy liveness violated");
+        for &i in &sel {
+            let pos = masked[i];
+            self.tokens[pos] = argmax[pos - offset];
+        }
+        self.steps += 1;
+        self.step_in_block += 1;
+        match kind {
+            PassKind::Full | PassKind::FullKv => self.full_passes += 1,
+            PassKind::Window { .. } => {
+                self.window_passes += 1;
+                self.since_refresh += 1;
+            }
+            PassKind::Done => {}
+        }
+        let prev_block = self.block;
+        // roll over completed blocks
+        while self.block < cfg.num_blocks && self.masked(cfg).is_empty() {
+            self.block += 1;
+            self.step_in_block = 0;
+            if self.block == cfg.num_blocks {
+                self.done = true;
+                break;
+            }
+        }
+        if self.block >= cfg.num_blocks {
+            self.done = true;
+        }
+        if self.block != prev_block {
+            // entering a new block invalidates the dual cache — Fast-dLLM
+            // refreshes prefix and suffix K/V at every block boundary
+            self.cache = None;
+            self.since_refresh = 0;
+        }
+        sel.len()
+    }
+
+    /// Consume the task into its final [`DecodeResult`].
+    pub fn into_result(self) -> DecodeResult {
+        DecodeResult {
+            tokens: self.tokens,
+            steps: self.steps,
+            full_passes: self.full_passes,
+            window_passes: self.window_passes,
+            fallback_steps: self.fallback_steps,
+            trace: self.trace,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::decode::ForwardModel;
+    use crate::model::fixtures::tiny_config;
+    use crate::policy::StaticThreshold;
+    use crate::sim::SimModel;
+
+    #[test]
+    fn uncached_task_always_needs_full() {
+        let cfg = tiny_config();
+        let m = SimModel::math_like(1);
+        let task =
+            DecodeTask::new(m.layout_from_seed(1), &cfg, CacheConfig::disabled()).unwrap();
+        assert_eq!(task.needs(&cfg), PassKind::Full);
+    }
+
+    #[test]
+    fn cached_task_alternates_refresh_and_window() {
+        let cfg = tiny_config();
+        let m = SimModel::math_like(2);
+        let mut task = DecodeTask::new(
+            m.layout_from_seed(2),
+            &cfg,
+            CacheConfig::block_boundary(),
+        )
+        .unwrap();
+        let p = StaticThreshold::new(0.95);
+        // block start: refresh required
+        assert_eq!(task.needs(&cfg), PassKind::FullKv);
+        let (out, kv) = m.fwd_full_kv(task.tokens()).unwrap();
+        task.install_cache(kv);
+        task.apply(&cfg, &p, PassKind::FullKv, &out.conf[0], &out.argmax[0]);
+        // within the block: window passes against the installed cache
+        if !task.is_done() && task.block() == 0 {
+            match task.needs(&cfg) {
+                PassKind::Window { start } => {
+                    assert_eq!(start, cfg.block_range(0).start)
+                }
+                other => panic!("expected window pass, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn block_rollover_drops_cache() {
+        let cfg = tiny_config();
+        let m = SimModel::math_like(3);
+        let mut task = DecodeTask::new(
+            m.layout_from_seed(3),
+            &cfg,
+            CacheConfig::block_boundary(),
+        )
+        .unwrap();
+        let p = StaticThreshold::new(0.5); // lax: blocks finish in few steps
+        let mut saw_second_refresh = false;
+        for _ in 0..(4 * cfg.gen_len) {
+            if task.is_done() {
+                break;
+            }
+            match task.needs(&cfg) {
+                PassKind::FullKv => {
+                    if task.block() > 0 {
+                        saw_second_refresh = true;
+                    }
+                    let (out, kv) = m.fwd_full_kv(task.tokens()).unwrap();
+                    task.install_cache(kv);
+                    task.apply(&cfg, &p, PassKind::FullKv, &out.conf[0], &out.argmax[0]);
+                }
+                PassKind::Window { start } => {
+                    let out = m
+                        .fwd_window(task.window(&cfg), start, task.cache().unwrap())
+                        .unwrap();
+                    task.apply(
+                        &cfg,
+                        &p,
+                        PassKind::Window { start },
+                        &out.conf[0],
+                        &out.argmax[0],
+                    );
+                }
+                other => panic!("unexpected pass {other:?}"),
+            }
+        }
+        assert!(task.is_done());
+        assert!(saw_second_refresh, "every block boundary must refresh");
+    }
+
+    #[test]
+    fn fully_committed_layout_is_born_done() {
+        let cfg = tiny_config();
+        let layout = vec![4u32; cfg.seq_len]; // no [MASK] anywhere
+        let task = DecodeTask::new(layout, &cfg, CacheConfig::disabled()).unwrap();
+        assert!(task.is_done());
+        assert_eq!(task.needs(&cfg), PassKind::Done);
+        assert_eq!(task.into_result().steps, 0);
+    }
+
+    #[test]
+    fn rejects_wrong_length() {
+        let cfg = tiny_config();
+        assert!(DecodeTask::new(vec![0; 3], &cfg, CacheConfig::disabled()).is_err());
+    }
+}

@@ -14,7 +14,9 @@ use crate::util::stats::Histogram;
 pub struct Registry {
     counters: Mutex<BTreeMap<String, std::sync::Arc<AtomicU64>>>,
     gauges: Mutex<BTreeMap<String, std::sync::Arc<AtomicI64>>>,
-    histograms: Mutex<BTreeMap<String, std::sync::Arc<Mutex<Histogram>>>>,
+    /// name -> (histogram, unit suffix rendered after each statistic;
+    /// "us" for latencies, "" for unitless series like batch occupancy)
+    histograms: Mutex<BTreeMap<String, (std::sync::Arc<Mutex<Histogram>>, &'static str)>>,
     start: Option<Instant>,
 }
 
@@ -56,18 +58,39 @@ impl Registry {
         self.gauge(name).store(v, Ordering::Relaxed);
     }
 
-    pub fn histogram(&self, name: &str) -> std::sync::Arc<Mutex<Histogram>> {
+    /// Monotonic high-water gauge: keeps the maximum of all reported values.
+    pub fn max_gauge(&self, name: &str, v: i64) {
+        self.gauge(name).fetch_max(v, Ordering::Relaxed);
+    }
+
+    fn histogram_with_unit(
+        &self,
+        name: &str,
+        unit: &'static str,
+    ) -> std::sync::Arc<Mutex<Histogram>> {
         self.histograms
             .lock()
             .unwrap()
             .entry(name.to_string())
-            .or_insert_with(|| std::sync::Arc::new(Mutex::new(Histogram::latency())))
+            .or_insert_with(|| {
+                (std::sync::Arc::new(Mutex::new(Histogram::latency())), unit)
+            })
+            .0
             .clone()
+    }
+
+    pub fn histogram(&self, name: &str) -> std::sync::Arc<Mutex<Histogram>> {
+        self.histogram_with_unit(name, "us")
     }
 
     /// Record a latency observation in microseconds.
     pub fn observe_us(&self, name: &str, us: f64) {
-        self.histogram(name).lock().unwrap().record(us);
+        self.histogram_with_unit(name, "us").lock().unwrap().record(us);
+    }
+
+    /// Record a unitless observation (queue depth, batch occupancy, ...).
+    pub fn observe(&self, name: &str, v: f64) {
+        self.histogram_with_unit(name, "").lock().unwrap().record(v);
     }
 
     pub fn uptime_secs(&self) -> f64 {
@@ -87,20 +110,25 @@ impl Registry {
         for (name, g) in self.gauges.lock().unwrap().iter() {
             out.push_str(&format!("osdt_{name} {}\n", g.load(Ordering::Relaxed)));
         }
-        for (name, h) in self.histograms.lock().unwrap().iter() {
+        for (name, (h, unit)) in self.histograms.lock().unwrap().iter() {
             let h = h.lock().unwrap();
             if h.n == 0 {
                 continue;
             }
+            let suffix = if unit.is_empty() {
+                String::new()
+            } else {
+                format!("_{unit}")
+            };
             out.push_str(&format!("osdt_{name}_count {}\n", h.n));
-            out.push_str(&format!("osdt_{name}_mean_us {:.1}\n", h.mean()));
+            out.push_str(&format!("osdt_{name}_mean{suffix} {:.1}\n", h.mean()));
             for (q, label) in [(0.5, "p50"), (0.95, "p95"), (0.99, "p99")] {
                 out.push_str(&format!(
-                    "osdt_{name}_{label}_us {:.1}\n",
+                    "osdt_{name}_{label}{suffix} {:.1}\n",
                     h.quantile(q)
                 ));
             }
-            out.push_str(&format!("osdt_{name}_max_us {:.1}\n", h.max));
+            out.push_str(&format!("osdt_{name}_max{suffix} {:.1}\n", h.max));
         }
         out
     }
@@ -149,6 +177,28 @@ mod tests {
         r.set_gauge("queue_depth", 7);
         r.set_gauge("queue_depth", 3);
         assert_eq!(r.gauge("queue_depth").load(Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn max_gauge_keeps_high_water() {
+        let r = Registry::new();
+        r.max_gauge("batch_occupancy_peak", 2);
+        r.max_gauge("batch_occupancy_peak", 4);
+        r.max_gauge("batch_occupancy_peak", 1);
+        assert_eq!(r.gauge("batch_occupancy_peak").load(Ordering::Relaxed), 4);
+    }
+
+    #[test]
+    fn unitless_histograms_render_without_us_suffix() {
+        let r = Registry::new();
+        r.observe("batch_occupancy", 2.0);
+        r.observe("batch_occupancy", 4.0);
+        r.observe_us("step", 1500.0);
+        let text = r.render();
+        assert!(text.contains("osdt_batch_occupancy_count 2"), "{text}");
+        assert!(text.contains("osdt_batch_occupancy_p50 "), "{text}");
+        assert!(!text.contains("osdt_batch_occupancy_p50_us"), "{text}");
+        assert!(text.contains("osdt_step_p50_us"), "{text}");
     }
 
     #[test]

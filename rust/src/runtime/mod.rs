@@ -54,6 +54,8 @@ pub struct ModelRuntime {
     executables: BTreeMap<String, xla::PjRtLoadedExecutable>,
     /// batch sizes with a compiled fwd_conf variant, ascending
     conf_batches: Vec<usize>,
+    /// batch sizes with a compiled fwd_window variant, ascending
+    window_batches: Vec<usize>,
     stats: std::cell::Cell<RuntimeStats>,
 }
 
@@ -79,6 +81,7 @@ impl ModelRuntime {
 
         let mut executables = BTreeMap::new();
         let mut conf_batches = Vec::new();
+        let mut window_batches = Vec::new();
         for (name, v) in &cfg.variants {
             let path = cfg.hlo_path(v);
             let proto = xla::HloModuleProto::from_text_file(&path)
@@ -91,8 +94,13 @@ impl ModelRuntime {
             if let Some(b) = name.strip_prefix("fwd_conf_b") {
                 conf_batches.push(b.parse::<usize>().context("variant batch suffix")?);
             }
+            if let Some(b) = name.strip_prefix("fwd_window_b") {
+                window_batches
+                    .push(b.parse::<usize>().context("variant batch suffix")?);
+            }
         }
         conf_batches.sort_unstable();
+        window_batches.sort_unstable();
         if conf_batches.is_empty() {
             bail!("no fwd_conf_b* variants in model_config.json");
         }
@@ -108,6 +116,7 @@ impl ModelRuntime {
             weight_bufs,
             executables,
             conf_batches,
+            window_batches,
             stats: std::cell::Cell::new(RuntimeStats::default()),
         })
     }
@@ -176,11 +185,11 @@ impl ModelRuntime {
         Ok(parts)
     }
 
-    /// Full forward over a batch of token sequences (each of len seq_len):
-    /// per-position confidence + greedy candidate. `batch` may be any size
-    /// up to `max_batch`; sequences are padded to the compiled batch shape
-    /// and the padding rows are dropped from the output.
-    pub fn fwd_conf(&self, batch_tokens: &[Vec<u32>]) -> Result<ConfOut> {
+    /// Full forward over a batch of borrowed token sequences (each of len
+    /// seq_len): per-position confidence + greedy candidate. `batch` may be
+    /// any size up to `max_batch`; sequences are padded to the compiled
+    /// batch shape and the padding rows are dropped from the output.
+    pub fn fwd_conf(&self, batch_tokens: &[&[u32]]) -> Result<ConfOut> {
         let n = batch_tokens.len();
         if n == 0 {
             return Ok(ConfOut { conf: vec![], argmax: vec![] });
@@ -267,6 +276,123 @@ impl ModelRuntime {
         let parts = self.run("fwd_window_b1", &[tok_buf, start_buf, k_buf, v_buf])?;
         self.bump(|st| st.fwd_window_calls += 1);
         let (conf, argmax) = unpack_conf(&parts, 1, w)?;
+        Ok(ConfOut { conf, argmax })
+    }
+
+    /// Batched within-block forward: `n` same-shape windows from different
+    /// sequences share one pass. Uses a compiled `fwd_window_b{B}` variant
+    /// when the artifact set has one that fits (windows stacked to [B, w],
+    /// caches to [B, layers, heads, seq, head_dim], padding rows zeroed);
+    /// otherwise falls back to sequential batch-1 window passes, which is
+    /// result-identical.
+    pub fn fwd_window_batch(
+        &self,
+        windows: &[&[u32]],
+        starts: &[usize],
+        caches: &[&KvCache],
+    ) -> Result<ConfOut> {
+        let n = windows.len();
+        if n != starts.len() || n != caches.len() {
+            bail!(
+                "window batch arity mismatch: {} windows, {} starts, {} caches",
+                n,
+                starts.len(),
+                caches.len()
+            );
+        }
+        if n == 0 {
+            return Ok(ConfOut { conf: vec![], argmax: vec![] });
+        }
+        let bmax = self.window_batches.last().copied().unwrap_or(1);
+        if n == 1 || bmax <= 1 {
+            // no compiled batched variant — run the exact batch-1 path
+            let mut conf = Vec::with_capacity(n);
+            let mut argmax = Vec::with_capacity(n);
+            for ((window, &start), cache) in windows.iter().zip(starts).zip(caches) {
+                let mut out = self.fwd_window(window, start, cache)?;
+                conf.push(std::mem::take(&mut out.conf[0]));
+                argmax.push(std::mem::take(&mut out.argmax[0]));
+            }
+            return Ok(ConfOut { conf, argmax });
+        }
+        // chunk by the largest compiled variant (mirrors fwd_conf's
+        // pick_batch) so n beyond it still uses stacked passes
+        if n > bmax {
+            let mut conf = Vec::with_capacity(n);
+            let mut argmax = Vec::with_capacity(n);
+            let mut at = 0;
+            while at < n {
+                let end = (at + bmax).min(n);
+                let mut out = self.fwd_window_batch(
+                    &windows[at..end],
+                    &starts[at..end],
+                    &caches[at..end],
+                )?;
+                conf.append(&mut out.conf);
+                argmax.append(&mut out.argmax);
+                at = end;
+            }
+            return Ok(ConfOut { conf, argmax });
+        }
+        let b = self
+            .window_batches
+            .iter()
+            .copied()
+            .find(|&b| b >= n)
+            .unwrap_or(bmax);
+        let w = self.cfg.block_len;
+        let cache_dims = [
+            self.cfg.n_layers,
+            self.cfg.n_heads,
+            self.cfg.seq_len,
+            self.cfg.head_dim,
+        ];
+        let cache_len: usize = cache_dims.iter().product();
+        let mut flat_tok = Vec::with_capacity(b * w);
+        let mut flat_start = Vec::with_capacity(b);
+        let mut flat_k = Vec::with_capacity(b * cache_len);
+        let mut flat_v = Vec::with_capacity(b * cache_len);
+        for ((window, &start), cache) in windows.iter().zip(starts).zip(caches) {
+            if window.len() != w {
+                bail!("window length {} != {w}", window.len());
+            }
+            if cache.dims != cache_dims {
+                bail!("cache dims {:?} != {:?}", cache.dims, cache_dims);
+            }
+            flat_tok.extend(window.iter().map(|&t| t as i32));
+            flat_start.push(start as i32);
+            flat_k.extend_from_slice(&cache.k);
+            flat_v.extend_from_slice(&cache.v);
+        }
+        // padding rows: pad tokens, start 0, zero caches
+        flat_tok.resize(b * w, self.cfg.pad_id as i32);
+        flat_start.resize(b, 0);
+        flat_k.resize(b * cache_len, 0.0);
+        flat_v.resize(b * cache_len, 0.0);
+        let tok_buf = self.tokens_buffer(&flat_tok, &[b, w])?;
+        let start_buf = self
+            .client
+            .buffer_from_host_buffer::<i32>(&flat_start, &[b], None)
+            .context("uploading start vector")?;
+        let stacked = [
+            b,
+            cache_dims[0],
+            cache_dims[1],
+            cache_dims[2],
+            cache_dims[3],
+        ];
+        let k_buf = self
+            .client
+            .buffer_from_host_buffer::<f32>(&flat_k, &stacked, None)
+            .context("uploading stacked k cache")?;
+        let v_buf = self
+            .client
+            .buffer_from_host_buffer::<f32>(&flat_v, &stacked, None)
+            .context("uploading stacked v cache")?;
+        let parts =
+            self.run(&format!("fwd_window_b{b}"), &[tok_buf, start_buf, k_buf, v_buf])?;
+        self.bump(|st| st.fwd_window_calls += n as u64);
+        let (conf, argmax) = unpack_conf(&parts, n, w)?;
         Ok(ConfOut { conf, argmax })
     }
 

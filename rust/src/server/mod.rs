@@ -286,6 +286,11 @@ mod tests {
         let m = c.metrics().unwrap();
         assert!(m.contains("osdt_requests_submitted_total"), "{m}");
         assert!(m.contains("osdt_requests_completed_total 1"), "{m}");
+        // scheduler metrics ride the same exposition
+        assert!(m.contains("osdt_queue_depth"), "{m}");
+        assert!(m.contains("osdt_batch_occupancy"), "{m}");
+        assert!(m.contains("osdt_admission_wait_count"), "{m}");
+        assert!(m.contains("osdt_scheduler_steps_total"), "{m}");
         server.stop();
     }
 

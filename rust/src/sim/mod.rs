@@ -158,7 +158,7 @@ impl ForwardModel for SimModel {
         4
     }
 
-    fn fwd_conf(&self, batch_tokens: &[Vec<u32>]) -> Result<ConfOut> {
+    fn fwd_conf(&self, batch_tokens: &[&[u32]]) -> Result<ConfOut> {
         let mut conf = Vec::new();
         let mut argmax = Vec::new();
         for seq in batch_tokens {
@@ -203,8 +203,8 @@ mod tests {
     fn deterministic() {
         let m = SimModel::math_like(3);
         let l = m.layout_from_seed(5);
-        let a = m.fwd_conf(&[l.clone()]).unwrap();
-        let b = m.fwd_conf(&[l]).unwrap();
+        let a = m.fwd_conf(&[l.as_slice()]).unwrap();
+        let b = m.fwd_conf(&[l.as_slice()]).unwrap();
         assert_eq!(a.conf, b.conf);
         assert_eq!(a.argmax, b.argmax);
     }

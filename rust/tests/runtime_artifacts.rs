@@ -69,7 +69,7 @@ fn fwd_conf_matches_python_golden() {
 
     let (cfg, rt, tok) = load();
     let layout = tok.layout_prompt(&cfg, prompt).unwrap();
-    let out = rt.fwd_conf(&[layout]).unwrap();
+    let out = rt.fwd_conf(&[layout.as_slice()]).unwrap();
     for i in 0..8 {
         let got = f64::from(out.conf[0][64 + i]);
         assert!(
@@ -87,9 +87,9 @@ fn batch_variants_agree_with_b1() {
     let (cfg, rt, tok) = load();
     let l1 = tok.layout_prompt(&cfg, "Q: 5+6=?").unwrap();
     let l2 = tok.layout_prompt(&cfg, "Q: 9-2=?").unwrap();
-    let solo1 = rt.fwd_conf(&[l1.clone()]).unwrap();
-    let solo2 = rt.fwd_conf(&[l2.clone()]).unwrap();
-    let both = rt.fwd_conf(&[l1, l2]).unwrap(); // compiled b2 variant
+    let solo1 = rt.fwd_conf(&[l1.as_slice()]).unwrap();
+    let solo2 = rt.fwd_conf(&[l2.as_slice()]).unwrap();
+    let both = rt.fwd_conf(&[l1.as_slice(), l2.as_slice()]).unwrap(); // compiled b2 variant
     for (a, b) in [(&solo1.conf[0], &both.conf[0]), (&solo2.conf[0], &both.conf[1])] {
         for i in 0..cfg.seq_len {
             assert!(
@@ -109,7 +109,7 @@ fn full_kv_conf_matches_fwd_conf() {
     let _ = require_artifacts!();
     let (cfg, rt, tok) = load();
     let layout = tok.layout_prompt(&cfg, "Q: class of foo?").unwrap();
-    let plain = rt.fwd_conf(&[layout.clone()]).unwrap();
+    let plain = rt.fwd_conf(&[layout.as_slice()]).unwrap();
     let (kvout, cache) = rt.fwd_full_kv(&layout).unwrap();
     for i in 0..cfg.seq_len {
         assert!(

@@ -1,0 +1,239 @@
+//! Integration tests of the continuous-batching step scheduler (DESIGN.md
+//! §5) over the analytic simulator: mid-flight admission, independent
+//! retirement, and the core correctness bar — scheduling decisions never
+//! change per-sequence results, cache on or off.
+
+use osdt::cache::CacheConfig;
+use osdt::decode::{DecodeResult, Engine, ForwardModel, StepScheduler};
+use osdt::policy::{FactorThreshold, Policy, SequentialTopK, StaticThreshold};
+use osdt::sim::SimModel;
+use osdt::util::prop;
+use osdt::util::rng::Rng;
+
+fn by_id(results: &[(u64, DecodeResult)], id: u64) -> &DecodeResult {
+    &results
+        .iter()
+        .find(|(i, _)| *i == id)
+        .unwrap_or_else(|| panic!("sequence {id} missing"))
+        .1
+}
+
+#[test]
+fn mid_flight_admission_joins_at_next_step_boundary() {
+    let m = SimModel::math_like(21);
+    let eng = Engine::new(&m);
+    let p = StaticThreshold::new(0.9);
+    let solo_a = eng.decode(m.layout_from_seed(1), &p).unwrap();
+    let solo_b = eng.decode(m.layout_from_seed(2), &p).unwrap();
+    assert!(solo_a.steps > 3, "test needs a decode longer than 3 steps");
+
+    let mut sched: StepScheduler<'_, SimModel, &dyn Policy> =
+        StepScheduler::new(&m, CacheConfig::disabled(), 4);
+    sched.admit(0, m.layout_from_seed(1), &p).unwrap();
+    let mut retired = Vec::new();
+    for _ in 0..3 {
+        let r = sched.step().unwrap();
+        assert_eq!(r.occupancy, 1, "A decodes alone before B arrives");
+        retired.extend(r.retired);
+    }
+    // B arrives mid-flight and must join the very next step
+    sched.admit(1, m.layout_from_seed(2), &p).unwrap();
+    let r = sched.step().unwrap();
+    assert_eq!(r.occupancy, 2, "B must join at the next step boundary");
+    retired.extend(r.retired);
+    retired.extend(sched.drain().unwrap());
+
+    // joining a running batch changes neither sequence's outcome
+    let a = by_id(&retired, 0);
+    let b = by_id(&retired, 1);
+    assert_eq!(a.tokens, solo_a.tokens);
+    assert_eq!(a.steps, solo_a.steps);
+    assert_eq!(b.tokens, solo_b.tokens);
+    assert_eq!(b.steps, solo_b.steps);
+}
+
+#[test]
+fn finished_sequences_retire_without_blocking_peers() {
+    let m = SimModel::math_like(22);
+    let cfg = m.config().clone();
+    let fast = StaticThreshold::new(0.5); // lax: a few steps per block
+    let slow = SequentialTopK::new(1); // exactly gen_len steps
+    let mut sched: StepScheduler<'_, SimModel, &dyn Policy> =
+        StepScheduler::new(&m, CacheConfig::disabled(), 4);
+    sched
+        .admit(0, m.layout_from_seed(3), &fast as &dyn Policy)
+        .unwrap();
+    sched
+        .admit(1, m.layout_from_seed(4), &slow as &dyn Policy)
+        .unwrap();
+
+    let mut fast_done_at = None;
+    let mut slow_done_at = None;
+    let mut step = 0usize;
+    while !sched.is_idle() {
+        step += 1;
+        assert!(step <= 2 * cfg.gen_len, "scheduler failed to terminate");
+        let r = sched.step().unwrap();
+        for (id, _res) in r.retired {
+            match id {
+                0 => fast_done_at = Some(step),
+                _ => slow_done_at = Some(step),
+            }
+        }
+        if fast_done_at.is_some() && slow_done_at.is_none() {
+            assert_eq!(
+                sched.active_len(),
+                1,
+                "retired sequence must leave the batch immediately"
+            );
+        }
+    }
+    let fast_done = fast_done_at.expect("fast sequence retired");
+    let slow_done = slow_done_at.expect("slow sequence retired");
+    assert!(
+        fast_done < slow_done,
+        "fast ({fast_done}) must not wait for slow ({slow_done})"
+    );
+    assert_eq!(slow_done, cfg.gen_len, "slow peer keeps its exact step count");
+}
+
+#[test]
+fn cached_mid_flight_admission_is_token_identical() {
+    let m = SimModel::qa_like(23);
+    let eng = Engine::with_kv_cache(&m);
+    let p = StaticThreshold::new(0.85);
+    let solo_a = eng.decode(m.layout_from_seed(5), &p).unwrap();
+    let solo_b = eng.decode(m.layout_from_seed(6), &p).unwrap();
+
+    let mut sched: StepScheduler<'_, SimModel, &dyn Policy> =
+        StepScheduler::new(&m, CacheConfig::block_boundary(), 4);
+    sched.admit(0, m.layout_from_seed(5), &p).unwrap();
+    sched.step().unwrap();
+    sched.step().unwrap();
+    sched.admit(1, m.layout_from_seed(6), &p).unwrap();
+    let results = sched.drain().unwrap();
+    let a = by_id(&results, 0);
+    let b = by_id(&results, 1);
+    assert_eq!(a.tokens, solo_a.tokens);
+    assert_eq!(a.window_passes, solo_a.window_passes);
+    assert_eq!(b.tokens, solo_b.tokens);
+    assert_eq!(b.full_passes, solo_b.full_passes);
+}
+
+#[test]
+fn mixed_policy_batch_matches_solo_under_every_cache_mode() {
+    let m = SimModel::code_like(24);
+    for cache in [
+        CacheConfig::disabled(),
+        CacheConfig::block_boundary(),
+        CacheConfig::with_refresh_interval(3),
+    ] {
+        let eng = Engine::with_cache(&m, cache);
+        let policies: Vec<Box<dyn Policy>> = vec![
+            Box::new(StaticThreshold::new(0.9)),
+            Box::new(SequentialTopK::new(2)),
+            Box::new(StaticThreshold::new(0.7)),
+            Box::new(FactorThreshold::new(0.95)),
+        ];
+        let layouts: Vec<Vec<u32>> =
+            (0..policies.len()).map(|i| m.layout_from_seed(40 + i as u64)).collect();
+        let solos: Vec<DecodeResult> = layouts
+            .iter()
+            .zip(&policies)
+            .map(|(l, p)| eng.decode(l.clone(), p.as_ref()).unwrap())
+            .collect();
+        let refs: Vec<&dyn Policy> = policies.iter().map(|p| p.as_ref()).collect();
+        let batched = eng.decode_batch(layouts, &refs).unwrap();
+        for (i, (b, s)) in batched.iter().zip(&solos).enumerate() {
+            assert_eq!(b.tokens, s.tokens, "cache {cache:?} seq {i}: tokens");
+            assert_eq!(b.steps, s.steps, "cache {cache:?} seq {i}: steps");
+            assert_eq!(
+                b.full_passes, s.full_passes,
+                "cache {cache:?} seq {i}: full passes"
+            );
+            assert_eq!(
+                b.window_passes, s.window_passes,
+                "cache {cache:?} seq {i}: window passes"
+            );
+        }
+    }
+}
+
+#[test]
+fn overflow_admissions_queue_fifo_and_all_retire() {
+    let m = SimModel::math_like(25);
+    let p = StaticThreshold::new(0.8);
+    let n = m.max_batch() + 3;
+    let mut sched: StepScheduler<'_, SimModel, &dyn Policy> =
+        StepScheduler::new(&m, CacheConfig::disabled(), m.max_batch());
+    for i in 0..n {
+        sched
+            .admit(i as u64, m.layout_from_seed(60 + i as u64), &p as &dyn Policy)
+            .unwrap();
+    }
+    let mut saw_full_occupancy = false;
+    let mut results = Vec::new();
+    while !sched.is_idle() {
+        let r = sched.step().unwrap();
+        saw_full_occupancy |= r.occupancy == m.max_batch();
+        assert!(r.occupancy <= m.max_batch());
+        results.extend(r.retired);
+    }
+    assert!(saw_full_occupancy, "slots must fill up under overflow load");
+    assert_eq!(results.len(), n);
+    for i in 0..n {
+        let res = by_id(&results, i as u64);
+        let solo = Engine::new(&m)
+            .decode(m.layout_from_seed(60 + i as u64), &p)
+            .unwrap();
+        assert_eq!(res.tokens, solo.tokens, "seq {i}");
+    }
+}
+
+#[test]
+fn prop_batched_matches_solo_across_settings() {
+    // random cache modes, thresholds, batch sizes (including overflow):
+    // continuous batching is invisible in per-sequence results
+    prop::forall(
+        "scheduler-transparency",
+        30,
+        |r: &mut Rng| {
+            (
+                r.next_u64(),
+                r.below(3),
+                0.5 + r.next_f64() * 0.45,
+                2 + r.below(4) as usize,
+            )
+        },
+        |&(seed, cache_kind, tau, n)| {
+            let m = SimModel::qa_like(seed);
+            let cache = match cache_kind {
+                0 => CacheConfig::disabled(),
+                1 => CacheConfig::block_boundary(),
+                _ => CacheConfig::with_refresh_interval(2),
+            };
+            let eng = Engine::with_cache(&m, cache);
+            let p = StaticThreshold::new(tau);
+            let layouts: Vec<Vec<u32>> =
+                (0..n).map(|i| m.layout_from_seed(seed ^ (i as u64))).collect();
+            let solos = layouts
+                .iter()
+                .map(|l| eng.decode(l.clone(), &p))
+                .collect::<Result<Vec<_>, _>>()
+                .map_err(|e| e.to_string())?;
+            let refs: Vec<&dyn Policy> = (0..n).map(|_| &p as &dyn Policy).collect();
+            let batched = eng
+                .decode_batch(layouts, &refs)
+                .map_err(|e| e.to_string())?;
+            for (i, (b, s)) in batched.iter().zip(&solos).enumerate() {
+                if b.tokens != s.tokens {
+                    return Err(format!("seq {i}: tokens differ"));
+                }
+                if b.steps != s.steps {
+                    return Err(format!("seq {i}: {} vs {} steps", b.steps, s.steps));
+                }
+            }
+            Ok(())
+        },
+    );
+}
