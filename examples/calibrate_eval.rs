@@ -10,7 +10,9 @@ use anyhow::Result;
 use osdt::bench::{self, RunOpts};
 use osdt::decode::Engine;
 use osdt::model::ModelConfig;
-use osdt::policy::{Calibrator, DynamicMode, Metric, ProfileStore, StaticThreshold};
+use osdt::policy::{
+    Calibrator, DynamicMode, Metric, ProfileRecord, ProfileStore, StaticThreshold,
+};
 use osdt::runtime::ModelRuntime;
 use osdt::tokenizer::Tokenizer;
 use osdt::workload::Dataset;
@@ -37,7 +39,7 @@ fn main() -> Result<()> {
     );
     let profile = Calibrator::calibrate(&cal.trace, DynamicMode::Block, Metric::Q1);
     let store = ProfileStore::new("profiles")?;
-    let path = store.save(task, &profile)?;
+    let path = store.save(&ProfileRecord::new(task, profile, cal.trace.signature()))?;
     println!("profile saved -> {}", path.display());
 
     // ---- Phase 2: evaluate OSDT vs baselines --------------------------------

@@ -1,7 +1,9 @@
 //! Multi-replica routing demo: two coordinator replicas (each with its own
-//! PJRT runtime), fronted by the task-affinity router. Shows the OSDT-aware
-//! placement property: each task calibrates exactly once across the fleet,
-//! and subsequent requests reuse the home replica's profile.
+//! PJRT runtime) sharing one fleet-wide ProfileRegistry, fronted by the
+//! task-affinity router. Each task calibrates exactly once across the
+//! fleet — enforced by the registry's single-flight calibration lease, not
+//! by placement — while task affinity keeps each task's requests on a warm
+//! home replica.
 //!
 //!     cargo run --release --example router_demo -- [n_per_task]
 
@@ -12,6 +14,7 @@ use anyhow::Result;
 use osdt::coordinator::router::{Router, RoutingPolicy};
 use osdt::coordinator::{Coordinator, CoordinatorConfig, Request};
 use osdt::model::ModelConfig;
+use osdt::policy::ProfileRegistry;
 use osdt::runtime::ModelRuntime;
 use osdt::workload::{Dataset, TASKS};
 
@@ -23,10 +26,12 @@ fn main() -> Result<()> {
         .unwrap_or(6);
 
     let cfg = ModelConfig::load("artifacts")?;
+    let registry = Arc::new(ProfileRegistry::in_memory());
     let mk_replica = || -> Result<Arc<Coordinator>> {
-        Ok(Arc::new(Coordinator::start(
+        Ok(Arc::new(Coordinator::start_with_registry(
             CoordinatorConfig::default(),
             cfg.clone(),
+            registry.clone(),
             |_| {
                 let cfg = ModelConfig::load("artifacts")?;
                 ModelRuntime::load(&cfg)
@@ -36,7 +41,7 @@ fn main() -> Result<()> {
     let replicas = vec![mk_replica()?, mk_replica()?];
     let coords: Vec<Arc<Coordinator>> = replicas.clone();
     let router = Router::new(replicas, RoutingPolicy::TaskAffinity { spill_margin: 4 })?;
-    println!("router: 2 replicas, task-affinity placement");
+    println!("router: 2 replicas, shared profile registry, task-affinity placement");
 
     let datasets = Dataset::load_all(cfg.artifact_dir.join("data"))?;
     let policy = "osdt:block:q1:0.75:0.2";
@@ -67,6 +72,15 @@ fn main() -> Result<()> {
         .map(|c| c.metrics.counter_value("calibrations"))
         .sum();
     assert_eq!(fleet_calibrations as usize, calibrations);
+    assert_eq!(
+        registry.metrics().counter_value("calibrations_completed"),
+        fleet_calibrations
+    );
+    println!(
+        "registry: {} profiles, {} lease(s) granted",
+        registry.len(),
+        registry.metrics().counter_value("leases_granted")
+    );
     let completed: u64 = coords
         .iter()
         .map(|c| c.metrics.counter_value("requests_completed"))

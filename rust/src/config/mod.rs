@@ -50,15 +50,28 @@ pub struct ServerConfig {
     pub max_batch: usize,
     /// Dynamic batcher window: max wait before dispatching a partial batch.
     pub batch_wait_ms: u64,
+    /// Profile registry persistence directory (None = in-memory only; set
+    /// to warm-start calibrations across restarts). CLI: `--profile-dir`.
+    pub profile_dir: Option<PathBuf>,
+    /// Signature-drift cosine floor (profiles below it are marked stale
+    /// and recalibrated). CLI: `--drift-floor`.
+    pub drift_floor: f64,
+    /// Registry-level EMA refinement rate (0 = pure one-shot, the paper's
+    /// setting). CLI: `--ema-alpha`.
+    pub ema_alpha: f64,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
+        let registry = crate::policy::RegistryConfig::default();
         ServerConfig {
             addr: "127.0.0.1:7474".into(),
             workers: 1,
             max_batch: 4,
             batch_wait_ms: 5,
+            profile_dir: None,
+            drift_floor: registry.drift_floor,
+            ema_alpha: registry.ema_alpha,
         }
     }
 }
@@ -99,11 +112,8 @@ pub fn parse_policy_spec(s: &str) -> Result<PolicySpec> {
             if parts.len() != 5 {
                 bail!("osdt spec is osdt:MODE:METRIC:KAPPA:EPS, got {s:?}");
             }
-            let mode = match parts[1] {
-                "block" => DynamicMode::Block,
-                "step-block" | "stepblock" => DynamicMode::StepBlock,
-                m => bail!("unknown osdt mode {m:?}"),
-            };
+            let mode = DynamicMode::parse(parts[1])
+                .map_err(|_| anyhow::anyhow!("unknown osdt mode {:?}", parts[1]))?;
             let metric = Metric::parse(parts[2])?;
             let kappa = fl(parts[3], "kappa")?;
             let epsilon = fl(parts[4], "epsilon")?;

@@ -11,18 +11,26 @@
 //! between workers, with a documented try_lock dance to avoid deadlocking
 //! on an idle sibling parked inside `recv()` holding the mutex).
 //!
-//! OSDT's two-phase structure lives here (Algorithm 1 at serving level):
-//! the **first request of a task** that asks for an OSDT policy is decoded
-//! with the static calibration policy while its trace is recorded; the
-//! resulting profile is stored in the shared [`ProfileStore`] cache and
-//! every subsequent request of that task reuses it. Calibration is
-//! per-(task, mode, metric) and happens at most once.
+//! OSDT's two-phase structure (Algorithm 1 at serving level) runs against
+//! the fleet-wide [`ProfileRegistry`] (DESIGN.md §9): the **first request
+//! of a task** that asks for an OSDT policy takes the registry's
+//! calibration lease, is decoded with the static calibration policy while
+//! its trace is recorded, and fulfills the lease; every subsequent request
+//! — on this worker, a sibling worker, or another replica sharing the
+//! registry — reuses the profile. Peers that arrive while the lease is in
+//! flight are parked (co-scheduled around the calibration) rather than
+//! calibrating redundantly: calibration is per-(task, mode, metric) and
+//! happens at most once across the fleet, by construction. Every completed
+//! OSDT decode is folded back into the registry for signature-drift
+//! detection and optional EMA refinement.
 //!
 //! Worker-loop metrics: `queue_depth` (gauge), `batch_occupancy` (gauge +
 //! unitless histogram, with a `batch_occupancy_peak` high-water gauge),
 //! `admission_wait` (histogram, enqueue → scheduler admission), and the
 //! `scheduler_steps` / `scheduled_seq_steps` counters whose ratio is the
-//! mean occupancy.
+//! mean occupancy. `calibrations_deferred` counts local calibrations
+//! parked to protect co-scheduled peers; `calibrations_awaited` counts
+//! requests parked behind a peer's in-flight calibration lease.
 
 pub mod router;
 
@@ -39,7 +47,10 @@ use crate::config::parse_policy_spec;
 use crate::decode::{DecodeResult, Engine, ForwardModel, StepScheduler};
 use crate::metrics::Registry;
 use crate::model::ModelConfig;
-use crate::policy::{Calibrator, Osdt, Policy, PolicySpec, Profile, StaticThreshold};
+use crate::policy::{
+    Acquired, Calibrator, Osdt, PeekState, Policy, PolicySpec, ProfileKey,
+    ProfileRegistry, StaticThreshold,
+};
 use crate::tokenizer::Tokenizer;
 
 /// Calibration decode policy (Phase 1 uses Fast-dLLM's static default).
@@ -51,6 +62,11 @@ const IDLE_POLL: Duration = Duration::from_millis(50);
 /// How long a calibration-triggering request may be parked while the
 /// worker is busy before it is run anyway (stalling co-scheduled peers).
 const CALIBRATION_DEFER_MAX: Duration = Duration::from_millis(500);
+
+/// How long a request parked behind a *peer's* in-flight calibration lease
+/// waits before stealing the lease and calibrating itself — the liveness
+/// bound against a stuck or lost calibrator.
+const CALIBRATION_STEAL_MAX: Duration = Duration::from_secs(5);
 
 /// A generation request.
 #[derive(Clone, Debug)]
@@ -99,10 +115,6 @@ struct Job {
     resp: Sender<Response>,
     enqueued: Instant,
 }
-
-/// Shared OSDT profile cache keyed by (task, mode, metric).
-type ProfileKey = (String, &'static str, &'static str);
-pub type SharedProfiles = Arc<Mutex<HashMap<ProfileKey, Profile>>>;
 
 /// Coordinator options.
 #[derive(Clone, Debug)]
@@ -223,27 +235,50 @@ pub struct Coordinator {
     queue: Arc<JobQueue>,
     handles: Vec<std::thread::JoinHandle<()>>,
     pub metrics: Arc<Registry>,
-    pub profiles: SharedProfiles,
+    /// Calibration/profile state; share one instance across replicas for
+    /// fleet-wide single-flight calibration.
+    pub registry: Arc<ProfileRegistry>,
     next_id: AtomicU64,
 }
 
 impl Coordinator {
-    /// Spawn workers, each building its own forward model via `factory`.
+    /// Spawn workers with a private, ephemeral [`ProfileRegistry`] (single
+    /// replica, no persistence). Fleets share state via
+    /// [`Coordinator::start_with_registry`].
     pub fn start<M, F>(cfg: CoordinatorConfig, model_cfg: ModelConfig, factory: F) -> Result<Self>
+    where
+        M: ForwardModel + 'static,
+        F: Fn(usize) -> Result<M> + Send + Sync + Clone + 'static,
+    {
+        Self::start_with_registry(
+            cfg,
+            model_cfg,
+            Arc::new(ProfileRegistry::in_memory()),
+            factory,
+        )
+    }
+
+    /// Spawn workers, each building its own forward model via `factory`,
+    /// all resolving profiles through `registry`.
+    pub fn start_with_registry<M, F>(
+        cfg: CoordinatorConfig,
+        model_cfg: ModelConfig,
+        registry: Arc<ProfileRegistry>,
+        factory: F,
+    ) -> Result<Self>
     where
         M: ForwardModel + 'static,
         F: Fn(usize) -> Result<M> + Send + Sync + Clone + 'static,
     {
         let queue = Arc::new(JobQueue::new());
         let metrics = Arc::new(Registry::new());
-        let profiles: SharedProfiles = Arc::new(Mutex::new(HashMap::new()));
         let tok = Tokenizer::from_config(&model_cfg)?;
 
         let mut handles = Vec::new();
         for wid in 0..cfg.workers.max(1) {
             let queue = queue.clone();
             let metrics = metrics.clone();
-            let profiles = profiles.clone();
+            let registry = registry.clone();
             let factory = factory.clone();
             let model_cfg = model_cfg.clone();
             let tok = tok.clone();
@@ -261,7 +296,7 @@ impl Coordinator {
                         };
                         worker_loop(
                             wid, &model, &model_cfg, &tok, &ccfg, &queue, &metrics,
-                            &profiles,
+                            &registry,
                         );
                     })
                     .context("spawning worker")?,
@@ -271,7 +306,7 @@ impl Coordinator {
             queue,
             handles,
             metrics,
-            profiles,
+            registry,
             next_id: AtomicU64::new(1),
         })
     }
@@ -329,8 +364,24 @@ impl Drop for Coordinator {
 // Worker loop
 // ---------------------------------------------------------------------------
 
-/// Build the policy for a request, running calibration if needed.
-/// Returns (policy, calibration decode if this request calibrated).
+/// Outcome of resolving a request's policy against the registry.
+enum Resolved {
+    /// Ready to decode; the key + profile epoch are carried for
+    /// post-decode observation (the epoch lets the registry drop
+    /// observations from decodes that started before a recalibration).
+    Policy(Box<dyn Policy>, Option<(ProfileKey, u64)>),
+    /// This request held the calibration lease; its calibration decode
+    /// doubles as its response.
+    Calibrated(DecodeResult),
+    /// A peer holds the calibration lease — park and retry later.
+    Parked,
+}
+
+/// Build the policy for a request, running calibration under the
+/// registry's lease if this request is the key's calibrator. With `steal`,
+/// an in-flight peer lease is taken over instead of parking (the
+/// [`CALIBRATION_STEAL_MAX`] escape hatch).
+#[allow(clippy::too_many_arguments)]
 fn resolve_policy<M: ForwardModel>(
     spec: &PolicySpec,
     task: &str,
@@ -338,28 +389,36 @@ fn resolve_policy<M: ForwardModel>(
     tok: &Tokenizer,
     model_cfg: &ModelConfig,
     prompt: &str,
-    profiles: &SharedProfiles,
-) -> Result<(Box<dyn Policy>, Option<DecodeResult>)> {
+    registry: &ProfileRegistry,
+    steal: bool,
+) -> Result<Resolved> {
     match spec {
         PolicySpec::Osdt { mode, metric, kappa, epsilon } => {
-            let key = (task.to_string(), mode.as_str(), metric.as_str());
-            if let Some(p) = profiles.lock().unwrap().get(&key).cloned() {
-                return Ok((Box::new(Osdt::from_profile(p, *kappa, *epsilon)), None));
+            let key = ProfileKey::new(task, *mode, *metric);
+            let acquired = if steal {
+                registry.acquire_stealing(&key)
+            } else {
+                registry.acquire(&key)
+            };
+            match acquired {
+                Acquired::Ready(profile, epoch) => Ok(Resolved::Policy(
+                    Box::new(Osdt::from_profile(profile, *kappa, *epsilon)),
+                    Some((key, epoch)),
+                )),
+                Acquired::InFlight => Ok(Resolved::Parked),
+                Acquired::Lease(lease) => {
+                    // Phase 1: calibrate on THIS sequence with the static
+                    // policy; an error drops the lease so a peer retries
+                    let layout = tok.layout_prompt(model_cfg, prompt)?;
+                    let cal =
+                        engine.decode(layout, &StaticThreshold::new(CALIBRATION_TAU))?;
+                    let profile = Calibrator::calibrate(&cal.trace, *mode, *metric);
+                    lease.fulfill(profile, cal.trace.signature());
+                    Ok(Resolved::Calibrated(cal))
+                }
             }
-            // Phase 1: calibrate on THIS sequence with the static policy
-            let layout = tok.layout_prompt(model_cfg, prompt)?;
-            let cal = engine.decode(layout, &StaticThreshold::new(CALIBRATION_TAU))?;
-            let profile = Calibrator::calibrate(&cal.trace, *mode, *metric);
-            profiles
-                .lock()
-                .unwrap()
-                .insert(key, profile.clone());
-            Ok((
-                Box::new(Osdt::from_profile(profile, *kappa, *epsilon)),
-                Some(cal),
-            ))
         }
-        other => Ok((other.build()?, None)),
+        other => Ok(Resolved::Policy(other.build()?, None)),
     }
 }
 
@@ -367,18 +426,59 @@ fn resolve_policy<M: ForwardModel>(
 struct Inflight {
     job: Job,
     admitted: Instant,
+    /// Set for OSDT requests: the profile key + epoch to observe
+    /// (drift/EMA) when the decode retires.
+    osdt_key: Option<(ProfileKey, u64)>,
 }
 
-/// Whether admitting this job right now would trigger a Phase-1
-/// calibration decode (an uncalibrated OSDT spec for its task).
-fn needs_calibration(job: &Job, profiles: &SharedProfiles) -> bool {
+/// A request parked at admission (calibration in flight, or a local
+/// calibration deferred to protect co-scheduled peers).
+struct Parked {
+    job: Job,
+    since: Instant,
+    /// The job's OSDT key, parsed once at park time so the per-iteration
+    /// re-classification of parked jobs doesn't re-parse the policy spec.
+    key: Option<ProfileKey>,
+}
+
+/// What admitting this job right now would mean for the scheduler.
+enum AdmitClass {
+    /// Decodes through the scheduler (or fails fast) — admit.
+    Plain,
+    /// Would run a Phase-1 calibration decode inline on this worker.
+    Calibrate,
+    /// Blocked behind a peer's in-flight calibration lease.
+    WaitRemote,
+}
+
+/// The job's OSDT profile key, if its spec parses to an OSDT policy
+/// (parse errors fail fast inside `admit_job`).
+fn osdt_key(job: &Job) -> Option<ProfileKey> {
     match parse_policy_spec(&job.req.policy) {
         Ok(PolicySpec::Osdt { mode, metric, .. }) => {
-            let key = (job.req.task.clone(), mode.as_str(), metric.as_str());
-            !profiles.lock().unwrap().contains_key(&key)
+            Some(ProfileKey::new(job.req.task.clone(), mode, metric))
         }
-        _ => false,
+        _ => None,
     }
+}
+
+fn classify(key: Option<&ProfileKey>, registry: &ProfileRegistry) -> AdmitClass {
+    match key {
+        None => AdmitClass::Plain,
+        Some(key) => match registry.peek(key) {
+            PeekState::Ready => AdmitClass::Plain,
+            PeekState::WouldCalibrate => AdmitClass::Calibrate,
+            PeekState::InFlight => AdmitClass::WaitRemote,
+        },
+    }
+}
+
+enum Admitted {
+    Scheduled,
+    Responded,
+    /// The registry told us to wait on a peer's calibration — hand the job
+    /// back for parking.
+    Parked(Job),
 }
 
 /// Parse + resolve one job and admit it into the scheduler. Requests that
@@ -387,6 +487,7 @@ fn needs_calibration(job: &Job, profiles: &SharedProfiles) -> bool {
 #[allow(clippy::too_many_arguments)]
 fn admit_job<M: ForwardModel>(
     job: Job,
+    steal: bool,
     sched: &mut StepScheduler<'_, M, Box<dyn Policy>>,
     inflight: &mut HashMap<u64, Inflight>,
     next_seq: &mut u64,
@@ -394,58 +495,73 @@ fn admit_job<M: ForwardModel>(
     tok: &Tokenizer,
     model_cfg: &ModelConfig,
     metrics: &Registry,
-    profiles: &SharedProfiles,
-) {
-    metrics.observe_us(
-        "admission_wait",
-        job.enqueued.elapsed().as_secs_f64() * 1e6,
-    );
+    registry: &ProfileRegistry,
+) -> Admitted {
+    fn fail(metrics: &Registry, job: &Job, e: impl std::fmt::Display) {
+        metrics.add("requests_failed", 1);
+        let _ = job.resp.send(Response::failure(job.req.id, e));
+    }
     let t0 = Instant::now();
     let spec = match parse_policy_spec(&job.req.policy) {
         Ok(s) => s,
         Err(e) => {
-            metrics.add("requests_failed", 1);
-            let _ = job.resp.send(Response::failure(job.req.id, e));
-            return;
+            fail(metrics, &job, e);
+            return Admitted::Responded;
         }
     };
-    match resolve_policy(
-        &spec, &job.req.task, engine, tok, model_cfg, &job.req.prompt, profiles,
-    ) {
+    let resolved = resolve_policy(
+        &spec, &job.req.task, engine, tok, model_cfg, &job.req.prompt, registry,
+        steal,
+    );
+    if !matches!(resolved, Ok(Resolved::Parked)) {
+        metrics.observe_us(
+            "admission_wait",
+            job.enqueued.elapsed().as_secs_f64() * 1e6,
+        );
+    }
+    match resolved {
         Err(e) => {
-            metrics.add("requests_failed", 1);
-            let _ = job.resp.send(Response::failure(job.req.id, format!("{e:#}")));
+            fail(metrics, &job, format!("{e:#}"));
+            Admitted::Responded
         }
-        Ok((_, Some(cal))) => {
+        Ok(Resolved::Parked) => Admitted::Parked(job),
+        Ok(Resolved::Calibrated(cal)) => {
             // calibration run doubles as this request's decode
             metrics.add("calibrations", 1);
             let resp = make_response(&job.req, &cal, t0, model_cfg, tok, true);
             record_metrics(metrics, &resp, model_cfg);
             let _ = job.resp.send(resp);
+            Admitted::Responded
         }
-        Ok((policy, None)) => match tok.layout_prompt(model_cfg, &job.req.prompt) {
-            Ok(layout) => {
-                let id = *next_seq;
-                *next_seq += 1;
-                match sched.admit(id, layout, policy) {
-                    Ok(()) => {
-                        inflight.insert(id, Inflight { job, admitted: Instant::now() });
-                    }
-                    Err(e) => {
-                        metrics.add("requests_failed", 1);
-                        let _ = job
-                            .resp
-                            .send(Response::failure(job.req.id, format!("{e:#}")));
+        Ok(Resolved::Policy(policy, osdt_key)) => {
+            match tok.layout_prompt(model_cfg, &job.req.prompt) {
+                Ok(layout) => {
+                    let id = *next_seq;
+                    *next_seq += 1;
+                    match sched.admit(id, layout, policy) {
+                        Ok(()) => {
+                            inflight.insert(
+                                id,
+                                Inflight {
+                                    job,
+                                    admitted: Instant::now(),
+                                    osdt_key,
+                                },
+                            );
+                            Admitted::Scheduled
+                        }
+                        Err(e) => {
+                            fail(metrics, &job, format!("{e:#}"));
+                            Admitted::Responded
+                        }
                     }
                 }
+                Err(e) => {
+                    fail(metrics, &job, format!("{e:#}"));
+                    Admitted::Responded
+                }
             }
-            Err(e) => {
-                metrics.add("requests_failed", 1);
-                let _ = job
-                    .resp
-                    .send(Response::failure(job.req.id, format!("{e:#}")));
-            }
-        },
+        }
     }
 }
 
@@ -458,51 +574,72 @@ fn worker_loop<M: ForwardModel>(
     cfg: &CoordinatorConfig,
     queue: &Arc<JobQueue>,
     metrics: &Arc<Registry>,
-    profiles: &SharedProfiles,
+    registry: &Arc<ProfileRegistry>,
 ) {
     let engine = Engine::with_cache(model, cfg.cache);
     let mut sched = engine.scheduler::<Box<dyn Policy>>(cfg.max_batch);
     let max_active = sched.max_active();
     let mut inflight: HashMap<u64, Inflight> = HashMap::new();
-    // calibration decodes run inline and would stall co-scheduled peers, so
-    // while the scheduler is busy they are parked here (with their park
-    // time) and run once the worker drains, or after CALIBRATION_DEFER_MAX
-    let mut deferred: VecDeque<(Job, Instant)> = VecDeque::new();
+    // parked requests: local calibrations deferred while the scheduler is
+    // busy (they would stall co-scheduled peers), and requests waiting on a
+    // peer's in-flight calibration lease; re-examined every loop iteration
+    let mut deferred: VecDeque<Parked> = VecDeque::new();
     let mut next_seq: u64 = 0;
     log::info!(
         "worker {wid} ready (cache={:?}, slots={max_active})",
         cfg.cache
     );
     macro_rules! admit {
-        ($job:expr) => {
-            admit_job(
-                $job, &mut sched, &mut inflight, &mut next_seq, &engine, tok,
-                model_cfg, metrics, profiles,
-            )
+        ($job:expr, $since:expr, $steal:expr) => {
+            if let Admitted::Parked(job) = admit_job(
+                $job, $steal, &mut sched, &mut inflight, &mut next_seq, &engine,
+                tok, model_cfg, metrics, registry,
+            ) {
+                // lost the race to a peer's lease between classify and
+                // acquire — park behind it (keeping the original park time)
+                metrics.add("calibrations_awaited", 1);
+                let key = osdt_key(&job);
+                deferred.push_back(Parked { job, since: $since, key });
+            }
         };
     }
     loop {
+        // ---- parked jobs: run any that has become runnable ------------------
+        for _ in 0..deferred.len() {
+            let p = deferred.pop_front().expect("len checked");
+            let steal = p.since.elapsed() >= CALIBRATION_STEAL_MAX;
+            match classify(p.key.as_ref(), registry) {
+                AdmitClass::Plain => admit!(p.job, p.since, false),
+                // local calibration: run once the worker drains, or after
+                // CALIBRATION_DEFER_MAX anyway rather than waiting forever
+                AdmitClass::Calibrate
+                    if sched.is_idle()
+                        || p.since.elapsed() > CALIBRATION_DEFER_MAX =>
+                {
+                    admit!(p.job, p.since, false)
+                }
+                // a peer's lease outstanding past patience: steal it
+                AdmitClass::WaitRemote if steal => admit!(p.job, p.since, true),
+                _ => deferred.push_back(p),
+            }
+        }
+
         // ---- admission: fill free slots at the step boundary ---------------
         if sched.is_idle() {
-            // nothing to stall: run parked calibration jobs first
-            while let Some((job, _parked)) = deferred.pop_front() {
-                admit!(job);
-            }
-        } else if deferred
-            .front()
-            .is_some_and(|(_, parked)| parked.elapsed() > CALIBRATION_DEFER_MAX)
-        {
-            // escape hatch: a parked calibration eventually runs anyway
-            // rather than waiting forever for the worker to drain
-            let (job, _parked) = deferred.pop_front().expect("front checked");
-            admit!(job);
-        }
-        if sched.is_idle() {
             match queue.pop_timeout(IDLE_POLL) {
-                Popped::Closed => break,
+                Popped::Closed => {
+                    // serve parked jobs before exiting (stealing any stuck
+                    // remote lease); scheduled work drains on later turns
+                    while let Some(p) = deferred.pop_front() {
+                        admit!(p.job, p.since, true);
+                    }
+                    if sched.is_idle() {
+                        break;
+                    }
+                }
                 Popped::Empty => continue,
                 Popped::Job(job) => {
-                    admit!(*job);
+                    admit!(*job, Instant::now(), false);
                     // batching window: let concurrent arrivals share the
                     // first step instead of trailing one step behind
                     let deadline = Instant::now() + cfg.batch_wait;
@@ -513,14 +650,20 @@ fn worker_loop<M: ForwardModel>(
                         }
                         match queue.pop_timeout(left) {
                             Popped::Job(job) => {
-                                // a calibration here would stall the peers
-                                // already admitted this window — park it
-                                if !sched.is_idle() && needs_calibration(&job, profiles)
-                                {
-                                    metrics.add("calibrations_deferred", 1);
-                                    deferred.push_back((*job, Instant::now()));
-                                } else {
-                                    admit!(*job);
+                                let key = osdt_key(&job);
+                                match classify(key.as_ref(), registry) {
+                                    AdmitClass::Plain => {
+                                        admit!(*job, Instant::now(), false)
+                                    }
+                                    // a calibration would stall the peers
+                                    // already admitted this window — park it
+                                    // (unless the window is still empty)
+                                    AdmitClass::Calibrate if sched.is_idle() => {
+                                        admit!(*job, Instant::now(), false)
+                                    }
+                                    class => {
+                                        park(metrics, &class, &mut deferred, *job, key);
+                                    }
                                 }
                             }
                             _ => break,
@@ -532,11 +675,10 @@ fn worker_loop<M: ForwardModel>(
             while sched.scheduled_len() < max_active {
                 match queue.try_pop() {
                     Popped::Job(job) => {
-                        if needs_calibration(&job, profiles) {
-                            metrics.add("calibrations_deferred", 1);
-                            deferred.push_back((*job, Instant::now()));
-                        } else {
-                            admit!(*job);
+                        let key = osdt_key(&job);
+                        match classify(key.as_ref(), registry) {
+                            AdmitClass::Plain => admit!(*job, Instant::now(), false),
+                            class => park(metrics, &class, &mut deferred, *job, key),
                         }
                     }
                     _ => break,
@@ -545,7 +687,7 @@ fn worker_loop<M: ForwardModel>(
         }
         metrics.set_gauge("queue_depth", queue.depth() as i64);
         if sched.is_idle() {
-            continue; // admissions failed or were served by calibration
+            continue; // admissions failed, parked, or served by calibration
         }
 
         // ---- one scheduler step: every active sequence advances ------------
@@ -563,6 +705,11 @@ fn worker_loop<M: ForwardModel>(
                         log::warn!("worker {wid}: retired unknown sequence {id}");
                         continue;
                     };
+                    // fold the decode back into the registry: drift
+                    // detection + optional EMA refinement
+                    if let Some((key, epoch)) = &inf.osdt_key {
+                        registry.observe(key, *epoch, &res.trace);
+                    }
                     let resp =
                         make_response(&inf.job.req, &res, inf.admitted, model_cfg, tok, false);
                     record_metrics(metrics, &resp, model_cfg);
@@ -589,6 +736,22 @@ fn worker_loop<M: ForwardModel>(
         }
     }
     log::info!("worker {wid} exiting");
+}
+
+/// Park a job that cannot be admitted right now, counting why.
+fn park(
+    metrics: &Registry,
+    class: &AdmitClass,
+    deferred: &mut VecDeque<Parked>,
+    job: Job,
+    key: Option<ProfileKey>,
+) {
+    match class {
+        AdmitClass::Calibrate => metrics.add("calibrations_deferred", 1),
+        AdmitClass::WaitRemote => metrics.add("calibrations_awaited", 1),
+        AdmitClass::Plain => {}
+    }
+    deferred.push_back(Parked { job, since: Instant::now(), key });
 }
 
 fn make_response(
@@ -655,6 +818,81 @@ mod tests {
         let r3 = c.generate("synth-qa", "Q: class of x?", spec).unwrap();
         assert!(r3.calibrated);
         assert_eq!(c.metrics.counter_value("calibrations"), 2);
+        // registry-level fleet counters agree
+        assert_eq!(
+            c.registry.metrics().counter_value("calibrations_completed"),
+            2
+        );
+        c.shutdown();
+    }
+
+    #[test]
+    fn concurrent_osdt_requests_calibrate_exactly_once() {
+        // single-flight across workers: even with 2 workers racing on the
+        // same task, the registry lease allows exactly one calibration
+        let c = Arc::new(start_sim(CoordinatorConfig {
+            workers: 2,
+            ..CoordinatorConfig::default()
+        }));
+        let spec = "osdt:block:q1:0.75:0.2";
+        let rxs: Vec<_> = (0..12)
+            .map(|_| {
+                c.submit(Request {
+                    id: 0,
+                    task: "synth-math".into(),
+                    prompt: "Q: 2+2=?".into(),
+                    policy: spec.into(),
+                })
+            })
+            .collect();
+        let mut calibrated = 0usize;
+        for rx in rxs {
+            let r = rx.recv().unwrap();
+            assert!(r.error.is_none(), "{:?}", r.error);
+            calibrated += usize::from(r.calibrated);
+        }
+        assert_eq!(calibrated, 1, "exactly one response may calibrate");
+        assert_eq!(c.metrics.counter_value("calibrations"), 1);
+        assert_eq!(
+            c.registry.metrics().counter_value("calibrations_completed"),
+            1
+        );
+        Arc::try_unwrap(c).ok().map(Coordinator::shutdown);
+    }
+
+    #[test]
+    fn invalidated_profile_recalibrates_on_next_request() {
+        let c = start_sim(CoordinatorConfig::default());
+        let spec = "osdt:block:q1:0.75:0.2";
+        assert!(c.generate("synth-math", "Q: 1+2=?", spec).unwrap().calibrated);
+        let key = ProfileKey::new(
+            "synth-math",
+            crate::policy::DynamicMode::Block,
+            crate::policy::Metric::Q1,
+        );
+        assert!(c.registry.invalidate(&key));
+        let r = c.generate("synth-math", "Q: 3+4=?", spec).unwrap();
+        assert!(r.calibrated, "stale profile must recalibrate");
+        assert_eq!(c.metrics.counter_value("calibrations"), 2);
+        assert_eq!(c.registry.metrics().counter_value("recalibrations"), 1);
+        c.shutdown();
+    }
+
+    #[test]
+    fn completed_decodes_are_observed_by_the_registry() {
+        let c = start_sim(CoordinatorConfig::default());
+        let spec = "osdt:block:q1:0.75:0.2";
+        c.generate("synth-math", "Q: 1+2=?", spec).unwrap();
+        for i in 0..3 {
+            c.generate("synth-math", &format!("Q: {i}+4=?"), spec).unwrap();
+        }
+        let key = ProfileKey::new(
+            "synth-math",
+            crate::policy::DynamicMode::Block,
+            crate::policy::Metric::Q1,
+        );
+        let entry = c.registry.get(&key).unwrap();
+        assert_eq!(entry.observed, 3, "non-calibration decodes feed drift tracking");
         c.shutdown();
     }
 
@@ -673,6 +911,20 @@ mod tests {
         let long = "x".repeat(500);
         let r = c.generate("synth-math", &long, "static:0.9").unwrap();
         assert!(r.error.is_some());
+        c.shutdown();
+    }
+
+    #[test]
+    fn failed_calibration_releases_the_lease() {
+        // an oversized prompt fails its calibration decode; the dropped
+        // lease must let the next request calibrate instead of deadlocking
+        let c = start_sim(CoordinatorConfig::default());
+        let spec = "osdt:block:q1:0.75:0.2";
+        let bad = c.generate("synth-math", &"x".repeat(500), spec).unwrap();
+        assert!(bad.error.is_some());
+        let good = c.generate("synth-math", "Q: 1+2=?", spec).unwrap();
+        assert!(good.error.is_none(), "{:?}", good.error);
+        assert!(good.calibrated, "lease must have been released");
         c.shutdown();
     }
 

@@ -6,11 +6,18 @@
 //! - `RoundRobin`       — uniform spread.
 //! - `LeastOutstanding` — join-the-shortest-queue by in-flight count.
 //! - `TaskAffinity`     — hash the task name to a home replica, spilling to
-//!   the least-loaded one when the home replica is overloaded. This is the
-//!   OSDT-aware policy: calibration profiles are *per-task*, so keeping a
-//!   task on one replica means exactly one calibration per task per process
-//!   and warm profile reuse thereafter (the paper's one-shot property made
-//!   into a placement rule).
+//!   the least-loaded one when the home replica is overloaded.
+//!
+//! Since the fleet-wide [`ProfileRegistry`](crate::policy::ProfileRegistry)
+//! (replicas built via [`Coordinator::start_with_registry`] around one
+//! shared `Arc`), *single calibration per task* holds under **any** routing
+//! policy by construction — the registry's calibration lease, not hash
+//! placement, enforces it. `TaskAffinity` remains as a cache-warmth
+//! optimization: keeping a task's requests on one replica keeps that
+//! replica's runtime and batch composition warm for the task, and for
+//! fleets of *independent* coordinators (separate registries, e.g. separate
+//! processes without a shared store) it still bounds calibrations to one
+//! per task per process.
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::Receiver;
@@ -183,6 +190,7 @@ mod tests {
     use super::*;
     use crate::coordinator::CoordinatorConfig;
     use crate::model::fixtures::tiny_config;
+    use crate::policy::ProfileRegistry;
     use crate::sim::SimModel;
 
     fn replica() -> Arc<Coordinator> {
@@ -190,6 +198,18 @@ mod tests {
             Coordinator::start(CoordinatorConfig::default(), tiny_config(), |_| {
                 Ok(SimModel::math_like(1))
             })
+            .unwrap(),
+        )
+    }
+
+    fn replica_with(registry: &Arc<ProfileRegistry>) -> Arc<Coordinator> {
+        Arc::new(
+            Coordinator::start_with_registry(
+                CoordinatorConfig::default(),
+                tiny_config(),
+                registry.clone(),
+                |_| Ok(SimModel::math_like(1)),
+            )
             .unwrap(),
         )
     }
@@ -239,6 +259,45 @@ mod tests {
             .map(|p| usize::from(p.recv().unwrap().calibrated))
             .sum();
         assert_eq!(calibrated, 1, "task affinity -> one calibration");
+    }
+
+    #[test]
+    fn shared_registry_calibrates_once_under_any_routing() {
+        // the registry acceptance bar: N replicas sharing one registry,
+        // M concurrent same-task OSDT requests, *round-robin* routing (no
+        // affinity to lean on) -> exactly one calibration fleet-wide,
+        // enforced by the calibration lease alone
+        let registry = Arc::new(ProfileRegistry::in_memory());
+        let replicas = vec![
+            replica_with(&registry),
+            replica_with(&registry),
+            replica_with(&registry),
+        ];
+        let coords: Vec<Arc<Coordinator>> = replicas.clone();
+        let r = Router::new(replicas, RoutingPolicy::RoundRobin).unwrap();
+        let pending: Vec<_> = (0..12)
+            .map(|_| {
+                r.submit(Request {
+                    id: 0,
+                    task: "synth-math".into(),
+                    prompt: "Q: 2+2=?".into(),
+                    policy: "osdt:block:q1:0.75:0.2".into(),
+                })
+            })
+            .collect();
+        let mut calibrated = 0usize;
+        for p in pending {
+            let resp = p.recv().unwrap();
+            assert!(resp.error.is_none(), "{:?}", resp.error);
+            calibrated += usize::from(resp.calibrated);
+        }
+        assert_eq!(calibrated, 1, "single-flight violated across replicas");
+        let fleet: u64 = coords
+            .iter()
+            .map(|c| c.metrics.counter_value("calibrations"))
+            .sum();
+        assert_eq!(fleet, 1);
+        assert_eq!(registry.metrics().counter_value("calibrations_completed"), 1);
     }
 
     #[test]

@@ -17,11 +17,14 @@ use anyhow::{bail, Context, Result};
 
 use osdt::bench::{self, RunOpts};
 use osdt::cache::CacheConfig;
-use osdt::config::Args;
+use osdt::config::{Args, ServerConfig};
 use osdt::coordinator::{Coordinator, CoordinatorConfig};
 use osdt::decode::Engine;
 use osdt::model::ModelConfig;
-use osdt::policy::{Calibrator, DynamicMode, Metric, ProfileStore, StaticThreshold};
+use osdt::policy::{
+    Calibrator, DynamicMode, Metric, ProfileRecord, ProfileRegistry, ProfileStore,
+    RegistryConfig, StaticThreshold,
+};
 use osdt::runtime::ModelRuntime;
 use osdt::server::Server;
 use osdt::tokenizer::Tokenizer;
@@ -30,7 +33,7 @@ use osdt::workload::Dataset;
 const VALUE_FLAGS: &[&str] = &[
     "artifacts", "policy", "task", "prompt", "n", "addr", "workers",
     "max-batch", "batch-wait-ms", "mode", "metric", "profile-dir", "tau",
-    "refresh-interval", "save",
+    "refresh-interval", "save", "drift-floor", "ema-alpha",
 ];
 
 fn main() {
@@ -68,6 +71,7 @@ USAGE: osdt <COMMAND> [FLAGS]
 COMMANDS:
   generate   --prompt 'Q: 3+4=?' [--policy static:0.9] [--cache]
   serve      [--addr 127.0.0.1:7474] [--workers 1] [--max-batch 4] [--cache]
+             [--profile-dir DIR] [--drift-floor 0.95] [--ema-alpha 0]
   eval       --task synth-math [--policy osdt:block:q1:0.75:0.2] [--n 64]
   calibrate  --task synth-math [--mode block] [--metric q1] [--profile-dir profiles]
   traces     --task synth-math [--n 8] [--tau 0.9]
@@ -77,6 +81,11 @@ COMMON FLAGS:
   --artifacts DIR   artifact directory (default: artifacts)
   --cache           enable the Fast-dLLM dual KV cache path
   --refresh-interval N  cache staleness bound (window steps; 0 = block only)
+
+PROFILE REGISTRY (serve):
+  --profile-dir DIR    persist calibrated profiles; warm-start on restart
+  --drift-floor F      signature-drift cosine floor for recalibration
+  --ema-alpha A        registry-level EMA threshold refinement (0 = one-shot)
 
 POLICY SPECS:
   sequential[:k] | static[:tau] | factor[:f] | osdt:MODE:METRIC:KAPPA:EPS
@@ -133,21 +142,49 @@ fn cmd_generate(args: &Args) -> Result<()> {
 fn cmd_serve(args: &Args) -> Result<()> {
     let dir = args.get_or("artifacts", "artifacts").to_string();
     let cfg = ModelConfig::load(&dir)?;
+    let defaults = ServerConfig::default();
+    let scfg = ServerConfig {
+        addr: args.get_or("addr", &defaults.addr).to_string(),
+        workers: args.get_parse("workers", defaults.workers)?,
+        max_batch: args.get_parse("max-batch", defaults.max_batch)?,
+        batch_wait_ms: args.get_parse("batch-wait-ms", defaults.batch_wait_ms)?,
+        profile_dir: args.get("profile-dir").map(std::path::PathBuf::from),
+        drift_floor: args.get_parse("drift-floor", defaults.drift_floor)?,
+        ema_alpha: args.get_parse("ema-alpha", defaults.ema_alpha)?,
+    };
     let ccfg = CoordinatorConfig {
-        workers: args.get_parse("workers", 1usize)?,
-        max_batch: args.get_parse("max-batch", 4usize)?,
-        batch_wait: std::time::Duration::from_millis(
-            args.get_parse("batch-wait-ms", 5u64)?,
-        ),
+        workers: scfg.workers,
+        max_batch: scfg.max_batch,
+        batch_wait: std::time::Duration::from_millis(scfg.batch_wait_ms),
         cache: cache_config(args)?,
     };
-    let coord = Arc::new(Coordinator::start(ccfg, cfg, move |wid| {
-        log::info!("worker {wid}: loading runtime from {dir}");
-        let cfg = ModelConfig::load(&dir)?;
-        ModelRuntime::load(&cfg)
-    })?);
-    let addr = args.get_or("addr", "127.0.0.1:7474");
-    let server = Server::start(addr, coord)?;
+    let rcfg = RegistryConfig {
+        drift_floor: scfg.drift_floor,
+        ema_alpha: scfg.ema_alpha,
+    };
+    let registry = Arc::new(match &scfg.profile_dir {
+        Some(pdir) => {
+            let reg = ProfileRegistry::with_store(ProfileStore::new(pdir)?, rcfg)?;
+            log::info!(
+                "profile registry: {} profile(s) warm-started from {}",
+                reg.len(),
+                pdir.display()
+            );
+            reg
+        }
+        None => ProfileRegistry::with_config(rcfg),
+    });
+    let coord = Arc::new(Coordinator::start_with_registry(
+        ccfg,
+        cfg,
+        registry,
+        move |wid| {
+            log::info!("worker {wid}: loading runtime from {dir}");
+            let cfg = ModelConfig::load(&dir)?;
+            ModelRuntime::load(&cfg)
+        },
+    )?);
+    let server = Server::start(&scfg.addr, coord)?;
     println!("osdt serving on {}", server.addr);
     // serve until killed
     loop {
@@ -200,7 +237,8 @@ fn cmd_calibrate(args: &Args) -> Result<()> {
     let cal = engine.decode(layout, &StaticThreshold::new(bench::CALIBRATION_TAU))?;
     let profile = Calibrator::calibrate(&cal.trace, mode, metric);
     let store = ProfileStore::new(args.get_or("profile-dir", "profiles"))?;
-    let path = store.save(&task, &profile)?;
+    let path =
+        store.save(&ProfileRecord::new(task.as_str(), profile, cal.trace.signature()))?;
     println!("calibrated {task} ({} steps) -> {}", cal.steps, path.display());
     Ok(())
 }

@@ -13,6 +13,11 @@
 //! α = 0 reduces exactly to OSDT; α = 1 is "always use the latest sequence"
 //! (instance-level, which the paper argues is unnecessary). The A5 ablation
 //! compares the three regimes.
+//!
+//! The EMA rule itself lives in [`Profile::blend`] and is shared with the
+//! fleet-wide [`super::ProfileRegistry`], whose `observe` path applies the
+//! same refinement at registry level; `AdaptiveOsdt` remains as the
+//! self-contained per-policy variant the ablations compare against.
 
 use std::sync::RwLock;
 
@@ -58,7 +63,7 @@ impl AdaptiveOsdt {
         }
         let fresh = Calibrator::calibrate(trace, self.mode, self.metric);
         let current = self.inner.read().unwrap().profile().clone();
-        let blended = blend(&current, &fresh, self.alpha, self.metric);
+        let blended = current.blend(&fresh, self.alpha);
         *self.inner.write().unwrap() = Osdt::from_profile(blended, self.kappa, self.epsilon);
         *self.observed.write().unwrap() += 1;
     }
@@ -69,35 +74,6 @@ impl AdaptiveOsdt {
 
     pub fn snapshot(&self) -> Profile {
         self.inner.read().unwrap().profile().clone()
-    }
-}
-
-fn blend(old: &Profile, new: &Profile, alpha: f64, metric: Metric) -> Profile {
-    let nb = old.num_blocks().max(new.num_blocks());
-    match old.mode {
-        DynamicMode::Block => {
-            let taus = (0..nb)
-                .map(|b| {
-                    let o = old.tau(b, 0);
-                    let n = new.tau(b, 0);
-                    (1.0 - alpha) * o + alpha * n
-                })
-                .collect();
-            Profile::block(taus, metric)
-        }
-        DynamicMode::StepBlock => {
-            // blend step-wise up to the max calibrated depth of either
-            // profile; tau() clamping fills the shorter one
-            let taus = (0..nb)
-                .map(|b| {
-                    let depth = old.steps_in_block(b).max(new.steps_in_block(b)).max(1);
-                    (0..depth)
-                        .map(|s| (1.0 - alpha) * old.tau(b, s) + alpha * new.tau(b, s))
-                        .collect()
-                })
-                .collect();
-            Profile::step_block(taus, metric)
-        }
     }
 }
 

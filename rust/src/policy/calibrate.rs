@@ -33,16 +33,26 @@ impl CalibrationTrace {
     /// Step-block mean-confidence vector, flattened in (block, step) order —
     /// the paper's "confidence signature" used for Figures 1–2.
     pub fn signature(&self) -> Vec<f64> {
+        self.block_signatures().into_iter().flatten().collect()
+    }
+
+    /// Per-block step-mean confidences with the block structure preserved —
+    /// the registry's drift-detection input, where per-block alignment
+    /// matters because policies take different step counts per block.
+    pub fn block_signatures(&self) -> Vec<Vec<f64>> {
         self.per_block
             .iter()
-            .flat_map(|steps| {
-                steps.iter().map(|v| {
-                    if v.is_empty() {
-                        0.0
-                    } else {
-                        v.iter().sum::<f64>() / v.len() as f64
-                    }
-                })
+            .map(|steps| {
+                steps
+                    .iter()
+                    .map(|v| {
+                        if v.is_empty() {
+                            0.0
+                        } else {
+                            v.iter().sum::<f64>() / v.len() as f64
+                        }
+                    })
+                    .collect()
             })
             .collect()
     }

@@ -21,6 +21,7 @@ mod calibrate;
 mod factor;
 mod osdt;
 mod profile;
+mod registry;
 mod static_thresh;
 mod topk;
 
@@ -28,20 +29,34 @@ pub use adaptive::AdaptiveOsdt;
 pub use calibrate::{CalibrationTrace, Calibrator};
 pub use factor::FactorThreshold;
 pub use osdt::Osdt;
-pub use profile::{Profile, ProfileStore};
+pub use profile::{
+    encode_task, Profile, ProfileRecord, ProfileStore, PROFILE_SCHEMA_VERSION,
+};
+pub use registry::{
+    signature_cosine, Acquired, CalibrationLease, PeekState, ProfileEntry,
+    ProfileKey, ProfileRegistry, ProfileSummary, RegistryConfig,
+};
 pub use static_thresh::StaticThreshold;
 pub use topk::SequentialTopK;
 
 use anyhow::{bail, Result};
 
 /// OSDT dynamic mode M (paper §4.1).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum DynamicMode {
     Block,
     StepBlock,
 }
 
 impl DynamicMode {
+    pub fn parse(s: &str) -> Result<DynamicMode> {
+        Ok(match s {
+            "block" => DynamicMode::Block,
+            "step-block" | "stepblock" => DynamicMode::StepBlock,
+            _ => bail!("unknown mode {s:?} (block|step-block)"),
+        })
+    }
+
     pub fn as_str(&self) -> &'static str {
         match self {
             DynamicMode::Block => "block",
@@ -52,7 +67,7 @@ impl DynamicMode {
 
 /// OSDT threshold metric μ (paper §4.1): statistic over calibration
 /// confidences. q2 == median.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Metric {
     Mean,
     Q1,

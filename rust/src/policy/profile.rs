@@ -1,18 +1,33 @@
 //! Calibrated threshold profiles + on-disk persistence.
 //!
 //! A `Profile` is the output of Phase 1 (calibration) and the input to the
-//! OSDT policy in Phase 2. `ProfileStore` persists profiles as JSON under a
-//! directory keyed by (task, mode, metric) so a calibration can be reused
-//! across server restarts — the "reusable task-level confidence signature"
-//! the paper's conclusion points at.
+//! OSDT policy in Phase 2. A [`ProfileRecord`] wraps a profile with its
+//! provenance — the calibration sequence's confidence signature and a
+//! monotonically increasing version — and [`ProfileStore`] persists records
+//! as JSON under a directory keyed by (task, mode, metric) so a calibration
+//! can be reused across server restarts: the "reusable task-level confidence
+//! signature" the paper's conclusion points at, made durable.
+//!
+//! Persistence format (DESIGN.md §9): one JSON object per file with
+//! `schema` (currently 2), `task`, `mode`, `metric`, `taus`, `signature`
+//! (step-block mean confidences of the calibration sequence, the drift
+//! reference), and `version`. Schema-1 files (no signature/version) still
+//! load; their signature is adopted from the first live decode. Task names
+//! are percent-encoded into filenames so keys like `a/b` cannot escape the
+//! store directory, and saves go through a temp-file + rename so a crashed
+//! writer never leaves a torn profile behind.
 
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use anyhow::{bail, Context, Result};
 
 use crate::util::json::Json;
 
 use super::{DynamicMode, Metric};
+
+/// On-disk schema version written by [`ProfileStore::save`].
+pub const PROFILE_SCHEMA_VERSION: u64 = 2;
 
 /// Calibrated thresholds at block or step-block granularity.
 #[derive(Clone, Debug, PartialEq)]
@@ -83,6 +98,39 @@ impl Profile {
         }
     }
 
+    /// Per-unit EMA toward `new`: τ' = (1 − α)·τ + α·τ_new, the refinement
+    /// rule shared by [`super::AdaptiveOsdt`] and the registry's
+    /// observation path. Units calibrated in only one of the two profiles
+    /// blend against the other's clamped `tau()` lookup, so the result
+    /// covers the deeper of the two.
+    pub fn blend(&self, new: &Profile, alpha: f64) -> Profile {
+        let nb = self.num_blocks().max(new.num_blocks());
+        match self.mode {
+            DynamicMode::Block => {
+                let taus = (0..nb)
+                    .map(|b| {
+                        (1.0 - alpha) * self.tau(b, 0) + alpha * new.tau(b, 0)
+                    })
+                    .collect();
+                Profile::block(taus, self.metric)
+            }
+            DynamicMode::StepBlock => {
+                let taus = (0..nb)
+                    .map(|b| {
+                        let depth =
+                            self.steps_in_block(b).max(new.steps_in_block(b)).max(1);
+                        (0..depth)
+                            .map(|s| {
+                                (1.0 - alpha) * self.tau(b, s) + alpha * new.tau(b, s)
+                            })
+                            .collect()
+                    })
+                    .collect();
+                Profile::step_block(taus, self.metric)
+            }
+        }
+    }
+
     // -- JSON persistence ----------------------------------------------------
 
     pub fn to_json(&self) -> Json {
@@ -137,6 +185,112 @@ impl Profile {
     }
 }
 
+/// A profile with its persistence metadata: the owning task, the
+/// calibration sequence's confidence signature (the drift-detection
+/// reference), and a version that increments on every recalibration or
+/// refinement.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ProfileRecord {
+    pub task: String,
+    pub profile: Profile,
+    /// `CalibrationTrace::signature()` of the calibrating sequence; empty
+    /// for schema-1 records (adopted lazily from the first live decode).
+    pub signature: Vec<f64>,
+    pub version: u64,
+}
+
+impl ProfileRecord {
+    pub fn new(task: impl Into<String>, profile: Profile, signature: Vec<f64>) -> Self {
+        ProfileRecord {
+            task: task.into(),
+            profile,
+            signature,
+            version: 1,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut doc = self.profile.to_json();
+        if let Json::Obj(m) = &mut doc {
+            m.insert("schema".into(), Json::Num(PROFILE_SCHEMA_VERSION as f64));
+            m.insert("task".into(), Json::Str(self.task.clone()));
+            m.insert("signature".into(), Json::from_f64s(&self.signature));
+            m.insert("version".into(), Json::Num(self.version as f64));
+        }
+        doc
+    }
+
+    /// Parse a persisted record. Schema-1 documents (no `schema` key) are
+    /// accepted with an empty signature and version 0; unknown newer
+    /// schemas are rejected.
+    pub fn from_json(j: &Json, fallback_task: &str) -> Result<ProfileRecord> {
+        let schema = j.get("schema").and_then(Json::as_f64).unwrap_or(1.0) as u64;
+        if schema > PROFILE_SCHEMA_VERSION {
+            bail!("profile schema {schema} is newer than supported {PROFILE_SCHEMA_VERSION}");
+        }
+        let profile = Profile::from_json(j)?;
+        let signature = match j.get("signature").and_then(Json::as_arr) {
+            None => vec![],
+            Some(arr) => {
+                let v: Option<Vec<f64>> = arr.iter().map(Json::as_f64).collect();
+                v.context("signature must be numbers")?
+            }
+        };
+        Ok(ProfileRecord {
+            task: j
+                .get("task")
+                .and_then(Json::as_str)
+                .unwrap_or(fallback_task)
+                .to_string(),
+            profile,
+            signature,
+            version: j.get("version").and_then(Json::as_f64).unwrap_or(0.0) as u64,
+        })
+    }
+}
+
+/// Percent-encode a task name into a filename-safe component: `[A-Za-z0-9_-]`
+/// pass through, everything else (including `/`, `.`, `%`) becomes `%XX`
+/// per byte. The result contains no path separators and no `.` so the
+/// `task.mode.metric.json` filename splits unambiguously.
+pub fn encode_task(task: &str) -> String {
+    let mut out = String::with_capacity(task.len());
+    for b in task.bytes() {
+        if b.is_ascii_alphanumeric() || b == b'_' || b == b'-' {
+            out.push(b as char);
+        } else {
+            out.push_str(&format!("%{b:02X}"));
+        }
+    }
+    out
+}
+
+/// Inverse of [`encode_task`].
+pub fn decode_task(encoded: &str) -> Result<String> {
+    let bytes = encoded.as_bytes();
+    let mut out = Vec::with_capacity(bytes.len());
+    let mut i = 0;
+    while i < bytes.len() {
+        if bytes[i] == b'%' {
+            let hex = encoded
+                .get(i + 1..i + 3)
+                .with_context(|| format!("truncated escape in {encoded:?}"))?;
+            out.push(
+                u8::from_str_radix(hex, 16)
+                    .with_context(|| format!("bad escape %{hex} in {encoded:?}"))?,
+            );
+            i += 3;
+        } else {
+            out.push(bytes[i]);
+            i += 1;
+        }
+    }
+    String::from_utf8(out).context("decoded task is not UTF-8")
+}
+
+/// Unique suffix for temp files so concurrent saves never collide.
+static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
+
 /// Directory-backed profile store: one JSON file per (task, mode, metric).
 pub struct ProfileStore {
     dir: PathBuf,
@@ -150,37 +304,105 @@ impl ProfileStore {
         Ok(ProfileStore { dir })
     }
 
-    fn path(&self, task: &str, mode: DynamicMode, metric: Metric) -> PathBuf {
-        self.dir
-            .join(format!("{task}.{}.{}.json", mode.as_str(), metric.as_str()))
+    pub fn dir(&self) -> &Path {
+        &self.dir
     }
 
-    pub fn save(&self, task: &str, profile: &Profile) -> Result<PathBuf> {
-        let path = self.path(task, profile.mode, profile.metric);
-        let mut doc = profile.to_json();
-        if let Json::Obj(m) = &mut doc {
-            m.insert("task".into(), Json::Str(task.into()));
+    fn path(&self, task: &str, mode: DynamicMode, metric: Metric) -> PathBuf {
+        self.dir.join(format!(
+            "{}.{}.{}.json",
+            encode_task(task),
+            mode.as_str(),
+            metric.as_str()
+        ))
+    }
+
+    /// Atomically persist a record: write a unique temp file in the store
+    /// directory, then rename over the target.
+    pub fn save(&self, record: &ProfileRecord) -> Result<PathBuf> {
+        let path = self.path(&record.task, record.profile.mode, record.profile.metric);
+        let tmp = self.dir.join(format!(
+            ".tmp.{}.{}",
+            std::process::id(),
+            TMP_SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        std::fs::write(&tmp, format!("{}\n", record.to_json()))
+            .with_context(|| format!("writing {}", tmp.display()))?;
+        if let Err(e) = std::fs::rename(&tmp, &path) {
+            std::fs::remove_file(&tmp).ok();
+            return Err(e).with_context(|| {
+                format!("renaming {} -> {}", tmp.display(), path.display())
+            });
         }
-        std::fs::write(&path, format!("{doc}\n"))
-            .with_context(|| format!("writing {}", path.display()))?;
         Ok(path)
     }
 
-    pub fn load(&self, task: &str, mode: DynamicMode, metric: Metric) -> Result<Profile> {
+    pub fn load(&self, task: &str, mode: DynamicMode, metric: Metric) -> Result<ProfileRecord> {
         let path = self.path(task, mode, metric);
         let text = std::fs::read_to_string(&path)
             .with_context(|| format!("reading {}", path.display()))?;
-        Profile::from_json(&Json::parse(&text)?)
+        ProfileRecord::from_json(&Json::parse(&text)?, task)
     }
 
     pub fn exists(&self, task: &str, mode: DynamicMode, metric: Metric) -> bool {
         self.path(task, mode, metric).exists()
+    }
+
+    /// Load every parseable record in the store (warm start). Files that
+    /// fail to parse are skipped with a warning — one corrupt profile must
+    /// not prevent the rest of the fleet state from loading.
+    pub fn load_all(&self) -> Result<Vec<ProfileRecord>> {
+        let mut out = Vec::new();
+        for entry in std::fs::read_dir(&self.dir)
+            .with_context(|| format!("listing {}", self.dir.display()))?
+        {
+            let path = entry?.path();
+            let Some(name) = path.file_name().and_then(|n| n.to_str()) else {
+                continue;
+            };
+            let Some(stem) = name.strip_suffix(".json") else {
+                continue; // temp files, foreign content
+            };
+            // filename is ENCTASK.MODE.METRIC — split from the right since
+            // the encoded task cannot contain '.'
+            let mut parts = stem.rsplitn(3, '.');
+            let (Some(_metric), Some(_mode), Some(enc)) =
+                (parts.next(), parts.next(), parts.next())
+            else {
+                continue;
+            };
+            let task = match decode_task(enc) {
+                Ok(t) => t,
+                Err(e) => {
+                    log::warn!("skipping profile {name}: {e:#}");
+                    continue;
+                }
+            };
+            let parsed = std::fs::read_to_string(&path)
+                .map_err(anyhow::Error::from)
+                .and_then(|text| Json::parse(&text).map_err(anyhow::Error::from))
+                .and_then(|j| ProfileRecord::from_json(&j, &task));
+            match parsed {
+                Ok(rec) => out.push(rec),
+                Err(e) => log::warn!("skipping profile {name}: {e:#}"),
+            }
+        }
+        Ok(out)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    fn tmp_store(tag: &str) -> (ProfileStore, PathBuf) {
+        let dir = std::env::temp_dir().join(format!(
+            "osdt_profile_{tag}_{}",
+            std::process::id()
+        ));
+        std::fs::remove_dir_all(&dir).ok();
+        (ProfileStore::new(&dir).unwrap(), dir)
+    }
 
     #[test]
     fn tau_clamps_block_mode() {
@@ -209,6 +431,16 @@ mod tests {
     }
 
     #[test]
+    fn blend_moves_toward_new() {
+        let old = Profile::block(vec![0.2, 0.2], Metric::Mean);
+        let new = Profile::block(vec![0.8, 0.8], Metric::Mean);
+        let b = old.blend(&new, 0.5);
+        assert!((b.tau(0, 0) - 0.5).abs() < 1e-12);
+        assert_eq!(old.blend(&new, 0.0), old);
+        assert_eq!(old.blend(&new, 1.0), new);
+    }
+
+    #[test]
     fn json_roundtrip_block() {
         let p = Profile::block(vec![0.25, 0.5, 0.75], Metric::Q3);
         let back = Profile::from_json(&p.to_json()).unwrap();
@@ -226,20 +458,121 @@ mod tests {
     }
 
     #[test]
+    fn record_roundtrip_with_signature() {
+        let rec = ProfileRecord {
+            task: "synth-math".into(),
+            profile: Profile::block(vec![0.6, 0.7], Metric::Q1),
+            signature: vec![0.4, 0.9, 0.5],
+            version: 3,
+        };
+        let back = ProfileRecord::from_json(&rec.to_json(), "fallback").unwrap();
+        assert_eq!(rec, back);
+    }
+
+    #[test]
+    fn schema1_record_loads_with_empty_signature() {
+        let j = Json::parse(r#"{"mode":"block","metric":"q1","taus":[0.5]}"#).unwrap();
+        let rec = ProfileRecord::from_json(&j, "t").unwrap();
+        assert_eq!(rec.task, "t");
+        assert!(rec.signature.is_empty());
+        assert_eq!(rec.version, 0);
+    }
+
+    #[test]
+    fn newer_schema_rejected() {
+        let j = Json::parse(r#"{"schema":99,"mode":"block","metric":"q1","taus":[0.5]}"#)
+            .unwrap();
+        assert!(ProfileRecord::from_json(&j, "t").is_err());
+    }
+
+    #[test]
+    fn task_encoding_roundtrip() {
+        for task in ["synth-math", "a/b", "../../etc/passwd", "dots.and.%", "日本語"] {
+            let enc = encode_task(task);
+            assert!(!enc.contains('/') && !enc.contains('.'), "{enc}");
+            assert_eq!(decode_task(&enc).unwrap(), task, "{task}");
+        }
+        assert!(decode_task("%Z").is_err());
+        assert!(decode_task("%4").is_err());
+    }
+
+    #[test]
     fn store_roundtrip() {
-        let dir = std::env::temp_dir().join(format!(
-            "osdt_profile_test_{}",
-            std::process::id()
-        ));
-        let store = ProfileStore::new(&dir).unwrap();
-        let p = Profile::block(vec![0.6, 0.7, 0.8], Metric::Q1);
+        let (store, dir) = tmp_store("roundtrip");
+        let rec = ProfileRecord::new(
+            "synth-math",
+            Profile::block(vec![0.6, 0.7, 0.8], Metric::Q1),
+            vec![0.1, 0.2],
+        );
         assert!(!store.exists("synth-math", DynamicMode::Block, Metric::Q1));
-        store.save("synth-math", &p).unwrap();
+        store.save(&rec).unwrap();
         assert!(store.exists("synth-math", DynamicMode::Block, Metric::Q1));
         let back = store
             .load("synth-math", DynamicMode::Block, Metric::Q1)
             .unwrap();
-        assert_eq!(p, back);
+        assert_eq!(rec, back);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn hostile_task_names_stay_inside_the_store() {
+        let (store, dir) = tmp_store("hostile");
+        let rec = ProfileRecord::new(
+            "../escape/attempt",
+            Profile::block(vec![0.5], Metric::Mean),
+            vec![],
+        );
+        let path = store.save(&rec).unwrap();
+        assert_eq!(path.parent().unwrap(), dir.as_path());
+        let entries: Vec<_> = std::fs::read_dir(&dir).unwrap().collect();
+        assert_eq!(entries.len(), 1, "exactly one file, inside the store dir");
+        let back = store
+            .load("../escape/attempt", DynamicMode::Block, Metric::Mean)
+            .unwrap();
+        assert_eq!(back.task, "../escape/attempt");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn load_all_recovers_every_record() {
+        let (store, dir) = tmp_store("loadall");
+        for (task, tau) in [("synth-math", 0.6), ("a/b", 0.7)] {
+            store
+                .save(&ProfileRecord::new(
+                    task,
+                    Profile::block(vec![tau], Metric::Q1),
+                    vec![tau],
+                ))
+                .unwrap();
+        }
+        // corrupt stragglers are skipped, not fatal
+        std::fs::write(dir.join("bogus.block.q1.json"), "{not json").unwrap();
+        std::fs::write(dir.join("README"), "hi").unwrap();
+        let mut all = store.load_all().unwrap();
+        all.sort_by(|a, b| a.task.cmp(&b.task));
+        assert_eq!(all.len(), 2);
+        assert_eq!(all[0].task, "a/b");
+        assert_eq!(all[1].task, "synth-math");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn save_leaves_no_temp_files() {
+        let (store, dir) = tmp_store("atomic");
+        store
+            .save(&ProfileRecord::new(
+                "t",
+                Profile::block(vec![0.5], Metric::Mean),
+                vec![],
+            ))
+            .unwrap();
+        for e in std::fs::read_dir(&dir).unwrap() {
+            let name = e.unwrap().file_name();
+            assert!(
+                name.to_string_lossy().ends_with(".json"),
+                "stray file {name:?}"
+            );
+        }
         std::fs::remove_dir_all(&dir).ok();
     }
 

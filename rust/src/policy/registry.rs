@@ -1,0 +1,904 @@
+//! Fleet-wide profile registry: the single home of the OSDT calibration
+//! lifecycle (DESIGN.md §9).
+//!
+//! One `Arc<ProfileRegistry>` is shared by every coordinator replica (and
+//! the router in front of them), subsuming what used to be three
+//! disconnected layers: the coordinator's in-memory profile map, the
+//! on-disk [`ProfileStore`] (now the registry's warm-start + persistence
+//! backend), and `AdaptiveOsdt`'s private EMA state (now the registry's
+//! observation path).
+//!
+//! Three mechanisms:
+//!
+//! - **Single-flight calibration.** The first [`ProfileRegistry::acquire`]
+//!   for an uncalibrated `(task, mode, metric)` key receives a
+//!   [`CalibrationLease`]; every concurrent peer — same worker, sibling
+//!   worker, or another replica — observes `InFlight` and is co-scheduled
+//!   around the lease instead of calibrating redundantly. Dropping an
+//!   unfulfilled lease (failed or panicked calibration) releases the key so
+//!   a peer can retry; a lease outstanding past the caller's patience can
+//!   be stolen with [`ProfileRegistry::acquire_stealing`], bounding the
+//!   worst-case stall without giving up single-flight in the common case.
+//!
+//! - **Signature-drift recalibration.** Every completed OSDT decode is
+//!   [`ProfileRegistry::observe`]d: the sequence's per-block step-mean
+//!   confidence signature is compared (cosine, with the shorter block
+//!   clamp-extended — mirroring `Profile::tau` step clamping) against the
+//!   profile's drift reference, which is adopted from the first
+//!   post-calibration decode so the comparison is policy-matched (an OSDT
+//!   decode takes systematically fewer steps than the static calibration
+//!   decode, which must not read as drift). Below `drift_floor` the
+//!   profile is marked stale; the next `acquire` receives a recalibration
+//!   lease while concurrent traffic keeps being served from the stale
+//!   profile — drift never stops the fleet, it schedules a recalibration.
+//!
+//! - **Warm-start persistence.** With a [`ProfileStore`] attached, every
+//!   fulfilled calibration is persisted (atomic temp-file + rename) and a
+//!   restarted process reloads the whole profile set at construction —
+//!   zero calibrations after a restart.
+//!
+//! The registry keeps its own metrics [`Registry`](MetricsRegistry)
+//! (profile hits/misses/stale serves, leases granted/abandoned/stolen,
+//! calibrations/recalibrations, drift events, EMA updates, and a
+//! `profile_signature_cosine` histogram) so fleet-wide numbers exist in
+//! one place no matter how many coordinators share the instance.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::metrics::Registry as MetricsRegistry;
+
+use super::profile::{ProfileRecord, ProfileStore};
+use super::{CalibrationTrace, Calibrator, DynamicMode, Metric, Profile};
+
+/// Identity of a calibrated profile.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct ProfileKey {
+    pub task: String,
+    pub mode: DynamicMode,
+    pub metric: Metric,
+}
+
+impl ProfileKey {
+    pub fn new(task: impl Into<String>, mode: DynamicMode, metric: Metric) -> Self {
+        ProfileKey { task: task.into(), mode, metric }
+    }
+}
+
+impl std::fmt::Display for ProfileKey {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{}/{}/{}",
+            self.task,
+            self.mode.as_str(),
+            self.metric.as_str()
+        )
+    }
+}
+
+/// A registered profile plus its live bookkeeping.
+#[derive(Clone, Debug)]
+pub struct ProfileEntry {
+    pub profile: Profile,
+    /// Flat calibration signature (provenance; persisted). Empty for
+    /// schema-1 warm starts until adopted from the first observed decode.
+    pub signature: Vec<f64>,
+    /// Drift reference: per-block step-mean signature of the first
+    /// *post-calibration* decode, so comparisons are policy-matched.
+    /// In-memory only; re-adopted after a restart.
+    pub drift_ref: Vec<Vec<f64>>,
+    /// Increments on every calibration, recalibration, or EMA update.
+    pub version: u64,
+    /// Calibration generation: bumps only when a lease is fulfilled (not
+    /// on EMA updates). Observations carry the epoch they decoded under so
+    /// a decode that started before a recalibration cannot poison the new
+    /// profile's drift reference.
+    pub epoch: u64,
+    /// Marked by drift detection or admin invalidation; a stale entry keeps
+    /// serving until its recalibration lease is fulfilled.
+    pub stale: bool,
+    /// Completed OSDT decodes folded into drift/EMA tracking.
+    pub observed: u64,
+    /// Loaded from disk rather than calibrated in this process.
+    pub warm_started: bool,
+}
+
+struct Slot {
+    entry: Option<ProfileEntry>,
+    /// A calibration lease is outstanding for this key.
+    leased: bool,
+    /// Sequence number of the most recently granted lease. Fulfill/abandon
+    /// only clear `leased` when their lease is still the current one, so a
+    /// superseded lease (its holder was stolen from) resolving late cannot
+    /// release the thief's outstanding lease and re-open single-flight.
+    lease_seq: u64,
+}
+
+/// Registry tuning knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct RegistryConfig {
+    /// Cosine floor between a decode's signature and the profile's
+    /// calibration signature; below it the profile is marked stale.
+    pub drift_floor: f64,
+    /// EMA refinement rate folded in per observed decode (0 = pure
+    /// one-shot, the paper's setting; 1 = always track the latest).
+    pub ema_alpha: f64,
+}
+
+impl Default for RegistryConfig {
+    fn default() -> Self {
+        RegistryConfig { drift_floor: 0.95, ema_alpha: 0.0 }
+    }
+}
+
+/// Outcome of an acquire.
+pub enum Acquired<'r> {
+    /// A usable profile (possibly stale while its recalibration is in
+    /// flight — drift never blocks traffic) and the epoch it belongs to
+    /// (pass back to [`ProfileRegistry::observe`] after the decode).
+    Ready(Profile, u64),
+    /// Caller holds the fleet-wide calibration lease for this key: decode
+    /// with the static calibration policy and fulfill (or drop to release).
+    Lease(CalibrationLease<'r>),
+    /// Another caller holds the lease; park the request and retry when the
+    /// profile lands.
+    InFlight,
+}
+
+/// Exclusive right to calibrate one key. Fulfill with the calibrated
+/// profile; dropping without fulfilling releases the key for a peer.
+pub struct CalibrationLease<'r> {
+    registry: &'r ProfileRegistry,
+    key: ProfileKey,
+    seq: u64,
+    fulfilled: bool,
+}
+
+impl CalibrationLease<'_> {
+    pub fn key(&self) -> &ProfileKey {
+        &self.key
+    }
+
+    /// Install the calibrated profile (version bump + persistence + wakeup
+    /// of parked peers).
+    pub fn fulfill(mut self, profile: Profile, signature: Vec<f64>) {
+        self.fulfilled = true;
+        self.registry.fulfill(&self.key, self.seq, profile, signature);
+    }
+}
+
+impl Drop for CalibrationLease<'_> {
+    fn drop(&mut self) {
+        if !self.fulfilled {
+            self.registry.abandon(&self.key, self.seq);
+        }
+    }
+}
+
+/// Snapshot row for admin listings.
+#[derive(Clone, Debug)]
+pub struct ProfileSummary {
+    pub key: ProfileKey,
+    pub version: u64,
+    pub stale: bool,
+    pub leased: bool,
+    pub observed: u64,
+    pub warm_started: bool,
+    pub num_blocks: usize,
+}
+
+pub struct ProfileRegistry {
+    slots: Mutex<HashMap<ProfileKey, Slot>>,
+    cv: Condvar,
+    store: Option<ProfileStore>,
+    cfg: RegistryConfig,
+    metrics: Arc<MetricsRegistry>,
+}
+
+impl ProfileRegistry {
+    /// Ephemeral registry (no persistence) with default tuning.
+    pub fn in_memory() -> Self {
+        Self::with_config(RegistryConfig::default())
+    }
+
+    pub fn with_config(cfg: RegistryConfig) -> Self {
+        ProfileRegistry {
+            slots: Mutex::new(HashMap::new()),
+            cv: Condvar::new(),
+            store: None,
+            cfg,
+            metrics: Arc::new(MetricsRegistry::new()),
+        }
+    }
+
+    /// Registry backed by `store`: warm-starts from every record on disk
+    /// and persists every fulfilled calibration.
+    pub fn with_store(store: ProfileStore, cfg: RegistryConfig) -> Result<Self> {
+        let mut reg = Self::with_config(cfg);
+        let records = store.load_all()?;
+        let n = records.len();
+        {
+            let mut slots = reg.slots.lock().unwrap();
+            for rec in records {
+                let key =
+                    ProfileKey::new(rec.task, rec.profile.mode, rec.profile.metric);
+                slots.insert(
+                    key,
+                    Slot {
+                        entry: Some(ProfileEntry {
+                            profile: rec.profile,
+                            signature: rec.signature,
+                            drift_ref: vec![],
+                            version: rec.version.max(1),
+                            epoch: rec.version.max(1),
+                            stale: false,
+                            observed: 0,
+                            warm_started: true,
+                        }),
+                        leased: false,
+                        lease_seq: 0,
+                    },
+                );
+            }
+        }
+        reg.metrics.add("profile_warm_starts", n as u64);
+        reg.store = Some(store);
+        Ok(reg)
+    }
+
+    pub fn config(&self) -> &RegistryConfig {
+        &self.cfg
+    }
+
+    /// Fleet-wide profile/lease metrics (separate from any coordinator's).
+    pub fn metrics(&self) -> &Arc<MetricsRegistry> {
+        &self.metrics
+    }
+
+    /// Resolve `key` for one request: a ready profile, the calibration
+    /// lease (first caller for an uncalibrated or stale key), or `InFlight`
+    /// when a peer holds the lease. Never blocks.
+    pub fn acquire(&self, key: &ProfileKey) -> Acquired<'_> {
+        self.acquire_inner(key, false)
+    }
+
+    /// As [`ProfileRegistry::acquire`], but a key whose lease is held by a
+    /// peer is taken over instead of reported `InFlight` — the escape hatch
+    /// for a calibration that has been in flight past the caller's
+    /// patience. The duplicated calibration resolves last-writer-wins.
+    pub fn acquire_stealing(&self, key: &ProfileKey) -> Acquired<'_> {
+        self.acquire_inner(key, true)
+    }
+
+    fn acquire_inner(&self, key: &ProfileKey, steal: bool) -> Acquired<'_> {
+        let mut slots = self.slots.lock().unwrap();
+        let slot = slots
+            .entry(key.clone())
+            .or_insert_with(|| Slot { entry: None, leased: false, lease_seq: 0 });
+        match (&slot.entry, slot.leased) {
+            (Some(e), _) if !e.stale => {
+                self.metrics.add("profile_hits", 1);
+                Acquired::Ready(e.profile.clone(), e.epoch)
+            }
+            // stale with a recalibration already in flight: keep serving
+            (Some(e), true) => {
+                self.metrics.add("profile_stale_serves", 1);
+                Acquired::Ready(e.profile.clone(), e.epoch)
+            }
+            (Some(_), false) => {
+                slot.lease_seq += 1;
+                slot.leased = true;
+                self.metrics.add("leases_granted", 1);
+                Acquired::Lease(CalibrationLease {
+                    registry: self,
+                    key: key.clone(),
+                    seq: slot.lease_seq,
+                    fulfilled: false,
+                })
+            }
+            (None, false) => {
+                slot.lease_seq += 1;
+                slot.leased = true;
+                self.metrics.add("profile_misses", 1);
+                self.metrics.add("leases_granted", 1);
+                Acquired::Lease(CalibrationLease {
+                    registry: self,
+                    key: key.clone(),
+                    seq: slot.lease_seq,
+                    fulfilled: false,
+                })
+            }
+            (None, true) => {
+                if steal {
+                    // takeover becomes the *current* lease: the superseded
+                    // holder's late fulfill/abandon can no longer clear it
+                    slot.lease_seq += 1;
+                    slot.leased = true;
+                    self.metrics.add("lease_takeovers", 1);
+                    Acquired::Lease(CalibrationLease {
+                        registry: self,
+                        key: key.clone(),
+                        seq: slot.lease_seq,
+                        fulfilled: false,
+                    })
+                } else {
+                    self.metrics.add("profile_waits", 1);
+                    Acquired::InFlight
+                }
+            }
+        }
+    }
+
+    /// How `acquire` would classify `key` right now, without taking a
+    /// lease — the coordinator's admission parking decisions use this.
+    /// A stale entry reports `Ready`: it still serves traffic, and the one
+    /// request that lands the recalibration lease runs it inline rather
+    /// than parking every same-key request behind the drift event.
+    pub fn peek(&self, key: &ProfileKey) -> PeekState {
+        let slots = self.slots.lock().unwrap();
+        match slots.get(key) {
+            None => PeekState::WouldCalibrate,
+            Some(slot) => match (&slot.entry, slot.leased) {
+                (Some(_), _) => PeekState::Ready,
+                (None, true) => PeekState::InFlight,
+                (None, false) => PeekState::WouldCalibrate,
+            },
+        }
+    }
+
+    /// Block until `key` has a usable profile (or `timeout`); used by
+    /// callers with nothing better to do than wait on a peer's calibration.
+    pub fn wait_ready(&self, key: &ProfileKey, timeout: Duration) -> Option<Profile> {
+        let deadline = Instant::now() + timeout;
+        let mut slots = self.slots.lock().unwrap();
+        loop {
+            if let Some(e) = slots.get(key).and_then(|s| s.entry.as_ref()) {
+                return Some(e.profile.clone());
+            }
+            let left = deadline.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                return None;
+            }
+            let (guard, _) = self.cv.wait_timeout(slots, left).unwrap();
+            slots = guard;
+        }
+    }
+
+    fn fulfill(&self, key: &ProfileKey, seq: u64, profile: Profile, signature: Vec<f64>) {
+        let record = {
+            let mut slots = self.slots.lock().unwrap();
+            let slot = slots
+                .entry(key.clone())
+                .or_insert_with(|| Slot { entry: None, leased: false, lease_seq: 0 });
+            let prior = slot.entry.as_ref().map(|e| e.version).unwrap_or(0);
+            let recalibration = slot.entry.is_some();
+            let version = prior + 1;
+            slot.entry = Some(ProfileEntry {
+                profile: profile.clone(),
+                signature: signature.clone(),
+                drift_ref: vec![],
+                version,
+                epoch: version,
+                stale: false,
+                observed: 0,
+                warm_started: false,
+            });
+            // a superseded lease (stolen from) still installs its result
+            // (last-writer-wins) but must not release the current holder's
+            // outstanding lease
+            if slot.lease_seq == seq {
+                slot.leased = false;
+            }
+            self.metrics.add("calibrations_completed", 1);
+            if recalibration {
+                self.metrics.add("recalibrations", 1);
+            }
+            ProfileRecord {
+                task: key.task.clone(),
+                profile,
+                signature,
+                version,
+            }
+        };
+        self.cv.notify_all();
+        self.persist(&record);
+    }
+
+    fn abandon(&self, key: &ProfileKey, seq: u64) {
+        let released = {
+            let mut slots = self.slots.lock().unwrap();
+            match slots.get_mut(key) {
+                // only the current lease may release the key; a superseded
+                // holder's failure must not re-open single-flight under the
+                // thief still calibrating
+                Some(slot) if slot.lease_seq == seq && slot.leased => {
+                    slot.leased = false;
+                    true
+                }
+                _ => false,
+            }
+        };
+        if released {
+            self.metrics.add("leases_abandoned", 1);
+            self.cv.notify_all();
+        } else {
+            self.metrics.add("leases_superseded", 1);
+        }
+    }
+
+    fn persist(&self, record: &ProfileRecord) {
+        if let Some(store) = &self.store {
+            if let Err(e) = store.save(record) {
+                self.metrics.add("profile_persist_errors", 1);
+                log::warn!("persisting profile {}: {e:#}", record.task);
+            }
+        }
+    }
+
+    /// Fold one completed OSDT decode into the registry: drift detection
+    /// against the profile's drift reference, then (α > 0) EMA refinement
+    /// of the thresholds — `AdaptiveOsdt`'s update rule at registry level.
+    /// `epoch` is the value [`Acquired::Ready`] handed out when the decode
+    /// acquired its profile; an observation from a superseded epoch (the
+    /// key was recalibrated while the decode was in flight) is dropped so
+    /// it cannot poison the new profile's drift reference.
+    pub fn observe(&self, key: &ProfileKey, epoch: u64, trace: &CalibrationTrace) {
+        let sig = trace.block_signatures();
+        if sig.iter().all(Vec::is_empty) {
+            return;
+        }
+        let mut slots = self.slots.lock().unwrap();
+        let Some(entry) = slots.get_mut(key).and_then(|s| s.entry.as_mut()) else {
+            return; // invalidated/removed since the decode started
+        };
+        if entry.epoch != epoch {
+            self.metrics.add("observations_superseded", 1);
+            return;
+        }
+        entry.observed += 1;
+        if entry.signature.is_empty() {
+            // schema-1 warm start: adopt provenance from the first decode
+            entry.signature = trace.signature();
+        }
+        if entry.drift_ref.iter().all(Vec::is_empty) {
+            // first post-calibration decode becomes the (policy-matched)
+            // drift reference
+            entry.drift_ref = sig;
+            return;
+        }
+        if let Some(cos) = signature_cosine(&entry.drift_ref, &sig) {
+            self.metrics.observe("profile_signature_cosine", cos);
+            if cos < self.cfg.drift_floor && !entry.stale {
+                entry.stale = true;
+                self.metrics.add("drift_events", 1);
+                log::info!(
+                    "profile {key} drifted (cosine {cos:.4} < floor {}); \
+                     recalibration scheduled",
+                    self.cfg.drift_floor
+                );
+                return; // recalibration supersedes refinement
+            }
+        }
+        if self.cfg.ema_alpha > 0.0 && !entry.stale {
+            let fresh = Calibrator::calibrate(trace, key.mode, key.metric);
+            entry.profile = entry.profile.blend(&fresh, self.cfg.ema_alpha);
+            entry.version += 1;
+            self.metrics.add("profile_ema_updates", 1);
+        }
+    }
+
+    /// Mark a profile stale so the next request recalibrates. Returns
+    /// whether the key was present.
+    pub fn invalidate(&self, key: &ProfileKey) -> bool {
+        let mut slots = self.slots.lock().unwrap();
+        match slots.get_mut(key).and_then(|s| s.entry.as_mut()) {
+            Some(entry) => {
+                if !entry.stale {
+                    entry.stale = true;
+                    self.metrics.add("profile_invalidations", 1);
+                }
+                true
+            }
+            None => false,
+        }
+    }
+
+    pub fn get(&self, key: &ProfileKey) -> Option<ProfileEntry> {
+        self.slots
+            .lock()
+            .unwrap()
+            .get(key)
+            .and_then(|s| s.entry.clone())
+    }
+
+    /// Registered profile count (calibrated or warm-started).
+    pub fn len(&self) -> usize {
+        self.slots
+            .lock()
+            .unwrap()
+            .values()
+            .filter(|s| s.entry.is_some())
+            .count()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Admin listing, sorted by key for stable output.
+    pub fn snapshot(&self) -> Vec<ProfileSummary> {
+        let slots = self.slots.lock().unwrap();
+        let mut out: Vec<ProfileSummary> = slots
+            .iter()
+            .filter_map(|(key, slot)| {
+                slot.entry.as_ref().map(|e| ProfileSummary {
+                    key: key.clone(),
+                    version: e.version,
+                    stale: e.stale,
+                    leased: slot.leased,
+                    observed: e.observed,
+                    warm_started: e.warm_started,
+                    num_blocks: e.profile.num_blocks(),
+                })
+            })
+            .collect();
+        out.sort_by(|a, b| {
+            (&a.key.task, a.key.mode.as_str(), a.key.metric.as_str()).cmp(&(
+                &b.key.task,
+                b.key.mode.as_str(),
+                b.key.metric.as_str(),
+            ))
+        });
+        out
+    }
+}
+
+/// What `acquire` would do for a key right now.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PeekState {
+    /// A usable (possibly stale-but-leased) profile exists.
+    Ready,
+    /// This caller would receive the calibration lease.
+    WouldCalibrate,
+    /// A peer holds the lease; the caller would be told `InFlight`.
+    InFlight,
+}
+
+/// Cosine between two per-block step-mean signatures. Blocks are aligned
+/// by index; within a block the shorter signature is clamp-extended by
+/// repeating its last step mean (mirroring `Profile::tau` step clamping),
+/// so a policy legitimately finishing a block in fewer steps does not read
+/// as drift. A block present in only one signature contributes zeros.
+pub fn signature_cosine(a: &[Vec<f64>], b: &[Vec<f64>]) -> Option<f64> {
+    if a.iter().all(Vec::is_empty) || b.iter().all(Vec::is_empty) {
+        return None;
+    }
+    let empty: Vec<f64> = vec![];
+    let mut fa = Vec::new();
+    let mut fb = Vec::new();
+    for i in 0..a.len().max(b.len()) {
+        let xa = a.get(i).unwrap_or(&empty);
+        let xb = b.get(i).unwrap_or(&empty);
+        for s in 0..xa.len().max(xb.len()) {
+            let clamp = |x: &[f64]| {
+                x.get(s)
+                    .copied()
+                    .or_else(|| x.last().copied())
+                    .unwrap_or(0.0)
+            };
+            fa.push(clamp(xa));
+            fb.push(clamp(xb));
+        }
+    }
+    crate::util::stats::cosine(&fa, &fb)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key() -> ProfileKey {
+        ProfileKey::new("synth-math", DynamicMode::Block, Metric::Q1)
+    }
+
+    fn profile(tau: f64) -> Profile {
+        Profile::block(vec![tau, tau], Metric::Q1)
+    }
+
+    fn trace_with_signature(sig: &[f64]) -> CalibrationTrace {
+        let mut t = CalibrationTrace::new(1);
+        for (s, &v) in sig.iter().enumerate() {
+            t.record(0, s, &[v as f32]);
+        }
+        t
+    }
+
+    #[test]
+    fn first_acquire_leases_then_ready() {
+        let reg = ProfileRegistry::in_memory();
+        let lease = match reg.acquire(&key()) {
+            Acquired::Lease(l) => l,
+            _ => panic!("first acquire must lease"),
+        };
+        // a peer sees the in-flight lease, not a second lease
+        assert!(matches!(reg.acquire(&key()), Acquired::InFlight));
+        assert_eq!(reg.peek(&key()), PeekState::InFlight);
+        lease.fulfill(profile(0.6), vec![0.6, 0.6]);
+        match reg.acquire(&key()) {
+            Acquired::Ready(p, epoch) => {
+                assert!((p.tau(0, 0) - 0.6).abs() < 1e-12);
+                assert_eq!(epoch, 1);
+            }
+            _ => panic!("fulfilled key must be ready"),
+        }
+        assert_eq!(reg.metrics().counter_value("calibrations_completed"), 1);
+        assert_eq!(reg.metrics().counter_value("leases_granted"), 1);
+    }
+
+    #[test]
+    fn dropped_lease_releases_the_key() {
+        let reg = ProfileRegistry::in_memory();
+        {
+            let _lease = match reg.acquire(&key()) {
+                Acquired::Lease(l) => l,
+                _ => panic!(),
+            };
+            // dropped unfulfilled (failed calibration)
+        }
+        assert_eq!(reg.metrics().counter_value("leases_abandoned"), 1);
+        assert!(matches!(reg.acquire(&key()), Acquired::Lease(_)));
+    }
+
+    #[test]
+    fn stealing_breaks_a_stuck_lease() {
+        let reg = ProfileRegistry::in_memory();
+        let _stuck = match reg.acquire(&key()) {
+            Acquired::Lease(l) => l,
+            _ => panic!(),
+        };
+        assert!(matches!(reg.acquire(&key()), Acquired::InFlight));
+        let thief = match reg.acquire_stealing(&key()) {
+            Acquired::Lease(l) => l,
+            _ => panic!("steal must grant a lease"),
+        };
+        thief.fulfill(profile(0.5), vec![0.5]);
+        assert!(matches!(reg.acquire(&key()), Acquired::Ready(..)));
+        assert_eq!(reg.metrics().counter_value("lease_takeovers"), 1);
+    }
+
+    #[test]
+    fn superseded_lease_failure_does_not_release_the_thief() {
+        let reg = ProfileRegistry::in_memory();
+        let stuck = match reg.acquire(&key()) {
+            Acquired::Lease(l) => l,
+            _ => panic!(),
+        };
+        let thief = match reg.acquire_stealing(&key()) {
+            Acquired::Lease(l) => l,
+            _ => panic!(),
+        };
+        drop(stuck); // the original calibration fails late
+        // the thief's lease must still hold: no third calibrator admitted
+        assert!(matches!(reg.acquire(&key()), Acquired::InFlight));
+        assert_eq!(reg.metrics().counter_value("leases_superseded"), 1);
+        assert_eq!(reg.metrics().counter_value("leases_abandoned"), 0);
+        thief.fulfill(profile(0.5), vec![0.5]);
+        assert!(matches!(reg.acquire(&key()), Acquired::Ready(..)));
+        assert_eq!(reg.metrics().counter_value("calibrations_completed"), 1);
+    }
+
+    #[test]
+    fn observations_from_a_superseded_epoch_are_dropped() {
+        let reg = ProfileRegistry::in_memory();
+        match reg.acquire(&key()) {
+            Acquired::Lease(l) => l.fulfill(profile(0.6), vec![0.6]),
+            _ => panic!(),
+        }
+        // recalibrate: epoch 1 -> 2
+        assert!(reg.invalidate(&key()));
+        match reg.acquire(&key()) {
+            Acquired::Lease(l) => l.fulfill(profile(0.5), vec![0.5]),
+            _ => panic!(),
+        }
+        // a decode that started under epoch 1 retires late: it must not
+        // become the new profile's drift reference
+        reg.observe(&key(), 1, &trace_with_signature(&[0.9, 0.1]));
+        let entry = reg.get(&key()).unwrap();
+        assert_eq!(entry.observed, 0);
+        assert!(entry.drift_ref.iter().all(Vec::is_empty));
+        assert_eq!(reg.metrics().counter_value("observations_superseded"), 1);
+        // a current-epoch observation is adopted normally
+        reg.observe(&key(), 2, &trace_with_signature(&[0.4, 0.6]));
+        assert_eq!(reg.get(&key()).unwrap().observed, 1);
+    }
+
+    #[test]
+    fn concurrent_acquires_grant_exactly_one_lease() {
+        let reg = Arc::new(ProfileRegistry::in_memory());
+        let mut handles = vec![];
+        for _ in 0..8 {
+            let reg = reg.clone();
+            handles.push(std::thread::spawn(move || {
+                match reg.acquire(&key()) {
+                    Acquired::Lease(l) => {
+                        l.fulfill(profile(0.7), vec![0.7]);
+                        1u64
+                    }
+                    Acquired::InFlight => {
+                        assert!(
+                            reg.wait_ready(&key(), Duration::from_secs(5)).is_some(),
+                            "in-flight calibration never landed"
+                        );
+                        0
+                    }
+                    Acquired::Ready(..) => 0,
+                }
+            }));
+        }
+        let calibrations: u64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        assert_eq!(calibrations, 1, "single-flight violated");
+        assert_eq!(reg.metrics().counter_value("calibrations_completed"), 1);
+    }
+
+    #[test]
+    fn drift_marks_stale_and_schedules_recalibration() {
+        let reg = ProfileRegistry::with_config(RegistryConfig {
+            drift_floor: 0.95,
+            ema_alpha: 0.0,
+        });
+        match reg.acquire(&key()) {
+            Acquired::Lease(l) => l.fulfill(profile(0.6), vec![0.5, 0.5, 0.5, 0.5]),
+            _ => panic!(),
+        }
+        // first decode is adopted as the drift reference
+        reg.observe(&key(), 1, &trace_with_signature(&[0.5, 0.5, 0.5, 0.5]));
+        assert!(!reg.get(&key()).unwrap().stale);
+        // aligned decode: cosine 1 -> no drift
+        reg.observe(&key(), 1, &trace_with_signature(&[0.5, 0.5, 0.5, 0.5]));
+        assert!(!reg.get(&key()).unwrap().stale);
+        // divergent shape: cosine 0.5 < floor -> stale
+        reg.observe(&key(), 1, &trace_with_signature(&[0.9, 0.0, 0.0, 0.0]));
+        assert!(reg.get(&key()).unwrap().stale);
+        assert_eq!(reg.metrics().counter_value("drift_events"), 1);
+        // next acquire recalibrates while peers keep the stale profile
+        let lease = match reg.acquire(&key()) {
+            Acquired::Lease(l) => l,
+            _ => panic!("stale profile must grant a recalibration lease"),
+        };
+        assert!(matches!(reg.acquire(&key()), Acquired::Ready(..)));
+        lease.fulfill(profile(0.4), vec![0.9, 0.0, 0.0, 0.0]);
+        let entry = reg.get(&key()).unwrap();
+        assert!(!entry.stale);
+        assert_eq!(entry.version, 2);
+        assert_eq!(reg.metrics().counter_value("recalibrations"), 1);
+    }
+
+    #[test]
+    fn ema_refinement_moves_thresholds() {
+        let reg = ProfileRegistry::with_config(RegistryConfig {
+            drift_floor: 0.0, // never mark stale in this test
+            ema_alpha: 0.5,
+        });
+        match reg.acquire(&key()) {
+            Acquired::Lease(l) => l.fulfill(profile(0.2), vec![0.2]),
+            _ => panic!(),
+        }
+        let mut t = CalibrationTrace::new(2);
+        t.record(0, 0, &[0.8; 4]);
+        t.record(1, 0, &[0.8; 4]);
+        // first observe only adopts the drift reference; the second refines
+        reg.observe(&key(), 1, &t);
+        assert!((reg.get(&key()).unwrap().profile.tau(0, 0) - 0.2).abs() < 1e-9);
+        reg.observe(&key(), 1, &t);
+        let entry = reg.get(&key()).unwrap();
+        assert!((entry.profile.tau(0, 0) - 0.5).abs() < 1e-9, "{entry:?}");
+        assert_eq!(entry.version, 2);
+        assert_eq!(reg.metrics().counter_value("profile_ema_updates"), 1);
+    }
+
+    #[test]
+    fn empty_signature_adopts_first_observation() {
+        let reg = ProfileRegistry::in_memory();
+        match reg.acquire(&key()) {
+            Acquired::Lease(l) => l.fulfill(profile(0.6), vec![]), // schema-1 style
+            _ => panic!(),
+        }
+        reg.observe(&key(), 1, &trace_with_signature(&[0.4, 0.6]));
+        let entry = reg.get(&key()).unwrap();
+        assert_eq!(entry.signature, vec![0.4, 0.6]);
+        assert!(!entry.stale);
+    }
+
+    #[test]
+    fn invalidate_forces_recalibration() {
+        let reg = ProfileRegistry::in_memory();
+        match reg.acquire(&key()) {
+            Acquired::Lease(l) => l.fulfill(profile(0.6), vec![0.6]),
+            _ => panic!(),
+        }
+        assert!(reg.invalidate(&key()));
+        assert!(!reg.invalidate(&ProfileKey::new(
+            "missing",
+            DynamicMode::Block,
+            Metric::Q1
+        )));
+        assert!(matches!(reg.acquire(&key()), Acquired::Lease(_)));
+    }
+
+    #[test]
+    fn warm_start_round_trips_through_the_store() {
+        let dir = std::env::temp_dir().join(format!(
+            "osdt_registry_warm_{}",
+            std::process::id()
+        ));
+        std::fs::remove_dir_all(&dir).ok();
+        {
+            let reg = ProfileRegistry::with_store(
+                ProfileStore::new(&dir).unwrap(),
+                RegistryConfig::default(),
+            )
+            .unwrap();
+            match reg.acquire(&key()) {
+                Acquired::Lease(l) => l.fulfill(profile(0.6), vec![0.4, 0.9]),
+                _ => panic!(),
+            }
+        }
+        let reg = ProfileRegistry::with_store(
+            ProfileStore::new(&dir).unwrap(),
+            RegistryConfig::default(),
+        )
+        .unwrap();
+        assert_eq!(reg.len(), 1);
+        match reg.acquire(&key()) {
+            Acquired::Ready(p, epoch) => {
+                assert!((p.tau(0, 0) - 0.6).abs() < 1e-12);
+                assert_eq!(epoch, 1);
+            }
+            _ => panic!("warm-started key must not calibrate"),
+        }
+        let entry = reg.get(&key()).unwrap();
+        assert!(entry.warm_started);
+        assert_eq!(entry.signature, vec![0.4, 0.9]);
+        assert_eq!(reg.metrics().counter_value("profile_warm_starts"), 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn snapshot_lists_sorted_entries() {
+        let reg = ProfileRegistry::in_memory();
+        for task in ["zeta", "alpha"] {
+            let k = ProfileKey::new(task, DynamicMode::Block, Metric::Q1);
+            match reg.acquire(&k) {
+                Acquired::Lease(l) => l.fulfill(profile(0.5), vec![0.5]),
+                _ => panic!(),
+            }
+        }
+        let snap = reg.snapshot();
+        assert_eq!(snap.len(), 2);
+        assert_eq!(snap[0].key.task, "alpha");
+        assert_eq!(snap[1].key.task, "zeta");
+        assert_eq!(snap[0].version, 1);
+    }
+
+    #[test]
+    fn signature_cosine_clamp_extends_shorter_blocks() {
+        // identical shapes -> 1
+        let a = vec![vec![0.4, 0.9], vec![0.5]];
+        assert!((signature_cosine(&a, &a).unwrap() - 1.0).abs() < 1e-12);
+        // a block finishing in fewer steps clamps, not zero-pads: the
+        // shorter [0.4] extends to [0.4, 0.4] against [0.4, 0.4, ...]
+        let b = vec![vec![0.4]];
+        let c = vec![vec![0.4, 0.4, 0.4]];
+        assert!((signature_cosine(&b, &c).unwrap() - 1.0).abs() < 1e-12);
+        // empty inputs are not comparable
+        assert!(signature_cosine(&[], &a).is_none());
+        assert!(signature_cosine(&[vec![]], &a).is_none());
+        // divergent shapes drop the cosine
+        let d = vec![vec![0.9, 0.0], vec![0.0]];
+        assert!(signature_cosine(&a, &d).unwrap() < 0.9);
+    }
+}

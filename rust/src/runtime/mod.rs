@@ -46,6 +46,20 @@ pub struct RuntimeStats {
     pub transfer_micros: u64,
 }
 
+/// Reusable host-side staging buffers for the batched window pass. The
+/// stacked k/v uploads are the large ones (B × layers × heads × seq ×
+/// head_dim floats); reallocating them per call was the dominant transient
+/// allocation of the cached serving path, so they live with the runtime
+/// and are cleared + refilled each call. `ModelRuntime` is not `Sync`
+/// (each worker owns one), so a `RefCell` suffices.
+#[derive(Default)]
+struct WindowScratch {
+    tok: Vec<i32>,
+    start: Vec<i32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+}
+
 pub struct ModelRuntime {
     client: xla::PjRtClient,
     cfg: ModelConfig,
@@ -57,6 +71,7 @@ pub struct ModelRuntime {
     /// batch sizes with a compiled fwd_window variant, ascending
     window_batches: Vec<usize>,
     stats: std::cell::Cell<RuntimeStats>,
+    scratch: std::cell::RefCell<WindowScratch>,
 }
 
 impl ModelRuntime {
@@ -118,6 +133,7 @@ impl ModelRuntime {
             conf_batches,
             window_batches,
             stats: std::cell::Cell::new(RuntimeStats::default()),
+            scratch: std::cell::RefCell::new(WindowScratch::default()),
         })
     }
 
@@ -323,7 +339,7 @@ impl ModelRuntime {
             let mut at = 0;
             while at < n {
                 let end = (at + bmax).min(n);
-                let mut out = self.fwd_window_batch(
+                let mut out = self.fwd_window_stacked(
                     &windows[at..end],
                     &starts[at..end],
                     &caches[at..end],
@@ -334,12 +350,25 @@ impl ModelRuntime {
             }
             return Ok(ConfOut { conf, argmax });
         }
+        self.fwd_window_stacked(windows, starts, caches)
+    }
+
+    /// One stacked window pass (n <= the largest compiled batch). Staging
+    /// goes through the runtime's reusable [`WindowScratch`] — no per-call
+    /// reallocation of the flat token/start/k/v buffers.
+    fn fwd_window_stacked(
+        &self,
+        windows: &[&[u32]],
+        starts: &[usize],
+        caches: &[&KvCache],
+    ) -> Result<ConfOut> {
+        let n = windows.len();
         let b = self
             .window_batches
             .iter()
             .copied()
             .find(|&b| b >= n)
-            .unwrap_or(bmax);
+            .unwrap_or_else(|| self.window_batches.last().copied().unwrap_or(1));
         let w = self.cfg.block_len;
         let cache_dims = [
             self.cfg.n_layers,
@@ -348,10 +377,20 @@ impl ModelRuntime {
             self.cfg.head_dim,
         ];
         let cache_len: usize = cache_dims.iter().product();
-        let mut flat_tok = Vec::with_capacity(b * w);
-        let mut flat_start = Vec::with_capacity(b);
-        let mut flat_k = Vec::with_capacity(b * cache_len);
-        let mut flat_v = Vec::with_capacity(b * cache_len);
+        let mut scratch = self.scratch.borrow_mut();
+        let WindowScratch {
+            tok: flat_tok,
+            start: flat_start,
+            k: flat_k,
+            v: flat_v,
+        } = &mut *scratch;
+        flat_tok.clear();
+        flat_start.clear();
+        flat_k.clear();
+        flat_v.clear();
+        flat_tok.reserve(b * w);
+        flat_k.reserve(b * cache_len);
+        flat_v.reserve(b * cache_len);
         for ((window, &start), cache) in windows.iter().zip(starts).zip(caches) {
             if window.len() != w {
                 bail!("window length {} != {w}", window.len());
@@ -369,10 +408,10 @@ impl ModelRuntime {
         flat_start.resize(b, 0);
         flat_k.resize(b * cache_len, 0.0);
         flat_v.resize(b * cache_len, 0.0);
-        let tok_buf = self.tokens_buffer(&flat_tok, &[b, w])?;
+        let tok_buf = self.tokens_buffer(flat_tok, &[b, w])?;
         let start_buf = self
             .client
-            .buffer_from_host_buffer::<i32>(&flat_start, &[b], None)
+            .buffer_from_host_buffer::<i32>(flat_start, &[b], None)
             .context("uploading start vector")?;
         let stacked = [
             b,
@@ -383,11 +422,11 @@ impl ModelRuntime {
         ];
         let k_buf = self
             .client
-            .buffer_from_host_buffer::<f32>(&flat_k, &stacked, None)
+            .buffer_from_host_buffer::<f32>(flat_k, &stacked, None)
             .context("uploading stacked k cache")?;
         let v_buf = self
             .client
-            .buffer_from_host_buffer::<f32>(&flat_v, &stacked, None)
+            .buffer_from_host_buffer::<f32>(flat_v, &stacked, None)
             .context("uploading stacked v cache")?;
         let parts =
             self.run(&format!("fwd_window_b{b}"), &[tok_buf, start_buf, k_buf, v_buf])?;

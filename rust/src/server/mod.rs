@@ -13,6 +13,21 @@
 //! <- {"pong":true}
 //! ```
 //!
+//! The `profiles` admin command exposes the fleet-wide profile registry
+//! (DESIGN.md §9):
+//!
+//! ```text
+//! -> {"cmd":"profiles"}                                    (list)
+//! <- {"profiles":[{"task":"synth-math","mode":"block","metric":"q1",
+//!     "version":1,"stale":false,"observed":4,...}]}
+//! -> {"cmd":"profiles","action":"inspect","task":"synth-math",
+//!     "mode":"block","metric":"q1"}
+//! <- {"profile":{...taus + signature + version...}}
+//! -> {"cmd":"profiles","action":"invalidate","task":"synth-math",
+//!     "mode":"block","metric":"q1"}
+//! <- {"invalidated":true}                (next request recalibrates)
+//! ```
+//!
 //! Built on std::net + threads (the offline registry has no tokio); one
 //! thread per connection, responses written in completion order per
 //! connection.
@@ -25,6 +40,7 @@ use std::sync::Arc;
 use anyhow::{bail, Context, Result};
 
 use crate::coordinator::{Coordinator, Request, Response};
+use crate::policy::{DynamicMode, Metric, ProfileKey};
 use crate::util::json::Json;
 
 /// Serialize a coordinator response to its wire form.
@@ -154,8 +170,15 @@ fn handle_conn(stream: TcpStream, coord: &Coordinator) -> Result<()> {
                         "ping" => Json::obj(vec![("pong", Json::Bool(true))]),
                         "metrics" => Json::obj(vec![(
                             "metrics",
-                            Json::Str(coord.metrics.render()),
+                            // coordinator metrics + fleet-wide registry
+                            // metrics in one exposition (names disjoint)
+                            Json::Str(format!(
+                                "{}{}",
+                                coord.metrics.render(),
+                                coord.registry.metrics().render()
+                            )),
                         )]),
+                        "profiles" => handle_profiles(&j, coord),
                         other => Json::obj(vec![(
                             "error",
                             Json::Str(format!("unknown cmd {other:?}")),
@@ -184,6 +207,76 @@ fn handle_conn(stream: TcpStream, coord: &Coordinator) -> Result<()> {
         writer.flush()?;
     }
     Ok(())
+}
+
+/// Parse the (task, mode, metric) key fields of a `profiles` sub-command.
+fn profile_key_from_json(j: &Json) -> Result<ProfileKey> {
+    fn field<'a>(j: &'a Json, k: &str) -> Result<&'a str> {
+        j.req(k)
+            .map_err(anyhow::Error::msg)?
+            .as_str()
+            .with_context(|| format!("{k} not a string"))
+    }
+    Ok(ProfileKey::new(
+        field(j, "task")?,
+        DynamicMode::parse(field(j, "mode")?)?,
+        Metric::parse(field(j, "metric")?)?,
+    ))
+}
+
+/// The `profiles` admin command: list (default), inspect, invalidate.
+fn handle_profiles(j: &Json, coord: &Coordinator) -> Json {
+    let err = |e: &dyn std::fmt::Display| {
+        Json::obj(vec![("error", Json::Str(e.to_string()))])
+    };
+    match j.get("action").and_then(Json::as_str).unwrap_or("list") {
+        "list" => {
+            let rows = coord
+                .registry
+                .snapshot()
+                .into_iter()
+                .map(|s| {
+                    Json::obj(vec![
+                        ("task", Json::Str(s.key.task)),
+                        ("mode", Json::Str(s.key.mode.as_str().into())),
+                        ("metric", Json::Str(s.key.metric.as_str().into())),
+                        ("version", Json::Num(s.version as f64)),
+                        ("stale", Json::Bool(s.stale)),
+                        ("calibrating", Json::Bool(s.leased)),
+                        ("observed", Json::Num(s.observed as f64)),
+                        ("warm_started", Json::Bool(s.warm_started)),
+                        ("blocks", Json::Num(s.num_blocks as f64)),
+                    ])
+                })
+                .collect();
+            Json::obj(vec![("profiles", Json::Arr(rows))])
+        }
+        "inspect" => match profile_key_from_json(j) {
+            Err(e) => err(&format!("{e:#}")),
+            Ok(key) => match coord.registry.get(&key) {
+                None => err(&format!("no profile for {key}")),
+                Some(entry) => {
+                    let mut doc = entry.profile.to_json();
+                    if let Json::Obj(m) = &mut doc {
+                        m.insert("task".into(), Json::Str(key.task.clone()));
+                        m.insert("version".into(), Json::Num(entry.version as f64));
+                        m.insert("stale".into(), Json::Bool(entry.stale));
+                        m.insert("observed".into(), Json::Num(entry.observed as f64));
+                        m.insert("signature".into(), Json::from_f64s(&entry.signature));
+                    }
+                    Json::obj(vec![("profile", doc)])
+                }
+            },
+        },
+        "invalidate" => match profile_key_from_json(j) {
+            Err(e) => err(&format!("{e:#}")),
+            Ok(key) => Json::obj(vec![(
+                "invalidated",
+                Json::Bool(coord.registry.invalidate(&key)),
+            )]),
+        },
+        other => err(&format!("unknown profiles action {other:?}")),
+    }
 }
 
 fn request_from_json(j: &Json) -> Result<Request> {
@@ -240,6 +333,58 @@ impl Client {
             .and_then(Json::as_str)
             .unwrap_or("")
             .to_string())
+    }
+
+    /// List registered profiles (the `profiles` admin command).
+    pub fn profiles(&mut self) -> Result<Json> {
+        let j =
+            self.roundtrip(&Json::obj(vec![("cmd", Json::Str("profiles".into()))]))?;
+        j.get("profiles")
+            .cloned()
+            .context("no profiles field in reply")
+    }
+
+    /// Inspect one profile (full thresholds + signature).
+    pub fn inspect_profile(
+        &mut self,
+        task: &str,
+        mode: &str,
+        metric: &str,
+    ) -> Result<Json> {
+        let j = self.roundtrip(&Json::obj(vec![
+            ("cmd", Json::Str("profiles".into())),
+            ("action", Json::Str("inspect".into())),
+            ("task", Json::Str(task.into())),
+            ("mode", Json::Str(mode.into())),
+            ("metric", Json::Str(metric.into())),
+        ]))?;
+        if let Some(e) = j.get("error").and_then(Json::as_str) {
+            bail!("server error: {e}");
+        }
+        j.get("profile").cloned().context("no profile field in reply")
+    }
+
+    /// Mark a profile stale so the next request recalibrates; returns
+    /// whether the profile existed.
+    pub fn invalidate_profile(
+        &mut self,
+        task: &str,
+        mode: &str,
+        metric: &str,
+    ) -> Result<bool> {
+        let j = self.roundtrip(&Json::obj(vec![
+            ("cmd", Json::Str("profiles".into())),
+            ("action", Json::Str("invalidate".into())),
+            ("task", Json::Str(task.into())),
+            ("mode", Json::Str(mode.into())),
+            ("metric", Json::Str(metric.into())),
+        ]))?;
+        if let Some(e) = j.get("error").and_then(Json::as_str) {
+            bail!("server error: {e}");
+        }
+        j.get("invalidated")
+            .and_then(Json::as_bool)
+            .context("no invalidated field in reply")
     }
 
     pub fn generate(&mut self, task: &str, prompt: &str, policy: &str) -> Result<Response> {
@@ -350,6 +495,47 @@ mod tests {
             h.join().unwrap();
         }
         assert_eq!(coord.metrics.counter_value("requests_completed"), 4);
+        server.stop();
+    }
+
+    #[test]
+    fn profiles_admin_list_inspect_invalidate() {
+        let (server, coord) = start_stack();
+        let mut c = Client::connect(server.addr).unwrap();
+        // empty registry -> empty list
+        assert_eq!(c.profiles().unwrap().as_arr().unwrap().len(), 0);
+        // calibrate one task, then the registry surfaces it
+        let r = c
+            .generate("synth-math", "Q: 1+2=?", "osdt:block:q1:0.75:0.2")
+            .unwrap();
+        assert!(r.calibrated);
+        let list = c.profiles().unwrap();
+        let rows = list.as_arr().unwrap();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].get("task").and_then(Json::as_str), Some("synth-math"));
+        assert_eq!(rows[0].get("stale").and_then(Json::as_bool), Some(false));
+        // inspect returns the full thresholds + signature
+        let prof = c.inspect_profile("synth-math", "block", "q1").unwrap();
+        assert!(prof.get("taus").is_some());
+        assert!(!prof
+            .get("signature")
+            .and_then(Json::as_arr)
+            .unwrap()
+            .is_empty());
+        // invalidate -> stale -> next request recalibrates
+        assert!(c.invalidate_profile("synth-math", "block", "q1").unwrap());
+        let r2 = c
+            .generate("synth-math", "Q: 3+4=?", "osdt:block:q1:0.75:0.2")
+            .unwrap();
+        assert!(r2.calibrated, "invalidated profile must recalibrate");
+        // unknown key: inspect errors, invalidate reports absence
+        assert!(c.inspect_profile("nope", "block", "q1").is_err());
+        assert!(!c.invalidate_profile("nope", "block", "q1").unwrap());
+        // registry metrics ride the metrics exposition
+        let m = c.metrics().unwrap();
+        assert!(m.contains("osdt_calibrations_completed_total 2"), "{m}");
+        assert!(m.contains("osdt_recalibrations_total 1"), "{m}");
+        assert_eq!(coord.registry.metrics().counter_value("recalibrations"), 1);
         server.stop();
     }
 

@@ -1,0 +1,228 @@
+//! Integration tests of the fleet-wide ProfileRegistry (DESIGN.md §9):
+//! single-flight calibration across replicas, signature-drift
+//! recalibration, and warm-start persistence — all over the analytic
+//! simulator, artifact-free.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use osdt::cache::CacheConfig;
+use osdt::coordinator::router::{Router, RoutingPolicy};
+use osdt::coordinator::{Coordinator, CoordinatorConfig, Request};
+use osdt::decode::Engine;
+use osdt::model::fixtures::tiny_config;
+use osdt::policy::{
+    Calibrator, DynamicMode, Metric, Osdt, ProfileKey, ProfileRegistry,
+    ProfileStore, RegistryConfig, StaticThreshold,
+};
+use osdt::sim::SimModel;
+use osdt::tokenizer::Tokenizer;
+
+const SPEC: &str = "osdt:block:q1:0.75:0.2";
+const KAPPA: f64 = 0.75;
+const EPSILON: f64 = 0.2;
+
+fn key() -> ProfileKey {
+    ProfileKey::new("synth-math", DynamicMode::Block, Metric::Q1)
+}
+
+fn replica(registry: &Arc<ProfileRegistry>, workers: usize) -> Arc<Coordinator> {
+    Arc::new(
+        Coordinator::start_with_registry(
+            CoordinatorConfig {
+                workers,
+                max_batch: 4,
+                batch_wait: Duration::from_millis(5),
+                cache: CacheConfig::disabled(),
+            },
+            tiny_config(),
+            registry.clone(),
+            |_| Ok(SimModel::math_like(5)),
+        )
+        .unwrap(),
+    )
+}
+
+fn tmp_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "osdt_registry_it_{tag}_{}",
+        std::process::id()
+    ));
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+/// N replicas × M concurrent same-task OSDT requests -> exactly one
+/// calibration fleet-wide, and every response token-identical to the
+/// pre-refactor single-replica path (calibration decode for the winner,
+/// profile decode for everyone else).
+#[test]
+fn fleet_calibrates_once_with_token_identical_outputs() {
+    let prompt = "Q: 2+2=?";
+
+    // pre-refactor reference: solo engine, Phase 1 then Phase 2 on the
+    // same prompt
+    let m = SimModel::math_like(5);
+    let cfg = tiny_config();
+    let tok = Tokenizer::from_config(&cfg).unwrap();
+    let engine = Engine::new(&m);
+    let layout = tok.layout_prompt(&cfg, prompt).unwrap();
+    let cal_ref = engine
+        .decode(layout.clone(), &StaticThreshold::new(0.9))
+        .unwrap();
+    let cal_completion = tok.decode_until_eos(cal_ref.gen_tokens(&cfg));
+    let profile = Calibrator::calibrate(&cal_ref.trace, DynamicMode::Block, Metric::Q1);
+    let osdt_ref = engine
+        .decode(layout, &Osdt::from_profile(profile, KAPPA, EPSILON))
+        .unwrap();
+    let osdt_completion = tok.decode_until_eos(osdt_ref.gen_tokens(&cfg));
+
+    // fleet: 3 replicas × 2 workers sharing one registry, least-loaded
+    // routing (placement deliberately profile-oblivious)
+    let registry = Arc::new(ProfileRegistry::in_memory());
+    let replicas = vec![
+        replica(&registry, 2),
+        replica(&registry, 2),
+        replica(&registry, 2),
+    ];
+    let coords: Vec<Arc<Coordinator>> = replicas.clone();
+    let router = Router::new(replicas, RoutingPolicy::LeastOutstanding).unwrap();
+    let pending: Vec<_> = (0..18)
+        .map(|_| {
+            router.submit(Request {
+                id: 0,
+                task: "synth-math".into(),
+                prompt: prompt.into(),
+                policy: SPEC.into(),
+            })
+        })
+        .collect();
+    let mut calibrated = 0usize;
+    for p in pending {
+        let resp = p.recv().unwrap();
+        assert!(resp.error.is_none(), "{:?}", resp.error);
+        if resp.calibrated {
+            calibrated += 1;
+            assert_eq!(
+                resp.completion, cal_completion,
+                "calibration decode diverged from the pre-refactor path"
+            );
+            assert_eq!(resp.steps, cal_ref.steps);
+        } else {
+            assert_eq!(
+                resp.completion, osdt_completion,
+                "profile decode diverged from the pre-refactor path"
+            );
+            assert_eq!(resp.steps, osdt_ref.steps);
+        }
+    }
+    assert_eq!(calibrated, 1, "exactly one calibration fleet-wide");
+    let fleet: u64 = coords
+        .iter()
+        .map(|c| c.metrics.counter_value("calibrations"))
+        .sum();
+    assert_eq!(fleet, 1);
+    assert_eq!(registry.metrics().counter_value("calibrations_completed"), 1);
+    assert_eq!(registry.len(), 1);
+}
+
+/// Injected signature drift marks the profile stale; the next request runs
+/// a recalibration (counted as such) and service continues.
+#[test]
+fn drift_injection_triggers_recalibration() {
+    let registry = Arc::new(ProfileRegistry::with_config(RegistryConfig {
+        drift_floor: 0.95,
+        ema_alpha: 0.0,
+    }));
+    let coord = replica(&registry, 1);
+    // calibrate + one normal decode (adopts the drift reference)
+    assert!(coord.generate("synth-math", "Q: 1+2=?", SPEC).unwrap().calibrated);
+    assert!(!coord.generate("synth-math", "Q: 3+4=?", SPEC).unwrap().calibrated);
+
+    // inject a decode whose signature shape diverges from the reference
+    let mut divergent = osdt::policy::CalibrationTrace::new(tiny_config().num_blocks);
+    for b in 0..tiny_config().num_blocks {
+        divergent.record(b, 0, &[0.95, 0.02]);
+        divergent.record(b, 1, &[0.01]);
+    }
+    let epoch = registry.get(&key()).unwrap().epoch;
+    registry.observe(&key(), epoch, &divergent);
+    assert!(
+        registry.get(&key()).unwrap().stale,
+        "divergent signature must mark the profile stale"
+    );
+    assert_eq!(registry.metrics().counter_value("drift_events"), 1);
+
+    // next request recalibrates; the one after reuses the fresh profile
+    assert!(coord.generate("synth-math", "Q: 5+6=?", SPEC).unwrap().calibrated);
+    assert!(!coord.generate("synth-math", "Q: 7+8=?", SPEC).unwrap().calibrated);
+    assert_eq!(registry.metrics().counter_value("recalibrations"), 1);
+    let entry = registry.get(&key()).unwrap();
+    assert!(!entry.stale);
+    assert_eq!(entry.version, 2);
+}
+
+/// A restarted coordinator warm-starts from disk: the second process
+/// serves OSDT with zero calibrations.
+#[test]
+fn restart_warm_starts_from_disk_with_zero_calibrations() {
+    let dir = tmp_dir("warm");
+    let completion_a;
+    {
+        let registry = Arc::new(
+            ProfileRegistry::with_store(
+                ProfileStore::new(&dir).unwrap(),
+                RegistryConfig::default(),
+            )
+            .unwrap(),
+        );
+        let coord = replica(&registry, 1);
+        let r = coord.generate("synth-math", "Q: 2+3=?", SPEC).unwrap();
+        assert!(r.calibrated, "cold store must calibrate");
+        completion_a = coord
+            .generate("synth-math", "Q: 2+3=?", SPEC)
+            .unwrap()
+            .completion;
+    } // coordinator + registry dropped: the "restart"
+
+    let registry = Arc::new(
+        ProfileRegistry::with_store(
+            ProfileStore::new(&dir).unwrap(),
+            RegistryConfig::default(),
+        )
+        .unwrap(),
+    );
+    assert_eq!(registry.len(), 1, "profile must reload from disk");
+    let coord = replica(&registry, 1);
+    let r = coord.generate("synth-math", "Q: 2+3=?", SPEC).unwrap();
+    assert!(
+        !r.calibrated,
+        "warm-started coordinator must not recalibrate"
+    );
+    assert_eq!(r.completion, completion_a, "reloaded profile must decode identically");
+    assert_eq!(registry.metrics().counter_value("calibrations_completed"), 0);
+    assert_eq!(registry.metrics().counter_value("profile_warm_starts"), 1);
+    assert!(registry.get(&key()).unwrap().warm_started);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Different (mode, metric) combinations are independent keys: each
+/// calibrates once, and the admin snapshot lists them all.
+#[test]
+fn distinct_modes_and_metrics_calibrate_independently() {
+    let registry = Arc::new(ProfileRegistry::in_memory());
+    let coord = replica(&registry, 1);
+    for spec in [
+        "osdt:block:q1:0.75:0.2",
+        "osdt:block:q2:0.75:0.2",
+        "osdt:step-block:q1:0.75:0.2",
+    ] {
+        assert!(coord.generate("synth-math", "Q: 1+1=?", spec).unwrap().calibrated);
+        assert!(!coord.generate("synth-math", "Q: 1+1=?", spec).unwrap().calibrated);
+    }
+    assert_eq!(registry.len(), 3);
+    assert_eq!(registry.metrics().counter_value("calibrations_completed"), 3);
+    let snap = registry.snapshot();
+    assert_eq!(snap.len(), 3);
+    assert!(snap.iter().all(|s| s.key.task == "synth-math"));
+}

@@ -10,8 +10,8 @@ use osdt::coordinator::{Coordinator, CoordinatorConfig, Request};
 use osdt::decode::{Engine, ForwardModel};
 use osdt::model::fixtures::tiny_config;
 use osdt::policy::{
-    Calibrator, DynamicMode, Metric, Osdt, ProfileStore, SequentialTopK,
-    StaticThreshold,
+    Calibrator, DynamicMode, Metric, Osdt, ProfileRecord, ProfileStore,
+    SequentialTopK, StaticThreshold,
 };
 use osdt::server::{Client, Server};
 use osdt::sim::SimModel;
@@ -126,12 +126,19 @@ fn profile_store_roundtrip_through_decode() {
     let profile = Calibrator::calibrate(&cal.trace, DynamicMode::StepBlock, Metric::Q1);
     let dir = std::env::temp_dir().join(format!("osdt_it_{}", std::process::id()));
     let store = ProfileStore::new(&dir).unwrap();
-    store.save("synth-qa", &profile).unwrap();
+    store
+        .save(&ProfileRecord::new(
+            "synth-qa",
+            profile.clone(),
+            cal.trace.signature(),
+        ))
+        .unwrap();
     let loaded = store
         .load("synth-qa", DynamicMode::StepBlock, Metric::Q1)
         .unwrap();
-    assert_eq!(profile, loaded);
-    let osdt = Osdt::from_profile(loaded, 0.75, 0.2);
+    assert_eq!(profile, loaded.profile);
+    assert_eq!(loaded.signature, cal.trace.signature());
+    let osdt = Osdt::from_profile(loaded.profile, 0.75, 0.2);
     let res = engine.decode(m.layout_from_seed(5), &osdt).unwrap();
     assert!(res.steps >= tiny_config().num_blocks);
     std::fs::remove_dir_all(dir).ok();
