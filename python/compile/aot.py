@@ -13,6 +13,11 @@ Outputs under artifacts/:
   fwd_conf_b{1,2,4}.hlo.txt  (weights..., tokens)                -> (conf, argmax)
   fwd_full_kv_b1.hlo.txt     (weights..., tokens)                -> (conf, argmax, k$, v$)
   fwd_window_b1.hlo.txt      (weights..., win_tokens, start, k$, v$) -> (conf, argmax)
+  fwd_window_b{2,4}.hlo.txt  (weights..., win_tokens, starts, k$[B], v$[B])
+                             -> (conf, argmax)   [stacked window pass]
+  kv_gather_b{2,4}.hlo.txt   (k_0..k_{B-1}, v_0..v_{B-1}) -> (k$[B], v$[B])
+                             [weights-free on-device cache stacking for the
+                              device-residency path — see rust DESIGN.md §10]
   logits_b1.hlo.txt          (weights..., tokens)                -> (logits,)  [debug]
   data/<task>.eval.jsonl     synthetic eval datasets
 
@@ -163,6 +168,58 @@ def lower_variants(params, out_dir: str) -> dict:
         ],
         "outputs": [f"conf f32[1,{WINDOW}]", f"argmax i32[1,{WINDOW}]"],
     }
+
+    # batched window + on-device cache stacking (device residency path)
+    for b in BATCH_SIZES:
+        if b == 1:
+            continue
+        blhs = (b, *lhs)
+
+        def fwd_window_b(*args):
+            ws = args[:n_w]
+            win_tokens, starts, kc, vc = args[n_w : n_w + 4]
+            return model_mod.fwd_window_batch(
+                _from_tuple(ws), win_tokens, starts, kc, vc, use_pallas=True
+            )
+
+        fname = emit(
+            f"fwd_window_b{b}",
+            fwd_window_b,
+            jax.ShapeDtypeStruct((b, WINDOW), jnp.int32),
+            jax.ShapeDtypeStruct((b,), jnp.int32),
+            jax.ShapeDtypeStruct(blhs, jnp.float32),
+            jax.ShapeDtypeStruct(blhs, jnp.float32),
+        )
+        variants[f"fwd_window_b{b}"] = {
+            "file": fname,
+            "batch": b,
+            "inputs": [
+                "weights...",
+                f"window_tokens i32[{b},{WINDOW}]",
+                f"starts i32[{b}]",
+                f"k_caches f32{list(blhs)}",
+                f"v_caches f32{list(blhs)}",
+            ],
+            "outputs": [f"conf f32[{b},{WINDOW}]", f"argmax i32[{b},{WINDOW}]"],
+        }
+
+        def kv_gather_b(*caches, _b=b):
+            return model_mod.kv_gather(caches[:_b], caches[_b:])
+
+        # weights-free: lower over 2B per-row cache specs only
+        lowered = jax.jit(kv_gather_b).lower(
+            *([jax.ShapeDtypeStruct(lhs, jnp.float32)] * (2 * b))
+        )
+        fname = f"kv_gather_b{b}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(to_hlo_text(lowered))
+        print(f"[aot] {fname}")
+        variants[f"kv_gather_b{b}"] = {
+            "file": fname,
+            "batch": b,
+            "inputs": [f"k_i, v_i f32{list(lhs)} x {2 * b} (no weights)"],
+            "outputs": [f"k f32{list(blhs)}", f"v f32{list(blhs)}"],
+        }
 
     def logits_fn(*args):
         ws, tokens = args[:n_w], args[n_w]

@@ -242,6 +242,39 @@ def fwd_window(
     return conf[None, :], arg[None, :]
 
 
+def fwd_window_batch(
+    p: Params,
+    window_tokens: jnp.ndarray,  # (B, W) i32
+    starts: jnp.ndarray,         # (B,) i32 — per-row absolute window position
+    k_caches: jnp.ndarray,       # (B, L, H, S, Dh) f32
+    v_caches: jnp.ndarray,
+    use_pallas: bool = True,
+):
+    """Batched Fast-dLLM window step: row ``b`` recomputes its own window
+    against its own cached K/V — result-identical to ``B`` independent
+    ``fwd_window`` calls (the Rust scheduler relies on this to keep batched
+    decode token-identical to solo decode).
+
+    Returns (conf (B, W) f32, argmax (B, W) i32). The stacked cache inputs
+    are produced on device by the ``kv_gather_b{B}`` stacking variant, so
+    the serving path never ships K/V through the host.
+    """
+
+    def one(t, start, kc, vc):
+        conf, arg = fwd_window(p, t[None, :], start, kc, vc, use_pallas=use_pallas)
+        return conf[0], arg[0]
+
+    return jax.vmap(one)(window_tokens, starts, k_caches, v_caches)
+
+
+def kv_gather(ks, vs):
+    """Stack per-sequence dual caches into the batched window layout:
+    B × (L, H, S, Dh) -> (B, L, H, S, Dh), for k and v. Lowered per batch
+    size as ``kv_gather_b{B}`` — a weights-free stacking executable the Rust
+    runtime feeds with per-row device buffers (device cache residency)."""
+    return jnp.stack(ks), jnp.stack(vs)
+
+
 # ---------------------------------------------------------------------------
 # Training objective (LLaDA SFT): random-ratio masking over the gen region,
 # 1/t-weighted CE on masked positions.

@@ -86,6 +86,38 @@ def test_window_consistent_with_full_on_fresh_cache(params, tokens):
     )
 
 
+def test_window_batch_matches_solo_rows(params, tokens):
+    """The batched window variant must be row-identical to independent
+    fwd_window calls — the contract the Rust scheduler's batched device
+    path relies on — and kv_gather must be a pure stack."""
+    rows = []
+    starts = [D.PROMPT_LEN, D.PROMPT_LEN + D.BLOCK_LEN]
+    caches = []
+    for i, start in enumerate(starts):
+        t = tokens[i % tokens.shape[0]][None, :]
+        _, _, kc, vc = M.fwd_full_kv(params, t, use_pallas=False)
+        win = t[:, start : start + D.BLOCK_LEN]
+        c, a = M.fwd_window(
+            params, win, jnp.asarray(start, jnp.int32), kc, vc, use_pallas=False
+        )
+        rows.append((win[0], c[0], a[0]))
+        caches.append((kc, vc))
+    kb, vb = M.kv_gather([kc for kc, _ in caches], [vc for _, vc in caches])
+    assert kb.shape == (2, M.N_LAYERS, M.N_HEADS, M.SEQ_LEN, M.HEAD_DIM)
+    np.testing.assert_array_equal(np.asarray(kb[1]), np.asarray(caches[1][0]))
+    cb, ab = M.fwd_window_batch(
+        params,
+        jnp.stack([w for w, _, _ in rows]),
+        jnp.asarray(starts, jnp.int32),
+        kb,
+        vb,
+        use_pallas=False,
+    )
+    for i, (_, c, a) in enumerate(rows):
+        np.testing.assert_allclose(np.asarray(cb[i]), np.asarray(c), atol=1e-5)
+        np.testing.assert_array_equal(np.asarray(ab[i]), np.asarray(a))
+
+
 def test_window_pallas_vs_ref(params, tokens):
     t = tokens[:1]
     _, _, kc, vc = M.fwd_full_kv(params, t, use_pallas=False)

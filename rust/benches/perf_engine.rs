@@ -10,7 +10,7 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use osdt::cache::{flops_full, flops_window, CacheConfig};
+use osdt::cache::{flops_full, flops_window, CacheConfig, Residency};
 use osdt::config::Args;
 use osdt::decode::Engine;
 use osdt::model::ModelConfig;
@@ -70,23 +70,48 @@ fn main() -> Result<()> {
     );
     println!("  full_kv overhead : {:.2}x of fwd_conf (extra K/V outputs)", kv_ms / full_ms);
 
-    // ---- 2. exec vs transfer split ------------------------------------------
+    // ---- 2. exec vs transfer split, per entry point --------------------------
     let st = rt.stats();
+    println!("\n=== runtime split (cumulative) ===");
+    for (name, e) in [
+        ("fwd_conf", st.conf),
+        ("fwd_full_kv", st.full_kv),
+        ("fwd_window", st.window),
+        ("kv_gather", st.gather),
+    ] {
+        if e.calls == 0 {
+            continue;
+        }
+        println!(
+            "  {name:<12} {:4} calls  exec {:8.1} ms  up {:7.1} KB  down {:7.1} KB",
+            e.calls,
+            e.exec_micros as f64 / 1e3,
+            e.upload_bytes as f64 / 1e3,
+            e.download_bytes as f64 / 1e3
+        );
+    }
     println!(
-        "\n=== runtime split (cumulative) ===\n  exec {:.1} ms, host transfer {:.1} ms ({:.1}% transfer)",
-        st.exec_micros as f64 / 1e3,
-        st.transfer_micros as f64 / 1e3,
-        st.transfer_micros as f64 / (st.exec_micros + st.transfer_micros).max(1) as f64 * 100.0
+        "  total exec {:.1} ms, host transfer {:.1} ms ({:.1}% transfer); \
+         k/v payload: {:.1} KB up / {:.1} KB down",
+        st.exec_micros() as f64 / 1e3,
+        st.transfer_micros() as f64 / 1e3,
+        st.transfer_micros() as f64 / (st.exec_micros() + st.transfer_micros()).max(1) as f64
+            * 100.0,
+        st.cache_upload_bytes as f64 / 1e3,
+        st.cache_download_bytes as f64 / 1e3,
     );
 
     // ---- 3/4. end-to-end decode throughput ----------------------------------
     println!("\n=== end-to-end decode (static:0.9) ===");
-    for (label, cache_cfg) in [
-        ("no cache", CacheConfig::disabled()),
-        ("dual KV cache", CacheConfig::block_boundary()),
+    for (label, cache_cfg, residency) in [
+        ("no cache", CacheConfig::disabled(), Residency::Device),
+        ("KV cache (host)", CacheConfig::block_boundary(), Residency::Host),
+        ("KV cache (device)", CacheConfig::block_boundary(), Residency::Device),
     ] {
+        rt.set_residency(residency);
         let engine = Engine::with_cache(&rt, cache_cfg);
         let p = StaticThreshold::new(0.9);
+        let s0 = rt.stats();
         let t0 = Instant::now();
         let mut steps = 0;
         let n = 10;
@@ -95,11 +120,14 @@ fn main() -> Result<()> {
             steps += res.steps;
         }
         let dt = t0.elapsed().as_secs_f64();
+        let s1 = rt.stats();
+        let tokens = (n * cfg.gen_len) as f64;
         println!(
-            "  {label:<14} {:7.1} tokens/s  ({:.1} steps/seq, {:.1} ms/seq)",
-            (n * cfg.gen_len) as f64 / dt,
+            "  {label:<17} {:7.1} tokens/s  ({:.1} steps/seq, {:.1} ms/seq, {:.0} B/token transferred)",
+            tokens / dt,
             steps as f64 / n as f64,
-            dt * 1e3 / n as f64
+            dt * 1e3 / n as f64,
+            (s1.transfer_bytes() - s0.transfer_bytes()) as f64 / tokens,
         );
     }
     Ok(())

@@ -1,164 +1,392 @@
 //! Serving-systems bench: end-to-end latency vs offered load through the
 //! coordinator, comparing decode policies under the same arrival trace —
-//! and, for each, the dual-KV-cache path against full recomputation. The
-//! systems-level restatement of Table 1: a policy that spends fewer
-//! forward passes per sequence sustains a higher arrival rate before
-//! queueing delay blows up, and the continuous-batching scheduler lets the
-//! cache and batching stack (the old lockstep batcher forced batch 1
-//! whenever the cache was on).
+//! and, for each, the dual-KV-cache path against full recomputation, with
+//! the cached path run at **both residencies** (`--cache-residency`): the
+//! legacy host round trip vs device-resident K/V (DESIGN.md §10). The
+//! systems-level restatement of Table 1, now with the transfer ledger: a
+//! policy that spends fewer forward passes per sequence sustains a higher
+//! arrival rate, and a cache that never ships K/V through the host spends
+//! fewer bytes per token doing it.
 //!
-//!     cargo bench --bench serving_load [-- --n 24 --rates 1,2,4 --workers 1 --max-batch 4]
+//!     cargo bench --bench serving_load [-- --n 24 --rates 1,2,4 --workers 1
+//!         --max-batch 4 --cache-residency both --json BENCH_serving.json]
+//!     cargo bench --bench serving_load -- --smoke --json BENCH_serving.json
 //!
-//! Reported per point: p50/p95 latency, tokens/s, and mean/peak batch
-//! occupancy (from the coordinator's scheduler metrics). Runs on the real
-//! PJRT model over a mixed multi-task workload.
+//! Reported per point: p50/p95 latency, tokens/s, bytes transferred per
+//! token, per-step K/V upload bytes (must be 0 on the device path), and
+//! mean/peak batch occupancy. The cached host/device points run the same
+//! trace and must produce token-identical completions, which the bench
+//! verifies. `--smoke` runs a steps-capped configuration on the analytic
+//! `SimModel` (no artifacts needed) so CI can track the serving trajectory
+//! and emit `BENCH_serving.json` from every build.
 
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use anyhow::Result;
+use anyhow::{bail, Context, Result};
 
 use osdt::bench::{render_table, write_csv};
-use osdt::cache::CacheConfig;
+use osdt::cache::{CacheConfig, Residency};
 use osdt::config::Args;
 use osdt::coordinator::{Coordinator, CoordinatorConfig, Request};
-use osdt::model::ModelConfig;
+use osdt::decode::ForwardModel;
+use osdt::model::{fixtures::tiny_config, ModelConfig};
 use osdt::runtime::ModelRuntime;
+use osdt::sim::SimModel;
+use osdt::util::json::Json;
 use osdt::util::stats::Histogram;
-use osdt::workload::{mixed_trace, Dataset};
+use osdt::workload::{mixed_trace, Dataset, Example};
+
+/// Give worker loops a beat to publish their final stats deltas before the
+/// bench reads the counters (publishing happens on the loop iteration after
+/// the response is sent).
+const STATS_SETTLE: Duration = Duration::from_millis(60);
+
+/// One measured (policy, cache, residency, rate) point.
+struct Point {
+    policy: String,
+    cache: &'static str,
+    residency: &'static str,
+    rate: f64,
+    ok: usize,
+    n: usize,
+    p50_ms: f64,
+    p95_ms: f64,
+    tokens_per_sec: f64,
+    bytes_per_token: f64,
+    /// K/V payload bytes uploaded during the timed region — the per-step
+    /// host round trip the device residency eliminates.
+    cache_upload_bytes: u64,
+    occ_mean: f64,
+    occ_peak: i64,
+    completions: Vec<String>,
+}
+
+struct PointSpec<'a> {
+    policy: &'a str,
+    cache: CacheConfig,
+    cache_label: &'static str,
+    residency: &'static str,
+    rate: f64,
+    n: usize,
+    workers: usize,
+    max_batch: usize,
+}
+
+/// Drive one coordinator configuration through the shared arrival trace.
+fn run_point<M, F>(
+    spec: &PointSpec<'_>,
+    model_cfg: &ModelConfig,
+    datasets: &[Dataset],
+    factory: F,
+) -> Result<Point>
+where
+    M: ForwardModel + 'static,
+    F: Fn(usize) -> Result<M> + Send + Sync + Clone + 'static,
+{
+    let coord = Arc::new(Coordinator::start(
+        CoordinatorConfig {
+            workers: spec.workers,
+            max_batch: spec.max_batch,
+            batch_wait: Duration::from_millis(2),
+            cache: spec.cache,
+        },
+        model_cfg.clone(),
+        factory,
+    )?);
+    // warm the OSDT profiles so calibration isn't in the timed region
+    for ds in datasets {
+        let _ = coord.generate(&ds.task, &ds.examples[0].prompt, spec.policy)?;
+    }
+    std::thread::sleep(STATS_SETTLE);
+    // snapshot counters so warm-up doesn't dilute the timed region
+    let c0 = |name: &str| coord.metrics.counter_value(name);
+    let steps0 = c0("scheduler_steps");
+    let seq_steps0 = c0("scheduled_seq_steps");
+    let up0 = c0("bytes_uploaded");
+    let down0 = c0("bytes_downloaded");
+    let cache_up0 = c0("cache_bytes_uploaded");
+
+    let trace = mixed_trace(datasets, spec.rate, spec.n, 7);
+    let mut lat = Histogram::latency();
+    let t0 = Instant::now();
+    let mut pending = Vec::new();
+    for r in &trace {
+        let due = Duration::from_secs_f64(r.at);
+        if let Some(wait) = due.checked_sub(t0.elapsed()) {
+            std::thread::sleep(wait);
+        }
+        pending.push((
+            Instant::now(),
+            coord.submit(Request {
+                id: 0,
+                task: r.task.clone(),
+                prompt: r.prompt.clone(),
+                policy: spec.policy.into(),
+            }),
+        ));
+    }
+    let mut ok = 0;
+    let mut completions = Vec::with_capacity(pending.len());
+    for (sent, rx) in pending {
+        let resp = rx.recv()?;
+        if resp.error.is_none() {
+            ok += 1;
+        }
+        completions.push(resp.completion);
+        lat.record(sent.elapsed().as_secs_f64() * 1e6);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    std::thread::sleep(STATS_SETTLE);
+    let steps = (c0("scheduler_steps") - steps0).max(1);
+    let seq_steps = c0("scheduled_seq_steps") - seq_steps0;
+    let transferred = (c0("bytes_uploaded") - up0) + (c0("bytes_downloaded") - down0);
+    let cache_upload_bytes = c0("cache_bytes_uploaded") - cache_up0;
+    let tokens = (ok * model_cfg.gen_len).max(1);
+    Ok(Point {
+        policy: spec.policy.to_string(),
+        cache: spec.cache_label,
+        residency: spec.residency,
+        rate: spec.rate,
+        ok,
+        n: spec.n,
+        p50_ms: lat.quantile(0.5) / 1e3,
+        p95_ms: lat.quantile(0.95) / 1e3,
+        tokens_per_sec: (ok * model_cfg.gen_len) as f64 / wall,
+        bytes_per_token: transferred as f64 / tokens as f64,
+        cache_upload_bytes,
+        occ_mean: seq_steps as f64 / steps as f64,
+        occ_peak: coord
+            .metrics
+            .gauge("batch_occupancy_peak")
+            .load(Ordering::Relaxed),
+        completions,
+    })
+}
+
+/// The cached host/device runs see the same trace with deterministic
+/// policies — scheduling must not change tokens (DESIGN.md §5, §10).
+fn check_token_identity(points: &[Point]) -> Result<usize> {
+    let mut checked = 0;
+    for a in points {
+        if a.cache != "on" || a.residency != "host" {
+            continue;
+        }
+        if let Some(b) = points.iter().find(|b| {
+            b.cache == "on"
+                && b.residency == "device"
+                && b.policy == a.policy
+                && b.rate == a.rate
+        }) {
+            if a.completions != b.completions {
+                bail!(
+                    "host/device completions diverge for {} @{}rps",
+                    a.policy,
+                    a.rate
+                );
+            }
+            checked += 1;
+        }
+    }
+    Ok(checked)
+}
+
+fn point_rows(points: &[Point]) -> (Vec<Vec<String>>, Vec<Vec<String>>) {
+    let mut rows = Vec::new();
+    let mut csv = Vec::new();
+    let mut last_policy = String::new();
+    for p in points {
+        if !last_policy.is_empty() && p.policy != last_policy {
+            rows.push(vec![String::new(); 10]);
+        }
+        last_policy = p.policy.clone();
+        rows.push(vec![
+            p.policy.clone(),
+            format!("{}{}", p.cache, if p.cache == "on" { format!(":{}", p.residency) } else { String::new() }),
+            format!("{}", p.rate),
+            format!("{}/{}", p.ok, p.n),
+            format!("{:.0}", p.p50_ms),
+            format!("{:.0}", p.p95_ms),
+            format!("{:.1}", p.tokens_per_sec),
+            format!("{:.0}", p.bytes_per_token),
+            format!("{:.2}", p.occ_mean),
+            format!("{}", p.occ_peak),
+        ]);
+        csv.push(vec![
+            p.policy.clone(),
+            p.cache.to_string(),
+            p.residency.to_string(),
+            format!("{}", p.rate),
+            format!("{}", p.p50_ms * 1e3),
+            format!("{}", p.p95_ms * 1e3),
+            format!("{}", p.tokens_per_sec),
+            format!("{}", p.bytes_per_token),
+            format!("{}", p.cache_upload_bytes),
+            format!("{}", p.occ_mean),
+            format!("{}", p.occ_peak),
+        ]);
+    }
+    (rows, csv)
+}
+
+fn points_json(points: &[Point], mode: &str) -> Json {
+    Json::obj(vec![
+        ("bench", Json::Str("serving_load".into())),
+        ("mode", Json::Str(mode.into())),
+        (
+            "rows",
+            Json::Arr(
+                points
+                    .iter()
+                    .map(|p| {
+                        Json::obj(vec![
+                            ("policy", Json::Str(p.policy.clone())),
+                            ("cache", Json::Str(p.cache.into())),
+                            ("residency", Json::Str(p.residency.into())),
+                            ("rate", Json::Num(p.rate)),
+                            ("ok", Json::Num(p.ok as f64)),
+                            ("n", Json::Num(p.n as f64)),
+                            ("p50_ms", Json::Num(p.p50_ms)),
+                            ("p95_ms", Json::Num(p.p95_ms)),
+                            ("tokens_per_sec", Json::Num(p.tokens_per_sec)),
+                            ("bytes_per_token", Json::Num(p.bytes_per_token)),
+                            (
+                                "cache_upload_bytes",
+                                Json::Num(p.cache_upload_bytes as f64),
+                            ),
+                            ("occ_mean", Json::Num(p.occ_mean)),
+                            ("occ_peak", Json::Num(p.occ_peak as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// Synthetic in-memory datasets for the artifact-free smoke run.
+fn sim_datasets() -> Vec<Dataset> {
+    ["synth-math", "synth-qa"]
+        .iter()
+        .map(|task| Dataset {
+            task: task.to_string(),
+            examples: (0..6)
+                .map(|i| Example {
+                    task: task.to_string(),
+                    prompt: format!("Q: {i}+1=?"),
+                    answer: format!("{}", i + 1),
+                    code_op: None,
+                })
+                .collect(),
+        })
+        .collect()
+}
 
 fn main() -> Result<()> {
     osdt::util::logging::init();
     let args = Args::parse(
         std::env::args().skip(1).collect::<Vec<_>>(),
-        &["n", "rates", "workers", "max-batch"],
+        &["n", "rates", "workers", "max-batch", "cache-residency", "json"],
     )?;
-    let n: usize = args.get_parse("n", 24)?;
+    let smoke = args.has("smoke");
+    let n: usize = args.get_parse("n", if smoke { 6 } else { 24 })?;
     let workers: usize = args.get_parse("workers", 1)?;
     let max_batch: usize = args.get_parse("max-batch", 4)?;
     let rates: Vec<f64> = args
-        .get_or("rates", "2,6,12")
+        .get_or("rates", if smoke { "8" } else { "2,6,12" })
         .split(',')
         .map(|s| s.parse().unwrap())
         .collect();
+    // smoke runs on SimModel, which mints host handles regardless — one
+    // cached point per policy, no vacuous host/device duplicate rows
+    let default_residency = if smoke { "device" } else { "both" };
+    let residencies: Vec<Residency> = match args.get_or("cache-residency", default_residency) {
+        "both" => vec![Residency::Host, Residency::Device],
+        one => vec![Residency::parse(one)?],
+    };
+    let policies = ["osdt:block:q1:0.75:0.2", "static:0.9", "sequential:1"];
 
-    let cfg = ModelConfig::load("artifacts")?;
-    let data_dir = cfg.artifact_dir.join("data");
-    // mixed multi-task workload: the same trace drives every configuration
-    let datasets = vec![
-        Dataset::load(&data_dir, "synth-math")?,
-        Dataset::load(&data_dir, "synth-qa")?,
-    ];
+    let (model_cfg, datasets) = if smoke {
+        // steps-capped CI configuration on the analytic simulator: every
+        // decode is bounded by gen_len policy steps and n is small, so the
+        // whole bench is a few thousand scheduler steps
+        (tiny_config(), sim_datasets())
+    } else {
+        let cfg = ModelConfig::load("artifacts")?;
+        let data_dir = cfg.artifact_dir.join("data");
+        let datasets = vec![
+            Dataset::load(&data_dir, "synth-math")?,
+            Dataset::load(&data_dir, "synth-qa")?,
+        ];
+        (cfg, datasets)
+    };
 
-    let mut rows = Vec::new();
-    let mut csv = Vec::new();
-    for policy in ["osdt:block:q1:0.75:0.2", "static:0.9", "sequential:1"] {
-        for (cache_label, cache) in [
-            ("off", CacheConfig::disabled()),
-            ("on", CacheConfig::block_boundary()),
-        ] {
+    let mut points = Vec::new();
+    for policy in policies {
+        // cache off: residency is irrelevant (no K/V exists) — one point
+        let mut configs: Vec<(&'static str, CacheConfig, Residency)> =
+            vec![("off", CacheConfig::disabled(), Residency::Device)];
+        for &r in &residencies {
+            configs.push(("on", CacheConfig::block_boundary(), r));
+        }
+        for (cache_label, cache, residency) in configs {
             for &rate in &rates {
-                let coord = Arc::new(Coordinator::start(
-                    CoordinatorConfig {
-                        workers,
-                        max_batch,
-                        batch_wait: Duration::from_millis(2),
-                        cache,
-                    },
-                    cfg.clone(),
-                    |_| {
+                let spec = PointSpec {
+                    policy,
+                    cache,
+                    cache_label,
+                    // SimModel has no device path: label honestly so the
+                    // JSON artifact can't be read as a residency A/B
+                    residency: if smoke { "sim" } else { residency.as_str() },
+                    rate,
+                    n,
+                    workers,
+                    max_batch,
+                };
+                let p = if smoke {
+                    run_point(&spec, &model_cfg, &datasets, |_wid| {
+                        Ok(SimModel::math_like(5))
+                    })?
+                } else {
+                    run_point(&spec, &model_cfg, &datasets, move |_wid| {
                         let cfg = ModelConfig::load("artifacts")?;
-                        ModelRuntime::load(&cfg)
-                    },
-                )?);
-                // warm the OSDT profiles so calibration isn't in the timed
-                // region (one calibration per task)
-                for ds in &datasets {
-                    let _ = coord.generate(&ds.task, &ds.examples[0].prompt, policy)?;
-                }
-                // snapshot the scheduler counters so the warm-up's solo
-                // decodes don't dilute the timed region's occupancy
-                let steps0 = coord.metrics.counter_value("scheduler_steps");
-                let seq_steps0 = coord.metrics.counter_value("scheduled_seq_steps");
-
-                let trace = mixed_trace(&datasets, rate, n, 7);
-                let mut lat = Histogram::latency();
-                let t0 = Instant::now();
-                let mut pending = Vec::new();
-                for r in &trace {
-                    let due = Duration::from_secs_f64(r.at);
-                    if let Some(wait) = due.checked_sub(t0.elapsed()) {
-                        std::thread::sleep(wait);
-                    }
-                    pending.push((
-                        Instant::now(),
-                        coord.submit(Request {
-                            id: 0,
-                            task: r.task.clone(),
-                            prompt: r.prompt.clone(),
-                            policy: policy.into(),
-                        }),
-                    ));
-                }
-                let mut ok = 0;
-                for (sent, rx) in pending {
-                    let resp = rx.recv()?;
-                    if resp.error.is_none() {
-                        ok += 1;
-                    }
-                    lat.record(sent.elapsed().as_secs_f64() * 1e6);
-                }
-                let wall = t0.elapsed().as_secs_f64();
-                let steps =
-                    (coord.metrics.counter_value("scheduler_steps") - steps0).max(1);
-                let seq_steps =
-                    coord.metrics.counter_value("scheduled_seq_steps") - seq_steps0;
-                let occ_mean = seq_steps as f64 / steps as f64;
-                let occ_peak = coord
-                    .metrics
-                    .gauge("batch_occupancy_peak")
-                    .load(Ordering::Relaxed);
-                let tokens_per_sec = (ok * cfg.gen_len) as f64 / wall;
-                let p50 = lat.quantile(0.5) / 1e3;
-                let p95 = lat.quantile(0.95) / 1e3;
+                        let rt = ModelRuntime::load(&cfg)?;
+                        rt.set_residency(residency);
+                        Ok(rt)
+                    })?
+                };
                 eprintln!(
-                    "[load] {policy} cache={cache_label} @{rate}rps: \
-                     p50 {p50:.0}ms p95 {p95:.0}ms occ {occ_mean:.2} (peak {occ_peak})"
+                    "[load] {policy} cache={cache_label}:{} @{rate}rps: \
+                     p50 {:.0}ms p95 {:.0}ms {:.1} tok/s {:.0} B/tok \
+                     (kv up {} B) occ {:.2} (peak {})",
+                    spec.residency,
+                    p.p50_ms,
+                    p.p95_ms,
+                    p.tokens_per_sec,
+                    p.bytes_per_token,
+                    p.cache_upload_bytes,
+                    p.occ_mean,
+                    p.occ_peak
                 );
-                rows.push(vec![
-                    policy.to_string(),
-                    cache_label.to_string(),
-                    format!("{rate}"),
-                    format!("{ok}/{n}"),
-                    format!("{p50:.0}"),
-                    format!("{p95:.0}"),
-                    format!("{tokens_per_sec:.1}"),
-                    format!("{occ_mean:.2}"),
-                    format!("{occ_peak}"),
-                ]);
-                csv.push(vec![
-                    policy.to_string(),
-                    cache_label.to_string(),
-                    format!("{rate}"),
-                    format!("{}", lat.quantile(0.5)),
-                    format!("{}", lat.quantile(0.95)),
-                    format!("{tokens_per_sec}"),
-                    format!("{occ_mean}"),
-                    format!("{occ_peak}"),
-                ]);
-                drop(coord);
+                points.push(p);
             }
         }
-        rows.push(vec![String::new(); 9]);
     }
+
+    let checked = check_token_identity(&points)?;
+    if checked > 0 {
+        println!("token identity: host == device for {checked} cached point(s)");
+    }
+
+    let (rows, csv) = point_rows(&points);
     println!("\n=== serving latency vs offered load (n={n}/point, mixed workload) ===");
     println!(
         "{}",
         render_table(
             &[
                 "policy", "cache", "rps", "ok", "p50 ms", "p95 ms", "tokens/s",
-                "occ mean", "occ peak"
+                "B/token", "occ mean", "occ peak"
             ],
             &rows
         )
@@ -166,11 +394,18 @@ fn main() -> Result<()> {
     write_csv(
         "results/serving_load.csv",
         &[
-            "policy", "cache", "rate", "p50_us", "p95_us", "tokens_per_sec",
-            "occ_mean", "occ_peak",
+            "policy", "cache", "residency", "rate", "p50_us", "p95_us",
+            "tokens_per_sec", "bytes_per_token", "cache_upload_bytes", "occ_mean",
+            "occ_peak",
         ],
         &csv,
     )?;
     println!("csv -> results/serving_load.csv");
+    if let Some(path) = args.get("json") {
+        let doc = points_json(&points, if smoke { "smoke" } else { "full" });
+        std::fs::write(path, format!("{doc}\n"))
+            .with_context(|| format!("writing {path}"))?;
+        println!("json -> {path}");
+    }
     Ok(())
 }

@@ -1,0 +1,177 @@
+//! Cache residency: where a sequence's dual KV cache lives (DESIGN.md §10).
+//!
+//! [`CacheHandle`] is the opaque per-sequence cache token the decode layer
+//! carries between `fwd_full_kv` (producer) and `fwd_window`/
+//! `fwd_window_batch` (consumers). The decode engine never looks inside:
+//! only the forward model that minted a handle knows whether it wraps host
+//! vectors (the legacy round-trip path, kept as an A/B escape hatch) or
+//! device-resident `PjRtBuffer`s (the default — K/V never crosses the
+//! host↔device boundary between block refreshes).
+//!
+//! Handles are pool-aware: dropping one returns its storage to the
+//! [`super::pool::CachePool`] it was minted from, so block rollovers and
+//! sequence retirement recycle cache storage instead of churning the
+//! allocator.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use super::pool::PoolInner;
+
+/// Where forward passes keep the dual KV cache between block refreshes.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Residency {
+    /// K/V downloaded to host `Vec<f32>`s after every refresh and
+    /// re-uploaded for every window pass (the pre-residency behaviour).
+    Host,
+    /// K/V stays on device as retained `PjRtBuffer`s; window passes take
+    /// the buffers as arguments with zero per-step K/V transfer.
+    #[default]
+    Device,
+}
+
+impl Residency {
+    pub fn parse(s: &str) -> Result<Residency> {
+        match s {
+            "host" => Ok(Residency::Host),
+            "device" => Ok(Residency::Device),
+            other => bail!("unknown cache residency {other:?} (host|device)"),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Residency::Host => "host",
+            Residency::Device => "device",
+        }
+    }
+}
+
+/// Host-side copy of the dual KV cache (layers, heads, seq, head_dim).
+/// The payload of a host-resident [`CacheHandle`]; also what `SimModel`
+/// mints (its cache carries no information).
+#[derive(Clone, Debug)]
+pub struct KvCache {
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+    pub dims: [usize; 4],
+}
+
+impl KvCache {
+    /// Total f32 element count per side (k or v).
+    pub fn side_len(&self) -> usize {
+        self.dims.iter().product()
+    }
+}
+
+/// Device-resident dual KV cache: two retained `PjRtBuffer`s.
+#[derive(Debug)]
+pub struct DeviceKv {
+    pub k: xla::PjRtBuffer,
+    pub v: xla::PjRtBuffer,
+    pub dims: [usize; 4],
+}
+
+#[derive(Debug)]
+pub(crate) enum CacheStorage {
+    Host(KvCache),
+    Device(DeviceKv),
+}
+
+/// Opaque per-sequence dual-KV-cache token. Produced by
+/// `ForwardModel::fwd_full_kv`, owned by `DecodeTask`, consumed by the
+/// window passes. Dropping the handle recycles its storage into the pool
+/// it came from. Deliberately **not** `Clone`: with a real PJRT binding a
+/// clone would alias one device allocation into two pool-reclaiming
+/// owners.
+#[derive(Debug)]
+pub struct CacheHandle {
+    storage: Option<CacheStorage>,
+    pool: Option<Arc<PoolInner>>,
+}
+
+impl CacheHandle {
+    /// A host-resident handle outside any pool (tests, ad-hoc callers).
+    pub fn host(kv: KvCache) -> CacheHandle {
+        CacheHandle { storage: Some(CacheStorage::Host(kv)), pool: None }
+    }
+
+    pub(crate) fn new(storage: CacheStorage, pool: Option<Arc<PoolInner>>) -> CacheHandle {
+        CacheHandle { storage: Some(storage), pool }
+    }
+
+    fn storage(&self) -> &CacheStorage {
+        self.storage.as_ref().expect("storage present until drop")
+    }
+
+    pub fn residency(&self) -> Residency {
+        match self.storage() {
+            CacheStorage::Host(_) => Residency::Host,
+            CacheStorage::Device(_) => Residency::Device,
+        }
+    }
+
+    pub fn dims(&self) -> [usize; 4] {
+        match self.storage() {
+            CacheStorage::Host(kv) => kv.dims,
+            CacheStorage::Device(d) => d.dims,
+        }
+    }
+
+    /// Host payload, if host-resident.
+    pub fn as_host(&self) -> Option<&KvCache> {
+        match self.storage() {
+            CacheStorage::Host(kv) => Some(kv),
+            CacheStorage::Device(_) => None,
+        }
+    }
+
+    /// Device buffers (k, v), if device-resident.
+    pub fn as_device(&self) -> Option<(&xla::PjRtBuffer, &xla::PjRtBuffer)> {
+        match self.storage() {
+            CacheStorage::Host(_) => None,
+            CacheStorage::Device(d) => Some((&d.k, &d.v)),
+        }
+    }
+}
+
+impl Drop for CacheHandle {
+    fn drop(&mut self) {
+        if let (Some(storage), Some(pool)) = (self.storage.take(), self.pool.take()) {
+            pool.reclaim(storage);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kv(n: usize) -> KvCache {
+        KvCache { k: vec![1.0; n], v: vec![2.0; n], dims: [1, 1, n, 1] }
+    }
+
+    #[test]
+    fn residency_parses() {
+        assert_eq!(Residency::parse("host").unwrap(), Residency::Host);
+        assert_eq!(Residency::parse("device").unwrap(), Residency::Device);
+        assert!(Residency::parse("gpu").is_err());
+        assert_eq!(Residency::default(), Residency::Device);
+        assert_eq!(Residency::Device.as_str(), "device");
+    }
+
+    #[test]
+    fn host_handle_exposes_payload() {
+        let h = CacheHandle::host(kv(4));
+        assert_eq!(h.residency(), Residency::Host);
+        assert_eq!(h.dims(), [1, 1, 4, 1]);
+        assert_eq!(h.as_host().unwrap().k, vec![1.0; 4]);
+        assert!(h.as_device().is_none());
+    }
+
+    #[test]
+    fn unpooled_drop_is_a_noop() {
+        drop(CacheHandle::host(kv(2)));
+    }
+}

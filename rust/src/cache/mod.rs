@@ -1,6 +1,8 @@
 //! Fast-dLLM dual KV-cache management: configuration (when to refresh),
-//! accounting (passes, analytic FLOPs saved), and the cost model used in
-//! EXPERIMENTS.md to report the cache's effect independently of CPU noise.
+//! residency ([`handle`] — where K/V lives between refreshes, DESIGN.md
+//! §10), storage recycling ([`pool`]), accounting (passes, analytic FLOPs
+//! saved), and the cost model used in EXPERIMENTS.md to report the cache's
+//! effect independently of CPU noise.
 //!
 //! Mechanism recap (Fast-dLLM "DualCache"): at each block boundary a full
 //! forward refreshes K/V for *all* positions (prefix and suffix — suffix
@@ -9,6 +11,12 @@
 //! cached K/V. Optionally the cache can be re-refreshed every
 //! `refresh_interval` window steps to bound staleness (an ablation knob;
 //! the paper's baseline uses block-boundary refresh only).
+
+pub mod handle;
+pub mod pool;
+
+pub use handle::{CacheHandle, DeviceKv, KvCache, Residency};
+pub use pool::{CachePool, PoolStats};
 
 use crate::model::ModelConfig;
 

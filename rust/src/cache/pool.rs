@@ -1,0 +1,260 @@
+//! [`CachePool`]: recycles dual-KV-cache storage across block rollovers and
+//! retired sequences (DESIGN.md §10).
+//!
+//! Every [`CacheHandle`] minted through a pool returns its storage here on
+//! drop. Host-resident storage (two `Vec<f32>`s per sequence, each
+//! layers × heads × seq × head_dim floats) is handed back out for the next
+//! `fwd_full_kv` download — the dominant transient allocation of the
+//! host-residency path. Device-resident buffer pairs are retained for reuse
+//! as padding rows of the stacked `kv_gather` pass (a padding row needs
+//! *some* cache-shaped device buffer; its output row is dropped, so any
+//! retired cache serves — without it the runtime would have to upload a
+//! zeros tensor, putting a host transfer back on the step path).
+//!
+//! Free lists are capacity-bounded; reclaims beyond capacity (or with
+//! mismatched dims) are dropped to the allocator. All counters are atomic —
+//! the pool is shared across a runtime's handles via `Arc` and may see
+//! drops from any thread that owned a task.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::handle::{CacheHandle, CacheStorage, DeviceKv, KvCache};
+
+/// Pool observability counters (cumulative).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    /// Handles minted, by residency.
+    pub minted_host: u64,
+    pub minted_device: u64,
+    /// Storage returned by dropped handles and kept on a free list.
+    pub reclaimed_host: u64,
+    pub reclaimed_device: u64,
+    /// Reclaimed storage handed back out (host: refresh downloads;
+    /// device: gather padding rows).
+    pub reused_host: u64,
+    pub reused_device: u64,
+    /// Reclaims dropped to the allocator (capacity or dims mismatch).
+    pub dropped: u64,
+}
+
+#[derive(Debug)]
+pub(crate) struct PoolInner {
+    dims: [usize; 4],
+    capacity: usize,
+    host_free: Mutex<Vec<KvCache>>,
+    device_free: Mutex<Vec<DeviceKv>>,
+    minted_host: AtomicU64,
+    minted_device: AtomicU64,
+    reclaimed_host: AtomicU64,
+    reclaimed_device: AtomicU64,
+    reused_host: AtomicU64,
+    reused_device: AtomicU64,
+    dropped: AtomicU64,
+}
+
+impl PoolInner {
+    pub(crate) fn reclaim(&self, storage: CacheStorage) {
+        match storage {
+            CacheStorage::Host(kv) => {
+                let mut free = self.host_free.lock().unwrap();
+                if kv.dims == self.dims && free.len() < self.capacity {
+                    free.push(kv);
+                    self.reclaimed_host.fetch_add(1, Ordering::Relaxed);
+                } else {
+                    self.dropped.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            CacheStorage::Device(d) => {
+                let mut free = self.device_free.lock().unwrap();
+                if d.dims == self.dims && free.len() < self.capacity {
+                    free.push(d);
+                    self.reclaimed_device.fetch_add(1, Ordering::Relaxed);
+                } else {
+                    self.dropped.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+    }
+}
+
+/// Per-runtime recycler of dual-KV-cache storage. Cheap to clone (shared
+/// `Arc`); one instance per forward model, shared by every handle it mints.
+#[derive(Clone, Debug)]
+pub struct CachePool {
+    inner: Arc<PoolInner>,
+}
+
+impl CachePool {
+    /// `dims` is the per-sequence cache shape (layers, heads, seq,
+    /// head_dim); `capacity` bounds each free list.
+    pub fn new(dims: [usize; 4], capacity: usize) -> CachePool {
+        CachePool {
+            inner: Arc::new(PoolInner {
+                dims,
+                capacity,
+                host_free: Mutex::new(Vec::new()),
+                device_free: Mutex::new(Vec::new()),
+                minted_host: AtomicU64::new(0),
+                minted_device: AtomicU64::new(0),
+                reclaimed_host: AtomicU64::new(0),
+                reclaimed_device: AtomicU64::new(0),
+                reused_host: AtomicU64::new(0),
+                reused_device: AtomicU64::new(0),
+                dropped: AtomicU64::new(0),
+            }),
+        }
+    }
+
+    pub fn dims(&self) -> [usize; 4] {
+        self.inner.dims
+    }
+
+    /// Host k/v storage for the next refresh download: a recycled pair
+    /// (cleared, capacity retained) when one is free, else fresh vectors.
+    pub fn take_host_storage(&self) -> KvCache {
+        if let Some(mut kv) = self.inner.host_free.lock().unwrap().pop() {
+            self.inner.reused_host.fetch_add(1, Ordering::Relaxed);
+            kv.k.clear();
+            kv.v.clear();
+            return kv;
+        }
+        let n: usize = self.inner.dims.iter().product();
+        KvCache {
+            k: Vec::with_capacity(n),
+            v: Vec::with_capacity(n),
+            dims: self.inner.dims,
+        }
+    }
+
+    /// Mint a pooled host-resident handle.
+    pub fn wrap_host(&self, kv: KvCache) -> CacheHandle {
+        debug_assert_eq!(kv.dims, self.inner.dims, "pool wraps one cache shape");
+        self.inner.minted_host.fetch_add(1, Ordering::Relaxed);
+        CacheHandle::new(CacheStorage::Host(kv), Some(self.inner.clone()))
+    }
+
+    /// Mint a pooled device-resident handle over retained buffers.
+    pub fn wrap_device(&self, k: xla::PjRtBuffer, v: xla::PjRtBuffer) -> CacheHandle {
+        self.inner.minted_device.fetch_add(1, Ordering::Relaxed);
+        CacheHandle::new(
+            CacheStorage::Device(DeviceKv { k, v, dims: self.inner.dims }),
+            Some(self.inner.clone()),
+        )
+    }
+
+    /// Borrow a retired device pair, for use as a stacked-gather padding
+    /// row (its output row is dropped, so stale contents are harmless).
+    /// Return it with [`CachePool::restore_device_pair`] once the pass is
+    /// issued — otherwise padded batches would drain the retained set.
+    pub fn take_device_pair(&self) -> Option<DeviceKv> {
+        let d = self.inner.device_free.lock().unwrap().pop()?;
+        self.inner.reused_device.fetch_add(1, Ordering::Relaxed);
+        Some(d)
+    }
+
+    /// Hand back a pair borrowed via [`CachePool::take_device_pair`]
+    /// (capacity- and dims-checked like any reclaim).
+    pub fn restore_device_pair(&self, d: DeviceKv) {
+        self.inner.reclaim(CacheStorage::Device(d));
+    }
+
+    /// Free-list depths (host, device) — test/debug visibility.
+    pub fn free_len(&self) -> (usize, usize) {
+        (
+            self.inner.host_free.lock().unwrap().len(),
+            self.inner.device_free.lock().unwrap().len(),
+        )
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        let i = &self.inner;
+        PoolStats {
+            minted_host: i.minted_host.load(Ordering::Relaxed),
+            minted_device: i.minted_device.load(Ordering::Relaxed),
+            reclaimed_host: i.reclaimed_host.load(Ordering::Relaxed),
+            reclaimed_device: i.reclaimed_device.load(Ordering::Relaxed),
+            reused_host: i.reused_host.load(Ordering::Relaxed),
+            reused_device: i.reused_device.load(Ordering::Relaxed),
+            dropped: i.dropped.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DIMS: [usize; 4] = [2, 2, 8, 4];
+
+    fn filled(pool: &CachePool, fill: f32) -> KvCache {
+        let mut kv = pool.take_host_storage();
+        let n: usize = DIMS.iter().product();
+        kv.k.resize(n, fill);
+        kv.v.resize(n, -fill);
+        kv
+    }
+
+    #[test]
+    fn dropped_handle_recycles_host_storage() {
+        let pool = CachePool::new(DIMS, 4);
+        let h = pool.wrap_host(filled(&pool, 1.0));
+        assert_eq!(pool.free_len(), (0, 0));
+        drop(h);
+        assert_eq!(pool.free_len(), (1, 0));
+        let kv = pool.take_host_storage();
+        assert!(kv.k.is_empty(), "recycled storage must come back cleared");
+        assert!(kv.k.capacity() >= DIMS.iter().product());
+        let s = pool.stats();
+        assert_eq!((s.reclaimed_host, s.reused_host), (1, 1));
+    }
+
+    #[test]
+    fn capacity_bounds_the_free_list() {
+        let pool = CachePool::new(DIMS, 1);
+        let a = pool.wrap_host(filled(&pool, 1.0));
+        let b = pool.wrap_host(filled(&pool, 2.0));
+        drop(a);
+        drop(b);
+        assert_eq!(pool.free_len(), (1, 0));
+        assert_eq!(pool.stats().dropped, 1);
+    }
+
+    #[test]
+    fn dims_mismatch_is_dropped_not_pooled() {
+        let pool = CachePool::new(DIMS, 4);
+        let other = KvCache { k: vec![0.0; 4], v: vec![0.0; 4], dims: [1, 1, 4, 1] };
+        pool.inner.reclaim(CacheStorage::Host(other));
+        assert_eq!(pool.free_len(), (0, 0));
+        assert_eq!(pool.stats().dropped, 1);
+        // unpooled handles never touch a pool
+        drop(CacheHandle::host(filled(&pool, 3.0)));
+        assert_eq!(pool.free_len(), (0, 0));
+    }
+
+    #[test]
+    fn device_pairs_recycle_for_padding() {
+        let pool = CachePool::new(DIMS, 4);
+        let client = xla::PjRtClient::cpu().unwrap();
+        let n: usize = DIMS.iter().product();
+        let buf = |x: f32| {
+            client
+                .buffer_from_host_buffer::<f32>(&vec![x; n], &DIMS, None)
+                .unwrap()
+        };
+        assert!(pool.take_device_pair().is_none());
+        let h = pool.wrap_device(buf(1.0), buf(2.0));
+        assert_eq!(h.residency(), crate::cache::Residency::Device);
+        drop(h);
+        assert_eq!(pool.free_len(), (0, 1));
+        let pair = pool.take_device_pair().unwrap();
+        assert_eq!(pair.k.dims(), &DIMS);
+        assert!(pool.take_device_pair().is_none());
+        let s = pool.stats();
+        assert_eq!((s.reclaimed_device, s.reused_device), (1, 1));
+        // borrowed pairs come back: padded batches must not drain the set
+        pool.restore_device_pair(pair);
+        assert_eq!(pool.free_len(), (0, 1));
+        assert_eq!(pool.stats().reclaimed_device, 2);
+    }
+}

@@ -30,7 +30,11 @@
 //! `scheduler_steps` / `scheduled_seq_steps` counters whose ratio is the
 //! mean occupancy. `calibrations_deferred` counts local calibrations
 //! parked to protect co-scheduled peers; `calibrations_awaited` counts
-//! requests parked behind a peer's in-flight calibration lease.
+//! requests parked behind a peer's in-flight calibration lease. Workers
+//! with a stats-reporting model (the PJRT runtime) additionally publish
+//! transfer accounting deltas every iteration — `bytes_{up,down}loaded`,
+//! `cache_bytes_{up,down}loaded`, `model_{exec,transfer}_us` — the
+//! counters `serving_load` turns into bytes-per-token (DESIGN.md §10).
 
 pub mod router;
 
@@ -51,6 +55,7 @@ use crate::policy::{
     Acquired, Calibrator, Osdt, PeekState, Policy, PolicySpec, ProfileKey,
     ProfileRegistry, StaticThreshold,
 };
+use crate::runtime::RuntimeStats;
 use crate::tokenizer::Tokenizer;
 
 /// Calibration decode policy (Phase 1 uses Fast-dLLM's static default).
@@ -585,6 +590,8 @@ fn worker_loop<M: ForwardModel>(
     // peer's in-flight calibration lease; re-examined every loop iteration
     let mut deferred: VecDeque<Parked> = VecDeque::new();
     let mut next_seq: u64 = 0;
+    // cumulative transfer/exec accounting snapshot (delta-published)
+    let mut last_stats = model.runtime_stats().unwrap_or_default();
     log::info!(
         "worker {wid} ready (cache={:?}, slots={max_active})",
         cfg.cache
@@ -687,6 +694,9 @@ fn worker_loop<M: ForwardModel>(
         }
         metrics.set_gauge("queue_depth", queue.depth() as i64);
         if sched.is_idle() {
+            // calibration decodes run inline at admission — fold their
+            // transfer accounting in even though no step will run
+            publish_model_stats(metrics, model, &mut last_stats);
             continue; // admissions failed, parked, or served by calibration
         }
 
@@ -734,8 +744,36 @@ fn worker_loop<M: ForwardModel>(
                 metrics.set_gauge("batch_occupancy", 0);
             }
         }
+        publish_model_stats(metrics, model, &mut last_stats);
     }
+    publish_model_stats(metrics, model, &mut last_stats);
     log::info!("worker {wid} exiting");
+}
+
+/// Fold the model's cumulative transfer/exec accounting into the serving
+/// metrics as deltas since the last publish. `cache_bytes_uploaded` is the
+/// device-residency acceptance counter: it stays flat when no per-step
+/// host K/V round trip happens. No-op for backends without stats (sim).
+fn publish_model_stats<M: ForwardModel>(
+    metrics: &Registry,
+    model: &M,
+    last: &mut RuntimeStats,
+) {
+    let Some(now) = model.runtime_stats() else { return };
+    let d = |a: u64, b: u64| a.saturating_sub(b);
+    metrics.add("model_exec_us", d(now.exec_micros(), last.exec_micros()));
+    metrics.add("model_transfer_us", d(now.transfer_micros(), last.transfer_micros()));
+    metrics.add("bytes_uploaded", d(now.upload_bytes(), last.upload_bytes()));
+    metrics.add("bytes_downloaded", d(now.download_bytes(), last.download_bytes()));
+    metrics.add(
+        "cache_bytes_uploaded",
+        d(now.cache_upload_bytes, last.cache_upload_bytes),
+    );
+    metrics.add(
+        "cache_bytes_downloaded",
+        d(now.cache_download_bytes, last.cache_download_bytes),
+    );
+    *last = now;
 }
 
 /// Park a job that cannot be admitted right now, counting why.

@@ -27,13 +27,20 @@ pub use task::{DecodeTask, PassKind};
 
 use anyhow::{bail, Context, Result};
 
+use crate::cache::CacheHandle;
 use crate::model::ModelConfig;
 use crate::policy::{CalibrationTrace, Policy};
-use crate::runtime::{ConfOut, KvCache};
+use crate::runtime::{ConfOut, RuntimeStats};
 
 /// Abstraction over the PJRT runtime so the engine, tests, and the analytic
 /// simulator share one decode loop. `ModelRuntime` implements this; so does
 /// `sim::SimModel`.
+///
+/// The KV-cache contract is **handle-based** (DESIGN.md §10): a model mints
+/// an opaque [`CacheHandle`] from `fwd_full_kv` and is the only party that
+/// looks inside it when the window passes hand it back. The decode layer
+/// just carries handles, so a device-resident cache never forces a host
+/// round trip through the scheduler.
 pub trait ForwardModel {
     fn config(&self) -> &ModelConfig;
     fn max_batch(&self) -> usize;
@@ -41,10 +48,11 @@ pub trait ForwardModel {
     /// confidence + greedy candidate per row.
     fn fwd_conf(&self, batch_tokens: &[&[u32]]) -> Result<ConfOut>;
     /// Block-boundary forward (batch 1): conf/argmax plus a refreshed dual
-    /// KV cache.
-    fn fwd_full_kv(&self, tokens: &[u32]) -> Result<(ConfOut, KvCache)>;
+    /// KV cache behind an opaque handle.
+    fn fwd_full_kv(&self, tokens: &[u32]) -> Result<(ConfOut, CacheHandle)>;
     /// Within-block forward (batch 1) attending against `cache`.
-    fn fwd_window(&self, window: &[u32], start: usize, cache: &KvCache) -> Result<ConfOut>;
+    fn fwd_window(&self, window: &[u32], start: usize, cache: &CacheHandle)
+        -> Result<ConfOut>;
     /// Batched window pass: same-shape windows from different sequences
     /// share one forward. Row `i` must equal `fwd_window(windows[i],
     /// starts[i], caches[i])` — the scheduler relies on this to keep
@@ -55,7 +63,7 @@ pub trait ForwardModel {
         &self,
         windows: &[&[u32]],
         starts: &[usize],
-        caches: &[&KvCache],
+        caches: &[&CacheHandle],
     ) -> Result<ConfOut> {
         if windows.len() != starts.len() || windows.len() != caches.len() {
             bail!(
@@ -65,19 +73,21 @@ pub trait ForwardModel {
                 caches.len()
             );
         }
-        let mut conf = Vec::with_capacity(windows.len());
-        let mut argmax = Vec::with_capacity(windows.len());
+        let row_len = self.config().block_len;
+        let mut out = ConfOut::with_capacity(row_len, windows.len());
         for ((window, &start), cache) in windows.iter().zip(starts).zip(caches) {
-            let out = self.fwd_window(window, start, cache)?;
-            match (out.conf.into_iter().next(), out.argmax.into_iter().next()) {
-                (Some(c), Some(a)) => {
-                    conf.push(c);
-                    argmax.push(a);
-                }
-                _ => bail!("fwd_window returned no rows"),
+            let row = self.fwd_window(window, start, cache)?;
+            if row.is_empty() {
+                bail!("fwd_window returned no rows");
             }
+            out.append(row);
         }
-        Ok(ConfOut { conf, argmax })
+        Ok(out)
+    }
+    /// Cumulative transfer/exec accounting, for backends that measure it
+    /// (the PJRT runtime). Drivers publish deltas into serving metrics.
+    fn runtime_stats(&self) -> Option<RuntimeStats> {
+        None
     }
 }
 
@@ -91,19 +101,27 @@ impl ForwardModel for crate::runtime::ModelRuntime {
     fn fwd_conf(&self, batch_tokens: &[&[u32]]) -> Result<ConfOut> {
         crate::runtime::ModelRuntime::fwd_conf(self, batch_tokens)
     }
-    fn fwd_full_kv(&self, tokens: &[u32]) -> Result<(ConfOut, KvCache)> {
+    fn fwd_full_kv(&self, tokens: &[u32]) -> Result<(ConfOut, CacheHandle)> {
         crate::runtime::ModelRuntime::fwd_full_kv(self, tokens)
     }
-    fn fwd_window(&self, window: &[u32], start: usize, cache: &KvCache) -> Result<ConfOut> {
+    fn fwd_window(
+        &self,
+        window: &[u32],
+        start: usize,
+        cache: &CacheHandle,
+    ) -> Result<ConfOut> {
         crate::runtime::ModelRuntime::fwd_window(self, window, start, cache)
     }
     fn fwd_window_batch(
         &self,
         windows: &[&[u32]],
         starts: &[usize],
-        caches: &[&KvCache],
+        caches: &[&CacheHandle],
     ) -> Result<ConfOut> {
         crate::runtime::ModelRuntime::fwd_window_batch(self, windows, starts, caches)
+    }
+    fn runtime_stats(&self) -> Option<RuntimeStats> {
+        Some(self.stats())
     }
 }
 

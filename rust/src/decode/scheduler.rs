@@ -23,9 +23,8 @@ use std::collections::VecDeque;
 
 use anyhow::{bail, Result};
 
-use crate::cache::CacheConfig;
+use crate::cache::{CacheConfig, CacheHandle};
 use crate::policy::Policy;
-use crate::runtime::KvCache;
 
 use super::task::{DecodeTask, PassKind};
 use super::{DecodeResult, ForwardModel};
@@ -172,13 +171,18 @@ impl<'m, M: ForwardModel, P: PolicyRef> StepScheduler<'m, M, P> {
         // ---- block-boundary cache refreshes (batch-1 by runtime contract)
         for &i in &full_kv {
             let (out, kv) = model.fwd_full_kv(self.active[i].task.tokens())?;
-            if out.conf.is_empty() || out.argmax.is_empty() {
+            if out.is_empty() {
                 bail!("fwd_full_kv returned no rows");
             }
             let e = &mut self.active[i];
             e.task.install_cache(kv);
-            e.task
-                .apply(cfg, e.policy.as_policy(), PassKind::FullKv, &out.conf[0], &out.argmax[0]);
+            e.task.apply(
+                cfg,
+                e.policy.as_policy(),
+                PassKind::FullKv,
+                out.conf_row(0),
+                out.argmax_row(0),
+            );
             report.model_calls += 1;
             report.full_passes += 1;
         }
@@ -192,10 +196,10 @@ impl<'m, M: ForwardModel, P: PolicyRef> StepScheduler<'m, M, P> {
                     .collect();
                 model.fwd_conf(&batch)?
             };
-            if out.conf.len() < chunk.len() || out.argmax.len() < chunk.len() {
+            if out.len() < chunk.len() {
                 bail!(
                     "fwd_conf returned {} rows for a batch of {}",
-                    out.conf.len().min(out.argmax.len()),
+                    out.len(),
                     chunk.len()
                 );
             }
@@ -205,8 +209,8 @@ impl<'m, M: ForwardModel, P: PolicyRef> StepScheduler<'m, M, P> {
                     cfg,
                     e.policy.as_policy(),
                     PassKind::Full,
-                    &out.conf[row],
-                    &out.argmax[row],
+                    out.conf_row(row),
+                    out.argmax_row(row),
                 );
             }
             report.model_calls += 1;
@@ -218,7 +222,7 @@ impl<'m, M: ForwardModel, P: PolicyRef> StepScheduler<'m, M, P> {
             let mut starts: Vec<usize> = Vec::with_capacity(chunk.len());
             let out = {
                 let mut windows: Vec<&[u32]> = Vec::with_capacity(chunk.len());
-                let mut caches: Vec<&KvCache> = Vec::with_capacity(chunk.len());
+                let mut caches: Vec<&CacheHandle> = Vec::with_capacity(chunk.len());
                 for &i in chunk {
                     let t = &self.active[i].task;
                     let start = match t.needs(cfg) {
@@ -234,10 +238,10 @@ impl<'m, M: ForwardModel, P: PolicyRef> StepScheduler<'m, M, P> {
                 }
                 model.fwd_window_batch(&windows, &starts, &caches)?
             };
-            if out.conf.len() < chunk.len() || out.argmax.len() < chunk.len() {
+            if out.len() < chunk.len() {
                 bail!(
                     "fwd_window_batch returned {} rows for a batch of {}",
-                    out.conf.len().min(out.argmax.len()),
+                    out.len(),
                     chunk.len()
                 );
             }
@@ -247,8 +251,8 @@ impl<'m, M: ForwardModel, P: PolicyRef> StepScheduler<'m, M, P> {
                     cfg,
                     e.policy.as_policy(),
                     PassKind::Window { start: starts[row] },
-                    &out.conf[row],
-                    &out.argmax[row],
+                    out.conf_row(row),
+                    out.argmax_row(row),
                 );
             }
             report.model_calls += 1;

@@ -18,10 +18,9 @@
 
 use anyhow::{bail, Result};
 
-use crate::cache::CacheConfig;
+use crate::cache::{CacheConfig, CacheHandle};
 use crate::model::ModelConfig;
 use crate::policy::{CalibrationTrace, Policy, StepContext};
-use crate::runtime::KvCache;
 
 use super::DecodeResult;
 
@@ -44,8 +43,9 @@ pub enum PassKind {
 
 /// Resumable per-sequence decode state (public successor of the engine's
 /// old private `SeqState`, which was locked inside two run-to-completion
-/// loops).
-#[derive(Clone, Debug)]
+/// loops). Not `Clone`: the owned [`CacheHandle`] is a single-owner,
+/// pool-reclaiming resource.
+#[derive(Debug)]
 pub struct DecodeTask {
     tokens: Vec<u32>,
     block: usize,
@@ -57,9 +57,11 @@ pub struct DecodeTask {
     trace: CalibrationTrace,
     done: bool,
     cache_cfg: CacheConfig,
-    /// Per-sequence dual KV cache; `None` until the first block-boundary
-    /// refresh, and dropped again whenever the active block changes.
-    cache: Option<KvCache>,
+    /// Per-sequence dual KV cache (opaque residency-aware handle); `None`
+    /// until the first block-boundary refresh, and dropped again — which
+    /// recycles its storage into the minting model's pool — whenever the
+    /// active block changes.
+    cache: Option<CacheHandle>,
     /// Window steps since the last cache refresh (staleness bound).
     since_refresh: usize,
 }
@@ -121,14 +123,15 @@ impl DecodeTask {
         &self.tokens[cfg.block_range(self.block)]
     }
 
-    /// The installed dual KV cache, if any.
-    pub fn cache(&self) -> Option<&KvCache> {
+    /// The installed dual KV cache handle, if any.
+    pub fn cache(&self) -> Option<&CacheHandle> {
         self.cache.as_ref()
     }
 
-    /// Install a freshly refreshed cache (after a `FullKv` pass, before the
-    /// matching [`DecodeTask::apply`]).
-    pub fn install_cache(&mut self, cache: KvCache) {
+    /// Install a freshly refreshed cache handle (after a `FullKv` pass,
+    /// before the matching [`DecodeTask::apply`]). Any previous handle is
+    /// dropped, recycling its storage.
+    pub fn install_cache(&mut self, cache: CacheHandle) {
         self.cache = Some(cache);
         self.since_refresh = 0;
     }
@@ -266,7 +269,7 @@ mod tests {
         assert_eq!(task.needs(&cfg), PassKind::FullKv);
         let (out, kv) = m.fwd_full_kv(task.tokens()).unwrap();
         task.install_cache(kv);
-        task.apply(&cfg, &p, PassKind::FullKv, &out.conf[0], &out.argmax[0]);
+        task.apply(&cfg, &p, PassKind::FullKv, out.conf_row(0), out.argmax_row(0));
         // within the block: window passes against the installed cache
         if !task.is_done() && task.block() == 0 {
             match task.needs(&cfg) {
@@ -301,7 +304,7 @@ mod tests {
                     }
                     let (out, kv) = m.fwd_full_kv(task.tokens()).unwrap();
                     task.install_cache(kv);
-                    task.apply(&cfg, &p, PassKind::FullKv, &out.conf[0], &out.argmax[0]);
+                    task.apply(&cfg, &p, PassKind::FullKv, out.conf_row(0), out.argmax_row(0));
                 }
                 PassKind::Window { start } => {
                     let out = m
@@ -311,8 +314,8 @@ mod tests {
                         &cfg,
                         &p,
                         PassKind::Window { start },
-                        &out.conf[0],
-                        &out.argmax[0],
+                        out.conf_row(0),
+                        out.argmax_row(0),
                     );
                 }
                 other => panic!("unexpected pass {other:?}"),

@@ -16,7 +16,7 @@ use std::sync::Arc;
 use anyhow::{bail, Context, Result};
 
 use osdt::bench::{self, RunOpts};
-use osdt::cache::CacheConfig;
+use osdt::cache::{CacheConfig, Residency};
 use osdt::config::{Args, ServerConfig};
 use osdt::coordinator::{Coordinator, CoordinatorConfig};
 use osdt::decode::Engine;
@@ -33,7 +33,7 @@ use osdt::workload::Dataset;
 const VALUE_FLAGS: &[&str] = &[
     "artifacts", "policy", "task", "prompt", "n", "addr", "workers",
     "max-batch", "batch-wait-ms", "mode", "metric", "profile-dir", "tau",
-    "refresh-interval", "save", "drift-floor", "ema-alpha",
+    "refresh-interval", "save", "drift-floor", "ema-alpha", "cache-residency",
 ];
 
 fn main() {
@@ -81,6 +81,8 @@ COMMON FLAGS:
   --artifacts DIR   artifact directory (default: artifacts)
   --cache           enable the Fast-dLLM dual KV cache path
   --refresh-interval N  cache staleness bound (window steps; 0 = block only)
+  --cache-residency R   where K/V lives between refreshes: device (default,
+                        zero per-step host round trip) or host (legacy A/B)
 
 PROFILE REGISTRY (serve):
   --profile-dir DIR    persist calibrated profiles; warm-start on restart
@@ -92,11 +94,16 @@ POLICY SPECS:
   e.g. osdt:step-block:q2:0.75:0.2
 ";
 
+fn cache_residency(args: &Args) -> Result<Residency> {
+    Residency::parse(args.get_or("cache-residency", Residency::default().as_str()))
+}
+
 fn load_stack(args: &Args) -> Result<(ModelConfig, ModelRuntime, Tokenizer)> {
     let dir = args.get_or("artifacts", "artifacts");
     let cfg = ModelConfig::load(dir)
         .with_context(|| format!("loading artifacts from {dir} (run `make artifacts`?)"))?;
     let rt = ModelRuntime::load(&cfg)?;
+    rt.set_residency(cache_residency(args)?);
     let tok = Tokenizer::from_config(&cfg)?;
     Ok((cfg, rt, tok))
 }
@@ -174,14 +181,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
         None => ProfileRegistry::with_config(rcfg),
     });
+    let residency = cache_residency(args)?;
     let coord = Arc::new(Coordinator::start_with_registry(
         ccfg,
         cfg,
         registry,
         move |wid| {
-            log::info!("worker {wid}: loading runtime from {dir}");
+            log::info!("worker {wid}: loading runtime from {dir} ({residency:?} KV residency)");
             let cfg = ModelConfig::load(&dir)?;
-            ModelRuntime::load(&cfg)
+            let rt = ModelRuntime::load(&cfg)?;
+            rt.set_residency(residency);
+            Ok(rt)
         },
     )?);
     let server = Server::start(&scfg.addr, coord)?;

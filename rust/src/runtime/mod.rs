@@ -4,7 +4,14 @@
 //!
 //! Adapted from /opt/xla-example/load_hlo: HLO **text** -> `HloModuleProto`
 //! -> `XlaComputation` -> `client.compile`. All execution goes through
-//! `execute_b` (device buffers) so weights are uploaded exactly once.
+//! `execute_b_parts` (device buffers in, per-element device buffers out) so
+//! weights are uploaded exactly once and — on the default **device**
+//! residency (DESIGN.md §10) — the dual KV cache never crosses the
+//! host↔device boundary between block refreshes: `fwd_full_kv` retains its
+//! k/v outputs as buffers inside an opaque [`CacheHandle`], and the window
+//! passes take those buffers as arguments directly. The legacy **host**
+//! residency (download-then-reupload every step) stays selectable for A/B
+//! via [`ModelRuntime::set_residency`].
 //!
 //! One `ModelRuntime` is *not* Sync; each engine worker thread owns its own
 //! (the PJRT CPU client is cheap and executables compile in milliseconds).
@@ -16,42 +23,188 @@ use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
+use crate::cache::{CacheHandle, CachePool, DeviceKv, Residency};
 use crate::model::ModelConfig;
 use weights::Tensor;
 
+pub use crate::cache::handle::KvCache;
+
 /// Forward-pass result for a batch: per-sequence confidence and candidate
-/// token arrays over the full sequence (or window).
-#[derive(Clone, Debug)]
+/// token rows over the full sequence (or window), stored **flat** — one
+/// allocation per side per pass instead of a `Vec` per row (the per-step
+/// transient the old `Vec<Vec<_>>` shape forced on the scheduler).
+#[derive(Clone, Debug, Default)]
 pub struct ConfOut {
-    pub conf: Vec<Vec<f32>>,
-    pub argmax: Vec<Vec<u32>>,
+    rows: usize,
+    row_len: usize,
+    conf: Vec<f32>,
+    argmax: Vec<u32>,
 }
 
-/// Host-side copy of the dual KV cache (layers, heads, seq, head_dim) —
-/// opaque to callers; produced by `fwd_full_kv`, consumed by `fwd_window`.
-#[derive(Clone, Debug)]
-pub struct KvCache {
-    pub k: Vec<f32>,
-    pub v: Vec<f32>,
-    pub dims: [usize; 4],
+impl ConfOut {
+    /// An empty result whose rows will be `row_len` wide.
+    pub fn new(row_len: usize) -> ConfOut {
+        ConfOut { rows: 0, row_len, conf: Vec::new(), argmax: Vec::new() }
+    }
+
+    pub fn with_capacity(row_len: usize, rows: usize) -> ConfOut {
+        ConfOut {
+            rows: 0,
+            row_len,
+            conf: Vec::with_capacity(rows * row_len),
+            argmax: Vec::with_capacity(rows * row_len),
+        }
+    }
+
+    /// Build from flat payloads holding exactly `rows × row_len` entries.
+    pub fn from_flat(
+        conf: Vec<f32>,
+        argmax: Vec<u32>,
+        rows: usize,
+        row_len: usize,
+    ) -> Result<ConfOut> {
+        if conf.len() != rows * row_len || argmax.len() != rows * row_len {
+            bail!(
+                "flat conf/argmax payload {} / {} != {rows} x {row_len}",
+                conf.len(),
+                argmax.len()
+            );
+        }
+        Ok(ConfOut { rows, row_len, conf, argmax })
+    }
+
+    /// Number of sequence rows.
+    pub fn len(&self) -> usize {
+        self.rows
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows == 0
+    }
+
+    pub fn row_len(&self) -> usize {
+        self.row_len
+    }
+
+    /// Confidence row `i` as a borrowed slice (no per-row allocation).
+    pub fn conf_row(&self, i: usize) -> &[f32] {
+        assert!(i < self.rows, "conf row {i} out of {}", self.rows);
+        &self.conf[i * self.row_len..(i + 1) * self.row_len]
+    }
+
+    /// Candidate-token row `i` as a borrowed slice.
+    pub fn argmax_row(&self, i: usize) -> &[u32] {
+        assert!(i < self.rows, "argmax row {i} out of {}", self.rows);
+        &self.argmax[i * self.row_len..(i + 1) * self.row_len]
+    }
+
+    /// Append one row (sim / sequential-fallback builders).
+    pub fn push_row(&mut self, conf: &[f32], argmax: &[u32]) {
+        assert_eq!(conf.len(), self.row_len, "conf row width");
+        assert_eq!(argmax.len(), self.row_len, "argmax row width");
+        self.conf.extend_from_slice(conf);
+        self.argmax.extend_from_slice(argmax);
+        self.rows += 1;
+    }
+
+    /// Append all rows of `other` (chunked passes).
+    pub fn append(&mut self, other: ConfOut) {
+        assert_eq!(other.row_len, self.row_len, "row width mismatch");
+        self.conf.extend_from_slice(&other.conf);
+        self.argmax.extend_from_slice(&other.argmax);
+        self.rows += other.rows;
+    }
 }
 
-/// Counters the perf pass and benches read.
+/// Transfer/execution accounting for one runtime entry point.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EntryStats {
+    /// Executable invocations.
+    pub calls: u64,
+    pub exec_micros: u64,
+    pub upload_micros: u64,
+    pub upload_bytes: u64,
+    pub download_micros: u64,
+    pub download_bytes: u64,
+}
+
+impl EntryStats {
+    fn add(&mut self, o: &EntryStats) {
+        self.calls += o.calls;
+        self.exec_micros += o.exec_micros;
+        self.upload_micros += o.upload_micros;
+        self.upload_bytes += o.upload_bytes;
+        self.download_micros += o.download_micros;
+        self.download_bytes += o.download_bytes;
+    }
+}
+
+/// Counters the perf pass, benches, and the residency acceptance tests
+/// read — split per entry point so the device-residency win is visible as
+/// numbers, not vibes.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct RuntimeStats {
-    pub fwd_calls: u64,
-    pub fwd_full_kv_calls: u64,
-    pub fwd_window_calls: u64,
-    pub exec_micros: u64,
-    pub transfer_micros: u64,
+    pub conf: EntryStats,
+    pub full_kv: EntryStats,
+    pub window: EntryStats,
+    /// The `kv_gather_b{B}` on-device stacking pass (device residency only).
+    pub gather: EntryStats,
+    /// Host→device bytes spent uploading K/V payloads as forward-pass
+    /// arguments. **Zero on the device-residency path** — the acceptance
+    /// counter for "no per-step host k/v round trip".
+    pub cache_upload_bytes: u64,
+    /// Device→host bytes spent downloading refreshed K/V out of
+    /// `fwd_full_kv`. Zero on the device-residency path.
+    pub cache_download_bytes: u64,
 }
 
-/// Reusable host-side staging buffers for the batched window pass. The
-/// stacked k/v uploads are the large ones (B × layers × heads × seq ×
-/// head_dim floats); reallocating them per call was the dominant transient
-/// allocation of the cached serving path, so they live with the runtime
-/// and are cleared + refilled each call. `ModelRuntime` is not `Sync`
-/// (each worker owns one), so a `RefCell` suffices.
+impl RuntimeStats {
+    /// Aggregate over all entry points.
+    pub fn total(&self) -> EntryStats {
+        let mut t = EntryStats::default();
+        for e in [&self.conf, &self.full_kv, &self.window, &self.gather] {
+            t.add(e);
+        }
+        t
+    }
+
+    pub fn upload_bytes(&self) -> u64 {
+        self.total().upload_bytes
+    }
+
+    pub fn download_bytes(&self) -> u64 {
+        self.total().download_bytes
+    }
+
+    pub fn transfer_bytes(&self) -> u64 {
+        let t = self.total();
+        t.upload_bytes + t.download_bytes
+    }
+
+    pub fn exec_micros(&self) -> u64 {
+        self.total().exec_micros
+    }
+
+    pub fn transfer_micros(&self) -> u64 {
+        let t = self.total();
+        t.upload_micros + t.download_micros
+    }
+}
+
+/// Which entry point an upload/exec/download belongs to.
+#[derive(Clone, Copy, Debug)]
+enum Entry {
+    Conf,
+    FullKv,
+    Window,
+    Gather,
+}
+
+/// Reusable host-side staging buffers for batched passes. On the host
+/// residency path the stacked k/v uploads are the large ones (B × layers ×
+/// heads × seq × head_dim floats); on the device path only the token/start
+/// staging remains and `flat_k`/`flat_v` stay empty. `ModelRuntime` is not
+/// `Sync` (each worker owns one), so a `RefCell` suffices.
 #[derive(Default)]
 struct WindowScratch {
     tok: Vec<i32>,
@@ -70,6 +223,11 @@ pub struct ModelRuntime {
     conf_batches: Vec<usize>,
     /// batch sizes with a compiled fwd_window variant, ascending
     window_batches: Vec<usize>,
+    /// batch sizes with BOTH fwd_window_b{B} and kv_gather_b{B} compiled —
+    /// the stacked device-residency path, ascending
+    gather_batches: Vec<usize>,
+    residency: std::cell::Cell<Residency>,
+    pool: CachePool,
     stats: std::cell::Cell<RuntimeStats>,
     scratch: std::cell::RefCell<WindowScratch>,
 }
@@ -97,6 +255,7 @@ impl ModelRuntime {
         let mut executables = BTreeMap::new();
         let mut conf_batches = Vec::new();
         let mut window_batches = Vec::new();
+        let mut gather_raw = Vec::new();
         for (name, v) in &cfg.variants {
             let path = cfg.hlo_path(v);
             let proto = xla::HloModuleProto::from_text_file(&path)
@@ -113,16 +272,29 @@ impl ModelRuntime {
                 window_batches
                     .push(b.parse::<usize>().context("variant batch suffix")?);
             }
+            if let Some(b) = name.strip_prefix("kv_gather_b") {
+                gather_raw.push(b.parse::<usize>().context("variant batch suffix")?);
+            }
         }
         conf_batches.sort_unstable();
         window_batches.sort_unstable();
+        let mut gather_batches: Vec<usize> = gather_raw
+            .into_iter()
+            .filter(|b| window_batches.contains(b))
+            .collect();
+        gather_batches.sort_unstable();
         if conf_batches.is_empty() {
             bail!("no fwd_conf_b* variants in model_config.json");
         }
+        let cache_dims = [cfg.n_layers, cfg.n_heads, cfg.seq_len, cfg.head_dim];
+        let pool_cap = 2 * conf_batches.last().copied().unwrap_or(1).max(
+            window_batches.last().copied().unwrap_or(1),
+        );
         log::info!(
-            "runtime ready: {} weights, {} variants, {:.2}s",
+            "runtime ready: {} weights, {} variants (gather batches {:?}), {:.2}s",
             weight_bufs.len(),
             executables.len(),
+            gather_batches,
             t0.elapsed().as_secs_f64()
         );
         Ok(ModelRuntime {
@@ -132,6 +304,9 @@ impl ModelRuntime {
             executables,
             conf_batches,
             window_batches,
+            gather_batches,
+            residency: std::cell::Cell::new(Residency::default()),
+            pool: CachePool::new(cache_dims, pool_cap),
             stats: std::cell::Cell::new(RuntimeStats::default()),
             scratch: std::cell::RefCell::new(WindowScratch::default()),
         })
@@ -143,6 +318,22 @@ impl ModelRuntime {
 
     pub fn stats(&self) -> RuntimeStats {
         self.stats.get()
+    }
+
+    /// Where this runtime keeps minted KV caches. Default:
+    /// [`Residency::Device`]. Handles minted before a switch stay valid —
+    /// the window passes dispatch on each handle's own residency.
+    pub fn residency(&self) -> Residency {
+        self.residency.get()
+    }
+
+    pub fn set_residency(&self, r: Residency) {
+        self.residency.set(r);
+    }
+
+    /// The cache-storage recycler backing this runtime's handles.
+    pub fn pool(&self) -> &CachePool {
+        &self.pool
     }
 
     /// Largest compiled fwd_conf batch size.
@@ -159,10 +350,30 @@ impl ModelRuntime {
             .unwrap_or_else(|| self.max_batch())
     }
 
+    fn cache_dims(&self) -> [usize; 4] {
+        [
+            self.cfg.n_layers,
+            self.cfg.n_heads,
+            self.cfg.seq_len,
+            self.cfg.head_dim,
+        ]
+    }
+
     fn bump(&self, f: impl FnOnce(&mut RuntimeStats)) {
         let mut s = self.stats.get();
         f(&mut s);
         self.stats.set(s);
+    }
+
+    fn bump_entry(&self, e: Entry, f: impl FnOnce(&mut EntryStats)) {
+        self.bump(|s| {
+            f(match e {
+                Entry::Conf => &mut s.conf,
+                Entry::FullKv => &mut s.full_kv,
+                Entry::Window => &mut s.window,
+                Entry::Gather => &mut s.gather,
+            })
+        });
     }
 
     fn exe(&self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
@@ -171,50 +382,158 @@ impl ModelRuntime {
             .with_context(|| format!("variant {name} not loaded"))
     }
 
-    fn tokens_buffer(&self, flat: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
-        self.client
-            .buffer_from_host_buffer::<i32>(flat, dims, None)
-            .context("uploading tokens")
+    fn upload_i32(&self, e: Entry, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        let t0 = Instant::now();
+        let buf = self
+            .client
+            .buffer_from_host_buffer::<i32>(data, dims, None)
+            .context("uploading i32 buffer")?;
+        let us = t0.elapsed().as_micros() as u64;
+        self.bump_entry(e, |s| {
+            s.upload_micros += us;
+            s.upload_bytes += 4 * data.len() as u64;
+        });
+        Ok(buf)
     }
 
-    /// Run one executable over weights ++ extra args; returns the
-    /// decomposed output tuple as host literals.
-    fn run(&self, name: &str, extra: &[xla::PjRtBuffer]) -> Result<Vec<xla::Literal>> {
-        let exe = self.exe(name)?;
-        let mut args: Vec<&xla::PjRtBuffer> = self.weight_bufs.iter().collect();
-        args.extend(extra.iter());
+    /// Upload an f32 array, additionally counting it as K/V-payload bytes
+    /// when `is_cache` — the counter the residency acceptance test pins at
+    /// zero for the device path.
+    fn upload_f32(
+        &self,
+        e: Entry,
+        data: &[f32],
+        dims: &[usize],
+        is_cache: bool,
+    ) -> Result<xla::PjRtBuffer> {
         let t0 = Instant::now();
-        let result = exe
-            .execute_b(&args)
+        let buf = self
+            .client
+            .buffer_from_host_buffer::<f32>(data, dims, None)
+            .context("uploading f32 buffer")?;
+        let us = t0.elapsed().as_micros() as u64;
+        let bytes = 4 * data.len() as u64;
+        self.bump_entry(e, |s| {
+            s.upload_micros += us;
+            s.upload_bytes += bytes;
+        });
+        if is_cache {
+            self.bump(|s| s.cache_upload_bytes += bytes);
+        }
+        Ok(buf)
+    }
+
+    /// Run one executable, keeping every output tuple element as a device
+    /// buffer. `extra` follows the weights (unless `with_weights` is false
+    /// — the stacking executables take no parameters beyond the caches);
+    /// `donate_extra` indexes into `extra` for arguments whose buffers are
+    /// donated to the execution.
+    fn exec(
+        &self,
+        name: &str,
+        e: Entry,
+        extra: &[&xla::PjRtBuffer],
+        donate_extra: &[usize],
+        with_weights: bool,
+    ) -> Result<Vec<xla::PjRtBuffer>> {
+        let exe = self.exe(name)?;
+        let mut args: Vec<&xla::PjRtBuffer> = if with_weights {
+            self.weight_bufs.iter().collect()
+        } else {
+            Vec::with_capacity(extra.len())
+        };
+        let off = args.len();
+        args.extend(extra.iter().copied());
+        let donate: Vec<usize> = donate_extra.iter().map(|i| i + off).collect();
+        let t0 = Instant::now();
+        let parts = exe
+            .execute_b_parts(&args, &donate)
             .with_context(|| format!("executing {name}"))?;
-        let exec_us = t0.elapsed().as_micros() as u64;
-        let t1 = Instant::now();
-        let lit = result[0][0]
-            .to_literal_sync()
-            .context("fetching output tuple")?;
-        let parts = lit.to_tuple().context("decomposing output tuple")?;
-        let transfer_us = t1.elapsed().as_micros() as u64;
-        self.bump(|s| {
-            s.exec_micros += exec_us;
-            s.transfer_micros += transfer_us;
+        let us = t0.elapsed().as_micros() as u64;
+        self.bump_entry(e, |s| {
+            s.calls += 1;
+            s.exec_micros += us;
         });
         Ok(parts)
     }
 
+    /// Download one f32 buffer into pooled/reused storage, with accounting.
+    fn download_f32(
+        &self,
+        e: Entry,
+        buf: &xla::PjRtBuffer,
+        out: &mut Vec<f32>,
+        is_cache: bool,
+    ) -> Result<()> {
+        let t0 = Instant::now();
+        buf.to_literal_sync()
+            .and_then(|l| l.read_into(out))
+            .context("downloading f32 buffer")?;
+        let us = t0.elapsed().as_micros() as u64;
+        let bytes = 4 * out.len() as u64;
+        self.bump_entry(e, |s| {
+            s.download_micros += us;
+            s.download_bytes += bytes;
+        });
+        if is_cache {
+            self.bump(|s| s.cache_download_bytes += bytes);
+        }
+        Ok(())
+    }
+
+    /// Download (conf, argmax) output buffers into a flat [`ConfOut`],
+    /// keeping only the first `n` rows.
+    fn download_conf(
+        &self,
+        e: Entry,
+        conf_buf: &xla::PjRtBuffer,
+        arg_buf: &xla::PjRtBuffer,
+        n: usize,
+        s: usize,
+    ) -> Result<ConfOut> {
+        let t0 = Instant::now();
+        let conf_lit = conf_buf.to_literal_sync().context("fetching conf")?;
+        let arg_lit = arg_buf.to_literal_sync().context("fetching argmax")?;
+        let us = t0.elapsed().as_micros() as u64;
+        // the full padded batch crosses the boundary, not just the n rows
+        let bytes = 4 * (conf_lit.element_count() + arg_lit.element_count()) as u64;
+        let out = unpack_conf(&[conf_lit, arg_lit], n, s)?;
+        self.bump_entry(e, |st| {
+            st.download_micros += us;
+            st.download_bytes += bytes;
+        });
+        Ok(out)
+    }
+
     /// Full forward over a batch of borrowed token sequences (each of len
-    /// seq_len): per-position confidence + greedy candidate. `batch` may be
-    /// any size up to `max_batch`; sequences are padded to the compiled
-    /// batch shape and the padding rows are dropped from the output.
+    /// seq_len): per-position confidence + greedy candidate. Any batch size
+    /// is accepted: sequences are padded up to the smallest compiled batch
+    /// shape that fits, and batches beyond the largest compiled variant are
+    /// chunked into result-identical stacked passes (mirroring
+    /// `fwd_window_batch` — `pick_batch` no longer silently truncates).
     pub fn fwd_conf(&self, batch_tokens: &[&[u32]]) -> Result<ConfOut> {
+        let s = self.cfg.seq_len;
         let n = batch_tokens.len();
         if n == 0 {
-            return Ok(ConfOut { conf: vec![], argmax: vec![] });
+            return Ok(ConfOut::new(s));
         }
+        let bmax = self.max_batch();
+        if n <= bmax {
+            return self.fwd_conf_chunk(batch_tokens);
+        }
+        let mut out = ConfOut::with_capacity(s, n);
+        for chunk in batch_tokens.chunks(bmax) {
+            out.append(self.fwd_conf_chunk(chunk)?);
+        }
+        Ok(out)
+    }
+
+    /// One compiled-variant-sized fwd_conf pass (`n <= max_batch`).
+    fn fwd_conf_chunk(&self, batch_tokens: &[&[u32]]) -> Result<ConfOut> {
+        let n = batch_tokens.len();
         let s = self.cfg.seq_len;
         let b = self.pick_batch(n);
-        if n > b {
-            bail!("batch {n} exceeds max compiled batch {b}");
-        }
+        debug_assert!(n <= b, "chunking failed: {n} > {b}");
         let mut flat = Vec::with_capacity(b * s);
         for seq in batch_tokens {
             if seq.len() != s {
@@ -223,89 +542,128 @@ impl ModelRuntime {
             flat.extend(seq.iter().map(|&t| t as i32));
         }
         flat.resize(b * s, self.cfg.pad_id as i32); // padding rows
-        let tok_buf = self.tokens_buffer(&flat, &[b, s])?;
-        let parts = self.run(&format!("fwd_conf_b{b}"), &[tok_buf])?;
-        self.bump(|st| st.fwd_calls += 1);
-        let (conf, argmax) = unpack_conf(&parts, n, s)?;
-        Ok(ConfOut { conf, argmax })
+        let tok_buf = self.upload_i32(Entry::Conf, &flat, &[b, s])?;
+        let parts = self.exec(&format!("fwd_conf_b{b}"), Entry::Conf, &[&tok_buf], &[], true)?;
+        if parts.len() < 2 {
+            bail!("fwd_conf output arity {} < 2", parts.len());
+        }
+        self.download_conf(Entry::Conf, &parts[0], &parts[1], n, s)
     }
 
-    /// Block-boundary forward (batch 1): conf/argmax plus refreshed dual
-    /// KV cache.
-    pub fn fwd_full_kv(&self, tokens: &[u32]) -> Result<(ConfOut, KvCache)> {
+    /// Block-boundary forward (batch 1): conf/argmax plus a refreshed dual
+    /// KV cache behind an opaque [`CacheHandle`]. On [`Residency::Device`]
+    /// the k/v outputs are retained as device buffers (nothing downloaded);
+    /// on [`Residency::Host`] they are downloaded into pool-recycled host
+    /// vectors, reproducing the legacy round-trip path.
+    pub fn fwd_full_kv(&self, tokens: &[u32]) -> Result<(ConfOut, CacheHandle)> {
         let s = self.cfg.seq_len;
         if tokens.len() != s {
             bail!("sequence length {} != {s}", tokens.len());
         }
         let flat: Vec<i32> = tokens.iter().map(|&t| t as i32).collect();
-        let tok_buf = self.tokens_buffer(&flat, &[1, s])?;
-        let parts = self.run("fwd_full_kv_b1", &[tok_buf])?;
-        if parts.len() != 4 {
-            bail!("fwd_full_kv output arity {} != 4", parts.len());
-        }
-        self.bump(|st| st.fwd_full_kv_calls += 1);
-        let (conf, argmax) = unpack_conf(&parts[..2], 1, s)?;
-        let dims = [
-            self.cfg.n_layers,
-            self.cfg.n_heads,
-            s,
-            self.cfg.head_dim,
-        ];
-        let kv = KvCache {
-            k: parts[2].to_vec::<f32>().context("k_cache")?,
-            v: parts[3].to_vec::<f32>().context("v_cache")?,
-            dims,
-        };
+        let tok_buf = self.upload_i32(Entry::FullKv, &flat, &[1, s])?;
+        let parts =
+            self.exec("fwd_full_kv_b1", Entry::FullKv, &[&tok_buf], &[], true)?;
+        let [conf_buf, arg_buf, k_buf, v_buf]: [xla::PjRtBuffer; 4] = parts
+            .try_into()
+            .map_err(|p: Vec<_>| anyhow::anyhow!("fwd_full_kv output arity {} != 4", p.len()))?;
+        let out = self.download_conf(Entry::FullKv, &conf_buf, &arg_buf, 1, s)?;
+        let dims = self.cache_dims();
         let want: usize = dims.iter().product();
-        if kv.k.len() != want || kv.v.len() != want {
-            bail!("kv cache size {} != {want}", kv.k.len());
-        }
-        Ok((ConfOut { conf, argmax }, kv))
+        let handle = match self.residency.get() {
+            Residency::Device => {
+                // same artifact-drift guard the host arm gets from its
+                // size check: a stale HLO set must fail loudly, not mint a
+                // mis-shaped cache stamped with config dims
+                if k_buf.dims() != dims.as_slice() || v_buf.dims() != dims.as_slice() {
+                    bail!(
+                        "fwd_full_kv cache shape {:?}/{:?} != {dims:?}",
+                        k_buf.dims(),
+                        v_buf.dims()
+                    );
+                }
+                self.pool.wrap_device(k_buf, v_buf)
+            }
+            Residency::Host => {
+                let mut kv = self.pool.take_host_storage();
+                self.download_f32(Entry::FullKv, &k_buf, &mut kv.k, true)?;
+                self.download_f32(Entry::FullKv, &v_buf, &mut kv.v, true)?;
+                if kv.k.len() != want || kv.v.len() != want {
+                    bail!("kv cache size {} != {want}", kv.k.len());
+                }
+                self.pool.wrap_host(kv)
+            }
+        };
+        Ok((out, handle))
     }
 
     /// Within-block forward (batch 1): recompute only the `block_len`
     /// window at absolute position `start`, attending against the cache.
+    /// Host-resident handles upload their k/v payload (legacy path);
+    /// device-resident handles pass their buffers straight through — zero
+    /// K/V transfer.
     pub fn fwd_window(
         &self,
         window_tokens: &[u32],
         start: usize,
-        cache: &KvCache,
+        cache: &CacheHandle,
     ) -> Result<ConfOut> {
         let w = self.cfg.block_len;
         if window_tokens.len() != w {
             bail!("window length {} != {w}", window_tokens.len());
         }
+        let dims = self.cache_dims();
+        if cache.dims() != dims {
+            bail!("cache dims {:?} != {:?}", cache.dims(), dims);
+        }
         let flat: Vec<i32> = window_tokens.iter().map(|&t| t as i32).collect();
-        let tok_buf = self.tokens_buffer(&flat, &[1, w])?;
-        let start_buf = self
-            .client
-            .buffer_from_host_buffer::<i32>(&[start as i32], &[], None)
-            .context("uploading start scalar")?;
-        let k_buf = self
-            .client
-            .buffer_from_host_buffer::<f32>(&cache.k, &cache.dims, None)
-            .context("uploading k cache")?;
-        let v_buf = self
-            .client
-            .buffer_from_host_buffer::<f32>(&cache.v, &cache.dims, None)
-            .context("uploading v cache")?;
-        let parts = self.run("fwd_window_b1", &[tok_buf, start_buf, k_buf, v_buf])?;
-        self.bump(|st| st.fwd_window_calls += 1);
-        let (conf, argmax) = unpack_conf(&parts, 1, w)?;
-        Ok(ConfOut { conf, argmax })
+        let tok_buf = self.upload_i32(Entry::Window, &flat, &[1, w])?;
+        let start_buf = self.upload_i32(Entry::Window, &[start as i32], &[])?;
+        let parts = match cache.as_device() {
+            Some((k, v)) => self.exec(
+                "fwd_window_b1",
+                Entry::Window,
+                &[&tok_buf, &start_buf, k, v],
+                &[],
+                true,
+            )?,
+            None => {
+                let kv = cache.as_host().expect("host or device");
+                let k_buf = self.upload_f32(Entry::Window, &kv.k, &dims, true)?;
+                let v_buf = self.upload_f32(Entry::Window, &kv.v, &dims, true)?;
+                self.exec(
+                    "fwd_window_b1",
+                    Entry::Window,
+                    &[&tok_buf, &start_buf, &k_buf, &v_buf],
+                    &[],
+                    true,
+                )?
+            }
+        };
+        if parts.len() < 2 {
+            bail!("fwd_window output arity {} < 2", parts.len());
+        }
+        self.download_conf(Entry::Window, &parts[0], &parts[1], 1, w)
     }
 
     /// Batched within-block forward: `n` same-shape windows from different
-    /// sequences share one pass. Uses a compiled `fwd_window_b{B}` variant
-    /// when the artifact set has one that fits (windows stacked to [B, w],
-    /// caches to [B, layers, heads, seq, head_dim], padding rows zeroed);
-    /// otherwise falls back to sequential batch-1 window passes, which is
-    /// result-identical.
+    /// sequences share one pass. Dispatch, by handle residency:
+    ///
+    /// - all **device** + a `kv_gather_b{B}` variant compiled: the caches
+    ///   are stacked on device (per-row buffer arguments into the gather
+    ///   executable, whose stacked outputs are **donated** into
+    ///   `fwd_window_b{B}`) — no host K/V traffic at all;
+    /// - all **host** + a `fwd_window_b{B}` variant: the legacy stacked
+    ///   upload through [`WindowScratch`];
+    /// - otherwise (n == 1, no batched variant, mixed residency):
+    ///   result-identical sequential batch-1 window passes.
+    ///
+    /// Batches beyond the largest compiled variant are chunked.
     pub fn fwd_window_batch(
         &self,
         windows: &[&[u32]],
         starts: &[usize],
-        caches: &[&KvCache],
+        caches: &[&CacheHandle],
     ) -> Result<ConfOut> {
         let n = windows.len();
         if n != starts.len() || n != caches.len() {
@@ -317,50 +675,175 @@ impl ModelRuntime {
             );
         }
         if n == 0 {
-            return Ok(ConfOut { conf: vec![], argmax: vec![] });
+            return Ok(ConfOut::new(self.cfg.block_len));
         }
-        let bmax = self.window_batches.last().copied().unwrap_or(1);
-        if n == 1 || bmax <= 1 {
-            // no compiled batched variant — run the exact batch-1 path
-            let mut conf = Vec::with_capacity(n);
-            let mut argmax = Vec::with_capacity(n);
-            for ((window, &start), cache) in windows.iter().zip(starts).zip(caches) {
-                let mut out = self.fwd_window(window, start, cache)?;
-                conf.push(std::mem::take(&mut out.conf[0]));
-                argmax.push(std::mem::take(&mut out.argmax[0]));
+        let all_device = caches.iter().all(|c| c.residency() == Residency::Device);
+        let all_host = caches.iter().all(|c| c.residency() == Residency::Host);
+        if n > 1 && all_device {
+            let bmax = self.gather_batches.last().copied().unwrap_or(1);
+            if bmax > 1 {
+                return self
+                    .window_chunks(windows, starts, caches, bmax, Self::fwd_window_gathered);
             }
-            return Ok(ConfOut { conf, argmax });
         }
-        // chunk by the largest compiled variant (mirrors fwd_conf's
-        // pick_batch) so n beyond it still uses stacked passes
-        if n > bmax {
-            let mut conf = Vec::with_capacity(n);
-            let mut argmax = Vec::with_capacity(n);
-            let mut at = 0;
-            while at < n {
-                let end = (at + bmax).min(n);
-                let mut out = self.fwd_window_stacked(
-                    &windows[at..end],
-                    &starts[at..end],
-                    &caches[at..end],
-                )?;
-                conf.append(&mut out.conf);
-                argmax.append(&mut out.argmax);
-                at = end;
+        if n > 1 && all_host {
+            let bmax = self.window_batches.last().copied().unwrap_or(1);
+            if bmax > 1 {
+                return self
+                    .window_chunks(windows, starts, caches, bmax, Self::fwd_window_stacked);
             }
-            return Ok(ConfOut { conf, argmax });
         }
-        self.fwd_window_stacked(windows, starts, caches)
+        // exact batch-1 path: n == 1, no batched variant, or mixed residency
+        let mut out = ConfOut::with_capacity(self.cfg.block_len, n);
+        for ((window, &start), cache) in windows.iter().zip(starts).zip(caches) {
+            out.append(self.fwd_window(window, start, cache)?);
+        }
+        Ok(out)
     }
 
-    /// One stacked window pass (n <= the largest compiled batch). Staging
-    /// goes through the runtime's reusable [`WindowScratch`] — no per-call
+    /// Split a window batch into `bmax`-sized chunks through `f`.
+    fn window_chunks(
+        &self,
+        windows: &[&[u32]],
+        starts: &[usize],
+        caches: &[&CacheHandle],
+        bmax: usize,
+        f: impl Fn(&Self, &[&[u32]], &[usize], &[&CacheHandle]) -> Result<ConfOut>,
+    ) -> Result<ConfOut> {
+        let n = windows.len();
+        if n <= bmax {
+            return f(self, windows, starts, caches);
+        }
+        let mut out = ConfOut::with_capacity(self.cfg.block_len, n);
+        let mut at = 0;
+        while at < n {
+            let end = (at + bmax).min(n);
+            out.append(f(
+                self,
+                &windows[at..end],
+                &starts[at..end],
+                &caches[at..end],
+            )?);
+            at = end;
+        }
+        Ok(out)
+    }
+
+    /// Stage the token/start rows of a window chunk into scratch, padded to
+    /// the compiled batch `b`; returns the uploaded (tokens, starts).
+    fn upload_window_rows(
+        &self,
+        scratch: &mut WindowScratch,
+        windows: &[&[u32]],
+        starts: &[usize],
+        b: usize,
+    ) -> Result<(xla::PjRtBuffer, xla::PjRtBuffer)> {
+        let w = self.cfg.block_len;
+        scratch.tok.clear();
+        scratch.start.clear();
+        scratch.tok.reserve(b * w);
+        for (window, &start) in windows.iter().zip(starts) {
+            if window.len() != w {
+                bail!("window length {} != {w}", window.len());
+            }
+            scratch.tok.extend(window.iter().map(|&t| t as i32));
+            scratch.start.push(start as i32);
+        }
+        // padding rows: pad tokens, start 0
+        scratch.tok.resize(b * w, self.cfg.pad_id as i32);
+        scratch.start.resize(b, 0);
+        let tok_buf = self.upload_i32(Entry::Window, &scratch.tok, &[b, w])?;
+        let start_buf = self.upload_i32(Entry::Window, &scratch.start, &[b])?;
+        Ok((tok_buf, start_buf))
+    }
+
+    /// One stacked window pass over **device-resident** caches
+    /// (n <= the largest compiled gather batch): per-sequence cache buffers
+    /// go into `kv_gather_b{B}` as per-row arguments (padding rows reuse a
+    /// retired pair from the pool, else repeat row 0 — their output rows
+    /// are dropped), and the stacked k/v outputs are donated into
+    /// `fwd_window_b{B}`. The host never touches a K/V byte.
+    fn fwd_window_gathered(
+        &self,
+        windows: &[&[u32]],
+        starts: &[usize],
+        caches: &[&CacheHandle],
+    ) -> Result<ConfOut> {
+        let n = windows.len();
+        let b = self
+            .gather_batches
+            .iter()
+            .copied()
+            .find(|&b| b >= n)
+            .unwrap_or_else(|| self.gather_batches.last().copied().unwrap_or(1));
+        let w = self.cfg.block_len;
+        let dims = self.cache_dims();
+        let mut scratch = self.scratch.borrow_mut();
+        let (tok_buf, start_buf) =
+            self.upload_window_rows(&mut scratch, windows, starts, b)?;
+        // per-row cache arguments: k_0..k_{b-1}, v_0..v_{b-1}
+        let mut rows: Vec<(&xla::PjRtBuffer, &xla::PjRtBuffer)> = Vec::with_capacity(b);
+        for cache in caches {
+            if cache.dims() != dims {
+                bail!("cache dims {:?} != {:?}", cache.dims(), dims);
+            }
+            rows.push(cache.as_device().expect("gather path is all-device"));
+        }
+        let pad_rows: Vec<DeviceKv> = (n..b)
+            .filter_map(|_| self.pool.take_device_pair())
+            .collect();
+        for pair in &pad_rows {
+            rows.push((&pair.k, &pair.v));
+        }
+        while rows.len() < b {
+            let first = rows[0]; // padding: any cache-shaped buffer serves
+            rows.push(first);
+        }
+        let mut gather_args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(2 * b);
+        gather_args.extend(rows.iter().map(|&(k, _)| k));
+        gather_args.extend(rows.iter().map(|&(_, v)| v));
+        let stacked_res = self.exec(
+            &format!("kv_gather_b{b}"),
+            Entry::Gather,
+            &gather_args,
+            &[],
+            false, // stacking executable takes no weight parameters
+        );
+        drop(gather_args);
+        drop(rows);
+        // padding pairs were only borrowed for the gather — hand them back
+        // (on the error path too) so the pool's retained set isn't drained
+        // by padded batches
+        for pair in pad_rows {
+            self.pool.restore_device_pair(pair);
+        }
+        let [k_stacked, v_stacked]: [xla::PjRtBuffer; 2] = stacked_res?
+            .try_into()
+            .map_err(|p: Vec<_>| anyhow::anyhow!("kv_gather output arity {} != 2", p.len()))?;
+        // the stacked pair is a per-call temporary: donate it so the window
+        // outputs can alias its device memory instead of allocating
+        let parts = self.exec(
+            &format!("fwd_window_b{b}"),
+            Entry::Window,
+            &[&tok_buf, &start_buf, &k_stacked, &v_stacked],
+            &[2, 3],
+            true,
+        )?;
+        if parts.len() < 2 {
+            bail!("fwd_window output arity {} < 2", parts.len());
+        }
+        self.download_conf(Entry::Window, &parts[0], &parts[1], n, w)
+    }
+
+    /// One stacked window pass over **host-resident** caches (the legacy
+    /// upload path, kept for `--cache-residency host` A/B). Staging goes
+    /// through the runtime's reusable [`WindowScratch`] — no per-call
     /// reallocation of the flat token/start/k/v buffers.
     fn fwd_window_stacked(
         &self,
         windows: &[&[u32]],
         starts: &[usize],
-        caches: &[&KvCache],
+        caches: &[&CacheHandle],
     ) -> Result<ConfOut> {
         let n = windows.len();
         let b = self
@@ -370,49 +853,27 @@ impl ModelRuntime {
             .find(|&b| b >= n)
             .unwrap_or_else(|| self.window_batches.last().copied().unwrap_or(1));
         let w = self.cfg.block_len;
-        let cache_dims = [
-            self.cfg.n_layers,
-            self.cfg.n_heads,
-            self.cfg.seq_len,
-            self.cfg.head_dim,
-        ];
+        let cache_dims = self.cache_dims();
         let cache_len: usize = cache_dims.iter().product();
         let mut scratch = self.scratch.borrow_mut();
-        let WindowScratch {
-            tok: flat_tok,
-            start: flat_start,
-            k: flat_k,
-            v: flat_v,
-        } = &mut *scratch;
-        flat_tok.clear();
-        flat_start.clear();
+        let (tok_buf, start_buf) =
+            self.upload_window_rows(&mut scratch, windows, starts, b)?;
+        let WindowScratch { k: flat_k, v: flat_v, .. } = &mut *scratch;
         flat_k.clear();
         flat_v.clear();
-        flat_tok.reserve(b * w);
         flat_k.reserve(b * cache_len);
         flat_v.reserve(b * cache_len);
-        for ((window, &start), cache) in windows.iter().zip(starts).zip(caches) {
-            if window.len() != w {
-                bail!("window length {} != {w}", window.len());
+        for cache in caches {
+            if cache.dims() != cache_dims {
+                bail!("cache dims {:?} != {:?}", cache.dims(), cache_dims);
             }
-            if cache.dims != cache_dims {
-                bail!("cache dims {:?} != {:?}", cache.dims, cache_dims);
-            }
-            flat_tok.extend(window.iter().map(|&t| t as i32));
-            flat_start.push(start as i32);
-            flat_k.extend_from_slice(&cache.k);
-            flat_v.extend_from_slice(&cache.v);
+            let kv = cache.as_host().expect("stacked path is all-host");
+            flat_k.extend_from_slice(&kv.k);
+            flat_v.extend_from_slice(&kv.v);
         }
-        // padding rows: pad tokens, start 0, zero caches
-        flat_tok.resize(b * w, self.cfg.pad_id as i32);
-        flat_start.resize(b, 0);
+        // padding rows: zero caches
         flat_k.resize(b * cache_len, 0.0);
         flat_v.resize(b * cache_len, 0.0);
-        let tok_buf = self.tokens_buffer(flat_tok, &[b, w])?;
-        let start_buf = self
-            .client
-            .buffer_from_host_buffer::<i32>(flat_start, &[b], None)
-            .context("uploading start vector")?;
         let stacked = [
             b,
             cache_dims[0],
@@ -420,19 +881,19 @@ impl ModelRuntime {
             cache_dims[2],
             cache_dims[3],
         ];
-        let k_buf = self
-            .client
-            .buffer_from_host_buffer::<f32>(flat_k, &stacked, None)
-            .context("uploading stacked k cache")?;
-        let v_buf = self
-            .client
-            .buffer_from_host_buffer::<f32>(flat_v, &stacked, None)
-            .context("uploading stacked v cache")?;
-        let parts =
-            self.run(&format!("fwd_window_b{b}"), &[tok_buf, start_buf, k_buf, v_buf])?;
-        self.bump(|st| st.fwd_window_calls += n as u64);
-        let (conf, argmax) = unpack_conf(&parts, n, w)?;
-        Ok(ConfOut { conf, argmax })
+        let k_buf = self.upload_f32(Entry::Window, flat_k, &stacked, true)?;
+        let v_buf = self.upload_f32(Entry::Window, flat_v, &stacked, true)?;
+        let parts = self.exec(
+            &format!("fwd_window_b{b}"),
+            Entry::Window,
+            &[&tok_buf, &start_buf, &k_buf, &v_buf],
+            &[],
+            true,
+        )?;
+        if parts.len() < 2 {
+            bail!("fwd_window output arity {} < 2", parts.len());
+        }
+        self.download_conf(Entry::Window, &parts[0], &parts[1], n, w)
     }
 
     /// Debug entry: full logits for one sequence, row-major (seq, vocab).
@@ -442,23 +903,25 @@ impl ModelRuntime {
             bail!("sequence length {} != {s}", tokens.len());
         }
         let flat: Vec<i32> = tokens.iter().map(|&t| t as i32).collect();
-        let tok_buf = self.tokens_buffer(&flat, &[1, s])?;
-        let parts = self.run("logits_b1", &[tok_buf])?;
-        parts[0].to_vec::<f32>().context("logits payload")
+        let tok_buf = self.upload_i32(Entry::Conf, &flat, &[1, s])?;
+        let parts = self.exec("logits_b1", Entry::Conf, &[&tok_buf], &[], true)?;
+        if parts.is_empty() {
+            bail!("logits output arity 0");
+        }
+        let mut out = Vec::new();
+        self.download_f32(Entry::Conf, &parts[0], &mut out, false)?;
+        Ok(out)
     }
 }
 
-/// Split (conf f32[B,S], argmax i32[B,S]) literals into per-sequence rows,
-/// keeping only the first `n` rows (the rest is batch padding).
-fn unpack_conf(
-    parts: &[xla::Literal],
-    n: usize,
-    s: usize,
-) -> Result<(Vec<Vec<f32>>, Vec<Vec<u32>>)> {
+/// Split (conf f32[B,S], argmax i32[B,S]) literals into a flat row-view
+/// [`ConfOut`], keeping only the first `n` rows (the rest is batch
+/// padding). No per-row allocation — one flat buffer per side.
+fn unpack_conf(parts: &[xla::Literal], n: usize, s: usize) -> Result<ConfOut> {
     if parts.len() < 2 {
         bail!("expected (conf, argmax) outputs, got {}", parts.len());
     }
-    let conf_flat = parts[0].to_vec::<f32>().context("conf payload")?;
+    let mut conf_flat = parts[0].to_vec::<f32>().context("conf payload")?;
     let arg_flat = parts[1].to_vec::<i32>().context("argmax payload")?;
     if conf_flat.len() < n * s || arg_flat.len() < n * s {
         bail!(
@@ -468,18 +931,9 @@ fn unpack_conf(
             n * s
         );
     }
-    let conf = (0..n)
-        .map(|i| conf_flat[i * s..(i + 1) * s].to_vec())
-        .collect();
-    let argmax = (0..n)
-        .map(|i| {
-            arg_flat[i * s..(i + 1) * s]
-                .iter()
-                .map(|&x| x as u32)
-                .collect()
-        })
-        .collect();
-    Ok((conf, argmax))
+    conf_flat.truncate(n * s);
+    let argmax: Vec<u32> = arg_flat[..n * s].iter().map(|&x| x as u32).collect();
+    ConfOut::from_flat(conf_flat, argmax, n, s)
 }
 
 #[cfg(test)]
@@ -490,17 +944,21 @@ mod tests {
     fn unpack_conf_splits_rows() {
         let conf = xla::Literal::vec1(&[0.1f32, 0.2, 0.3, 0.4]);
         let arg = xla::Literal::vec1(&[1i32, 2, 3, 4]);
-        let (c, a) = unpack_conf(&[conf, arg], 2, 2).unwrap();
-        assert_eq!(c, vec![vec![0.1, 0.2], vec![0.3, 0.4]]);
-        assert_eq!(a, vec![vec![1, 2], vec![3, 4]]);
+        let out = unpack_conf(&[conf, arg], 2, 2).unwrap();
+        assert_eq!(out.len(), 2);
+        assert_eq!(out.conf_row(0), &[0.1, 0.2]);
+        assert_eq!(out.conf_row(1), &[0.3, 0.4]);
+        assert_eq!(out.argmax_row(0), &[1, 2]);
+        assert_eq!(out.argmax_row(1), &[3, 4]);
     }
 
     #[test]
     fn unpack_conf_drops_padding_rows() {
         let conf = xla::Literal::vec1(&[0.1f32, 0.2, 0.3, 0.4]);
         let arg = xla::Literal::vec1(&[1i32, 2, 3, 4]);
-        let (c, _) = unpack_conf(&[conf, arg], 1, 2).unwrap();
-        assert_eq!(c, vec![vec![0.1, 0.2]]);
+        let out = unpack_conf(&[conf, arg], 1, 2).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out.conf_row(0), &[0.1, 0.2]);
     }
 
     #[test]
@@ -508,5 +966,46 @@ mod tests {
         let conf = xla::Literal::vec1(&[0.1f32]);
         let arg = xla::Literal::vec1(&[1i32]);
         assert!(unpack_conf(&[conf, arg], 1, 2).is_err());
+    }
+
+    #[test]
+    fn conf_out_push_and_append() {
+        let mut a = ConfOut::new(2);
+        a.push_row(&[0.1, 0.2], &[1, 2]);
+        let mut b = ConfOut::new(2);
+        b.push_row(&[0.3, 0.4], &[3, 4]);
+        a.append(b);
+        assert_eq!(a.len(), 2);
+        assert_eq!(a.conf_row(1), &[0.3, 0.4]);
+        assert_eq!(a.argmax_row(0), &[1, 2]);
+        assert_eq!(a.row_len(), 2);
+        assert!(!a.is_empty());
+        assert!(ConfOut::new(3).is_empty());
+    }
+
+    #[test]
+    #[should_panic]
+    fn conf_out_row_out_of_bounds_panics() {
+        ConfOut::new(2).conf_row(0);
+    }
+
+    #[test]
+    fn conf_out_from_flat_checks_size() {
+        assert!(ConfOut::from_flat(vec![0.0; 4], vec![0; 4], 2, 2).is_ok());
+        assert!(ConfOut::from_flat(vec![0.0; 3], vec![0; 4], 2, 2).is_err());
+    }
+
+    #[test]
+    fn runtime_stats_aggregate() {
+        let mut s = RuntimeStats::default();
+        s.conf.upload_bytes = 10;
+        s.window.upload_bytes = 5;
+        s.full_kv.download_bytes = 7;
+        s.gather.exec_micros = 3;
+        s.window.exec_micros = 4;
+        assert_eq!(s.upload_bytes(), 15);
+        assert_eq!(s.download_bytes(), 7);
+        assert_eq!(s.transfer_bytes(), 22);
+        assert_eq!(s.exec_micros(), 7);
     }
 }

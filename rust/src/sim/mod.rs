@@ -9,9 +9,10 @@
 
 use anyhow::Result;
 
+use crate::cache::{CacheHandle, CachePool};
 use crate::decode::ForwardModel;
 use crate::model::{fixtures::tiny_config, ModelConfig};
-use crate::runtime::{ConfOut, KvCache};
+use crate::runtime::ConfOut;
 
 /// Task-level confidence signature parameters.
 #[derive(Clone, Copy, Debug)]
@@ -28,12 +29,15 @@ pub struct SimTask {
     pub block_offsets: [f64; 3],
 }
 
-/// Deterministic stand-in for the mask predictor.
+/// Deterministic stand-in for the mask predictor. Mints pooled host
+/// [`CacheHandle`]s, so the cache-handle lifecycle (mint → install → drop →
+/// recycle) is exercised by every simulator-backed test.
 #[derive(Clone, Debug)]
 pub struct SimModel {
     cfg: ModelConfig,
     task: SimTask,
     seed: u64,
+    pool: CachePool,
 }
 
 fn hash2(a: u64, b: u64) -> u64 {
@@ -48,7 +52,15 @@ fn hash2(a: u64, b: u64) -> u64 {
 
 impl SimModel {
     pub fn new(task: SimTask, seed: u64) -> Self {
-        SimModel { cfg: tiny_config(), task, seed }
+        let cfg = tiny_config();
+        let dims = [cfg.n_layers, cfg.n_heads, cfg.seq_len, cfg.head_dim];
+        // clones share the pool (it is the model's recycler, not state)
+        SimModel { cfg, task, seed, pool: CachePool::new(dims, 8) }
+    }
+
+    /// The cache-storage recycler backing this model's handles.
+    pub fn pool(&self) -> &CachePool {
+        &self.pool
     }
 
     /// GSM8K-analog signature: high peak, moderate base.
@@ -159,36 +171,38 @@ impl ForwardModel for SimModel {
     }
 
     fn fwd_conf(&self, batch_tokens: &[&[u32]]) -> Result<ConfOut> {
-        let mut conf = Vec::new();
-        let mut argmax = Vec::new();
+        let mut out = ConfOut::with_capacity(self.cfg.seq_len, batch_tokens.len());
         for seq in batch_tokens {
             let (c, a) = self.score(seq, 0);
-            conf.push(c);
-            argmax.push(a);
+            out.push_row(&c, &a);
         }
-        Ok(ConfOut { conf, argmax })
+        Ok(out)
     }
 
-    fn fwd_full_kv(&self, tokens: &[u32]) -> Result<(ConfOut, KvCache)> {
+    fn fwd_full_kv(&self, tokens: &[u32]) -> Result<(ConfOut, CacheHandle)> {
         let (c, a) = self.score(tokens, 0);
-        let dims = [
-            self.cfg.n_layers,
-            self.cfg.n_heads,
-            self.cfg.seq_len,
-            self.cfg.head_dim,
-        ];
+        let mut out = ConfOut::with_capacity(self.cfg.seq_len, 1);
+        out.push_row(&c, &a);
         // the simulator's "cache" carries no information — its conf is a
-        // pure function of visible tokens
-        let n: usize = dims.iter().product();
-        Ok((
-            ConfOut { conf: vec![c], argmax: vec![a] },
-            KvCache { k: vec![0.0; n], v: vec![0.0; n], dims },
-        ))
+        // pure function of visible tokens — but it goes through the pooled
+        // handle lifecycle so tests exercise mint/recycle for real
+        let mut kv = self.pool.take_host_storage();
+        let n: usize = kv.dims.iter().product();
+        kv.k.resize(n, 0.0);
+        kv.v.resize(n, 0.0);
+        Ok((out, self.pool.wrap_host(kv)))
     }
 
-    fn fwd_window(&self, window: &[u32], start: usize, _cache: &KvCache) -> Result<ConfOut> {
+    fn fwd_window(
+        &self,
+        window: &[u32],
+        start: usize,
+        _cache: &CacheHandle,
+    ) -> Result<ConfOut> {
         let (c, a) = self.score(window, start);
-        Ok(ConfOut { conf: vec![c], argmax: vec![a] })
+        let mut out = ConfOut::with_capacity(window.len(), 1);
+        out.push_row(&c, &a);
+        Ok(out)
     }
 }
 
@@ -205,8 +219,8 @@ mod tests {
         let l = m.layout_from_seed(5);
         let a = m.fwd_conf(&[l.as_slice()]).unwrap();
         let b = m.fwd_conf(&[l.as_slice()]).unwrap();
-        assert_eq!(a.conf, b.conf);
-        assert_eq!(a.argmax, b.argmax);
+        assert_eq!(a.conf_row(0), b.conf_row(0));
+        assert_eq!(a.argmax_row(0), b.argmax_row(0));
     }
 
     #[test]

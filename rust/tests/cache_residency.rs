@@ -1,0 +1,156 @@
+//! Cache-handle contract tests (DESIGN.md §10) on the analytic simulator —
+//! no artifacts required, so the handle lifecycle (mint → install → window
+//! consumption → drop → pool recycle) is exercised in every build:
+//!
+//! - `SimModel` conformance: the handle-based `ForwardModel` contract
+//!   composes with the scheduler exactly like the old host-vector one —
+//!   cached solo, cached batched, and mid-flight admission all stay
+//!   token-identical;
+//! - pool reuse after retirement: storage recycled from retired sequences
+//!   must never leak state into later decodes (no stale rows);
+//! - handle drop semantics: block rollovers and retirement return storage
+//!   to the pool, bounded by its capacity.
+
+use osdt::cache::{CacheConfig, CachePool, KvCache, Residency};
+use osdt::decode::{DecodeTask, Engine, ForwardModel, PassKind};
+use osdt::policy::{Policy, StaticThreshold};
+use osdt::sim::SimModel;
+
+#[test]
+fn sim_mints_pooled_host_handles() {
+    let m = SimModel::math_like(4);
+    let cfg = m.config().clone();
+    let mut task = DecodeTask::new(
+        m.layout_from_seed(1),
+        &cfg,
+        CacheConfig::block_boundary(),
+    )
+    .unwrap();
+    assert_eq!(task.needs(&cfg), PassKind::FullKv);
+    let (out, handle) = m.fwd_full_kv(task.tokens()).unwrap();
+    assert_eq!(handle.residency(), Residency::Host);
+    assert_eq!(
+        handle.dims(),
+        [cfg.n_layers, cfg.n_heads, cfg.seq_len, cfg.head_dim]
+    );
+    task.install_cache(handle);
+    assert!(task.cache().is_some());
+    let p = StaticThreshold::new(0.9);
+    task.apply(&cfg, &p, PassKind::FullKv, out.conf_row(0), out.argmax_row(0));
+    assert_eq!(m.pool().stats().minted_host, 1);
+}
+
+#[test]
+fn retirement_recycles_handles_into_the_pool() {
+    let m = SimModel::math_like(9);
+    let eng = Engine::with_kv_cache(&m);
+    let p = StaticThreshold::new(0.9);
+    let res = eng.decode(m.layout_from_seed(3), &p).unwrap();
+    assert!(res.full_passes > 0);
+    let s = m.pool().stats();
+    // one handle minted per FullKv refresh; every one of them was dropped
+    // (block rollover or retirement) and came back to the pool
+    assert_eq!(s.minted_host, res.full_passes as u64);
+    assert_eq!(
+        s.reclaimed_host + s.dropped,
+        s.minted_host,
+        "all handles must be reclaimed once the sequence retires: {s:?}"
+    );
+    let (host_free, _) = m.pool().free_len();
+    assert!(host_free > 0);
+}
+
+#[test]
+fn pool_reuse_after_retirement_has_no_stale_rows() {
+    // decode several sequences back-to-back on one model (storage recycled
+    // across them) and compare against decodes on fresh models (storage
+    // never recycled): token-identical or the pool leaked state
+    let p = StaticThreshold::new(0.88);
+    let shared = SimModel::math_like(11);
+    let eng = Engine::with_kv_cache(&shared);
+    let mut recycled = Vec::new();
+    for seed in 0..5 {
+        recycled.push(eng.decode(shared.layout_from_seed(seed), &p).unwrap());
+    }
+    assert!(
+        shared.pool().stats().reused_host > 0,
+        "back-to-back decodes must actually reuse pooled storage: {:?}",
+        shared.pool().stats()
+    );
+    for (seed, got) in recycled.iter().enumerate() {
+        let fresh_model = SimModel::math_like(11);
+        let fresh_eng = Engine::with_kv_cache(&fresh_model);
+        let want = fresh_eng
+            .decode(fresh_model.layout_from_seed(seed as u64), &p)
+            .unwrap();
+        assert_eq!(got.tokens, want.tokens, "stale pool rows at seed {seed}");
+        assert_eq!(got.steps, want.steps);
+    }
+}
+
+#[test]
+fn cached_batched_decode_conforms_through_handles() {
+    // the scheduler groups window passes by handle — batched cached decode
+    // must equal solo cached decode under the handle contract
+    let m = SimModel::qa_like(6);
+    let eng = Engine::with_kv_cache(&m);
+    let p = StaticThreshold::new(0.9);
+    let layouts: Vec<Vec<u32>> = (0..4).map(|i| m.layout_from_seed(40 + i)).collect();
+    let solos: Vec<_> = layouts
+        .iter()
+        .map(|l| eng.decode(l.clone(), &p).unwrap())
+        .collect();
+    let policies: Vec<&dyn Policy> = layouts.iter().map(|_| &p as &dyn Policy).collect();
+    let batched = eng.decode_batch(layouts, &policies).unwrap();
+    for (b, s) in batched.iter().zip(&solos) {
+        assert_eq!(b.tokens, s.tokens);
+        assert_eq!(b.steps, s.steps);
+        assert_eq!(b.window_passes, s.window_passes);
+    }
+    // every minted handle from all decodes was returned on retirement
+    let st = m.pool().stats();
+    assert_eq!(st.reclaimed_host + st.dropped, st.minted_host);
+}
+
+#[test]
+fn unpooled_handles_and_mixed_batches_hit_the_fallback() {
+    // a hand-built host handle (no pool) must work through fwd_window_batch
+    let m = SimModel::math_like(2);
+    let cfg = m.config().clone();
+    let dims = [cfg.n_layers, cfg.n_heads, cfg.seq_len, cfg.head_dim];
+    let n: usize = dims.iter().product();
+    let handle = osdt::cache::CacheHandle::host(KvCache {
+        k: vec![0.0; n],
+        v: vec![0.0; n],
+        dims,
+    });
+    let layout = m.layout_from_seed(0);
+    let window = &layout[cfg.block_range(0)];
+    let start = cfg.block_range(0).start;
+    let solo = m.fwd_window(window, start, &handle).unwrap();
+    let batch = m
+        .fwd_window_batch(&[window, window], &[start, start], &[&handle, &handle])
+        .unwrap();
+    assert_eq!(batch.len(), 2);
+    assert_eq!(batch.conf_row(0), solo.conf_row(0));
+    assert_eq!(batch.argmax_row(1), solo.argmax_row(0));
+}
+
+#[test]
+fn pool_capacity_is_respected_under_load() {
+    let pool = CachePool::new([1, 1, 4, 1], 2);
+    let handles: Vec<_> = (0..5)
+        .map(|_| {
+            let mut kv = pool.take_host_storage();
+            kv.k.resize(4, 1.0);
+            kv.v.resize(4, 1.0);
+            pool.wrap_host(kv)
+        })
+        .collect();
+    drop(handles);
+    let (host_free, _) = pool.free_len();
+    assert_eq!(host_free, 2, "free list must be capacity-bounded");
+    let s = pool.stats();
+    assert_eq!(s.reclaimed_host, 2);
+    assert_eq!(s.dropped, 3);
+}

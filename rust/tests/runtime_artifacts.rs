@@ -3,11 +3,15 @@
 //! These exercise the full L1+L2+L3 composition: HLO text emitted by
 //! python (containing the Pallas kernels) loaded, compiled and executed
 //! from Rust, cross-validated against a golden vector computed by JAX
-//! (`artifacts/golden_fwd.json`, written at build time).
+//! (`artifacts/golden_fwd.json`, written at build time) — plus the cache
+//! residency contract (DESIGN.md §10): device-resident decode must be
+//! token-identical to the host round-trip path while performing **zero**
+//! per-step host K/V transfers.
 //!
 //! All tests skip gracefully when artifacts are absent (pre-`make
 //! artifacts` builds).
 
+use osdt::cache::Residency;
 use osdt::decode::Engine;
 use osdt::model::ModelConfig;
 use osdt::policy::{SequentialTopK, StaticThreshold};
@@ -71,13 +75,13 @@ fn fwd_conf_matches_python_golden() {
     let layout = tok.layout_prompt(&cfg, prompt).unwrap();
     let out = rt.fwd_conf(&[layout.as_slice()]).unwrap();
     for i in 0..8 {
-        let got = f64::from(out.conf[0][64 + i]);
+        let got = f64::from(out.conf_row(0)[64 + i]);
         assert!(
             (got - want_conf[i]).abs() < 1e-4,
             "conf[{i}]: rust {got} vs jax {}",
             want_conf[i]
         );
-        assert_eq!(out.argmax[0][64 + i], want_arg[i], "argmax[{i}]");
+        assert_eq!(out.argmax_row(0)[64 + i], want_arg[i], "argmax[{i}]");
     }
 }
 
@@ -90,7 +94,10 @@ fn batch_variants_agree_with_b1() {
     let solo1 = rt.fwd_conf(&[l1.as_slice()]).unwrap();
     let solo2 = rt.fwd_conf(&[l2.as_slice()]).unwrap();
     let both = rt.fwd_conf(&[l1.as_slice(), l2.as_slice()]).unwrap(); // compiled b2 variant
-    for (a, b) in [(&solo1.conf[0], &both.conf[0]), (&solo2.conf[0], &both.conf[1])] {
+    for (a, b) in [
+        (solo1.conf_row(0), both.conf_row(0)),
+        (solo2.conf_row(0), both.conf_row(1)),
+    ] {
         for i in 0..cfg.seq_len {
             assert!(
                 (a[i] - b[i]).abs() < 1e-5,
@@ -100,48 +107,78 @@ fn batch_variants_agree_with_b1() {
             );
         }
     }
-    assert_eq!(solo1.argmax[0], both.argmax[0]);
-    assert_eq!(solo2.argmax[0], both.argmax[1]);
+    assert_eq!(solo1.argmax_row(0), both.argmax_row(0));
+    assert_eq!(solo2.argmax_row(0), both.argmax_row(1));
+}
+
+#[test]
+fn oversized_fwd_conf_batch_chunks_identically() {
+    // n > the largest compiled variant must chunk, not bail (and the rows
+    // must match solo passes exactly)
+    let _ = require_artifacts!();
+    let (cfg, rt, tok) = load();
+    let n = rt.max_batch() + 2;
+    let layouts: Vec<Vec<u32>> = (0..n)
+        .map(|i| tok.layout_prompt(&cfg, &format!("Q: {i}+2=?")).unwrap())
+        .collect();
+    let refs: Vec<&[u32]> = layouts.iter().map(Vec::as_slice).collect();
+    let all = rt.fwd_conf(&refs).unwrap();
+    assert_eq!(all.len(), n);
+    for (i, l) in layouts.iter().enumerate() {
+        let solo = rt.fwd_conf(&[l.as_slice()]).unwrap();
+        assert_eq!(all.argmax_row(i), solo.argmax_row(0), "row {i}");
+    }
 }
 
 #[test]
 fn full_kv_conf_matches_fwd_conf() {
     let _ = require_artifacts!();
     let (cfg, rt, tok) = load();
+    rt.set_residency(Residency::Host); // inspect the downloaded payload
     let layout = tok.layout_prompt(&cfg, "Q: class of foo?").unwrap();
     let plain = rt.fwd_conf(&[layout.as_slice()]).unwrap();
     let (kvout, cache) = rt.fwd_full_kv(&layout).unwrap();
     for i in 0..cfg.seq_len {
         assert!(
-            (plain.conf[0][i] - kvout.conf[0][i]).abs() < 1e-5,
+            (plain.conf_row(0)[i] - kvout.conf_row(0)[i]).abs() < 1e-5,
             "conf differs at {i}"
         );
     }
-    assert_eq!(plain.argmax[0], kvout.argmax[0]);
-    let want: usize = cache.dims.iter().product();
-    assert_eq!(cache.k.len(), want);
-    assert!(cache.k.iter().all(|x| x.is_finite()));
+    assert_eq!(plain.argmax_row(0), kvout.argmax_row(0));
+    let kv = cache.as_host().expect("host residency mints host handles");
+    let want: usize = cache.dims().iter().product();
+    assert_eq!(kv.k.len(), want);
+    assert!(kv.k.iter().all(|x| x.is_finite()));
 }
 
 #[test]
 fn window_matches_full_on_fresh_cache() {
-    // Fast-dLLM DualCache exactness at step 0 of a block, on the real model
+    // Fast-dLLM DualCache exactness at step 0 of a block, on the real
+    // model — at both cache residencies
     let _ = require_artifacts!();
     let (cfg, rt, tok) = load();
     let layout = tok.layout_prompt(&cfg, "op: rev | in: abcd").unwrap();
-    let (full, cache) = rt.fwd_full_kv(&layout).unwrap();
-    for b in 0..cfg.num_blocks {
-        let range = cfg.block_range(b);
-        let window: Vec<u32> = layout[range.clone()].to_vec();
-        let out = rt.fwd_window(&window, range.start, &cache).unwrap();
-        for (i, pos) in range.clone().enumerate() {
-            assert!(
-                (out.conf[0][i] - full.conf[0][pos]).abs() < 1e-4,
-                "block {b} pos {pos}: window {} vs full {}",
-                out.conf[0][i],
-                full.conf[0][pos]
-            );
-            assert_eq!(out.argmax[0][i], full.argmax[0][pos], "block {b} pos {pos}");
+    for residency in [Residency::Host, Residency::Device] {
+        rt.set_residency(residency);
+        let (full, cache) = rt.fwd_full_kv(&layout).unwrap();
+        assert_eq!(cache.residency(), residency);
+        for b in 0..cfg.num_blocks {
+            let range = cfg.block_range(b);
+            let window: Vec<u32> = layout[range.clone()].to_vec();
+            let out = rt.fwd_window(&window, range.start, &cache).unwrap();
+            for (i, pos) in range.clone().enumerate() {
+                assert!(
+                    (out.conf_row(0)[i] - full.conf_row(0)[pos]).abs() < 1e-4,
+                    "{residency:?} block {b} pos {pos}: window {} vs full {}",
+                    out.conf_row(0)[i],
+                    full.conf_row(0)[pos]
+                );
+                assert_eq!(
+                    out.argmax_row(0)[i],
+                    full.argmax_row(0)[pos],
+                    "{residency:?} block {b} pos {pos}"
+                );
+            }
         }
     }
 }
@@ -183,6 +220,90 @@ fn cached_decode_close_to_uncached_real_model() {
     assert!(b.window_passes > 0);
     // the approximation must not blow decoding up
     assert!(b.steps <= 3 * a.steps.max(6), "cached {} vs plain {}", b.steps, a.steps);
+}
+
+#[test]
+fn device_residency_token_identical_with_zero_kv_transfer() {
+    // The tentpole acceptance test (solo): device-resident cached decode
+    // must produce exactly the host path's tokens while moving zero K/V
+    // bytes across the host boundary — the K/V round trip is untimed
+    // compute, not an approximation.
+    let _ = require_artifacts!();
+    let (cfg, rt, tok) = load();
+    let layout = tok.layout_prompt(&cfg, "Q: 8+5=?").unwrap();
+    let p = StaticThreshold::new(0.9);
+    let cached = Engine::with_kv_cache(&rt);
+
+    rt.set_residency(Residency::Host);
+    let s0 = rt.stats();
+    let host = cached.decode(layout.clone(), &p).unwrap();
+    let s1 = rt.stats();
+    assert!(
+        s1.cache_upload_bytes > s0.cache_upload_bytes,
+        "host path must upload K/V per window step"
+    );
+    assert!(s1.cache_download_bytes > s0.cache_download_bytes);
+
+    rt.set_residency(Residency::Device);
+    let s2 = rt.stats();
+    let dev = cached.decode(layout, &p).unwrap();
+    let s3 = rt.stats();
+    assert_eq!(dev.tokens, host.tokens, "residency must not change tokens");
+    assert_eq!(dev.steps, host.steps);
+    assert_eq!(
+        s3.cache_upload_bytes, s2.cache_upload_bytes,
+        "device path uploaded K/V bytes"
+    );
+    assert_eq!(
+        s3.cache_download_bytes, s2.cache_download_bytes,
+        "device path downloaded K/V bytes"
+    );
+    // device decode still transfers tokens + conf rows, but strictly fewer
+    // total bytes than the host round trip
+    let host_bytes = s1.transfer_bytes() - s0.transfer_bytes();
+    let dev_bytes = s3.transfer_bytes() - s2.transfer_bytes();
+    assert!(
+        dev_bytes < host_bytes,
+        "device path must reduce bytes/decode: {dev_bytes} !< {host_bytes}"
+    );
+}
+
+#[test]
+fn batched_device_decode_zero_kv_uploads_and_identity() {
+    // The tentpole acceptance test (batched): cached batched decode on the
+    // device path performs zero per-step host K/V uploads and stays
+    // token-identical to solo cached decode.
+    let _ = require_artifacts!();
+    let (cfg, rt, tok) = load();
+    let p = StaticThreshold::new(0.9);
+    let cached = Engine::with_kv_cache(&rt);
+    let layouts: Vec<Vec<u32>> = (0..3)
+        .map(|i| tok.layout_prompt(&cfg, &format!("Q: {i}+6=?")).unwrap())
+        .collect();
+
+    rt.set_residency(Residency::Device);
+    let solos: Vec<_> = layouts
+        .iter()
+        .map(|l| cached.decode(l.clone(), &p).unwrap())
+        .collect();
+    let s0 = rt.stats();
+    let policies: Vec<&dyn osdt::policy::Policy> = vec![&p, &p, &p];
+    let batched = cached.decode_batch(layouts, &policies).unwrap();
+    let s1 = rt.stats();
+    assert_eq!(
+        s1.cache_upload_bytes, s0.cache_upload_bytes,
+        "batched device decode uploaded K/V bytes"
+    );
+    assert_eq!(s1.cache_download_bytes, s0.cache_download_bytes);
+    for (b, s) in batched.iter().zip(&solos) {
+        assert_eq!(b.tokens, s.tokens);
+        assert_eq!(b.steps, s.steps);
+    }
+    // the device path must also recycle buffers: every minted device
+    // handle is reclaimed once its sequence retires
+    let pool = rt.pool().stats();
+    assert!(pool.minted_device > 0);
+    assert!(pool.reclaimed_device + pool.dropped >= pool.minted_device);
 }
 
 #[test]

@@ -70,7 +70,7 @@ pub trait NativeType: Copy + Sized + 'static {
     #[doc(hidden)]
     fn wrap(data: Vec<Self>) -> Payload;
     #[doc(hidden)]
-    fn unwrap(payload: &Payload) -> Option<Vec<Self>>;
+    fn as_slice(payload: &Payload) -> Option<&[Self]>;
     #[doc(hidden)]
     fn type_name() -> &'static str;
 }
@@ -79,9 +79,9 @@ impl NativeType for f32 {
     fn wrap(data: Vec<Self>) -> Payload {
         Payload::F32(data)
     }
-    fn unwrap(payload: &Payload) -> Option<Vec<Self>> {
+    fn as_slice(payload: &Payload) -> Option<&[Self]> {
         match payload {
-            Payload::F32(v) => Some(v.clone()),
+            Payload::F32(v) => Some(v),
             _ => None,
         }
     }
@@ -94,9 +94,9 @@ impl NativeType for i32 {
     fn wrap(data: Vec<Self>) -> Payload {
         Payload::I32(data)
     }
-    fn unwrap(payload: &Payload) -> Option<Vec<Self>> {
+    fn as_slice(payload: &Payload) -> Option<&[Self]> {
         match payload {
-            Payload::I32(v) => Some(v.clone()),
+            Payload::I32(v) => Some(v),
             _ => None,
         }
     }
@@ -141,18 +141,38 @@ impl Literal {
         &self.dims
     }
 
-    /// Flat host copy of the payload; errors on tuples / type mismatch.
-    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+    /// Borrow the flat payload; errors on tuples / type mismatch.
+    fn payload_slice<T: NativeType>(&self) -> Result<&[T]> {
         match &self.payload {
-            Some(p) => T::unwrap(p).ok_or_else(|| {
+            Some(p) => T::as_slice(p).ok_or_else(|| {
                 Error(format!(
                     "literal holds {}, requested {}",
                     p.type_name(),
                     T::type_name()
                 ))
             }),
-            None => Err(Error("to_vec on a tuple literal".into())),
+            None => Err(Error("payload access on a tuple literal".into())),
         }
+    }
+
+    /// Flat host copy of the payload; errors on tuples / type mismatch.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        self.payload_slice::<T>().map(<[T]>::to_vec)
+    }
+
+    /// Copy the payload straight into a caller-provided vector (cleared
+    /// first, capacity retained) — no intermediate allocation, so downloads
+    /// can genuinely reuse pooled storage.
+    pub fn read_into<T: NativeType>(&self, out: &mut Vec<T>) -> Result<()> {
+        let data = self.payload_slice::<T>()?;
+        out.clear();
+        out.extend_from_slice(data);
+        Ok(())
+    }
+
+    /// Number of elements the payload holds (0 for tuples).
+    pub fn element_count(&self) -> usize {
+        self.dims.iter().product::<usize>() * usize::from(self.payload.is_some())
     }
 
     /// Decompose a tuple literal into its elements.
@@ -180,6 +200,11 @@ pub struct PjRtBuffer {
 impl PjRtBuffer {
     pub fn to_literal_sync(&self) -> Result<Literal> {
         Ok(self.literal.clone())
+    }
+
+    /// On-device shape of the buffer (empty for tuple buffers).
+    pub fn dims(&self) -> &[usize] {
+        self.literal.dims()
     }
 }
 
@@ -220,7 +245,24 @@ pub struct PjRtLoadedExecutable {
 
 impl PjRtLoadedExecutable {
     /// Execute over device buffers, returning per-device output buffers.
+    /// The single output buffer wraps the computation's result tuple; use
+    /// [`PjRtLoadedExecutable::execute_b_parts`] to keep the elements
+    /// device-resident instead of downloading the tuple.
     pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("executing an HLO computation")
+    }
+
+    /// Execute over device buffers and return the output tuple decomposed
+    /// into **per-element device buffers** (no host transfer — the real
+    /// binding's `untuple_result` execution mode). `donate` lists argument
+    /// indices whose buffers are donated to the execution: their device
+    /// memory may be aliased for outputs and the caller must not touch
+    /// those buffers again. Pass `&[]` to donate nothing.
+    pub fn execute_b_parts(
+        &self,
+        _args: &[&PjRtBuffer],
+        _donate: &[usize],
+    ) -> Result<Vec<PjRtBuffer>> {
         unavailable("executing an HLO computation")
     }
 }
@@ -287,6 +329,27 @@ mod tests {
         assert!(c
             .buffer_from_host_buffer::<f32>(&[1.0, 2.0], &[3], None)
             .is_err());
+    }
+
+    #[test]
+    fn read_into_reuses_allocation() {
+        let l = Literal::vec1(&[1.0f32, 2.0]);
+        let mut out: Vec<f32> = Vec::with_capacity(8);
+        out.push(9.0);
+        l.read_into(&mut out).unwrap();
+        assert_eq!(out, vec![1.0, 2.0]);
+        assert!(out.capacity() >= 8, "allocation must be reused");
+        assert!(l.read_into(&mut Vec::<i32>::new()).is_err());
+    }
+
+    #[test]
+    fn buffer_exposes_dims() {
+        let c = PjRtClient::cpu().unwrap();
+        let b = c
+            .buffer_from_host_buffer::<f32>(&[0.0; 6], &[2, 3], None)
+            .unwrap();
+        assert_eq!(b.dims(), &[2, 3]);
+        assert_eq!(b.to_literal_sync().unwrap().element_count(), 6);
     }
 
     #[test]
