@@ -169,6 +169,60 @@ def lower_variants(params, out_dir: str) -> dict:
         "outputs": [f"conf f32[1,{WINDOW}]", f"argmax i32[1,{WINDOW}]"],
     }
 
+    # fused window + on-device threshold acceptance (rust DESIGN.md §11):
+    # per-step D2H is compact acceptance, never full confidence rows. The
+    # compact payload packs (pos << 16) | token into one i32, so models
+    # whose geometry cannot be represented skip the variants entirely (the
+    # Rust runtime then keeps its legacy host-rule fallback).
+    accept_packable = model_mod.VOCAB < (1 << 16) and WINDOW < (1 << 15)
+    if not accept_packable:
+        print(
+            f"[aot] skipping fwd_window_accept_b*: vocab {model_mod.VOCAB} / "
+            f"window {WINDOW} exceed the (pos<<16)|token packing"
+        )
+    n_chunks = -(-WINDOW // model_mod.ACCEPT_CHUNK)
+    accept_outputs = [
+        "count i32[{b}]",
+        "fell_back i32[{b}]",
+        "step_mean f32[{b}]",
+    ] + [
+        f"packed_{j} i32[{{b}},{model_mod.ACCEPT_CHUNK}]" for j in range(n_chunks)
+    ]
+
+    def fwd_window_accept_b1(*args):
+        ws = args[:n_w]
+        win_tokens, start, kc, vc, taus, factors = args[n_w : n_w + 6]
+        return model_mod.fwd_window_accept(
+            _from_tuple(ws), win_tokens, start, kc, vc, taus, factors,
+            use_pallas=True,
+        )
+
+    if accept_packable:
+        fname = emit(
+            "fwd_window_accept_b1",
+            fwd_window_accept_b1,
+            jax.ShapeDtypeStruct((1, WINDOW), jnp.int32),
+            jax.ShapeDtypeStruct((), jnp.int32),
+            jax.ShapeDtypeStruct(lhs, jnp.float32),
+            jax.ShapeDtypeStruct(lhs, jnp.float32),
+            jax.ShapeDtypeStruct((1,), jnp.float32),
+            jax.ShapeDtypeStruct((1,), jnp.float32),
+        )
+        variants["fwd_window_accept_b1"] = {
+            "file": fname,
+            "batch": 1,
+            "inputs": [
+                "weights...",
+                f"window_tokens i32[1,{WINDOW}]",
+                "start i32[]",
+                f"k_cache f32{list(lhs)}",
+                f"v_cache f32{list(lhs)}",
+                "taus f32[1]",
+                "factors f32[1]",
+            ],
+            "outputs": [o.format(b=1) for o in accept_outputs],
+        }
+
     # batched window + on-device cache stacking (device residency path)
     for b in BATCH_SIZES:
         if b == 1:
@@ -202,6 +256,40 @@ def lower_variants(params, out_dir: str) -> dict:
             ],
             "outputs": [f"conf f32[{b},{WINDOW}]", f"argmax i32[{b},{WINDOW}]"],
         }
+
+        if accept_packable:
+            def fwd_window_accept_b(*args):
+                ws = args[:n_w]
+                win_tokens, starts, kc, vc, taus, factors = args[n_w : n_w + 6]
+                return model_mod.fwd_window_accept_batch(
+                    _from_tuple(ws), win_tokens, starts, kc, vc, taus, factors,
+                    use_pallas=True,
+                )
+
+            fname = emit(
+                f"fwd_window_accept_b{b}",
+                fwd_window_accept_b,
+                jax.ShapeDtypeStruct((b, WINDOW), jnp.int32),
+                jax.ShapeDtypeStruct((b,), jnp.int32),
+                jax.ShapeDtypeStruct(blhs, jnp.float32),
+                jax.ShapeDtypeStruct(blhs, jnp.float32),
+                jax.ShapeDtypeStruct((b,), jnp.float32),
+                jax.ShapeDtypeStruct((b,), jnp.float32),
+            )
+            variants[f"fwd_window_accept_b{b}"] = {
+                "file": fname,
+                "batch": b,
+                "inputs": [
+                    "weights...",
+                    f"window_tokens i32[{b},{WINDOW}]",
+                    f"starts i32[{b}]",
+                    f"k_caches f32{list(blhs)}",
+                    f"v_caches f32{list(blhs)}",
+                    f"taus f32[{b}]",
+                    f"factors f32[{b}]",
+                ],
+                "outputs": [o.format(b=b) for o in accept_outputs],
+            }
 
         def kv_gather_b(*caches, _b=b):
             return model_mod.kv_gather(caches[:_b], caches[_b:])

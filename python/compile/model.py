@@ -276,6 +276,99 @@ def kv_gather(ks, vs):
 
 
 # ---------------------------------------------------------------------------
+# Fused threshold acceptance (rust DESIGN.md §11): the policy decision runs
+# on device, so steady-state window steps never download confidence rows.
+# ---------------------------------------------------------------------------
+
+# Width of one packed-commit output chunk. Chunks are separate executable
+# outputs, so the host downloads ceil(count / ACCEPT_CHUNK) of them instead
+# of a full block row: per-step device->host traffic is O(accepted tokens).
+ACCEPT_CHUNK = 8
+
+
+def accept_from_conf(conf, arg, window_tokens, taus, factors):
+    """Apply the per-row acceptance rule to a window pass's (conf, argmax)
+    rows entirely on device, returning only compact acceptance.
+
+    The masked set is derived on device: position ``i`` is masked iff
+    ``window_tokens[i] == [MASK]`` — identical to the Rust
+    ``DecodeTask::masked`` bookkeeping, so no mask upload is needed. Per
+    row, in f32 (matching the Rust host reference ``runtime::accept_rows``):
+
+        raw[i]  = masked[i] and (conf[i] > tau  or  conf[i] >= factor*cmax)
+
+    where ``cmax`` is the row's max masked confidence and a disabled
+    disjunct is ``+inf`` (which can never accept). If ``raw`` is empty the
+    single most confident masked position is accepted — the argmax liveness
+    fallback, ties -> lowest index, matching ``policy::argmax``.
+
+    Returns ``(count (B,) i32, fell_back (B,) i32, step_mean (B,) f32,
+    *chunks)`` where each chunk is a (B, ACCEPT_CHUNK) i32 output; entry
+    ``e`` of a row holds ``(pos << 16) | token`` for the e-th accepted
+    position (ascending), ``-1`` beyond ``count``. ``step_mean`` is the
+    masked-mean confidence — the drift-signature scalar the Rust
+    ProfileRegistry consumes.
+    """
+    w = conf.shape[1]
+    m = window_tokens == vocab.MASK
+    mconf = jnp.where(m, conf, -jnp.inf)
+    cmax = jnp.max(mconf, axis=1, keepdims=True)
+    raw = m & ((conf > taus[:, None]) | (conf >= factors[:, None] * cmax))
+    has_mask = jnp.any(m, axis=1)
+    fell_back = ~jnp.any(raw, axis=1) & has_mask
+    fb = (jnp.arange(w)[None, :] == jnp.argmax(mconf, axis=1, keepdims=True)) & m
+    accept = jnp.where(fell_back[:, None], fb, raw)
+    count = jnp.sum(accept, axis=1).astype(jnp.int32)
+    mcnt = jnp.sum(m, axis=1)
+    step_mean = jnp.sum(jnp.where(m, conf, 0.0), axis=1) / jnp.maximum(mcnt, 1)
+    # front-pack accepted entries in ascending position order (stable sort
+    # on "position if accepted else W")
+    pos = jnp.arange(w, dtype=jnp.int32)[None, :]
+    order = jnp.argsort(jnp.where(accept, pos, w), axis=1)
+    entry = jnp.where(accept, (pos << 16) | arg, -1)
+    packed = jnp.take_along_axis(entry, order, axis=1)
+    chunks = tuple(
+        packed[:, i : i + ACCEPT_CHUNK] for i in range(0, w, ACCEPT_CHUNK)
+    )
+    return (count, fell_back.astype(jnp.int32), step_mean, *chunks)
+
+
+def fwd_window_accept(
+    p,
+    window_tokens,  # (1, W) i32
+    start,          # () i32
+    k_cache,        # (L, H, S, Dh) f32
+    v_cache,
+    taus,           # (1,) f32 — threshold rule cutoff, +inf to disable
+    factors,        # (1,) f32 — factor-max rule, +inf to disable
+    use_pallas: bool = True,
+):
+    """Batch-1 fused window step: ``fwd_window`` + on-device acceptance."""
+    conf, arg = fwd_window(p, window_tokens, start, k_cache, v_cache, use_pallas)
+    return accept_from_conf(conf, arg, window_tokens, taus, factors)
+
+
+def fwd_window_accept_batch(
+    p,
+    window_tokens,  # (B, W) i32
+    starts,         # (B,) i32
+    k_caches,       # (B, L, H, S, Dh) f32
+    v_caches,
+    taus,           # (B,) f32
+    factors,        # (B,) f32
+    use_pallas: bool = True,
+):
+    """Batched fused window step: row ``b`` recomputes its own window and
+    applies its own acceptance rule — row-identical to ``B`` independent
+    ``fwd_window_accept`` calls. Stacked cache inputs come from
+    ``kv_gather_b{B}`` on the device-residency path."""
+    conf, arg = fwd_window_batch(
+        p, window_tokens, starts, k_caches, v_caches, use_pallas
+    )
+    return accept_from_conf(conf, arg, window_tokens, taus, factors)
+
+
+# ---------------------------------------------------------------------------
 # Training objective (LLaDA SFT): random-ratio masking over the gen region,
 # 1/t-weighted CE on masked positions.
 # ---------------------------------------------------------------------------

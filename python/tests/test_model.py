@@ -118,6 +118,122 @@ def test_window_batch_matches_solo_rows(params, tokens):
         np.testing.assert_array_equal(np.asarray(ab[i]), np.asarray(a))
 
 
+def _accept_reference(conf, arg, window_tokens, tau, factor):
+    """Numpy mirror of the fused acceptance rule (and of the Rust host
+    reference ``runtime::accept_rows``): f32 math, strict > for the
+    threshold disjunct, >= for the factor-max disjunct, argmax liveness
+    fallback with ties -> lowest index."""
+    conf = np.asarray(conf, np.float32)
+    arg = np.asarray(arg, np.int32)
+    masked = np.asarray(window_tokens) == vocab.MASK
+    idx = np.where(masked)[0]
+    if idx.size == 0:
+        return [], False, 0.0
+    cmax = np.float32(conf[idx].max())
+    cut = np.float32(factor) * cmax
+    sel = [
+        int(i)
+        for i in idx
+        if conf[i] > np.float32(tau) or conf[i] >= cut
+    ]
+    fell_back = not sel
+    if fell_back:
+        best = idx[int(np.argmax(conf[idx]))]
+        sel = [int(best)]
+    return [(i, int(arg[i])) for i in sel], fell_back, float(conf[idx].mean())
+
+
+def _unpack_accept(out, row):
+    count, fell_back, step_mean = out[0], out[1], out[2]
+    chunks = np.concatenate([np.asarray(c) for c in out[3:]], axis=1)
+    pairs = []
+    for e in range(int(count[row])):
+        packed = int(chunks[row, e])
+        assert packed >= 0, "packed entry missing below count"
+        pairs.append((packed >> 16, packed & 0xFFFF))
+    # entries beyond count must be -1 (nothing leaks past the compact set)
+    assert all(int(x) == -1 for x in chunks[row, int(count[row]) :])
+    return pairs, bool(fell_back[row]), float(step_mean[row])
+
+
+def test_window_accept_row_identity(params, tokens):
+    """The fused acceptance variant must be row-identical to applying the
+    host decision rule to the plain batched window pass — the contract the
+    Rust scheduler's fused fast path relies on. Exercises a threshold row
+    and a factor-max row in one batch."""
+    starts = [D.PROMPT_LEN, D.PROMPT_LEN + D.BLOCK_LEN]
+    wins, caches = [], []
+    for i, start in enumerate(starts):
+        t = np.asarray(tokens[i % tokens.shape[0]]).copy()[None, :]
+        # mask part of the window so the masked set is non-trivial
+        t[0, start : start + D.BLOCK_LEN // 2] = vocab.MASK
+        tj = jnp.asarray(t, jnp.int32)
+        _, _, kc, vc = M.fwd_full_kv(params, tj, use_pallas=False)
+        wins.append(tj[0, start : start + D.BLOCK_LEN])
+        caches.append((kc, vc))
+    kb, vb = M.kv_gather([k for k, _ in caches], [v for _, v in caches])
+    win_b = jnp.stack(wins)
+    starts_b = jnp.asarray(starts, jnp.int32)
+    inf = np.float32(np.inf)
+    taus = jnp.asarray([0.5, inf], jnp.float32)      # row 0: threshold rule
+    factors = jnp.asarray([inf, 0.9], jnp.float32)   # row 1: factor-max rule
+    out = M.fwd_window_accept_batch(
+        params, win_b, starts_b, kb, vb, taus, factors, use_pallas=False
+    )
+    conf, arg = M.fwd_window_batch(
+        params, win_b, starts_b, kb, vb, use_pallas=False
+    )
+    for row in range(2):
+        want_pairs, want_fb, want_mean = _accept_reference(
+            conf[row], arg[row], np.asarray(win_b[row]),
+            float(taus[row]), float(factors[row]),
+        )
+        got_pairs, got_fb, got_mean = _unpack_accept(out, row)
+        assert got_pairs == want_pairs, f"row {row}"
+        assert got_fb == want_fb
+        np.testing.assert_allclose(got_mean, want_mean, atol=1e-5)
+
+
+def test_accept_fallback_tie_breaks_low():
+    """Impossible threshold + equal confidences: the argmax fallback must
+    accept exactly the lowest-index masked position (= policy::argmax)."""
+    w = D.BLOCK_LEN
+    win = np.full((1, w), vocab.MASK, np.int64)
+    win[0, 0] = 5  # first position committed: fallback must skip it
+    conf = jnp.full((1, w), 0.5, jnp.float32)
+    arg = jnp.full((1, w), 7, jnp.int32)
+    out = M.accept_from_conf(
+        conf, arg, jnp.asarray(win, jnp.int32),
+        jnp.asarray([np.inf], jnp.float32), jnp.asarray([np.inf], jnp.float32),
+    )
+    pairs, fell_back, mean = _unpack_accept(out, 0)
+    assert pairs == [(1, 7)], "tie must break to the lowest masked index"
+    assert fell_back
+    np.testing.assert_allclose(mean, 0.5, atol=1e-6)
+
+
+def test_accept_spills_across_chunks():
+    """A permissive threshold accepts more than one chunk's worth of
+    positions; packed entries must spill into later chunk outputs in
+    ascending position order."""
+    w = D.BLOCK_LEN
+    rng = np.random.default_rng(5)
+    conf = jnp.asarray(rng.uniform(0.4, 0.9, (1, w)), jnp.float32)
+    arg = jnp.asarray(rng.integers(4, M.VOCAB, (1, w)), jnp.int32)
+    win = np.full((1, w), vocab.MASK, np.int64)
+    win[0, 3] = 9  # one committed position must never be accepted
+    out = M.accept_from_conf(
+        conf, arg, jnp.asarray(win, jnp.int32),
+        jnp.asarray([0.0], jnp.float32), jnp.asarray([np.inf], jnp.float32),
+    )
+    pairs, fell_back, _ = _unpack_accept(out, 0)
+    assert not fell_back
+    assert len(pairs) == w - 1 > M.ACCEPT_CHUNK
+    assert [p for p, _ in pairs] == [i for i in range(w) if i != 3]
+    for (p, t) in pairs:
+        assert t == int(arg[0, p])
+
+
 def test_window_pallas_vs_ref(params, tokens):
     t = tokens[:1]
     _, _, kc, vc = M.fwd_full_kv(params, t, use_pallas=False)

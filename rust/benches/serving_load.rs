@@ -13,7 +13,9 @@
 //!     cargo bench --bench serving_load -- --smoke --json BENCH_serving.json
 //!
 //! Reported per point: p50/p95 latency, tokens/s, bytes transferred per
-//! token, per-step K/V upload bytes (must be 0 on the device path), and
+//! token, per-step K/V upload bytes (must be 0 on the device path), the
+//! fused-pass fraction (window steps whose threshold decision ran on
+//! device, DESIGN.md §11), mean transfer bytes per scheduler step, and
 //! mean/peak batch occupancy. The cached host/device points run the same
 //! trace and must produce token-identical completions, which the bench
 //! verifies. `--smoke` runs a steps-capped configuration on the analytic
@@ -58,6 +60,13 @@ struct Point {
     /// K/V payload bytes uploaded during the timed region — the per-step
     /// host round trip the device residency eliminates.
     cache_upload_bytes: u64,
+    /// Fraction of window passes that ran through the fused device-
+    /// acceptance path (DESIGN.md §11) — 1.0 on the steady-state fused
+    /// path, 0.0 for host-full policies like sequential.
+    fused_frac: f64,
+    /// Mean host↔device bytes per scheduler step — the transfer ledger the
+    /// fused path shrinks from O(block) rows to compact acceptance.
+    bytes_per_step: f64,
     occ_mean: f64,
     occ_peak: i64,
     completions: Vec<String>,
@@ -107,6 +116,8 @@ where
     let up0 = c0("bytes_uploaded");
     let down0 = c0("bytes_downloaded");
     let cache_up0 = c0("cache_bytes_uploaded");
+    let window0 = c0("window_passes");
+    let fused0 = c0("fused_window_passes");
 
     let trace = mixed_trace(datasets, spec.rate, spec.n, 7);
     let mut lat = Histogram::latency();
@@ -143,6 +154,8 @@ where
     let seq_steps = c0("scheduled_seq_steps") - seq_steps0;
     let transferred = (c0("bytes_uploaded") - up0) + (c0("bytes_downloaded") - down0);
     let cache_upload_bytes = c0("cache_bytes_uploaded") - cache_up0;
+    let window_passes = c0("window_passes") - window0;
+    let fused_passes = c0("fused_window_passes") - fused0;
     let tokens = (ok * model_cfg.gen_len).max(1);
     Ok(Point {
         policy: spec.policy.to_string(),
@@ -156,6 +169,8 @@ where
         tokens_per_sec: (ok * model_cfg.gen_len) as f64 / wall,
         bytes_per_token: transferred as f64 / tokens as f64,
         cache_upload_bytes,
+        fused_frac: fused_passes as f64 / window_passes.max(1) as f64,
+        bytes_per_step: transferred as f64 / steps as f64,
         occ_mean: seq_steps as f64 / steps as f64,
         occ_peak: coord
             .metrics
@@ -198,7 +213,7 @@ fn point_rows(points: &[Point]) -> (Vec<Vec<String>>, Vec<Vec<String>>) {
     let mut last_policy = String::new();
     for p in points {
         if !last_policy.is_empty() && p.policy != last_policy {
-            rows.push(vec![String::new(); 10]);
+            rows.push(vec![String::new(); 11]);
         }
         last_policy = p.policy.clone();
         rows.push(vec![
@@ -210,6 +225,7 @@ fn point_rows(points: &[Point]) -> (Vec<Vec<String>>, Vec<Vec<String>>) {
             format!("{:.0}", p.p95_ms),
             format!("{:.1}", p.tokens_per_sec),
             format!("{:.0}", p.bytes_per_token),
+            format!("{:.0}%", p.fused_frac * 100.0),
             format!("{:.2}", p.occ_mean),
             format!("{}", p.occ_peak),
         ]);
@@ -223,6 +239,8 @@ fn point_rows(points: &[Point]) -> (Vec<Vec<String>>, Vec<Vec<String>>) {
             format!("{}", p.tokens_per_sec),
             format!("{}", p.bytes_per_token),
             format!("{}", p.cache_upload_bytes),
+            format!("{}", p.fused_frac),
+            format!("{}", p.bytes_per_step),
             format!("{}", p.occ_mean),
             format!("{}", p.occ_peak),
         ]);
@@ -255,6 +273,8 @@ fn points_json(points: &[Point], mode: &str) -> Json {
                                 "cache_upload_bytes",
                                 Json::Num(p.cache_upload_bytes as f64),
                             ),
+                            ("fused_frac", Json::Num(p.fused_frac)),
+                            ("bytes_per_step", Json::Num(p.bytes_per_step)),
                             ("occ_mean", Json::Num(p.occ_mean)),
                             ("occ_peak", Json::Num(p.occ_peak as f64)),
                         ])
@@ -359,13 +379,16 @@ fn main() -> Result<()> {
                 eprintln!(
                     "[load] {policy} cache={cache_label}:{} @{rate}rps: \
                      p50 {:.0}ms p95 {:.0}ms {:.1} tok/s {:.0} B/tok \
-                     (kv up {} B) occ {:.2} (peak {})",
+                     (kv up {} B, fused {:.0}%, {:.0} B/step) occ {:.2} \
+                     (peak {})",
                     spec.residency,
                     p.p50_ms,
                     p.p95_ms,
                     p.tokens_per_sec,
                     p.bytes_per_token,
                     p.cache_upload_bytes,
+                    p.fused_frac * 100.0,
+                    p.bytes_per_step,
                     p.occ_mean,
                     p.occ_peak
                 );
@@ -386,7 +409,7 @@ fn main() -> Result<()> {
         render_table(
             &[
                 "policy", "cache", "rps", "ok", "p50 ms", "p95 ms", "tokens/s",
-                "B/token", "occ mean", "occ peak"
+                "B/token", "fused", "occ mean", "occ peak"
             ],
             &rows
         )
@@ -395,8 +418,8 @@ fn main() -> Result<()> {
         "results/serving_load.csv",
         &[
             "policy", "cache", "residency", "rate", "p50_us", "p95_us",
-            "tokens_per_sec", "bytes_per_token", "cache_upload_bytes", "occ_mean",
-            "occ_peak",
+            "tokens_per_sec", "bytes_per_token", "cache_upload_bytes",
+            "fused_frac", "bytes_per_step", "occ_mean", "occ_peak",
         ],
         &csv,
     )?;

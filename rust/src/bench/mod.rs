@@ -15,7 +15,8 @@ use crate::config::parse_policy_spec;
 use crate::decode::{Engine, ForwardModel};
 use crate::eval::EvalStats;
 use crate::policy::{
-    Calibrator, CalibrationTrace, Osdt, Policy, PolicySpec, StaticThreshold,
+    Calibrator, CalibrationTrace, HostTraced, Osdt, Policy, PolicySpec,
+    StaticThreshold,
 };
 use crate::tokenizer::Tokenizer;
 use crate::workload::Dataset;
@@ -77,7 +78,12 @@ pub fn run_eval<M: ForwardModel>(
             let idx = opts.calibration_index % ds.len();
             let layout = tok.layout_prompt(&cfg, &ds.examples[idx].prompt)?;
             let t0 = Instant::now();
-            let cal = engine.decode(layout, &StaticThreshold::new(CALIBRATION_TAU))?;
+            // calibration needs the full per-step confidence vectors, which
+            // the fused decode path never downloads — force the host path
+            let cal = engine.decode(
+                layout,
+                &HostTraced(StaticThreshold::new(CALIBRATION_TAU)),
+            )?;
             calibration_ms = t0.elapsed().as_secs_f64() * 1e3;
             let profile = Calibrator::calibrate(&cal.trace, *mode, *metric);
             Box::new(Osdt::from_profile(profile, *kappa, *epsilon))
@@ -127,7 +133,9 @@ pub fn collect_traces<M: ForwardModel>(
 ) -> Result<Vec<CalibrationTrace>> {
     let cfg = model.config().clone();
     let engine = Engine::new(model);
-    let p = StaticThreshold::new(tau);
+    // trace collection is the one consumer that wants raw per-position
+    // confidences (Figures 1–2, calibration inputs) — host path, always
+    let p = HostTraced(StaticThreshold::new(tau));
     ds.examples
         .iter()
         .take(n.min(ds.len()))

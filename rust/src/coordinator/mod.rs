@@ -26,9 +26,13 @@
 //!
 //! Worker-loop metrics: `queue_depth` (gauge), `batch_occupancy` (gauge +
 //! unitless histogram, with a `batch_occupancy_peak` high-water gauge),
-//! `admission_wait` (histogram, enqueue → scheduler admission), and the
+//! `admission_wait` (histogram, enqueue → scheduler admission), the
 //! `scheduler_steps` / `scheduled_seq_steps` counters whose ratio is the
-//! mean occupancy. `calibrations_deferred` counts local calibrations
+//! mean occupancy, the `full_passes` / `window_passes` /
+//! `fused_window_passes` pass-mix counters (fused ÷ window = the fraction
+//! of steady-state steps whose decision ran on device, DESIGN.md §11),
+//! and the `accepted_per_step` histogram of tokens committed per sequence
+//! step. `calibrations_deferred` counts local calibrations
 //! parked to protect co-scheduled peers; `calibrations_awaited` counts
 //! requests parked behind a peer's in-flight calibration lease. Workers
 //! with a stats-reporting model (the PJRT runtime) additionally publish
@@ -52,8 +56,8 @@ use crate::decode::{DecodeResult, Engine, ForwardModel, StepScheduler};
 use crate::metrics::Registry;
 use crate::model::ModelConfig;
 use crate::policy::{
-    Acquired, Calibrator, Osdt, PeekState, Policy, PolicySpec, ProfileKey,
-    ProfileRegistry, StaticThreshold,
+    Acquired, Calibrator, HostTraced, Osdt, PeekState, Policy, PolicySpec,
+    ProfileKey, ProfileRegistry, StaticThreshold,
 };
 use crate::runtime::RuntimeStats;
 use crate::tokenizer::Tokenizer;
@@ -413,10 +417,15 @@ fn resolve_policy<M: ForwardModel>(
                 Acquired::InFlight => Ok(Resolved::Parked),
                 Acquired::Lease(lease) => {
                     // Phase 1: calibrate on THIS sequence with the static
-                    // policy; an error drops the lease so a peer retries
+                    // policy; an error drops the lease so a peer retries.
+                    // HostTraced forces the full-download path — the
+                    // calibrator's quantile metrics need complete per-step
+                    // confidence vectors, which a fused decode never ships
                     let layout = tok.layout_prompt(model_cfg, prompt)?;
-                    let cal =
-                        engine.decode(layout, &StaticThreshold::new(CALIBRATION_TAU))?;
+                    let cal = engine.decode(
+                        layout,
+                        &HostTraced(StaticThreshold::new(CALIBRATION_TAU)),
+                    )?;
                     let profile = Calibrator::calibrate(&cal.trace, *mode, *metric);
                     lease.fulfill(profile, cal.trace.signature());
                     Ok(Resolved::Calibrated(cal))
@@ -583,6 +592,13 @@ fn worker_loop<M: ForwardModel>(
 ) {
     let engine = Engine::with_cache(model, cfg.cache);
     let mut sched = engine.scheduler::<Box<dyn Policy>>(cfg.max_batch);
+    if registry.config().ema_alpha > 0.0 {
+        // registry-level EMA refinement (the fleet analog of
+        // AdaptiveOsdt::observe) recalibrates from every decode's trace —
+        // that needs full per-step confidence vectors, so this worker keeps
+        // the host decision path for all policies
+        sched.set_fusion(false);
+    }
     let max_active = sched.max_active();
     let mut inflight: HashMap<u64, Inflight> = HashMap::new();
     // parked requests: local calibrations deferred while the scheduler is
@@ -709,6 +725,15 @@ fn worker_loop<M: ForwardModel>(
                     metrics.set_gauge("batch_occupancy", report.occupancy as i64);
                     metrics.max_gauge("batch_occupancy_peak", report.occupancy as i64);
                     metrics.observe("batch_occupancy", report.occupancy as f64);
+                    metrics.add("full_passes", report.full_passes as u64);
+                    metrics.add("window_passes", report.window_passes as u64);
+                    metrics.add(
+                        "fused_window_passes",
+                        report.fused_window_passes as u64,
+                    );
+                    for &n in &report.accepted {
+                        metrics.observe("accepted_per_step", n as f64);
+                    }
                 }
                 for (id, res) in report.retired {
                     let Some(inf) = inflight.remove(&id) else {
@@ -740,7 +765,9 @@ fn worker_loop<M: ForwardModel>(
                     metrics.add("requests_failed", 1);
                     let _ = inf.job.resp.send(Response::failure(inf.job.req.id, &msg));
                 }
+                let fusion = sched.fusion();
                 sched = engine.scheduler::<Box<dyn Policy>>(max_active);
+                sched.set_fusion(fusion);
                 metrics.set_gauge("batch_occupancy", 0);
             }
         }

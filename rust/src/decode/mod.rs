@@ -30,7 +30,7 @@ use anyhow::{bail, Context, Result};
 use crate::cache::CacheHandle;
 use crate::model::ModelConfig;
 use crate::policy::{CalibrationTrace, Policy};
-use crate::runtime::{ConfOut, RuntimeStats};
+use crate::runtime::{accept_rows, AcceptOut, AcceptRule, ConfOut, RuntimeStats};
 
 /// Abstraction over the PJRT runtime so the engine, tests, and the analytic
 /// simulator share one decode loop. `ModelRuntime` implements this; so does
@@ -84,6 +84,43 @@ pub trait ForwardModel {
         }
         Ok(out)
     }
+    /// Fused batched window pass + threshold acceptance (DESIGN.md §11):
+    /// row `i` applies `rules[i]` (plus the argmax liveness fallback) to
+    /// its own window's confidences and returns only compact acceptance —
+    /// the scheduler's fast path for policies whose `plan()` is
+    /// device-fusible. Row `i` must commit exactly the positions the
+    /// policy's host-side `select_explain` would pick on the downloaded
+    /// rows; backends get that for free from this default, which runs
+    /// [`ForwardModel::fwd_window_batch`] and reduces it with the shared
+    /// host reference rule [`accept_rows`]. The PJRT runtime overrides it
+    /// with the compiled `fwd_window_accept_b{B}` executables, where the
+    /// reduction happens on device and full confidence rows never cross
+    /// the host boundary.
+    fn fwd_window_accept(
+        &self,
+        windows: &[&[u32]],
+        starts: &[usize],
+        caches: &[&CacheHandle],
+        rules: &[AcceptRule],
+    ) -> Result<AcceptOut> {
+        if windows.len() != rules.len() {
+            bail!(
+                "accept batch arity mismatch: {} windows, {} rules",
+                windows.len(),
+                rules.len()
+            );
+        }
+        let out = self.fwd_window_batch(windows, starts, caches)?;
+        if out.len() < windows.len() {
+            bail!(
+                "fwd_window_batch returned {} rows for a batch of {}",
+                out.len(),
+                windows.len()
+            );
+        }
+        Ok(accept_rows(&out, windows, self.config().mask_id, rules))
+    }
+
     /// Cumulative transfer/exec accounting, for backends that measure it
     /// (the PJRT runtime). Drivers publish deltas into serving metrics.
     fn runtime_stats(&self) -> Option<RuntimeStats> {
@@ -119,6 +156,17 @@ impl ForwardModel for crate::runtime::ModelRuntime {
         caches: &[&CacheHandle],
     ) -> Result<ConfOut> {
         crate::runtime::ModelRuntime::fwd_window_batch(self, windows, starts, caches)
+    }
+    fn fwd_window_accept(
+        &self,
+        windows: &[&[u32]],
+        starts: &[usize],
+        caches: &[&CacheHandle],
+        rules: &[AcceptRule],
+    ) -> Result<AcceptOut> {
+        crate::runtime::ModelRuntime::fwd_window_accept(
+            self, windows, starts, caches, rules,
+        )
     }
     fn runtime_stats(&self) -> Option<RuntimeStats> {
         Some(self.stats())

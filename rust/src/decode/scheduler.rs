@@ -24,7 +24,8 @@ use std::collections::VecDeque;
 use anyhow::{bail, Result};
 
 use crate::cache::{CacheConfig, CacheHandle};
-use crate::policy::Policy;
+use crate::policy::{PlanContext, Policy, StepPlan};
+use crate::runtime::AcceptRule;
 
 use super::task::{DecodeTask, PassKind};
 use super::{DecodeResult, ForwardModel};
@@ -65,8 +66,14 @@ pub struct StepReport {
     pub model_calls: usize,
     /// Per-sequence full passes executed (fwd_conf rows + fwd_full_kv).
     pub full_passes: usize,
-    /// Per-sequence window passes executed (fwd_window_batch rows).
+    /// Per-sequence window passes executed (fused + host rows).
     pub window_passes: usize,
+    /// The subset of `window_passes` that ran through the fused
+    /// `fwd_window_accept` path (device-side decision, compact download).
+    pub fused_window_passes: usize,
+    /// Tokens committed per advanced sequence this step, in processing
+    /// order — the serving `accepted_per_step` histogram's raw material.
+    pub accepted: Vec<usize>,
 }
 
 /// FIFO continuous-batching scheduler over one forward model.
@@ -74,6 +81,11 @@ pub struct StepScheduler<'m, M: ForwardModel, P: PolicyRef> {
     model: &'m M,
     cache: CacheConfig,
     max_active: usize,
+    /// Route window steps of fusible-plan policies through the fused
+    /// `fwd_window_accept` path (default). Drivers that need full per-step
+    /// confidence traces from *every* policy — e.g. a registry running EMA
+    /// refinement — switch this off.
+    fused: bool,
     /// Admitted, waiting for a free slot (FIFO).
     waiting: VecDeque<Entry<P>>,
     /// Running sequences; at most `max_active`.
@@ -88,9 +100,21 @@ impl<'m, M: ForwardModel, P: PolicyRef> StepScheduler<'m, M, P> {
             model,
             cache,
             max_active,
+            fused: true,
             waiting: VecDeque::new(),
             active: Vec::new(),
         }
+    }
+
+    /// Enable/disable the fused device-acceptance fast path (on by
+    /// default). Disabling never changes tokens — only where the decision
+    /// runs and how much of each step's confidences reach the trace.
+    pub fn set_fusion(&mut self, enabled: bool) {
+        self.fused = enabled;
+    }
+
+    pub fn fusion(&self) -> bool {
+        self.fused
     }
 
     /// Admit a sequence; it joins the shared passes at the next step
@@ -159,11 +183,33 @@ impl<'m, M: ForwardModel, P: PolicyRef> StepScheduler<'m, M, P> {
         let mut full: Vec<usize> = Vec::new();
         let mut full_kv: Vec<usize> = Vec::new();
         let mut window: Vec<usize> = Vec::new();
+        // window steps whose policy advertised a device-fusible plan — the
+        // per-row rules let threshold and factor-max rows share one fused
+        // call, so a "mixed batch" splits only along fusible vs host-full
+        let mut fused: Vec<(usize, AcceptRule)> = Vec::new();
         for (i, e) in self.active.iter().enumerate() {
             match e.task.needs(cfg) {
                 PassKind::Full => full.push(i),
                 PassKind::FullKv => full_kv.push(i),
-                PassKind::Window { .. } => window.push(i),
+                PassKind::Window { .. } => {
+                    let plan = if self.fused {
+                        e.policy.as_policy().plan(&PlanContext {
+                            block: e.task.block(),
+                            step: e.task.step_in_block(),
+                        })
+                    } else {
+                        StepPlan::HostFull
+                    };
+                    match plan {
+                        StepPlan::Threshold { tau } => {
+                            fused.push((i, AcceptRule::threshold(tau)))
+                        }
+                        StepPlan::FactorMax { factor } => {
+                            fused.push((i, AcceptRule::factor_max(factor)))
+                        }
+                        StepPlan::HostFull => window.push(i),
+                    }
+                }
                 PassKind::Done => {} // retired below without a pass
             }
         }
@@ -176,13 +222,14 @@ impl<'m, M: ForwardModel, P: PolicyRef> StepScheduler<'m, M, P> {
             }
             let e = &mut self.active[i];
             e.task.install_cache(kv);
-            e.task.apply(
+            let n = e.task.apply(
                 cfg,
                 e.policy.as_policy(),
                 PassKind::FullKv,
                 out.conf_row(0),
                 out.argmax_row(0),
             );
+            report.accepted.push(n);
             report.model_calls += 1;
             report.full_passes += 1;
         }
@@ -205,19 +252,20 @@ impl<'m, M: ForwardModel, P: PolicyRef> StepScheduler<'m, M, P> {
             }
             for (row, &i) in chunk.iter().enumerate() {
                 let e = &mut self.active[i];
-                e.task.apply(
+                let n = e.task.apply(
                     cfg,
                     e.policy.as_policy(),
                     PassKind::Full,
                     out.conf_row(row),
                     out.argmax_row(row),
                 );
+                report.accepted.push(n);
             }
             report.model_calls += 1;
             report.full_passes += chunk.len();
         }
 
-        // ---- batched in-block window passes
+        // ---- batched in-block window passes (host-full plans)
         for chunk in window.chunks(self.max_active) {
             let mut starts: Vec<usize> = Vec::with_capacity(chunk.len());
             let out = {
@@ -247,16 +295,64 @@ impl<'m, M: ForwardModel, P: PolicyRef> StepScheduler<'m, M, P> {
             }
             for (row, &i) in chunk.iter().enumerate() {
                 let e = &mut self.active[i];
-                e.task.apply(
+                let n = e.task.apply(
                     cfg,
                     e.policy.as_policy(),
                     PassKind::Window { start: starts[row] },
                     out.conf_row(row),
                     out.argmax_row(row),
                 );
+                report.accepted.push(n);
             }
             report.model_calls += 1;
             report.window_passes += chunk.len();
+        }
+
+        // ---- fused window passes: the decision runs on device, only the
+        // compact acceptance comes back (DESIGN.md §11)
+        for chunk in fused.chunks(self.max_active) {
+            let mut starts: Vec<usize> = Vec::with_capacity(chunk.len());
+            let out = {
+                let mut windows: Vec<&[u32]> = Vec::with_capacity(chunk.len());
+                let mut caches: Vec<&CacheHandle> = Vec::with_capacity(chunk.len());
+                let mut rules: Vec<AcceptRule> = Vec::with_capacity(chunk.len());
+                for &(i, rule) in chunk {
+                    let t = &self.active[i].task;
+                    let start = match t.needs(cfg) {
+                        PassKind::Window { start } => start,
+                        other => bail!("fused group holds a {other:?} task"),
+                    };
+                    starts.push(start);
+                    windows.push(t.window(cfg));
+                    rules.push(rule);
+                    match t.cache() {
+                        Some(c) => caches.push(c),
+                        None => bail!("fused window pass without an installed cache"),
+                    }
+                }
+                model.fwd_window_accept(&windows, &starts, &caches, &rules)?
+            };
+            if out.len() < chunk.len() {
+                bail!(
+                    "fwd_window_accept returned {} rows for a batch of {}",
+                    out.len(),
+                    chunk.len()
+                );
+            }
+            for (row, &(i, _)) in chunk.iter().enumerate() {
+                let e = &mut self.active[i];
+                let n = e.task.apply_accept(
+                    cfg,
+                    starts[row],
+                    out.row(row),
+                    out.step_mean(row),
+                    out.fell_back(row),
+                );
+                report.accepted.push(n);
+            }
+            report.model_calls += 1;
+            report.window_passes += chunk.len();
+            report.fused_window_passes += chunk.len();
         }
 
         // ---- retire finished sequences immediately
@@ -329,6 +425,55 @@ mod tests {
         let results = s.drain().unwrap();
         assert_eq!(results.len() + r.retired.len(), n);
         assert!(s.is_idle());
+    }
+
+    #[test]
+    fn window_steps_split_fused_and_host_groups() {
+        // a fusible policy (static) and a host-full one (top-k) share a
+        // cached step: the scheduler must split the window group, running
+        // one fused call and one host call
+        let m = SimModel::math_like(8);
+        let stat = StaticThreshold::new(0.9);
+        let topk = SequentialTopK::new(2);
+        let mut s = sched(&m, CacheConfig::block_boundary());
+        s.admit(0, m.layout_from_seed(0), &stat as &dyn Policy).unwrap();
+        s.admit(1, m.layout_from_seed(1), &topk as &dyn Policy).unwrap();
+        let r0 = s.step().unwrap(); // both at their block-boundary refresh
+        assert_eq!(r0.full_passes, 2);
+        assert_eq!(r0.fused_window_passes, 0, "refreshes never fuse");
+        assert_eq!(r0.accepted.len(), 2, "every advanced row reports commits");
+        let r1 = s.step().unwrap(); // both in-block
+        assert_eq!(r1.window_passes, 2);
+        assert_eq!(r1.fused_window_passes, 1, "only the static row fuses");
+        assert_eq!(r1.model_calls, 2, "fused and host groups are separate calls");
+        assert!(r1.accepted.iter().all(|&n| n >= 1), "liveness per row");
+    }
+
+    #[test]
+    fn fusion_toggle_changes_path_not_tokens() {
+        let m = SimModel::qa_like(9);
+        let p = StaticThreshold::new(0.88);
+        let run = |fusion: bool| {
+            let mut s = sched(&m, CacheConfig::block_boundary());
+            s.set_fusion(fusion);
+            assert_eq!(s.fusion(), fusion);
+            s.admit(0, m.layout_from_seed(3), &p as &dyn Policy).unwrap();
+            let mut fused_passes = 0;
+            let mut results = Vec::new();
+            while !s.is_idle() {
+                let r = s.step().unwrap();
+                fused_passes += r.fused_window_passes;
+                results.extend(r.retired);
+            }
+            (results.pop().unwrap().1, fused_passes)
+        };
+        let (on, fused_on) = run(true);
+        let (off, fused_off) = run(false);
+        assert!(fused_on > 0, "fusible policy must take the fused path");
+        assert_eq!(fused_off, 0, "toggle must force the host path");
+        assert_eq!(on.tokens, off.tokens, "fusion must not change tokens");
+        assert_eq!(on.steps, off.steps);
+        assert_eq!(on.fallback_steps, off.fallback_steps);
     }
 
     #[test]

@@ -150,6 +150,12 @@ impl DecodeTask {
         self.steps
     }
 
+    /// Denoising step index within the active block (what `Policy::plan`
+    /// decides on, together with [`DecodeTask::block`]).
+    pub fn step_in_block(&self) -> usize {
+        self.step_in_block
+    }
+
     /// Masked positions (absolute) of the current block.
     fn masked(&self, cfg: &ModelConfig) -> Vec<usize> {
         cfg.block_range(self.block)
@@ -202,8 +208,55 @@ impl DecodeTask {
             }
             PassKind::Done => {}
         }
+        self.finish_step(cfg);
+        sel.len()
+    }
+
+    /// Fast path for a fused window step (DESIGN.md §11): the policy
+    /// decision already ran on device — `accepted` holds the committed
+    /// (window-local position, token) pairs, `step_mean` the masked-mean
+    /// confidence, `fell_back` whether the argmax liveness fallback fired.
+    /// The trace records the single mean instead of the full confidence
+    /// vector (which never crossed the host boundary): signature-grade
+    /// resolution — exact for drift detection, insufficient for
+    /// `Calibrator`'s quantile metrics, which is why calibration decodes
+    /// force the host path via `policy::HostTraced`.
+    pub fn apply_accept(
+        &mut self,
+        cfg: &ModelConfig,
+        start: usize,
+        accepted: &[(u32, u32)],
+        step_mean: f32,
+        fell_back: bool,
+    ) -> usize {
+        debug_assert!(!self.done, "apply_accept on a finished task");
+        debug_assert!(!accepted.is_empty(), "fused acceptance liveness violated");
+        self.trace
+            .record(self.block, self.step_in_block, &[step_mean]);
+        if fell_back {
+            self.fallback_steps += 1;
+        }
+        for &(pos, tok) in accepted {
+            let p = start + pos as usize;
+            debug_assert_eq!(
+                self.tokens[p], cfg.mask_id,
+                "fused accept committed a non-masked position"
+            );
+            self.tokens[p] = tok;
+        }
+        self.steps += 1;
+        self.step_in_block += 1;
+        self.window_passes += 1;
+        self.since_refresh += 1;
+        self.finish_step(cfg);
+        accepted.len()
+    }
+
+    /// Shared step epilogue: roll over completed blocks and drop the dual
+    /// cache at block boundaries (Fast-dLLM refreshes prefix and suffix
+    /// K/V whenever the active block changes).
+    fn finish_step(&mut self, cfg: &ModelConfig) {
         let prev_block = self.block;
-        // roll over completed blocks
         while self.block < cfg.num_blocks && self.masked(cfg).is_empty() {
             self.block += 1;
             self.step_in_block = 0;
@@ -216,12 +269,9 @@ impl DecodeTask {
             self.done = true;
         }
         if self.block != prev_block {
-            // entering a new block invalidates the dual cache — Fast-dLLM
-            // refreshes prefix and suffix K/V at every block boundary
             self.cache = None;
             self.since_refresh = 0;
         }
-        sel.len()
     }
 
     /// Consume the task into its final [`DecodeResult`].
@@ -339,5 +389,46 @@ mod tests {
     fn rejects_wrong_length() {
         let cfg = tiny_config();
         assert!(DecodeTask::new(vec![0; 3], &cfg, CacheConfig::disabled()).is_err());
+    }
+
+    #[test]
+    fn apply_accept_commits_pairs_and_rolls_over() {
+        let cfg = tiny_config();
+        let m = SimModel::math_like(4);
+        let mut task = DecodeTask::new(
+            m.layout_from_seed(4),
+            &cfg,
+            CacheConfig::block_boundary(),
+        )
+        .unwrap();
+        let p = StaticThreshold::new(0.95);
+        let (out, kv) = m.fwd_full_kv(task.tokens()).unwrap();
+        task.install_cache(kv);
+        task.apply(&cfg, &p, PassKind::FullKv, out.conf_row(0), out.argmax_row(0));
+        assert_eq!(task.block(), 0);
+        let start = cfg.block_range(0).start;
+        // commit every remaining masked position of block 0 via the fused
+        // path: the task must advance a step and roll into block 1
+        let pairs: Vec<(u32, u32)> = cfg
+            .block_range(0)
+            .filter(|&pos| task.tokens()[pos] == cfg.mask_id)
+            .map(|pos| ((pos - start) as u32, 7u32))
+            .collect();
+        assert!(!pairs.is_empty());
+        let steps_before = task.steps();
+        let n = task.apply_accept(&cfg, start, &pairs, 0.5, false);
+        assert_eq!(n, pairs.len());
+        assert_eq!(task.steps(), steps_before + 1);
+        assert_eq!(task.block(), 1, "completed block must roll over");
+        assert_eq!(task.step_in_block(), 0);
+        assert!(task.cache().is_none(), "rollover must drop the cache");
+        assert_eq!(
+            task.needs(&cfg),
+            PassKind::FullKv,
+            "next block starts with a refresh"
+        );
+        // the fused trace point is the single step-mean scalar
+        let res = task.into_result();
+        assert_eq!(res.trace.per_block[0].last().unwrap(), &vec![0.5]);
     }
 }

@@ -244,7 +244,12 @@ fn cmd_calibrate(args: &Args) -> Result<()> {
     let ds = Dataset::load(cfg.artifact_dir.join("data"), &task)?;
     let engine = Engine::with_cache(&rt, cache_config(args)?);
     let layout = tok.layout_prompt(&cfg, &ds.examples[0].prompt)?;
-    let cal = engine.decode(layout, &StaticThreshold::new(bench::CALIBRATION_TAU))?;
+    // calibration must see full per-step confidence vectors — force the
+    // host decision path even when the fused window kernels are available
+    let cal = engine.decode(
+        layout,
+        &osdt::policy::HostTraced(StaticThreshold::new(bench::CALIBRATION_TAU)),
+    )?;
     let profile = Calibrator::calibrate(&cal.trace, mode, metric);
     let store = ProfileStore::new(args.get_or("profile-dir", "profiles"))?;
     let path =

@@ -82,6 +82,14 @@ impl Policy for AdaptiveOsdt {
         self.inner.read().unwrap().select_raw(ctx)
     }
 
+    /// Deliberately `HostFull` (the trait default, restated for clarity):
+    /// `observe` refines the profile from full per-step confidence
+    /// vectors, which a fused decode never downloads — so adaptive decodes
+    /// keep the classic path even though each step's τ is known upfront.
+    fn plan(&self, _ctx: &super::PlanContext) -> super::StepPlan {
+        super::StepPlan::HostFull
+    }
+
     fn name(&self) -> String {
         format!(
             "adaptive-osdt-{}-{}-a{}",

@@ -9,7 +9,7 @@
 //! measured behaviour matches Table 1's shape: slightly higher accuracy
 //! than fixed-τ at lower throughput on code, similar on math/qa.
 
-use super::{argmax, Policy, StepContext};
+use super::{argmax, PlanContext, Policy, StepContext, StepPlan};
 
 #[derive(Clone, Debug)]
 pub struct FactorThreshold {
@@ -24,19 +24,32 @@ impl FactorThreshold {
 }
 
 impl Policy for FactorThreshold {
+    /// The cutoff depends on the step's own max confidence, so — unlike the
+    /// fixed-τ policies — it cannot be quantised exactly from f64 on the
+    /// host. The rule is therefore *defined* in f32 (`f · cmax` and the
+    /// compares are f32 IEEE ops), which both this host path and the fused
+    /// device kernels implement bit-identically. For f ∈ [0, 1] the argmax
+    /// is always selected: round-to-nearest of a real ≤ cmax never exceeds
+    /// cmax, so liveness is preserved without the fallback.
     fn select_raw(&self, ctx: &StepContext) -> Vec<usize> {
         if ctx.conf.is_empty() {
             return vec![];
         }
-        let cmax = f64::from(ctx.conf[argmax(ctx.conf)]);
-        let cut = self.factor * cmax;
+        let cmax = ctx.conf[argmax(ctx.conf)];
+        let cut = self.factor as f32 * cmax;
         (0..ctx.conf.len())
-            .filter(|&i| f64::from(ctx.conf[i]) >= cut)
+            .filter(|&i| ctx.conf[i] >= cut)
             .collect()
     }
 
     fn name(&self) -> String {
         format!("factor-{}", self.factor)
+    }
+
+    /// The relative cutoff needs only the step's max — which the device
+    /// computes itself — so factor steps fuse too.
+    fn plan(&self, _ctx: &PlanContext) -> StepPlan {
+        StepPlan::FactorMax { factor: self.factor as f32 }
     }
 }
 

@@ -176,6 +176,33 @@ pub struct StepContext<'a> {
     pub conf: &'a [f32],
 }
 
+/// The step metadata a policy sees *before* the forward pass runs — what
+/// [`Policy::plan`] decides on. This is [`StepContext`] minus the
+/// confidences: a device-fusible rule is exactly one that needs nothing
+/// else.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PlanContext {
+    pub block: usize,
+    pub step: usize,
+}
+
+/// A policy's decision rule for one step, advertised ahead of the forward
+/// pass (DESIGN.md §11). `Threshold`/`FactorMax` are device-fusible: the
+/// scheduler routes such steps through the fused `fwd_window_accept`
+/// kernels and the host never sees the confidence rows. `HostFull` keeps
+/// the classic download-then-select path.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum StepPlan {
+    /// Commit every masked position with `conf > tau` (f32 strict compare;
+    /// see [`f32_below`] for the exact f64→f32 cutoff quantisation).
+    Threshold { tau: f32 },
+    /// Commit every masked position with `conf >= factor · cmax`, where
+    /// `cmax` is the step's max masked confidence (f32 math).
+    FactorMax { factor: f32 },
+    /// The policy must see the full confidence row on the host.
+    HostFull,
+}
+
 /// A threshold policy: selects which masked positions to commit.
 pub trait Policy: Send {
     /// Raw selection rule. Returns indices **into `ctx.conf`**. May return
@@ -185,6 +212,15 @@ pub trait Policy: Send {
 
     /// Human-readable name for logs/benches.
     fn name(&self) -> String;
+
+    /// Advertise this step's decision rule *before* the pass runs — the
+    /// device-fusible capability (DESIGN.md §11). A non-`HostFull` plan
+    /// promises: applying the plan's rule (+ argmax fallback) to the
+    /// masked positions yields exactly [`Policy::select_explain`]'s
+    /// result. Default: `HostFull` (policy must see raw confidences).
+    fn plan(&self, _ctx: &PlanContext) -> StepPlan {
+        StepPlan::HostFull
+    }
 
     /// Selection with the liveness fallback (Algorithm 1 lines 19–21):
     /// never returns an empty set for a non-empty `ctx.conf`.
@@ -201,6 +237,69 @@ pub trait Policy: Send {
         }
         (vec![argmax(ctx.conf)], true)
     }
+}
+
+/// Boxed policies are policies. Every method forwards — in particular
+/// `plan`, which must NOT fall back to the trait default (that would
+/// silently strip fusibility from any boxed policy).
+impl Policy for Box<dyn Policy> {
+    fn select_raw(&self, ctx: &StepContext) -> Vec<usize> {
+        (**self).select_raw(ctx)
+    }
+
+    fn name(&self) -> String {
+        (**self).name()
+    }
+
+    fn plan(&self, ctx: &PlanContext) -> StepPlan {
+        (**self).plan(ctx)
+    }
+
+    fn select(&self, ctx: &StepContext) -> Vec<usize> {
+        (**self).select(ctx)
+    }
+
+    fn select_explain(&self, ctx: &StepContext) -> (Vec<usize>, bool) {
+        (**self).select_explain(ctx)
+    }
+}
+
+/// Force the host-full decision path for a wrapped policy. Calibration
+/// decodes (and any driver that needs complete per-step confidence
+/// vectors, e.g. Figure 1/2 trace collection) wrap their policy in this:
+/// a fused decode records only per-step mean confidences, which is enough
+/// for drift signatures but not for `Calibrator`'s quantile metrics.
+pub struct HostTraced<P: Policy>(pub P);
+
+impl<P: Policy> Policy for HostTraced<P> {
+    fn select_raw(&self, ctx: &StepContext) -> Vec<usize> {
+        self.0.select_raw(ctx)
+    }
+
+    fn name(&self) -> String {
+        format!("host-traced({})", self.0.name())
+    }
+
+    // inherits the default HostFull plan — that is the whole point
+}
+
+/// Largest f32 `c` with `c <= x` — the exact cutoff quantisation for
+/// [`StepPlan::Threshold`]: for every f32 `conf`,
+/// `conf > f32_below(x)` (f32 compare) ⟺ `f64::from(conf) > x` (f64
+/// compare). Proof sketch: f32 values are a subset of f64, so
+/// `f64::from(conf) > x` ⟺ `conf > x` as reals ⟺ `conf > c` (there is
+/// no f32 strictly between `c` and `x` by maximality of `c`).
+pub fn f32_below(x: f64) -> f32 {
+    let c = x as f32; // round-to-nearest may land above x
+    if f64::from(c) <= x {
+        return c;
+    }
+    // step down one ulp
+    if c == 0.0 {
+        return -f32::from_bits(1);
+    }
+    let bits = c.to_bits();
+    f32::from_bits(if c > 0.0 { bits - 1 } else { bits + 1 })
 }
 
 /// Index of the maximum confidence (ties -> lowest index, deterministic).
@@ -259,6 +358,59 @@ mod tests {
             let s = spec.to_spec_string();
             assert_eq!(parse_policy_spec(&s).unwrap(), spec, "{s}");
         }
+    }
+
+    #[test]
+    fn f32_below_is_exact_strict_compare_quantisation() {
+        use crate::util::{prop, rng::Rng};
+        // spot values: representable, non-representable, boundaries
+        assert_eq!(f32_below(0.5), 0.5);
+        assert!(f64::from(f32_below(0.9)) <= 0.9);
+        assert!(f64::from(f32_below(0.9)) > 0.8999);
+        assert_eq!(f32_below(0.0), 0.0);
+        assert!(f32_below(-1e-300) < 0.0);
+        prop::forall(
+            "f32-below-equivalence",
+            500,
+            |r: &mut Rng| {
+                let tau = r.next_f64() * 1.2 - 0.1;
+                let conf = (r.next_f64() * 1.2 - 0.1) as f32;
+                (tau, conf)
+            },
+            |&(tau, conf)| {
+                let c = f32_below(tau);
+                if f64::from(c) > tau {
+                    return Err(format!("f32_below({tau}) = {c} above input"));
+                }
+                let host = f64::from(conf) > tau;
+                let dev = conf > c;
+                if host != dev {
+                    return Err(format!(
+                        "conf {conf} tau {tau} cut {c}: host {host} != device {dev}"
+                    ));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn plans_advertise_fusible_rules() {
+        let ctx = PlanContext { block: 0, step: 0 };
+        assert_eq!(
+            StaticThreshold::new(0.9).plan(&ctx),
+            StepPlan::Threshold { tau: f32_below(0.9) }
+        );
+        assert_eq!(
+            FactorThreshold::new(0.95).plan(&ctx),
+            StepPlan::FactorMax { factor: 0.95f64 as f32 }
+        );
+        assert_eq!(SequentialTopK::new(1).plan(&ctx), StepPlan::HostFull);
+        // the wrapper strips fusibility without changing selection
+        let wrapped = HostTraced(StaticThreshold::new(0.9));
+        assert_eq!(wrapped.plan(&ctx), StepPlan::HostFull);
+        let c = StepContext { block: 0, step: 0, conf: &[0.95, 0.2] };
+        assert_eq!(wrapped.select(&c), StaticThreshold::new(0.9).select(&c));
     }
 
     #[test]

@@ -13,7 +13,7 @@
 //! uniformly relaxes them to buy parallelism. Both are the paper's §4.1
 //! hyperparameters.
 
-use super::{Policy, Profile, StepContext};
+use super::{f32_below, PlanContext, Policy, Profile, StepContext, StepPlan};
 
 #[derive(Clone, Debug)]
 pub struct Osdt {
@@ -50,6 +50,14 @@ impl Policy for Osdt {
         (0..ctx.conf.len())
             .filter(|&i| f64::from(ctx.conf[i]) > cut)
             .collect()
+    }
+
+    /// The paper's core primitive: τ_eff is known per (block, step) before
+    /// the pass runs, so OSDT steps fuse onto the device. `f32_below`
+    /// quantises the f64 cutoff so the device's f32 strict compare selects
+    /// exactly the same positions as `select_raw`'s f64 compare.
+    fn plan(&self, ctx: &PlanContext) -> StepPlan {
+        StepPlan::Threshold { tau: f32_below(self.tau_eff(ctx.block, ctx.step)) }
     }
 
     fn name(&self) -> String {

@@ -2,7 +2,7 @@
 //! confidence exceeds a single static global τ (the paper compares against
 //! τ = 0.9).
 
-use super::{Policy, StepContext};
+use super::{f32_below, PlanContext, Policy, StepContext, StepPlan};
 
 #[derive(Clone, Debug)]
 pub struct StaticThreshold {
@@ -25,6 +25,11 @@ impl Policy for StaticThreshold {
         (0..ctx.conf.len())
             .filter(|&i| f64::from(ctx.conf[i]) > self.tau)
             .collect()
+    }
+
+    /// A global static τ is trivially known ahead of the pass — fusible.
+    fn plan(&self, _ctx: &PlanContext) -> StepPlan {
+        StepPlan::Threshold { tau: f32_below(self.tau) }
     }
 
     fn name(&self) -> String {

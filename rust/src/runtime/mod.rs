@@ -13,6 +13,12 @@
 //! residency (download-then-reupload every step) stays selectable for A/B
 //! via [`ModelRuntime::set_residency`].
 //!
+//! The threshold *decision* is device-resident too (DESIGN.md §11): the
+//! `fwd_window_accept_b{B}` variants run the per-row acceptance rule and
+//! argmax fallback inside the executable, so steady-state window steps
+//! download compact [`AcceptOut`] payloads — O(accepted tokens) — instead
+//! of full confidence/argmax rows.
+//!
 //! One `ModelRuntime` is *not* Sync; each engine worker thread owns its own
 //! (the PJRT CPU client is cheap and executables compile in milliseconds).
 
@@ -116,6 +122,164 @@ impl ConfOut {
     }
 }
 
+/// Per-row device acceptance rule for [`ModelRuntime::fwd_window_accept`]
+/// — the runtime mirror of a policy's `StepPlan` (DESIGN.md §11). A row's
+/// raw acceptance is
+///
+/// ```text
+/// masked[i] && (conf[i] > tau  ||  conf[i] >= factor · cmax)
+/// ```
+///
+/// in f32, where `cmax` is the row's max masked confidence. A disabled
+/// disjunct is `+inf`, which can never accept (`x > ∞` is false; `∞·cmax`
+/// is `+inf` or NaN for any real confidence, so `x >= ∞·cmax` is false).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AcceptRule {
+    pub tau: f32,
+    pub factor: f32,
+}
+
+impl AcceptRule {
+    /// Fixed-cutoff rule: accept `conf > tau` (f32 strict compare).
+    pub fn threshold(tau: f32) -> AcceptRule {
+        AcceptRule { tau, factor: f32::INFINITY }
+    }
+
+    /// Relative rule: accept `conf >= factor · cmax` (f32 math).
+    pub fn factor_max(factor: f32) -> AcceptRule {
+        AcceptRule { tau: f32::INFINITY, factor }
+    }
+}
+
+/// Compact result of a fused window-acceptance pass: per row, only the
+/// accepted (window-local position, token) pairs plus the two scalars the
+/// decode layer needs — the masked-mean confidence (drift signatures) and
+/// the argmax-fallback flag. Stored flat (offsets, not per-row `Vec`s).
+#[derive(Clone, Debug, Default)]
+pub struct AcceptOut {
+    /// Accepted (window-local position, committed token) pairs, rows
+    /// concatenated in ascending-position order within each row.
+    pairs: Vec<(u32, u32)>,
+    /// Per-row end offset into `pairs`.
+    ends: Vec<usize>,
+    /// Per-row masked-mean confidence of the step.
+    means: Vec<f32>,
+    /// Per-row: did the argmax liveness fallback fire?
+    fell_back: Vec<bool>,
+}
+
+impl AcceptOut {
+    pub fn with_capacity(rows: usize) -> AcceptOut {
+        AcceptOut {
+            pairs: Vec::with_capacity(2 * rows),
+            ends: Vec::with_capacity(rows),
+            means: Vec::with_capacity(rows),
+            fell_back: Vec::with_capacity(rows),
+        }
+    }
+
+    /// Number of rows.
+    pub fn len(&self) -> usize {
+        self.ends.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ends.is_empty()
+    }
+
+    /// Accepted (local position, token) pairs of row `i`.
+    pub fn row(&self, i: usize) -> &[(u32, u32)] {
+        assert!(i < self.ends.len(), "accept row {i} out of {}", self.ends.len());
+        let start = if i == 0 { 0 } else { self.ends[i - 1] };
+        &self.pairs[start..self.ends[i]]
+    }
+
+    /// Masked-mean confidence of row `i` (the drift-signature scalar).
+    pub fn step_mean(&self, i: usize) -> f32 {
+        self.means[i]
+    }
+
+    /// Whether row `i` committed via the argmax liveness fallback.
+    pub fn fell_back(&self, i: usize) -> bool {
+        self.fell_back[i]
+    }
+
+    pub fn push_row(&mut self, pairs: &[(u32, u32)], mean: f32, fell_back: bool) {
+        self.pairs.extend_from_slice(pairs);
+        self.ends.push(self.pairs.len());
+        self.means.push(mean);
+        self.fell_back.push(fell_back);
+    }
+
+    /// Append all rows of `other` (chunked passes).
+    pub fn append(&mut self, other: AcceptOut) {
+        let base = self.pairs.len();
+        self.pairs.extend_from_slice(&other.pairs);
+        self.ends.extend(other.ends.iter().map(|e| e + base));
+        self.means.extend_from_slice(&other.means);
+        self.fell_back.extend_from_slice(&other.fell_back);
+    }
+}
+
+/// Host-side reference of the fused acceptance rule — the *exact* f32
+/// semantics the compiled `fwd_window_accept_b{B}` kernels implement on
+/// device (python `model.accept_from_conf`). Backends without compiled
+/// accept variants (`SimModel`, artifact sets predating the fused kernels)
+/// route through this over a full [`ConfOut`]; tests use it to pin device
+/// and host to one rule. The masked set is derived from the window tokens
+/// (`== mask_id`), identical to `DecodeTask::masked`.
+pub fn accept_rows(
+    out: &ConfOut,
+    windows: &[&[u32]],
+    mask_id: u32,
+    rules: &[AcceptRule],
+) -> AcceptOut {
+    assert_eq!(windows.len(), rules.len(), "windows vs rules arity");
+    assert!(out.len() >= windows.len(), "conf rows vs windows arity");
+    let mut res = AcceptOut::with_capacity(windows.len());
+    let mut pairs: Vec<(u32, u32)> = Vec::new();
+    for (r, (window, rule)) in windows.iter().zip(rules).enumerate() {
+        let conf = out.conf_row(r);
+        let arg = out.argmax_row(r);
+        pairs.clear();
+        // one pass over the masked set: max (ties -> lowest index via
+        // strict >, matching `policy::argmax`), sum, count
+        let mut cmax = f32::NEG_INFINITY;
+        let mut best = None;
+        let mut sum = 0.0f64;
+        let mut cnt = 0usize;
+        for (i, &t) in window.iter().enumerate() {
+            if t != mask_id {
+                continue;
+            }
+            sum += f64::from(conf[i]);
+            cnt += 1;
+            if conf[i] > cmax {
+                cmax = conf[i];
+                best = Some(i);
+            }
+        }
+        if cnt == 0 {
+            res.push_row(&[], 0.0, false);
+            continue;
+        }
+        let cut = rule.factor * cmax;
+        for (i, &t) in window.iter().enumerate() {
+            if t == mask_id && (conf[i] > rule.tau || conf[i] >= cut) {
+                pairs.push((i as u32, arg[i]));
+            }
+        }
+        let mut fell_back = false;
+        if pairs.is_empty() {
+            let b = best.expect("non-empty masked set has a max");
+            pairs.push((b as u32, arg[b]));
+            fell_back = true;
+        }
+        res.push_row(&pairs, (sum / cnt as f64) as f32, fell_back);
+    }
+    res
+}
+
 /// Transfer/execution accounting for one runtime entry point.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct EntryStats {
@@ -149,6 +313,12 @@ pub struct RuntimeStats {
     pub window: EntryStats,
     /// The `kv_gather_b{B}` on-device stacking pass (device residency only).
     pub gather: EntryStats,
+    /// The fused `fwd_window_accept_b{B}` pass: threshold compare + argmax
+    /// fallback on device, compact acceptance downloaded. On the fused
+    /// steady state this replaces `window` entirely — the acceptance test
+    /// pins `window.download_bytes` flat while `accept.calls` grows, and
+    /// `accept.download_bytes` stays O(accepted tokens) per step.
+    pub accept: EntryStats,
     /// Host→device bytes spent uploading K/V payloads as forward-pass
     /// arguments. **Zero on the device-residency path** — the acceptance
     /// counter for "no per-step host k/v round trip".
@@ -162,7 +332,13 @@ impl RuntimeStats {
     /// Aggregate over all entry points.
     pub fn total(&self) -> EntryStats {
         let mut t = EntryStats::default();
-        for e in [&self.conf, &self.full_kv, &self.window, &self.gather] {
+        for e in [
+            &self.conf,
+            &self.full_kv,
+            &self.window,
+            &self.gather,
+            &self.accept,
+        ] {
             t.add(e);
         }
         t
@@ -198,6 +374,7 @@ enum Entry {
     FullKv,
     Window,
     Gather,
+    Accept,
 }
 
 /// Reusable host-side staging buffers for batched passes. On the host
@@ -226,6 +403,11 @@ pub struct ModelRuntime {
     /// batch sizes with BOTH fwd_window_b{B} and kv_gather_b{B} compiled —
     /// the stacked device-residency path, ascending
     gather_batches: Vec<usize>,
+    /// batch sizes with a compiled fwd_window_accept variant, ascending
+    accept_batches: Vec<usize>,
+    /// batch sizes with BOTH fwd_window_accept_b{B} and kv_gather_b{B}
+    /// compiled — the fused device-residency path, ascending
+    accept_gather_batches: Vec<usize>,
     residency: std::cell::Cell<Residency>,
     pool: CachePool,
     stats: std::cell::Cell<RuntimeStats>,
@@ -255,6 +437,7 @@ impl ModelRuntime {
         let mut executables = BTreeMap::new();
         let mut conf_batches = Vec::new();
         let mut window_batches = Vec::new();
+        let mut accept_batches = Vec::new();
         let mut gather_raw = Vec::new();
         for (name, v) in &cfg.variants {
             let path = cfg.hlo_path(v);
@@ -268,7 +451,11 @@ impl ModelRuntime {
             if let Some(b) = name.strip_prefix("fwd_conf_b") {
                 conf_batches.push(b.parse::<usize>().context("variant batch suffix")?);
             }
-            if let Some(b) = name.strip_prefix("fwd_window_b") {
+            // NB: checked before "fwd_window_b", which is a prefix of it
+            if let Some(b) = name.strip_prefix("fwd_window_accept_b") {
+                accept_batches
+                    .push(b.parse::<usize>().context("variant batch suffix")?);
+            } else if let Some(b) = name.strip_prefix("fwd_window_b") {
                 window_batches
                     .push(b.parse::<usize>().context("variant batch suffix")?);
             }
@@ -278,23 +465,49 @@ impl ModelRuntime {
         }
         conf_batches.sort_unstable();
         window_batches.sort_unstable();
+        accept_batches.sort_unstable();
         let mut gather_batches: Vec<usize> = gather_raw
-            .into_iter()
+            .iter()
+            .copied()
             .filter(|b| window_batches.contains(b))
             .collect();
         gather_batches.sort_unstable();
+        let mut accept_gather_batches: Vec<usize> = gather_raw
+            .into_iter()
+            .filter(|b| accept_batches.contains(b))
+            .collect();
+        accept_gather_batches.sort_unstable();
         if conf_batches.is_empty() {
             bail!("no fwd_conf_b* variants in model_config.json");
+        }
+        if !accept_batches.is_empty()
+            && (cfg.vocab_size > 0xFFFF || cfg.block_len > 0x7FFF)
+        {
+            // the compact accept payload packs (pos << 16) | token into one
+            // i32 — a geometry the packing cannot represent loses the fused
+            // fast path (every legacy path keeps working); aot.py skips
+            // emitting the variants for such models, so this only fires on
+            // a config/artifact mismatch
+            log::warn!(
+                "fused accept disabled: packing needs vocab_size < 65536 and \
+                 block_len < 32768 (got {} / {})",
+                cfg.vocab_size,
+                cfg.block_len
+            );
+            accept_batches.clear();
+            accept_gather_batches.clear();
         }
         let cache_dims = [cfg.n_layers, cfg.n_heads, cfg.seq_len, cfg.head_dim];
         let pool_cap = 2 * conf_batches.last().copied().unwrap_or(1).max(
             window_batches.last().copied().unwrap_or(1),
         );
         log::info!(
-            "runtime ready: {} weights, {} variants (gather batches {:?}), {:.2}s",
+            "runtime ready: {} weights, {} variants (gather batches {:?}, \
+             accept batches {:?}), {:.2}s",
             weight_bufs.len(),
             executables.len(),
             gather_batches,
+            accept_batches,
             t0.elapsed().as_secs_f64()
         );
         Ok(ModelRuntime {
@@ -305,6 +518,8 @@ impl ModelRuntime {
             conf_batches,
             window_batches,
             gather_batches,
+            accept_batches,
+            accept_gather_batches,
             residency: std::cell::Cell::new(Residency::default()),
             pool: CachePool::new(cache_dims, pool_cap),
             stats: std::cell::Cell::new(RuntimeStats::default()),
@@ -372,6 +587,7 @@ impl ModelRuntime {
                 Entry::FullKv => &mut s.full_kv,
                 Entry::Window => &mut s.window,
                 Entry::Gather => &mut s.gather,
+                Entry::Accept => &mut s.accept,
             })
         });
     }
@@ -730,13 +946,15 @@ impl ModelRuntime {
     }
 
     /// Stage the token/start rows of a window chunk into scratch, padded to
-    /// the compiled batch `b`; returns the uploaded (tokens, starts).
+    /// the compiled batch `b`; returns the uploaded (tokens, starts),
+    /// accounted against entry `e`.
     fn upload_window_rows(
         &self,
         scratch: &mut WindowScratch,
         windows: &[&[u32]],
         starts: &[usize],
         b: usize,
+        e: Entry,
     ) -> Result<(xla::PjRtBuffer, xla::PjRtBuffer)> {
         let w = self.cfg.block_len;
         scratch.tok.clear();
@@ -752,36 +970,23 @@ impl ModelRuntime {
         // padding rows: pad tokens, start 0
         scratch.tok.resize(b * w, self.cfg.pad_id as i32);
         scratch.start.resize(b, 0);
-        let tok_buf = self.upload_i32(Entry::Window, &scratch.tok, &[b, w])?;
-        let start_buf = self.upload_i32(Entry::Window, &scratch.start, &[b])?;
+        let tok_buf = self.upload_i32(e, &scratch.tok, &[b, w])?;
+        let start_buf = self.upload_i32(e, &scratch.start, &[b])?;
         Ok((tok_buf, start_buf))
     }
 
-    /// One stacked window pass over **device-resident** caches
-    /// (n <= the largest compiled gather batch): per-sequence cache buffers
-    /// go into `kv_gather_b{B}` as per-row arguments (padding rows reuse a
-    /// retired pair from the pool, else repeat row 0 — their output rows
-    /// are dropped), and the stacked k/v outputs are donated into
-    /// `fwd_window_b{B}`. The host never touches a K/V byte.
-    fn fwd_window_gathered(
+    /// Stack per-sequence **device** cache buffers into one batched
+    /// (b, L, H, S, Dh) pair via `kv_gather_b{b}` — padding rows reuse a
+    /// retired pool pair (else repeat row 0; their output rows are
+    /// dropped), and the pairs are handed back to the pool on every path.
+    /// The caller donates the stacked pair into the consuming pass.
+    fn gather_stack(
         &self,
-        windows: &[&[u32]],
-        starts: &[usize],
         caches: &[&CacheHandle],
-    ) -> Result<ConfOut> {
-        let n = windows.len();
-        let b = self
-            .gather_batches
-            .iter()
-            .copied()
-            .find(|&b| b >= n)
-            .unwrap_or_else(|| self.gather_batches.last().copied().unwrap_or(1));
-        let w = self.cfg.block_len;
+        b: usize,
+    ) -> Result<(xla::PjRtBuffer, xla::PjRtBuffer)> {
+        let n = caches.len();
         let dims = self.cache_dims();
-        let mut scratch = self.scratch.borrow_mut();
-        let (tok_buf, start_buf) =
-            self.upload_window_rows(&mut scratch, windows, starts, b)?;
-        // per-row cache arguments: k_0..k_{b-1}, v_0..v_{b-1}
         let mut rows: Vec<(&xla::PjRtBuffer, &xla::PjRtBuffer)> = Vec::with_capacity(b);
         for cache in caches {
             if cache.dims() != dims {
@@ -819,7 +1024,75 @@ impl ModelRuntime {
         }
         let [k_stacked, v_stacked]: [xla::PjRtBuffer; 2] = stacked_res?
             .try_into()
-            .map_err(|p: Vec<_>| anyhow::anyhow!("kv_gather output arity {} != 2", p.len()))?;
+            .map_err(|p: Vec<_>| {
+                anyhow::anyhow!("kv_gather output arity {} != 2", p.len())
+            })?;
+        Ok((k_stacked, v_stacked))
+    }
+
+    /// Stage + upload **host** caches as one stacked (b, L, H, S, Dh) pair
+    /// (zero-padded rows), accounted against entry `e` as K/V payload.
+    fn upload_host_kv_stack(
+        &self,
+        scratch: &mut WindowScratch,
+        caches: &[&CacheHandle],
+        b: usize,
+        e: Entry,
+    ) -> Result<(xla::PjRtBuffer, xla::PjRtBuffer)> {
+        let cache_dims = self.cache_dims();
+        let cache_len: usize = cache_dims.iter().product();
+        let WindowScratch { k: flat_k, v: flat_v, .. } = scratch;
+        flat_k.clear();
+        flat_v.clear();
+        flat_k.reserve(b * cache_len);
+        flat_v.reserve(b * cache_len);
+        for cache in caches {
+            if cache.dims() != cache_dims {
+                bail!("cache dims {:?} != {:?}", cache.dims(), cache_dims);
+            }
+            let kv = cache.as_host().expect("stacked path is all-host");
+            flat_k.extend_from_slice(&kv.k);
+            flat_v.extend_from_slice(&kv.v);
+        }
+        // padding rows: zero caches
+        flat_k.resize(b * cache_len, 0.0);
+        flat_v.resize(b * cache_len, 0.0);
+        let stacked = [
+            b,
+            cache_dims[0],
+            cache_dims[1],
+            cache_dims[2],
+            cache_dims[3],
+        ];
+        let k_buf = self.upload_f32(e, flat_k, &stacked, true)?;
+        let v_buf = self.upload_f32(e, flat_v, &stacked, true)?;
+        Ok((k_buf, v_buf))
+    }
+
+    /// One stacked window pass over **device-resident** caches
+    /// (n <= the largest compiled gather batch): per-sequence cache buffers
+    /// are stacked on device by [`ModelRuntime::gather_stack`] and the
+    /// stacked k/v outputs are donated into `fwd_window_b{B}`. The host
+    /// never touches a K/V byte.
+    fn fwd_window_gathered(
+        &self,
+        windows: &[&[u32]],
+        starts: &[usize],
+        caches: &[&CacheHandle],
+    ) -> Result<ConfOut> {
+        let n = windows.len();
+        let b = self
+            .gather_batches
+            .iter()
+            .copied()
+            .find(|&b| b >= n)
+            .unwrap_or_else(|| self.gather_batches.last().copied().unwrap_or(1));
+        let w = self.cfg.block_len;
+        let (tok_buf, start_buf) = {
+            let mut scratch = self.scratch.borrow_mut();
+            self.upload_window_rows(&mut scratch, windows, starts, b, Entry::Window)?
+        };
+        let (k_stacked, v_stacked) = self.gather_stack(caches, b)?;
         // the stacked pair is a per-call temporary: donate it so the window
         // outputs can alias its device memory instead of allocating
         let parts = self.exec(
@@ -853,36 +1126,11 @@ impl ModelRuntime {
             .find(|&b| b >= n)
             .unwrap_or_else(|| self.window_batches.last().copied().unwrap_or(1));
         let w = self.cfg.block_len;
-        let cache_dims = self.cache_dims();
-        let cache_len: usize = cache_dims.iter().product();
         let mut scratch = self.scratch.borrow_mut();
         let (tok_buf, start_buf) =
-            self.upload_window_rows(&mut scratch, windows, starts, b)?;
-        let WindowScratch { k: flat_k, v: flat_v, .. } = &mut *scratch;
-        flat_k.clear();
-        flat_v.clear();
-        flat_k.reserve(b * cache_len);
-        flat_v.reserve(b * cache_len);
-        for cache in caches {
-            if cache.dims() != cache_dims {
-                bail!("cache dims {:?} != {:?}", cache.dims(), cache_dims);
-            }
-            let kv = cache.as_host().expect("stacked path is all-host");
-            flat_k.extend_from_slice(&kv.k);
-            flat_v.extend_from_slice(&kv.v);
-        }
-        // padding rows: zero caches
-        flat_k.resize(b * cache_len, 0.0);
-        flat_v.resize(b * cache_len, 0.0);
-        let stacked = [
-            b,
-            cache_dims[0],
-            cache_dims[1],
-            cache_dims[2],
-            cache_dims[3],
-        ];
-        let k_buf = self.upload_f32(Entry::Window, flat_k, &stacked, true)?;
-        let v_buf = self.upload_f32(Entry::Window, flat_v, &stacked, true)?;
+            self.upload_window_rows(&mut scratch, windows, starts, b, Entry::Window)?;
+        let (k_buf, v_buf) =
+            self.upload_host_kv_stack(&mut scratch, caches, b, Entry::Window)?;
         let parts = self.exec(
             &format!("fwd_window_b{b}"),
             Entry::Window,
@@ -894,6 +1142,356 @@ impl ModelRuntime {
             bail!("fwd_window output arity {} < 2", parts.len());
         }
         self.download_conf(Entry::Window, &parts[0], &parts[1], n, w)
+    }
+
+    /// Fused batched window pass + on-device threshold acceptance
+    /// (DESIGN.md §11): the per-row [`AcceptRule`] and the argmax liveness
+    /// fallback run inside the `fwd_window_accept_b{B}` executables, and
+    /// only compact acceptance crosses the device→host boundary — counts,
+    /// fallback flags, the per-row masked-mean confidence, and
+    /// `ceil(max_count / ACCEPT_CHUNK)` packed-commit chunks. Steady-state
+    /// window steps therefore download O(accepted tokens), never full
+    /// confidence rows. Dispatch mirrors [`ModelRuntime::fwd_window_batch`]
+    /// (gathered device path with donated stacking / stacked host upload /
+    /// exact batch-1 loop, chunked beyond the largest compiled variant);
+    /// artifact sets without accept variants fall back to a full window
+    /// pass reduced by the host reference [`accept_rows`] — identical
+    /// tokens, legacy transfer profile.
+    pub fn fwd_window_accept(
+        &self,
+        windows: &[&[u32]],
+        starts: &[usize],
+        caches: &[&CacheHandle],
+        rules: &[AcceptRule],
+    ) -> Result<AcceptOut> {
+        let n = windows.len();
+        if n != starts.len() || n != caches.len() || n != rules.len() {
+            bail!(
+                "accept batch arity mismatch: {} windows, {} starts, {} caches, \
+                 {} rules",
+                n,
+                starts.len(),
+                caches.len(),
+                rules.len()
+            );
+        }
+        if n == 0 {
+            return Ok(AcceptOut::default());
+        }
+        if !self.accept_batches.is_empty() {
+            let all_device =
+                caches.iter().all(|c| c.residency() == Residency::Device);
+            let all_host = caches.iter().all(|c| c.residency() == Residency::Host);
+            if n > 1 && all_device {
+                let bmax = self.accept_gather_batches.last().copied().unwrap_or(1);
+                if bmax > 1 {
+                    return self.accept_chunks(
+                        windows,
+                        starts,
+                        caches,
+                        rules,
+                        bmax,
+                        Self::fwd_window_accept_gathered,
+                    );
+                }
+            }
+            if n > 1 && all_host {
+                let bmax = self.accept_batches.last().copied().unwrap_or(1);
+                if bmax > 1 {
+                    return self.accept_chunks(
+                        windows,
+                        starts,
+                        caches,
+                        rules,
+                        bmax,
+                        Self::fwd_window_accept_stacked,
+                    );
+                }
+            }
+            if self.accept_batches.contains(&1) {
+                let mut out = AcceptOut::with_capacity(n);
+                for i in 0..n {
+                    out.append(self.fwd_window_accept_one(
+                        windows[i],
+                        starts[i],
+                        caches[i],
+                        rules[i],
+                    )?);
+                }
+                return Ok(out);
+            }
+        }
+        // no compatible accept variant compiled: full window pass + host
+        // reference rule (token-identical, legacy download profile)
+        let out = self.fwd_window_batch(windows, starts, caches)?;
+        Ok(accept_rows(&out, windows, self.cfg.mask_id, rules))
+    }
+
+    /// Split an accept batch into `bmax`-sized chunks through `f`.
+    #[allow(clippy::too_many_arguments)]
+    fn accept_chunks(
+        &self,
+        windows: &[&[u32]],
+        starts: &[usize],
+        caches: &[&CacheHandle],
+        rules: &[AcceptRule],
+        bmax: usize,
+        f: impl Fn(
+            &Self,
+            &[&[u32]],
+            &[usize],
+            &[&CacheHandle],
+            &[AcceptRule],
+        ) -> Result<AcceptOut>,
+    ) -> Result<AcceptOut> {
+        let n = windows.len();
+        if n <= bmax {
+            return f(self, windows, starts, caches, rules);
+        }
+        let mut out = AcceptOut::with_capacity(n);
+        let mut at = 0;
+        while at < n {
+            let end = (at + bmax).min(n);
+            out.append(f(
+                self,
+                &windows[at..end],
+                &starts[at..end],
+                &caches[at..end],
+                &rules[at..end],
+            )?);
+            at = end;
+        }
+        Ok(out)
+    }
+
+    /// Upload the per-row (tau, factor) rule arrays, padded to batch `b`
+    /// with never-accepting `+inf` sentinel rows.
+    fn upload_rules(
+        &self,
+        rules: &[AcceptRule],
+        b: usize,
+    ) -> Result<(xla::PjRtBuffer, xla::PjRtBuffer)> {
+        let mut taus: Vec<f32> = rules.iter().map(|r| r.tau).collect();
+        let mut factors: Vec<f32> = rules.iter().map(|r| r.factor).collect();
+        taus.resize(b, f32::INFINITY);
+        factors.resize(b, f32::INFINITY);
+        let tau_buf = self.upload_f32(Entry::Accept, &taus, &[b], false)?;
+        let factor_buf = self.upload_f32(Entry::Accept, &factors, &[b], false)?;
+        Ok((tau_buf, factor_buf))
+    }
+
+    /// Batch-1 fused pass (`fwd_window_accept_b1`), either cache residency.
+    fn fwd_window_accept_one(
+        &self,
+        window: &[u32],
+        start: usize,
+        cache: &CacheHandle,
+        rule: AcceptRule,
+    ) -> Result<AcceptOut> {
+        let w = self.cfg.block_len;
+        if window.len() != w {
+            bail!("window length {} != {w}", window.len());
+        }
+        let dims = self.cache_dims();
+        if cache.dims() != dims {
+            bail!("cache dims {:?} != {:?}", cache.dims(), dims);
+        }
+        let flat: Vec<i32> = window.iter().map(|&t| t as i32).collect();
+        let tok_buf = self.upload_i32(Entry::Accept, &flat, &[1, w])?;
+        let start_buf = self.upload_i32(Entry::Accept, &[start as i32], &[])?;
+        let (tau_buf, factor_buf) =
+            self.upload_rules(std::slice::from_ref(&rule), 1)?;
+        let parts = match cache.as_device() {
+            Some((k, v)) => self.exec(
+                "fwd_window_accept_b1",
+                Entry::Accept,
+                &[&tok_buf, &start_buf, k, v, &tau_buf, &factor_buf],
+                &[],
+                true,
+            )?,
+            None => {
+                let kv = cache.as_host().expect("host or device");
+                let k_buf = self.upload_f32(Entry::Accept, &kv.k, &dims, true)?;
+                let v_buf = self.upload_f32(Entry::Accept, &kv.v, &dims, true)?;
+                self.exec(
+                    "fwd_window_accept_b1",
+                    Entry::Accept,
+                    &[&tok_buf, &start_buf, &k_buf, &v_buf, &tau_buf, &factor_buf],
+                    &[],
+                    true,
+                )?
+            }
+        };
+        self.download_accept(&parts, 1)
+    }
+
+    /// One fused pass over **device-resident** caches: `kv_gather_b{B}`
+    /// stacking (donated) into `fwd_window_accept_b{B}` — zero host K/V
+    /// traffic *and* zero confidence-row downloads.
+    fn fwd_window_accept_gathered(
+        &self,
+        windows: &[&[u32]],
+        starts: &[usize],
+        caches: &[&CacheHandle],
+        rules: &[AcceptRule],
+    ) -> Result<AcceptOut> {
+        let n = windows.len();
+        let b = self
+            .accept_gather_batches
+            .iter()
+            .copied()
+            .find(|&b| b >= n)
+            .unwrap_or_else(|| {
+                self.accept_gather_batches.last().copied().unwrap_or(1)
+            });
+        let (tok_buf, start_buf) = {
+            let mut scratch = self.scratch.borrow_mut();
+            self.upload_window_rows(&mut scratch, windows, starts, b, Entry::Accept)?
+        };
+        let (tau_buf, factor_buf) = self.upload_rules(rules, b)?;
+        let (k_stacked, v_stacked) = self.gather_stack(caches, b)?;
+        let parts = self.exec(
+            &format!("fwd_window_accept_b{b}"),
+            Entry::Accept,
+            &[&tok_buf, &start_buf, &k_stacked, &v_stacked, &tau_buf, &factor_buf],
+            &[2, 3],
+            true,
+        )?;
+        self.download_accept(&parts, n)
+    }
+
+    /// One fused pass over **host-resident** caches (`--cache-residency
+    /// host` A/B): stacked K/V upload, compact acceptance download.
+    fn fwd_window_accept_stacked(
+        &self,
+        windows: &[&[u32]],
+        starts: &[usize],
+        caches: &[&CacheHandle],
+        rules: &[AcceptRule],
+    ) -> Result<AcceptOut> {
+        let n = windows.len();
+        let b = self
+            .accept_batches
+            .iter()
+            .copied()
+            .find(|&b| b >= n)
+            .unwrap_or_else(|| self.accept_batches.last().copied().unwrap_or(1));
+        let mut scratch = self.scratch.borrow_mut();
+        let (tok_buf, start_buf) =
+            self.upload_window_rows(&mut scratch, windows, starts, b, Entry::Accept)?;
+        let (k_buf, v_buf) =
+            self.upload_host_kv_stack(&mut scratch, caches, b, Entry::Accept)?;
+        let (tau_buf, factor_buf) = self.upload_rules(rules, b)?;
+        let parts = self.exec(
+            &format!("fwd_window_accept_b{b}"),
+            Entry::Accept,
+            &[&tok_buf, &start_buf, &k_buf, &v_buf, &tau_buf, &factor_buf],
+            &[],
+            true,
+        )?;
+        self.download_accept(&parts, n)
+    }
+
+    /// Decode the compact outputs of an accept executable: the three
+    /// per-row scalar vectors always come down; packed-commit chunks are
+    /// downloaded **lazily** — only the first `ceil(max_count / C)` of the
+    /// chunk buffers cross the boundary, the rest stay on device. This is
+    /// what makes per-step D2H O(accepted tokens) rather than O(block).
+    fn download_accept(&self, parts: &[xla::PjRtBuffer], n: usize) -> Result<AcceptOut> {
+        if parts.len() < 4 {
+            bail!("fwd_window_accept output arity {} < 4", parts.len());
+        }
+        let w = self.cfg.block_len;
+        let t0 = Instant::now();
+        let count_lit = parts[0].to_literal_sync().context("fetching accept counts")?;
+        let fb_lit = parts[1].to_literal_sync().context("fetching fallback flags")?;
+        let mean_lit = parts[2].to_literal_sync().context("fetching step means")?;
+        let counts = count_lit.as_slice::<i32>().context("accept count payload")?;
+        let fbs = fb_lit.as_slice::<i32>().context("fallback payload")?;
+        let means = mean_lit.as_slice::<f32>().context("step mean payload")?;
+        if counts.len() < n || fbs.len() < n || means.len() < n {
+            bail!("accept scalar payloads shorter than {n} rows");
+        }
+        let max_count = counts[..n].iter().copied().max().unwrap_or(0);
+        if max_count < 0 || max_count as usize > w {
+            bail!("accept count {max_count} out of range 0..={w}");
+        }
+        let max_count = max_count as usize;
+        // per-chunk geometry from each buffer's own shape — the FINAL
+        // chunk is narrower whenever block_len % ACCEPT_CHUNK != 0, so
+        // every chunk carries its own column width
+        let mut widths = Vec::with_capacity(parts.len() - 3);
+        let mut capacity = 0usize;
+        for p in &parts[3..] {
+            match p.dims() {
+                [rows, cols] if *cols > 0 && *rows >= n => {
+                    widths.push(*cols);
+                    capacity += *cols;
+                }
+                other => {
+                    bail!("accept chunk shape {other:?} unusable for {n} rows")
+                }
+            }
+        }
+        if max_count > capacity {
+            bail!("accept count {max_count} exceeds chunk capacity {capacity}");
+        }
+        // download only the chunk prefix that covers max_count entries
+        let mut need = 0;
+        let mut covered = 0;
+        while covered < max_count {
+            covered += widths[need];
+            need += 1;
+        }
+        let mut chunk_lits = Vec::with_capacity(need);
+        for p in &parts[3..3 + need] {
+            chunk_lits.push(p.to_literal_sync().context("fetching accept chunk")?);
+        }
+        let us = t0.elapsed().as_micros() as u64;
+        let elems = count_lit.element_count()
+            + fb_lit.element_count()
+            + mean_lit.element_count()
+            + chunk_lits.iter().map(xla::Literal::element_count).sum::<usize>();
+        self.bump_entry(Entry::Accept, |s| {
+            s.download_micros += us;
+            s.download_bytes += 4 * elems as u64;
+        });
+        let mut chunk_slices = Vec::with_capacity(need);
+        for l in &chunk_lits {
+            chunk_slices.push(l.as_slice::<i32>().context("accept chunk payload")?);
+        }
+        let mut out = AcceptOut::with_capacity(n);
+        let mut pairs: Vec<(u32, u32)> = Vec::with_capacity(max_count);
+        for r in 0..n {
+            pairs.clear();
+            let c = counts[r].max(0) as usize;
+            let mut e = 0usize;
+            'chunks: for (slice, &cols) in chunk_slices.iter().zip(&widths) {
+                for col in 0..cols {
+                    if e >= c {
+                        break 'chunks;
+                    }
+                    let packed = slice[r * cols + col];
+                    if packed < 0 {
+                        bail!(
+                            "accept chunk entry {e} of row {r} empty below \
+                             count {c}"
+                        );
+                    }
+                    let pos = (packed >> 16) as u32;
+                    if pos as usize >= w {
+                        bail!(
+                            "accepted position {pos} outside the {w}-token window"
+                        );
+                    }
+                    pairs.push((pos, (packed & 0xFFFF) as u32));
+                    e += 1;
+                }
+            }
+            debug_assert_eq!(e, c, "downloaded chunk prefix covers max_count");
+            out.push_row(&pairs, means[r], fbs[r] != 0);
+        }
+        Ok(out)
     }
 
     /// Debug entry: full logits for one sequence, row-major (seq, vocab).
@@ -916,24 +1514,26 @@ impl ModelRuntime {
 
 /// Split (conf f32[B,S], argmax i32[B,S]) literals into a flat row-view
 /// [`ConfOut`], keeping only the first `n` rows (the rest is batch
-/// padding). No per-row allocation — one flat buffer per side.
+/// padding). Exactly one allocation per side — the payloads are borrowed
+/// via [`xla::Literal::as_slice`] and written straight into `ConfOut`'s
+/// flat storage (no intermediate `to_vec` copy).
 fn unpack_conf(parts: &[xla::Literal], n: usize, s: usize) -> Result<ConfOut> {
     if parts.len() < 2 {
         bail!("expected (conf, argmax) outputs, got {}", parts.len());
     }
-    let mut conf_flat = parts[0].to_vec::<f32>().context("conf payload")?;
-    let arg_flat = parts[1].to_vec::<i32>().context("argmax payload")?;
-    if conf_flat.len() < n * s || arg_flat.len() < n * s {
+    let conf_src = parts[0].as_slice::<f32>().context("conf payload")?;
+    let arg_src = parts[1].as_slice::<i32>().context("argmax payload")?;
+    if conf_src.len() < n * s || arg_src.len() < n * s {
         bail!(
             "conf/argmax payload too small: {} / {} < {}",
-            conf_flat.len(),
-            arg_flat.len(),
+            conf_src.len(),
+            arg_src.len(),
             n * s
         );
     }
-    conf_flat.truncate(n * s);
-    let argmax: Vec<u32> = arg_flat[..n * s].iter().map(|&x| x as u32).collect();
-    ConfOut::from_flat(conf_flat, argmax, n, s)
+    let conf = conf_src[..n * s].to_vec();
+    let argmax: Vec<u32> = arg_src[..n * s].iter().map(|&x| x as u32).collect();
+    ConfOut::from_flat(conf, argmax, n, s)
 }
 
 #[cfg(test)]
@@ -1003,9 +1603,119 @@ mod tests {
         s.full_kv.download_bytes = 7;
         s.gather.exec_micros = 3;
         s.window.exec_micros = 4;
+        s.accept.download_bytes = 2;
+        s.accept.exec_micros = 1;
         assert_eq!(s.upload_bytes(), 15);
-        assert_eq!(s.download_bytes(), 7);
-        assert_eq!(s.transfer_bytes(), 22);
-        assert_eq!(s.exec_micros(), 7);
+        assert_eq!(s.download_bytes(), 9);
+        assert_eq!(s.transfer_bytes(), 24);
+        assert_eq!(s.exec_micros(), 8);
+    }
+
+    // ---- fused acceptance: host reference rule ---------------------------
+
+    const MASK: u32 = 1;
+
+    fn conf_out(rows: &[(&[f32], &[u32])]) -> ConfOut {
+        let mut out = ConfOut::new(rows[0].0.len());
+        for (c, a) in rows {
+            out.push_row(c, a);
+        }
+        out
+    }
+
+    #[test]
+    fn accept_rows_threshold_rule() {
+        let window = [MASK, 5, MASK, MASK];
+        let out = conf_out(&[(&[0.95, 0.99, 0.5, 0.91], &[10, 11, 12, 13])]);
+        let res = accept_rows(
+            &out,
+            &[&window],
+            MASK,
+            &[AcceptRule::threshold(0.9)],
+        );
+        // position 1 is committed (not masked) — excluded despite conf 0.99
+        assert_eq!(res.row(0), &[(0, 10), (3, 13)]);
+        assert!(!res.fell_back(0));
+        // masked-mean over positions 0, 2, 3
+        let want = (0.95f64 + 0.5 + 0.91) / 3.0;
+        assert!((f64::from(res.step_mean(0)) - want).abs() < 1e-6);
+    }
+
+    #[test]
+    fn accept_rows_factor_rule_includes_max() {
+        let window = [MASK, MASK, MASK];
+        let out = conf_out(&[(&[0.8, 0.75, 0.1], &[7, 8, 9])]);
+        let res =
+            accept_rows(&out, &[&window], MASK, &[AcceptRule::factor_max(0.9)]);
+        // cmax 0.8 -> cut 0.72: positions 0 and 1
+        assert_eq!(res.row(0), &[(0, 7), (1, 8)]);
+        assert!(!res.fell_back(0));
+    }
+
+    #[test]
+    fn accept_rows_fallback_tie_breaks_low() {
+        // impossible threshold + equal confidences: exactly the lowest
+        // masked index commits (= policy::argmax), flagged as fallback
+        let window = [5, MASK, MASK, MASK];
+        let out = conf_out(&[(&[0.9, 0.5, 0.5, 0.5], &[1, 2, 3, 4])]);
+        let res = accept_rows(
+            &out,
+            &[&window],
+            MASK,
+            &[AcceptRule::threshold(f32::INFINITY)],
+        );
+        assert_eq!(res.row(0), &[(1, 2)]);
+        assert!(res.fell_back(0));
+    }
+
+    #[test]
+    fn accept_rows_empty_masked_set_is_empty() {
+        let window = [5u32, 6, 7];
+        let out = conf_out(&[(&[0.9, 0.9, 0.9], &[1, 2, 3])]);
+        let res = accept_rows(&out, &[&window], MASK, &[AcceptRule::threshold(0.1)]);
+        assert_eq!(res.len(), 1);
+        assert!(res.row(0).is_empty());
+        assert!(!res.fell_back(0));
+    }
+
+    #[test]
+    fn accept_rows_disabled_disjuncts_never_accept() {
+        // a pure-threshold rule must be unaffected by any cmax, and a pure
+        // factor rule by any tau — the +inf sentinels can never accept
+        let window = [MASK, MASK];
+        let out = conf_out(&[(&[0.4, 0.6], &[1, 2])]);
+        let thr = accept_rows(&out, &[&window], MASK, &[AcceptRule::threshold(0.5)]);
+        assert_eq!(thr.row(0), &[(1, 2)]);
+        let fac = accept_rows(&out, &[&window], MASK, &[AcceptRule::factor_max(0.5)]);
+        // cut = 0.3: both
+        assert_eq!(fac.row(0), &[(0, 1), (1, 2)]);
+    }
+
+    #[test]
+    fn accept_out_rows_and_append() {
+        let mut a = AcceptOut::with_capacity(2);
+        a.push_row(&[(0, 5)], 0.5, false);
+        a.push_row(&[], 0.0, false);
+        let mut b = AcceptOut::with_capacity(1);
+        b.push_row(&[(1, 6), (2, 7)], 0.8, true);
+        a.append(b);
+        assert_eq!(a.len(), 3);
+        assert_eq!(a.row(0), &[(0, 5)]);
+        assert!(a.row(1).is_empty());
+        assert_eq!(a.row(2), &[(1, 6), (2, 7)]);
+        assert!(a.fell_back(2));
+        assert!((a.step_mean(2) - 0.8).abs() < 1e-6);
+        assert!(!a.is_empty());
+        assert!(AcceptOut::default().is_empty());
+    }
+
+    #[test]
+    fn accept_rule_constructors_use_inf_sentinels() {
+        let t = AcceptRule::threshold(0.9);
+        assert_eq!(t.tau, 0.9);
+        assert_eq!(t.factor, f32::INFINITY);
+        let f = AcceptRule::factor_max(0.95);
+        assert_eq!(f.tau, f32::INFINITY);
+        assert_eq!(f.factor, 0.95);
     }
 }

@@ -1,0 +1,243 @@
+//! Fused device acceptance (DESIGN.md §11) over the analytic simulator:
+//! the scheduler's fused fast path — policy decision on "device", compact
+//! acceptance back — must be **token-identical** to the host-side
+//! `Policy::select` path for every fusible policy, across seeds and batch
+//! sizes, including the argmax-fallback tie-break on equal confidences.
+
+use osdt::cache::CacheConfig;
+use osdt::decode::{DecodeResult, Engine, ForwardModel, StepScheduler};
+use osdt::policy::{
+    Calibrator, DynamicMode, FactorThreshold, HostTraced, Metric, Osdt,
+    PlanContext, Policy, SequentialTopK, StaticThreshold, StepContext, StepPlan,
+};
+use osdt::runtime::{accept_rows, AcceptRule, ConfOut};
+use osdt::sim::SimModel;
+use osdt::util::prop;
+use osdt::util::rng::Rng;
+
+const MASK: u32 = 1;
+
+/// Build the policy under test; OSDT calibrates on an uncached decode.
+fn policy_for(kind: u64, x: f64, m: &SimModel) -> Box<dyn Policy> {
+    match kind {
+        0 => Box::new(StaticThreshold::new(0.4 + x * 0.55)),
+        1 => Box::new(FactorThreshold::new(0.5 + x * 0.5)),
+        _ => {
+            let engine = Engine::new(m);
+            let cal = engine
+                .decode(m.layout_from_seed(0), &StaticThreshold::new(0.9))
+                .unwrap();
+            let prof = Calibrator::calibrate(&cal.trace, DynamicMode::Block, Metric::Q1);
+            Box::new(Osdt::from_profile(prof, 0.5 + x * 0.5, x * 0.3))
+        }
+    }
+}
+
+#[test]
+fn prop_fused_decode_token_identical_to_host_path() {
+    // policies × seeds × batch sizes: decoding with the fused path (plain
+    // fusible policy) must match the host-decision path (HostTraced
+    // wrapper) token for token, step for step, fallback for fallback
+    prop::forall(
+        "fused-vs-host-token-identity",
+        25,
+        |r: &mut Rng| {
+            (
+                r.next_u64(),
+                r.below(3),
+                r.next_f64(),
+                1 + r.below(4) as usize,
+            )
+        },
+        |&(seed, kind, x, n)| {
+            let m = SimModel::qa_like(seed);
+            let eng = Engine::with_kv_cache(&m);
+            let fused_p = policy_for(kind, x, &m);
+            let layouts: Vec<Vec<u32>> =
+                (0..n).map(|i| m.layout_from_seed(seed ^ i as u64)).collect();
+
+            // host path: HostTraced forces StepPlan::HostFull per row
+            let host: Vec<DecodeResult> = layouts
+                .iter()
+                .map(|l| {
+                    let p = HostTraced(policy_for(kind, x, &m));
+                    eng.decode(l.clone(), &p)
+                })
+                .collect::<Result<_, _>>()
+                .map_err(|e| e.to_string())?;
+
+            // fused path, batched (the serving shape)
+            let refs: Vec<&dyn Policy> =
+                (0..n).map(|_| fused_p.as_ref()).collect();
+            let fused = eng
+                .decode_batch(layouts, &refs)
+                .map_err(|e| e.to_string())?;
+
+            for (i, (f, h)) in fused.iter().zip(&host).enumerate() {
+                if f.tokens != h.tokens {
+                    return Err(format!("seq {i}: tokens diverge"));
+                }
+                if f.steps != h.steps {
+                    return Err(format!(
+                        "seq {i}: {} vs {} steps",
+                        f.steps, h.steps
+                    ));
+                }
+                if f.fallback_steps != h.fallback_steps {
+                    return Err(format!(
+                        "seq {i}: fallback {} vs {}",
+                        f.fallback_steps, h.fallback_steps
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_accept_rule_matches_policy_select_explain() {
+    // the shared host-reference rule (what the device kernels implement)
+    // must reproduce Policy::select_explain exactly on arbitrary rows —
+    // confidences drawn from a coarse grid so exact ties are common and
+    // the lowest-index tie-break is genuinely exercised
+    prop::forall(
+        "accept-rule-vs-select",
+        400,
+        |r: &mut Rng| {
+            let w = 4 + r.below(28) as usize;
+            let window: Vec<u32> = (0..w)
+                .map(|_| if r.below(3) == 0 { 7 } else { MASK })
+                .collect();
+            let conf: Vec<f32> =
+                (0..w).map(|_| r.below(8) as f32 / 8.0 + 0.05).collect();
+            let arg: Vec<u32> = (0..w).map(|_| 4 + r.below(60) as u32).collect();
+            let kind = r.below(2);
+            let x = r.next_f64();
+            (window, conf, arg, kind, x)
+        },
+        |(window, conf, arg, kind, x)| {
+            let policy: Box<dyn Policy> = match *kind {
+                0 => Box::new(StaticThreshold::new(*x)),
+                _ => Box::new(FactorThreshold::new(*x)),
+            };
+            let rule = match policy.plan(&PlanContext { block: 0, step: 0 }) {
+                StepPlan::Threshold { tau } => AcceptRule::threshold(tau),
+                StepPlan::FactorMax { factor } => AcceptRule::factor_max(factor),
+                StepPlan::HostFull => return Err("policy not fusible".into()),
+            };
+            let masked: Vec<usize> = (0..window.len())
+                .filter(|&i| window[i] == MASK)
+                .collect();
+            let local: Vec<f32> = masked.iter().map(|&i| conf[i]).collect();
+            let (sel, fell) = policy.select_explain(&StepContext {
+                block: 0,
+                step: 0,
+                conf: &local,
+            });
+            let want: Vec<(u32, u32)> = sel
+                .iter()
+                .map(|&i| (masked[i] as u32, arg[masked[i]]))
+                .collect();
+
+            let mut out = ConfOut::new(window.len());
+            out.push_row(conf, arg);
+            let got = accept_rows(&out, &[window.as_slice()], MASK, &[rule]);
+            if got.row(0) != want.as_slice() {
+                return Err(format!(
+                    "pairs {:?} != select {:?} (rule {rule:?})",
+                    got.row(0),
+                    want
+                ));
+            }
+            if got.fell_back(0) != fell {
+                return Err(format!(
+                    "fallback {} != {}",
+                    got.fell_back(0),
+                    fell
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn equal_confidence_fallback_picks_lowest_masked_index() {
+    // deterministic tie case: every masked confidence equal, threshold
+    // impossible — both paths must commit exactly the first masked position
+    let window = [7u32, MASK, MASK, MASK];
+    let conf = [0.9f32, 0.25, 0.25, 0.25];
+    let arg = [11u32, 12, 13, 14];
+    let mut out = ConfOut::new(4);
+    out.push_row(&conf, &arg);
+    let got = accept_rows(
+        &out,
+        &[&window],
+        MASK,
+        &[AcceptRule::threshold(f32::INFINITY)],
+    );
+    assert_eq!(got.row(0), &[(1, 12)]);
+    assert!(got.fell_back(0));
+
+    let p = StaticThreshold::new(1.0);
+    let (sel, fell) = p.select_explain(&StepContext {
+        block: 0,
+        step: 0,
+        conf: &[0.25, 0.25, 0.25],
+    });
+    assert_eq!(sel, vec![0], "host fallback ties to the lowest index");
+    assert!(fell);
+}
+
+#[test]
+fn fused_steady_state_covers_every_window_pass() {
+    // with a fusible policy every in-block step takes the fused path; with
+    // a host-full policy none do
+    for (fusible, policy) in [
+        (true, Box::new(StaticThreshold::new(0.9)) as Box<dyn Policy>),
+        (false, Box::new(SequentialTopK::new(2)) as Box<dyn Policy>),
+    ] {
+        let m = SimModel::math_like(31);
+        let mut sched: StepScheduler<'_, SimModel, Box<dyn Policy>> =
+            StepScheduler::new(&m, CacheConfig::block_boundary(), m.max_batch());
+        sched.admit(0, m.layout_from_seed(2), policy).unwrap();
+        let mut window = 0;
+        let mut fused = 0;
+        while !sched.is_idle() {
+            let r = sched.step().unwrap();
+            window += r.window_passes;
+            fused += r.fused_window_passes;
+        }
+        assert!(window > 0, "cached decode must take window steps");
+        if fusible {
+            assert_eq!(fused, window, "every window step must fuse");
+        } else {
+            assert_eq!(fused, 0, "host-full plans must never fuse");
+        }
+    }
+}
+
+#[test]
+fn fused_accept_reports_compact_rows_through_the_model_contract() {
+    // exercise ForwardModel::fwd_window_accept directly (the default
+    // emulation SimModel uses): rows must agree with per-row fwd_window +
+    // the host rule, and empty-mask rows must come back empty
+    let m = SimModel::math_like(12);
+    let cfg = m.config().clone();
+    let layout = m.layout_from_seed(3);
+    let (_, cache) = m.fwd_full_kv(&layout).unwrap();
+    let start = cfg.block_range(0).start;
+    let window: Vec<u32> = layout[cfg.block_range(0)].to_vec();
+    let rules = [AcceptRule::threshold(0.8)];
+    let got = m
+        .fwd_window_accept(&[window.as_slice()], &[start], &[&cache], &rules)
+        .unwrap();
+    let conf = m.fwd_window(&window, start, &cache).unwrap();
+    let want = accept_rows(&conf, &[window.as_slice()], cfg.mask_id, &rules);
+    assert_eq!(got.len(), 1);
+    assert_eq!(got.row(0), want.row(0));
+    assert_eq!(got.fell_back(0), want.fell_back(0));
+    assert!((got.step_mean(0) - want.step_mean(0)).abs() < 1e-6);
+    assert!(!got.row(0).is_empty(), "fully masked block must commit");
+}

@@ -14,7 +14,7 @@
 use osdt::cache::Residency;
 use osdt::decode::Engine;
 use osdt::model::ModelConfig;
-use osdt::policy::{SequentialTopK, StaticThreshold};
+use osdt::policy::{FactorThreshold, HostTraced, SequentialTopK, StaticThreshold};
 use osdt::runtime::ModelRuntime;
 use osdt::tokenizer::Tokenizer;
 use osdt::util::json::Json;
@@ -304,6 +304,109 @@ fn batched_device_decode_zero_kv_uploads_and_identity() {
     let pool = rt.pool().stats();
     assert!(pool.minted_device > 0);
     assert!(pool.reclaimed_device + pool.dropped >= pool.minted_device);
+}
+
+#[test]
+fn fused_accept_zero_conf_row_downloads_and_token_identity() {
+    // The fused-acceptance acceptance test (DESIGN.md §11): with a
+    // fusible policy on the device-residency path, steady-state window
+    // steps perform ZERO full confidence-row downloads — every in-block
+    // decision runs through Entry::Accept, whose per-step D2H is compact —
+    // and the tokens are identical to the host-decision path.
+    let _ = require_artifacts!();
+    let (cfg, rt, tok) = load();
+    if cfg.variant("fwd_window_accept_b1").is_err() {
+        eprintln!("skipping: artifacts predate the fused accept variants");
+        return;
+    }
+    rt.set_residency(Residency::Device);
+    let cached = Engine::with_kv_cache(&rt);
+
+    for (name, fused_p, host_p) in [
+        (
+            "static",
+            Box::new(StaticThreshold::new(0.9)) as Box<dyn osdt::policy::Policy>,
+            Box::new(HostTraced(StaticThreshold::new(0.9)))
+                as Box<dyn osdt::policy::Policy>,
+        ),
+        (
+            "factor",
+            Box::new(FactorThreshold::new(0.95)),
+            Box::new(HostTraced(FactorThreshold::new(0.95))),
+        ),
+    ] {
+        let layout = tok.layout_prompt(&cfg, "Q: 6+3=?").unwrap();
+        let host = cached.decode(layout.clone(), host_p.as_ref()).unwrap();
+        let s0 = rt.stats();
+        let dev = cached.decode(layout, fused_p.as_ref()).unwrap();
+        let s1 = rt.stats();
+
+        assert_eq!(dev.tokens, host.tokens, "{name}: fusion changed tokens");
+        assert_eq!(dev.steps, host.steps, "{name}: fusion changed steps");
+        assert!(dev.window_passes > 0, "{name}: no window steps exercised");
+
+        // zero full confidence-row downloads on window steps: the Window
+        // entry stays completely idle while Accept carries the decode
+        assert_eq!(
+            s1.window.calls, s0.window.calls,
+            "{name}: fused decode ran plain window passes"
+        );
+        assert_eq!(
+            s1.window.download_bytes, s0.window.download_bytes,
+            "{name}: fused decode downloaded confidence rows"
+        );
+        let accept_calls = s1.accept.calls - s0.accept.calls;
+        assert!(accept_calls > 0, "{name}: no fused passes executed");
+
+        // compactness: mean accept D2H per window step must be far below
+        // one full (conf f32 + argmax i32) row pair
+        let accept_dl = s1.accept.download_bytes - s0.accept.download_bytes;
+        let per_step = accept_dl / (dev.window_passes as u64).max(1);
+        let full_rows = 2 * 4 * cfg.block_len as u64;
+        assert!(
+            per_step < full_rows,
+            "{name}: accept D2H {per_step} B/step !< full rows {full_rows} B"
+        );
+        // and zero K/V traffic on top (device residency, PR 3 invariant)
+        assert_eq!(s1.cache_upload_bytes, s0.cache_upload_bytes, "{name}");
+    }
+}
+
+#[test]
+fn fused_batched_decode_matches_solo_with_compact_transfers() {
+    // batched fused decode: kv_gather -> fwd_window_accept_b{B} with the
+    // stacked caches donated; tokens identical to solo fused decode and
+    // the Window entry still never fires
+    let _ = require_artifacts!();
+    let (cfg, rt, tok) = load();
+    if cfg.variant("fwd_window_accept_b2").is_err() {
+        eprintln!("skipping: artifacts predate the batched accept variants");
+        return;
+    }
+    rt.set_residency(Residency::Device);
+    let cached = Engine::with_kv_cache(&rt);
+    let p = StaticThreshold::new(0.9);
+    let layouts: Vec<Vec<u32>> = (0..3)
+        .map(|i| tok.layout_prompt(&cfg, &format!("Q: {i}+4=?")).unwrap())
+        .collect();
+    let solos: Vec<_> = layouts
+        .iter()
+        .map(|l| cached.decode(l.clone(), &p).unwrap())
+        .collect();
+    let s0 = rt.stats();
+    let policies: Vec<&dyn osdt::policy::Policy> = vec![&p, &p, &p];
+    let batched = cached.decode_batch(layouts, &policies).unwrap();
+    let s1 = rt.stats();
+    for (b, s) in batched.iter().zip(&solos) {
+        assert_eq!(b.tokens, s.tokens);
+        assert_eq!(b.steps, s.steps);
+    }
+    assert_eq!(
+        s1.window.calls, s0.window.calls,
+        "batched fused decode must not fall back to plain window passes"
+    );
+    assert!(s1.accept.calls > s0.accept.calls);
+    assert_eq!(s1.cache_upload_bytes, s0.cache_upload_bytes);
 }
 
 #[test]

@@ -155,6 +155,15 @@ impl Literal {
         }
     }
 
+    /// Borrow the flat payload without copying; errors on tuples / type
+    /// mismatch. The zero-copy reader behind `to_vec`/`read_into` —
+    /// runtime unpackers use it to fill their own storage directly instead
+    /// of going through an intermediate `Vec` (multi-output compact
+    /// results make this the hot download path).
+    pub fn as_slice<T: NativeType>(&self) -> Result<&[T]> {
+        self.payload_slice()
+    }
+
     /// Flat host copy of the payload; errors on tuples / type mismatch.
     pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
         self.payload_slice::<T>().map(<[T]>::to_vec)
@@ -307,6 +316,14 @@ mod tests {
         assert_eq!(l.dims(), &[3]);
         assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0]);
         assert!(l.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn literal_as_slice_borrows_without_copy() {
+        let l = Literal::vec1(&[4i32, 5, 6]);
+        assert_eq!(l.as_slice::<i32>().unwrap(), &[4, 5, 6]);
+        assert!(l.as_slice::<f32>().is_err());
+        assert!(Literal::tuple(vec![]).as_slice::<i32>().is_err());
     }
 
     #[test]
