@@ -41,7 +41,13 @@ fn main() -> Result<()> {
     })?);
     let server = Server::start("127.0.0.1:0", coord.clone())?;
     let addr = server.addr;
+    // the same registries the workers mutate, exposed as Prometheus text
+    let metrics = osdt::metrics::http::MetricsServer::start(
+        "127.0.0.1:0",
+        vec![coord.metrics.clone(), coord.registry.metrics().clone()],
+    )?;
     println!("serving on {addr} (2 workers, max batch 4)");
+    println!("metrics on http://{}/metrics", metrics.addr);
 
     // ---- workload: Poisson mixture over the three tasks --------------------
     let datasets = Dataset::load_all(cfg.artifact_dir.join("data"))?;
@@ -105,6 +111,29 @@ fn main() -> Result<()> {
     );
     let mut mc = Client::connect(addr)?;
     println!("\n== server metrics ==\n{}", mc.metrics()?);
+
+    // ---- Prometheus endpoint: scrape it the way a collector would ----------
+    {
+        use std::io::{Read as _, Write as _};
+        let mut s = std::net::TcpStream::connect(metrics.addr)?;
+        write!(s, "GET /metrics HTTP/1.1\r\nHost: e2e\r\n\r\n")?;
+        let mut buf = String::new();
+        s.read_to_string(&mut buf)?;
+        let (head, body) = buf.split_once("\r\n\r\n").unwrap_or((buf.as_str(), ""));
+        let status = head.lines().next().unwrap_or("");
+        println!("\n== GET /metrics -> {status} ==");
+        // print the request-lifecycle families; the full exposition is long
+        for line in body.lines().filter(|l| {
+            l.contains("osdt_requests_")
+                || l.contains("osdt_request_latency_seconds_sum")
+                || l.contains("osdt_request_ttft_seconds_sum")
+                || l.contains("osdt_calibrations_completed_total")
+        }) {
+            println!("{line}");
+        }
+        println!("({} exposition lines total)", body.lines().count());
+    }
+    metrics.stop();
     server.stop();
     match Arc::try_unwrap(coord) {
         Ok(c) => c.shutdown(),

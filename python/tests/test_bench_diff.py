@@ -1,0 +1,158 @@
+"""Unit tests for scripts/bench_diff.py (the CI bench-trajectory gate)."""
+
+import copy
+import importlib.util
+import json
+import pathlib
+
+import pytest
+
+SCRIPT = (
+    pathlib.Path(__file__).resolve().parents[2] / "scripts" / "bench_diff.py"
+)
+spec = importlib.util.spec_from_file_location("bench_diff", SCRIPT)
+bench_diff = importlib.util.module_from_spec(spec)
+spec.loader.exec_module(bench_diff)
+
+
+def make_doc(tps_by_policy, provenance="measured"):
+    return {
+        "bench": "serving_load",
+        "schema": 2,
+        "mode": "smoke",
+        "seed": 7,
+        "provenance": provenance,
+        "rows": [
+            {
+                "policy": policy,
+                "cache": "on",
+                "residency": "sim",
+                "rate": 8.0,
+                "ok": 6,
+                "n": 6,
+                "p50_ms": 40.0,
+                "p95_ms": 90.0,
+                "p99_ms": 120.0,
+                "ttft_p50_ms": 5.0,
+                "ttft_p95_ms": 12.0,
+                "ttft_p99_ms": 15.0,
+                "tok_p50_ms": 1.2,
+                "tok_p95_ms": 2.8,
+                "tok_p99_ms": 3.5,
+                "tokens_per_sec": tps,
+                "bytes_per_token": 64.0,
+                "cache_upload_bytes": 0,
+                "fused_frac": 1.0,
+                "bytes_per_step": 256.0,
+                "occ_mean": 1.5,
+                "occ_peak": 4,
+            }
+            for policy, tps in tps_by_policy.items()
+        ],
+    }
+
+
+def write(tmp_path, name, doc):
+    p = tmp_path / name
+    p.write_text(json.dumps(doc))
+    return str(p)
+
+
+def run(tmp_path, base_doc, cur_doc, extra=()):
+    base = write(tmp_path, "base.json", base_doc)
+    cur = write(tmp_path, "cur.json", cur_doc)
+    return bench_diff.main([base, cur, *extra])
+
+
+def test_identical_runs_pass(tmp_path):
+    doc = make_doc({"osdt": 900.0, "static": 700.0})
+    assert run(tmp_path, doc, copy.deepcopy(doc)) == 0
+
+
+def test_small_drop_within_threshold_passes(tmp_path):
+    base = make_doc({"osdt": 1000.0})
+    cur = make_doc({"osdt": 905.0})  # -9.5%
+    assert run(tmp_path, base, cur) == 0
+
+
+def test_large_drop_fails(tmp_path):
+    base = make_doc({"osdt": 1000.0})
+    cur = make_doc({"osdt": 880.0})  # -12%
+    assert run(tmp_path, base, cur) == 1
+
+
+def test_improvement_passes(tmp_path):
+    base = make_doc({"osdt": 1000.0})
+    cur = make_doc({"osdt": 1500.0})
+    assert run(tmp_path, base, cur) == 0
+
+
+def test_seed_provenance_only_warns(tmp_path):
+    base = make_doc({"osdt": 1000.0}, provenance="seed")
+    cur = make_doc({"osdt": 500.0})  # -50%, but baseline is bootstrap
+    assert run(tmp_path, base, cur) == 0
+
+
+def test_custom_threshold(tmp_path):
+    base = make_doc({"osdt": 1000.0})
+    cur = make_doc({"osdt": 905.0})  # -9.5% fails a 5% gate
+    assert run(tmp_path, base, cur, ["--threshold", "0.05"]) == 1
+
+
+def test_unmatched_rows_are_noted_not_gated(tmp_path):
+    base = make_doc({"osdt": 1000.0, "static": 700.0})
+    cur = make_doc({"osdt": 990.0, "sequential": 100.0})
+    assert run(tmp_path, base, cur) == 0
+
+
+def test_no_common_rows_is_an_error(tmp_path):
+    base = make_doc({"osdt": 1000.0})
+    cur = make_doc({"static": 700.0})
+    with pytest.raises(SystemExit):
+        run(tmp_path, base, cur)
+
+
+def test_schema_mismatch_is_an_error(tmp_path):
+    base = make_doc({"osdt": 1000.0})
+    cur = make_doc({"osdt": 1000.0})
+    cur["schema"] = 1
+    with pytest.raises(SystemExit):
+        run(tmp_path, base, cur)
+
+
+def test_wrong_bench_is_an_error(tmp_path):
+    base = make_doc({"osdt": 1000.0})
+    cur = make_doc({"osdt": 1000.0})
+    cur["bench"] = "table1"
+    with pytest.raises(SystemExit):
+        run(tmp_path, base, cur)
+
+
+def test_committed_snapshot_is_valid_and_warn_only(tmp_path):
+    """The snapshot in bench/trajectory/ must parse, be schema 2, and be
+    marked as bootstrap (warn-only) until CI replaces it with a measured
+    artifact."""
+    snap = SCRIPT.parents[1] / "bench" / "trajectory" / "BENCH_serving.json"
+    doc = json.loads(snap.read_text())
+    assert doc["bench"] == "serving_load"
+    assert doc["schema"] == 2
+    assert doc["provenance"] == "seed"
+    assert doc["mode"] == "smoke"
+    keys = {bench_diff.key(r) for r in doc["rows"]}
+    assert len(keys) == len(doc["rows"]), "duplicate (policy,cache,residency,rate)"
+    for row in doc["rows"]:
+        for f in (
+            "tokens_per_sec",
+            "p50_ms",
+            "p95_ms",
+            "p99_ms",
+            "ttft_p50_ms",
+            "ttft_p95_ms",
+            "ttft_p99_ms",
+            "tok_p50_ms",
+            "tok_p95_ms",
+            "tok_p99_ms",
+        ):
+            assert isinstance(row[f], (int, float)), f"{f} missing in {row}"
+    # diffing the snapshot against itself must pass its own gate
+    assert bench_diff.main([str(snap), str(snap)]) == 0

@@ -9,10 +9,20 @@
 //! fewer bytes per token doing it.
 //!
 //!     cargo bench --bench serving_load [-- --n 24 --rates 1,2,4 --workers 1
-//!         --max-batch 4 --cache-residency both --json BENCH_serving.json]
+//!         --max-batch 4 --cache-residency both --seed 7 --json BENCH_serving.json]
 //!     cargo bench --bench serving_load -- --smoke --json BENCH_serving.json
 //!
-//! Reported per point: p50/p95 latency, tokens/s, bytes transferred per
+//! Arrivals are **open-loop**: a seeded Poisson process (`mixed_trace`,
+//! `--seed`, default 7) fixes each request's arrival instant up front and
+//! the bench submits on schedule regardless of how far the server has
+//! fallen behind — so queueing delay shows up in the latency percentiles
+//! instead of silently throttling the offered load. The same seed always
+//! produces the same trace, which is what makes the committed
+//! `bench/trajectory/` snapshots comparable across PRs.
+//!
+//! Reported per point: p50/p95/p99 end-to-end latency, p50/p95/p99 TTFT
+//! (enqueue to first committed token, from the coordinator's `ttft_ms`),
+//! p50/p95/p99 per-token latency, tokens/s, bytes transferred per
 //! token, per-step K/V upload bytes (must be 0 on the device path), the
 //! fused-pass fraction (window steps whose threshold decision ran on
 //! device, DESIGN.md §11), mean transfer bytes per scheduler step, and
@@ -55,6 +65,16 @@ struct Point {
     n: usize,
     p50_ms: f64,
     p95_ms: f64,
+    p99_ms: f64,
+    /// Time-to-first-token percentiles: enqueue to the first scheduler step
+    /// that commits a token for the sequence (coordinator `ttft_ms`).
+    ttft_p50_ms: f64,
+    ttft_p95_ms: f64,
+    ttft_p99_ms: f64,
+    /// Per-token latency percentiles (end-to-end latency / tokens emitted).
+    tok_p50_ms: f64,
+    tok_p95_ms: f64,
+    tok_p99_ms: f64,
     tokens_per_sec: f64,
     bytes_per_token: f64,
     /// K/V payload bytes uploaded during the timed region — the per-step
@@ -81,6 +101,8 @@ struct PointSpec<'a> {
     n: usize,
     workers: usize,
     max_batch: usize,
+    /// Arrival-trace seed: same seed -> same Poisson trace, bit for bit.
+    seed: u64,
 }
 
 /// Drive one coordinator configuration through the shared arrival trace.
@@ -100,6 +122,7 @@ where
             max_batch: spec.max_batch,
             batch_wait: Duration::from_millis(2),
             cache: spec.cache,
+            ..CoordinatorConfig::default()
         },
         model_cfg.clone(),
         factory,
@@ -119,8 +142,10 @@ where
     let window0 = c0("window_passes");
     let fused0 = c0("fused_window_passes");
 
-    let trace = mixed_trace(datasets, spec.rate, spec.n, 7);
+    let trace = mixed_trace(datasets, spec.rate, spec.n, spec.seed);
     let mut lat = Histogram::latency();
+    let mut ttft = Histogram::latency();
+    let mut tok = Histogram::latency();
     let t0 = Instant::now();
     let mut pending = Vec::new();
     for r in &trace {
@@ -142,11 +167,14 @@ where
     let mut completions = Vec::with_capacity(pending.len());
     for (sent, rx) in pending {
         let resp = rx.recv()?;
+        let e2e_us = sent.elapsed().as_secs_f64() * 1e6;
         if resp.error.is_none() {
             ok += 1;
+            ttft.record(resp.ttft_ms * 1e3);
+            tok.record(e2e_us / model_cfg.gen_len as f64);
         }
         completions.push(resp.completion);
-        lat.record(sent.elapsed().as_secs_f64() * 1e6);
+        lat.record(e2e_us);
     }
     let wall = t0.elapsed().as_secs_f64();
     std::thread::sleep(STATS_SETTLE);
@@ -166,6 +194,13 @@ where
         n: spec.n,
         p50_ms: lat.quantile(0.5) / 1e3,
         p95_ms: lat.quantile(0.95) / 1e3,
+        p99_ms: lat.quantile(0.99) / 1e3,
+        ttft_p50_ms: ttft.quantile(0.5) / 1e3,
+        ttft_p95_ms: ttft.quantile(0.95) / 1e3,
+        ttft_p99_ms: ttft.quantile(0.99) / 1e3,
+        tok_p50_ms: tok.quantile(0.5) / 1e3,
+        tok_p95_ms: tok.quantile(0.95) / 1e3,
+        tok_p99_ms: tok.quantile(0.99) / 1e3,
         tokens_per_sec: (ok * model_cfg.gen_len) as f64 / wall,
         bytes_per_token: transferred as f64 / tokens as f64,
         cache_upload_bytes,
@@ -213,7 +248,7 @@ fn point_rows(points: &[Point]) -> (Vec<Vec<String>>, Vec<Vec<String>>) {
     let mut last_policy = String::new();
     for p in points {
         if !last_policy.is_empty() && p.policy != last_policy {
-            rows.push(vec![String::new(); 11]);
+            rows.push(vec![String::new(); 13]);
         }
         last_policy = p.policy.clone();
         rows.push(vec![
@@ -223,9 +258,11 @@ fn point_rows(points: &[Point]) -> (Vec<Vec<String>>, Vec<Vec<String>>) {
             format!("{}/{}", p.ok, p.n),
             format!("{:.0}", p.p50_ms),
             format!("{:.0}", p.p95_ms),
+            format!("{:.0}", p.p99_ms),
+            format!("{:.0}", p.ttft_p50_ms),
+            format!("{:.0}", p.ttft_p95_ms),
             format!("{:.1}", p.tokens_per_sec),
             format!("{:.0}", p.bytes_per_token),
-            format!("{:.0}%", p.fused_frac * 100.0),
             format!("{:.2}", p.occ_mean),
             format!("{}", p.occ_peak),
         ]);
@@ -236,6 +273,13 @@ fn point_rows(points: &[Point]) -> (Vec<Vec<String>>, Vec<Vec<String>>) {
             format!("{}", p.rate),
             format!("{}", p.p50_ms * 1e3),
             format!("{}", p.p95_ms * 1e3),
+            format!("{}", p.p99_ms * 1e3),
+            format!("{}", p.ttft_p50_ms * 1e3),
+            format!("{}", p.ttft_p95_ms * 1e3),
+            format!("{}", p.ttft_p99_ms * 1e3),
+            format!("{}", p.tok_p50_ms * 1e3),
+            format!("{}", p.tok_p95_ms * 1e3),
+            format!("{}", p.tok_p99_ms * 1e3),
             format!("{}", p.tokens_per_sec),
             format!("{}", p.bytes_per_token),
             format!("{}", p.cache_upload_bytes),
@@ -248,10 +292,19 @@ fn point_rows(points: &[Point]) -> (Vec<Vec<String>>, Vec<Vec<String>>) {
     (rows, csv)
 }
 
-fn points_json(points: &[Point], mode: &str) -> Json {
+/// Schema version of the committed `bench/trajectory/` artifact. Bump it
+/// whenever a row field changes meaning; `scripts/bench_diff.py` refuses to
+/// compare mismatched schemas. v2 added seeded open-loop arrivals plus
+/// p99 / TTFT / per-token percentile fields.
+const BENCH_SCHEMA: f64 = 2.0;
+
+fn points_json(points: &[Point], mode: &str, seed: u64) -> Json {
     Json::obj(vec![
         ("bench", Json::Str("serving_load".into())),
+        ("schema", Json::Num(BENCH_SCHEMA)),
         ("mode", Json::Str(mode.into())),
+        ("seed", Json::Num(seed as f64)),
+        ("provenance", Json::Str("measured".into())),
         (
             "rows",
             Json::Arr(
@@ -267,6 +320,13 @@ fn points_json(points: &[Point], mode: &str) -> Json {
                             ("n", Json::Num(p.n as f64)),
                             ("p50_ms", Json::Num(p.p50_ms)),
                             ("p95_ms", Json::Num(p.p95_ms)),
+                            ("p99_ms", Json::Num(p.p99_ms)),
+                            ("ttft_p50_ms", Json::Num(p.ttft_p50_ms)),
+                            ("ttft_p95_ms", Json::Num(p.ttft_p95_ms)),
+                            ("ttft_p99_ms", Json::Num(p.ttft_p99_ms)),
+                            ("tok_p50_ms", Json::Num(p.tok_p50_ms)),
+                            ("tok_p95_ms", Json::Num(p.tok_p95_ms)),
+                            ("tok_p99_ms", Json::Num(p.tok_p99_ms)),
                             ("tokens_per_sec", Json::Num(p.tokens_per_sec)),
                             ("bytes_per_token", Json::Num(p.bytes_per_token)),
                             (
@@ -307,10 +367,11 @@ fn main() -> Result<()> {
     osdt::util::logging::init();
     let args = Args::parse(
         std::env::args().skip(1).collect::<Vec<_>>(),
-        &["n", "rates", "workers", "max-batch", "cache-residency", "json"],
+        &["n", "rates", "workers", "max-batch", "cache-residency", "seed", "json"],
     )?;
     let smoke = args.has("smoke");
     let n: usize = args.get_parse("n", if smoke { 6 } else { 24 })?;
+    let seed: u64 = args.get_parse("seed", 7u64)?;
     let workers: usize = args.get_parse("workers", 1)?;
     let max_batch: usize = args.get_parse("max-batch", 4)?;
     let rates: Vec<f64> = args
@@ -363,6 +424,7 @@ fn main() -> Result<()> {
                     n,
                     workers,
                     max_batch,
+                    seed,
                 };
                 let p = if smoke {
                     run_point(&spec, &model_cfg, &datasets, |_wid| {
@@ -378,12 +440,15 @@ fn main() -> Result<()> {
                 };
                 eprintln!(
                     "[load] {policy} cache={cache_label}:{} @{rate}rps: \
-                     p50 {:.0}ms p95 {:.0}ms {:.1} tok/s {:.0} B/tok \
+                     p50 {:.0}ms p95 {:.0}ms p99 {:.0}ms ttft p95 {:.0}ms \
+                     {:.1} tok/s {:.0} B/tok \
                      (kv up {} B, fused {:.0}%, {:.0} B/step) occ {:.2} \
                      (peak {})",
                     spec.residency,
                     p.p50_ms,
                     p.p95_ms,
+                    p.p99_ms,
+                    p.ttft_p95_ms,
                     p.tokens_per_sec,
                     p.bytes_per_token,
                     p.cache_upload_bytes,
@@ -408,8 +473,9 @@ fn main() -> Result<()> {
         "{}",
         render_table(
             &[
-                "policy", "cache", "rps", "ok", "p50 ms", "p95 ms", "tokens/s",
-                "B/token", "fused", "occ mean", "occ peak"
+                "policy", "cache", "rps", "ok", "p50 ms", "p95 ms", "p99 ms",
+                "ttft p50", "ttft p95", "tokens/s", "B/token", "occ mean",
+                "occ peak"
             ],
             &rows
         )
@@ -418,6 +484,8 @@ fn main() -> Result<()> {
         "results/serving_load.csv",
         &[
             "policy", "cache", "residency", "rate", "p50_us", "p95_us",
+            "p99_us", "ttft_p50_us", "ttft_p95_us", "ttft_p99_us",
+            "tok_p50_us", "tok_p95_us", "tok_p99_us",
             "tokens_per_sec", "bytes_per_token", "cache_upload_bytes",
             "fused_frac", "bytes_per_step", "occ_mean", "occ_peak",
         ],
@@ -425,7 +493,7 @@ fn main() -> Result<()> {
     )?;
     println!("csv -> results/serving_load.csv");
     if let Some(path) = args.get("json") {
-        let doc = points_json(&points, if smoke { "smoke" } else { "full" });
+        let doc = points_json(&points, if smoke { "smoke" } else { "full" }, seed);
         std::fs::write(path, format!("{doc}\n"))
             .with_context(|| format!("writing {path}"))?;
         println!("json -> {path}");

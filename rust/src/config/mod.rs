@@ -59,6 +59,9 @@ pub struct ServerConfig {
     /// Registry-level EMA refinement rate (0 = pure one-shot, the paper's
     /// setting). CLI: `--ema-alpha`.
     pub ema_alpha: f64,
+    /// Prometheus exposition address (None = endpoint disabled).
+    /// CLI: `--metrics-addr`.
+    pub metrics_addr: Option<String>,
 }
 
 impl Default for ServerConfig {
@@ -72,6 +75,7 @@ impl Default for ServerConfig {
             profile_dir: None,
             drift_floor: registry.drift_floor,
             ema_alpha: registry.ema_alpha,
+            metrics_addr: None,
         }
     }
 }

@@ -32,7 +32,9 @@
 //! `fused_window_passes` pass-mix counters (fused ÷ window = the fraction
 //! of steady-state steps whose decision ran on device, DESIGN.md §11),
 //! and the `accepted_per_step` histogram of tokens committed per sequence
-//! step. `calibrations_deferred` counts local calibrations
+//! step. The `ttft` histogram anchors on the step reports: a sequence's
+//! first step with a non-zero commit count marks its time-to-first-token
+//! (enqueue → that step). `calibrations_deferred` counts local calibrations
 //! parked to protect co-scheduled peers; `calibrations_awaited` counts
 //! requests parked behind a peer's in-flight calibration lease. Workers
 //! with a stats-reporting model (the PJRT runtime) additionally publish
@@ -100,6 +102,10 @@ pub struct Response {
     pub tokens_per_sec: f64,
     /// true iff this request performed the task's calibration run
     pub calibrated: bool,
+    /// enqueue → first committed token, milliseconds. Calibration
+    /// responses report their full decode latency here (the calibration
+    /// decode runs inline, outside the scheduler), an honest upper bound.
+    pub ttft_ms: f64,
     pub error: Option<String>,
 }
 
@@ -114,6 +120,7 @@ impl Response {
             latency_ms: 0.0,
             tokens_per_sec: 0.0,
             calibrated: false,
+            ttft_ms: 0.0,
             error: Some(err.to_string()),
         }
     }
@@ -137,6 +144,11 @@ pub struct CoordinatorConfig {
     /// step boundaries regardless.
     pub batch_wait: Duration,
     pub cache: CacheConfig,
+    /// How long a request parked behind a *peer's* in-flight calibration
+    /// lease waits before stealing it — the liveness bound against a stuck
+    /// or lost calibrator. The chaos tests shrink this to force steal
+    /// churn quickly.
+    pub steal_after: Duration,
 }
 
 impl Default for CoordinatorConfig {
@@ -146,6 +158,7 @@ impl Default for CoordinatorConfig {
             max_batch: 4,
             batch_wait: Duration::from_millis(5),
             cache: CacheConfig::disabled(),
+            steal_after: CALIBRATION_STEAL_MAX,
         }
     }
 }
@@ -443,6 +456,9 @@ struct Inflight {
     /// Set for OSDT requests: the profile key + epoch to observe
     /// (drift/EMA) when the decode retires.
     osdt_key: Option<(ProfileKey, u64)>,
+    /// Filled by the first scheduler step that commits tokens for this
+    /// sequence (enqueue → that step, milliseconds).
+    ttft_ms: Option<f64>,
 }
 
 /// A request parked at admission (calibration in flight, or a local
@@ -542,7 +558,7 @@ fn admit_job<M: ForwardModel>(
         Ok(Resolved::Calibrated(cal)) => {
             // calibration run doubles as this request's decode
             metrics.add("calibrations", 1);
-            let resp = make_response(&job.req, &cal, t0, model_cfg, tok, true);
+            let resp = make_response(&job.req, &cal, t0, model_cfg, tok, true, None);
             record_metrics(metrics, &resp, model_cfg);
             let _ = job.resp.send(resp);
             Admitted::Responded
@@ -560,6 +576,7 @@ fn admit_job<M: ForwardModel>(
                                     job,
                                     admitted: Instant::now(),
                                     osdt_key,
+                                    ttft_ms: None,
                                 },
                             );
                             Admitted::Scheduled
@@ -630,7 +647,7 @@ fn worker_loop<M: ForwardModel>(
         // ---- parked jobs: run any that has become runnable ------------------
         for _ in 0..deferred.len() {
             let p = deferred.pop_front().expect("len checked");
-            let steal = p.since.elapsed() >= CALIBRATION_STEAL_MAX;
+            let steal = p.since.elapsed() >= cfg.steal_after;
             match classify(p.key.as_ref(), registry) {
                 AdmitClass::Plain => admit!(p.job, p.since, false),
                 // local calibration: run once the worker drains, or after
@@ -731,8 +748,19 @@ fn worker_loop<M: ForwardModel>(
                         "fused_window_passes",
                         report.fused_window_passes as u64,
                     );
-                    for &n in &report.accepted {
+                    for &(id, n) in &report.accepted {
                         metrics.observe("accepted_per_step", n as f64);
+                        if n == 0 {
+                            continue;
+                        }
+                        if let Some(inf) = inflight.get_mut(&id) {
+                            if inf.ttft_ms.is_none() {
+                                let ms =
+                                    inf.job.enqueued.elapsed().as_secs_f64() * 1e3;
+                                inf.ttft_ms = Some(ms);
+                                metrics.observe_us("ttft", ms * 1e3);
+                            }
+                        }
                     }
                 }
                 for (id, res) in report.retired {
@@ -745,8 +773,10 @@ fn worker_loop<M: ForwardModel>(
                     if let Some((key, epoch)) = &inf.osdt_key {
                         registry.observe(key, *epoch, &res.trace);
                     }
-                    let resp =
-                        make_response(&inf.job.req, &res, inf.admitted, model_cfg, tok, false);
+                    let resp = make_response(
+                        &inf.job.req, &res, inf.admitted, model_cfg, tok, false,
+                        inf.ttft_ms,
+                    );
                     record_metrics(metrics, &resp, model_cfg);
                     let _ = inf.job.resp.send(resp);
                 }
@@ -761,6 +791,7 @@ fn worker_loop<M: ForwardModel>(
                 // fail them all and restart from an empty scheduler
                 let msg = format!("{e:#}");
                 log::error!("worker {wid}: scheduler step failed: {msg}");
+                metrics.add("scheduler_step_failures", 1);
                 for (_, inf) in inflight.drain() {
                     metrics.add("requests_failed", 1);
                     let _ = inf.job.resp.send(Response::failure(inf.job.req.id, &msg));
@@ -826,6 +857,7 @@ fn make_response(
     cfg: &ModelConfig,
     tok: &Tokenizer,
     calibrated: bool,
+    ttft_ms: Option<f64>,
 ) -> Response {
     let latency = started.elapsed().as_secs_f64();
     Response {
@@ -837,6 +869,9 @@ fn make_response(
         latency_ms: latency * 1e3,
         tokens_per_sec: cfg.gen_len as f64 / latency.max(1e-9),
         calibrated,
+        // calibration decodes run inline, outside the scheduler: their
+        // whole latency stands in for TTFT (an honest upper bound)
+        ttft_ms: ttft_ms.unwrap_or(latency * 1e3),
         error: None,
     }
 }
@@ -1038,6 +1073,7 @@ mod tests {
             max_batch: 4,
             batch_wait: Duration::from_millis(50),
             cache: CacheConfig::block_boundary(),
+            ..CoordinatorConfig::default()
         });
         let mut rxs = Vec::new();
         for i in 0..8 {
@@ -1080,6 +1116,7 @@ mod tests {
             max_batch: 4,
             batch_wait: Duration::from_millis(50),
             cache: CacheConfig::block_boundary(),
+            ..CoordinatorConfig::default()
         });
         let prompts: Vec<String> = (0..4).map(|i| format!("Q: {i}+3=?")).collect();
         let rxs: Vec<_> = prompts

@@ -71,9 +71,11 @@ pub struct StepReport {
     /// The subset of `window_passes` that ran through the fused
     /// `fwd_window_accept` path (device-side decision, compact download).
     pub fused_window_passes: usize,
-    /// Tokens committed per advanced sequence this step, in processing
-    /// order — the serving `accepted_per_step` histogram's raw material.
-    pub accepted: Vec<usize>,
+    /// `(sequence id, tokens committed)` per advanced sequence this step,
+    /// in processing order — the serving `accepted_per_step` histogram's
+    /// raw material, and (via the id) the coordinator's TTFT anchor: a
+    /// sequence's first entry with a non-zero count is its first token.
+    pub accepted: Vec<(u64, usize)>,
 }
 
 /// FIFO continuous-batching scheduler over one forward model.
@@ -229,7 +231,7 @@ impl<'m, M: ForwardModel, P: PolicyRef> StepScheduler<'m, M, P> {
                 out.conf_row(0),
                 out.argmax_row(0),
             );
-            report.accepted.push(n);
+            report.accepted.push((e.id, n));
             report.model_calls += 1;
             report.full_passes += 1;
         }
@@ -259,7 +261,7 @@ impl<'m, M: ForwardModel, P: PolicyRef> StepScheduler<'m, M, P> {
                     out.conf_row(row),
                     out.argmax_row(row),
                 );
-                report.accepted.push(n);
+                report.accepted.push((e.id, n));
             }
             report.model_calls += 1;
             report.full_passes += chunk.len();
@@ -302,7 +304,7 @@ impl<'m, M: ForwardModel, P: PolicyRef> StepScheduler<'m, M, P> {
                     out.conf_row(row),
                     out.argmax_row(row),
                 );
-                report.accepted.push(n);
+                report.accepted.push((e.id, n));
             }
             report.model_calls += 1;
             report.window_passes += chunk.len();
@@ -348,7 +350,7 @@ impl<'m, M: ForwardModel, P: PolicyRef> StepScheduler<'m, M, P> {
                     out.step_mean(row),
                     out.fell_back(row),
                 );
-                report.accepted.push(n);
+                report.accepted.push((e.id, n));
             }
             report.model_calls += 1;
             report.window_passes += chunk.len();
@@ -446,7 +448,10 @@ mod tests {
         assert_eq!(r1.window_passes, 2);
         assert_eq!(r1.fused_window_passes, 1, "only the static row fuses");
         assert_eq!(r1.model_calls, 2, "fused and host groups are separate calls");
-        assert!(r1.accepted.iter().all(|&n| n >= 1), "liveness per row");
+        assert!(r1.accepted.iter().all(|&(_, n)| n >= 1), "liveness per row");
+        let mut ids: Vec<u64> = r1.accepted.iter().map(|&(id, _)| id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![0, 1], "each advanced sequence reports its id");
     }
 
     #[test]

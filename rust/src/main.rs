@@ -34,6 +34,7 @@ const VALUE_FLAGS: &[&str] = &[
     "artifacts", "policy", "task", "prompt", "n", "addr", "workers",
     "max-batch", "batch-wait-ms", "mode", "metric", "profile-dir", "tau",
     "refresh-interval", "save", "drift-floor", "ema-alpha", "cache-residency",
+    "metrics-addr",
 ];
 
 fn main() {
@@ -72,6 +73,7 @@ COMMANDS:
   generate   --prompt 'Q: 3+4=?' [--policy static:0.9] [--cache]
   serve      [--addr 127.0.0.1:7474] [--workers 1] [--max-batch 4] [--cache]
              [--profile-dir DIR] [--drift-floor 0.95] [--ema-alpha 0]
+             [--metrics-addr HOST:PORT]
   eval       --task synth-math [--policy osdt:block:q1:0.75:0.2] [--n 64]
   calibrate  --task synth-math [--mode block] [--metric q1] [--profile-dir profiles]
   traces     --task synth-math [--n 8] [--tau 0.9]
@@ -158,12 +160,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
         profile_dir: args.get("profile-dir").map(std::path::PathBuf::from),
         drift_floor: args.get_parse("drift-floor", defaults.drift_floor)?,
         ema_alpha: args.get_parse("ema-alpha", defaults.ema_alpha)?,
+        metrics_addr: args.get("metrics-addr").map(String::from),
     };
     let ccfg = CoordinatorConfig {
         workers: scfg.workers,
         max_batch: scfg.max_batch,
         batch_wait: std::time::Duration::from_millis(scfg.batch_wait_ms),
         cache: cache_config(args)?,
+        ..CoordinatorConfig::default()
     };
     let rcfg = RegistryConfig {
         drift_floor: scfg.drift_floor,
@@ -194,8 +198,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
             Ok(rt)
         },
     )?);
+    // Prometheus exposition reads the same registries the coordinator and
+    // profile registry mutate — clone the Arcs before `coord` moves into
+    // the TCP server.
+    let metric_sources = vec![coord.metrics.clone(), coord.registry.metrics().clone()];
     let server = Server::start(&scfg.addr, coord)?;
     println!("osdt serving on {}", server.addr);
+    let _metrics = match &scfg.metrics_addr {
+        Some(addr) => {
+            let m = osdt::metrics::http::MetricsServer::start(addr, metric_sources)?;
+            println!("metrics on http://{}/metrics", m.addr);
+            Some(m)
+        }
+        None => None,
+    };
     // serve until killed
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));

@@ -1,0 +1,283 @@
+//! Strict Prometheus text exposition (format 0.0.4) over one or more
+//! [`Registry`] sources.
+//!
+//! This is the wire format behind the standalone HTTP `/metrics` endpoint
+//! ([`super::http::MetricsServer`]). It differs from the legacy
+//! [`Registry::render`] summary in three ways:
+//!
+//! * every family carries `# HELP` / `# TYPE` lines sourced from
+//!   [`super::catalog`];
+//! * units are normalized to Prometheus base units at exposition time —
+//!   internally-microsecond series divide by 1e6 and expose `_seconds`
+//!   names; internal recording is untouched;
+//! * histograms render as cumulative `_bucket{le="..."}` series (via
+//!   [`Histogram::cumulative_le`]) plus `_sum` / `_count`, instead of
+//!   pre-digested quantiles.
+//!
+//! Metrics recorded under a name missing from the catalog still render —
+//! with a derived family name and a help line flagging them — so the
+//! endpoint never hides data; the METRICS.md cross-check test is what
+//! turns an undeclared name into a CI failure.
+
+use std::collections::HashSet;
+use std::fmt::Write as _;
+use std::sync::atomic::Ordering;
+
+use crate::util::stats::Histogram;
+
+use super::{
+    spec_for, MetricKind, Registry, COUNT_BUCKETS, LATENCY_BUCKETS_S,
+};
+
+/// Content-Type for the exposition, per the Prometheus text format spec.
+pub const CONTENT_TYPE: &str = "text/plain; version=0.0.4; charset=utf-8";
+
+const UNDECLARED: &str =
+    "Undeclared metric; add it to metrics::catalog() and METRICS.md.";
+
+/// Shortest clean rendering of a sample value: integral values drop the
+/// trailing `.0` (Prometheus treats `5` and `5.0` identically).
+fn fmt_val(v: f64) -> String {
+    if v == v.trunc() && v.is_finite() && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+fn header(out: &mut String, exposed: &str, kind: MetricKind, help: &str) {
+    let help = help.replace('\\', "\\\\").replace('\n', " ");
+    let _ = writeln!(out, "# HELP {exposed} {help}");
+    let _ = writeln!(out, "# TYPE {exposed} {}", kind.as_str());
+}
+
+fn counter_family(name: &str) -> (String, f64, &'static str) {
+    if let Some(s) = spec_for(name, MetricKind::Counter) {
+        return (s.exposed.to_string(), s.per, s.help);
+    }
+    match name.strip_suffix("_us") {
+        Some(base) => (format!("osdt_{base}_seconds_total"), 1e6, UNDECLARED),
+        None => (format!("osdt_{name}_total"), 1.0, UNDECLARED),
+    }
+}
+
+fn gauge_family(name: &str) -> (String, &'static str) {
+    match spec_for(name, MetricKind::Gauge) {
+        Some(s) => (s.exposed.to_string(), s.help),
+        None => (format!("osdt_{name}"), UNDECLARED),
+    }
+}
+
+fn histogram_family(
+    name: &str,
+    unit: &str,
+) -> (String, f64, &'static [f64], &'static str) {
+    if let Some(s) = spec_for(name, MetricKind::Histogram) {
+        return (s.exposed.to_string(), s.per, s.buckets, s.help);
+    }
+    if unit == "us" {
+        (format!("osdt_{name}_seconds"), 1e6, LATENCY_BUCKETS_S, UNDECLARED)
+    } else {
+        (format!("osdt_{name}"), 1.0, COUNT_BUCKETS, UNDECLARED)
+    }
+}
+
+fn render_histogram(
+    out: &mut String,
+    exposed: &str,
+    per: f64,
+    bounds: &[f64],
+    h: &Histogram,
+) {
+    // `bounds` are in exposed units; the histogram recorded internal units.
+    let internal: Vec<f64> = bounds.iter().map(|b| b * per).collect();
+    let cum = h.cumulative_le(&internal);
+    for (b, c) in bounds.iter().zip(&cum) {
+        let _ = writeln!(out, "{exposed}_bucket{{le=\"{b}\"}} {c}");
+    }
+    let _ = writeln!(out, "{exposed}_bucket{{le=\"+Inf\"}} {}", h.n);
+    let _ = writeln!(out, "{exposed}_sum {}", fmt_val(h.sum / per));
+    let _ = writeln!(out, "{exposed}_count {}", h.n);
+}
+
+/// Render every metric from `sources` as one Prometheus exposition.
+///
+/// The synthetic `osdt_process_uptime_seconds` gauge is emitted once, from
+/// the first source. If two sources carry the same family name the first
+/// wins and later occurrences are skipped — Prometheus rejects duplicate
+/// families, and the serving stack's sources (coordinator + profile
+/// registry + endpoint-local) use disjoint names by construction.
+pub fn render_prometheus(sources: &[&Registry]) -> String {
+    let mut out = String::new();
+    let mut seen: HashSet<String> = HashSet::new();
+
+    if let Some(first) = sources.first() {
+        let spec =
+            spec_for("process_uptime_seconds", MetricKind::Gauge).unwrap();
+        header(&mut out, spec.exposed, spec.kind, spec.help);
+        let _ =
+            writeln!(out, "{} {}", spec.exposed, fmt_val(first.uptime_secs()));
+        seen.insert(spec.exposed.to_string());
+    }
+
+    for src in sources {
+        for (name, c) in src.counters.lock().unwrap().iter() {
+            let (exposed, per, help) = counter_family(name);
+            if !seen.insert(exposed.clone()) {
+                continue;
+            }
+            header(&mut out, &exposed, MetricKind::Counter, help);
+            let v = c.load(Ordering::Relaxed);
+            if per == 1.0 {
+                let _ = writeln!(out, "{exposed} {v}");
+            } else {
+                let _ = writeln!(out, "{exposed} {}", fmt_val(v as f64 / per));
+            }
+        }
+        for (name, g) in src.gauges.lock().unwrap().iter() {
+            let (exposed, help) = gauge_family(name);
+            if !seen.insert(exposed.clone()) {
+                continue;
+            }
+            header(&mut out, &exposed, MetricKind::Gauge, help);
+            let _ = writeln!(out, "{exposed} {}", g.load(Ordering::Relaxed));
+        }
+        for (name, (h, unit)) in src.histograms.lock().unwrap().iter() {
+            let (exposed, per, bounds, help) = histogram_family(name, unit);
+            if !seen.insert(exposed.clone()) {
+                continue;
+            }
+            header(&mut out, &exposed, MetricKind::Histogram, help);
+            render_histogram(&mut out, &exposed, per, bounds, &h.lock().unwrap());
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::catalog;
+
+    /// The satellite bugfix pin: a histogram recorded in microseconds must
+    /// expose seconds, normalized by exact division (2_500_000 us -> 2.5).
+    #[test]
+    fn us_histograms_expose_exact_seconds() {
+        let r = Registry::new();
+        r.observe_us("request_latency", 2_500_000.0);
+        let text = render_prometheus(&[&r]);
+        assert!(
+            text.contains("# TYPE osdt_request_latency_seconds histogram"),
+            "{text}"
+        );
+        assert!(text.contains("osdt_request_latency_seconds_sum 2.5\n"), "{text}");
+        assert!(text.contains("osdt_request_latency_seconds_count 1\n"), "{text}");
+        // 2.5s cannot land at or below the 1s bound, and must be counted
+        // by 5s (log-bucket edges make the exact 2.5 bound resolution-
+        // dependent, so pin the neighbours).
+        assert!(
+            text.contains("osdt_request_latency_seconds_bucket{le=\"1\"} 0"),
+            "{text}"
+        );
+        assert!(
+            text.contains("osdt_request_latency_seconds_bucket{le=\"5\"} 1"),
+            "{text}"
+        );
+        assert!(
+            text.contains("osdt_request_latency_seconds_bucket{le=\"+Inf\"} 1"),
+            "{text}"
+        );
+    }
+
+    #[test]
+    fn us_counters_expose_seconds() {
+        let r = Registry::new();
+        r.add("model_exec_us", 3_250_000);
+        let text = render_prometheus(&[&r]);
+        assert!(text.contains("osdt_model_exec_seconds_total 3.25\n"), "{text}");
+        assert!(!text.contains("model_exec_us"), "{text}");
+    }
+
+    #[test]
+    fn unknown_names_get_derived_families() {
+        let r = Registry::new();
+        r.add("mystery", 3);
+        r.add("mystery_time_us", 2_000_000);
+        r.set_gauge("mystery_depth", -2);
+        r.observe_us("mystery_wait", 1.0);
+        let text = render_prometheus(&[&r]);
+        assert!(text.contains("osdt_mystery_total 3\n"), "{text}");
+        assert!(text.contains("osdt_mystery_time_seconds_total 2\n"), "{text}");
+        assert!(text.contains("osdt_mystery_depth -2\n"), "{text}");
+        assert!(text.contains("# TYPE osdt_mystery_wait_seconds histogram"), "{text}");
+        assert!(text.contains(UNDECLARED), "{text}");
+    }
+
+    #[test]
+    fn batch_occupancy_gauge_and_histogram_are_distinct_families() {
+        let r = Registry::new();
+        r.set_gauge("batch_occupancy", 3);
+        r.observe("batch_occupancy", 3.0);
+        let text = render_prometheus(&[&r]);
+        assert!(text.contains("# TYPE osdt_batch_occupancy gauge"), "{text}");
+        assert!(
+            text.contains("# TYPE osdt_batch_occupancy_per_step histogram"),
+            "{text}"
+        );
+        assert!(
+            text.contains("osdt_batch_occupancy_per_step_bucket{le=\"4\"} 1"),
+            "{text}"
+        );
+    }
+
+    #[test]
+    fn multi_source_emits_each_family_once() {
+        let a = Registry::new();
+        let b = Registry::new();
+        a.add("tokens_generated", 5);
+        b.add("tokens_generated", 7);
+        b.add("profile_hits", 1);
+        let text = render_prometheus(&[&a, &b]);
+        let uptime_lines = text
+            .lines()
+            .filter(|l| l.starts_with("osdt_process_uptime_seconds"))
+            .count();
+        assert_eq!(uptime_lines, 1, "{text}");
+        assert_eq!(
+            text.matches("# TYPE osdt_tokens_generated_total counter").count(),
+            1,
+            "{text}"
+        );
+        assert!(text.contains("osdt_tokens_generated_total 5\n"), "{text}");
+        assert!(!text.contains("osdt_tokens_generated_total 7"), "{text}");
+        assert!(text.contains("osdt_profile_hits_total 1\n"), "{text}");
+    }
+
+    #[test]
+    fn catalog_is_well_formed() {
+        let mut seen = std::collections::HashSet::new();
+        for s in catalog() {
+            assert!(seen.insert(s.exposed), "duplicate family {}", s.exposed);
+            assert!(s.exposed.starts_with("osdt_"), "{}", s.exposed);
+            match s.kind {
+                MetricKind::Counter => {
+                    assert!(s.exposed.ends_with("_total"), "{}", s.exposed)
+                }
+                _ => assert!(!s.exposed.ends_with("_total"), "{}", s.exposed),
+            }
+            if s.kind == MetricKind::Histogram {
+                assert!(!s.buckets.is_empty(), "{}", s.exposed);
+                for w in s.buckets.windows(2) {
+                    assert!(w[1] > w[0], "{} buckets not ascending", s.exposed);
+                }
+            } else {
+                assert!(s.buckets.is_empty(), "{}", s.exposed);
+            }
+            assert!(s.per == 1.0 || s.per == 1e6, "{}", s.exposed);
+            // seconds-normalized families must say so in the name
+            if s.per == 1e6 {
+                assert!(s.exposed.contains("_seconds"), "{}", s.exposed);
+            }
+        }
+    }
+}

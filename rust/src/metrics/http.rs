@@ -1,0 +1,199 @@
+//! Standalone HTTP `/metrics` endpoint serving the strict Prometheus
+//! exposition ([`super::expo`]).
+//!
+//! Deliberately minimal: std::net + threads (same constraints as
+//! `server::Server` — the offline registry has no tokio and no HTTP
+//! crates), answering exactly one request per connection with
+//! `Connection: close`. Prometheus scrapers, `curl`, and load balancer
+//! health checks all speak this subset. Anything that is not
+//! `GET /metrics` gets a 404/405 so misconfigured scrape targets fail
+//! loudly instead of silently graphing nothing.
+//!
+//! The endpoint owns a small registry of its own (scrape counter), merged
+//! into the exposition after the caller-provided sources.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use super::{expo, Registry};
+
+/// A running metrics endpoint; dropping/`stop()` halts the accept loop.
+pub struct MetricsServer {
+    pub addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl MetricsServer {
+    /// Bind `addr` (port 0 for ephemeral) and serve `GET /metrics` over
+    /// `sources` until stopped. Sources render in order; the first one
+    /// also provides process uptime, so pass the coordinator registry
+    /// first.
+    pub fn start(addr: &str, sources: Vec<Arc<Registry>>) -> Result<MetricsServer> {
+        let listener = TcpListener::bind(addr)
+            .with_context(|| format!("binding metrics endpoint {addr}"))?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let own = Arc::new(Registry::new());
+        let handle = std::thread::Builder::new()
+            .name("osdt-metrics-accept".into())
+            .spawn(move || {
+                log::info!("metrics endpoint listening on http://{local}/metrics");
+                while !stop2.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, peer)) => {
+                            log::debug!("metrics scrape from {peer}");
+                            let sources = sources.clone();
+                            let own = own.clone();
+                            let _ = std::thread::Builder::new()
+                                .name("osdt-metrics-conn".into())
+                                .spawn(move || {
+                                    if let Err(e) =
+                                        handle_conn(stream, &sources, &own)
+                                    {
+                                        log::debug!("metrics conn ended: {e:#}");
+                                    }
+                                });
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(std::time::Duration::from_millis(5));
+                        }
+                        Err(e) => {
+                            log::warn!("metrics accept error: {e}");
+                            break;
+                        }
+                    }
+                }
+            })?;
+        Ok(MetricsServer { addr: local, stop, accept_handle: Some(handle) })
+    }
+
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.accept_handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for MetricsServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.accept_handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    sources: &[Arc<Registry>],
+    own: &Arc<Registry>,
+) -> Result<()> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut request_line = String::new();
+    reader.read_line(&mut request_line)?;
+    // Drain headers to the blank line so well-behaved clients aren't cut
+    // off mid-send by our response + close.
+    loop {
+        let mut line = String::new();
+        if reader.read_line(&mut line)? == 0 || line.trim_end().is_empty() {
+            break;
+        }
+    }
+
+    let mut parts = request_line.split_whitespace();
+    let method = parts.next().unwrap_or("");
+    let path = parts.next().unwrap_or("");
+    let path = path.split('?').next().unwrap_or(path);
+
+    let (status, content_type, body) = if method != "GET" {
+        ("405 Method Not Allowed", "text/plain", "only GET is supported\n".to_string())
+    } else if path != "/metrics" {
+        ("404 Not Found", "text/plain", "try /metrics\n".to_string())
+    } else {
+        own.add("metrics_scrapes", 1);
+        let mut refs: Vec<&Registry> =
+            sources.iter().map(Arc::as_ref).collect();
+        refs.push(own);
+        ("200 OK", expo::CONTENT_TYPE, expo::render_prometheus(&refs))
+    };
+
+    let mut w = stream;
+    write!(
+        w,
+        "HTTP/1.1 {status}\r\nContent-Type: {content_type}\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    )?;
+    w.flush()?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn http_get(addr: SocketAddr, target: &str) -> (String, String) {
+        request(addr, &format!("GET {target} HTTP/1.1"))
+    }
+
+    fn request(addr: SocketAddr, request_line: &str) -> (String, String) {
+        let mut s = TcpStream::connect(addr).unwrap();
+        write!(s, "{request_line}\r\nHost: test\r\n\r\n").unwrap();
+        let mut buf = String::new();
+        use std::io::Read;
+        s.read_to_string(&mut buf).unwrap();
+        let (head, body) = buf.split_once("\r\n\r\n").unwrap();
+        (head.to_string(), body.to_string())
+    }
+
+    #[test]
+    fn serves_prometheus_exposition() {
+        let r = Arc::new(Registry::new());
+        r.add("tokens_generated", 9);
+        r.observe_us("request_latency", 50_000.0);
+        let srv = MetricsServer::start("127.0.0.1:0", vec![r]).unwrap();
+
+        let (head, body) = http_get(srv.addr, "/metrics");
+        assert!(head.starts_with("HTTP/1.1 200 OK"), "{head}");
+        assert!(head.contains(expo::CONTENT_TYPE), "{head}");
+        assert!(body.contains("osdt_tokens_generated_total 9\n"), "{body}");
+        assert!(body.contains("# TYPE osdt_request_latency_seconds histogram"), "{body}");
+        assert!(body.contains("osdt_process_uptime_seconds"), "{body}");
+
+        // the endpoint counts its own scrapes; the first scrape's increment
+        // is visible by the second
+        let (_, body) = http_get(srv.addr, "/metrics");
+        assert!(body.contains("osdt_metrics_scrapes_total 2\n"), "{body}");
+        srv.stop();
+    }
+
+    #[test]
+    fn rejects_wrong_path_and_method() {
+        let srv =
+            MetricsServer::start("127.0.0.1:0", vec![Arc::new(Registry::new())])
+                .unwrap();
+        let (head, _) = http_get(srv.addr, "/");
+        assert!(head.starts_with("HTTP/1.1 404"), "{head}");
+        let (head, _) = request(srv.addr, "POST /metrics HTTP/1.1");
+        assert!(head.starts_with("HTTP/1.1 405"), "{head}");
+        srv.stop();
+    }
+
+    #[test]
+    fn query_string_is_ignored() {
+        let srv =
+            MetricsServer::start("127.0.0.1:0", vec![Arc::new(Registry::new())])
+                .unwrap();
+        let (head, _) = http_get(srv.addr, "/metrics?format=prometheus");
+        assert!(head.starts_with("HTTP/1.1 200"), "{head}");
+        srv.stop();
+    }
+}

@@ -1,7 +1,19 @@
-//! Serving metrics substrate: counters, gauges, latency histograms, and a
-//! Prometheus-style text exposition. Shared across coordinator threads via
+//! Serving metrics substrate: counters, gauges, latency histograms, and
+//! two text expositions — the legacy human-oriented summary ([`Registry::
+//! render`], served over the TCP `{"cmd":"metrics"}` command) and the
+//! strict Prometheus format ([`expo`], served by the standalone HTTP
+//! [`http::MetricsServer`]). Shared across coordinator threads via
 //! `Arc<Registry>`; histograms sit behind a mutex (recording is off the
 //! per-token hot path — it happens once per request / per step batch).
+//!
+//! Every metric the serving stack emits is declared in [`catalog`], which
+//! carries its exposed Prometheus name, type, unit normalization, and
+//! operational help text. `METRICS.md` at the repository root documents
+//! the same set; `rust/tests/observability.rs` cross-checks catalog ↔
+//! exposition ↔ document in both directions so none of the three can rot.
+
+pub mod expo;
+pub mod http;
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
@@ -156,6 +168,471 @@ impl Drop for LatencyScope<'_> {
         self.registry
             .observe_us(self.name, self.start.elapsed().as_secs_f64() * 1e6);
     }
+}
+
+// ---------------------------------------------------------------------------
+// Metric catalog
+// ---------------------------------------------------------------------------
+
+/// Metric family kind in the Prometheus exposition.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MetricKind {
+    Counter,
+    Gauge,
+    Histogram,
+}
+
+impl MetricKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            MetricKind::Counter => "counter",
+            MetricKind::Gauge => "gauge",
+            MetricKind::Histogram => "histogram",
+        }
+    }
+}
+
+/// One declared metric: the bridge between an internal registry key and
+/// its strict-Prometheus exposition (name, unit normalization, buckets).
+#[derive(Clone, Copy, Debug)]
+pub struct MetricSpec {
+    /// Internal registry key (what `add` / `observe*` are called with).
+    pub name: &'static str,
+    /// Exposed Prometheus family name (`_total` suffix included for
+    /// counters; base units — seconds, bytes — per Prometheus convention).
+    pub exposed: &'static str,
+    pub kind: MetricKind,
+    /// Divisor applied to recorded values at exposition time (1e6 for
+    /// microsecond series exposed as seconds; 1.0 otherwise). Internal
+    /// recording is never touched — normalization happens on render only.
+    pub per: f64,
+    /// Emitting module (documentation key in METRICS.md).
+    pub module: &'static str,
+    pub help: &'static str,
+    /// Histogram `le` upper bounds, in *exposed* units. Empty for
+    /// counters/gauges.
+    pub buckets: &'static [f64],
+}
+
+/// Request-scale latency bounds in seconds (1ms .. 10s).
+pub const LATENCY_BUCKETS_S: &[f64] = &[
+    0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1, 0.25, 0.5, 1.0, 2.5, 5.0,
+    10.0,
+];
+
+/// Small-count bounds (occupancy, tokens per step).
+pub const COUNT_BUCKETS: &[f64] = &[1.0, 2.0, 4.0, 8.0, 16.0, 32.0];
+
+/// Cosine-similarity bounds, dense near 1.0 where drift decisions live.
+pub const COSINE_BUCKETS: &[f64] =
+    &[0.5, 0.8, 0.9, 0.95, 0.98, 0.99, 0.995, 1.0];
+
+const fn counter(
+    name: &'static str,
+    exposed: &'static str,
+    module: &'static str,
+    help: &'static str,
+) -> MetricSpec {
+    MetricSpec {
+        name,
+        exposed,
+        kind: MetricKind::Counter,
+        per: 1.0,
+        module,
+        help,
+        buckets: &[],
+    }
+}
+
+const fn seconds_counter(
+    name: &'static str,
+    exposed: &'static str,
+    module: &'static str,
+    help: &'static str,
+) -> MetricSpec {
+    MetricSpec {
+        name,
+        exposed,
+        kind: MetricKind::Counter,
+        per: 1e6,
+        module,
+        help,
+        buckets: &[],
+    }
+}
+
+const fn gauge(
+    name: &'static str,
+    exposed: &'static str,
+    module: &'static str,
+    help: &'static str,
+) -> MetricSpec {
+    MetricSpec {
+        name,
+        exposed,
+        kind: MetricKind::Gauge,
+        per: 1.0,
+        module,
+        help,
+        buckets: &[],
+    }
+}
+
+const fn histogram(
+    name: &'static str,
+    exposed: &'static str,
+    per: f64,
+    buckets: &'static [f64],
+    module: &'static str,
+    help: &'static str,
+) -> MetricSpec {
+    MetricSpec {
+        name,
+        exposed,
+        kind: MetricKind::Histogram,
+        per,
+        module,
+        help,
+        buckets,
+    }
+}
+
+/// Every metric the serving stack exports, in exposition order. The
+/// observability test suite asserts this list, the rendered exposition,
+/// and METRICS.md agree.
+pub fn catalog() -> &'static [MetricSpec] {
+    const CATALOG: &[MetricSpec] = &[
+        // -- process (emitted by the HTTP metrics endpoint) ----------------
+        gauge(
+            "process_uptime_seconds",
+            "osdt_process_uptime_seconds",
+            "metrics/http",
+            "Seconds since the primary metrics registry was created.",
+        ),
+        counter(
+            "metrics_scrapes",
+            "osdt_metrics_scrapes_total",
+            "metrics/http",
+            "Successful GET /metrics scrapes served.",
+        ),
+        // -- coordinator request lifecycle ---------------------------------
+        counter(
+            "requests_submitted",
+            "osdt_requests_submitted_total",
+            "coordinator",
+            "Requests accepted into the job queue.",
+        ),
+        counter(
+            "requests_completed",
+            "osdt_requests_completed_total",
+            "coordinator",
+            "Requests answered with a completion.",
+        ),
+        counter(
+            "requests_failed",
+            "osdt_requests_failed_total",
+            "coordinator",
+            "Requests answered with an error (bad policy, oversized \
+             prompt, failed calibration, poisoned scheduler step).",
+        ),
+        counter(
+            "tokens_generated",
+            "osdt_tokens_generated_total",
+            "coordinator",
+            "Generated-region tokens committed across completed requests.",
+        ),
+        counter(
+            "decode_steps",
+            "osdt_decode_steps_total",
+            "coordinator",
+            "Policy decision steps summed over completed requests.",
+        ),
+        // -- calibration lifecycle (worker-local view) ---------------------
+        counter(
+            "calibrations",
+            "osdt_calibrations_total",
+            "coordinator",
+            "Phase-1 calibration decodes run by this coordinator's workers.",
+        ),
+        counter(
+            "calibrations_deferred",
+            "osdt_calibrations_deferred_total",
+            "coordinator",
+            "Local calibrations parked to protect co-scheduled peers.",
+        ),
+        counter(
+            "calibrations_awaited",
+            "osdt_calibrations_awaited_total",
+            "coordinator",
+            "Requests parked behind a peer's in-flight calibration lease.",
+        ),
+        // -- scheduler -----------------------------------------------------
+        counter(
+            "scheduler_steps",
+            "osdt_scheduler_steps_total",
+            "coordinator",
+            "Continuous-batching scheduler steps executed.",
+        ),
+        counter(
+            "scheduled_seq_steps",
+            "osdt_scheduled_seq_steps_total",
+            "coordinator",
+            "Per-sequence steps summed over scheduler steps; divided by \
+             osdt_scheduler_steps_total this is the mean batch occupancy.",
+        ),
+        counter(
+            "scheduler_step_failures",
+            "osdt_scheduler_step_failures_total",
+            "coordinator",
+            "Scheduler steps that failed (a forward pass errored); every \
+             in-flight sequence on the worker is failed and the scheduler \
+             is rebuilt.",
+        ),
+        counter(
+            "full_passes",
+            "osdt_full_passes_total",
+            "coordinator",
+            "Per-sequence full forward passes (fwd_conf rows + fwd_full_kv).",
+        ),
+        counter(
+            "window_passes",
+            "osdt_window_passes_total",
+            "coordinator",
+            "Per-sequence in-block window passes (fused + host rows).",
+        ),
+        counter(
+            "fused_window_passes",
+            "osdt_fused_window_passes_total",
+            "coordinator",
+            "Window passes whose acceptance decision ran on device \
+             (DESIGN.md \u{a7}11); divided by osdt_window_passes_total this \
+             is the fused-pass fraction.",
+        ),
+        // -- transfer ledger (workers with a stats-reporting runtime) ------
+        seconds_counter(
+            "model_exec_us",
+            "osdt_model_exec_seconds_total",
+            "coordinator",
+            "Cumulative device execution time reported by the runtime.",
+        ),
+        seconds_counter(
+            "model_transfer_us",
+            "osdt_model_transfer_seconds_total",
+            "coordinator",
+            "Cumulative host\u{2194}device transfer time reported by the \
+             runtime.",
+        ),
+        counter(
+            "bytes_uploaded",
+            "osdt_uploaded_bytes_total",
+            "coordinator",
+            "Host\u{2192}device bytes uploaded by worker runtimes.",
+        ),
+        counter(
+            "bytes_downloaded",
+            "osdt_downloaded_bytes_total",
+            "coordinator",
+            "Device\u{2192}host bytes downloaded by worker runtimes.",
+        ),
+        counter(
+            "cache_bytes_uploaded",
+            "osdt_cache_uploaded_bytes_total",
+            "coordinator",
+            "K/V-cache share of uploaded bytes; pinned at 0 on the \
+             device-resident cache path (DESIGN.md \u{a7}10).",
+        ),
+        counter(
+            "cache_bytes_downloaded",
+            "osdt_cache_downloaded_bytes_total",
+            "coordinator",
+            "K/V-cache share of downloaded bytes.",
+        ),
+        // -- gauges --------------------------------------------------------
+        gauge(
+            "queue_depth",
+            "osdt_queue_depth",
+            "coordinator",
+            "Jobs waiting in the coordinator queue right now.",
+        ),
+        gauge(
+            "batch_occupancy",
+            "osdt_batch_occupancy",
+            "coordinator",
+            "Sequences sharing the most recent scheduler step (0 when a \
+             worker drains).",
+        ),
+        gauge(
+            "batch_occupancy_peak",
+            "osdt_batch_occupancy_peak",
+            "coordinator",
+            "High-water batch occupancy since start.",
+        ),
+        // -- histograms ----------------------------------------------------
+        histogram(
+            "batch_occupancy",
+            "osdt_batch_occupancy_per_step",
+            1.0,
+            COUNT_BUCKETS,
+            "coordinator",
+            "Distribution of batch occupancy over scheduler steps.",
+        ),
+        histogram(
+            "accepted_per_step",
+            "osdt_accepted_tokens_per_step",
+            1.0,
+            COUNT_BUCKETS,
+            "coordinator",
+            "Tokens committed per advanced sequence per step — the \
+             parallelism each policy actually buys.",
+        ),
+        histogram(
+            "request_latency",
+            "osdt_request_latency_seconds",
+            1e6,
+            LATENCY_BUCKETS_S,
+            "coordinator",
+            "Scheduler admission \u{2192} response, per completed request.",
+        ),
+        histogram(
+            "admission_wait",
+            "osdt_admission_wait_seconds",
+            1e6,
+            LATENCY_BUCKETS_S,
+            "coordinator",
+            "Enqueue \u{2192} scheduler admission, per request.",
+        ),
+        histogram(
+            "ttft",
+            "osdt_request_ttft_seconds",
+            1e6,
+            LATENCY_BUCKETS_S,
+            "coordinator",
+            "Time to first committed token: enqueue \u{2192} first \
+             scheduler step that committed tokens for the request. \
+             Calibration responses report their full decode latency (the \
+             decode runs inline, outside the scheduler).",
+        ),
+        // -- profile registry (fleet-wide) ---------------------------------
+        counter(
+            "profile_hits",
+            "osdt_profile_hits_total",
+            "policy/registry",
+            "Acquires resolved from a fresh calibrated profile.",
+        ),
+        counter(
+            "profile_misses",
+            "osdt_profile_misses_total",
+            "policy/registry",
+            "Acquires that found no profile and took the calibration lease.",
+        ),
+        counter(
+            "profile_waits",
+            "osdt_profile_waits_total",
+            "policy/registry",
+            "Acquires told to wait on a peer's in-flight calibration.",
+        ),
+        counter(
+            "profile_stale_serves",
+            "osdt_profile_stale_serves_total",
+            "policy/registry",
+            "Acquires served from a stale profile while its recalibration \
+             is in flight (drift never stops the fleet).",
+        ),
+        counter(
+            "profile_warm_starts",
+            "osdt_profile_warm_starts_total",
+            "policy/registry",
+            "Profiles loaded from the on-disk store at construction.",
+        ),
+        counter(
+            "profile_invalidations",
+            "osdt_profile_invalidations_total",
+            "policy/registry",
+            "Profiles marked stale by the admin invalidate command.",
+        ),
+        counter(
+            "profile_persist_errors",
+            "osdt_profile_persist_errors_total",
+            "policy/registry",
+            "Failed profile writes to the on-disk store (serving continues \
+             from memory).",
+        ),
+        counter(
+            "profile_ema_updates",
+            "osdt_profile_ema_updates_total",
+            "policy/registry",
+            "EMA threshold refinements folded in from observed decodes.",
+        ),
+        counter(
+            "leases_granted",
+            "osdt_leases_granted_total",
+            "policy/registry",
+            "Calibration leases handed out (first acquire per key, plus \
+             recalibrations).",
+        ),
+        counter(
+            "leases_abandoned",
+            "osdt_leases_abandoned_total",
+            "policy/registry",
+            "Leases dropped unfulfilled (failed or crashed calibration); \
+             the key is released for a peer to retry.",
+        ),
+        counter(
+            "leases_superseded",
+            "osdt_leases_superseded_total",
+            "policy/registry",
+            "Stale lease resolutions that arrived after the lease had been \
+             stolen; ignored so they cannot re-open single-flight.",
+        ),
+        counter(
+            "lease_takeovers",
+            "osdt_lease_takeovers_total",
+            "policy/registry",
+            "Leases stolen from a holder outstanding past the caller's \
+             patience (the liveness escape hatch).",
+        ),
+        counter(
+            "calibrations_completed",
+            "osdt_calibrations_completed_total",
+            "policy/registry",
+            "Fulfilled calibration leases, fleet-wide.",
+        ),
+        counter(
+            "recalibrations",
+            "osdt_recalibrations_total",
+            "policy/registry",
+            "Fulfilled leases that replaced an existing profile.",
+        ),
+        counter(
+            "drift_events",
+            "osdt_drift_events_total",
+            "policy/registry",
+            "Profiles marked stale because an observed decode's signature \
+             cosine fell below the drift floor.",
+        ),
+        counter(
+            "observations_superseded",
+            "osdt_observations_superseded_total",
+            "policy/registry",
+            "Decode observations dropped because the profile was \
+             recalibrated while the decode was in flight.",
+        ),
+        histogram(
+            "profile_signature_cosine",
+            "osdt_profile_signature_cosine",
+            1.0,
+            COSINE_BUCKETS,
+            "policy/registry",
+            "Cosine similarity of each observed decode's confidence \
+             signature against the profile's drift reference.",
+        ),
+    ];
+    CATALOG
+}
+
+/// Catalog entry for an internal name + kind, if declared.
+pub fn spec_for(name: &str, kind: MetricKind) -> Option<&'static MetricSpec> {
+    catalog().iter().find(|s| s.name == name && s.kind == kind)
 }
 
 #[cfg(test)]

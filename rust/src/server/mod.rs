@@ -52,6 +52,7 @@ pub fn response_to_json(r: &Response) -> Json {
         ("full_passes", Json::Num(r.full_passes as f64)),
         ("window_passes", Json::Num(r.window_passes as f64)),
         ("latency_ms", Json::Num(r.latency_ms)),
+        ("ttft_ms", Json::Num(r.ttft_ms)),
         ("tokens_per_sec", Json::Num(r.tokens_per_sec)),
         ("calibrated", Json::Bool(r.calibrated)),
     ];
@@ -81,6 +82,8 @@ pub fn response_from_json(j: &Json) -> Result<Response> {
         full_passes: num("full_passes")? as usize,
         window_passes: num("window_passes")? as usize,
         latency_ms: num("latency_ms")?,
+        // optional on the wire so newer clients parse older servers
+        ttft_ms: j.get("ttft_ms").and_then(Json::as_f64).unwrap_or(0.0),
         tokens_per_sec: num("tokens_per_sec")?,
         calibrated: j
             .get("calibrated")
@@ -550,6 +553,7 @@ mod tests {
             latency_ms: 41.5,
             tokens_per_sec: 2314.0,
             calibrated: true,
+            ttft_ms: 8.25,
             error: None,
         };
         let back = response_from_json(&response_to_json(&r)).unwrap();
@@ -557,6 +561,13 @@ mod tests {
         assert_eq!(back.completion, r.completion);
         assert_eq!(back.steps, 12);
         assert!(back.calibrated);
+        assert_eq!(back.ttft_ms, 8.25);
         assert!(back.error.is_none());
+        // older servers omit ttft_ms: the client defaults it to 0
+        let mut j = response_to_json(&r);
+        if let Json::Obj(m) = &mut j {
+            m.remove("ttft_ms");
+        }
+        assert_eq!(response_from_json(&j).unwrap().ttft_ms, 0.0);
     }
 }

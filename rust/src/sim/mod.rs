@@ -6,13 +6,68 @@
 //! Used by unit/property tests of the decode engine and policies (no
 //! artifacts needed) and by the policy-only benches, where thousands of
 //! decodes per second matter. The real-model benches use the PJRT runtime.
+//!
+//! For resilience testing the model carries an optional [`Chaos`] hook
+//! ([`SimModel::with_chaos`]): an atomic fail-budget that makes the next N
+//! forward passes error, from any entry point — which is how
+//! `rust/tests/chaos.rs` kills workers mid-decode and crashes calibrations
+//! mid-lease without touching scheduler or coordinator internals.
 
-use anyhow::Result;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
 
 use crate::cache::{CacheHandle, CachePool};
 use crate::decode::ForwardModel;
 use crate::model::{fixtures::tiny_config, ModelConfig};
 use crate::runtime::ConfOut;
+
+/// Fault-injection hook shared between a test and the [`SimModel`]s it
+/// built (clones of a model share the same hook). Arm it with
+/// [`Chaos::fail_next`]; the next `n` forward passes — full, full-KV, or
+/// window, across every clone — return an error instead of confidences.
+#[derive(Debug, Default)]
+pub struct Chaos {
+    fail_budget: AtomicU64,
+    injected: AtomicU64,
+}
+
+impl Chaos {
+    pub fn new() -> Arc<Self> {
+        Arc::new(Chaos::default())
+    }
+
+    /// Arm the hook: the next `n` forward passes fail.
+    pub fn fail_next(&self, n: u64) {
+        self.fail_budget.store(n, Ordering::SeqCst);
+    }
+
+    /// How many failures have actually been injected so far.
+    pub fn injected(&self) -> u64 {
+        self.injected.load(Ordering::SeqCst)
+    }
+
+    /// Decrement-if-positive on the budget; true means "fail this pass".
+    fn should_fail(&self) -> bool {
+        let mut cur = self.fail_budget.load(Ordering::SeqCst);
+        while cur > 0 {
+            match self.fail_budget.compare_exchange(
+                cur,
+                cur - 1,
+                Ordering::SeqCst,
+                Ordering::SeqCst,
+            ) {
+                Ok(_) => {
+                    self.injected.fetch_add(1, Ordering::SeqCst);
+                    return true;
+                }
+                Err(seen) => cur = seen,
+            }
+        }
+        false
+    }
+}
 
 /// Task-level confidence signature parameters.
 #[derive(Clone, Copy, Debug)]
@@ -38,6 +93,7 @@ pub struct SimModel {
     task: SimTask,
     seed: u64,
     pool: CachePool,
+    chaos: Option<Arc<Chaos>>,
 }
 
 fn hash2(a: u64, b: u64) -> u64 {
@@ -55,7 +111,23 @@ impl SimModel {
         let cfg = tiny_config();
         let dims = [cfg.n_layers, cfg.n_heads, cfg.seq_len, cfg.head_dim];
         // clones share the pool (it is the model's recycler, not state)
-        SimModel { cfg, task, seed, pool: CachePool::new(dims, 8) }
+        SimModel { cfg, task, seed, pool: CachePool::new(dims, 8), chaos: None }
+    }
+
+    /// Attach a fault-injection hook; see [`Chaos`].
+    pub fn with_chaos(mut self, chaos: Arc<Chaos>) -> Self {
+        self.chaos = Some(chaos);
+        self
+    }
+
+    /// Fail this pass if the chaos hook is armed.
+    fn trip(&self) -> Result<()> {
+        if let Some(c) = &self.chaos {
+            if c.should_fail() {
+                bail!("chaos: injected forward failure");
+            }
+        }
+        Ok(())
     }
 
     /// The cache-storage recycler backing this model's handles.
@@ -171,6 +243,7 @@ impl ForwardModel for SimModel {
     }
 
     fn fwd_conf(&self, batch_tokens: &[&[u32]]) -> Result<ConfOut> {
+        self.trip()?;
         let mut out = ConfOut::with_capacity(self.cfg.seq_len, batch_tokens.len());
         for seq in batch_tokens {
             let (c, a) = self.score(seq, 0);
@@ -180,6 +253,7 @@ impl ForwardModel for SimModel {
     }
 
     fn fwd_full_kv(&self, tokens: &[u32]) -> Result<(ConfOut, CacheHandle)> {
+        self.trip()?;
         let (c, a) = self.score(tokens, 0);
         let mut out = ConfOut::with_capacity(self.cfg.seq_len, 1);
         out.push_row(&c, &a);
@@ -199,6 +273,7 @@ impl ForwardModel for SimModel {
         start: usize,
         _cache: &CacheHandle,
     ) -> Result<ConfOut> {
+        self.trip()?;
         let (c, a) = self.score(window, start);
         let mut out = ConfOut::with_capacity(window.len(), 1);
         out.push_row(&c, &a);
@@ -221,6 +296,19 @@ mod tests {
         let b = m.fwd_conf(&[l.as_slice()]).unwrap();
         assert_eq!(a.conf_row(0), b.conf_row(0));
         assert_eq!(a.argmax_row(0), b.argmax_row(0));
+    }
+
+    #[test]
+    fn chaos_fails_exactly_the_budget() {
+        let chaos = Chaos::new();
+        let m = SimModel::math_like(2).with_chaos(chaos.clone());
+        let l = m.layout_from_seed(0);
+        assert!(m.fwd_conf(&[l.as_slice()]).is_ok(), "unarmed hook is inert");
+        chaos.fail_next(2);
+        assert!(m.fwd_conf(&[l.as_slice()]).is_err());
+        assert!(m.fwd_full_kv(&l).is_err());
+        assert!(m.fwd_conf(&[l.as_slice()]).is_ok(), "budget exhausted");
+        assert_eq!(chaos.injected(), 2);
     }
 
     #[test]

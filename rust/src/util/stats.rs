@@ -159,6 +159,38 @@ impl Histogram {
         self.max
     }
 
+    /// Cumulative counts at fixed ascending upper bounds — the raw
+    /// material of a Prometheus `_bucket{le=...}` series. Each internal
+    /// log bucket is attributed to the first bound at or above its upper
+    /// edge; observations above the last bound land only in the implicit
+    /// `+Inf` bucket (which is `self.n`, rendered by the caller). The
+    /// result is monotone non-decreasing by construction.
+    pub fn cumulative_le(&self, bounds: &[f64]) -> Vec<u64> {
+        let mut out = vec![0u64; bounds.len()];
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            // bucket 0 is the underflow [0, lo); bucket i >= 1 covers
+            // [lo·g^(i-1), lo·g^i); the last bucket is the overflow
+            let upper = if i + 1 == self.counts.len() {
+                f64::INFINITY
+            } else {
+                self.lo * self.growth.powi(i as i32)
+            };
+            for (j, &b) in bounds.iter().enumerate() {
+                if upper <= b * (1.0 + 1e-9) {
+                    out[j] += c;
+                    break;
+                }
+            }
+        }
+        for j in 1..out.len() {
+            out[j] += out[j - 1];
+        }
+        out
+    }
+
     pub fn merge(&mut self, other: &Histogram) {
         assert_eq!(self.counts.len(), other.counts.len());
         for (a, b) in self.counts.iter_mut().zip(&other.counts) {
@@ -255,6 +287,37 @@ mod tests {
         assert_eq!(h.n, 2);
         assert!(h.quantile(0.01) >= 1.0);
         assert!(h.quantile(0.99) <= 1e9);
+    }
+
+    #[test]
+    fn cumulative_le_buckets() {
+        // growth 10: buckets [0,1), [1,10), [10,100), [100,1000), overflow
+        let mut h = Histogram::new(1.0, 1000.0, 3);
+        h.record(5.0); // [1,10), upper edge 10
+        h.record(0.5); // underflow, upper edge 1
+        h.record(5e6); // overflow, upper edge +inf
+        let cum = h.cumulative_le(&[10.0, 1000.0]);
+        assert_eq!(cum, vec![2, 2], "overflow only reaches +Inf");
+        assert_eq!(h.n, 3);
+        // monotone even with interleaved empty bounds
+        let cum = h.cumulative_le(&[0.1, 1.0, 10.0, 1e9]);
+        assert_eq!(cum, vec![0, 1, 2, 2]);
+        // no bounds -> empty
+        assert!(h.cumulative_le(&[]).is_empty());
+    }
+
+    #[test]
+    fn cumulative_le_is_monotone_under_load() {
+        let mut h = Histogram::latency();
+        for i in 1..=5000u64 {
+            h.record(i as f64 * 37.0);
+        }
+        let bounds = [100.0, 1000.0, 10_000.0, 100_000.0, 1e6];
+        let cum = h.cumulative_le(&bounds);
+        for w in cum.windows(2) {
+            assert!(w[1] >= w[0], "{cum:?}");
+        }
+        assert!(*cum.last().unwrap() <= h.n);
     }
 
     #[test]

@@ -1,0 +1,182 @@
+//! Fault-injection harness: the serving stack under injected failures.
+//!
+//! Three scenarios, each asserting the DESIGN.md §9 single-flight and
+//! liveness invariants hold *and* that the failure shows up in a dedicated
+//! metric (the observability half of the contract — an operator watching
+//! `/metrics` must see every one of these):
+//!
+//! 1. a worker's forward pass dies mid-decode (scheduler step failure);
+//! 2. a calibration decode crashes while holding the fleet lease;
+//! 3. a calibration lease goes stuck and peers steal it (takeover churn).
+//!
+//! Failures are injected through [`osdt::sim::Chaos`] — an atomic
+//! fail-budget on the simulator's forward passes — so scheduler and
+//! coordinator internals are exercised exactly as a real backend error
+//! would exercise them.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use osdt::cache::CacheConfig;
+use osdt::coordinator::{Coordinator, CoordinatorConfig, Request};
+use osdt::model::fixtures::tiny_config;
+use osdt::policy::{Acquired, DynamicMode, Metric, ProfileKey};
+use osdt::sim::{Chaos, SimModel};
+
+const OSDT_SPEC: &str = "osdt:block:q1:0.75:0.2";
+
+fn key() -> ProfileKey {
+    ProfileKey::new("synth-math", DynamicMode::Block, Metric::Q1)
+}
+
+fn chaos_coordinator(cfg: CoordinatorConfig) -> (Coordinator, Arc<Chaos>) {
+    let chaos = Chaos::new();
+    let model = SimModel::math_like(5).with_chaos(chaos.clone());
+    let c = Coordinator::start(cfg, tiny_config(), move |_wid| Ok(model.clone()))
+        .unwrap();
+    (c, chaos)
+}
+
+#[test]
+fn worker_killed_mid_decode_fails_fast_and_recovers() {
+    let (c, chaos) = chaos_coordinator(CoordinatorConfig::default());
+
+    // the next forward pass dies: the scheduler step is poisoned, the
+    // request is failed, and the worker rebuilds its scheduler
+    chaos.fail_next(1);
+    let dead = c.generate("synth-math", "Q: 1+2=?", "static:0.9").unwrap();
+    assert!(dead.error.is_some(), "poisoned step must fail the request");
+    assert_eq!(chaos.injected(), 1, "exactly one failure injected");
+    assert_eq!(c.metrics.counter_value("requests_failed"), 1);
+    assert_eq!(
+        c.metrics.counter_value("scheduler_step_failures"),
+        1,
+        "the kill must be visible on its dedicated metric"
+    );
+
+    // liveness: the rebuilt scheduler serves the very next request
+    let alive = c.generate("synth-math", "Q: 3+4=?", "static:0.9").unwrap();
+    assert!(alive.error.is_none(), "{:?}", alive.error);
+    assert!(alive.steps > 0);
+    assert_eq!(c.metrics.counter_value("requests_completed"), 1);
+    c.shutdown();
+}
+
+#[test]
+fn calibration_crash_mid_lease_releases_for_a_peer() {
+    let (c, chaos) = chaos_coordinator(CoordinatorConfig::default());
+
+    // the first OSDT request takes the fleet calibration lease; its
+    // calibration decode dies on the armed forward pass
+    chaos.fail_next(1);
+    let crashed = c.generate("synth-math", "Q: 1+2=?", OSDT_SPEC).unwrap();
+    assert!(crashed.error.is_some(), "crashed calibration must fail its request");
+    assert!(!crashed.calibrated);
+    assert_eq!(chaos.injected(), 1);
+    assert_eq!(
+        c.registry.metrics().counter_value("leases_abandoned"),
+        1,
+        "the dropped lease must be visible on its dedicated metric"
+    );
+    assert_eq!(c.registry.metrics().counter_value("calibrations_completed"), 0);
+
+    // single-flight liveness: the key is free again, so the next request
+    // calibrates (it does NOT deadlock behind a ghost lease)
+    let next = c.generate("synth-math", "Q: 3+4=?", OSDT_SPEC).unwrap();
+    assert!(next.error.is_none(), "{:?}", next.error);
+    assert!(next.calibrated, "released key must grant the next lease");
+    assert_eq!(c.registry.metrics().counter_value("calibrations_completed"), 1);
+
+    // and the profile is reusable
+    let reused = c.generate("synth-math", "Q: 5+6=?", OSDT_SPEC).unwrap();
+    assert!(!reused.calibrated);
+    assert_eq!(
+        c.registry.metrics().counter_value("calibrations_completed"),
+        1,
+        "single-flight: one completed calibration across the run"
+    );
+    c.shutdown();
+}
+
+#[test]
+fn stuck_lease_is_stolen_and_supersedes_the_holder() {
+    // shrink the steal patience so the test runs in milliseconds
+    let (c, _chaos) = chaos_coordinator(CoordinatorConfig {
+        steal_after: Duration::from_millis(150),
+        ..CoordinatorConfig::default()
+    });
+
+    // impersonate a crashed-but-not-dropped calibrator: take the lease
+    // directly and sit on it
+    let stuck = match c.registry.acquire(&key()) {
+        Acquired::Lease(l) => l,
+        Acquired::Ready(..) => panic!("fresh key cannot be ready"),
+        Acquired::InFlight => panic!("fresh key cannot be in flight"),
+    };
+
+    // requests arriving behind the stuck lease park, then steal
+    let rxs: Vec<_> = (0..3)
+        .map(|i| {
+            c.submit(Request {
+                id: 0,
+                task: "synth-math".into(),
+                prompt: format!("Q: {i}+2=?"),
+                policy: OSDT_SPEC.into(),
+            })
+        })
+        .collect();
+    let mut calibrated = 0usize;
+    for rx in rxs {
+        let r = rx.recv().unwrap();
+        assert!(r.error.is_none(), "{:?}", r.error);
+        calibrated += usize::from(r.calibrated);
+    }
+    assert_eq!(calibrated, 1, "exactly one thief calibrates (single-flight)");
+    assert!(
+        c.metrics.counter_value("calibrations_awaited") >= 1,
+        "parked requests must be counted"
+    );
+    assert!(
+        c.registry.metrics().counter_value("lease_takeovers") >= 1,
+        "the steal must be visible on its dedicated metric"
+    );
+    assert_eq!(c.registry.metrics().counter_value("calibrations_completed"), 1);
+
+    // the original holder finally lets go: its abandon is superseded and
+    // must NOT re-open the key or clobber the thief's profile
+    drop(stuck);
+    assert_eq!(
+        c.registry.metrics().counter_value("leases_superseded"),
+        1,
+        "the stale resolution must be visible on its dedicated metric"
+    );
+    assert!(c.registry.get(&key()).is_some(), "profile survives the late drop");
+    let after = c.generate("synth-math", "Q: 9+9=?", OSDT_SPEC).unwrap();
+    assert!(after.error.is_none(), "{:?}", after.error);
+    assert!(!after.calibrated, "profile still served after the late drop");
+    c.shutdown();
+}
+
+#[test]
+fn invalidation_churn_never_stalls_serving() {
+    // drift-style churn: repeatedly invalidate the profile under load;
+    // every request must complete and every cycle recalibrates exactly once
+    let (c, _chaos) = chaos_coordinator(CoordinatorConfig::default());
+    assert!(c.generate("synth-math", "Q: 0+1=?", OSDT_SPEC).unwrap().calibrated);
+    for i in 0..4 {
+        assert!(c.registry.invalidate(&key()));
+        let r = c
+            .generate("synth-math", &format!("Q: {i}+3=?"), OSDT_SPEC)
+            .unwrap();
+        assert!(r.error.is_none(), "{:?}", r.error);
+        assert!(r.calibrated, "stale profile must recalibrate (cycle {i})");
+        let follow = c
+            .generate("synth-math", &format!("Q: {i}+4=?"), OSDT_SPEC)
+            .unwrap();
+        assert!(follow.error.is_none());
+        assert!(!follow.calibrated, "fresh profile must be reused (cycle {i})");
+    }
+    assert_eq!(c.registry.metrics().counter_value("recalibrations"), 4);
+    assert_eq!(c.registry.metrics().counter_value("calibrations_completed"), 5);
+    c.shutdown();
+}

@@ -1,0 +1,353 @@
+//! End-to-end observability contract (DESIGN.md §12):
+//!
+//! * drive a representative traffic mix through a coordinator, scrape the
+//!   standalone HTTP `/metrics` endpoint, and validate the body against a
+//!   miniature strict-Prometheus parser (HELP/TYPE per family, sample
+//!   naming, monotone cumulative buckets, `+Inf` == `_count`);
+//! * cross-check the three sources of truth — `metrics::catalog()`, the
+//!   rendered exposition, and `METRICS.md` — in both directions so none
+//!   of them can rot independently.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::io::{Read as _, Write as _};
+use std::net::TcpStream;
+
+use osdt::coordinator::{Coordinator, CoordinatorConfig};
+use osdt::metrics::http::MetricsServer;
+use osdt::metrics::{catalog, expo, MetricKind};
+use osdt::model::fixtures::tiny_config;
+use osdt::policy::{Acquired, DynamicMode, Metric, ProfileKey};
+use osdt::sim::SimModel;
+
+const OSDT_SPEC: &str = "osdt:block:q1:0.75:0.2";
+
+fn key() -> ProfileKey {
+    ProfileKey::new("synth-math", DynamicMode::Block, Metric::Q1)
+}
+
+/// Representative traffic: success, calibration, reuse, failure,
+/// invalidation churn, lease contention, steal, and drift observation —
+/// touching as many metric families as the sim stack can reach.
+fn smoke_coordinator() -> Coordinator {
+    let c = Coordinator::start(CoordinatorConfig::default(), tiny_config(), |_| {
+        Ok(SimModel::math_like(5))
+    })
+    .unwrap();
+    // static success + OSDT calibrate/reuse + failure + recalibration
+    assert!(c.generate("synth-math", "Q: 1+2=?", "static:0.9").unwrap().error.is_none());
+    assert!(c.generate("synth-math", "Q: 2+3=?", OSDT_SPEC).unwrap().calibrated);
+    assert!(!c.generate("synth-math", "Q: 3+4=?", OSDT_SPEC).unwrap().calibrated);
+    assert!(c.generate("synth-math", "Q: 4+5=?", "warp:9").unwrap().error.is_some());
+    assert!(c.registry.invalidate(&key()));
+    assert!(c.generate("synth-math", "Q: 5+6=?", OSDT_SPEC).unwrap().calibrated);
+
+    // registry-direct churn on a disjoint key: contention (waits), an
+    // abandoned lease, a steal with a superseding late drop
+    let k2 = ProfileKey::new("synth-math", DynamicMode::StepBlock, Metric::Median);
+    let lease = match c.registry.acquire(&k2) {
+        Acquired::Lease(l) => l,
+        _ => panic!("fresh key must grant the lease"),
+    };
+    assert!(matches!(c.registry.acquire(&k2), Acquired::InFlight));
+    let thief = match c.registry.acquire_stealing(&k2) {
+        Acquired::Lease(l) => l,
+        _ => panic!("stealing acquire must take the lease"),
+    };
+    drop(lease); // superseded by the thief
+    drop(thief); // abandoned: k2 never calibrates
+
+    // drift observation against the calibrated profile's reference
+    let mut divergent =
+        osdt::policy::CalibrationTrace::new(tiny_config().num_blocks);
+    for b in 0..tiny_config().num_blocks {
+        divergent.record(b, 0, &[0.95, 0.02]);
+        divergent.record(b, 1, &[0.01]);
+    }
+    let epoch = c.registry.get(&key()).unwrap().epoch;
+    c.registry.observe(&key(), epoch, &divergent);
+    c
+}
+
+// ---------------------------------------------------------------------------
+// Miniature strict-Prometheus parser
+// ---------------------------------------------------------------------------
+
+#[derive(Default)]
+struct Family {
+    kind: String,
+    has_help: bool,
+    /// (sample name, `le` label if any, value) in exposition order.
+    samples: Vec<(String, Option<String>, f64)>,
+}
+
+fn valid_name(s: &str) -> bool {
+    !s.is_empty()
+        && s.chars().next().unwrap().is_ascii_alphabetic()
+        && s.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+}
+
+/// Family a sample line belongs to: histogram samples carry a
+/// `_bucket`/`_sum`/`_count` suffix, everything else is the family itself.
+fn family_of<'a>(
+    sample: &'a str,
+    families: &BTreeMap<String, Family>,
+) -> Option<(String, &'a str)> {
+    for suffix in ["_bucket", "_sum", "_count"] {
+        if let Some(base) = sample.strip_suffix(suffix) {
+            if families.get(base).is_some_and(|f| f.kind == "histogram") {
+                return Some((base.to_string(), suffix));
+            }
+        }
+    }
+    families.contains_key(sample).then(|| (sample.to_string(), ""))
+}
+
+fn parse_exposition(body: &str) -> BTreeMap<String, Family> {
+    let mut families: BTreeMap<String, Family> = BTreeMap::new();
+    for line in body.lines() {
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let (name, kind) = rest.split_once(' ').expect("TYPE needs a kind");
+            assert!(valid_name(name), "bad family name {name:?}");
+            assert!(
+                matches!(kind, "counter" | "gauge" | "histogram"),
+                "bad TYPE {kind:?} for {name}"
+            );
+            let fam = families.entry(name.to_string()).or_default();
+            assert!(fam.kind.is_empty(), "duplicate TYPE for {name}");
+            fam.kind = kind.to_string();
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# HELP ") {
+            let (name, help) = rest.split_once(' ').expect("HELP needs text");
+            assert!(!help.trim().is_empty(), "empty HELP for {name}");
+            families.entry(name.to_string()).or_default().has_help = true;
+            continue;
+        }
+        assert!(!line.starts_with('#'), "unknown comment line {line:?}");
+        // sample: `name value` or `name{le="x"} value`
+        let (name_labels, value) =
+            line.rsplit_once(' ').unwrap_or_else(|| panic!("bad sample {line:?}"));
+        let (sample, le) = match name_labels.split_once('{') {
+            Some((n, labels)) => {
+                let labels = labels.strip_suffix('}').expect("unclosed labels");
+                let le = labels
+                    .strip_prefix("le=\"")
+                    .and_then(|v| v.strip_suffix('"'))
+                    .unwrap_or_else(|| panic!("only le labels expected: {line:?}"));
+                (n, Some(le.to_string()))
+            }
+            None => (name_labels, None),
+        };
+        assert!(valid_name(sample), "bad sample name {sample:?}");
+        let v = if value == "+Inf" {
+            f64::INFINITY
+        } else {
+            value.parse::<f64>().unwrap_or_else(|_| panic!("bad value {line:?}"))
+        };
+        let (family, _suffix) = family_of(sample, &families)
+            .unwrap_or_else(|| panic!("sample {sample} has no TYPE line"));
+        families
+            .get_mut(&family)
+            .unwrap()
+            .samples
+            .push((sample.to_string(), le, v));
+    }
+    families
+}
+
+fn validate(families: &BTreeMap<String, Family>) {
+    for (name, fam) in families {
+        assert!(fam.has_help, "{name} missing HELP");
+        assert!(!fam.kind.is_empty(), "{name} missing TYPE");
+        assert!(!fam.samples.is_empty(), "{name} declared but empty");
+        match fam.kind.as_str() {
+            "counter" => {
+                assert!(name.ends_with("_total"), "counter {name} lacks _total");
+                for (_, _, v) in &fam.samples {
+                    assert!(*v >= 0.0, "counter {name} negative");
+                }
+            }
+            "gauge" => assert!(!name.ends_with("_total"), "gauge {name}"),
+            "histogram" => {
+                let buckets: Vec<(f64, f64)> = fam
+                    .samples
+                    .iter()
+                    .filter(|(s, _, _)| s.ends_with("_bucket"))
+                    .map(|(_, le, v)| {
+                        let le = le.as_ref().expect("bucket without le");
+                        let b = if le == "+Inf" {
+                            f64::INFINITY
+                        } else {
+                            le.parse::<f64>().unwrap()
+                        };
+                        (b, *v)
+                    })
+                    .collect();
+                assert!(buckets.len() >= 2, "{name} needs buckets");
+                for w in buckets.windows(2) {
+                    assert!(w[1].0 > w[0].0, "{name} le not ascending");
+                    assert!(w[1].1 >= w[0].1, "{name} buckets not cumulative");
+                }
+                let (last_le, last_v) = *buckets.last().unwrap();
+                assert!(last_le.is_infinite(), "{name} missing +Inf bucket");
+                let count = fam
+                    .samples
+                    .iter()
+                    .find(|(s, _, _)| s.ends_with("_count"))
+                    .map(|(_, _, v)| *v)
+                    .unwrap_or_else(|| panic!("{name} missing _count"));
+                assert_eq!(last_v, count, "{name} +Inf != _count");
+                assert!(
+                    fam.samples.iter().any(|(s, _, _)| s.ends_with("_sum")),
+                    "{name} missing _sum"
+                );
+            }
+            other => panic!("{name}: bad kind {other}"),
+        }
+    }
+}
+
+/// Backticked `osdt_*` tokens in METRICS.md — the documented family set.
+fn documented_families() -> BTreeSet<String> {
+    let doc = include_str!("../../METRICS.md");
+    doc.split('`')
+        .skip(1)
+        .step_by(2)
+        .filter(|tok| {
+            tok.starts_with("osdt_")
+                && tok.chars().all(|c| c.is_ascii_alphanumeric() || c == '_')
+        })
+        .map(String::from)
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Tests
+// ---------------------------------------------------------------------------
+
+#[test]
+fn endpoint_serves_valid_prometheus_under_load() {
+    let c = smoke_coordinator();
+    // worker loops publish their final deltas just after responding
+    std::thread::sleep(std::time::Duration::from_millis(80));
+    let srv = MetricsServer::start(
+        "127.0.0.1:0",
+        vec![c.metrics.clone(), c.registry.metrics().clone()],
+    )
+    .unwrap();
+
+    let mut s = TcpStream::connect(srv.addr).unwrap();
+    write!(s, "GET /metrics HTTP/1.1\r\nHost: t\r\n\r\n").unwrap();
+    let mut buf = String::new();
+    s.read_to_string(&mut buf).unwrap();
+    let (head, body) = buf.split_once("\r\n\r\n").unwrap();
+    assert!(head.starts_with("HTTP/1.1 200 OK"), "{head}");
+    assert!(head.contains(expo::CONTENT_TYPE), "{head}");
+
+    let families = parse_exposition(body);
+    validate(&families);
+
+    // the traffic mix must surface the request lifecycle, the calibration
+    // lifecycle, the failure counters, and the latency histograms
+    for required in [
+        "osdt_process_uptime_seconds",
+        "osdt_metrics_scrapes_total",
+        "osdt_requests_completed_total",
+        "osdt_requests_failed_total",
+        "osdt_tokens_generated_total",
+        "osdt_scheduler_steps_total",
+        "osdt_request_latency_seconds",
+        "osdt_request_ttft_seconds",
+        "osdt_admission_wait_seconds",
+        "osdt_accepted_tokens_per_step",
+        "osdt_batch_occupancy_per_step",
+        "osdt_calibrations_total",
+        "osdt_calibrations_completed_total",
+        "osdt_recalibrations_total",
+        "osdt_profile_hits_total",
+        "osdt_profile_waits_total",
+        "osdt_profile_invalidations_total",
+        "osdt_leases_granted_total",
+        "osdt_leases_abandoned_total",
+        "osdt_leases_superseded_total",
+        "osdt_lease_takeovers_total",
+        "osdt_drift_events_total",
+        "osdt_profile_signature_cosine",
+    ] {
+        assert!(families.contains_key(required), "missing family {required}");
+    }
+
+    // TTFT (enqueue → first commit) is bounded by admission wait (enqueue
+    // → admission) plus request latency (admission → response), per
+    // request and therefore in aggregate
+    let sum_of = |fam: &str| {
+        families[fam]
+            .samples
+            .iter()
+            .find(|(s, _, _)| s.ends_with("_sum"))
+            .map(|(_, _, v)| *v)
+            .unwrap()
+    };
+    assert!(
+        sum_of("osdt_request_ttft_seconds")
+            <= sum_of("osdt_admission_wait_seconds")
+                + sum_of("osdt_request_latency_seconds"),
+        "ttft sum exceeds admission wait + latency sum"
+    );
+    srv.stop();
+    c.shutdown();
+}
+
+/// catalog() ⊆/⊇ METRICS.md and exposition ⊆ catalog(): the three views of
+/// the metric surface cannot drift apart.
+#[test]
+fn metrics_doc_cross_check() {
+    let doc = documented_families();
+    let declared: BTreeSet<String> =
+        catalog().iter().map(|s| s.exposed.to_string()).collect();
+
+    let undocumented: Vec<_> = declared.difference(&doc).collect();
+    assert!(
+        undocumented.is_empty(),
+        "declared in catalog() but missing from METRICS.md: {undocumented:?}"
+    );
+    let phantom: Vec<_> = doc.difference(&declared).collect();
+    assert!(
+        phantom.is_empty(),
+        "documented in METRICS.md but not in catalog(): {phantom:?}"
+    );
+
+    // everything the smoke traffic emits resolves to a declared family —
+    // an undeclared internal name would render with a derived family and
+    // fail here, which is what keeps catalog() honest
+    let c = smoke_coordinator();
+    std::thread::sleep(std::time::Duration::from_millis(80));
+    let body = expo::render_prometheus(&[&c.metrics, c.registry.metrics()]);
+    let families = parse_exposition(&body);
+    for name in families.keys() {
+        assert!(
+            declared.contains(name),
+            "emitted family {name} is not declared in metrics::catalog()"
+        );
+    }
+    assert!(
+        !body.contains("Undeclared metric"),
+        "exposition contains undeclared metrics:\n{body}"
+    );
+
+    // help text parity: catalog kinds match the exposition's TYPE lines
+    for spec in catalog() {
+        if let Some(fam) = families.get(spec.exposed) {
+            let want = match spec.kind {
+                MetricKind::Counter => "counter",
+                MetricKind::Gauge => "gauge",
+                MetricKind::Histogram => "histogram",
+            };
+            assert_eq!(fam.kind, want, "{} kind mismatch", spec.exposed);
+        }
+    }
+    c.shutdown();
+}

@@ -34,6 +34,7 @@ fn replica(registry: &Arc<ProfileRegistry>, workers: usize) -> Arc<Coordinator> 
                 max_batch: 4,
                 batch_wait: Duration::from_millis(5),
                 cache: CacheConfig::disabled(),
+                ..CoordinatorConfig::default()
             },
             tiny_config(),
             registry.clone(),

@@ -29,6 +29,7 @@ fn sim_coordinator(workers: usize) -> Arc<Coordinator> {
                 // to hold its first admission for batches to form reliably
                 batch_wait: Duration::from_millis(50),
                 cache: CacheConfig::disabled(),
+                ..CoordinatorConfig::default()
             },
             tiny_config(),
             |_| Ok(SimModel::math_like(11)),

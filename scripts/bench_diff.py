@@ -1,0 +1,127 @@
+#!/usr/bin/env python3
+"""Gate a fresh serving_load bench run against the committed trajectory.
+
+Usage:
+    python3 scripts/bench_diff.py BASELINE.json CURRENT.json [--threshold 0.10]
+
+Both files are the schema-2 JSON emitted by
+`cargo bench --bench serving_load -- --smoke --json OUT.json`.
+Rows are matched by (policy, cache, residency, rate); a matched row whose
+tokens/s dropped by more than the threshold fails the gate. Latency
+percentiles are reported but never gated — shared CI runners are too
+noisy for that.
+
+Provenance rule: a baseline with "provenance": "seed" (the bootstrap
+snapshot committed before any CI runner measured one) reports
+regressions as warnings and always exits 0. Replace it with a measured
+snapshot (see bench/trajectory/README.md) to arm the gate.
+
+Exit codes: 0 pass/warn-only, 1 regression, 2 usage or schema error.
+Stdlib only.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+SCHEMA = 2
+KEY_FIELDS = ("policy", "cache", "residency", "rate")
+REPORT_FIELDS = ("tokens_per_sec", "p50_ms", "p95_ms", "p99_ms", "ttft_p95_ms")
+
+
+def load(path):
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, ValueError) as e:
+        sys.exit(f"error: cannot read {path}: {e}")
+    if doc.get("bench") != "serving_load":
+        sys.exit(f"error: {path} is not a serving_load artifact")
+    if doc.get("schema") != SCHEMA:
+        sys.exit(
+            f"error: {path} has schema {doc.get('schema')!r}, expected {SCHEMA};"
+            " regenerate both artifacts with the same bench binary"
+        )
+    rows = doc.get("rows")
+    if not isinstance(rows, list) or not rows:
+        sys.exit(f"error: {path} has no rows")
+    return doc
+
+
+def key(row):
+    try:
+        return tuple(row[f] for f in KEY_FIELDS)
+    except KeyError as e:
+        sys.exit(f"error: row missing {e}: {row}")
+
+
+def fmt_key(k):
+    policy, cache, residency, rate = k
+    return f"{policy} cache={cache}:{residency} @{rate}rps"
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("baseline")
+    ap.add_argument("current")
+    ap.add_argument(
+        "--threshold",
+        type=float,
+        default=0.10,
+        help="max tolerated fractional tokens/s drop (default 0.10)",
+    )
+    args = ap.parse_args(argv)
+
+    base = load(args.baseline)
+    cur = load(args.current)
+    warn_only = base.get("provenance") == "seed"
+
+    base_rows = {key(r): r for r in base["rows"]}
+    cur_rows = {key(r): r for r in cur["rows"]}
+
+    matched = sorted(set(base_rows) & set(cur_rows))
+    if not matched:
+        sys.exit("error: no rows in common between baseline and current")
+    for k in sorted(set(base_rows) - set(cur_rows)):
+        print(f"note: baseline row not in current run: {fmt_key(k)}")
+    for k in sorted(set(cur_rows) - set(base_rows)):
+        print(f"note: new row with no baseline: {fmt_key(k)}")
+
+    regressions = []
+    for k in matched:
+        b, c = base_rows[k], cur_rows[k]
+        b_tps, c_tps = float(b["tokens_per_sec"]), float(c["tokens_per_sec"])
+        delta = (c_tps - b_tps) / b_tps if b_tps > 0 else 0.0
+        status = "ok"
+        if delta < -args.threshold:
+            status = "WARN" if warn_only else "FAIL"
+            regressions.append((k, b_tps, c_tps, delta))
+        extra = " ".join(
+            f"{f}={float(c[f]):.1f}" for f in REPORT_FIELDS[1:] if f in c
+        )
+        print(
+            f"[{status}] {fmt_key(k)}: tokens/s {b_tps:.1f} -> {c_tps:.1f} "
+            f"({delta:+.1%}) {extra}"
+        )
+
+    print(
+        f"\n{len(matched)} row(s) compared, {len(regressions)} beyond "
+        f"-{args.threshold:.0%} tokens/s"
+    )
+    if regressions and warn_only:
+        print(
+            "baseline provenance is 'seed' (bootstrap values, never measured"
+            " on this runner): warnings only, gate not armed"
+        )
+        return 0
+    if regressions:
+        print("regression gate FAILED")
+        return 1
+    print("regression gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
