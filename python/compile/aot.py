@@ -13,11 +13,18 @@ Outputs under artifacts/:
   fwd_conf_b{1,2,4}.hlo.txt  (weights..., tokens)                -> (conf, argmax)
   fwd_full_kv_b1.hlo.txt     (weights..., tokens)                -> (conf, argmax, k$, v$)
   fwd_window_b1.hlo.txt      (weights..., win_tokens, start, k$, v$) -> (conf, argmax)
-  fwd_window_b{2,4}.hlo.txt  (weights..., win_tokens, starts, k$[B], v$[B])
+  fwd_window_b{2..32}.hlo.txt  (weights..., win_tokens, starts, k$[B], v$[B])
                              -> (conf, argmax)   [stacked window pass]
-  kv_gather_b{2,4}.hlo.txt   (k_0..k_{B-1}, v_0..v_{B-1}) -> (k$[B], v$[B])
+  kv_gather_b{2..32}.hlo.txt (k_0..k_{B-1}, v_0..v_{B-1}) -> (k$[B], v$[B])
                              [weights-free on-device cache stacking for the
                               device-residency path — see rust DESIGN.md §10]
+
+Window-path variants are emitted at every bucket in WINDOW_BATCH_SIZES
+(1, 2, 4, 8, 16, 32): any scheduler group pads up to the cheapest bucket
+that fits. Bucketed fwd_window_accept variants carry a row_live i32[B]
+input whose 0 rows contribute nothing (padding); plain fwd_window padding
+rows are simply dropped host-side. fwd_conf stays at b <= 4 — full passes
+are the cold path.
   logits_b1.hlo.txt          (weights..., tokens)                -> (logits,)  [debug]
   data/<task>.eval.jsonl     synthetic eval datasets
 
@@ -42,7 +49,25 @@ from . import model as model_mod
 from . import train as train_mod
 
 BATCH_SIZES = (1, 2, 4)
+# Window-path buckets (stacked window / fused accept / kv_gather). Larger
+# than the conf buckets on purpose: steady-state occupancy lives in window
+# passes, so that is where co-execution width pays (ROADMAP item 1).
+WINDOW_BATCH_SIZES = (1, 2, 4, 8, 16, 32)
 WINDOW = data_mod.BLOCK_LEN
+
+
+def expected_variants() -> list[str]:
+    """The full variant table lower_variants must emit — asserted there and
+    by test_aot.py, so a bucket silently dropping out of the AOT loop fails
+    fast instead of surfacing as a runtime fallback to exact-b1 passes."""
+    names = [f"fwd_conf_b{b}" for b in BATCH_SIZES]
+    names.append("fwd_full_kv_b1")
+    names += [f"fwd_window_b{b}" for b in WINDOW_BATCH_SIZES]
+    if model_mod.VOCAB < (1 << 16) and WINDOW < (1 << 15):
+        names += [f"fwd_window_accept_b{b}" for b in WINDOW_BATCH_SIZES]
+    names += [f"kv_gather_b{b}" for b in WINDOW_BATCH_SIZES if b > 1]
+    names.append("logits_b1")
+    return names
 
 
 def to_hlo_text(lowered) -> str:
@@ -223,8 +248,9 @@ def lower_variants(params, out_dir: str) -> dict:
             "outputs": [o.format(b=1) for o in accept_outputs],
         }
 
-    # batched window + on-device cache stacking (device residency path)
-    for b in BATCH_SIZES:
+    # batched window + on-device cache stacking (device residency path),
+    # at every bucket size — groups pad up to the cheapest bucket that fits
+    for b in WINDOW_BATCH_SIZES:
         if b == 1:
             continue
         blhs = (b, *lhs)
@@ -260,10 +286,12 @@ def lower_variants(params, out_dir: str) -> dict:
         if accept_packable:
             def fwd_window_accept_b(*args):
                 ws = args[:n_w]
-                win_tokens, starts, kc, vc, taus, factors = args[n_w : n_w + 6]
+                win_tokens, starts, kc, vc, taus, factors, live = (
+                    args[n_w : n_w + 7]
+                )
                 return model_mod.fwd_window_accept_batch(
                     _from_tuple(ws), win_tokens, starts, kc, vc, taus, factors,
-                    use_pallas=True,
+                    live, use_pallas=True,
                 )
 
             fname = emit(
@@ -275,6 +303,7 @@ def lower_variants(params, out_dir: str) -> dict:
                 jax.ShapeDtypeStruct(blhs, jnp.float32),
                 jax.ShapeDtypeStruct((b,), jnp.float32),
                 jax.ShapeDtypeStruct((b,), jnp.float32),
+                jax.ShapeDtypeStruct((b,), jnp.int32),
             )
             variants[f"fwd_window_accept_b{b}"] = {
                 "file": fname,
@@ -287,6 +316,7 @@ def lower_variants(params, out_dir: str) -> dict:
                     f"v_caches f32{list(blhs)}",
                     f"taus f32[{b}]",
                     f"factors f32[{b}]",
+                    f"row_live i32[{b}]",
                 ],
                 "outputs": [o.format(b=b) for o in accept_outputs],
             }
@@ -320,6 +350,9 @@ def lower_variants(params, out_dir: str) -> dict:
         "inputs": ["weights...", f"tokens i32[1,{s}]"],
         "outputs": [f"logits f32[1,{s},{model_mod.VOCAB}]"],
     }
+    assert set(variants) == set(expected_variants()), (
+        sorted(set(variants) ^ set(expected_variants()))
+    )
     return variants
 
 

@@ -286,7 +286,7 @@ def kv_gather(ks, vs):
 ACCEPT_CHUNK = 8
 
 
-def accept_from_conf(conf, arg, window_tokens, taus, factors):
+def accept_from_conf(conf, arg, window_tokens, taus, factors, row_live=None):
     """Apply the per-row acceptance rule to a window pass's (conf, argmax)
     rows entirely on device, returning only compact acceptance.
 
@@ -302,6 +302,12 @@ def accept_from_conf(conf, arg, window_tokens, taus, factors):
     single most confident masked position is accepted — the argmax liveness
     fallback, ties -> lowest index, matching ``policy::argmax``.
 
+    ``row_live`` (``(B,) i32``, optional) marks padding rows of a bucketed
+    batch: a row with ``row_live == 0`` has its masked set forced empty, so
+    it contributes zero commits, a zero step mean, and never trips the
+    liveness fallback — whatever garbage its padded window/cache rows hold.
+    Bucketed variants (b >= 2) always take it; batch-1 never pads.
+
     Returns ``(count (B,) i32, fell_back (B,) i32, step_mean (B,) f32,
     *chunks)`` where each chunk is a (B, ACCEPT_CHUNK) i32 output; entry
     ``e`` of a row holds ``(pos << 16) | token`` for the e-th accepted
@@ -311,6 +317,11 @@ def accept_from_conf(conf, arg, window_tokens, taus, factors):
     """
     w = conf.shape[1]
     m = window_tokens == vocab.MASK
+    if row_live is not None:
+        # dead rows: empty masked set => no raw accepts, no fallback
+        # (has_mask False), count 0, step_mean 0/max(0,1) = 0, every packed
+        # entry -1. One mask covers all four contributions.
+        m = m & (row_live[:, None] > 0)
     mconf = jnp.where(m, conf, -jnp.inf)
     cmax = jnp.max(mconf, axis=1, keepdims=True)
     raw = m & ((conf > taus[:, None]) | (conf >= factors[:, None] * cmax))
@@ -356,16 +367,19 @@ def fwd_window_accept_batch(
     v_caches,
     taus,           # (B,) f32
     factors,        # (B,) f32
+    row_live,       # (B,) i32 — 1 for real rows, 0 for bucket padding
     use_pallas: bool = True,
 ):
     """Batched fused window step: row ``b`` recomputes its own window and
     applies its own acceptance rule — row-identical to ``B`` independent
-    ``fwd_window_accept`` calls. Stacked cache inputs come from
-    ``kv_gather_b{B}`` on the device-residency path."""
+    ``fwd_window_accept`` calls on the live rows, while ``row_live == 0``
+    padding rows contribute nothing (see ``accept_from_conf``). Stacked
+    cache inputs come from ``kv_gather_b{B}`` on the device-residency
+    path; groups smaller than the compiled bucket pad up to it."""
     conf, arg = fwd_window_batch(
         p, window_tokens, starts, k_caches, v_caches, use_pallas
     )
-    return accept_from_conf(conf, arg, window_tokens, taus, factors)
+    return accept_from_conf(conf, arg, window_tokens, taus, factors, row_live)
 
 
 # ---------------------------------------------------------------------------

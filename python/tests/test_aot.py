@@ -60,6 +60,69 @@ def test_hlo_text_emission_small_fn():
     assert "ROOT" in text
 
 
+def test_expected_variant_table():
+    """The variant table is the runtime's dispatch contract: every window
+    bucket must be present or the scheduler silently falls back to b1."""
+    names = aot.expected_variants()
+    assert len(names) == len(set(names)) == 22
+    for b in aot.WINDOW_BATCH_SIZES:
+        assert f"fwd_window_b{b}" in names
+        assert f"fwd_window_accept_b{b}" in names
+        if b > 1:
+            assert f"kv_gather_b{b}" in names
+    assert {"fwd_window_b8", "fwd_window_b16", "fwd_window_b32"} <= set(names)
+    assert aot.WINDOW_BATCH_SIZES == (1, 2, 4, 8, 16, 32)
+
+
+def test_new_buckets_lower_to_hlo():
+    """Lower the widest new bucket (b=8 keeps the test fast; b16/b32 differ
+    only in the leading dim) for window, fused-accept, and gather variants."""
+    params = _tiny_params()
+    b, w, s = 8, aot.WINDOW, M.SEQ_LEN
+    dims = (M.N_LAYERS, M.N_HEADS, s, M.HEAD_DIM)
+    p_specs = [
+        jax.ShapeDtypeStruct(np.asarray(params[k]).shape, jnp.float32)
+        for k in M.param_order()
+    ]
+    win = jax.ShapeDtypeStruct((b, w), jnp.int32)
+    starts = jax.ShapeDtypeStruct((b,), jnp.int32)
+    kv = jax.ShapeDtypeStruct((b, *dims), jnp.float32)
+    fvec = jax.ShapeDtypeStruct((b,), jnp.float32)
+    live = jax.ShapeDtypeStruct((b,), jnp.int32)
+
+    def window_fn(*args):
+        n = len(p_specs)
+        p = dict(zip(M.param_order(), args[:n]))
+        return M.fwd_window_batch(p, *args[n : n + 4], use_pallas=True)
+
+    text = aot.to_hlo_text(
+        jax.jit(window_fn).lower(*p_specs, win, starts, kv, kv)
+    )
+    assert "HloModule" in text
+
+    def accept_fn(*args):
+        n = len(p_specs)
+        p = dict(zip(M.param_order(), args[:n]))
+        return M.fwd_window_accept_batch(
+            p, *args[n : n + 7], use_pallas=True
+        )
+
+    text = aot.to_hlo_text(
+        jax.jit(accept_fn).lower(
+            *p_specs, win, starts, kv, kv, fvec, fvec, live
+        )
+    )
+    assert "HloModule" in text
+
+    row = jax.ShapeDtypeStruct(dims, jnp.float32)
+    text = aot.to_hlo_text(
+        jax.jit(
+            lambda *rows: M.kv_gather(rows[:b], rows[b:])
+        ).lower(*([row] * (2 * b)))
+    )
+    assert "HloModule" in text
+
+
 @pytest.mark.skipif(
     not os.path.exists(os.path.join(ART, "model_config.json")),
     reason="artifacts not built",
@@ -80,9 +143,7 @@ class TestBuiltArtifacts:
             assert cfg[k] == mc[k]
 
     def test_variant_files_exist(self, cfg):
-        assert set(cfg["variants"]) >= {
-            "fwd_conf_b1", "fwd_full_kv_b1", "fwd_window_b1", "logits_b1",
-        }
+        assert set(cfg["variants"]) == set(aot.expected_variants())
         for v in cfg["variants"].values():
             p = os.path.join(ART, v["file"])
             assert os.path.exists(p), p

@@ -118,6 +118,43 @@ def test_window_batch_matches_solo_rows(params, tokens):
         np.testing.assert_array_equal(np.asarray(ab[i]), np.asarray(a))
 
 
+def test_window_batch_padded_bucket_matches_solo(params, tokens):
+    """A group smaller than its bucket pads up to it (b8 here): the live
+    rows must stay row-identical to independent fwd_window calls while the
+    padding rows — pad tokens, recycled garbage caches — are simply extra
+    output rows the host drops. This is the contract behind the bucketed
+    padded dispatch (ISSUE 7): padding must never perturb live rows."""
+    bucket, live = 8, 3
+    starts, rows, caches = [], [], []
+    for i in range(live):
+        start = D.PROMPT_LEN + (i % D.NUM_BLOCKS) * D.BLOCK_LEN
+        t = tokens[i % tokens.shape[0]][None, :]
+        _, _, kc, vc = M.fwd_full_kv(params, t, use_pallas=False)
+        win = t[:, start : start + D.BLOCK_LEN]
+        c, a = M.fwd_window(
+            params, win, jnp.asarray(start, jnp.int32), kc, vc, use_pallas=False
+        )
+        starts.append(start)
+        rows.append((win[0], c[0], a[0]))
+        caches.append((kc, vc))
+    # padding rows: pad-token windows, start 0, row-0's cache repeated (any
+    # cache-shaped buffer serves — mirroring runtime::gather_stack)
+    pad_win = jnp.full((D.BLOCK_LEN,), vocab.PAD, jnp.int32)
+    win_b = jnp.stack([w for w, _, _ in rows] + [pad_win] * (bucket - live))
+    starts_b = jnp.asarray(starts + [0] * (bucket - live), jnp.int32)
+    kb, vb = M.kv_gather(
+        [k for k, _ in caches] + [caches[0][0]] * (bucket - live),
+        [v for _, v in caches] + [caches[0][1]] * (bucket - live),
+    )
+    cb, ab = M.fwd_window_batch(
+        params, win_b, starts_b, kb, vb, use_pallas=False
+    )
+    assert cb.shape == (bucket, D.BLOCK_LEN)
+    for i, (_, c, a) in enumerate(rows):
+        np.testing.assert_allclose(np.asarray(cb[i]), np.asarray(c), atol=1e-5)
+        np.testing.assert_array_equal(np.asarray(ab[i]), np.asarray(a))
+
+
 def _accept_reference(conf, arg, window_tokens, tau, factor):
     """Numpy mirror of the fused acceptance rule (and of the Rust host
     reference ``runtime::accept_rows``): f32 math, strict > for the
@@ -178,7 +215,8 @@ def test_window_accept_row_identity(params, tokens):
     taus = jnp.asarray([0.5, inf], jnp.float32)      # row 0: threshold rule
     factors = jnp.asarray([inf, 0.9], jnp.float32)   # row 1: factor-max rule
     out = M.fwd_window_accept_batch(
-        params, win_b, starts_b, kb, vb, taus, factors, use_pallas=False
+        params, win_b, starts_b, kb, vb, taus, factors,
+        jnp.ones((2,), jnp.int32), use_pallas=False,
     )
     conf, arg = M.fwd_window_batch(
         params, win_b, starts_b, kb, vb, use_pallas=False
@@ -192,6 +230,35 @@ def test_window_accept_row_identity(params, tokens):
         assert got_pairs == want_pairs, f"row {row}"
         assert got_fb == want_fb
         np.testing.assert_allclose(got_mean, want_mean, atol=1e-5)
+
+
+def test_accept_padded_rows_contribute_nothing():
+    """Bucket-padding rows (row_live == 0) must yield zero commits, a zero
+    step mean, and no liveness fallback — even when their padded windows
+    are fully masked with confidences that would otherwise accept every
+    position. Live rows must be unaffected by the dead rows beside them."""
+    bucket, w = 8, D.BLOCK_LEN
+    rng = np.random.default_rng(11)
+    conf = jnp.asarray(rng.uniform(0.3, 0.95, (bucket, w)), jnp.float32)
+    arg = jnp.asarray(rng.integers(4, M.VOCAB, (bucket, w)), jnp.int32)
+    # every row fully masked: without row_live, tau=0 accepts everything
+    win = jnp.full((bucket, w), vocab.MASK, jnp.int32)
+    live = jnp.asarray([1, 1, 0, 0, 0, 0, 0, 0], jnp.int32)
+    taus = jnp.zeros((bucket,), jnp.float32)
+    factors = jnp.full((bucket,), np.inf, jnp.float32)
+    out = M.accept_from_conf(conf, arg, win, taus, factors, live)
+    for row in range(bucket):
+        pairs, fell_back, mean = _unpack_accept(out, row)
+        if int(live[row]):
+            want, _, want_mean = _accept_reference(
+                conf[row], arg[row], np.asarray(win[row]), 0.0, np.inf
+            )
+            assert pairs == want, f"live row {row} perturbed by padding"
+            np.testing.assert_allclose(mean, want_mean, atol=1e-5)
+        else:
+            assert pairs == [], f"dead row {row} committed tokens"
+            assert not fell_back, f"dead row {row} tripped the fallback"
+            assert mean == 0.0, f"dead row {row} leaked a step mean"
 
 
 def test_accept_fallback_tie_breaks_low():

@@ -87,6 +87,10 @@ struct Point {
     /// Mean host↔device bytes per scheduler step — the transfer ledger the
     /// fused path shrinks from O(block) rows to compact acceptance.
     bytes_per_step: f64,
+    /// Fraction of completed requests whose block-0 K/V refresh was served
+    /// from the shared prompt-prefix index (DESIGN.md §13) instead of
+    /// executed; 0 unless `--prefix-sharing` style configs are in play.
+    prefix_hit_rate: f64,
     occ_mean: f64,
     occ_peak: i64,
     completions: Vec<String>,
@@ -141,6 +145,7 @@ where
     let cache_up0 = c0("cache_bytes_uploaded");
     let window0 = c0("window_passes");
     let fused0 = c0("fused_window_passes");
+    let saved0 = c0("prefix_sharing_saved_full_passes");
 
     let trace = mixed_trace(datasets, spec.rate, spec.n, spec.seed);
     let mut lat = Histogram::latency();
@@ -184,6 +189,7 @@ where
     let cache_upload_bytes = c0("cache_bytes_uploaded") - cache_up0;
     let window_passes = c0("window_passes") - window0;
     let fused_passes = c0("fused_window_passes") - fused0;
+    let saved_passes = c0("prefix_sharing_saved_full_passes") - saved0;
     let tokens = (ok * model_cfg.gen_len).max(1);
     Ok(Point {
         policy: spec.policy.to_string(),
@@ -206,6 +212,7 @@ where
         cache_upload_bytes,
         fused_frac: fused_passes as f64 / window_passes.max(1) as f64,
         bytes_per_step: transferred as f64 / steps as f64,
+        prefix_hit_rate: saved_passes as f64 / ok.max(1) as f64,
         occ_mean: seq_steps as f64 / steps as f64,
         occ_peak: coord
             .metrics
@@ -285,6 +292,7 @@ fn point_rows(points: &[Point]) -> (Vec<Vec<String>>, Vec<Vec<String>>) {
             format!("{}", p.cache_upload_bytes),
             format!("{}", p.fused_frac),
             format!("{}", p.bytes_per_step),
+            format!("{}", p.prefix_hit_rate),
             format!("{}", p.occ_mean),
             format!("{}", p.occ_peak),
         ]);
@@ -335,6 +343,7 @@ fn points_json(points: &[Point], mode: &str, seed: u64) -> Json {
                             ),
                             ("fused_frac", Json::Num(p.fused_frac)),
                             ("bytes_per_step", Json::Num(p.bytes_per_step)),
+                            ("prefix_hit_rate", Json::Num(p.prefix_hit_rate)),
                             ("occ_mean", Json::Num(p.occ_mean)),
                             ("occ_peak", Json::Num(p.occ_peak as f64)),
                         ])
@@ -361,6 +370,34 @@ fn sim_datasets() -> Vec<Dataset> {
                 .collect(),
         })
         .collect()
+}
+
+/// Single-block smoke config: one K/V refresh per decode, so a shared-
+/// prefix run's executed-refresh count is directly comparable to its
+/// request count.
+fn one_block_config() -> ModelConfig {
+    let mut cfg = tiny_config();
+    cfg.gen_len = cfg.block_len;
+    cfg.num_blocks = 1;
+    cfg.seq_len = cfg.prompt_len + cfg.gen_len;
+    cfg
+}
+
+/// N requests over `k` distinct prompt templates — the workload where the
+/// prompt-prefix index (DESIGN.md §13) pays: a re-used template costs page
+/// references instead of a block-0 K/V refresh.
+fn shared_prefix_datasets(k: usize) -> Vec<Dataset> {
+    vec![Dataset {
+        task: "synth-qa".to_string(),
+        examples: (0..k)
+            .map(|i| Example {
+                task: "synth-qa".to_string(),
+                prompt: format!("Template {i}: 2+{i}=?"),
+                answer: format!("{}", i + 2),
+                code_op: None,
+            })
+            .collect(),
+    }]
 }
 
 fn main() -> Result<()> {
@@ -462,6 +499,86 @@ fn main() -> Result<()> {
         }
     }
 
+    // --- shared-prefix workload (DESIGN.md §13): the same template-heavy
+    // trace with prefix sharing off ("unshared") vs on ("shared"). Smoke
+    // runs a single-block config on one counter-instrumented SimModel
+    // (clones share `full_kv_calls`) and asserts the sharing run executed
+    // strictly fewer K/V refreshes than it served requests; both runs must
+    // produce identical completions — sharing is a transport optimisation,
+    // never an approximation.
+    let shared_policy = "static:0.9";
+    let shared_data = shared_prefix_datasets(3);
+    let shared_cfg = if smoke { one_block_config() } else { model_cfg.clone() };
+    let sim_shared = SimModel::math_like(5).with_config(shared_cfg.clone());
+    let mut shared_points = Vec::new();
+    let mut calls_before_shared = 0;
+    for (label, cache) in [
+        ("unshared", CacheConfig::block_boundary()),
+        (
+            "shared",
+            CacheConfig::block_boundary().paged(8).with_prefix_sharing(true),
+        ),
+    ] {
+        if label == "shared" {
+            calls_before_shared = sim_shared.full_kv_calls();
+        }
+        let spec = PointSpec {
+            policy: shared_policy,
+            cache,
+            cache_label: label,
+            residency: if smoke { "sim" } else { "host" },
+            rate: rates[0],
+            n,
+            workers,
+            max_batch,
+            seed,
+        };
+        let p = if smoke {
+            let proto = sim_shared.clone();
+            run_point(&spec, &shared_cfg, &shared_data, move |_wid| {
+                Ok(proto.clone())
+            })?
+        } else {
+            run_point(&spec, &shared_cfg, &shared_data, move |_wid| {
+                let cfg = ModelConfig::load("artifacts")?;
+                let rt = ModelRuntime::load(&cfg)?;
+                // prefix-index inserts need host-visible K/V (DESIGN.md §13)
+                rt.set_residency(Residency::Host);
+                Ok(rt)
+            })?
+        };
+        eprintln!(
+            "[shared-prefix] {shared_policy} cache={label} @{}rps: \
+             {:.1} tok/s, prefix hit rate {:.0}%",
+            spec.rate,
+            p.tokens_per_sec,
+            p.prefix_hit_rate * 100.0
+        );
+        shared_points.push(p);
+    }
+    if shared_points[0].completions != shared_points[1].completions {
+        bail!("prefix sharing changed completions on the shared-prefix trace");
+    }
+    println!("token identity: shared == unshared on the shared-prefix trace");
+    if smoke && workers == 1 {
+        // warm-up (one per dataset) + timed requests, one refresh each on
+        // the single-block config
+        let requests = (n + shared_data.len()) as u64;
+        let executed = sim_shared.full_kv_calls() - calls_before_shared;
+        if executed >= requests {
+            bail!(
+                "prefix sharing executed {executed} fwd_full_kv calls for \
+                 {requests} requests — the prompt-prefix index is not sharing"
+            );
+        }
+        println!(
+            "prefix sharing: {executed} executed K/V refreshes for {requests} \
+             requests (hit rate {:.0}%)",
+            shared_points[1].prefix_hit_rate * 100.0
+        );
+    }
+    points.extend(shared_points);
+
     let checked = check_token_identity(&points)?;
     if checked > 0 {
         println!("token identity: host == device for {checked} cached point(s)");
@@ -487,7 +604,8 @@ fn main() -> Result<()> {
             "p99_us", "ttft_p50_us", "ttft_p95_us", "ttft_p99_us",
             "tok_p50_us", "tok_p95_us", "tok_p99_us",
             "tokens_per_sec", "bytes_per_token", "cache_upload_bytes",
-            "fused_frac", "bytes_per_step", "occ_mean", "occ_peak",
+            "fused_frac", "bytes_per_step", "prefix_hit_rate", "occ_mean",
+            "occ_peak",
         ],
         &csv,
     )?;

@@ -13,10 +13,12 @@
 //! sequence retirement recycle cache storage instead of churning the
 //! allocator.
 
+use std::borrow::Cow;
 use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
+use super::paged::PageTable;
 use super::pool::PoolInner;
 
 /// Where forward passes keep the dual KV cache between block refreshes.
@@ -77,6 +79,11 @@ pub struct DeviceKv {
 pub(crate) enum CacheStorage {
     Host(KvCache),
     Device(DeviceKv),
+    /// Refcounted pages in a [`super::paged::PagedKvPool`] — possibly
+    /// shared with other sequences via the prompt-prefix index. Host-side
+    /// storage (reported as [`Residency::Host`] so dispatch routes it to
+    /// the upload paths), reassembled or stacked on demand.
+    Paged(PageTable),
 }
 
 /// Opaque per-sequence dual-KV-cache token. Produced by
@@ -97,6 +104,12 @@ impl CacheHandle {
         CacheHandle { storage: Some(CacheStorage::Host(kv)), pool: None }
     }
 
+    /// A paged handle. No `pool` link: the [`PageTable`] releases its own
+    /// page refs on drop, so the whole-buffer pool is never involved.
+    pub fn paged(table: PageTable) -> CacheHandle {
+        CacheHandle { storage: Some(CacheStorage::Paged(table)), pool: None }
+    }
+
     pub(crate) fn new(storage: CacheStorage, pool: Option<Arc<PoolInner>>) -> CacheHandle {
         CacheHandle { storage: Some(storage), pool }
     }
@@ -107,7 +120,7 @@ impl CacheHandle {
 
     pub fn residency(&self) -> Residency {
         match self.storage() {
-            CacheStorage::Host(_) => Residency::Host,
+            CacheStorage::Host(_) | CacheStorage::Paged(_) => Residency::Host,
             CacheStorage::Device(_) => Residency::Device,
         }
     }
@@ -116,13 +129,33 @@ impl CacheHandle {
         match self.storage() {
             CacheStorage::Host(kv) => kv.dims,
             CacheStorage::Device(d) => d.dims,
+            CacheStorage::Paged(t) => t.dims(),
         }
     }
 
-    /// Host payload, if host-resident.
+    /// Host payload, if host-resident (contiguous storage only; paged
+    /// handles answer through [`CacheHandle::host_kv`]).
     pub fn as_host(&self) -> Option<&KvCache> {
         match self.storage() {
             CacheStorage::Host(kv) => Some(kv),
+            _ => None,
+        }
+    }
+
+    /// Page table, if paged.
+    pub fn as_paged(&self) -> Option<&PageTable> {
+        match self.storage() {
+            CacheStorage::Paged(t) => Some(t),
+            _ => None,
+        }
+    }
+
+    /// Host-visible K/V: borrowed for contiguous host storage, assembled
+    /// on the fly for paged storage, `None` for device residency.
+    pub fn host_kv(&self) -> Option<Cow<'_, KvCache>> {
+        match self.storage() {
+            CacheStorage::Host(kv) => Some(Cow::Borrowed(kv)),
+            CacheStorage::Paged(t) => Some(Cow::Owned(t.assemble())),
             CacheStorage::Device(_) => None,
         }
     }
@@ -130,8 +163,8 @@ impl CacheHandle {
     /// Device buffers (k, v), if device-resident.
     pub fn as_device(&self) -> Option<(&xla::PjRtBuffer, &xla::PjRtBuffer)> {
         match self.storage() {
-            CacheStorage::Host(_) => None,
             CacheStorage::Device(d) => Some((&d.k, &d.v)),
+            _ => None,
         }
     }
 }
@@ -173,5 +206,24 @@ mod tests {
     #[test]
     fn unpooled_drop_is_a_noop() {
         drop(CacheHandle::host(kv(2)));
+    }
+
+    #[test]
+    fn paged_handle_reads_as_host() {
+        use crate::cache::paged::PagedKvPool;
+
+        let pool = PagedKvPool::new([1, 1, 4, 1], 2, 8);
+        let src = kv(4);
+        let h = CacheHandle::paged(pool.paginate(&src).unwrap());
+        assert_eq!(h.residency(), Residency::Host, "routes to upload paths");
+        assert_eq!(h.dims(), [1, 1, 4, 1]);
+        assert!(h.as_host().is_none(), "not contiguous");
+        assert!(h.as_device().is_none());
+        assert!(h.as_paged().is_some());
+        let kv = h.host_kv().expect("assembles on demand");
+        assert_eq!(kv.k, src.k);
+        assert_eq!(kv.v, src.v);
+        drop(h);
+        assert_eq!(pool.stats().pages_in_use, 0, "drop releases pages");
     }
 }

@@ -13,12 +13,18 @@
 //! the paper's baseline uses block-boundary refresh only).
 
 pub mod handle;
+pub mod paged;
 pub mod pool;
 
 pub use handle::{CacheHandle, DeviceKv, KvCache, Residency};
+pub use paged::{PageTable, PagedKvPool, PagedStats, PrefixHit, SharedKv, SharedKvStats};
 pub use pool::{CachePool, PoolStats};
 
 use crate::model::ModelConfig;
+
+/// Default paged-pool capacity when prefix sharing is enabled (page
+/// slots, not sequences — see docs/RUNBOOK.md "Page-pool exhaustion").
+pub const DEFAULT_MAX_KV_PAGES: usize = 4096;
 
 /// Cache behaviour for the decode engine.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -27,19 +33,51 @@ pub struct CacheConfig {
     /// If > 0: force a full refresh after this many consecutive window
     /// steps within a block. 0 = refresh at block boundaries only.
     pub refresh_interval: usize,
+    /// Sequence positions per KV page for the paged pool (DESIGN.md §13).
+    /// 0 = whole-sequence handles only (legacy layout, no paging).
+    pub kv_page_len: usize,
+    /// Share block-0 refresh output (pages + conf/argmax) across requests
+    /// with an identical prompt layout. Requires `kv_page_len > 0`.
+    pub prefix_sharing: bool,
 }
 
 impl CacheConfig {
     pub fn disabled() -> Self {
-        CacheConfig { enabled: false, refresh_interval: 0 }
+        CacheConfig {
+            enabled: false,
+            refresh_interval: 0,
+            kv_page_len: 0,
+            prefix_sharing: false,
+        }
     }
 
     pub fn block_boundary() -> Self {
-        CacheConfig { enabled: true, refresh_interval: 0 }
+        CacheConfig { enabled: true, ..CacheConfig::disabled() }
     }
 
     pub fn with_refresh_interval(n: usize) -> Self {
-        CacheConfig { enabled: true, refresh_interval: n }
+        CacheConfig { refresh_interval: n, ..CacheConfig::block_boundary() }
+    }
+
+    /// Builder: set the KV page length (0 disables paging).
+    pub fn paged(mut self, page_len: usize) -> Self {
+        self.kv_page_len = page_len;
+        self
+    }
+
+    /// Builder: toggle prompt-prefix sharing (defaults the page length
+    /// when paging wasn't sized explicitly).
+    pub fn with_prefix_sharing(mut self, on: bool) -> Self {
+        self.prefix_sharing = on;
+        if on && self.kv_page_len == 0 {
+            self.kv_page_len = 16;
+        }
+        self
+    }
+
+    /// Prefix sharing is active only with the cache on and pages sized.
+    pub fn sharing_active(&self) -> bool {
+        self.enabled && self.prefix_sharing && self.kv_page_len > 0
     }
 }
 
@@ -152,5 +190,21 @@ mod tests {
         assert!(!CacheConfig::disabled().enabled);
         assert!(CacheConfig::block_boundary().enabled);
         assert_eq!(CacheConfig::with_refresh_interval(4).refresh_interval, 4);
+    }
+
+    #[test]
+    fn paging_and_sharing_config() {
+        let c = CacheConfig::block_boundary();
+        assert_eq!(c.kv_page_len, 0);
+        assert!(!c.prefix_sharing);
+        assert!(!c.sharing_active());
+        let c = c.paged(8).with_prefix_sharing(true);
+        assert_eq!(c.kv_page_len, 8, "explicit page length kept");
+        assert!(c.sharing_active());
+        // sharing without an explicit page size picks a default
+        let c = CacheConfig::block_boundary().with_prefix_sharing(true);
+        assert_eq!(c.kv_page_len, 16);
+        // sharing never activates with the cache off
+        assert!(!CacheConfig::disabled().with_prefix_sharing(true).sharing_active());
     }
 }

@@ -1,0 +1,688 @@
+//! Paged dual-KV storage with prompt-prefix sharing (DESIGN.md §13).
+//!
+//! [`PagedKvPool`] slices the per-sequence (L, H, S, Dh) dual cache along
+//! the sequence axis into fixed-length **pages** (L, H, page_len, Dh),
+//! held in refcounted pool slots. A sequence's cache becomes a
+//! [`PageTable`] — an ordered list of page ids — instead of two owned
+//! whole-sequence buffers, so identical content can be *shared by
+//! reference*:
+//!
+//! - [`SharedKv`] keys a prefix index by the hash of a sequence's full
+//!   token layout at its first block-boundary refresh. At that point the
+//!   layout is `prompt ‖ all-[MASK] gen region`, byte-identical across
+//!   requests with the same prompt, so the refreshed K/V (and its
+//!   conf/argmax rows) are byte-identical too — a hit reuses the stored
+//!   pages and skips the `fwd_full_kv` pass entirely.
+//! - Shared pages are immutable. A hit clones the template's page table
+//!   by reference and **copy-on-write splits exactly one page**: the
+//!   first decode page (the page containing the first gen position),
+//!   which is where any in-block cache update would land. Later refreshes
+//!   mint fresh tables, so divergence after block 0 never aliases.
+//!
+//! Page slots live behind one mutex; refcounts drop pages back onto a
+//! free list the moment their last table releases them (retirement,
+//! block rollover, index eviction). The pool is capacity-bounded —
+//! exhaustion is a loud error (docs/RUNBOOK.md "Page-pool exhaustion"),
+//! never a silent eviction of live pages.
+
+use std::collections::hash_map::DefaultHasher;
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Result};
+
+use super::handle::KvCache;
+
+/// Cumulative paged-pool counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PagedStats {
+    /// Page slots ever allocated (fresh, not free-list reuses).
+    pub pages_allocated: u64,
+    /// Pages returned to the free list by their last reference.
+    pub pages_freed: u64,
+    /// Copy-on-write splits of shared pages.
+    pub cow_splits: u64,
+    /// Failed allocations (pool at capacity).
+    pub exhausted: u64,
+    /// Pages currently referenced by at least one table.
+    pub pages_in_use: usize,
+}
+
+struct Slot {
+    k: Vec<f32>,
+    v: Vec<f32>,
+    refs: u32,
+}
+
+struct SlotsInner {
+    slots: Vec<Slot>,
+    free: Vec<u32>,
+}
+
+struct PagedInner {
+    /// Per-sequence cache shape (layers, heads, seq, head_dim).
+    dims: [usize; 4],
+    /// Sequence positions per page.
+    page_len: usize,
+    /// Hard cap on live + free page slots.
+    max_pages: usize,
+    slots: Mutex<SlotsInner>,
+    pages_allocated: AtomicU64,
+    pages_freed: AtomicU64,
+    cow_splits: AtomicU64,
+    exhausted: AtomicU64,
+}
+
+impl PagedInner {
+    /// f32 elements per page side (k or v).
+    fn page_side_len(&self) -> usize {
+        self.dims[0] * self.dims[1] * self.page_len * self.dims[3]
+    }
+
+    fn n_pages(&self) -> usize {
+        self.dims[2].div_ceil(self.page_len)
+    }
+
+    /// Allocate one page slot (zeroed free-list reuse or fresh), with the
+    /// slots lock held.
+    fn alloc_locked(&self, g: &mut SlotsInner) -> Result<u32> {
+        if let Some(id) = g.free.pop() {
+            g.slots[id as usize].refs = 1;
+            return Ok(id);
+        }
+        if g.slots.len() >= self.max_pages {
+            self.exhausted.fetch_add(1, Ordering::Relaxed);
+            bail!(
+                "paged KV pool exhausted ({} pages, max {}) — see \
+                 docs/RUNBOOK.md \"Page-pool exhaustion\"",
+                g.slots.len(),
+                self.max_pages
+            );
+        }
+        let n = self.page_side_len();
+        g.slots.push(Slot { k: vec![0.0; n], v: vec![0.0; n], refs: 1 });
+        self.pages_allocated.fetch_add(1, Ordering::Relaxed);
+        Ok((g.slots.len() - 1) as u32)
+    }
+
+    fn unref_locked(&self, g: &mut SlotsInner, id: u32) {
+        let slot = &mut g.slots[id as usize];
+        debug_assert!(slot.refs > 0, "unref of a free page");
+        slot.refs -= 1;
+        if slot.refs == 0 {
+            g.free.push(id);
+            self.pages_freed.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Refcounted fixed-page KV storage shared across sequences. Cheap to
+/// clone (`Arc` inside); every [`PageTable`] keeps its pool alive.
+#[derive(Clone)]
+pub struct PagedKvPool {
+    inner: Arc<PagedInner>,
+}
+
+impl std::fmt::Debug for PagedKvPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = self.stats();
+        f.debug_struct("PagedKvPool")
+            .field("dims", &self.inner.dims)
+            .field("page_len", &self.inner.page_len)
+            .field("pages_in_use", &s.pages_in_use)
+            .finish()
+    }
+}
+
+impl PagedKvPool {
+    /// `dims` is the per-sequence cache shape (layers, heads, seq,
+    /// head_dim); `page_len` the sequence positions per page (clamped to
+    /// `[1, seq]`); `max_pages` bounds total slots.
+    pub fn new(dims: [usize; 4], page_len: usize, max_pages: usize) -> PagedKvPool {
+        let page_len = page_len.clamp(1, dims[2].max(1));
+        PagedKvPool {
+            inner: Arc::new(PagedInner {
+                dims,
+                page_len,
+                max_pages,
+                slots: Mutex::new(SlotsInner { slots: Vec::new(), free: Vec::new() }),
+                pages_allocated: AtomicU64::new(0),
+                pages_freed: AtomicU64::new(0),
+                cow_splits: AtomicU64::new(0),
+                exhausted: AtomicU64::new(0),
+            }),
+        }
+    }
+
+    pub fn dims(&self) -> [usize; 4] {
+        self.inner.dims
+    }
+
+    pub fn page_len(&self) -> usize {
+        self.inner.page_len
+    }
+
+    /// Pages per sequence table (`ceil(seq / page_len)`).
+    pub fn pages_per_seq(&self) -> usize {
+        self.inner.n_pages()
+    }
+
+    pub fn stats(&self) -> PagedStats {
+        let i = &self.inner;
+        let in_use = {
+            let g = i.slots.lock().unwrap();
+            g.slots.len() - g.free.len()
+        };
+        PagedStats {
+            pages_allocated: i.pages_allocated.load(Ordering::Relaxed),
+            pages_freed: i.pages_freed.load(Ordering::Relaxed),
+            cow_splits: i.cow_splits.load(Ordering::Relaxed),
+            exhausted: i.exhausted.load(Ordering::Relaxed),
+            pages_in_use: in_use,
+        }
+    }
+
+    /// Split a contiguous whole-sequence cache into a fresh page table.
+    /// The last page's tail (when `seq % page_len != 0`) stays zero and is
+    /// never read back.
+    pub fn paginate(&self, kv: &KvCache) -> Result<PageTable> {
+        let i = &self.inner;
+        if kv.dims != i.dims {
+            bail!("paginate dims {:?} != pool dims {:?}", kv.dims, i.dims);
+        }
+        let want: usize = i.dims.iter().product();
+        if kv.k.len() != want || kv.v.len() != want {
+            bail!("paginate payload {} != {want}", kv.k.len());
+        }
+        let [l, h, s, dh] = i.dims;
+        let p = i.page_len;
+        let mut g = i.slots.lock().unwrap();
+        let mut pages = Vec::with_capacity(i.n_pages());
+        for pi in 0..i.n_pages() {
+            let id = match i.alloc_locked(&mut g) {
+                Ok(id) => id,
+                Err(e) => {
+                    // roll back partial allocation before surfacing
+                    for &id in &pages {
+                        i.unref_locked(&mut g, id);
+                    }
+                    return Err(e);
+                }
+            };
+            let s0 = pi * p;
+            let cur = p.min(s - s0);
+            let slot = &mut g.slots[id as usize];
+            for li in 0..l {
+                for hi in 0..h {
+                    let src = ((li * h + hi) * s + s0) * dh;
+                    let dst = (li * h + hi) * p * dh;
+                    slot.k[dst..dst + cur * dh]
+                        .copy_from_slice(&kv.k[src..src + cur * dh]);
+                    slot.v[dst..dst + cur * dh]
+                        .copy_from_slice(&kv.v[src..src + cur * dh]);
+                }
+            }
+            pages.push(id);
+        }
+        drop(g);
+        Ok(PageTable { pool: i.clone(), pages })
+    }
+}
+
+/// One sequence's cache as an ordered list of refcounted page ids.
+/// Cloning shares every page by reference; dropping releases them.
+pub struct PageTable {
+    pool: Arc<PagedInner>,
+    pages: Vec<u32>,
+}
+
+impl std::fmt::Debug for PageTable {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PageTable")
+            .field("pages", &self.pages)
+            .finish()
+    }
+}
+
+impl Clone for PageTable {
+    fn clone(&self) -> Self {
+        let mut g = self.pool.slots.lock().unwrap();
+        for &id in &self.pages {
+            g.slots[id as usize].refs += 1;
+        }
+        drop(g);
+        PageTable { pool: self.pool.clone(), pages: self.pages.clone() }
+    }
+}
+
+impl Drop for PageTable {
+    fn drop(&mut self) {
+        let mut g = self.pool.slots.lock().unwrap();
+        for &id in &self.pages {
+            self.pool.unref_locked(&mut g, id);
+        }
+    }
+}
+
+impl PageTable {
+    pub fn dims(&self) -> [usize; 4] {
+        self.pool.dims
+    }
+
+    pub fn page_len(&self) -> usize {
+        self.pool.page_len
+    }
+
+    pub fn len(&self) -> usize {
+        self.pages.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pages.is_empty()
+    }
+
+    /// How many tables currently reference page `idx` (test/debug).
+    pub fn page_refs(&self, idx: usize) -> u32 {
+        let g = self.pool.slots.lock().unwrap();
+        g.slots[self.pages[idx] as usize].refs
+    }
+
+    /// Ensure page `idx` is privately owned: if shared, allocate a fresh
+    /// page, copy the contents, and swap it in (releasing the shared
+    /// original). Returns whether a split happened. The serving path
+    /// splits exactly one page per prefix hit — the first decode page.
+    pub fn cow_split(&mut self, idx: usize) -> Result<bool> {
+        let id = self.pages[idx];
+        let mut g = self.pool.slots.lock().unwrap();
+        if g.slots[id as usize].refs == 1 {
+            return Ok(false);
+        }
+        let fresh = self.pool.alloc_locked(&mut g)?;
+        // two-index split borrow: fresh was just allocated, so ids differ
+        let (a, b) = (id as usize, fresh as usize);
+        debug_assert_ne!(a, b);
+        let (k_src, v_src) = {
+            let s = &g.slots[a];
+            (s.k.clone(), s.v.clone())
+        };
+        g.slots[b].k.copy_from_slice(&k_src);
+        g.slots[b].v.copy_from_slice(&v_src);
+        self.pool.unref_locked(&mut g, id);
+        drop(g);
+        self.pages[idx] = fresh;
+        self.pool.cow_splits.fetch_add(1, Ordering::Relaxed);
+        Ok(true)
+    }
+
+    /// Mutate page `idx` in place. Refuses shared pages — callers must
+    /// [`PageTable::cow_split`] first, which is what keeps "no stale rows
+    /// after a COW split" structurally true.
+    pub fn patch(&self, idx: usize, f: impl FnOnce(&mut [f32], &mut [f32])) -> Result<()> {
+        let id = self.pages[idx] as usize;
+        let mut g = self.pool.slots.lock().unwrap();
+        let slot = &mut g.slots[id];
+        if slot.refs != 1 {
+            bail!("patch of a shared page (refs {}); cow_split first", slot.refs);
+        }
+        f(&mut slot.k, &mut slot.v);
+        Ok(())
+    }
+
+    /// Write this table's cache back as contiguous (L, H, S, Dh) rows —
+    /// the staging primitive the runtime uses to stack page tables
+    /// directly into a batched upload without intermediate whole-sequence
+    /// buffers. `k_out`/`v_out` must each hold exactly `L*H*S*Dh` floats.
+    pub fn copy_into(&self, k_out: &mut [f32], v_out: &mut [f32]) -> Result<()> {
+        let [l, h, s, dh] = self.pool.dims;
+        let want = l * h * s * dh;
+        if k_out.len() != want || v_out.len() != want {
+            bail!("copy_into target {} != {want}", k_out.len());
+        }
+        let p = self.pool.page_len;
+        let g = self.pool.slots.lock().unwrap();
+        for (pi, &id) in self.pages.iter().enumerate() {
+            let s0 = pi * p;
+            let cur = p.min(s - s0);
+            let slot = &g.slots[id as usize];
+            for li in 0..l {
+                for hi in 0..h {
+                    let dst = ((li * h + hi) * s + s0) * dh;
+                    let src = (li * h + hi) * p * dh;
+                    k_out[dst..dst + cur * dh]
+                        .copy_from_slice(&slot.k[src..src + cur * dh]);
+                    v_out[dst..dst + cur * dh]
+                        .copy_from_slice(&slot.v[src..src + cur * dh]);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Materialize a contiguous host copy (batch-1 upload path, tests).
+    pub fn assemble(&self) -> KvCache {
+        let n: usize = self.pool.dims.iter().product();
+        let mut kv = KvCache { k: vec![0.0; n], v: vec![0.0; n], dims: self.pool.dims };
+        self.copy_into(&mut kv.k, &mut kv.v)
+            .expect("sized to dims above");
+        kv
+    }
+}
+
+/// Hash of a full token layout — the prefix-index key. Taken at the first
+/// block-boundary refresh, where the layout is `prompt ‖ all-[MASK]`, so
+/// equal hashes ⇒ byte-identical model input ⇒ identical refresh output.
+pub fn layout_hash(tokens: &[u32]) -> u64 {
+    let mut h = DefaultHasher::new();
+    tokens.hash(&mut h);
+    h.finish()
+}
+
+struct PrefixEntry {
+    table: PageTable,
+    conf: Vec<f32>,
+    argmax: Vec<u32>,
+}
+
+/// Everything a prefix hit needs to stand in for a `fwd_full_kv` call:
+/// the shared page table (first decode page already COW-split) plus the
+/// stored conf/argmax rows of the identical refresh.
+pub struct PrefixHit {
+    pub table: PageTable,
+    pub conf: Vec<f32>,
+    pub argmax: Vec<u32>,
+    /// Pages reused by reference (table length minus the COW'd page).
+    pub shared_pages: usize,
+}
+
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SharedKvStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub entries: usize,
+    pub pool: PagedStats,
+}
+
+struct SharedInner {
+    pool: PagedKvPool,
+    /// First gen-region position — the page containing it is the COW page.
+    prompt_len: usize,
+    /// Bound on distinct templates retained.
+    cap: usize,
+    index: Mutex<HashMap<u64, PrefixEntry>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+/// The content-keyed prompt-prefix index + its paged pool. Cheap to clone
+/// (`Arc` inside); share one instance across an engine's schedulers for
+/// cross-request sharing.
+#[derive(Clone)]
+pub struct SharedKv {
+    inner: Arc<SharedInner>,
+}
+
+impl std::fmt::Debug for SharedKv {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = self.stats();
+        f.debug_struct("SharedKv")
+            .field("entries", &s.entries)
+            .field("hits", &s.hits)
+            .field("misses", &s.misses)
+            .finish()
+    }
+}
+
+/// Default cap on retained prefix entries (distinct templates).
+pub const PREFIX_INDEX_CAP: usize = 256;
+
+impl SharedKv {
+    /// `dims` per-sequence cache shape; `prompt_len` the first gen
+    /// position; `page_len` / `max_pages` size the underlying pool.
+    pub fn new(
+        dims: [usize; 4],
+        prompt_len: usize,
+        page_len: usize,
+        max_pages: usize,
+    ) -> SharedKv {
+        SharedKv {
+            inner: Arc::new(SharedInner {
+                pool: PagedKvPool::new(dims, page_len, max_pages),
+                prompt_len,
+                cap: PREFIX_INDEX_CAP,
+                index: Mutex::new(HashMap::new()),
+                hits: AtomicU64::new(0),
+                misses: AtomicU64::new(0),
+            }),
+        }
+    }
+
+    pub fn pool(&self) -> &PagedKvPool {
+        &self.inner.pool
+    }
+
+    /// Index of the page containing the first decode position.
+    fn first_decode_page(&self) -> usize {
+        self.inner.prompt_len / self.inner.pool.page_len()
+    }
+
+    /// Whether a layout is already indexed (admission-time probe; no
+    /// pages are touched).
+    pub fn contains(&self, tokens: &[u32]) -> bool {
+        self.inner
+            .index
+            .lock()
+            .unwrap()
+            .contains_key(&layout_hash(tokens))
+    }
+
+    /// Look the layout up; a hit returns shared pages (COW-split at the
+    /// first decode page) plus the stored conf/argmax rows. A miss — or a
+    /// hit the pool cannot COW (exhaustion) — returns `None` and counts.
+    pub fn probe(&self, tokens: &[u32]) -> Option<PrefixHit> {
+        let i = &self.inner;
+        let (mut table, conf, argmax) = {
+            let g = i.index.lock().unwrap();
+            match g.get(&layout_hash(tokens)) {
+                Some(e) => (e.table.clone(), e.conf.clone(), e.argmax.clone()),
+                None => {
+                    i.misses.fetch_add(1, Ordering::Relaxed);
+                    return None;
+                }
+            }
+        };
+        let split = match table.cow_split(self.first_decode_page()) {
+            Ok(s) => s,
+            Err(_) => {
+                // pool exhausted mid-hit: fall back to a plain refresh
+                i.misses.fetch_add(1, Ordering::Relaxed);
+                return None;
+            }
+        };
+        i.hits.fetch_add(1, Ordering::Relaxed);
+        let shared_pages = table.len() - usize::from(split);
+        Some(PrefixHit { table, conf, argmax, shared_pages })
+    }
+
+    /// Publish a refresh's output for followers: paginate the host KV,
+    /// store `(pages, conf, argmax)` under the layout hash, and return a
+    /// table sharing those pages for the inserting sequence itself. `None`
+    /// when the index is at capacity or the pool cannot hold the pages —
+    /// the caller keeps its original handle and nothing is shared.
+    pub fn insert(
+        &self,
+        tokens: &[u32],
+        conf: &[f32],
+        argmax: &[u32],
+        kv: &KvCache,
+    ) -> Option<PageTable> {
+        let i = &self.inner;
+        let key = layout_hash(tokens);
+        {
+            let g = i.index.lock().unwrap();
+            if g.len() >= i.cap && !g.contains_key(&key) {
+                return None;
+            }
+        }
+        let table = i.pool.paginate(kv).ok()?;
+        let entry = PrefixEntry {
+            table: table.clone(),
+            conf: conf.to_vec(),
+            argmax: argmax.to_vec(),
+        };
+        i.index.lock().unwrap().insert(key, entry);
+        Some(table)
+    }
+
+    pub fn stats(&self) -> SharedKvStats {
+        let i = &self.inner;
+        SharedKvStats {
+            hits: i.hits.load(Ordering::Relaxed),
+            misses: i.misses.load(Ordering::Relaxed),
+            entries: i.index.lock().unwrap().len(),
+            pool: i.pool.stats(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DIMS: [usize; 4] = [2, 2, 10, 3];
+
+    fn kv(fill: f32) -> KvCache {
+        let n: usize = DIMS.iter().product();
+        let k: Vec<f32> = (0..n).map(|i| fill + i as f32).collect();
+        let v: Vec<f32> = (0..n).map(|i| -fill - i as f32).collect();
+        KvCache { k, v, dims: DIMS }
+    }
+
+    #[test]
+    fn paginate_assemble_roundtrip() {
+        // page_len 4 over seq 10: pages of 4, 4, 2 — the ragged tail must
+        // survive the round trip
+        let pool = PagedKvPool::new(DIMS, 4, 64);
+        assert_eq!(pool.pages_per_seq(), 3);
+        let src = kv(1.0);
+        let table = pool.paginate(&src).unwrap();
+        assert_eq!(table.len(), 3);
+        let back = table.assemble();
+        assert_eq!(back.k, src.k);
+        assert_eq!(back.v, src.v);
+        assert_eq!(pool.stats().pages_in_use, 3);
+    }
+
+    #[test]
+    fn drop_reclaims_pages_on_retirement() {
+        let pool = PagedKvPool::new(DIMS, 4, 64);
+        let t1 = pool.paginate(&kv(1.0)).unwrap();
+        let t2 = pool.paginate(&kv(2.0)).unwrap();
+        assert_eq!(pool.stats().pages_in_use, 6);
+        drop(t1);
+        let s = pool.stats();
+        assert_eq!(s.pages_in_use, 3);
+        assert_eq!(s.pages_freed, 3);
+        // freed slots are reused, not re-allocated
+        let t3 = pool.paginate(&kv(3.0)).unwrap();
+        assert_eq!(pool.stats().pages_allocated, 6, "free list reused");
+        assert_eq!(pool.stats().pages_in_use, 6);
+        drop((t2, t3));
+        assert_eq!(pool.stats().pages_in_use, 0);
+    }
+
+    #[test]
+    fn no_page_freed_while_shared() {
+        let pool = PagedKvPool::new(DIMS, 4, 64);
+        let t1 = pool.paginate(&kv(1.0)).unwrap();
+        let t2 = t1.clone();
+        assert_eq!(t1.page_refs(0), 2);
+        drop(t1);
+        // t2 still owns every page: nothing may hit the free list
+        let s = pool.stats();
+        assert_eq!(s.pages_freed, 0);
+        assert_eq!(s.pages_in_use, 3);
+        assert_eq!(t2.assemble().k, kv(1.0).k, "shared pages intact");
+        drop(t2);
+        assert_eq!(pool.stats().pages_in_use, 0);
+    }
+
+    #[test]
+    fn cow_split_leaves_no_stale_rows() {
+        let pool = PagedKvPool::new(DIMS, 4, 64);
+        let src = kv(1.0);
+        let base = pool.paginate(&src).unwrap();
+        let mut fork = base.clone();
+        assert!(fork.cow_split(1).unwrap(), "shared page must split");
+        assert_eq!(base.page_refs(1), 1, "original page released by the fork");
+        assert_eq!(fork.page_refs(1), 1, "fork owns a private copy");
+        // the private copy starts content-identical...
+        assert_eq!(fork.assemble().k, src.k);
+        // ...and mutating it must not leak into the template
+        fork.patch(1, |k, _v| k[0] = 999.0).unwrap();
+        assert_eq!(base.assemble().k, src.k, "template sees no stale rows");
+        assert_eq!(fork.assemble().k[4 * DIMS[3]], 999.0);
+        // splitting an already-private page is a no-op
+        assert!(!fork.cow_split(1).unwrap());
+    }
+
+    #[test]
+    fn patch_refuses_shared_pages() {
+        let pool = PagedKvPool::new(DIMS, 4, 64);
+        let t1 = pool.paginate(&kv(1.0)).unwrap();
+        let _t2 = t1.clone();
+        assert!(t1.patch(0, |_, _| {}).is_err(), "shared pages are immutable");
+    }
+
+    #[test]
+    fn exhaustion_fails_loudly_and_rolls_back() {
+        let pool = PagedKvPool::new(DIMS, 4, 4);
+        let t1 = pool.paginate(&kv(1.0)).unwrap(); // 3 of 4 pages
+        let err = pool.paginate(&kv(2.0)).unwrap_err();
+        assert!(err.to_string().contains("exhausted"), "{err}");
+        assert!(err.to_string().contains("RUNBOOK"), "{err}");
+        // partial allocation rolled back: only t1's pages remain live
+        assert_eq!(pool.stats().pages_in_use, 3);
+        assert_eq!(pool.stats().exhausted, 1);
+        drop(t1);
+        assert!(pool.paginate(&kv(3.0)).is_ok(), "recovers after release");
+    }
+
+    #[test]
+    fn prefix_probe_shares_and_cows() {
+        // prompt_len 5, page_len 4 => first decode page is index 1
+        let shared = SharedKv::new(DIMS, 5, 4, 64);
+        let layout: Vec<u32> = (0..10).collect();
+        assert!(shared.probe(&layout).is_none(), "cold index misses");
+        let conf = vec![0.5; 10];
+        let argmax = vec![7u32; 10];
+        let table = shared.insert(&layout, &conf, &argmax, &kv(4.0)).unwrap();
+        assert!(shared.contains(&layout));
+        let hit = shared.probe(&layout).expect("indexed layout hits");
+        assert_eq!(hit.conf, conf);
+        assert_eq!(hit.argmax, argmax);
+        assert_eq!(hit.shared_pages, 2, "3 pages minus the COW'd decode page");
+        assert_eq!(hit.table.page_refs(0), 3, "entry + inserter + hit");
+        assert_eq!(hit.table.page_refs(1), 1, "decode page privately owned");
+        assert_eq!(hit.table.assemble().k, kv(4.0).k, "hit sees template KV");
+        // different layout: miss
+        let other: Vec<u32> = (1..11).collect();
+        assert!(shared.probe(&other).is_none());
+        let s = shared.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (1, 2, 1));
+        drop((table, hit));
+    }
+
+    #[test]
+    fn probe_survives_pool_exhaustion() {
+        // pool sized so the entry fits but the hit's COW page does not
+        let shared = SharedKv::new(DIMS, 5, 4, 3);
+        let layout: Vec<u32> = (0..10).collect();
+        shared
+            .insert(&layout, &[0.5; 10], &[1u32; 10], &kv(1.0))
+            .unwrap();
+        assert!(shared.probe(&layout).is_none(), "COW alloc fails => miss");
+        assert_eq!(shared.stats().pool.exhausted, 1);
+    }
+}

@@ -74,6 +74,12 @@ impl PoolInner {
                     self.dropped.fetch_add(1, Ordering::Relaxed);
                 }
             }
+            // paged storage self-reclaims via PageTable::drop (page refs);
+            // it is never minted with a whole-buffer pool link
+            CacheStorage::Paged(table) => {
+                drop(table);
+                self.dropped.fetch_add(1, Ordering::Relaxed);
+            }
         }
     }
 }

@@ -748,6 +748,23 @@ fn worker_loop<M: ForwardModel>(
                         "fused_window_passes",
                         report.fused_window_passes as u64,
                     );
+                    // paged-pool + bucketing observability (DESIGN.md §13)
+                    metrics.add(
+                        "prefix_sharing_saved_full_passes",
+                        report.saved_full_passes as u64,
+                    );
+                    metrics.add("kv_page_reuse", report.pages_reused as u64);
+                    metrics.add(
+                        "window_padding_rows",
+                        report.padding_rows as u64,
+                    );
+                    metrics.set_gauge(
+                        "kv_pages_in_use",
+                        report.kv_pages_in_use as i64,
+                    );
+                    for &(live, _bucket) in &report.window_groups {
+                        metrics.observe("window_bucket_occupancy", live as f64);
+                    }
                     for &(id, n) in &report.accepted {
                         metrics.observe("accepted_per_step", n as f64);
                         if n == 0 {

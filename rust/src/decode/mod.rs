@@ -44,6 +44,15 @@ use crate::runtime::{accept_rows, AcceptOut, AcceptRule, ConfOut, RuntimeStats};
 pub trait ForwardModel {
     fn config(&self) -> &ModelConfig;
     fn max_batch(&self) -> usize;
+    /// Window/fused-accept batch sizes the backend executes natively
+    /// (ascending, deduped). The scheduler groups window steps up to the
+    /// widest bucket and accounts padding against the smallest bucket
+    /// that fits each group (DESIGN.md §13). Defaults to a single bucket
+    /// of [`ForwardModel::max_batch`] for backends without bucketed
+    /// variants.
+    fn window_buckets(&self) -> Vec<usize> {
+        vec![self.max_batch().max(1)]
+    }
     /// Full forward over a batch of borrowed sequences: per-position
     /// confidence + greedy candidate per row.
     fn fwd_conf(&self, batch_tokens: &[&[u32]]) -> Result<ConfOut>;
@@ -135,6 +144,9 @@ impl ForwardModel for crate::runtime::ModelRuntime {
     fn max_batch(&self) -> usize {
         self.max_batch()
     }
+    fn window_buckets(&self) -> Vec<usize> {
+        crate::runtime::ModelRuntime::window_buckets(self)
+    }
     fn fwd_conf(&self, batch_tokens: &[&[u32]]) -> Result<ConfOut> {
         crate::runtime::ModelRuntime::fwd_conf(self, batch_tokens)
     }
@@ -204,30 +216,50 @@ pub struct Engine<'m, M: ForwardModel> {
     model: &'m M,
     /// Fast-dLLM dual KV cache behaviour.
     pub cache: crate::cache::CacheConfig,
+    /// Prompt-prefix index + paged pool, when `cache.sharing_active()`.
+    /// Held at engine level so every scheduler minted from this engine
+    /// (including rebuilds after a step error) shares one index.
+    shared: Option<crate::cache::SharedKv>,
 }
 
 impl<'m, M: ForwardModel> Engine<'m, M> {
     pub fn new(model: &'m M) -> Self {
-        Engine { model, cache: crate::cache::CacheConfig::disabled() }
+        Engine::with_cache(model, crate::cache::CacheConfig::disabled())
     }
 
     pub fn with_kv_cache(model: &'m M) -> Self {
-        Engine { model, cache: crate::cache::CacheConfig::block_boundary() }
+        Engine::with_cache(model, crate::cache::CacheConfig::block_boundary())
     }
 
     pub fn with_cache(model: &'m M, cache: crate::cache::CacheConfig) -> Self {
-        Engine { model, cache }
+        let shared = cache.sharing_active().then(|| {
+            let c = model.config();
+            crate::cache::SharedKv::new(
+                [c.n_layers, c.n_heads, c.seq_len, c.head_dim],
+                c.prompt_len,
+                cache.kv_page_len,
+                crate::cache::DEFAULT_MAX_KV_PAGES,
+            )
+        });
+        Engine { model, cache, shared }
     }
 
     pub fn model(&self) -> &M {
         self.model
     }
 
+    /// The engine's prompt-prefix index, when prefix sharing is active.
+    pub fn shared_kv(&self) -> Option<&crate::cache::SharedKv> {
+        self.shared.as_ref()
+    }
+
     /// A fresh scheduler with this engine's model and cache configuration —
     /// the entry point for drivers that admit/retire sequences themselves
     /// (the coordinator's continuous-batching worker loop).
     pub fn scheduler<P: PolicyRef>(&self, max_active: usize) -> StepScheduler<'m, M, P> {
-        StepScheduler::new(self.model, self.cache, max_active)
+        let mut sched = StepScheduler::new(self.model, self.cache, max_active);
+        sched.set_shared_kv(self.shared.clone());
+        sched
     }
 
     /// Decode one sequence (batch 1 — the paper's serving setup).
@@ -255,7 +287,10 @@ impl<'m, M: ForwardModel> Engine<'m, M> {
             bail!("{} layouts vs {} policies", layouts.len(), policies.len());
         }
         let n = layouts.len();
-        let mut sched = self.scheduler::<&dyn Policy>(self.model.max_batch());
+        // ask for n slots: the scheduler clamps to the widest compiled
+        // bucket, so co-execution widens past max_batch when bucketed
+        // window variants exist
+        let mut sched = self.scheduler::<&dyn Policy>(n.max(1));
         for (i, (layout, &policy)) in layouts.into_iter().zip(policies).enumerate() {
             sched.admit(i as u64, layout, policy)?;
         }

@@ -23,7 +23,7 @@ use std::collections::VecDeque;
 
 use anyhow::{bail, Result};
 
-use crate::cache::{CacheConfig, CacheHandle};
+use crate::cache::{CacheConfig, CacheHandle, PrefixHit, SharedKv};
 use crate::policy::{PlanContext, Policy, StepPlan};
 use crate::runtime::AcceptRule;
 
@@ -53,6 +53,10 @@ struct Entry<P: PolicyRef> {
     id: u64,
     task: DecodeTask,
     policy: P,
+    /// Prefix-index hit stashed by the admission-time probe, consumed at
+    /// this sequence's first block-boundary refresh instead of a model
+    /// call (pages stay pinned while the sequence waits for a slot).
+    prefix: Option<PrefixHit>,
 }
 
 /// What one scheduler step did.
@@ -75,7 +79,22 @@ pub struct StepReport {
     /// in processing order — the serving `accepted_per_step` histogram's
     /// raw material, and (via the id) the coordinator's TTFT anchor: a
     /// sequence's first entry with a non-zero count is its first token.
+    /// Only live rows appear here: padding rows of a bucketed pass never
+    /// report commits.
     pub accepted: Vec<(u64, usize)>,
+    /// `fwd_full_kv` calls skipped via a prompt-prefix index hit (counted
+    /// inside `full_passes` — the pass is attributed, not executed).
+    pub saved_full_passes: usize,
+    /// KV pages reused by reference across prefix hits this step.
+    pub pages_reused: usize,
+    /// Live pages in the paged pool after this step (0 without sharing).
+    pub kv_pages_in_use: usize,
+    /// Padding rows implied by bucket selection across this step's
+    /// window/fused groups (bucket size minus live rows, summed).
+    pub padding_rows: usize,
+    /// `(live rows, chosen bucket)` per co-executed window/fused group —
+    /// the bucket-occupancy histogram's raw material.
+    pub window_groups: Vec<(usize, usize)>,
 }
 
 /// FIFO continuous-batching scheduler over one forward model.
@@ -83,6 +102,12 @@ pub struct StepScheduler<'m, M: ForwardModel, P: PolicyRef> {
     model: &'m M,
     cache: CacheConfig,
     max_active: usize,
+    /// The model's window/fused batch buckets, ascending and deduped.
+    /// Window groups chunk at the widest bucket; each chunk runs in the
+    /// smallest bucket that fits it, the rest is accounted padding.
+    buckets: Vec<usize>,
+    /// Prompt-prefix index (DESIGN.md §13), when sharing is active.
+    shared: Option<SharedKv>,
     /// Route window steps of fusible-plan policies through the fused
     /// `fwd_window_accept` path (default). Drivers that need full per-step
     /// confidence traces from *every* policy — e.g. a registry running EMA
@@ -95,17 +120,64 @@ pub struct StepScheduler<'m, M: ForwardModel, P: PolicyRef> {
 }
 
 impl<'m, M: ForwardModel, P: PolicyRef> StepScheduler<'m, M, P> {
-    /// `max_active` is clamped to `[1, model.max_batch()]`.
+    /// `max_active` is clamped to `[1, max(model.max_batch(), widest
+    /// window bucket)]` — bucketed window variants let cached sequences
+    /// co-execute wider than the conf-pass batch.
     pub fn new(model: &'m M, cache: CacheConfig, max_active: usize) -> Self {
-        let max_active = max_active.clamp(1, model.max_batch().max(1));
+        let mut buckets = model.window_buckets();
+        buckets.sort_unstable();
+        buckets.dedup();
+        buckets.retain(|&b| b > 0);
+        if buckets.is_empty() {
+            buckets.push(model.max_batch().max(1));
+        }
+        let widest = *buckets.last().expect("non-empty above");
+        let max_active = max_active.clamp(1, model.max_batch().max(widest));
+        let shared = cache.sharing_active().then(|| {
+            let c = model.config();
+            SharedKv::new(
+                [c.n_layers, c.n_heads, c.seq_len, c.head_dim],
+                c.prompt_len,
+                cache.kv_page_len,
+                crate::cache::DEFAULT_MAX_KV_PAGES,
+            )
+        });
         StepScheduler {
             model,
             cache,
             max_active,
+            buckets,
+            shared,
             fused: true,
             waiting: VecDeque::new(),
             active: Vec::new(),
         }
+    }
+
+    /// Replace the prefix index (engines inject their own so schedulers
+    /// rebuilt after an error keep accumulated entries). `None` disables
+    /// sharing for this scheduler.
+    pub fn set_shared_kv(&mut self, shared: Option<SharedKv>) {
+        self.shared = shared;
+    }
+
+    pub fn shared_kv(&self) -> Option<&SharedKv> {
+        self.shared.as_ref()
+    }
+
+    /// The bucket ladder this scheduler groups window steps into.
+    pub fn window_buckets(&self) -> &[usize] {
+        &self.buckets
+    }
+
+    /// Smallest bucket that fits `n` live rows (the dispatch rule,
+    /// DESIGN.md §13); `n` itself when every bucket is smaller.
+    fn bucket_for(&self, n: usize) -> usize {
+        self.buckets
+            .iter()
+            .copied()
+            .find(|&b| b >= n)
+            .unwrap_or(n)
     }
 
     /// Enable/disable the fused device-acceptance fast path (on by
@@ -130,7 +202,14 @@ impl<'m, M: ForwardModel, P: PolicyRef> StepScheduler<'m, M, P> {
             bail!("sequence id {id} is already scheduled");
         }
         let task = DecodeTask::new(layout, self.model.config(), self.cache)?;
-        self.waiting.push_back(Entry { id, task, policy });
+        // admission-time prefix probe: an admitted layout is exactly the
+        // block-0 refresh input (prompt ‖ all-[MASK]), so a hit here pins
+        // the template's pages for consumption at the first FullKv step
+        let prefix = self
+            .shared
+            .as_ref()
+            .and_then(|s| s.probe(task.tokens()));
+        self.waiting.push_back(Entry { id, task, policy, prefix });
         Ok(())
     }
 
@@ -218,10 +297,61 @@ impl<'m, M: ForwardModel, P: PolicyRef> StepScheduler<'m, M, P> {
 
         // ---- block-boundary cache refreshes (batch-1 by runtime contract)
         for &i in &full_kv {
+            // prefix sharing applies only to the *first* refresh, where
+            // the layout is the pure prompt template; later refreshes see
+            // committed tokens and must run for real
+            let sharable = self.shared.is_some()
+                && self.active[i].task.block() == 0
+                && self.active[i].task.step_in_block() == 0;
+            let hit = if sharable {
+                match self.active[i].prefix.take() {
+                    stash @ Some(_) => stash,
+                    // re-probe: a same-template sequence earlier in this
+                    // very loop may have inserted since admission
+                    None => self
+                        .shared
+                        .as_ref()
+                        .and_then(|s| s.probe(self.active[i].task.tokens())),
+                }
+            } else {
+                None
+            };
+            if let Some(hit) = hit {
+                let e = &mut self.active[i];
+                e.task.install_cache(CacheHandle::paged(hit.table));
+                let n = e.task.apply(
+                    cfg,
+                    e.policy.as_policy(),
+                    PassKind::FullKv,
+                    &hit.conf,
+                    &hit.argmax,
+                );
+                report.accepted.push((e.id, n));
+                report.full_passes += 1; // attributed, not executed
+                report.saved_full_passes += 1;
+                report.pages_reused += hit.shared_pages;
+                continue;
+            }
             let (out, kv) = model.fwd_full_kv(self.active[i].task.tokens())?;
             if out.is_empty() {
                 bail!("fwd_full_kv returned no rows");
             }
+            // publish the refresh for followers of the same template (a
+            // device-resident handle exposes no host KV and stays as-is)
+            let kv = match (sharable, &self.shared) {
+                (true, Some(shared)) => match kv.host_kv().and_then(|host| {
+                    shared.insert(
+                        self.active[i].task.tokens(),
+                        out.conf_row(0),
+                        out.argmax_row(0),
+                        &host,
+                    )
+                }) {
+                    Some(table) => CacheHandle::paged(table),
+                    None => kv,
+                },
+                _ => kv,
+            };
             let e = &mut self.active[i];
             e.task.install_cache(kv);
             let n = e.task.apply(
@@ -236,8 +366,9 @@ impl<'m, M: ForwardModel, P: PolicyRef> StepScheduler<'m, M, P> {
             report.full_passes += 1;
         }
 
-        // ---- batched uncached full passes
-        for chunk in full.chunks(self.max_active) {
+        // ---- batched uncached full passes (conf variants top out at
+        // max_batch even when window buckets let max_active run wider)
+        for chunk in full.chunks(model.max_batch().max(1)) {
             let out = {
                 let batch: Vec<&[u32]> = chunk
                     .iter()
@@ -267,8 +398,13 @@ impl<'m, M: ForwardModel, P: PolicyRef> StepScheduler<'m, M, P> {
             report.full_passes += chunk.len();
         }
 
-        // ---- batched in-block window passes (host-full plans)
-        for chunk in window.chunks(self.max_active) {
+        // ---- batched in-block window passes (host-full plans), grouped
+        // up to the widest compiled bucket
+        let widest = *self.buckets.last().expect("buckets non-empty");
+        for chunk in window.chunks(widest) {
+            let bucket = self.bucket_for(chunk.len());
+            report.padding_rows += bucket - chunk.len();
+            report.window_groups.push((chunk.len(), bucket));
             let mut starts: Vec<usize> = Vec::with_capacity(chunk.len());
             let out = {
                 let mut windows: Vec<&[u32]> = Vec::with_capacity(chunk.len());
@@ -312,7 +448,10 @@ impl<'m, M: ForwardModel, P: PolicyRef> StepScheduler<'m, M, P> {
 
         // ---- fused window passes: the decision runs on device, only the
         // compact acceptance comes back (DESIGN.md §11)
-        for chunk in fused.chunks(self.max_active) {
+        for chunk in fused.chunks(widest) {
+            let bucket = self.bucket_for(chunk.len());
+            report.padding_rows += bucket - chunk.len();
+            report.window_groups.push((chunk.len(), bucket));
             let mut starts: Vec<usize> = Vec::with_capacity(chunk.len());
             let out = {
                 let mut windows: Vec<&[u32]> = Vec::with_capacity(chunk.len());
@@ -366,6 +505,9 @@ impl<'m, M: ForwardModel, P: PolicyRef> StepScheduler<'m, M, P> {
             } else {
                 i += 1;
             }
+        }
+        if let Some(shared) = &self.shared {
+            report.kv_pages_in_use = shared.stats().pool.pages_in_use;
         }
         Ok(report)
     }

@@ -34,7 +34,7 @@ const VALUE_FLAGS: &[&str] = &[
     "artifacts", "policy", "task", "prompt", "n", "addr", "workers",
     "max-batch", "batch-wait-ms", "mode", "metric", "profile-dir", "tau",
     "refresh-interval", "save", "drift-floor", "ema-alpha", "cache-residency",
-    "metrics-addr",
+    "metrics-addr", "kv-page-len", "prefix-sharing",
 ];
 
 fn main() {
@@ -85,6 +85,10 @@ COMMON FLAGS:
   --refresh-interval N  cache staleness bound (window steps; 0 = block only)
   --cache-residency R   where K/V lives between refreshes: device (default,
                         zero per-step host round trip) or host (legacy A/B)
+  --kv-page-len N       page the KV cache: N sequence positions per page
+                        (0 = whole-sequence handles, the default)
+  --prefix-sharing on|off  share block-0 refresh KV pages + outputs across
+                        requests with identical prompts (implies paging)
 
 PROFILE REGISTRY (serve):
   --profile-dir DIR    persist calibrated profiles; warm-start on restart
@@ -113,11 +117,19 @@ fn load_stack(args: &Args) -> Result<(ModelConfig, ModelRuntime, Tokenizer)> {
 fn cache_config(args: &Args) -> Result<CacheConfig> {
     if args.has("cache") {
         let r = args.get_parse::<usize>("refresh-interval", 0)?;
-        Ok(if r > 0 {
+        let base = if r > 0 {
             CacheConfig::with_refresh_interval(r)
         } else {
             CacheConfig::block_boundary()
-        })
+        };
+        let sharing = match args.get_or("prefix-sharing", "off") {
+            "on" => true,
+            "off" => false,
+            other => bail!("unknown --prefix-sharing {other:?} (on|off)"),
+        };
+        Ok(base
+            .paged(args.get_parse::<usize>("kv-page-len", 0)?)
+            .with_prefix_sharing(sharing))
     } else {
         Ok(CacheConfig::disabled())
     }

@@ -408,6 +408,31 @@ pub fn catalog() -> &'static [MetricSpec] {
              (DESIGN.md \u{a7}11); divided by osdt_window_passes_total this \
              is the fused-pass fraction.",
         ),
+        // -- paged KV pool + prefix sharing (DESIGN.md §13) ----------------
+        counter(
+            "prefix_sharing_saved_full_passes",
+            "osdt_prefix_sharing_saved_full_passes_total",
+            "coordinator",
+            "Block-0 fwd_full_kv refreshes skipped because an identical \
+             prompt layout was already in the prefix index (its pages and \
+             conf/argmax rows were reused instead).",
+        ),
+        counter(
+            "kv_page_reuse",
+            "osdt_kv_page_reuse_total",
+            "coordinator",
+            "KV pages reused by reference across prefix-index hits \
+             (pages per hit times hits; excludes the per-hit COW'd first \
+             decode page).",
+        ),
+        counter(
+            "window_padding_rows",
+            "osdt_window_padding_rows_total",
+            "coordinator",
+            "Padding rows implied by bucket selection across window/fused \
+             groups (chosen bucket minus live rows, summed) — the waste \
+             side of the bucket ladder.",
+        ),
         // -- transfer ledger (workers with a stats-reporting runtime) ------
         seconds_counter(
             "model_exec_us",
@@ -467,6 +492,13 @@ pub fn catalog() -> &'static [MetricSpec] {
             "coordinator",
             "High-water batch occupancy since start.",
         ),
+        gauge(
+            "kv_pages_in_use",
+            "osdt_kv_pages_in_use",
+            "coordinator",
+            "Live pages in the paged KV pool after the most recent \
+             scheduler step (0 when prefix sharing is off).",
+        ),
         // -- histograms ----------------------------------------------------
         histogram(
             "batch_occupancy",
@@ -483,7 +515,18 @@ pub fn catalog() -> &'static [MetricSpec] {
             COUNT_BUCKETS,
             "coordinator",
             "Tokens committed per advanced sequence per step — the \
-             parallelism each policy actually buys.",
+             parallelism each policy actually buys. Only live rows are \
+             observed; bucket padding rows never appear.",
+        ),
+        histogram(
+            "window_bucket_occupancy",
+            "osdt_window_bucket_occupancy",
+            1.0,
+            COUNT_BUCKETS,
+            "coordinator",
+            "Live rows per co-executed window/fused group — how full the \
+             chosen buckets run (compare osdt_window_padding_rows_total \
+             for the padding complement).",
         ),
         histogram(
             "request_latency",

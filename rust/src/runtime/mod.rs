@@ -556,6 +556,14 @@ impl ModelRuntime {
         *self.conf_batches.last().unwrap()
     }
 
+    /// Compiled window/fused batch sizes, ascending — the scheduler's
+    /// bucket ladder. Parsed from the variant table at load, so artifact
+    /// sets with wider buckets (b8/b16/b32) flow through without code
+    /// changes.
+    pub fn window_buckets(&self) -> Vec<usize> {
+        self.window_batches.clone()
+    }
+
     /// Smallest compiled batch size that fits `n` sequences.
     pub fn pick_batch(&self, n: usize) -> usize {
         self.conf_batches
@@ -844,7 +852,8 @@ impl ModelRuntime {
                 true,
             )?,
             None => {
-                let kv = cache.as_host().expect("host or device");
+                // host or paged storage; paged assembles its pages here
+                let kv = cache.host_kv().expect("host-visible or device");
                 let k_buf = self.upload_f32(Entry::Window, &kv.k, &dims, true)?;
                 let v_buf = self.upload_f32(Entry::Window, &kv.v, &dims, true)?;
                 self.exec(
@@ -1050,9 +1059,18 @@ impl ModelRuntime {
             if cache.dims() != cache_dims {
                 bail!("cache dims {:?} != {:?}", cache.dims(), cache_dims);
             }
-            let kv = cache.as_host().expect("stacked path is all-host");
-            flat_k.extend_from_slice(&kv.k);
-            flat_v.extend_from_slice(&kv.v);
+            if let Some(table) = cache.as_paged() {
+                // stack the page table straight into the staging area —
+                // no intermediate whole-sequence buffer
+                let at = flat_k.len();
+                flat_k.resize(at + cache_len, 0.0);
+                flat_v.resize(at + cache_len, 0.0);
+                table.copy_into(&mut flat_k[at..], &mut flat_v[at..])?;
+            } else {
+                let kv = cache.as_host().expect("stacked path is all-host");
+                flat_k.extend_from_slice(&kv.k);
+                flat_v.extend_from_slice(&kv.v);
+            }
         }
         // padding rows: zero caches
         flat_k.resize(b * cache_len, 0.0);
@@ -1125,6 +1143,11 @@ impl ModelRuntime {
             .copied()
             .find(|&b| b >= n)
             .unwrap_or_else(|| self.window_batches.last().copied().unwrap_or(1));
+        if b == 1 {
+            // fwd_window_b1 takes a scalar start — a size-1 tail chunk
+            // must go through the batch-1 entry point
+            return self.fwd_window(windows[0], starts[0], caches[0]);
+        }
         let w = self.cfg.block_len;
         let mut scratch = self.scratch.borrow_mut();
         let (tok_buf, start_buf) =
@@ -1280,6 +1303,18 @@ impl ModelRuntime {
         Ok((tau_buf, factor_buf))
     }
 
+    /// Upload the `row_live` mask of a padded accept batch: 1 for the `n`
+    /// live rows, 0 for padding. The batched `fwd_window_accept_b{B}`
+    /// executables zero dead rows' commits, fallback flags, and step means
+    /// on device, so padding never surfaces as phantom work.
+    fn upload_live(&self, n: usize, b: usize) -> Result<xla::PjRtBuffer> {
+        let mut live = vec![0i32; b];
+        for x in live.iter_mut().take(n) {
+            *x = 1;
+        }
+        self.upload_i32(Entry::Accept, &live, &[b])
+    }
+
     /// Batch-1 fused pass (`fwd_window_accept_b1`), either cache residency.
     fn fwd_window_accept_one(
         &self,
@@ -1310,7 +1345,7 @@ impl ModelRuntime {
                 true,
             )?,
             None => {
-                let kv = cache.as_host().expect("host or device");
+                let kv = cache.host_kv().expect("host-visible or device");
                 let k_buf = self.upload_f32(Entry::Accept, &kv.k, &dims, true)?;
                 let v_buf = self.upload_f32(Entry::Accept, &kv.v, &dims, true)?;
                 self.exec(
@@ -1349,11 +1384,20 @@ impl ModelRuntime {
             self.upload_window_rows(&mut scratch, windows, starts, b, Entry::Accept)?
         };
         let (tau_buf, factor_buf) = self.upload_rules(rules, b)?;
+        let live_buf = self.upload_live(n, b)?;
         let (k_stacked, v_stacked) = self.gather_stack(caches, b)?;
         let parts = self.exec(
             &format!("fwd_window_accept_b{b}"),
             Entry::Accept,
-            &[&tok_buf, &start_buf, &k_stacked, &v_stacked, &tau_buf, &factor_buf],
+            &[
+                &tok_buf,
+                &start_buf,
+                &k_stacked,
+                &v_stacked,
+                &tau_buf,
+                &factor_buf,
+                &live_buf,
+            ],
             &[2, 3],
             true,
         )?;
@@ -1376,16 +1420,30 @@ impl ModelRuntime {
             .copied()
             .find(|&b| b >= n)
             .unwrap_or_else(|| self.accept_batches.last().copied().unwrap_or(1));
+        if b == 1 {
+            // the b1 executable has scalar-start, no-row_live arity — a
+            // size-1 tail chunk must go through the batch-1 entry point
+            return self.fwd_window_accept_one(windows[0], starts[0], caches[0], rules[0]);
+        }
         let mut scratch = self.scratch.borrow_mut();
         let (tok_buf, start_buf) =
             self.upload_window_rows(&mut scratch, windows, starts, b, Entry::Accept)?;
         let (k_buf, v_buf) =
             self.upload_host_kv_stack(&mut scratch, caches, b, Entry::Accept)?;
         let (tau_buf, factor_buf) = self.upload_rules(rules, b)?;
+        let live_buf = self.upload_live(n, b)?;
         let parts = self.exec(
             &format!("fwd_window_accept_b{b}"),
             Entry::Accept,
-            &[&tok_buf, &start_buf, &k_buf, &v_buf, &tau_buf, &factor_buf],
+            &[
+                &tok_buf,
+                &start_buf,
+                &k_buf,
+                &v_buf,
+                &tau_buf,
+                &factor_buf,
+                &live_buf,
+            ],
             &[],
             true,
         )?;

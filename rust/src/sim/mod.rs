@@ -94,6 +94,9 @@ pub struct SimModel {
     seed: u64,
     pool: CachePool,
     chaos: Option<Arc<Chaos>>,
+    /// Cumulative `fwd_full_kv` invocations (clones share it) — lets
+    /// prefix-sharing tests counter-assert skipped refreshes.
+    full_kv_calls: Arc<AtomicU64>,
 }
 
 fn hash2(a: u64, b: u64) -> u64 {
@@ -111,12 +114,32 @@ impl SimModel {
         let cfg = tiny_config();
         let dims = [cfg.n_layers, cfg.n_heads, cfg.seq_len, cfg.head_dim];
         // clones share the pool (it is the model's recycler, not state)
-        SimModel { cfg, task, seed, pool: CachePool::new(dims, 8), chaos: None }
+        SimModel {
+            cfg,
+            task,
+            seed,
+            pool: CachePool::new(dims, 8),
+            chaos: None,
+            full_kv_calls: Arc::new(AtomicU64::new(0)),
+        }
     }
 
     /// Attach a fault-injection hook; see [`Chaos`].
     pub fn with_chaos(mut self, chaos: Arc<Chaos>) -> Self {
         self.chaos = Some(chaos);
+        self
+    }
+
+    /// Swap in a different (self-consistent) model configuration — e.g. a
+    /// single-block layout, where prefix-sharing tests can assert executed
+    /// full refreshes < requests. Re-sizes the handle pool; the shared
+    /// `full_kv_calls` counter carries over.
+    pub fn with_config(mut self, cfg: ModelConfig) -> Self {
+        self.pool = CachePool::new(
+            [cfg.n_layers, cfg.n_heads, cfg.seq_len, cfg.head_dim],
+            8,
+        );
+        self.cfg = cfg;
         self
     }
 
@@ -133,6 +156,11 @@ impl SimModel {
     /// The cache-storage recycler backing this model's handles.
     pub fn pool(&self) -> &CachePool {
         &self.pool
+    }
+
+    /// `fwd_full_kv` calls executed so far (shared across clones).
+    pub fn full_kv_calls(&self) -> u64 {
+        self.full_kv_calls.load(Ordering::Relaxed)
     }
 
     /// GSM8K-analog signature: high peak, moderate base.
@@ -242,6 +270,12 @@ impl ForwardModel for SimModel {
         4
     }
 
+    fn window_buckets(&self) -> Vec<usize> {
+        // mirror the compiled variant ladder so scheduler bucket/padding
+        // behaviour is testable without artifacts
+        vec![1, 2, 4, 8, 16, 32]
+    }
+
     fn fwd_conf(&self, batch_tokens: &[&[u32]]) -> Result<ConfOut> {
         self.trip()?;
         let mut out = ConfOut::with_capacity(self.cfg.seq_len, batch_tokens.len());
@@ -254,6 +288,7 @@ impl ForwardModel for SimModel {
 
     fn fwd_full_kv(&self, tokens: &[u32]) -> Result<(ConfOut, CacheHandle)> {
         self.trip()?;
+        self.full_kv_calls.fetch_add(1, Ordering::Relaxed);
         let (c, a) = self.score(tokens, 0);
         let mut out = ConfOut::with_capacity(self.cfg.seq_len, 1);
         out.push_row(&c, &a);

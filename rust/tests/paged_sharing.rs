@@ -1,0 +1,242 @@
+//! Integration tests for bucketed window dispatch and the paged KV pool
+//! with prompt-prefix sharing (DESIGN.md §13) over the analytic simulator:
+//! padded-bucket groups must be invisible in per-sequence results, window
+//! groups must co-execute past the legacy max-batch ceiling, and prefix
+//! sharing must skip real `fwd_full_kv` executions without changing a
+//! single token.
+
+use osdt::cache::CacheConfig;
+use osdt::decode::{DecodeResult, Engine, ForwardModel, StepScheduler};
+use osdt::model::fixtures::tiny_config;
+use osdt::policy::{FactorThreshold, Policy, SequentialTopK, StaticThreshold};
+use osdt::sim::SimModel;
+use osdt::util::prop;
+use osdt::util::rng::Rng;
+
+/// Single-block simulator: one K/V refresh per decode, so executed
+/// refreshes are directly comparable to request counts.
+fn one_block_model(seed: u64) -> SimModel {
+    let mut cfg = tiny_config();
+    cfg.gen_len = cfg.block_len;
+    cfg.num_blocks = 1;
+    cfg.seq_len = cfg.prompt_len + cfg.gen_len;
+    SimModel::math_like(seed).with_config(cfg)
+}
+
+#[test]
+fn sim_model_advertises_the_compiled_bucket_ladder() {
+    assert_eq!(SimModel::math_like(1).window_buckets(), vec![1, 2, 4, 8, 16, 32]);
+}
+
+#[test]
+fn padded_bucket_groups_match_solo_across_sizes() {
+    // sizes straddling every bucket boundary: exact fits and padded
+    // remainders both dispatch token-identically to solo decode
+    let m = SimModel::math_like(31);
+    let p = StaticThreshold::new(0.85);
+    let eng = Engine::with_cache(&m, CacheConfig::block_boundary());
+    for n in [1usize, 2, 3, 5, 8, 9, 16, 17, 31, 32] {
+        let layouts: Vec<Vec<u32>> =
+            (0..n).map(|i| m.layout_from_seed(100 + i as u64)).collect();
+        let solos: Vec<DecodeResult> = layouts
+            .iter()
+            .map(|l| eng.decode(l.clone(), &p).unwrap())
+            .collect();
+        let refs: Vec<&dyn Policy> = (0..n).map(|_| &p as &dyn Policy).collect();
+        let batched = eng.decode_batch(layouts, &refs).unwrap();
+        for (i, (b, s)) in batched.iter().zip(&solos).enumerate() {
+            assert_eq!(b.tokens, s.tokens, "group {n} seq {i}: tokens");
+            assert_eq!(b.steps, s.steps, "group {n} seq {i}: steps");
+        }
+    }
+}
+
+#[test]
+fn prop_padded_buckets_match_solo_across_policies() {
+    // random group sizes 1..=32 with a mixed policy batch: bucket padding
+    // is invisible in every per-sequence result
+    prop::forall(
+        "bucketed-transparency",
+        15,
+        |r: &mut Rng| (r.next_u64(), 1 + r.below(32) as usize),
+        |&(seed, n)| {
+            let m = SimModel::qa_like(seed);
+            let eng = Engine::with_cache(&m, CacheConfig::block_boundary());
+            let policies: Vec<Box<dyn Policy>> = (0..n)
+                .map(|i| match i % 3 {
+                    0 => Box::new(StaticThreshold::new(0.8)) as Box<dyn Policy>,
+                    1 => Box::new(FactorThreshold::new(0.93)) as Box<dyn Policy>,
+                    _ => Box::new(SequentialTopK::new(2)) as Box<dyn Policy>,
+                })
+                .collect();
+            let layouts: Vec<Vec<u32>> =
+                (0..n).map(|i| m.layout_from_seed(seed ^ (i as u64))).collect();
+            let solos = layouts
+                .iter()
+                .zip(&policies)
+                .map(|(l, p)| eng.decode(l.clone(), p.as_ref()))
+                .collect::<Result<Vec<_>, _>>()
+                .map_err(|e| e.to_string())?;
+            let refs: Vec<&dyn Policy> =
+                policies.iter().map(|p| p.as_ref()).collect();
+            let batched = eng
+                .decode_batch(layouts, &refs)
+                .map_err(|e| e.to_string())?;
+            for (i, (b, s)) in batched.iter().zip(&solos).enumerate() {
+                if b.tokens != s.tokens {
+                    return Err(format!("size {n} seq {i}: tokens differ"));
+                }
+                if b.steps != s.steps {
+                    return Err(format!("size {n} seq {i}: steps differ"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn window_groups_co_execute_past_legacy_max_batch() {
+    // 9 fusible rows: one fused window group at bucket 16 — not three
+    // max_batch-sized fragments — with the 7 padding rows reported
+    let m = SimModel::math_like(33);
+    assert_eq!(m.max_batch(), 4, "test assumes the legacy ceiling is 4");
+    let p = StaticThreshold::new(0.85);
+    let mut sched: StepScheduler<'_, SimModel, &dyn Policy> =
+        StepScheduler::new(&m, CacheConfig::block_boundary(), 9);
+    for i in 0..9u64 {
+        sched.admit(i, m.layout_from_seed(200 + i), &p).unwrap();
+    }
+    let r1 = sched.step().unwrap();
+    assert_eq!(r1.occupancy, 9, "all rows admitted past max_batch");
+    assert_eq!(r1.full_passes, 9, "block-0 refreshes");
+    let r2 = sched.step().unwrap();
+    assert_eq!(r2.occupancy, 9);
+    assert!(
+        r2.fused_window_passes >= 9,
+        "9 rows must share the fused path, got {}",
+        r2.fused_window_passes
+    );
+    assert!(
+        r2.window_groups.iter().any(|&(live, bucket)| live == 9 && bucket == 16),
+        "expected a (9, 16) window group, got {:?}",
+        r2.window_groups
+    );
+    assert_eq!(r2.padding_rows, 16 - 9);
+}
+
+#[test]
+fn padding_rows_never_skew_live_metrics() {
+    // 5 live rows pad to bucket 8: occupancy and per-row acceptance see
+    // exactly the live rows, only the padding counters see the rest
+    let m = SimModel::math_like(34);
+    let p = StaticThreshold::new(0.85);
+    let mut sched: StepScheduler<'_, SimModel, &dyn Policy> =
+        StepScheduler::new(&m, CacheConfig::block_boundary(), 5);
+    for i in 0..5u64 {
+        sched.admit(i, m.layout_from_seed(300 + i), &p).unwrap();
+    }
+    sched.step().unwrap(); // block-0 refreshes
+    let r = sched.step().unwrap(); // first window step
+    assert_eq!(r.occupancy, 5, "occupancy counts live rows only");
+    assert_eq!(r.window_groups, vec![(5, 8)]);
+    assert_eq!(r.padding_rows, 3);
+    assert!(
+        r.accepted.len() <= 5 && r.accepted.iter().all(|&(id, _)| id < 5),
+        "accepted rows must all be live sequences: {:?}",
+        r.accepted
+    );
+}
+
+#[test]
+fn prefix_sharing_skips_refreshes_and_keeps_tokens() {
+    // 6 requests over 2 prompt templates on a single-block config: the
+    // sharing run must execute exactly one refresh per template — strictly
+    // fewer than requests — and match the unshared run token for token
+    let m = one_block_model(7);
+    let n = 6usize;
+    let templates = 2u64;
+    let p = StaticThreshold::new(0.85);
+    let layouts: Vec<Vec<u32>> =
+        (0..n).map(|i| m.layout_from_seed(i as u64 % templates)).collect();
+    let refs: Vec<&dyn Policy> = (0..n).map(|_| &p as &dyn Policy).collect();
+
+    let unshared_eng = Engine::with_cache(&m, CacheConfig::block_boundary());
+    let solos: Vec<DecodeResult> = layouts
+        .iter()
+        .map(|l| unshared_eng.decode(l.clone(), &p).unwrap())
+        .collect();
+    let unshared = unshared_eng.decode_batch(layouts.clone(), &refs).unwrap();
+
+    let shared_eng = Engine::with_cache(
+        &m,
+        CacheConfig::block_boundary().paged(8).with_prefix_sharing(true),
+    );
+    let calls0 = m.full_kv_calls();
+    let shared = shared_eng.decode_batch(layouts, &refs).unwrap();
+    let executed = m.full_kv_calls() - calls0;
+
+    assert!(
+        executed < n as u64,
+        "sharing must execute fewer refreshes ({executed}) than requests ({n})"
+    );
+    assert_eq!(executed, templates, "one executed refresh per template");
+    for (i, ((sh, un), solo)) in
+        shared.iter().zip(&unshared).zip(&solos).enumerate()
+    {
+        assert_eq!(sh.tokens, un.tokens, "seq {i}: shared vs unshared tokens");
+        assert_eq!(sh.tokens, solo.tokens, "seq {i}: shared vs solo tokens");
+        assert_eq!(sh.steps, un.steps, "seq {i}: steps");
+        assert_eq!(
+            sh.full_passes, un.full_passes,
+            "seq {i}: hits attribute the pass, counters stay identical"
+        );
+    }
+
+    let stats = shared_eng.shared_kv().expect("sharing is active").stats();
+    assert!(
+        stats.hits >= (n as u64) - templates,
+        "expected at least {} prefix hits, got {}",
+        n as u64 - templates,
+        stats.hits
+    );
+    assert_eq!(stats.entries, templates as usize);
+    // retired sequences released their tables; only the index pins pages
+    let pages_per_seq = m.config().seq_len.div_ceil(8);
+    assert_eq!(stats.pool.pages_in_use, templates as usize * pages_per_seq);
+}
+
+#[test]
+fn prefix_sharing_composes_with_bucketed_groups() {
+    // 12 same-prompt requests: one executed refresh, then all 12 co-execute
+    // window steps in a bucket-16 group — the two tentpole halves together
+    let m = one_block_model(11);
+    let p = StaticThreshold::new(0.85);
+    let mut sched: StepScheduler<'_, SimModel, &dyn Policy> = Engine::with_cache(
+        &m,
+        CacheConfig::block_boundary().paged(8).with_prefix_sharing(true),
+    )
+    .scheduler(12);
+    let calls0 = m.full_kv_calls();
+    for i in 0..12u64 {
+        sched.admit(i, m.layout_from_seed(0), &p).unwrap();
+    }
+    let r1 = sched.step().unwrap();
+    assert_eq!(m.full_kv_calls() - calls0, 1, "one executed refresh for 12 rows");
+    assert_eq!(r1.full_passes, 12, "every row still accounts a refresh");
+    assert_eq!(r1.saved_full_passes, 11);
+    assert!(r1.pages_reused > 0);
+    assert!(r1.kv_pages_in_use > 0);
+    let r2 = sched.step().unwrap();
+    assert!(
+        r2.window_groups.iter().any(|&(live, bucket)| live == 12 && bucket == 16),
+        "expected a (12, 16) window group, got {:?}",
+        r2.window_groups
+    );
+    let results = sched.drain().unwrap();
+    assert_eq!(results.len(), 12);
+    let first = &results[0].1;
+    for (id, res) in &results {
+        assert_eq!(res.tokens, first.tokens, "seq {id}: identical prompts, identical tokens");
+    }
+}
