@@ -128,6 +128,97 @@ def test_wrong_bench_is_an_error(tmp_path):
         run(tmp_path, base, cur)
 
 
+def elision_rows(on_executed=36.0, on_elided=54.0, off_executed=90.0):
+    """A matched elide-off/elide-on pair as emitted by the bench's elision
+    A/B section."""
+    rows = []
+    for cache, executed, elided in (
+        ("elide-off", off_executed, 0.0),
+        ("elide-on", on_executed, on_elided),
+    ):
+        rows.append(
+            {
+                "policy": "osdt:step-block:q1:1:0",
+                "cache": cache,
+                "residency": "sim",
+                "rate": 8.0,
+                "ok": 6,
+                "n": 6,
+                "p50_ms": 12.0,
+                "p95_ms": 28.0,
+                "p99_ms": 36.0,
+                "ttft_p50_ms": 4.0,
+                "ttft_p95_ms": 10.0,
+                "ttft_p99_ms": 13.0,
+                "tok_p50_ms": 0.4,
+                "tok_p95_ms": 0.9,
+                "tok_p99_ms": 1.2,
+                "tokens_per_sec": 5000.0,
+                "bytes_per_token": 100.0,
+                "cache_upload_bytes": 18000,
+                "fused_frac": 0.9,
+                "bytes_per_step": 650.0,
+                "steps_executed": executed,
+                "steps_elided": elided,
+                "occ_mean": 1.4,
+                "occ_peak": 4,
+            }
+        )
+    return rows
+
+
+def with_elision(doc, **kwargs):
+    doc = copy.deepcopy(doc)
+    doc["rows"].extend(elision_rows(**kwargs))
+    return doc
+
+
+def test_consistent_elision_rows_pass(tmp_path):
+    doc = with_elision(make_doc({"osdt": 900.0}))
+    assert run(tmp_path, doc, copy.deepcopy(doc)) == 0
+
+
+def test_elision_saving_nothing_fails_even_on_seed_baseline(tmp_path):
+    # deterministic-sim invariant: never waived by warn-only provenance
+    base = with_elision(make_doc({"osdt": 900.0}, provenance="seed"))
+    cur = with_elision(
+        make_doc({"osdt": 900.0}, provenance="seed"),
+        on_executed=90.0,
+        off_executed=90.0,
+    )
+    assert run(tmp_path, base, cur) == 1
+
+
+def test_elision_with_zero_elided_steps_fails(tmp_path):
+    doc = make_doc({"osdt": 900.0})
+    cur = with_elision(copy.deepcopy(doc), on_elided=0.0)
+    assert run(tmp_path, with_elision(doc), cur) == 1
+
+
+def test_elide_on_row_missing_steps_fields_fails(tmp_path):
+    doc = with_elision(make_doc({"osdt": 900.0}))
+    cur = copy.deepcopy(doc)
+    for row in cur["rows"]:
+        if row["cache"] == "elide-on":
+            del row["steps_executed"]
+            del row["steps_elided"]
+    assert run(tmp_path, doc, cur) == 1
+
+
+def test_elide_on_without_matching_off_row_fails(tmp_path):
+    doc = with_elision(make_doc({"osdt": 900.0}))
+    cur = copy.deepcopy(doc)
+    cur["rows"] = [r for r in cur["rows"] if r["cache"] != "elide-off"]
+    assert run(tmp_path, doc, cur) == 1
+
+
+def test_artifacts_without_elision_rows_pass_vacuously(tmp_path):
+    # pre-elision artifacts carry no elide-* rows and must keep gating
+    doc = make_doc({"osdt": 900.0})
+    assert run(tmp_path, doc, copy.deepcopy(doc)) == 0
+    assert bench_diff.check_elision(doc, "x.json") == []
+
+
 def test_committed_snapshot_is_valid_and_warn_only(tmp_path):
     """The snapshot in bench/trajectory/ must parse, be schema 2, and be
     marked as bootstrap (warn-only) until CI replaces it with a measured
@@ -154,5 +245,9 @@ def test_committed_snapshot_is_valid_and_warn_only(tmp_path):
             "tok_p99_ms",
         ):
             assert isinstance(row[f], (int, float)), f"{f} missing in {row}"
+    # the elision A/B pair must be present and self-consistent
+    caches = {r["cache"] for r in doc["rows"]}
+    assert {"elide-off", "elide-on"} <= caches
+    assert bench_diff.check_elision(doc, str(snap)) == []
     # diffing the snapshot against itself must pass its own gate
     assert bench_diff.main([str(snap), str(snap)]) == 0

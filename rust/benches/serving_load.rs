@@ -44,6 +44,9 @@ use osdt::config::Args;
 use osdt::coordinator::{Coordinator, CoordinatorConfig, Request};
 use osdt::decode::ForwardModel;
 use osdt::model::{fixtures::tiny_config, ModelConfig};
+use osdt::policy::{
+    Acquired, DynamicMode, Metric, Profile, ProfileKey, ProfileRegistry,
+};
 use osdt::runtime::ModelRuntime;
 use osdt::sim::SimModel;
 use osdt::util::json::Json;
@@ -91,6 +94,12 @@ struct Point {
     /// from the shared prompt-prefix index (DESIGN.md §13) instead of
     /// executed; 0 unless `--prefix-sharing` style configs are in play.
     prefix_hit_rate: f64,
+    /// Per-sequence forward passes actually executed (full + window) during
+    /// the timed region — the denominator the elision planner shrinks.
+    steps_executed: u64,
+    /// Window passes skipped by the profile-guided elision planner
+    /// (DESIGN.md §14); 0 with `--step-elision off`.
+    steps_elided: u64,
     occ_mean: f64,
     occ_peak: i64,
     completions: Vec<String>,
@@ -107,28 +116,36 @@ struct PointSpec<'a> {
     max_batch: usize,
     /// Arrival-trace seed: same seed -> same Poisson trace, bit for bit.
     seed: u64,
+    /// Enable the profile-guided elision planner (DESIGN.md §14) for
+    /// Phase-2 decodes on this point.
+    step_elision: bool,
 }
 
 /// Drive one coordinator configuration through the shared arrival trace.
+/// `registry` pre-seeds the profile registry (used by the elision A/B to
+/// decode under a hand-built trajectory profile instead of calibrating).
 fn run_point<M, F>(
     spec: &PointSpec<'_>,
     model_cfg: &ModelConfig,
     datasets: &[Dataset],
+    registry: Option<Arc<ProfileRegistry>>,
     factory: F,
 ) -> Result<Point>
 where
     M: ForwardModel + 'static,
     F: Fn(usize) -> Result<M> + Send + Sync + Clone + 'static,
 {
-    let coord = Arc::new(Coordinator::start(
+    let coord = Arc::new(Coordinator::start_with_registry(
         CoordinatorConfig {
             workers: spec.workers,
             max_batch: spec.max_batch,
             batch_wait: Duration::from_millis(2),
             cache: spec.cache,
+            step_elision: spec.step_elision,
             ..CoordinatorConfig::default()
         },
         model_cfg.clone(),
+        registry.unwrap_or_else(|| Arc::new(ProfileRegistry::in_memory())),
         factory,
     )?);
     // warm the OSDT profiles so calibration isn't in the timed region
@@ -146,6 +163,8 @@ where
     let window0 = c0("window_passes");
     let fused0 = c0("fused_window_passes");
     let saved0 = c0("prefix_sharing_saved_full_passes");
+    let full0 = c0("full_passes");
+    let elided0 = c0("steps_elided");
 
     let trace = mixed_trace(datasets, spec.rate, spec.n, spec.seed);
     let mut lat = Histogram::latency();
@@ -190,6 +209,8 @@ where
     let window_passes = c0("window_passes") - window0;
     let fused_passes = c0("fused_window_passes") - fused0;
     let saved_passes = c0("prefix_sharing_saved_full_passes") - saved0;
+    let full_passes = c0("full_passes") - full0;
+    let steps_elided = c0("steps_elided") - elided0;
     let tokens = (ok * model_cfg.gen_len).max(1);
     Ok(Point {
         policy: spec.policy.to_string(),
@@ -213,6 +234,8 @@ where
         fused_frac: fused_passes as f64 / window_passes.max(1) as f64,
         bytes_per_step: transferred as f64 / steps as f64,
         prefix_hit_rate: saved_passes as f64 / ok.max(1) as f64,
+        steps_executed: full_passes + window_passes,
+        steps_elided,
         occ_mean: seq_steps as f64 / steps as f64,
         occ_peak: coord
             .metrics
@@ -293,6 +316,8 @@ fn point_rows(points: &[Point]) -> (Vec<Vec<String>>, Vec<Vec<String>>) {
             format!("{}", p.fused_frac),
             format!("{}", p.bytes_per_step),
             format!("{}", p.prefix_hit_rate),
+            format!("{}", p.steps_executed),
+            format!("{}", p.steps_elided),
             format!("{}", p.occ_mean),
             format!("{}", p.occ_peak),
         ]);
@@ -303,7 +328,9 @@ fn point_rows(points: &[Point]) -> (Vec<Vec<String>>, Vec<Vec<String>>) {
 /// Schema version of the committed `bench/trajectory/` artifact. Bump it
 /// whenever a row field changes meaning; `scripts/bench_diff.py` refuses to
 /// compare mismatched schemas. v2 added seeded open-loop arrivals plus
-/// p99 / TTFT / per-token percentile fields.
+/// p99 / TTFT / per-token percentile fields. `steps_executed` /
+/// `steps_elided` are additive within v2: diffing tools treat their absence
+/// in an older artifact as "not recorded", never as zero.
 const BENCH_SCHEMA: f64 = 2.0;
 
 fn points_json(points: &[Point], mode: &str, seed: u64) -> Json {
@@ -344,6 +371,8 @@ fn points_json(points: &[Point], mode: &str, seed: u64) -> Json {
                             ("fused_frac", Json::Num(p.fused_frac)),
                             ("bytes_per_step", Json::Num(p.bytes_per_step)),
                             ("prefix_hit_rate", Json::Num(p.prefix_hit_rate)),
+                            ("steps_executed", Json::Num(p.steps_executed as f64)),
+                            ("steps_elided", Json::Num(p.steps_elided as f64)),
                             ("occ_mean", Json::Num(p.occ_mean)),
                             ("occ_peak", Json::Num(p.occ_peak as f64)),
                         ])
@@ -462,13 +491,14 @@ fn main() -> Result<()> {
                     workers,
                     max_batch,
                     seed,
+                    step_elision: false,
                 };
                 let p = if smoke {
-                    run_point(&spec, &model_cfg, &datasets, |_wid| {
+                    run_point(&spec, &model_cfg, &datasets, None, |_wid| {
                         Ok(SimModel::math_like(5))
                     })?
                 } else {
-                    run_point(&spec, &model_cfg, &datasets, move |_wid| {
+                    run_point(&spec, &model_cfg, &datasets, None, move |_wid| {
                         let cfg = ModelConfig::load("artifacts")?;
                         let rt = ModelRuntime::load(&cfg)?;
                         rt.set_residency(residency);
@@ -532,14 +562,15 @@ fn main() -> Result<()> {
             workers,
             max_batch,
             seed,
+            step_elision: false,
         };
         let p = if smoke {
             let proto = sim_shared.clone();
-            run_point(&spec, &shared_cfg, &shared_data, move |_wid| {
+            run_point(&spec, &shared_cfg, &shared_data, None, move |_wid| {
                 Ok(proto.clone())
             })?
         } else {
-            run_point(&spec, &shared_cfg, &shared_data, move |_wid| {
+            run_point(&spec, &shared_cfg, &shared_data, None, move |_wid| {
                 let cfg = ModelConfig::load("artifacts")?;
                 let rt = ModelRuntime::load(&cfg)?;
                 // prefix-index inserts need host-visible K/V (DESIGN.md §13)
@@ -579,6 +610,94 @@ fn main() -> Result<()> {
     }
     points.extend(shared_points);
 
+    // --- profile-guided step elision A/B (DESIGN.md §14): the same arrival
+    // trace decoded under the same hand-built step-block profile with the
+    // elision planner off vs on. The profile stages a three-step empty run
+    // inside every block and the plateau simulator's confidences are
+    // position-pure, so the planner's predictions hold exactly: the elide-on
+    // point must emit token-identical completions in strictly fewer executed
+    // passes. Always runs on the analytic simulator — the claim under test
+    // is the schedule, not device timing — so the rows are labelled "sim".
+    let elision_policy = "osdt:step-block:q1:1:0";
+    let elision_cfg = tiny_config();
+    let elision_data = vec![Dataset {
+        task: "synth-qa".to_string(),
+        examples: (0..3)
+            .map(|i| Example {
+                task: "synth-qa".to_string(),
+                prompt: format!("Plateau {i}: 2+{i}=?"),
+                answer: format!("{}", i + 2),
+                code_op: None,
+            })
+            .collect(),
+    }];
+    // Per-block schedule: full-KV step commits the high-confidence
+    // positions, three steps predicted empty (accepts ~1 = fallback only),
+    // then a cheap landing step drains the rest.
+    let elidable = Profile::step_block(
+        vec![vec![0.5, 0.995, 0.995, 0.995, 0.25]; elision_cfg.num_blocks],
+        Metric::Q1,
+    )
+    .with_accepts(vec![vec![8.0, 1.0, 1.0, 1.0, 9.0]; elision_cfg.num_blocks]);
+    let mut elision_points = Vec::new();
+    for (label, elide) in [("elide-off", false), ("elide-on", true)] {
+        // fresh registry per point: both runs decode from the seeded
+        // profile, neither pays a calibration in the timed region
+        let registry = Arc::new(ProfileRegistry::in_memory());
+        match registry.acquire(&ProfileKey::new(
+            "synth-qa",
+            DynamicMode::StepBlock,
+            Metric::Q1,
+        )) {
+            Acquired::Lease(lease) => lease.fulfill(elidable.clone(), vec![0.5; 4]),
+            _ => bail!("seeding the elision profile must grant the lease"),
+        }
+        let spec = PointSpec {
+            policy: elision_policy,
+            cache: CacheConfig::block_boundary(),
+            cache_label: label,
+            residency: "sim",
+            rate: rates[0],
+            n,
+            workers,
+            max_batch,
+            seed,
+            step_elision: elide,
+        };
+        let p = run_point(&spec, &elision_cfg, &elision_data, Some(registry), |_wid| {
+            Ok(SimModel::plateau_like(7))
+        })?;
+        eprintln!(
+            "[elision] {elision_policy} {label} @{}rps: {:.1} tok/s, \
+             {} executed passes, {} elided",
+            spec.rate, p.tokens_per_sec, p.steps_executed, p.steps_elided
+        );
+        elision_points.push(p);
+    }
+    {
+        let (off, on) = (&elision_points[0], &elision_points[1]);
+        if off.completions != on.completions {
+            bail!("step elision changed completions on the plateau trace");
+        }
+        if on.steps_elided == 0 {
+            bail!("elide-on executed the full schedule — the planner never fired");
+        }
+        if on.steps_executed >= off.steps_executed {
+            bail!(
+                "elision saved nothing: {} executed passes with the planner on \
+                 vs {} off",
+                on.steps_executed,
+                off.steps_executed
+            );
+        }
+        println!(
+            "step elision: token-identical, {} -> {} executed passes \
+             ({} elided)",
+            off.steps_executed, on.steps_executed, on.steps_elided
+        );
+    }
+    points.extend(elision_points);
+
     let checked = check_token_identity(&points)?;
     if checked > 0 {
         println!("token identity: host == device for {checked} cached point(s)");
@@ -604,8 +723,8 @@ fn main() -> Result<()> {
             "p99_us", "ttft_p50_us", "ttft_p95_us", "ttft_p99_us",
             "tok_p50_us", "tok_p95_us", "tok_p99_us",
             "tokens_per_sec", "bytes_per_token", "cache_upload_bytes",
-            "fused_frac", "bytes_per_step", "prefix_hit_rate", "occ_mean",
-            "occ_peak",
+            "fused_frac", "bytes_per_step", "prefix_hit_rate",
+            "steps_executed", "steps_elided", "occ_mean", "occ_peak",
         ],
         &csv,
     )?;

@@ -62,6 +62,14 @@ pub struct ServerConfig {
     /// Prometheus exposition address (None = endpoint disabled).
     /// CLI: `--metrics-addr`.
     pub metrics_addr: Option<String>,
+    /// Profile-guided step elision: skip window passes the calibrated
+    /// acceptance trajectory predicts are empty (DESIGN.md §14). Off by
+    /// default — elision trades exactness of the step schedule for fewer
+    /// passes and is opt-in. CLI: `--step-elision on|off`.
+    pub step_elision: bool,
+    /// Predicted per-step acceptance count below which a step is treated
+    /// as empty by the elision planner. CLI: `--elide-floor`.
+    pub elide_floor: f64,
 }
 
 impl Default for ServerConfig {
@@ -76,6 +84,8 @@ impl Default for ServerConfig {
             drift_floor: registry.drift_floor,
             ema_alpha: registry.ema_alpha,
             metrics_addr: None,
+            step_elision: false,
+            elide_floor: crate::policy::DEFAULT_ELIDE_FLOOR,
         }
     }
 }

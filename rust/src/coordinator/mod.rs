@@ -149,6 +149,15 @@ pub struct CoordinatorConfig {
     /// or lost calibrator. The chaos tests shrink this to force steal
     /// churn quickly.
     pub steal_after: Duration,
+    /// Profile-guided step elision (DESIGN.md §14): Ready OSDT policies
+    /// skip window passes their calibration trajectory predicts empty.
+    /// Off by default; calibration decodes (HostTraced) and non-OSDT
+    /// policies are never eligible regardless.
+    pub step_elision: bool,
+    /// Acceptance floor below which a calibrated step counts as empty for
+    /// elision (`--elide-floor`). The default classifies exactly the
+    /// fallback-only steps.
+    pub elide_floor: f64,
 }
 
 impl Default for CoordinatorConfig {
@@ -159,6 +168,8 @@ impl Default for CoordinatorConfig {
             batch_wait: Duration::from_millis(5),
             cache: CacheConfig::disabled(),
             steal_after: CALIBRATION_STEAL_MAX,
+            step_elision: false,
+            elide_floor: crate::policy::DEFAULT_ELIDE_FLOOR,
         }
     }
 }
@@ -413,6 +424,7 @@ fn resolve_policy<M: ForwardModel>(
     prompt: &str,
     registry: &ProfileRegistry,
     steal: bool,
+    elision: Option<f64>,
 ) -> Result<Resolved> {
     match spec {
         PolicySpec::Osdt { mode, metric, kappa, epsilon } => {
@@ -423,10 +435,17 @@ fn resolve_policy<M: ForwardModel>(
                 registry.acquire(&key)
             };
             match acquired {
-                Acquired::Ready(profile, epoch) => Ok(Resolved::Policy(
-                    Box::new(Osdt::from_profile(profile, *kappa, *epsilon)),
-                    Some((key, epoch)),
-                )),
+                Acquired::Ready(profile, epoch) => {
+                    // Elision only applies to Phase-2 decodes: the profile's
+                    // acceptance trajectory is what the planner consults, and
+                    // the calibration decode below must execute every step to
+                    // record that trajectory in the first place.
+                    let mut policy = Osdt::from_profile(profile, *kappa, *epsilon);
+                    if let Some(floor) = elision {
+                        policy = policy.with_elision(floor);
+                    }
+                    Ok(Resolved::Policy(Box::new(policy), Some((key, epoch))))
+                }
                 Acquired::InFlight => Ok(Resolved::Parked),
                 Acquired::Lease(lease) => {
                     // Phase 1: calibrate on THIS sequence with the static
@@ -526,6 +545,7 @@ fn admit_job<M: ForwardModel>(
     model_cfg: &ModelConfig,
     metrics: &Registry,
     registry: &ProfileRegistry,
+    elision: Option<f64>,
 ) -> Admitted {
     fn fail(metrics: &Registry, job: &Job, e: impl std::fmt::Display) {
         metrics.add("requests_failed", 1);
@@ -541,7 +561,7 @@ fn admit_job<M: ForwardModel>(
     };
     let resolved = resolve_policy(
         &spec, &job.req.task, engine, tok, model_cfg, &job.req.prompt, registry,
-        steal,
+        steal, elision,
     );
     if !matches!(resolved, Ok(Resolved::Parked)) {
         metrics.observe_us(
@@ -617,6 +637,9 @@ fn worker_loop<M: ForwardModel>(
         sched.set_fusion(false);
     }
     let max_active = sched.max_active();
+    // per-worker elision toggle, resolved once: Phase-2 OSDT policies built
+    // by admit_job get the planner attached; calibration decodes never do
+    let elision = if cfg.step_elision { Some(cfg.elide_floor) } else { None };
     let mut inflight: HashMap<u64, Inflight> = HashMap::new();
     // parked requests: local calibrations deferred while the scheduler is
     // busy (they would stall co-scheduled peers), and requests waiting on a
@@ -633,7 +656,7 @@ fn worker_loop<M: ForwardModel>(
         ($job:expr, $since:expr, $steal:expr) => {
             if let Admitted::Parked(job) = admit_job(
                 $job, $steal, &mut sched, &mut inflight, &mut next_seq, &engine,
-                tok, model_cfg, metrics, registry,
+                tok, model_cfg, metrics, registry, elision,
             ) {
                 // lost the race to a peer's lease between classify and
                 // acquire — park behind it (keeping the original park time)
@@ -762,6 +785,20 @@ fn worker_loop<M: ForwardModel>(
                         "kv_pages_in_use",
                         report.kv_pages_in_use as i64,
                     );
+                    // profile-guided step elision observability (DESIGN.md §14)
+                    metrics.add("steps_elided", report.steps_elided as u64);
+                    metrics.add(
+                        "elision_mispredictions",
+                        report.elision_mispredictions as u64,
+                    );
+                    metrics.add(
+                        "blocks_retired_early",
+                        report.blocks_retired_early as u64,
+                    );
+                    metrics.add(
+                        "prefix_sharing_skipped_device",
+                        report.prefix_sharing_skipped_device as u64,
+                    );
                     for &(live, _bucket) in &report.window_groups {
                         metrics.observe("window_bucket_occupancy", live as f64);
                     }
@@ -789,6 +826,17 @@ fn worker_loop<M: ForwardModel>(
                     // detection + optional EMA refinement
                     if let Some((key, epoch)) = &inf.osdt_key {
                         registry.observe(key, *epoch, &res.trace);
+                        // mispredicted elisions are drift evidence the trace
+                        // alone can't show (the skipped steps were never
+                        // executed): feed them to the registry so a storm
+                        // marks the profile stale and forces recalibration
+                        if res.elision_mispredictions > 0 {
+                            registry.note_elision_mispredictions(
+                                key,
+                                *epoch,
+                                res.elision_mispredictions as u64,
+                            );
+                        }
                     }
                     let resp = make_response(
                         &inf.job.req, &res, inf.admitted, model_cfg, tok, false,

@@ -198,8 +198,17 @@ pub struct DecodeResult {
     /// Steps where the policy's raw rule selected nothing and the argmax
     /// fallback committed the single most confident position.
     pub fallback_steps: usize,
-    /// Per-(block, step) masked-position confidences — calibration input
-    /// and Figure 1/2 raw material. Always recorded (cheap: few KB).
+    /// Schedule steps the elision planner jumped over (DESIGN.md §14);
+    /// 0 unless step elision is enabled.
+    pub steps_elided: usize,
+    /// Elided runs whose jumped-to step accepted nothing by rule.
+    pub elision_mispredictions: usize,
+    /// Blocks that completed with elided steps (retired early).
+    pub blocks_retired_early: usize,
+    /// Per-(block, executed-step) masked-position confidences —
+    /// calibration input and Figure 1/2 raw material. Always recorded
+    /// (cheap: few KB). Elided steps never appear here, so drift
+    /// signatures compare executed steps only.
     pub trace: CalibrationTrace,
 }
 

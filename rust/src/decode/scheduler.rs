@@ -24,7 +24,7 @@ use std::collections::VecDeque;
 use anyhow::{bail, Result};
 
 use crate::cache::{CacheConfig, CacheHandle, PrefixHit, SharedKv};
-use crate::policy::{PlanContext, Policy, StepPlan};
+use crate::policy::{PlanContext, Policy, StepRule};
 use crate::runtime::AcceptRule;
 
 use super::task::{DecodeTask, PassKind};
@@ -90,11 +90,25 @@ pub struct StepReport {
     /// Live pages in the paged pool after this step (0 without sharing).
     pub kv_pages_in_use: usize,
     /// Padding rows implied by bucket selection across this step's
-    /// window/fused groups (bucket size minus live rows, summed).
+    /// window/fused groups (bucket size minus live rows, summed). Elided
+    /// schedule steps are NOT padding: they never enter a group at all
+    /// (the live-rows-only invariant, DESIGN.md §13/§14).
     pub padding_rows: usize,
     /// `(live rows, chosen bucket)` per co-executed window/fused group —
     /// the bucket-occupancy histogram's raw material.
     pub window_groups: Vec<(usize, usize)>,
+    /// Schedule steps jumped over by the elision planner this step
+    /// (DESIGN.md §14) — no pass ran for them.
+    pub steps_elided: usize,
+    /// Elision mispredictions detected this step (an elided-over run whose
+    /// jumped-to pass accepted nothing by rule).
+    pub elision_mispredictions: usize,
+    /// Blocks retired early this step (completed with elided steps).
+    pub blocks_retired_early: usize,
+    /// Sharable block-0 refreshes whose device-resident cache handle
+    /// exposed no host K/V, so the prefix-sharing index could not be
+    /// populated (DESIGN.md §13 limitation, observable via metrics).
+    pub prefix_sharing_skipped_device: usize,
 }
 
 /// FIFO continuous-batching scheduler over one forward model.
@@ -261,6 +275,20 @@ impl<'m, M: ForwardModel, P: PolicyRef> StepScheduler<'m, M, P> {
         let model = self.model;
         let cfg = model.config();
 
+        // per-entry counter snapshot: elision mispredictions and early
+        // block retirements accumulate inside the tasks during the apply
+        // calls below; the report carries this step's deltas
+        let pre_elision: Vec<(usize, usize)> = self
+            .active
+            .iter()
+            .map(|e| {
+                (
+                    e.task.elision_mispredictions(),
+                    e.task.blocks_retired_early(),
+                )
+            })
+            .collect();
+
         let mut full: Vec<usize> = Vec::new();
         let mut full_kv: Vec<usize> = Vec::new();
         let mut window: Vec<usize> = Vec::new();
@@ -268,27 +296,42 @@ impl<'m, M: ForwardModel, P: PolicyRef> StepScheduler<'m, M, P> {
         // per-row rules let threshold and factor-max rows share one fused
         // call, so a "mixed batch" splits only along fusible vs host-full
         let mut fused: Vec<(usize, AcceptRule)> = Vec::new();
-        for (i, e) in self.active.iter().enumerate() {
-            match e.task.needs(cfg) {
+        for i in 0..self.active.len() {
+            match self.active[i].task.needs(cfg) {
                 PassKind::Full => full.push(i),
                 PassKind::FullKv => full_kv.push(i),
                 PassKind::Window { .. } => {
-                    let plan = if self.fused {
-                        e.policy.as_policy().plan(&PlanContext {
-                            block: e.task.block(),
-                            step: e.task.step_in_block(),
-                        })
+                    // always consult the plan: elision applies on the host
+                    // path too, only the *routing* depends on `self.fused`
+                    let e = &mut self.active[i];
+                    let plan = e.policy.as_policy().plan(&PlanContext {
+                        block: e.task.block(),
+                        step: e.task.step_in_block(),
+                    });
+                    if plan.skip_ahead > 0 {
+                        // jump the schedule before grouping: the skipped
+                        // steps never run a pass and never occupy bucket
+                        // slots — only the jumped-to step executes below
+                        let expect_accept = match plan.rule {
+                            StepRule::Threshold { tau } => tau < 1.0,
+                            StepRule::FactorMax { .. } => true,
+                            StepRule::HostFull => false,
+                        };
+                        e.task.elide(plan.skip_ahead, expect_accept);
+                        report.steps_elided += plan.skip_ahead;
+                    }
+                    if self.fused {
+                        match plan.rule {
+                            StepRule::Threshold { tau } => {
+                                fused.push((i, AcceptRule::threshold(tau)))
+                            }
+                            StepRule::FactorMax { factor } => {
+                                fused.push((i, AcceptRule::factor_max(factor)))
+                            }
+                            StepRule::HostFull => window.push(i),
+                        }
                     } else {
-                        StepPlan::HostFull
-                    };
-                    match plan {
-                        StepPlan::Threshold { tau } => {
-                            fused.push((i, AcceptRule::threshold(tau)))
-                        }
-                        StepPlan::FactorMax { factor } => {
-                            fused.push((i, AcceptRule::factor_max(factor)))
-                        }
-                        StepPlan::HostFull => window.push(i),
+                        window.push(i);
                     }
                 }
                 PassKind::Done => {} // retired below without a pass
@@ -337,18 +380,23 @@ impl<'m, M: ForwardModel, P: PolicyRef> StepScheduler<'m, M, P> {
                 bail!("fwd_full_kv returned no rows");
             }
             // publish the refresh for followers of the same template (a
-            // device-resident handle exposes no host KV and stays as-is)
+            // device-resident handle exposes no host KV and stays as-is —
+            // counted so the silent index miss is observable, §13)
             let kv = match (sharable, &self.shared) {
-                (true, Some(shared)) => match kv.host_kv().and_then(|host| {
-                    shared.insert(
+                (true, Some(shared)) => match kv.host_kv() {
+                    None => {
+                        report.prefix_sharing_skipped_device += 1;
+                        kv
+                    }
+                    Some(host) => match shared.insert(
                         self.active[i].task.tokens(),
                         out.conf_row(0),
                         out.argmax_row(0),
                         &host,
-                    )
-                }) {
-                    Some(table) => CacheHandle::paged(table),
-                    None => kv,
+                    ) {
+                        Some(table) => CacheHandle::paged(table),
+                        None => kv,
+                    },
                 },
                 _ => kv,
             };
@@ -494,6 +542,13 @@ impl<'m, M: ForwardModel, P: PolicyRef> StepScheduler<'m, M, P> {
             report.model_calls += 1;
             report.window_passes += chunk.len();
             report.fused_window_passes += chunk.len();
+        }
+
+        // ---- fold this step's per-task elision counter deltas into the
+        // report (active order is stable until the retire loop below)
+        for (e, &(m0, b0)) in self.active.iter().zip(&pre_elision) {
+            report.elision_mispredictions += e.task.elision_mispredictions() - m0;
+            report.blocks_retired_early += e.task.blocks_retired_early() - b0;
         }
 
         // ---- retire finished sequences immediately

@@ -54,6 +54,20 @@ pub struct DecodeTask {
     full_passes: usize,
     window_passes: usize,
     fallback_steps: usize,
+    /// Schedule steps jumped over by the elision planner (DESIGN.md §14) —
+    /// never executed, so they appear in no pass count and no trace entry.
+    steps_elided: usize,
+    /// Elided-over runs whose jumped-to re-check accepted nothing beyond
+    /// the liveness fallback — the profile's prediction was wrong.
+    elision_mispredictions: usize,
+    /// Blocks that completed with at least one elided step: retired early
+    /// instead of draining the calibrated schedule.
+    blocks_retired_early: usize,
+    /// Set by [`DecodeTask::elide`] when the jumped-to step is expected to
+    /// accept by rule; consumed by the next executed pass to detect a
+    /// misprediction (that pass falling back to argmax).
+    pending_jump_check: bool,
+    elided_in_block: usize,
     trace: CalibrationTrace,
     done: bool,
     cache_cfg: CacheConfig,
@@ -82,6 +96,11 @@ impl DecodeTask {
             full_passes: 0,
             window_passes: 0,
             fallback_steps: 0,
+            steps_elided: 0,
+            elision_mispredictions: 0,
+            blocks_retired_early: 0,
+            pending_jump_check: false,
+            elided_in_block: 0,
             trace: CalibrationTrace::new(cfg.num_blocks),
             done: false,
             cache_cfg,
@@ -151,9 +170,42 @@ impl DecodeTask {
     }
 
     /// Denoising step index within the active block (what `Policy::plan`
-    /// decides on, together with [`DecodeTask::block`]).
+    /// decides on, together with [`DecodeTask::block`]). With elision this
+    /// is the *schedule* index, which can run ahead of the executed-pass
+    /// count — the trace records at executed indices.
     pub fn step_in_block(&self) -> usize {
         self.step_in_block
+    }
+
+    /// Schedule steps jumped over by the elision planner so far.
+    pub fn steps_elided(&self) -> usize {
+        self.steps_elided
+    }
+
+    /// Elision mispredictions detected so far (see field docs).
+    pub fn elision_mispredictions(&self) -> usize {
+        self.elision_mispredictions
+    }
+
+    /// Blocks retired early (completed with elided steps) so far.
+    pub fn blocks_retired_early(&self) -> usize {
+        self.blocks_retired_early
+    }
+
+    /// Jump the schedule `k` steps ahead without running a pass — the
+    /// scheduler calls this when the policy's plan advertises
+    /// `skip_ahead = k` (DESIGN.md §14). `expect_accept` marks whether the
+    /// jumped-to step's rule is expected to accept on its own (true for a
+    /// productive threshold/factor target); the next executed pass then
+    /// verifies the prediction — falling back to argmax there counts as an
+    /// elision misprediction. Elided steps don't advance `since_refresh`:
+    /// cache staleness is bounded in *executed* window passes.
+    pub fn elide(&mut self, k: usize, expect_accept: bool) {
+        debug_assert!(!self.done, "elide on a finished task");
+        self.step_in_block += k;
+        self.steps_elided += k;
+        self.elided_in_block += k;
+        self.pending_jump_check = expect_accept;
     }
 
     /// Masked positions (absolute) of the current block.
@@ -182,8 +234,12 @@ impl DecodeTask {
         let masked = self.masked(cfg);
         debug_assert!(!masked.is_empty(), "apply on completed block");
         let local_conf: Vec<f32> = masked.iter().map(|&p| conf[p - offset]).collect();
-        self.trace
-            .record(self.block, self.step_in_block, &local_conf);
+        // record at the *executed*-step index: elision can jump
+        // `step_in_block` ahead of the pass count, and drift signatures
+        // compare executed steps only (clamp-extended alignment covers the
+        // resulting length mismatch, DESIGN.md §9/§14)
+        let executed = self.trace.steps_recorded(self.block);
+        self.trace.record(self.block, executed, &local_conf);
         let ctx = StepContext {
             block: self.block,
             step: self.step_in_block,
@@ -193,6 +249,7 @@ impl DecodeTask {
         if fell_back {
             self.fallback_steps += 1;
         }
+        self.check_jump(fell_back);
         debug_assert!(!sel.is_empty(), "policy liveness violated");
         for &i in &sel {
             let pos = masked[i];
@@ -231,11 +288,12 @@ impl DecodeTask {
     ) -> usize {
         debug_assert!(!self.done, "apply_accept on a finished task");
         debug_assert!(!accepted.is_empty(), "fused acceptance liveness violated");
-        self.trace
-            .record(self.block, self.step_in_block, &[step_mean]);
+        let executed = self.trace.steps_recorded(self.block);
+        self.trace.record(self.block, executed, &[step_mean]);
         if fell_back {
             self.fallback_steps += 1;
         }
+        self.check_jump(fell_back);
         for &(pos, tok) in accepted {
             let p = start + pos as usize;
             debug_assert_eq!(
@@ -252,9 +310,23 @@ impl DecodeTask {
         accepted.len()
     }
 
+    /// Consume a pending jump verification: the first executed pass after
+    /// an elision falling back to argmax means the jumped-to step accepted
+    /// nothing by rule — the trajectory's prediction was wrong.
+    fn check_jump(&mut self, fell_back: bool) {
+        if self.pending_jump_check {
+            self.pending_jump_check = false;
+            if fell_back {
+                self.elision_mispredictions += 1;
+            }
+        }
+    }
+
     /// Shared step epilogue: roll over completed blocks and drop the dual
     /// cache at block boundaries (Fast-dLLM refreshes prefix and suffix
-    /// K/V whenever the active block changes).
+    /// K/V whenever the active block changes). A block that completes
+    /// having elided steps retired early — it never drained the calibrated
+    /// schedule.
     fn finish_step(&mut self, cfg: &ModelConfig) {
         let prev_block = self.block;
         while self.block < cfg.num_blocks && self.masked(cfg).is_empty() {
@@ -269,6 +341,11 @@ impl DecodeTask {
             self.done = true;
         }
         if self.block != prev_block {
+            if self.elided_in_block > 0 {
+                self.blocks_retired_early += 1;
+            }
+            self.elided_in_block = 0;
+            self.pending_jump_check = false;
             self.cache = None;
             self.since_refresh = 0;
         }
@@ -282,6 +359,9 @@ impl DecodeTask {
             full_passes: self.full_passes,
             window_passes: self.window_passes,
             fallback_steps: self.fallback_steps,
+            steps_elided: self.steps_elided,
+            elision_mispredictions: self.elision_mispredictions,
+            blocks_retired_early: self.blocks_retired_early,
             trace: self.trace,
         }
     }
@@ -389,6 +469,84 @@ mod tests {
     fn rejects_wrong_length() {
         let cfg = tiny_config();
         assert!(DecodeTask::new(vec![0; 3], &cfg, CacheConfig::disabled()).is_err());
+    }
+
+    #[test]
+    fn elide_jumps_schedule_but_traces_executed_steps() {
+        let cfg = tiny_config();
+        let m = SimModel::math_like(5);
+        let mut task =
+            DecodeTask::new(m.layout_from_seed(5), &cfg, CacheConfig::disabled()).unwrap();
+        let p = StaticThreshold::new(0.0); // permissive: one pass per block
+        let out = m.fwd_conf(&[task.tokens()]).unwrap();
+        // jump the schedule 3 steps before the first executed pass
+        task.elide(3, true);
+        assert_eq!(task.step_in_block(), 3);
+        assert_eq!(task.steps_elided(), 3);
+        let block = task.block();
+        task.apply(&cfg, &p, PassKind::Full, out.conf_row(0), out.argmax_row(0));
+        // the trace holds ONE executed step for that block, recorded at
+        // index 0 — not at the jumped schedule index 3
+        let res_trace = &task.trace;
+        assert_eq!(res_trace.steps_recorded(block), 1);
+        // τ=0.0 accepts everything -> the expected-accept check passes
+        assert_eq!(task.elision_mispredictions(), 0);
+        // block completed with elided steps -> retired early
+        assert_eq!(task.blocks_retired_early(), 1);
+    }
+
+    #[test]
+    fn elide_misprediction_detected_on_fallback() {
+        let cfg = tiny_config();
+        let m = SimModel::math_like(6);
+        let mut task =
+            DecodeTask::new(m.layout_from_seed(6), &cfg, CacheConfig::disabled()).unwrap();
+        // impossible τ: the jumped-to step is guaranteed to fall back
+        let p = StaticThreshold::new(0.9999);
+        let out = m.fwd_conf(&[task.tokens()]).unwrap();
+        task.elide(2, true);
+        task.apply(&cfg, &p, PassKind::Full, out.conf_row(0), out.argmax_row(0));
+        assert_eq!(task.elision_mispredictions(), 1);
+        // the check is one-shot: a later fallback is NOT a misprediction
+        let out2 = m.fwd_conf(&[task.tokens()]).unwrap();
+        if !task.is_done() {
+            task.apply(&cfg, &p, PassKind::Full, out2.conf_row(0), out2.argmax_row(0));
+            assert_eq!(task.elision_mispredictions(), 1);
+        }
+    }
+
+    #[test]
+    fn floor_mode_elide_expects_no_accept() {
+        let cfg = tiny_config();
+        let m = SimModel::math_like(7);
+        let mut task =
+            DecodeTask::new(m.layout_from_seed(7), &cfg, CacheConfig::disabled()).unwrap();
+        let p = StaticThreshold::new(0.9999);
+        let out = m.fwd_conf(&[task.tokens()]).unwrap();
+        // expect_accept = false (argmax-floor target): fallback is expected
+        task.elide(2, false);
+        task.apply(&cfg, &p, PassKind::Full, out.conf_row(0), out.argmax_row(0));
+        assert_eq!(task.elision_mispredictions(), 0);
+    }
+
+    #[test]
+    fn into_result_carries_elision_counters() {
+        let cfg = tiny_config();
+        let m = SimModel::math_like(8);
+        let mut task =
+            DecodeTask::new(m.layout_from_seed(8), &cfg, CacheConfig::disabled()).unwrap();
+        let p = StaticThreshold::new(0.0);
+        let out = m.fwd_conf(&[task.tokens()]).unwrap();
+        task.elide(2, true);
+        task.apply(&cfg, &p, PassKind::Full, out.conf_row(0), out.argmax_row(0));
+        while !task.is_done() {
+            let out = m.fwd_conf(&[task.tokens()]).unwrap();
+            task.apply(&cfg, &p, PassKind::Full, out.conf_row(0), out.argmax_row(0));
+        }
+        let res = task.into_result();
+        assert_eq!(res.steps_elided, 2);
+        assert_eq!(res.blocks_retired_early, 1);
+        assert_eq!(res.elision_mispredictions, 0);
     }
 
     #[test]

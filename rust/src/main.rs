@@ -34,7 +34,8 @@ const VALUE_FLAGS: &[&str] = &[
     "artifacts", "policy", "task", "prompt", "n", "addr", "workers",
     "max-batch", "batch-wait-ms", "mode", "metric", "profile-dir", "tau",
     "refresh-interval", "save", "drift-floor", "ema-alpha", "cache-residency",
-    "metrics-addr", "kv-page-len", "prefix-sharing",
+    "metrics-addr", "kv-page-len", "prefix-sharing", "step-elision",
+    "elide-floor",
 ];
 
 fn main() {
@@ -94,6 +95,12 @@ PROFILE REGISTRY (serve):
   --profile-dir DIR    persist calibrated profiles; warm-start on restart
   --drift-floor F      signature-drift cosine floor for recalibration
   --ema-alpha A        registry-level EMA threshold refinement (0 = one-shot)
+
+STEP ELISION (serve):
+  --step-elision on|off  skip window passes the calibrated acceptance
+                        trajectory predicts are empty; retire blocks early
+                        (Phase-2 OSDT decodes only; default off)
+  --elide-floor F      predicted acceptances below F count as an empty step
 
 POLICY SPECS:
   sequential[:k] | static[:tau] | factor[:f] | osdt:MODE:METRIC:KAPPA:EPS
@@ -173,17 +180,26 @@ fn cmd_serve(args: &Args) -> Result<()> {
         drift_floor: args.get_parse("drift-floor", defaults.drift_floor)?,
         ema_alpha: args.get_parse("ema-alpha", defaults.ema_alpha)?,
         metrics_addr: args.get("metrics-addr").map(String::from),
+        step_elision: match args.get_or("step-elision", "off") {
+            "on" => true,
+            "off" => false,
+            other => bail!("unknown --step-elision {other:?} (on|off)"),
+        },
+        elide_floor: args.get_parse("elide-floor", defaults.elide_floor)?,
     };
     let ccfg = CoordinatorConfig {
         workers: scfg.workers,
         max_batch: scfg.max_batch,
         batch_wait: std::time::Duration::from_millis(scfg.batch_wait_ms),
         cache: cache_config(args)?,
+        step_elision: scfg.step_elision,
+        elide_floor: scfg.elide_floor,
         ..CoordinatorConfig::default()
     };
     let rcfg = RegistryConfig {
         drift_floor: scfg.drift_floor,
         ema_alpha: scfg.ema_alpha,
+        ..RegistryConfig::default()
     };
     let registry = Arc::new(match &scfg.profile_dir {
         Some(pdir) => {

@@ -433,6 +433,40 @@ pub fn catalog() -> &'static [MetricSpec] {
              groups (chosen bucket minus live rows, summed) — the waste \
              side of the bucket ladder.",
         ),
+        counter(
+            "prefix_sharing_skipped_device",
+            "osdt_prefix_sharing_skipped_device_total",
+            "coordinator",
+            "Block-0 refreshes whose KV stayed device-resident so the \
+             prefix index could not adopt them (sharing needs host pages); \
+             persistent growth under --prefix-sharing on means the \
+             residency setting is defeating the share (RUNBOOK.md).",
+        ),
+        // -- profile-guided step elision (DESIGN.md §14) -------------------
+        counter(
+            "steps_elided",
+            "osdt_steps_elided_total",
+            "coordinator",
+            "Window passes skipped by the elision planner because the \
+             profile's acceptance trajectory predicted zero acceptances \
+             (schedule jumped ahead; the steps were never executed).",
+        ),
+        counter(
+            "elision_mispredictions",
+            "osdt_elision_mispredictions_total",
+            "coordinator",
+            "Elision jumps whose landing step fell back to argmax — the \
+             trajectory promised acceptances that did not materialise. \
+             Fed to the profile registry as drift evidence; a storm marks \
+             the profile stale (RUNBOOK.md).",
+        ),
+        counter(
+            "blocks_retired_early",
+            "osdt_blocks_retired_early_total",
+            "coordinator",
+            "Blocks committed with at least one elided step — retired in \
+             fewer window passes than their threshold schedule prescribed.",
+        ),
         // -- transfer ledger (workers with a stats-reporting runtime) ------
         seconds_counter(
             "model_exec_us",

@@ -87,7 +87,7 @@ impl Policy for AdaptiveOsdt {
     /// vectors, which a fused decode never downloads — so adaptive decodes
     /// keep the classic path even though each step's τ is known upfront.
     fn plan(&self, _ctx: &super::PlanContext) -> super::StepPlan {
-        super::StepPlan::HostFull
+        super::StepPlan::host_full()
     }
 
     fn name(&self) -> String {

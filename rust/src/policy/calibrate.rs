@@ -62,6 +62,34 @@ impl CalibrationTrace {
         self.per_block.iter().map(Vec::len).sum()
     }
 
+    /// Number of steps recorded so far for `block` — the next executed-step
+    /// index. Decode paths that jump the schedule (step elision) record at
+    /// this index so `record`'s in-order invariant holds for executed steps.
+    pub fn steps_recorded(&self, block: usize) -> usize {
+        self.per_block.get(block).map(Vec::len).unwrap_or(0)
+    }
+
+    /// Per-(block, step) acceptance counts implied by the trace: the masked
+    /// count shrinks between consecutive steps by exactly the number of
+    /// positions committed, and the final step commits everything still
+    /// masked. This is the profile's elision trajectory
+    /// (`Profile::predict_empty_run`).
+    pub fn accepts(&self) -> Vec<Vec<f64>> {
+        self.per_block
+            .iter()
+            .map(|steps| {
+                (0..steps.len())
+                    .map(|s| match steps.get(s + 1) {
+                        Some(next) => {
+                            steps[s].len().saturating_sub(next.len()) as f64
+                        }
+                        None => steps[s].len() as f64,
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+
     /// JSON persistence — traces are the raw experimental record behind
     /// Figures 1–2 and calibration; `osdt traces --save` archives them.
     pub fn to_json(&self) -> crate::util::json::Json {
@@ -123,7 +151,7 @@ impl Calibrator {
                         metric.reduce(&pooled).unwrap_or(0.0)
                     })
                     .collect();
-                Profile::block(taus, metric)
+                Profile::block(taus, metric).with_accepts(trace.accepts())
             }
             DynamicMode::StepBlock => {
                 // unit = (block, step): one τ per calibration step
@@ -137,7 +165,7 @@ impl Calibrator {
                             .collect::<Vec<f64>>()
                     })
                     .collect();
-                Profile::step_block(taus, metric)
+                Profile::step_block(taus, metric).with_accepts(trace.accepts())
             }
         }
     }
@@ -206,6 +234,31 @@ mod tests {
     #[test]
     fn total_steps() {
         assert_eq!(demo_trace().total_steps(), 3);
+    }
+
+    #[test]
+    fn accepts_from_masked_count_shrinkage() {
+        // block 0: 3 masked at step 0, 2 at step 1 -> committed 1, then 2
+        // block 1: single step commits both masked positions
+        let acc = demo_trace().accepts();
+        assert_eq!(acc, vec![vec![1.0, 2.0], vec![2.0]]);
+        // the calibrated profile carries the trajectory
+        let p = Calibrator::calibrate(
+            &demo_trace(),
+            DynamicMode::StepBlock,
+            Metric::Mean,
+        );
+        assert_eq!(p.trajectory_steps(0), 2);
+        assert_eq!(p.predict_empty_run(0, 0, 1.5), 1);
+        assert_eq!(p.predict_empty_run(0, 1, 1.5), 0);
+    }
+
+    #[test]
+    fn steps_recorded_tracks_executed_steps() {
+        let t = demo_trace();
+        assert_eq!(t.steps_recorded(0), 2);
+        assert_eq!(t.steps_recorded(1), 1);
+        assert_eq!(t.steps_recorded(9), 0);
     }
 
     #[test]

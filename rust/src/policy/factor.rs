@@ -49,7 +49,7 @@ impl Policy for FactorThreshold {
     /// The relative cutoff needs only the step's max — which the device
     /// computes itself — so factor steps fuse too.
     fn plan(&self, _ctx: &PlanContext) -> StepPlan {
-        StepPlan::FactorMax { factor: self.factor as f32 }
+        StepPlan::factor_max(self.factor as f32)
     }
 }
 

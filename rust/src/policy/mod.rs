@@ -28,7 +28,7 @@ mod topk;
 pub use adaptive::AdaptiveOsdt;
 pub use calibrate::{CalibrationTrace, Calibrator};
 pub use factor::FactorThreshold;
-pub use osdt::Osdt;
+pub use osdt::{Osdt, DEFAULT_ELIDE_FLOOR};
 pub use profile::{
     encode_task, Profile, ProfileRecord, ProfileStore, PROFILE_SCHEMA_VERSION,
 };
@@ -192,7 +192,7 @@ pub struct PlanContext {
 /// kernels and the host never sees the confidence rows. `HostFull` keeps
 /// the classic download-then-select path.
 #[derive(Clone, Copy, Debug, PartialEq)]
-pub enum StepPlan {
+pub enum StepRule {
     /// Commit every masked position with `conf > tau` (f32 strict compare;
     /// see [`f32_below`] for the exact f64→f32 cutoff quantisation).
     Threshold { tau: f32 },
@@ -201,6 +201,33 @@ pub enum StepPlan {
     FactorMax { factor: f32 },
     /// The policy must see the full confidence row on the host.
     HostFull,
+}
+
+/// What a policy advertises for the next pass: the decision [`StepRule`]
+/// plus an elision component. `skip_ahead = k > 0` means the policy's
+/// profile predicts steps `s..s+k` of this block accept nothing beyond the
+/// liveness fallback, so the scheduler should advance the schedule by `k`
+/// and run the rule calibrated for step `s + k` instead (DESIGN.md §14).
+/// The plan contract is unchanged: the advertised rule (+ argmax fallback)
+/// must match `select_explain` at the *jumped-to* step.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct StepPlan {
+    pub rule: StepRule,
+    pub skip_ahead: usize,
+}
+
+impl StepPlan {
+    pub fn threshold(tau: f32) -> StepPlan {
+        StepPlan { rule: StepRule::Threshold { tau }, skip_ahead: 0 }
+    }
+
+    pub fn factor_max(factor: f32) -> StepPlan {
+        StepPlan { rule: StepRule::FactorMax { factor }, skip_ahead: 0 }
+    }
+
+    pub fn host_full() -> StepPlan {
+        StepPlan { rule: StepRule::HostFull, skip_ahead: 0 }
+    }
 }
 
 /// A threshold policy: selects which masked positions to commit.
@@ -219,7 +246,7 @@ pub trait Policy: Send {
     /// masked positions yields exactly [`Policy::select_explain`]'s
     /// result. Default: `HostFull` (policy must see raw confidences).
     fn plan(&self, _ctx: &PlanContext) -> StepPlan {
-        StepPlan::HostFull
+        StepPlan::host_full()
     }
 
     /// Selection with the liveness fallback (Algorithm 1 lines 19–21):
@@ -399,16 +426,18 @@ mod tests {
         let ctx = PlanContext { block: 0, step: 0 };
         assert_eq!(
             StaticThreshold::new(0.9).plan(&ctx),
-            StepPlan::Threshold { tau: f32_below(0.9) }
+            StepPlan::threshold(f32_below(0.9))
         );
         assert_eq!(
             FactorThreshold::new(0.95).plan(&ctx),
-            StepPlan::FactorMax { factor: 0.95f64 as f32 }
+            StepPlan::factor_max(0.95f64 as f32)
         );
-        assert_eq!(SequentialTopK::new(1).plan(&ctx), StepPlan::HostFull);
+        assert_eq!(SequentialTopK::new(1).plan(&ctx), StepPlan::host_full());
+        // profile-free policies never elide
+        assert_eq!(StaticThreshold::new(0.9).plan(&ctx).skip_ahead, 0);
         // the wrapper strips fusibility without changing selection
         let wrapped = HostTraced(StaticThreshold::new(0.9));
-        assert_eq!(wrapped.plan(&ctx), StepPlan::HostFull);
+        assert_eq!(wrapped.plan(&ctx), StepPlan::host_full());
         let c = StepContext { block: 0, step: 0, conf: &[0.95, 0.2] };
         assert_eq!(wrapped.select(&c), StaticThreshold::new(0.9).select(&c));
     }

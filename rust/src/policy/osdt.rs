@@ -13,13 +13,28 @@
 //! uniformly relaxes them to buy parallelism. Both are the paper's §4.1
 //! hyperparameters.
 
-use super::{f32_below, PlanContext, Policy, Profile, StepContext, StepPlan};
+use super::{
+    f32_below, PlanContext, Policy, Profile, StepContext, StepPlan, StepRule,
+};
+
+/// Default elision floor: calibration acceptance counts are integers ≥ 1
+/// (liveness commits at least the argmax every step), so a floor of 1.5
+/// classifies exactly the fallback-only steps as empty — the most
+/// conservative setting that elides anything at all.
+pub const DEFAULT_ELIDE_FLOOR: f64 = 1.5;
 
 #[derive(Clone, Debug)]
 pub struct Osdt {
     profile: Profile,
     kappa: f64,
     epsilon: f64,
+    /// `Some(floor)` enables profile-guided step elision (DESIGN.md §14):
+    /// steps whose calibrated acceptance trajectory predicts fewer than
+    /// `floor` commits are skipped over by `plan`'s `skip_ahead`, or — when
+    /// the rest of the block's trajectory is all-empty — replaced by the
+    /// argmax-liveness floor. `None` (the default) reproduces the plain
+    /// OSDT schedule exactly.
+    elide_floor: Option<f64>,
 }
 
 impl Osdt {
@@ -30,7 +45,26 @@ impl Osdt {
             profile,
             kappa,
             epsilon,
+            elide_floor: None,
         }
+    }
+
+    /// Enable profile-guided step elision with the given acceptance floor.
+    pub fn with_elision(mut self, floor: f64) -> Self {
+        self.elide_floor = Some(floor);
+        self
+    }
+
+    /// Whether (block, step) sits in an all-empty trajectory tail under the
+    /// active elision floor — the argmax-liveness floor mode. Both `plan`
+    /// and `select_raw` consult this so the fused and host paths agree
+    /// (the §11 plan contract).
+    fn floor_active(&self, block: usize, step: usize) -> bool {
+        let Some(floor) = self.elide_floor else {
+            return false;
+        };
+        let k = self.profile.predict_empty_run(block, step, floor);
+        k > 0 && step + k >= self.profile.trajectory_steps(block)
     }
 
     /// The effective threshold used at (block, step) — exposed for tests
@@ -46,6 +80,11 @@ impl Osdt {
 
 impl Policy for Osdt {
     fn select_raw(&self, ctx: &StepContext) -> Vec<usize> {
+        // Floor mode mirrors `plan`'s τ=1.0 advertisement: nothing passes
+        // the raw rule, so `select` commits exactly the argmax per pass.
+        if self.floor_active(ctx.block, ctx.step) {
+            return vec![];
+        }
         let cut = self.tau_eff(ctx.block, ctx.step);
         (0..ctx.conf.len())
             .filter(|&i| f64::from(ctx.conf[i]) > cut)
@@ -56,8 +95,35 @@ impl Policy for Osdt {
     /// the pass runs, so OSDT steps fuse onto the device. `f32_below`
     /// quantises the f64 cutoff so the device's f32 strict compare selects
     /// exactly the same positions as `select_raw`'s f64 compare.
+    ///
+    /// With elision enabled, a step whose trajectory predicts an empty run
+    /// of length `k` advertises `skip_ahead = k` together with the rule
+    /// calibrated for the first productive step `s + k` — the scheduler
+    /// advances the task's schedule before the pass, so the plan contract
+    /// holds at the jumped-to step, where `predict_empty_run` is 0. An
+    /// all-empty remaining trajectory instead drops to the argmax-liveness
+    /// floor: τ=1.0 passes nothing, the fallback walks the remaining
+    /// positions one per pass, and no steps are skipped (every fallback
+    /// commit needs its own forward pass anyway).
     fn plan(&self, ctx: &PlanContext) -> StepPlan {
-        StepPlan::Threshold { tau: f32_below(self.tau_eff(ctx.block, ctx.step)) }
+        if let Some(floor) = self.elide_floor {
+            let k = self.profile.predict_empty_run(ctx.block, ctx.step, floor);
+            if k > 0 {
+                if ctx.step + k >= self.profile.trajectory_steps(ctx.block) {
+                    return StepPlan {
+                        rule: StepRule::Threshold { tau: 1.0 },
+                        skip_ahead: 0,
+                    };
+                }
+                return StepPlan {
+                    rule: StepRule::Threshold {
+                        tau: f32_below(self.tau_eff(ctx.block, ctx.step + k)),
+                    },
+                    skip_ahead: k,
+                };
+            }
+        }
+        StepPlan::threshold(f32_below(self.tau_eff(ctx.block, ctx.step)))
     }
 
     fn name(&self) -> String {
@@ -117,6 +183,97 @@ mod tests {
         assert!(s2.len() >= s1.len());
         for i in &s1 {
             assert!(s2.contains(i), "relaxed must be a superset");
+        }
+    }
+
+    fn elidable_profile() -> Profile {
+        // step 0 productive, steps 1-3 fallback-only, step 4 productive
+        Profile::step_block(
+            vec![vec![0.5, 0.995, 0.995, 0.995, 0.25]],
+            Metric::Q1,
+        )
+        .with_accepts(vec![vec![4.0, 1.0, 1.0, 1.0, 3.0]])
+    }
+
+    #[test]
+    fn plan_skips_predicted_empty_run() {
+        use crate::policy::{f32_below, PlanContext, StepPlan, StepRule};
+        let p = Osdt::from_profile(elidable_profile(), 1.0, 0.0).with_elision(1.5);
+        // productive step: plain rule, no skip
+        assert_eq!(
+            p.plan(&PlanContext { block: 0, step: 0 }),
+            StepPlan::threshold(f32_below(0.5))
+        );
+        // empty run of 3: jump to step 4's rule
+        assert_eq!(
+            p.plan(&PlanContext { block: 0, step: 1 }),
+            StepPlan {
+                rule: StepRule::Threshold { tau: f32_below(0.25) },
+                skip_ahead: 3,
+            }
+        );
+        // mid-run suffix skips the remainder
+        assert_eq!(p.plan(&PlanContext { block: 0, step: 3 }).skip_ahead, 1);
+        // the jumped-to step itself is productive again
+        assert_eq!(
+            p.plan(&PlanContext { block: 0, step: 4 }),
+            StepPlan::threshold(f32_below(0.25))
+        );
+    }
+
+    #[test]
+    fn plan_without_elision_never_skips() {
+        use crate::policy::PlanContext;
+        let p = Osdt::from_profile(elidable_profile(), 1.0, 0.0);
+        for s in 0..6 {
+            assert_eq!(p.plan(&PlanContext { block: 0, step: s }).skip_ahead, 0);
+        }
+    }
+
+    #[test]
+    fn all_empty_tail_drops_to_argmax_floor() {
+        use crate::policy::{PlanContext, StepPlan, StepRule};
+        let prof = Profile::step_block(
+            vec![vec![0.5, 0.995, 0.995]],
+            Metric::Q1,
+        )
+        .with_accepts(vec![vec![3.0, 1.0, 1.0]]);
+        let p = Osdt::from_profile(prof, 1.0, 0.0).with_elision(1.5);
+        // steps 1.. are all-empty to the trajectory's end: floor mode,
+        // no skip (each fallback commit needs its own pass)
+        assert_eq!(
+            p.plan(&PlanContext { block: 0, step: 1 }),
+            StepPlan {
+                rule: StepRule::Threshold { tau: 1.0 },
+                skip_ahead: 0,
+            }
+        );
+        // host path mirrors the advertised rule: raw selection empty,
+        // select commits exactly the argmax (plan contract, §11)
+        let ctx = StepContext { block: 0, step: 1, conf: &[0.3, 0.7, 0.4] };
+        assert!(p.select_raw(&ctx).is_empty());
+        assert_eq!(p.select(&ctx), vec![1]);
+        // without elision the same step selects by tau_eff as before
+        let plain = Osdt::from_profile(
+            Profile::step_block(vec![vec![0.5, 0.995, 0.995]], Metric::Q1)
+                .with_accepts(vec![vec![3.0, 1.0, 1.0]]),
+            1.0,
+            0.0,
+        );
+        assert_eq!(plain.select(&ctx), vec![1]); // 0.995 cut -> fallback too
+    }
+
+    #[test]
+    fn elision_noops_without_trajectory() {
+        use crate::policy::PlanContext;
+        // profile with no accepts: predict_empty_run is 0 everywhere, so
+        // even with elision on the plan is the plain schedule
+        let prof = Profile::step_block(vec![vec![0.9, 0.9]], Metric::Q1);
+        let p = Osdt::from_profile(prof.clone(), 1.0, 0.0).with_elision(1.5);
+        let plain = Osdt::from_profile(prof, 1.0, 0.0);
+        for s in 0..4 {
+            let ctx = PlanContext { block: 0, step: s };
+            assert_eq!(p.plan(&ctx), plain.plan(&ctx));
         }
     }
 

@@ -26,8 +26,9 @@ use crate::util::json::Json;
 
 use super::{DynamicMode, Metric};
 
-/// On-disk schema version written by [`ProfileStore::save`].
-pub const PROFILE_SCHEMA_VERSION: u64 = 2;
+/// On-disk schema version written by [`ProfileStore::save`]. Schema 3 adds
+/// the optional `accepts` acceptance trajectory (absent in older records).
+pub const PROFILE_SCHEMA_VERSION: u64 = 3;
 
 /// Calibrated thresholds at block or step-block granularity.
 #[derive(Clone, Debug, PartialEq)]
@@ -37,6 +38,12 @@ pub struct Profile {
     /// Block mode: taus[b]. Step-block mode: taus_sb[b][s].
     block_taus: Vec<f64>,
     step_block_taus: Vec<Vec<f64>>,
+    /// Per-(block, step) acceptance counts observed during calibration:
+    /// `accepts[b][s]` = number of positions the calibrating decode
+    /// committed at step `s` of block `b`. Empty when the profile predates
+    /// schema 3 or was built without a trace — every prediction query then
+    /// answers "no data" (0), which disables elision for that profile.
+    accepts: Vec<Vec<f64>>,
 }
 
 impl Profile {
@@ -46,6 +53,7 @@ impl Profile {
             metric,
             block_taus: taus,
             step_block_taus: vec![],
+            accepts: vec![],
         }
     }
 
@@ -55,7 +63,16 @@ impl Profile {
             metric,
             block_taus: vec![],
             step_block_taus: taus,
+            accepts: vec![],
         }
+    }
+
+    /// Attach the calibration acceptance trajectory (`accepts[b][s]` =
+    /// committed positions at step `s` of block `b`) — the raw material for
+    /// the elision planner's [`Profile::predict_empty_run`] query.
+    pub fn with_accepts(mut self, accepts: Vec<Vec<f64>>) -> Self {
+        self.accepts = accepts;
+        self
     }
 
     pub fn num_blocks(&self) -> usize {
@@ -98,14 +115,42 @@ impl Profile {
         }
     }
 
+    /// Calibrated trajectory depth of block `b`; 0 when no acceptance
+    /// trajectory was recorded for it.
+    pub fn trajectory_steps(&self, block: usize) -> usize {
+        self.accepts.get(block).map(Vec::len).unwrap_or(0)
+    }
+
+    /// Elision query: how many consecutive steps starting at `step` does the
+    /// calibration trajectory predict to accept fewer than `floor`
+    /// positions? The no-data answer is 0 — an uncalibrated block, a step
+    /// beyond the recorded trajectory, or a profile without an acceptance
+    /// trajectory all predict "run the step" (elision never fires on
+    /// guesswork). Unlike `tau()`, this deliberately does NOT clamp to
+    /// neighbouring units: clamped extrapolation is exactly the low-confidence
+    /// case the planner must treat as no-data.
+    pub fn predict_empty_run(&self, block: usize, step: usize, floor: f64) -> usize {
+        let Some(steps) = self.accepts.get(block) else {
+            return 0;
+        };
+        steps
+            .iter()
+            .skip(step)
+            .take_while(|&&a| a < floor)
+            .count()
+    }
+
     /// Per-unit EMA toward `new`: τ' = (1 − α)·τ + α·τ_new, the refinement
     /// rule shared by [`super::AdaptiveOsdt`] and the registry's
     /// observation path. Units calibrated in only one of the two profiles
     /// blend against the other's clamped `tau()` lookup, so the result
-    /// covers the deeper of the two.
+    /// covers the deeper of the two. The acceptance trajectory is carried
+    /// forward from `self` unchanged: refinement adjusts thresholds, while
+    /// the trajectory stays anchored to the original calibration decode
+    /// (a fresh one arrives only through full recalibration).
     pub fn blend(&self, new: &Profile, alpha: f64) -> Profile {
         let nb = self.num_blocks().max(new.num_blocks());
-        match self.mode {
+        let blended = match self.mode {
             DynamicMode::Block => {
                 let taus = (0..nb)
                     .map(|b| {
@@ -128,7 +173,8 @@ impl Profile {
                     .collect();
                 Profile::step_block(taus, self.metric)
             }
-        }
+        };
+        blended.with_accepts(self.accepts.clone())
     }
 
     // -- JSON persistence ----------------------------------------------------
@@ -143,11 +189,20 @@ impl Profile {
                     .collect(),
             ),
         };
-        Json::obj(vec![
+        let mut fields = vec![
             ("mode", Json::Str(self.mode.as_str().into())),
             ("metric", Json::Str(self.metric.as_str().into())),
             ("taus", taus),
-        ])
+        ];
+        if !self.accepts.is_empty() {
+            fields.push((
+                "accepts",
+                Json::Arr(
+                    self.accepts.iter().map(|v| Json::from_f64s(v)).collect(),
+                ),
+            ));
+        }
+        Json::obj(fields)
     }
 
     pub fn from_json(j: &Json) -> Result<Profile> {
@@ -167,7 +222,7 @@ impl Profile {
             .map_err(anyhow::Error::msg)?
             .as_arr()
             .context("taus not an array")?;
-        Ok(match mode {
+        let profile = match mode {
             DynamicMode::Block => {
                 let v: Option<Vec<f64>> = taus.iter().map(Json::as_f64).collect();
                 Profile::block(v.context("taus must be numbers")?, metric)
@@ -181,7 +236,21 @@ impl Profile {
                 }
                 Profile::step_block(out, metric)
             }
-        })
+        };
+        // schema-3 acceptance trajectory; absent in older records
+        let accepts = match j.get("accepts").and_then(Json::as_arr) {
+            None => vec![],
+            Some(rows) => {
+                let mut out = Vec::with_capacity(rows.len());
+                for row in rows {
+                    let row = row.as_arr().context("accepts rows must be arrays")?;
+                    let v: Option<Vec<f64>> = row.iter().map(Json::as_f64).collect();
+                    out.push(v.context("accepts must be numbers")?);
+                }
+                out
+            }
+        };
+        Ok(profile.with_accepts(accepts))
     }
 }
 
@@ -438,6 +507,63 @@ mod tests {
         assert!((b.tau(0, 0) - 0.5).abs() < 1e-12);
         assert_eq!(old.blend(&new, 0.0), old);
         assert_eq!(old.blend(&new, 1.0), new);
+    }
+
+    #[test]
+    fn predict_empty_run_counts_below_floor() {
+        let p = Profile::step_block(
+            vec![vec![0.5; 5], vec![0.5; 3]],
+            Metric::Q1,
+        )
+        .with_accepts(vec![vec![4.0, 1.0, 1.0, 1.0, 3.0], vec![1.0, 1.0, 1.0]]);
+        // floor 1.5: steps accepting only the liveness fallback are "empty"
+        assert_eq!(p.predict_empty_run(0, 0, 1.5), 0); // productive step
+        assert_eq!(p.predict_empty_run(0, 1, 1.5), 3); // run of 3 fallback steps
+        assert_eq!(p.predict_empty_run(0, 2, 1.5), 2); // suffix of that run
+        assert_eq!(p.predict_empty_run(0, 4, 1.5), 0);
+        assert_eq!(p.predict_empty_run(1, 0, 1.5), 3); // all-empty block
+        assert_eq!(p.trajectory_steps(0), 5);
+        assert_eq!(p.trajectory_steps(1), 3);
+    }
+
+    #[test]
+    fn predict_empty_run_no_data_is_zero() {
+        // no trajectory attached at all
+        let bare = Profile::step_block(vec![vec![0.5, 0.5]], Metric::Q1);
+        assert_eq!(bare.predict_empty_run(0, 0, 1.5), 0);
+        assert_eq!(bare.trajectory_steps(0), 0);
+        let p = Profile::step_block(vec![vec![0.5, 0.5]], Metric::Q1)
+            .with_accepts(vec![vec![1.0, 1.0]]);
+        // block beyond the trajectory: no clamping, answer 0
+        assert_eq!(p.predict_empty_run(7, 0, 1.5), 0);
+        // step beyond the recorded depth: answer 0
+        assert_eq!(p.predict_empty_run(0, 2, 1.5), 0);
+        assert_eq!(p.predict_empty_run(0, 99, 1.5), 0);
+    }
+
+    #[test]
+    fn blend_preserves_accepts_trajectory() {
+        let old = Profile::block(vec![0.2], Metric::Mean)
+            .with_accepts(vec![vec![2.0, 1.0]]);
+        let new = Profile::block(vec![0.8], Metric::Mean);
+        let b = old.blend(&new, 0.5);
+        assert_eq!(b.predict_empty_run(0, 1, 1.5), 1);
+        assert_eq!(b.trajectory_steps(0), 2);
+    }
+
+    #[test]
+    fn json_roundtrip_with_accepts() {
+        let p = Profile::step_block(vec![vec![0.1, 0.2], vec![0.3]], Metric::Q1)
+            .with_accepts(vec![vec![3.0, 1.0], vec![2.0]]);
+        let back = Profile::from_json(&p.to_json()).unwrap();
+        assert_eq!(p, back);
+        // schema-2 documents (no accepts key) still load, with no trajectory
+        let j = Json::parse(
+            r#"{"schema":2,"mode":"block","metric":"q1","taus":[0.5]}"#,
+        )
+        .unwrap();
+        let rec = ProfileRecord::from_json(&j, "t").unwrap();
+        assert_eq!(rec.profile.trajectory_steps(0), 0);
     }
 
     #[test]

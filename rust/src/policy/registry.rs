@@ -103,6 +103,11 @@ pub struct ProfileEntry {
     pub stale: bool,
     /// Completed OSDT decodes folded into drift/EMA tracking.
     pub observed: u64,
+    /// Elision mispredictions accumulated against this calibration epoch;
+    /// reaching [`RegistryConfig::misprediction_floor`] marks the entry
+    /// stale. Reset by recalibration (a fulfilled lease installs a fresh
+    /// entry).
+    pub mispredicted: u64,
     /// Loaded from disk rather than calibrated in this process.
     pub warm_started: bool,
 }
@@ -127,11 +132,21 @@ pub struct RegistryConfig {
     /// EMA refinement rate folded in per observed decode (0 = pure
     /// one-shot, the paper's setting; 1 = always track the latest).
     pub ema_alpha: f64,
+    /// Accumulated elision mispredictions (profile predicted an empty run,
+    /// the landing step fell back to argmax) at which the profile is marked
+    /// stale. Mispredicted elisions are drift the signature path can't see
+    /// — the skipped steps were never executed — so they get their own
+    /// staleness trigger. The counter resets on recalibration.
+    pub misprediction_floor: u64,
 }
 
 impl Default for RegistryConfig {
     fn default() -> Self {
-        RegistryConfig { drift_floor: 0.95, ema_alpha: 0.0 }
+        RegistryConfig {
+            drift_floor: 0.95,
+            ema_alpha: 0.0,
+            misprediction_floor: 8,
+        }
     }
 }
 
@@ -237,6 +252,7 @@ impl ProfileRegistry {
                             epoch: rec.version.max(1),
                             stale: false,
                             observed: 0,
+                            mispredicted: 0,
                             warm_started: true,
                         }),
                         leased: false,
@@ -385,6 +401,7 @@ impl ProfileRegistry {
                 epoch: version,
                 stale: false,
                 observed: 0,
+                mispredicted: 0,
                 warm_started: false,
             });
             // a superseded lease (stolen from) still installs its result
@@ -488,6 +505,42 @@ impl ProfileRegistry {
             entry.profile = entry.profile.blend(&fresh, self.cfg.ema_alpha);
             entry.version += 1;
             self.metrics.add("profile_ema_updates", 1);
+        }
+    }
+
+    /// Fold `n` elision mispredictions from one completed decode into the
+    /// profile's staleness tracking. A misprediction means the profile's
+    /// acceptance trajectory told the planner a step run would be empty but
+    /// the landing step fell back to argmax — evidence of drift that
+    /// [`ProfileRegistry::observe`]'s signature comparison structurally
+    /// cannot see, because the elided steps were never executed. Crossing
+    /// [`RegistryConfig::misprediction_floor`] marks the entry stale
+    /// exactly like a cosine drift event: the next acquire receives a
+    /// recalibration lease while traffic keeps being served. Epoch-guarded
+    /// like `observe` — mispredictions from a decode that started before a
+    /// recalibration cannot poison the fresh profile.
+    pub fn note_elision_mispredictions(&self, key: &ProfileKey, epoch: u64, n: u64) {
+        if n == 0 {
+            return;
+        }
+        let mut slots = self.slots.lock().unwrap();
+        let Some(entry) = slots.get_mut(key).and_then(|s| s.entry.as_mut()) else {
+            return; // invalidated/removed since the decode started
+        };
+        if entry.epoch != epoch {
+            self.metrics.add("observations_superseded", 1);
+            return;
+        }
+        entry.mispredicted += n;
+        if entry.mispredicted >= self.cfg.misprediction_floor && !entry.stale {
+            entry.stale = true;
+            self.metrics.add("drift_events", 1);
+            log::info!(
+                "profile {key} accumulated {} elision mispredictions \
+                 (floor {}); recalibration scheduled",
+                entry.mispredicted,
+                self.cfg.misprediction_floor
+            );
         }
     }
 
@@ -749,6 +802,7 @@ mod tests {
         let reg = ProfileRegistry::with_config(RegistryConfig {
             drift_floor: 0.95,
             ema_alpha: 0.0,
+            ..RegistryConfig::default()
         });
         match reg.acquire(&key()) {
             Acquired::Lease(l) => l.fulfill(profile(0.6), vec![0.5, 0.5, 0.5, 0.5]),
@@ -778,10 +832,66 @@ mod tests {
     }
 
     #[test]
+    fn misprediction_storm_marks_stale_and_recalibration_resets() {
+        let reg = ProfileRegistry::with_config(RegistryConfig {
+            misprediction_floor: 3,
+            ..RegistryConfig::default()
+        });
+        match reg.acquire(&key()) {
+            Acquired::Lease(l) => l.fulfill(profile(0.6), vec![0.6]),
+            _ => panic!(),
+        }
+        // below the floor: accumulate, stay fresh
+        reg.note_elision_mispredictions(&key(), 1, 2);
+        let entry = reg.get(&key()).unwrap();
+        assert_eq!(entry.mispredicted, 2);
+        assert!(!entry.stale);
+        // crossing the floor is a drift event like a cosine breach
+        reg.note_elision_mispredictions(&key(), 1, 1);
+        assert!(reg.get(&key()).unwrap().stale);
+        assert_eq!(reg.metrics().counter_value("drift_events"), 1);
+        // the scheduled recalibration installs a fresh entry: accumulator
+        // reset, staleness cleared
+        match reg.acquire(&key()) {
+            Acquired::Lease(l) => l.fulfill(profile(0.5), vec![0.5]),
+            _ => panic!("stale profile must grant a recalibration lease"),
+        }
+        let entry = reg.get(&key()).unwrap();
+        assert_eq!(entry.mispredicted, 0);
+        assert!(!entry.stale);
+        assert_eq!(reg.metrics().counter_value("recalibrations"), 1);
+    }
+
+    #[test]
+    fn mispredictions_from_a_superseded_epoch_are_dropped() {
+        let reg = ProfileRegistry::in_memory();
+        match reg.acquire(&key()) {
+            Acquired::Lease(l) => l.fulfill(profile(0.6), vec![0.6]),
+            _ => panic!(),
+        }
+        assert!(reg.invalidate(&key()));
+        match reg.acquire(&key()) {
+            Acquired::Lease(l) => l.fulfill(profile(0.5), vec![0.5]),
+            _ => panic!(),
+        }
+        // a decode that acquired under epoch 1 retires after the epoch-2
+        // recalibration: its mispredictions target the dead profile
+        reg.note_elision_mispredictions(&key(), 1, 100);
+        let entry = reg.get(&key()).unwrap();
+        assert_eq!(entry.mispredicted, 0);
+        assert!(!entry.stale);
+        assert_eq!(reg.metrics().counter_value("observations_superseded"), 1);
+        // zero-count notes are a no-op, not an observation
+        reg.note_elision_mispredictions(&key(), 2, 0);
+        assert_eq!(reg.get(&key()).unwrap().mispredicted, 0);
+    }
+
+    #[test]
     fn ema_refinement_moves_thresholds() {
         let reg = ProfileRegistry::with_config(RegistryConfig {
             drift_floor: 0.0, // never mark stale in this test
             ema_alpha: 0.5,
+            ..RegistryConfig::default()
         });
         match reg.acquire(&key()) {
             Acquired::Lease(l) => l.fulfill(profile(0.2), vec![0.2]),

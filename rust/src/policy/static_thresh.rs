@@ -29,7 +29,7 @@ impl Policy for StaticThreshold {
 
     /// A global static τ is trivially known ahead of the pass — fusible.
     fn plan(&self, _ctx: &PlanContext) -> StepPlan {
-        StepPlan::Threshold { tau: f32_below(self.tau) }
+        StepPlan::threshold(f32_below(self.tau))
     }
 
     fn name(&self) -> String {

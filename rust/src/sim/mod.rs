@@ -94,6 +94,12 @@ pub struct SimModel {
     seed: u64,
     pool: CachePool,
     chaos: Option<Arc<Chaos>>,
+    /// Stable-confidence mode ([`SimModel::plateau_like`]): each position's
+    /// confidence is a pure function of the position alone, independent of
+    /// the block's masked count. Calibrated acceptance trajectories are
+    /// then *faithful* at decode time — the raw material for step-elision
+    /// tests and the elision bench rows.
+    stable_conf: bool,
     /// Cumulative `fwd_full_kv` invocations (clones share it) — lets
     /// prefix-sharing tests counter-assert skipped refreshes.
     full_kv_calls: Arc<AtomicU64>,
@@ -120,6 +126,7 @@ impl SimModel {
             seed,
             pool: CachePool::new(dims, 8),
             chaos: None,
+            stable_conf: false,
             full_kv_calls: Arc::new(AtomicU64::new(0)),
         }
     }
@@ -202,6 +209,28 @@ impl SimModel {
         )
     }
 
+    /// Plateau-analog: a bimodal per-position confidence landscape that
+    /// does NOT move with denoising progress — a stable high subset
+    /// (≈ 0.92) over a low band (0.30–0.45). Under a step-block OSDT
+    /// schedule this yields the trajectory the elision planner feeds on:
+    /// one productive opening step, a run of fallback-only steps, and one
+    /// productive closing step — and because the landscape is progress-
+    /// independent, the calibrated trajectory holds exactly at decode
+    /// time (predictions-hold regime).
+    pub fn plateau_like(seed: u64) -> Self {
+        let mut m = SimModel::new(
+            SimTask {
+                base: 0.5,
+                amp: 0.0,
+                noise: 0.0,
+                block_offsets: [0.0, 0.0, 0.0],
+            },
+            seed,
+        );
+        m.stable_conf = true;
+        m
+    }
+
     /// A fully-masked layout whose prompt region varies with `seed`
     /// (different "inputs" of the same task).
     pub fn layout_from_seed(&self, seed: u64) -> Vec<u32> {
@@ -220,6 +249,15 @@ impl SimModel {
     /// function both the full and window paths evaluate (which is what
     /// makes the dual-cache path exact for the simulator).
     fn conf_at(&self, block: usize, masked_in_block: usize, pos: usize) -> f32 {
+        if self.stable_conf {
+            // pure function of pos: dual-cache exact AND progress-stable
+            let n = hash2(self.seed ^ 0x009A_7EA0, pos as u64);
+            return if n % 3 == 0 {
+                0.92
+            } else {
+                (0.30 + (n % 1000) as f64 / 1000.0 * 0.15) as f32
+            };
+        }
         let progress = 1.0 - masked_in_block as f64 / self.cfg.block_len as f64;
         let curve = self.task.base
             + self.task.amp * (std::f64::consts::PI * progress).sin()
@@ -403,6 +441,36 @@ mod tests {
         let res = eng.decode(m.layout_from_seed(1), &osdt).unwrap();
         assert!(res.steps <= m.config().gen_len);
         assert!(res.steps >= m.config().num_blocks);
+    }
+
+    #[test]
+    fn plateau_confidence_is_progress_independent() {
+        let m = SimModel::plateau_like(5);
+        let l = m.layout_from_seed(0);
+        let cfg = m.config().clone();
+        // full-layout scoring vs a partially-committed layout: unmasked
+        // positions elsewhere must not move any masked position's conf
+        let a = m.fwd_conf(&[l.as_slice()]).unwrap();
+        let mut committed = l.clone();
+        // commit half of block 0
+        for p in cfg.block_range(0).take(cfg.block_len / 2) {
+            committed[p] = 9;
+        }
+        let b = m.fwd_conf(&[committed.as_slice()]).unwrap();
+        for p in cfg.block_range(0).skip(cfg.block_len / 2) {
+            assert_eq!(a.conf_row(0)[p], b.conf_row(0)[p], "pos {p}");
+        }
+        // bimodal: both the high plateau and the low band are present
+        let highs = cfg
+            .gen_range()
+            .filter(|&p| a.conf_row(0)[p] > 0.9)
+            .count();
+        let lows = cfg
+            .gen_range()
+            .filter(|&p| a.conf_row(0)[p] < 0.5)
+            .count();
+        assert!(highs > 0 && lows > 0, "highs {highs} lows {lows}");
+        assert_eq!(highs + lows, cfg.gen_len);
     }
 
     #[test]

@@ -8,7 +8,7 @@ use osdt::cache::CacheConfig;
 use osdt::decode::{DecodeResult, Engine, ForwardModel, StepScheduler};
 use osdt::policy::{
     Calibrator, DynamicMode, FactorThreshold, HostTraced, Metric, Osdt,
-    PlanContext, Policy, SequentialTopK, StaticThreshold, StepContext, StepPlan,
+    PlanContext, Policy, SequentialTopK, StaticThreshold, StepContext, StepRule,
 };
 use osdt::runtime::{accept_rows, AcceptRule, ConfOut};
 use osdt::sim::SimModel;
@@ -56,7 +56,7 @@ fn prop_fused_decode_token_identical_to_host_path() {
             let layouts: Vec<Vec<u32>> =
                 (0..n).map(|i| m.layout_from_seed(seed ^ i as u64)).collect();
 
-            // host path: HostTraced forces StepPlan::HostFull per row
+            // host path: HostTraced forces a HostFull plan per row
             let host: Vec<DecodeResult> = layouts
                 .iter()
                 .map(|l| {
@@ -121,10 +121,10 @@ fn prop_accept_rule_matches_policy_select_explain() {
                 0 => Box::new(StaticThreshold::new(*x)),
                 _ => Box::new(FactorThreshold::new(*x)),
             };
-            let rule = match policy.plan(&PlanContext { block: 0, step: 0 }) {
-                StepPlan::Threshold { tau } => AcceptRule::threshold(tau),
-                StepPlan::FactorMax { factor } => AcceptRule::factor_max(factor),
-                StepPlan::HostFull => return Err("policy not fusible".into()),
+            let rule = match policy.plan(&PlanContext { block: 0, step: 0 }).rule {
+                StepRule::Threshold { tau } => AcceptRule::threshold(tau),
+                StepRule::FactorMax { factor } => AcceptRule::factor_max(factor),
+                StepRule::HostFull => return Err("policy not fusible".into()),
             };
             let masked: Vec<usize> = (0..window.len())
                 .filter(|&i| window[i] == MASK)

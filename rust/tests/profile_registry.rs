@@ -134,6 +134,7 @@ fn drift_injection_triggers_recalibration() {
     let registry = Arc::new(ProfileRegistry::with_config(RegistryConfig {
         drift_floor: 0.95,
         ema_alpha: 0.0,
+        ..RegistryConfig::default()
     }));
     let coord = replica(&registry, 1);
     // calibrate + one normal decode (adopts the drift reference)

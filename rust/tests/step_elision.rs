@@ -1,0 +1,379 @@
+//! Integration tests of profile-guided step elision (DESIGN.md §14): the
+//! planner skips window passes the calibrated acceptance trajectory
+//! predicts are empty, and the correctness bar is token identity — an
+//! eliding decode commits exactly the tokens the non-eliding schedule
+//! would, in strictly fewer window passes when the predictions hold.
+//! Mispredictions are detected, bounded, and fed to the profile registry
+//! as drift evidence (§9).
+//!
+//! All tests run over the plateau simulator: confidence is a pure function
+//! of position (decode-progress independent), so hand-built profiles can
+//! stage predictable empty runs without the calibration round trip.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use osdt::cache::CacheConfig;
+use osdt::coordinator::{Coordinator, CoordinatorConfig};
+use osdt::decode::{DecodeResult, StepScheduler};
+use osdt::model::fixtures::tiny_config;
+use osdt::policy::{
+    signature_cosine, Acquired, DynamicMode, Metric, Osdt, Policy, Profile,
+    ProfileKey, ProfileRegistry, RegistryConfig, DEFAULT_ELIDE_FLOOR,
+};
+use osdt::sim::SimModel;
+use osdt::util::prop;
+use osdt::util::rng::Rng;
+
+const SPEC: &str = "osdt:step-block:q1:1:0";
+
+/// A step-block profile whose trajectory stages an empty run: step 0
+/// commits the high-confidence plateau (τ 0.5), steps 1–3 are
+/// fallback-only in the non-eliding schedule (τ 0.995, accepts 1.0 < the
+/// default elide floor), and step 4 drains the low band (τ 0.25). The
+/// planner should jump 1–3 and land on 4.
+fn elidable_profile(blocks: usize) -> Profile {
+    Profile::step_block(
+        vec![vec![0.5, 0.995, 0.995, 0.995, 0.25]; blocks],
+        Metric::Q1,
+    )
+    .with_accepts(vec![vec![8.0, 1.0, 1.0, 1.0, 9.0]; blocks])
+}
+
+/// Same empty run, but the promised landing step cannot accept by rule
+/// (τ 0.995 over a 0.30–0.45 low band): every jump is a misprediction.
+fn lying_profile(blocks: usize) -> Profile {
+    Profile::step_block(
+        vec![vec![0.5, 0.995, 0.995, 0.995, 0.995]; blocks],
+        Metric::Q1,
+    )
+    .with_accepts(vec![vec![8.0, 1.0, 1.0, 1.0, 9.0]; blocks])
+}
+
+fn osdt_policy(profile: &Profile, kappa: f64, eps: f64, elide: bool) -> Box<dyn Policy> {
+    let p = Osdt::from_profile(profile.clone(), kappa, eps);
+    if elide {
+        Box::new(p.with_elision(DEFAULT_ELIDE_FLOOR))
+    } else {
+        Box::new(p)
+    }
+}
+
+/// Drain a batch through the step scheduler; results in admission order.
+fn run_batch(
+    m: &SimModel,
+    policies: Vec<Box<dyn Policy>>,
+    layouts: Vec<Vec<u32>>,
+    fused: bool,
+) -> Vec<DecodeResult> {
+    let mut sched: StepScheduler<'_, SimModel, Box<dyn Policy>> =
+        StepScheduler::new(m, CacheConfig::block_boundary(), 4);
+    sched.set_fusion(fused);
+    for (i, (p, l)) in policies.into_iter().zip(layouts).enumerate() {
+        sched.admit(i as u64, l, p).unwrap();
+    }
+    let mut results = sched.drain().unwrap();
+    results.sort_by_key(|(id, _)| *id);
+    results.into_iter().map(|(_, r)| r).collect()
+}
+
+/// The core bar: across policy parameters, seeds, batch sizes, and both
+/// decision paths (fused/host), elision-on is token-identical to
+/// elision-off and strictly cheaper in window passes, with zero
+/// mispredictions — the trajectory's predictions hold on the plateau.
+#[test]
+fn prop_elision_is_token_identical_when_predictions_hold() {
+    prop::forall(
+        "elision-token-identity",
+        24,
+        |r: &mut Rng| {
+            (
+                r.next_u64(),
+                1 + r.below(4) as usize,
+                r.below(2) == 0,
+                r.below(2) == 0,
+            )
+        },
+        |&(seed, n, fused, tight)| {
+            let m = SimModel::plateau_like(seed);
+            let cfg = tiny_config();
+            let profile = elidable_profile(cfg.num_blocks);
+            // tight = the paper's exact-τ spec; loose exercises the κ/ε
+            // clamp interacting with the landing-step threshold
+            let (kappa, eps) = if tight { (1.0, 0.0) } else { (0.9, 0.1) };
+            let layouts: Vec<Vec<u32>> = (0..n)
+                .map(|i| m.layout_from_seed(seed ^ (i as u64)))
+                .collect();
+            let mk = |elide: bool| -> Vec<Box<dyn Policy>> {
+                (0..n).map(|_| osdt_policy(&profile, kappa, eps, elide)).collect()
+            };
+            let off = run_batch(&m, mk(false), layouts.clone(), fused);
+            let on = run_batch(&m, mk(true), layouts, fused);
+            for (i, (a, b)) in on.iter().zip(&off).enumerate() {
+                if a.tokens != b.tokens {
+                    return Err(format!("seq {i}: tokens diverge under elision"));
+                }
+                if a.steps_elided == 0 {
+                    return Err(format!("seq {i}: planner never elided"));
+                }
+                if a.elision_mispredictions != 0 {
+                    return Err(format!(
+                        "seq {i}: {} mispredictions on a faithful profile",
+                        a.elision_mispredictions
+                    ));
+                }
+                if a.window_passes >= b.window_passes {
+                    return Err(format!(
+                        "seq {i}: elision saved nothing ({} vs {} window passes)",
+                        a.window_passes, b.window_passes
+                    ));
+                }
+                if a.blocks_retired_early == 0 {
+                    return Err(format!("seq {i}: no block retired early"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// A lying trajectory: every jump lands on a step that falls back. The
+/// decode must detect one misprediction per block, still complete, and —
+/// because plateau confidence is position-pure — commit exactly the
+/// non-eliding tokens (bounded divergence collapses to identity here).
+#[test]
+fn mispredicted_elision_is_detected_and_bounded() {
+    let m = SimModel::plateau_like(77);
+    let cfg = tiny_config();
+    let lying = lying_profile(cfg.num_blocks);
+    let layout = m.layout_from_seed(1);
+    let off = run_batch(
+        &m,
+        vec![osdt_policy(&lying, 1.0, 0.0, false)],
+        vec![layout.clone()],
+        true,
+    );
+    let on = run_batch(
+        &m,
+        vec![osdt_policy(&lying, 1.0, 0.0, true)],
+        vec![layout],
+        true,
+    );
+    assert_eq!(on[0].tokens, off[0].tokens, "divergence must stay bounded");
+    assert!(on[0].steps_elided > 0, "the lying profile must trigger jumps");
+    assert_eq!(
+        on[0].elision_mispredictions, cfg.num_blocks,
+        "every block's jump lands on a fallback step"
+    );
+    // a mispredicted jump skips only fallback-singleton steps, so the
+    // executed-step count cannot exceed the non-eliding schedule's
+    assert!(
+        on[0].steps <= off[0].steps,
+        "misprediction must not add executed steps ({} vs {})",
+        on[0].steps,
+        off[0].steps
+    );
+}
+
+/// Elided schedule steps never enter a window group: they occupy no bucket
+/// slot, add no padding rows, and report no commits — padding accounting
+/// stays a pure function of live rows (the §13/§14 invariant).
+#[test]
+fn elided_steps_are_not_padding_rows() {
+    let m = SimModel::plateau_like(5);
+    let cfg = tiny_config();
+    let profile = elidable_profile(cfg.num_blocks);
+    let mut sched: StepScheduler<'_, SimModel, Box<dyn Policy>> =
+        StepScheduler::new(&m, CacheConfig::block_boundary(), 4);
+    for i in 0..3u64 {
+        sched
+            .admit(
+                i,
+                m.layout_from_seed(10 + i),
+                osdt_policy(&profile, 1.0, 0.0, true),
+            )
+            .unwrap();
+    }
+    // step 1: all three sequences run their block-boundary refresh
+    let r0 = sched.step().unwrap();
+    assert_eq!(r0.full_passes, 3);
+    assert_eq!(r0.steps_elided, 0, "refresh steps never elide");
+    // step 2: each sequence elides steps 1-3 and executes the landing step
+    let r1 = sched.step().unwrap();
+    assert_eq!(r1.steps_elided, 9, "3 sequences x 3 elided steps");
+    assert_eq!(r1.window_passes, 3, "only the landing steps execute");
+    assert_eq!(
+        r1.window_groups,
+        vec![(3, 4)],
+        "one group of 3 live rows in the 4-bucket"
+    );
+    assert_eq!(
+        r1.padding_rows, 1,
+        "padding = bucket - live rows; elided steps contribute nothing"
+    );
+    assert_eq!(r1.accepted.len(), 3, "only live rows report commits");
+    assert!(r1.accepted.iter().all(|&(_, n)| n > 0));
+    assert_eq!(r1.elision_mispredictions, 0);
+    assert_eq!(
+        r1.blocks_retired_early, 3,
+        "each block completed with elided steps"
+    );
+}
+
+/// Drift signatures compare executed steps only: an eliding decode's trace
+/// is shorter per block, the cosine's clamp-extension aligns it against a
+/// full-schedule reference, and the registry must not read elision as
+/// drift.
+#[test]
+fn eliding_decode_does_not_read_as_drift() {
+    let m = SimModel::plateau_like(9);
+    let cfg = tiny_config();
+    let profile = elidable_profile(cfg.num_blocks);
+    let layout = m.layout_from_seed(3);
+    // host path keeps full per-step confidence vectors in both traces
+    let off = run_batch(
+        &m,
+        vec![osdt_policy(&profile, 1.0, 0.0, false)],
+        vec![layout.clone()],
+        false,
+    );
+    let on = run_batch(
+        &m,
+        vec![osdt_policy(&profile, 1.0, 0.0, true)],
+        vec![layout],
+        false,
+    );
+    let (off, on) = (&off[0], &on[0]);
+    let mut on_total = 0usize;
+    let mut off_total = 0usize;
+    for b in 0..cfg.num_blocks {
+        let (e, f) = (on.trace.steps_recorded(b), off.trace.steps_recorded(b));
+        assert!(
+            e <= f,
+            "block {b}: eliding trace holds {e} steps vs {f} executed-only"
+        );
+        assert!(e >= 1, "block {b}: at least the refresh step is recorded");
+        on_total += e;
+        off_total += f;
+    }
+    assert!(
+        on_total < off_total,
+        "elision must shorten the executed-step trace ({on_total} vs {off_total})"
+    );
+    let cos = signature_cosine(
+        &off.trace.block_signatures(),
+        &on.trace.block_signatures(),
+    )
+    .expect("both traces are non-empty");
+    assert!(
+        cos > 0.95,
+        "clamp-extended alignment must not read elision as drift (cosine {cos})"
+    );
+    // registry-level: adopt a full-schedule drift reference, then observe
+    // the eliding decode — the profile must stay fresh
+    let reg = ProfileRegistry::in_memory();
+    let key = ProfileKey::new("synth-plateau", DynamicMode::StepBlock, Metric::Q1);
+    match reg.acquire(&key) {
+        Acquired::Lease(l) => l.fulfill(profile, off.trace.signature()),
+        _ => panic!("first acquire must lease"),
+    }
+    reg.observe(&key, 1, &off.trace); // becomes the drift reference
+    reg.observe(&key, 1, &on.trace);
+    assert!(
+        !reg.get(&key).unwrap().stale,
+        "an eliding decode observed against a full-schedule reference \
+         must not mark the profile stale"
+    );
+}
+
+/// End-to-end misprediction storm through the serving stack: a seeded
+/// lying profile mispredicts on every block, the coordinator feeds the
+/// mispredictions to the registry, the profile goes stale, the next
+/// request recalibrates, and service continues — requests complete
+/// throughout (§9 drift loop, elision-triggered).
+#[test]
+fn misprediction_storm_recalibrates_through_the_coordinator() {
+    let registry = Arc::new(ProfileRegistry::with_config(RegistryConfig {
+        misprediction_floor: 2,
+        ..RegistryConfig::default()
+    }));
+    let key = ProfileKey::new("synth-math", DynamicMode::StepBlock, Metric::Q1);
+    match registry.acquire(&key) {
+        Acquired::Lease(l) => {
+            l.fulfill(lying_profile(tiny_config().num_blocks), vec![0.5; 4])
+        }
+        _ => panic!("seeding acquire must lease"),
+    }
+    let coord = Coordinator::start_with_registry(
+        CoordinatorConfig {
+            workers: 1,
+            max_batch: 4,
+            batch_wait: Duration::from_millis(5),
+            cache: CacheConfig::block_boundary(),
+            step_elision: true,
+            ..CoordinatorConfig::default()
+        },
+        tiny_config(),
+        registry.clone(),
+        |_| Ok(SimModel::plateau_like(42)),
+    )
+    .unwrap();
+    // decode under the seeded lying profile: completes despite the storm
+    let r1 = coord.generate("synth-math", "Q: 1+1=?", SPEC).unwrap();
+    assert!(r1.error.is_none(), "{:?}", r1.error);
+    assert!(!r1.calibrated, "the seeded profile serves the first request");
+    assert!(coord.metrics.counter_value("steps_elided") > 0);
+    assert!(
+        coord.metrics.counter_value("elision_mispredictions") >= 2,
+        "the lying profile must mispredict past the floor"
+    );
+    assert!(
+        registry.get(&key).unwrap().stale,
+        "the misprediction storm must mark the profile stale"
+    );
+    assert!(registry.metrics().counter_value("drift_events") >= 1);
+    // the scheduled recalibration fires on the next request...
+    let r2 = coord.generate("synth-math", "Q: 2+2=?", SPEC).unwrap();
+    assert!(r2.error.is_none(), "{:?}", r2.error);
+    assert!(r2.calibrated, "stale profile must trigger recalibration");
+    // ...and service continues from the fresh profile
+    let r3 = coord.generate("synth-math", "Q: 3+3=?", SPEC).unwrap();
+    assert!(r3.error.is_none(), "{:?}", r3.error);
+    assert!(!r3.calibrated);
+    assert!(!registry.get(&key).unwrap().stale);
+    coord.shutdown();
+}
+
+/// With elision disabled (the default), the planner is never attached:
+/// the same profile decodes the full schedule and no elision counter
+/// moves — protecting every pre-elision caller.
+#[test]
+fn elision_off_is_the_status_quo() {
+    let registry = Arc::new(ProfileRegistry::in_memory());
+    let key = ProfileKey::new("synth-math", DynamicMode::StepBlock, Metric::Q1);
+    match registry.acquire(&key) {
+        Acquired::Lease(l) => {
+            l.fulfill(elidable_profile(tiny_config().num_blocks), vec![0.5; 4])
+        }
+        _ => panic!(),
+    }
+    let coord = Coordinator::start_with_registry(
+        CoordinatorConfig {
+            workers: 1,
+            max_batch: 4,
+            batch_wait: Duration::from_millis(5),
+            cache: CacheConfig::block_boundary(),
+            ..CoordinatorConfig::default()
+        },
+        tiny_config(),
+        registry,
+        |_| Ok(SimModel::plateau_like(42)),
+    )
+    .unwrap();
+    let r = coord.generate("synth-math", "Q: 1+1=?", SPEC).unwrap();
+    assert!(r.error.is_none(), "{:?}", r.error);
+    assert_eq!(coord.metrics.counter_value("steps_elided"), 0);
+    assert_eq!(coord.metrics.counter_value("elision_mispredictions"), 0);
+    assert_eq!(coord.metrics.counter_value("blocks_retired_early"), 0);
+    coord.shutdown();
+}

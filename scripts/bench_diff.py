@@ -16,6 +16,13 @@ snapshot committed before any CI runner measured one) reports
 regressions as warnings and always exits 0. Replace it with a measured
 snapshot (see bench/trajectory/README.md) to arm the gate.
 
+Step-elision rows (cache "elide-on"/"elide-off") additionally carry
+steps_executed/steps_elided and are checked for self-consistency in BOTH
+artifacts: the elide-on row must elide at least one step and execute
+strictly fewer passes than its matched elide-off row. These run on the
+deterministic analytic simulator, so violations are hard errors even
+under a seed baseline.
+
 Exit codes: 0 pass/warn-only, 1 regression, 2 usage or schema error.
 Stdlib only.
 """
@@ -62,6 +69,47 @@ def fmt_key(k):
     return f"{policy} cache={cache}:{residency} @{rate}rps"
 
 
+def check_elision(doc, path):
+    """Self-consistency of step-elision A/B rows (cache elide-on/elide-off).
+
+    The elision comparator runs on the deterministic analytic simulator, so
+    these are hard invariants, not runner-noise measurements: the elide-on
+    row must record strictly fewer executed passes than its matched
+    elide-off row, with a nonzero elided count. Violations are errors even
+    under a "seed" baseline. Artifacts predating the elision rows (no
+    elide-* cache labels) pass vacuously.
+    """
+    problems = []
+    rows = {key(r): r for r in doc["rows"]}
+    for k, on in rows.items():
+        policy, cache, residency, rate = k
+        if cache != "elide-on":
+            continue
+        off = rows.get((policy, "elide-off", residency, rate))
+        if off is None:
+            problems.append(f"{path}: {fmt_key(k)} has no matching elide-off row")
+            continue
+        missing = [
+            f"{path}: {label} row for {policy} @{rate}rps is missing {field}"
+            for field in ("steps_executed", "steps_elided")
+            for row, label in ((on, "elide-on"), (off, "elide-off"))
+            if field not in row
+        ]
+        if missing:
+            problems.extend(missing)
+            continue
+        if float(on["steps_elided"]) <= 0:
+            problems.append(
+                f"{path}: {fmt_key(k)} elided no steps — the planner never fired"
+            )
+        if float(on["steps_executed"]) >= float(off["steps_executed"]):
+            problems.append(
+                f"{path}: {fmt_key(k)} executed {on['steps_executed']} passes "
+                f">= elide-off's {off['steps_executed']} — elision saved nothing"
+            )
+    return problems
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("baseline")
@@ -77,6 +125,12 @@ def main(argv=None):
     base = load(args.baseline)
     cur = load(args.current)
     warn_only = base.get("provenance") == "seed"
+
+    elision_problems = check_elision(base, args.baseline) + check_elision(
+        cur, args.current
+    )
+    for p in elision_problems:
+        print(f"error: {p}")
 
     base_rows = {key(r): r for r in base["rows"]}
     cur_rows = {key(r): r for r in cur["rows"]}
@@ -110,6 +164,11 @@ def main(argv=None):
         f"\n{len(matched)} row(s) compared, {len(regressions)} beyond "
         f"-{args.threshold:.0%} tokens/s"
     )
+    if elision_problems:
+        # deterministic-sim invariants, not throughput noise: never waived
+        # by a seed baseline
+        print("elision self-consistency FAILED")
+        return 1
     if regressions and warn_only:
         print(
             "baseline provenance is 'seed' (bootstrap values, never measured"
