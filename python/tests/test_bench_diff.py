@@ -219,6 +219,115 @@ def test_artifacts_without_elision_rows_pass_vacuously(tmp_path):
     assert bench_diff.check_elision(doc, "x.json") == []
 
 
+def predictive_rows(
+    err_p95=3.0, shed_rate=0.0, p50=18.0, drop_fifo=False
+):
+    """A matched fifo/predictive pair as emitted by the bench's admission
+    A/B section (DESIGN.md §15)."""
+    rows = []
+    for cache in ("fifo", "predictive"):
+        if cache == "fifo" and drop_fifo:
+            continue
+        rows.append(
+            {
+                "policy": "osdt:step-block:q1:1:0",
+                "cache": cache,
+                "residency": "sim",
+                "rate": 1000000,
+                "ok": 48,
+                "n": 48,
+                "p50_ms": 3.0,
+                "p95_ms": 7.0,
+                "p99_ms": 9.0,
+                "ttft_p50_ms": 2.0,
+                "ttft_p95_ms": 6.0,
+                "ttft_p99_ms": 7.5,
+                "tok_p50_ms": 0.03,
+                "tok_p95_ms": 0.07,
+                "tok_p99_ms": 0.09,
+                "tokens_per_sec": 20000.0,
+                "bytes_per_token": 120.0,
+                "cache_upload_bytes": 140000,
+                "fused_frac": 0.9,
+                "bytes_per_step": 650.0,
+                "steps_executed": 984.0,
+                "steps_elided": 0.0,
+                "admission_p95_ms": 4.0 if cache == "fifo" else 2.5,
+                "predicted_steps_p50": p50,
+                "forecast_abs_err_p95": err_p95,
+                "shed_rate": shed_rate,
+                "occ_mean": 1.0,
+                "occ_peak": 1,
+            }
+        )
+    return rows
+
+
+def with_predictive(doc, **kwargs):
+    doc = copy.deepcopy(doc)
+    doc["rows"].extend(predictive_rows(**kwargs))
+    return doc
+
+
+def test_consistent_predictive_rows_pass(tmp_path):
+    doc = with_predictive(make_doc({"osdt": 900.0}))
+    assert run(tmp_path, doc, copy.deepcopy(doc)) == 0
+
+
+def test_nonfinite_forecast_error_fails_even_on_seed_baseline(tmp_path):
+    # deterministic-sim invariant: never waived by warn-only provenance
+    base = with_predictive(make_doc({"osdt": 900.0}, provenance="seed"))
+    cur = with_predictive(
+        make_doc({"osdt": 900.0}, provenance="seed"), err_p95=float("nan")
+    )
+    assert run(tmp_path, base, cur) == 1
+
+
+def test_null_forecast_error_fails(tmp_path):
+    # an empty histogram serializes as JSON null — not a silent pass
+    doc = with_predictive(make_doc({"osdt": 900.0}))
+    cur = copy.deepcopy(doc)
+    for row in cur["rows"]:
+        if row["cache"] == "predictive":
+            row["forecast_abs_err_p95"] = None
+    assert run(tmp_path, doc, cur) == 1
+
+
+def test_nonzero_shed_rate_at_low_rate_fails(tmp_path):
+    doc = with_predictive(make_doc({"osdt": 900.0}))
+    cur = with_predictive(make_doc({"osdt": 900.0}), shed_rate=0.04)
+    assert run(tmp_path, doc, cur) == 1
+
+
+def test_zero_predicted_steps_fails(tmp_path):
+    doc = with_predictive(make_doc({"osdt": 900.0}))
+    cur = with_predictive(make_doc({"osdt": 900.0}), p50=0.0)
+    assert run(tmp_path, doc, cur) == 1
+
+
+def test_predictive_row_missing_fields_fails(tmp_path):
+    doc = with_predictive(make_doc({"osdt": 900.0}))
+    cur = copy.deepcopy(doc)
+    for row in cur["rows"]:
+        if row["cache"] == "predictive":
+            del row["predicted_steps_p50"]
+            del row["shed_rate"]
+    assert run(tmp_path, doc, cur) == 1
+
+
+def test_predictive_without_matching_fifo_row_fails(tmp_path):
+    doc = with_predictive(make_doc({"osdt": 900.0}))
+    cur = with_predictive(make_doc({"osdt": 900.0}), drop_fifo=True)
+    assert run(tmp_path, doc, cur) == 1
+
+
+def test_artifacts_without_predictive_rows_pass_vacuously(tmp_path):
+    # pre-predictive artifacts carry no fifo/predictive rows and keep gating
+    doc = make_doc({"osdt": 900.0})
+    assert run(tmp_path, doc, copy.deepcopy(doc)) == 0
+    assert bench_diff.check_predictive(doc, "x.json") == []
+
+
 def test_committed_snapshot_is_valid_and_warn_only(tmp_path):
     """The snapshot in bench/trajectory/ must parse, be schema 2, and be
     marked as bootstrap (warn-only) until CI replaces it with a measured
@@ -245,9 +354,11 @@ def test_committed_snapshot_is_valid_and_warn_only(tmp_path):
             "tok_p99_ms",
         ):
             assert isinstance(row[f], (int, float)), f"{f} missing in {row}"
-    # the elision A/B pair must be present and self-consistent
+    # the elision and admission A/B pairs must be present and self-consistent
     caches = {r["cache"] for r in doc["rows"]}
     assert {"elide-off", "elide-on"} <= caches
+    assert {"fifo", "predictive"} <= caches
     assert bench_diff.check_elision(doc, str(snap)) == []
+    assert bench_diff.check_predictive(doc, str(snap)) == []
     # diffing the snapshot against itself must pass its own gate
     assert bench_diff.main([str(snap), str(snap)]) == 0

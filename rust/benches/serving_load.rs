@@ -51,7 +51,7 @@ use osdt::runtime::ModelRuntime;
 use osdt::sim::SimModel;
 use osdt::util::json::Json;
 use osdt::util::stats::Histogram;
-use osdt::workload::{mixed_trace, Dataset, Example};
+use osdt::workload::{heavy_tail_trace, mixed_trace, Dataset, Example};
 
 /// Give worker loops a beat to publish their final stats deltas before the
 /// bench reads the counters (publishing happens on the loop iteration after
@@ -100,6 +100,22 @@ struct Point {
     /// Window passes skipped by the profile-guided elision planner
     /// (DESIGN.md §14); 0 with `--step-elision off`.
     steps_elided: u64,
+    /// p95 enqueue → scheduler admission, from the coordinator's
+    /// `admission_wait` histogram — the queueing delay predicted-cost
+    /// admission (DESIGN.md §15) attacks. Includes the warm-up requests
+    /// (idle-server admissions, ~0), which pads the low end identically
+    /// on every arm.
+    admission_p95_ms: f64,
+    /// Median forecast total passes stamped at admission (DESIGN.md §15);
+    /// the layout-derived worst case until the task calibrates.
+    predicted_steps_p50: f64,
+    /// p95 |forecast − executed| passes per retired decode — the cost
+    /// model's accuracy on this point's workload.
+    forecast_abs_err_p95: f64,
+    /// Fraction of timed-region requests rejected by the shed guardrails;
+    /// must be 0 with no `--shed-watermark`/SLO configured (the bench
+    /// never configures either).
+    shed_rate: f64,
     occ_mean: f64,
     occ_peak: i64,
     completions: Vec<String>,
@@ -119,6 +135,13 @@ struct PointSpec<'a> {
     /// Enable the profile-guided elision planner (DESIGN.md §14) for
     /// Phase-2 decodes on this point.
     step_elision: bool,
+    /// Admission order (DESIGN.md §15): aged shortest-predicted-job-first
+    /// when true, plain FIFO when false.
+    predictive: bool,
+    /// Non-zero selects the heavy-tail trace: this many requests from
+    /// `datasets[1]` land behind the first arrival from `datasets[0]`
+    /// (`heavy_tail_trace`); 0 keeps the round-robin `mixed_trace`.
+    heavy_tail: usize,
 }
 
 /// Drive one coordinator configuration through the shared arrival trace.
@@ -142,6 +165,7 @@ where
             batch_wait: Duration::from_millis(2),
             cache: spec.cache,
             step_elision: spec.step_elision,
+            predictive: spec.predictive,
             ..CoordinatorConfig::default()
         },
         model_cfg.clone(),
@@ -165,8 +189,16 @@ where
     let saved0 = c0("prefix_sharing_saved_full_passes");
     let full0 = c0("full_passes");
     let elided0 = c0("steps_elided");
+    let shed0 = c0("requests_shed");
 
-    let trace = mixed_trace(datasets, spec.rate, spec.n, spec.seed);
+    let trace = if spec.heavy_tail > 0 {
+        heavy_tail_trace(
+            &datasets[0], &datasets[1], spec.rate, spec.n, spec.heavy_tail,
+            spec.seed,
+        )
+    } else {
+        mixed_trace(datasets, spec.rate, spec.n, spec.seed)
+    };
     let mut lat = Histogram::latency();
     let mut ttft = Histogram::latency();
     let mut tok = Histogram::latency();
@@ -184,6 +216,7 @@ where
                 task: r.task.clone(),
                 prompt: r.prompt.clone(),
                 policy: spec.policy.into(),
+                slo_ms: None,
             }),
         ));
     }
@@ -211,7 +244,13 @@ where
     let saved_passes = c0("prefix_sharing_saved_full_passes") - saved0;
     let full_passes = c0("full_passes") - full0;
     let steps_elided = c0("steps_elided") - elided0;
+    let shed = c0("requests_shed") - shed0;
     let tokens = (ok * model_cfg.gen_len).max(1);
+    // forecast-quality histograms (DESIGN.md §15); per-coordinator, so the
+    // only samples outside the timed region are this point's own warm-ups
+    let hq = |name: &str, q: f64| {
+        coord.metrics.histogram(name).lock().unwrap().quantile(q)
+    };
     Ok(Point {
         policy: spec.policy.to_string(),
         cache: spec.cache_label,
@@ -236,6 +275,10 @@ where
         prefix_hit_rate: saved_passes as f64 / ok.max(1) as f64,
         steps_executed: full_passes + window_passes,
         steps_elided,
+        admission_p95_ms: hq("admission_wait", 0.95) / 1e3,
+        predicted_steps_p50: hq("predicted_steps", 0.5),
+        forecast_abs_err_p95: hq("forecast_error", 0.95),
+        shed_rate: shed as f64 / spec.n as f64,
         occ_mean: seq_steps as f64 / steps as f64,
         occ_peak: coord
             .metrics
@@ -318,6 +361,10 @@ fn point_rows(points: &[Point]) -> (Vec<Vec<String>>, Vec<Vec<String>>) {
             format!("{}", p.prefix_hit_rate),
             format!("{}", p.steps_executed),
             format!("{}", p.steps_elided),
+            format!("{}", p.admission_p95_ms * 1e3),
+            format!("{}", p.predicted_steps_p50),
+            format!("{}", p.forecast_abs_err_p95),
+            format!("{}", p.shed_rate),
             format!("{}", p.occ_mean),
             format!("{}", p.occ_peak),
         ]);
@@ -329,8 +376,10 @@ fn point_rows(points: &[Point]) -> (Vec<Vec<String>>, Vec<Vec<String>>) {
 /// whenever a row field changes meaning; `scripts/bench_diff.py` refuses to
 /// compare mismatched schemas. v2 added seeded open-loop arrivals plus
 /// p99 / TTFT / per-token percentile fields. `steps_executed` /
-/// `steps_elided` are additive within v2: diffing tools treat their absence
-/// in an older artifact as "not recorded", never as zero.
+/// `steps_elided` — and the predictive-scheduling fields `admission_p95_ms`
+/// / `predicted_steps_p50` / `forecast_abs_err_p95` / `shed_rate`
+/// (DESIGN.md §15) — are additive within v2: diffing tools treat their
+/// absence in an older artifact as "not recorded", never as zero.
 const BENCH_SCHEMA: f64 = 2.0;
 
 fn points_json(points: &[Point], mode: &str, seed: u64) -> Json {
@@ -373,6 +422,16 @@ fn points_json(points: &[Point], mode: &str, seed: u64) -> Json {
                             ("prefix_hit_rate", Json::Num(p.prefix_hit_rate)),
                             ("steps_executed", Json::Num(p.steps_executed as f64)),
                             ("steps_elided", Json::Num(p.steps_elided as f64)),
+                            ("admission_p95_ms", Json::Num(p.admission_p95_ms)),
+                            (
+                                "predicted_steps_p50",
+                                Json::Num(p.predicted_steps_p50),
+                            ),
+                            (
+                                "forecast_abs_err_p95",
+                                Json::Num(p.forecast_abs_err_p95),
+                            ),
+                            ("shed_rate", Json::Num(p.shed_rate)),
                             ("occ_mean", Json::Num(p.occ_mean)),
                             ("occ_peak", Json::Num(p.occ_peak as f64)),
                         ])
@@ -492,6 +551,8 @@ fn main() -> Result<()> {
                     max_batch,
                     seed,
                     step_elision: false,
+                    predictive: true,
+                    heavy_tail: 0,
                 };
                 let p = if smoke {
                     run_point(&spec, &model_cfg, &datasets, None, |_wid| {
@@ -563,6 +624,8 @@ fn main() -> Result<()> {
             max_batch,
             seed,
             step_elision: false,
+            predictive: true,
+            heavy_tail: 0,
         };
         let p = if smoke {
             let proto = sim_shared.clone();
@@ -663,6 +726,8 @@ fn main() -> Result<()> {
             max_batch,
             seed,
             step_elision: elide,
+            predictive: true,
+            heavy_tail: 0,
         };
         let p = run_point(&spec, &elision_cfg, &elision_data, Some(registry), |_wid| {
             Ok(SimModel::plateau_like(7))
@@ -698,6 +763,161 @@ fn main() -> Result<()> {
     }
     points.extend(elision_points);
 
+    // --- FIFO vs predictive admission A/B (DESIGN.md §15): the same
+    // mixed-length heavy-tail burst admitted in arrival order vs by
+    // predicted cost. Two tasks decode under seeded step-block profiles
+    // whose trajectories differ ~4x in depth (short: 18 forecast passes,
+    // long: 78); the trace lands the two long jobs right behind the first
+    // short arrival, so under FIFO the whole short class queues behind
+    // them while predicted-cost admission defers exactly the tail. A
+    // single serial slot (workers=1, max-batch=1) and a burst arrival rate
+    // make the queueing deterministic. Admission order is pure scheduling:
+    // completions and executed passes must be identical across arms; only
+    // the waiting moves.
+    let sched_policy = "osdt:step-block:q1:1:0";
+    let sched_cfg = tiny_config();
+    let short_profile = Profile::step_block(
+        vec![vec![0.5, 0.995, 0.995, 0.995, 0.25]; sched_cfg.num_blocks],
+        Metric::Q1,
+    )
+    .with_accepts(vec![vec![8.0, 1.0, 1.0, 1.0, 9.0]; sched_cfg.num_blocks]);
+    let mut long_taus = vec![0.5];
+    long_taus.extend(std::iter::repeat(0.995).take(23));
+    long_taus.push(0.25);
+    let mut long_accepts = vec![8.0];
+    // accepts 2.0 sit above the default elide floor so the long task's
+    // forecast stays at full depth even if elision is ever turned on here
+    long_accepts.extend(std::iter::repeat(2.0).take(23));
+    long_accepts.push(9.0);
+    let long_profile = Profile::step_block(
+        vec![long_taus; sched_cfg.num_blocks],
+        Metric::Q1,
+    )
+    .with_accepts(vec![long_accepts; sched_cfg.num_blocks]);
+    let tail_data: Vec<Dataset> = [("synth-short", 0), ("synth-long", 1)]
+        .iter()
+        .map(|(task, salt)| Dataset {
+            task: task.to_string(),
+            examples: (0..3)
+                .map(|i| Example {
+                    task: task.to_string(),
+                    prompt: format!("Tail {salt}.{i}: 2+{i}=?"),
+                    answer: format!("{}", i + 2),
+                    code_op: None,
+                })
+                .collect(),
+        })
+        .collect();
+    // tail fraction must stay under 5% of the trace so the overall p95
+    // lands in the short class: 2 long jobs in 48 requests
+    let (ab_n, ab_heavy) = (48, 2);
+    let mut sched_points = Vec::new();
+    for (label, predictive) in [("fifo", false), ("predictive", true)] {
+        // fresh registry per arm, both tasks pre-seeded: no calibration in
+        // the timed region, and every forecast comes from a real trajectory
+        let registry = Arc::new(ProfileRegistry::in_memory());
+        for (task, profile) in
+            [("synth-short", &short_profile), ("synth-long", &long_profile)]
+        {
+            match registry.acquire(&ProfileKey::new(
+                task,
+                DynamicMode::StepBlock,
+                Metric::Q1,
+            )) {
+                Acquired::Lease(lease) => {
+                    lease.fulfill(profile.clone(), vec![0.5; 4])
+                }
+                _ => bail!("seeding the {task} profile must grant the lease"),
+            }
+        }
+        let spec = PointSpec {
+            policy: sched_policy,
+            cache: CacheConfig::block_boundary(),
+            cache_label: label,
+            residency: "sim",
+            // burst: every arrival is due ~immediately, so the backlog the
+            // two arms order differently is the whole trace
+            rate: 1e6,
+            n: ab_n,
+            workers: 1,
+            max_batch: 1,
+            seed,
+            step_elision: false,
+            predictive,
+            heavy_tail: ab_heavy,
+        };
+        let p = run_point(&spec, &sched_cfg, &tail_data, Some(registry), |_wid| {
+            Ok(SimModel::plateau_like(7))
+        })?;
+        eprintln!(
+            "[admission] {label}: admission p95 {:.2}ms, predicted p50 \
+             {:.0} passes, forecast |err| p95 {:.1}, {:.1} tok/s, shed \
+             {:.0}%",
+            p.admission_p95_ms,
+            p.predicted_steps_p50,
+            p.forecast_abs_err_p95,
+            p.tokens_per_sec,
+            p.shed_rate * 100.0
+        );
+        sched_points.push(p);
+    }
+    {
+        let (fifo, pred) = (&sched_points[0], &sched_points[1]);
+        if fifo.completions != pred.completions {
+            bail!("admission order changed completions on the heavy-tail trace");
+        }
+        if pred.steps_executed != fifo.steps_executed {
+            bail!(
+                "admission order changed executed passes: {} predictive vs \
+                 {} fifo",
+                pred.steps_executed,
+                fifo.steps_executed
+            );
+        }
+        if pred.admission_p95_ms > fifo.admission_p95_ms {
+            bail!(
+                "predicted-cost admission did not lower p95 admission wait: \
+                 {:.2}ms predictive vs {:.2}ms fifo",
+                pred.admission_p95_ms,
+                fifo.admission_p95_ms
+            );
+        }
+        // executed passes are asserted identical above, so throughput can
+        // only differ by scheduling overhead plus timer noise on a short
+        // timed region — gate the overhead, not the noise
+        if pred.tokens_per_sec < 0.75 * fifo.tokens_per_sec {
+            bail!(
+                "predictive admission cost throughput: {:.1} tok/s vs {:.1} \
+                 fifo",
+                pred.tokens_per_sec,
+                fifo.tokens_per_sec
+            );
+        }
+        if fifo.shed_rate != 0.0 || pred.shed_rate != 0.0 {
+            bail!("requests were shed with no watermark or SLO configured");
+        }
+        if !pred.forecast_abs_err_p95.is_finite()
+            || !fifo.forecast_abs_err_p95.is_finite()
+        {
+            bail!("forecast error histogram is empty or non-finite");
+        }
+        // the median submitted request is a short one — its forecast must
+        // come from the short trajectory, not the worst-case prior
+        if pred.predicted_steps_p50 >= 78.0 {
+            bail!(
+                "predicted_steps p50 {:.0} sits at the long/worst-case tier \
+                 — forecasts are not reading the calibrated trajectories",
+                pred.predicted_steps_p50
+            );
+        }
+        println!(
+            "predictive admission: token-identical, p95 admission wait \
+             {:.2}ms -> {:.2}ms on the heavy-tail burst",
+            fifo.admission_p95_ms, pred.admission_p95_ms
+        );
+    }
+    points.extend(sched_points);
+
     let checked = check_token_identity(&points)?;
     if checked > 0 {
         println!("token identity: host == device for {checked} cached point(s)");
@@ -724,7 +944,9 @@ fn main() -> Result<()> {
             "tok_p50_us", "tok_p95_us", "tok_p99_us",
             "tokens_per_sec", "bytes_per_token", "cache_upload_bytes",
             "fused_frac", "bytes_per_step", "prefix_hit_rate",
-            "steps_executed", "steps_elided", "occ_mean", "occ_peak",
+            "steps_executed", "steps_elided", "admission_p95_us",
+            "predicted_steps_p50", "forecast_abs_err_p95", "shed_rate",
+            "occ_mean", "occ_peak",
         ],
         &csv,
     )?;

@@ -70,6 +70,18 @@ pub struct ServerConfig {
     /// Predicted per-step acceptance count below which a step is treated
     /// as empty by the elision planner. CLI: `--elide-floor`.
     pub elide_floor: f64,
+    /// Admission order (DESIGN.md §15): predicted-cost priority (aged
+    /// shortest-predicted-job-first) when true, plain FIFO when false.
+    /// CLI: `--admission predictive|fifo`.
+    pub predictive: bool,
+    /// Alignment band for forecast-aware slot promotion, in predicted
+    /// window passes (0 = FIFO promotion). CLI: `--align-band`.
+    pub align_band: usize,
+    /// Predicted-backlog shed watermark, in forward passes (0 = never
+    /// shed). CLI: `--shed-watermark`.
+    pub shed_watermark: usize,
+    /// Default per-request deadline budget, ms (0 = none). CLI: `--slo-ms`.
+    pub slo_ms: f64,
 }
 
 impl Default for ServerConfig {
@@ -86,6 +98,10 @@ impl Default for ServerConfig {
             metrics_addr: None,
             step_elision: false,
             elide_floor: crate::policy::DEFAULT_ELIDE_FLOOR,
+            predictive: true,
+            align_band: 0,
+            shed_watermark: 0,
+            slo_ms: 0.0,
         }
     }
 }

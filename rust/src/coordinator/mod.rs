@@ -2,7 +2,9 @@
 //! worker loops, and OSDT calibration lifecycle management (DESIGN.md §6).
 //!
 //! Shape follows the vLLM-router pattern scaled to this model: a leader
-//! (the [`Coordinator`]) owns a Condvar-backed FIFO [`JobQueue`]; N workers
+//! (the [`Coordinator`]) owns a Condvar-backed [`JobQueue`] consumed in
+//! predicted-cost order (aged shortest-predicted-job-first, DESIGN.md §15;
+//! `CoordinatorConfig::predictive = false` restores plain FIFO); N workers
 //! each own a full PJRT runtime (the `xla` client is not `Sync`) and drive
 //! a [`StepScheduler`]. Requests are admitted into a worker's scheduler at
 //! any step boundary, share forward passes with whatever is already
@@ -41,11 +43,22 @@
 //! transfer accounting deltas every iteration — `bytes_{up,down}loaded`,
 //! `cache_bytes_{up,down}loaded`, `model_{exec,transfer}_us` — the
 //! counters `serving_load` turns into bytes-per-token (DESIGN.md §10).
+//!
+//! Predictive scheduling (DESIGN.md §15): every submitted request is
+//! stamped with a [`StepForecast`] from the task's calibrated acceptance
+//! trajectory (worst-case prior while calibration is pending). The forecast
+//! drives queue ordering, the scheduler's alignment-aware grouping, the
+//! `predicted_backlog` gauge (queued + in-flight predicted passes), and the
+//! `--shed-watermark` / `--slo-ms` guardrails — requests predicted to blow
+//! the budget are rejected **at admission only** with a forecast-derived
+//! `retry_after_ms`; in-flight decodes are never cancelled. Forecast
+//! accuracy is tracked per retirement (`forecast_error`,
+//! `group_alignment_drag` histograms).
 
 pub mod router;
 
 use std::collections::{HashMap, VecDeque};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
@@ -54,7 +67,9 @@ use anyhow::{Context, Result};
 
 use crate::cache::CacheConfig;
 use crate::config::parse_policy_spec;
-use crate::decode::{DecodeResult, Engine, ForwardModel, StepScheduler};
+use crate::decode::{
+    CostModel, DecodeResult, Engine, ForwardModel, StepForecast, StepScheduler,
+};
 use crate::metrics::Registry;
 use crate::model::ModelConfig;
 use crate::policy::{
@@ -79,6 +94,18 @@ const CALIBRATION_DEFER_MAX: Duration = Duration::from_millis(500);
 /// bound against a stuck or lost calibrator.
 const CALIBRATION_STEAL_MAX: Duration = Duration::from_secs(5);
 
+/// Aged-SPJF aging rate: each second a job waits shrinks its effective
+/// predicted cost by this many passes, so a long job's priority overtakes
+/// any fresh short job within (cost / rate) seconds — the starvation bound.
+const AGING_PASSES_PER_SEC: f64 = 50.0;
+
+/// Prior for the observed wall-milliseconds-per-pass EMA before any decode
+/// has retired; keeps `retry_after_ms` finite from the first shed.
+const DEFAULT_PASS_MS: f64 = 2.0;
+
+/// Blend rate for the milliseconds-per-pass EMA (per retired decode).
+const PASS_EMA_ALPHA: f64 = 0.2;
+
 /// A generation request.
 #[derive(Clone, Debug)]
 pub struct Request {
@@ -87,6 +114,11 @@ pub struct Request {
     pub prompt: String,
     /// Policy spec string, e.g. "osdt:block:q1:0.75:0.2".
     pub policy: String,
+    /// Deadline budget, milliseconds (DESIGN.md §15). A request whose
+    /// forecast-predicted completion exceeds its budget is shed at
+    /// admission with an honest `retry_after_ms` instead of decoding past
+    /// its deadline. `None` inherits the server default (`--slo-ms`).
+    pub slo_ms: Option<f64>,
 }
 
 /// A completed generation.
@@ -107,6 +139,9 @@ pub struct Response {
     /// decode runs inline, outside the scheduler), an honest upper bound.
     pub ttft_ms: f64,
     pub error: Option<String>,
+    /// Set only on shed responses: forecast-derived retry hint,
+    /// milliseconds. Always finite and positive (DESIGN.md §15).
+    pub retry_after_ms: Option<f64>,
 }
 
 impl Response {
@@ -122,7 +157,15 @@ impl Response {
             calibrated: false,
             ttft_ms: 0.0,
             error: Some(err.to_string()),
+            retry_after_ms: None,
         }
+    }
+
+    /// An admission-time rejection under the shedding guardrails. Only ever
+    /// built before the request enters the queue — an in-flight decode is
+    /// never cancelled into one of these.
+    pub(crate) fn shed(id: u64, retry_after_ms: f64, reason: impl std::fmt::Display) -> Self {
+        Response { retry_after_ms: Some(retry_after_ms), ..Self::failure(id, reason) }
     }
 }
 
@@ -130,6 +173,10 @@ struct Job {
     req: Request,
     resp: Sender<Response>,
     enqueued: Instant,
+    /// Stamped at submit from the task's profile (or the worst-case
+    /// prior): queue priority, backlog accounting, and the scheduler's
+    /// alignment signal all read this one forecast.
+    forecast: StepForecast,
 }
 
 /// Coordinator options.
@@ -158,6 +205,21 @@ pub struct CoordinatorConfig {
     /// elision (`--elide-floor`). The default classifies exactly the
     /// fallback-only steps.
     pub elide_floor: f64,
+    /// Consume the queue in aged shortest-predicted-job-first order
+    /// (DESIGN.md §15). `false` restores plain FIFO — the bench A/B arm.
+    pub predictive: bool,
+    /// Alignment band for the scheduler's co-scheduling preference
+    /// (`--align-band`): prefer promoting waiting rows whose predicted
+    /// remaining passes are within this distance of the active group's
+    /// soonest-retiring row. 0 disables (plain FIFO promotion).
+    pub align_band: usize,
+    /// Predicted-backlog watermark in forward passes (`--shed-watermark`):
+    /// a request whose forecast would push the backlog past it is shed at
+    /// admission with a forecast-derived `retry_after_ms`. 0 disables.
+    pub shed_watermark: usize,
+    /// Default per-request deadline budget, milliseconds (`--slo-ms`),
+    /// applied when a request carries no `slo_ms` of its own. 0 disables.
+    pub slo_ms: f64,
 }
 
 impl Default for CoordinatorConfig {
@@ -170,6 +232,10 @@ impl Default for CoordinatorConfig {
             steal_after: CALIBRATION_STEAL_MAX,
             step_elision: false,
             elide_floor: crate::policy::DEFAULT_ELIDE_FLOOR,
+            predictive: true,
+            align_band: 0,
+            shed_watermark: 0,
+            slo_ms: 0.0,
         }
     }
 }
@@ -183,12 +249,47 @@ struct QueueInner {
     closed: bool,
 }
 
-/// Multi-consumer FIFO job queue (Mutex + Condvar). Closing wakes every
+impl QueueInner {
+    /// Take the next job. FIFO, or — predictive — the minimum *effective*
+    /// cost (forecast passes minus the [`AGING_PASSES_PER_SEC`] wait-time
+    /// credit, so long jobs age to the front instead of starving). The
+    /// scan is strictly-less so equal priorities keep FIFO order
+    /// (`Iterator::min_by` would keep the *last* minimum).
+    fn take(&mut self, predictive: bool) -> Option<Job> {
+        if !predictive || self.jobs.len() <= 1 {
+            return self.jobs.pop_front();
+        }
+        let now = Instant::now();
+        let mut best = 0usize;
+        let mut best_score = f64::INFINITY;
+        for (i, job) in self.jobs.iter().enumerate() {
+            let age = now.saturating_duration_since(job.enqueued).as_secs_f64();
+            let score = job.forecast.total_passes as f64 - age * AGING_PASSES_PER_SEC;
+            if score < best_score {
+                best = i;
+                best_score = score;
+            }
+        }
+        self.jobs.remove(best)
+    }
+}
+
+/// Multi-consumer job queue (Mutex + Condvar) with predicted-cost priority
+/// consumption and forecast-backlog accounting. Closing wakes every
 /// waiter; queued jobs are still drained after close so shutdown is
 /// graceful.
 struct JobQueue {
     inner: Mutex<QueueInner>,
     cv: Condvar,
+    /// Aged-SPJF consumption when set; plain FIFO otherwise.
+    predictive: bool,
+    /// Predicted passes of jobs admitted into a scheduler and not yet
+    /// retired — the in-flight half of the `predicted_backlog` gauge.
+    active_forecast: AtomicI64,
+    /// EMA of observed wall-milliseconds per forward pass (f64 bits),
+    /// seeded with [`DEFAULT_PASS_MS`] so `retry_after_ms` is finite from
+    /// the first shed.
+    pass_ms_bits: AtomicU64,
 }
 
 enum Popped {
@@ -198,10 +299,13 @@ enum Popped {
 }
 
 impl JobQueue {
-    fn new() -> Self {
+    fn new(predictive: bool) -> Self {
         JobQueue {
             inner: Mutex::new(QueueInner { jobs: VecDeque::new(), closed: false }),
             cv: Condvar::new(),
+            predictive,
+            active_forecast: AtomicI64::new(0),
+            pass_ms_bits: AtomicU64::new(DEFAULT_PASS_MS.to_bits()),
         }
     }
 
@@ -228,7 +332,7 @@ impl JobQueue {
     /// drained.
     fn try_pop(&self) -> Popped {
         let mut g = self.inner.lock().unwrap();
-        match g.jobs.pop_front() {
+        match g.take(self.predictive) {
             Some(j) => Popped::Job(Box::new(j)),
             None if g.closed => Popped::Closed,
             None => Popped::Empty,
@@ -240,7 +344,7 @@ impl JobQueue {
         let deadline = Instant::now() + timeout;
         let mut g = self.inner.lock().unwrap();
         loop {
-            if let Some(j) = g.jobs.pop_front() {
+            if let Some(j) = g.take(self.predictive) {
                 return Popped::Job(Box::new(j));
             }
             if g.closed {
@@ -255,8 +359,44 @@ impl JobQueue {
         }
     }
 
-    fn depth(&self) -> usize {
-        self.inner.lock().unwrap().jobs.len()
+    /// Queue depth and predicted backlog (queued + in-flight forecast
+    /// passes) in one snapshot, for [`publish_queue_gauges`].
+    fn load_stats(&self) -> (usize, i64) {
+        let (depth, queued) = {
+            let g = self.inner.lock().unwrap();
+            let queued: i64 =
+                g.jobs.iter().map(|j| j.forecast.total_passes as i64).sum();
+            (g.jobs.len(), queued)
+        };
+        let backlog = queued + self.active_forecast.load(Ordering::Relaxed);
+        (depth, backlog.max(0))
+    }
+
+    fn predicted_backlog(&self) -> i64 {
+        self.load_stats().1
+    }
+
+    /// Fold a job's predicted passes into (positive, at scheduler
+    /// admission) or out of (negative, at retirement/failure) the
+    /// in-flight backlog.
+    fn note_active(&self, delta: i64) {
+        self.active_forecast.fetch_add(delta, Ordering::Relaxed);
+    }
+
+    fn pass_ms(&self) -> f64 {
+        f64::from_bits(self.pass_ms_bits.load(Ordering::Relaxed))
+    }
+
+    /// Fold one retired decode's observed milliseconds-per-pass into the
+    /// EMA behind `retry_after_ms`. Load-blend-store is racy across
+    /// workers, but the EMA is a coarse hint and any interleaving still
+    /// converges on the same scale.
+    fn note_pass_ms(&self, ms: f64) {
+        if !ms.is_finite() || ms <= 0.0 {
+            return;
+        }
+        let blended = self.pass_ms() * (1.0 - PASS_EMA_ALPHA) + ms * PASS_EMA_ALPHA;
+        self.pass_ms_bits.store(blended.to_bits(), Ordering::Relaxed);
     }
 }
 
@@ -272,6 +412,15 @@ pub struct Coordinator {
     /// fleet-wide single-flight calibration.
     pub registry: Arc<ProfileRegistry>,
     next_id: AtomicU64,
+    /// Layout geometry for the admission-time cost model.
+    model_cfg: ModelConfig,
+    /// Forecasting rule (mirrors the worker's elision setting so forecasts
+    /// walk the same predicted-empty jumps the planner will).
+    cost_model: CostModel,
+    /// `--shed-watermark` in forecast passes; 0 disables shedding.
+    shed_watermark: usize,
+    /// `--slo-ms` default deadline budget; 0 disables.
+    slo_ms: f64,
 }
 
 impl Coordinator {
@@ -303,7 +452,7 @@ impl Coordinator {
         M: ForwardModel + 'static,
         F: Fn(usize) -> Result<M> + Send + Sync + Clone + 'static,
     {
-        let queue = Arc::new(JobQueue::new());
+        let queue = Arc::new(JobQueue::new(cfg.predictive));
         let metrics = Arc::new(Registry::new());
         let tok = Tokenizer::from_config(&model_cfg)?;
 
@@ -335,32 +484,101 @@ impl Coordinator {
                     .context("spawning worker")?,
             );
         }
+        let elision = cfg.step_elision.then_some(cfg.elide_floor);
         Ok(Coordinator {
             queue,
             handles,
             metrics,
             registry,
             next_id: AtomicU64::new(1),
+            model_cfg,
+            cost_model: CostModel::new(elision),
+            shed_watermark: cfg.shed_watermark,
+            slo_ms: cfg.slo_ms,
         })
     }
 
     /// Submit a request; returns the channel its response will arrive on.
+    ///
+    /// The request is forecast here (DESIGN.md §15): the predicted pass
+    /// count drives queue ordering, the `predicted_backlog` gauge, and —
+    /// when `--shed-watermark` / `--slo-ms` are set — the shedding
+    /// decision. Shedding only ever happens at this point, before any work
+    /// starts; an in-flight decode is never cancelled.
     pub fn submit(&self, mut req: Request) -> Receiver<Response> {
         if req.id == 0 {
             req.id = self.next_id.fetch_add(1, Ordering::Relaxed);
         }
+        if req.slo_ms.is_none() && self.slo_ms > 0.0 {
+            req.slo_ms = Some(self.slo_ms);
+        }
         let (rtx, rrx) = channel();
         self.metrics.add("requests_submitted", 1);
+        let forecast = self.forecast(&req);
+        self.metrics
+            .observe("predicted_steps", forecast.total_passes as f64);
+        if let Some((retry_after_ms, reason)) = self.shed_check(&req, &forecast) {
+            self.metrics.add("requests_shed", 1);
+            let _ = rtx.send(Response::shed(req.id, retry_after_ms, reason));
+            return rrx;
+        }
         if self
             .queue
-            .push(Job { req, resp: rtx, enqueued: Instant::now() })
+            .push(Job { req, resp: rtx, enqueued: Instant::now(), forecast })
         {
-            self.metrics
-                .set_gauge("queue_depth", self.queue.depth() as i64);
+            publish_queue_gauges(&self.metrics, &self.queue);
         }
         // if the queue is closed the sender was dropped and the receiver
         // observes a closed channel
         rrx
+    }
+
+    /// Stamp a forecast for `req`: the task's calibrated profile when its
+    /// policy is OSDT and the profile is registered, otherwise the
+    /// layout-derived worst-case prior (calibration pending, or a policy
+    /// with no signature to forecast from).
+    fn forecast(&self, req: &Request) -> StepForecast {
+        let profile = match parse_policy_spec(&req.policy) {
+            Ok(PolicySpec::Osdt { mode, metric, .. }) => self
+                .registry
+                .get(&ProfileKey::new(req.task.clone(), mode, metric))
+                .map(|e| e.profile),
+            _ => None,
+        };
+        self.cost_model.forecast(profile.as_ref(), &self.model_cfg)
+    }
+
+    /// Admission-time shedding decision: `Some((retry_after_ms, reason))`
+    /// when the request should be rejected. The retry hint scales the
+    /// predicted overload by the observed milliseconds-per-pass EMA, so it
+    /// is always finite and tracks real decode speed.
+    fn shed_check(&self, req: &Request, forecast: &StepForecast) -> Option<(f64, String)> {
+        let backlog = self.queue.predicted_backlog().max(0) as usize;
+        let cost = forecast.total_passes;
+        let pass_ms = self.queue.pass_ms();
+        if self.shed_watermark > 0 && backlog + cost > self.shed_watermark {
+            let over = (backlog + cost - self.shed_watermark) as f64;
+            return Some((
+                (over * pass_ms).max(1.0),
+                format!(
+                    "shed: predicted backlog {backlog}+{cost} passes over \
+                     watermark {}",
+                    self.shed_watermark
+                ),
+            ));
+        }
+        let slo = req.slo_ms.filter(|&s| s > 0.0)?;
+        let predicted_ms = (backlog + cost) as f64 * pass_ms;
+        if predicted_ms > slo {
+            return Some((
+                (predicted_ms - slo).max(1.0),
+                format!(
+                    "shed: predicted completion {predicted_ms:.0}ms exceeds \
+                     slo {slo:.0}ms"
+                ),
+            ));
+        }
+        None
     }
 
     /// Convenience: submit and block for the response.
@@ -370,6 +588,7 @@ impl Coordinator {
             task: task.into(),
             prompt: prompt.into(),
             policy: policy.into(),
+            slo_ms: None,
         });
         rx.recv().context("coordinator dropped the request")
     }
@@ -588,7 +807,8 @@ fn admit_job<M: ForwardModel>(
                 Ok(layout) => {
                     let id = *next_seq;
                     *next_seq += 1;
-                    match sched.admit(id, layout, policy) {
+                    let forecast = job.forecast.clone();
+                    match sched.admit_with_forecast(id, layout, policy, Some(forecast)) {
                         Ok(()) => {
                             inflight.insert(
                                 id,
@@ -629,6 +849,7 @@ fn worker_loop<M: ForwardModel>(
 ) {
     let engine = Engine::with_cache(model, cfg.cache);
     let mut sched = engine.scheduler::<Box<dyn Policy>>(cfg.max_batch);
+    sched.set_align_band(cfg.align_band);
     if registry.config().ema_alpha > 0.0 {
         // registry-level EMA refinement (the fleet analog of
         // AdaptiveOsdt::observe) recalibrates from every decode's trace —
@@ -653,37 +874,59 @@ fn worker_loop<M: ForwardModel>(
         cfg.cache
     );
     macro_rules! admit {
-        ($job:expr, $since:expr, $steal:expr) => {
-            if let Admitted::Parked(job) = admit_job(
-                $job, $steal, &mut sched, &mut inflight, &mut next_seq, &engine,
+        ($job:expr, $since:expr, $steal:expr) => {{
+            let job = $job;
+            let cost = job.forecast.total_passes as i64;
+            match admit_job(
+                job, $steal, &mut sched, &mut inflight, &mut next_seq, &engine,
                 tok, model_cfg, metrics, registry, elision,
             ) {
-                // lost the race to a peer's lease between classify and
-                // acquire — park behind it (keeping the original park time)
-                metrics.add("calibrations_awaited", 1);
-                let key = osdt_key(&job);
-                deferred.push_back(Parked { job, since: $since, key });
+                // the in-flight half of the predicted-backlog gauge
+                Admitted::Scheduled => queue.note_active(cost),
+                Admitted::Responded => {}
+                Admitted::Parked(job) => {
+                    // lost the race to a peer's lease between classify and
+                    // acquire — park behind it (keeping the original park
+                    // time)
+                    metrics.add("calibrations_awaited", 1);
+                    let key = osdt_key(&job);
+                    deferred.push_back(Parked { job, since: $since, key });
+                }
             }
-        };
+        }};
     }
+    let mut lease_gen = registry.lease_release_generation();
     loop {
         // ---- parked jobs: run any that has become runnable ------------------
-        for _ in 0..deferred.len() {
-            let p = deferred.pop_front().expect("len checked");
-            let steal = p.since.elapsed() >= cfg.steal_after;
-            match classify(p.key.as_ref(), registry) {
-                AdmitClass::Plain => admit!(p.job, p.since, false),
-                // local calibration: run once the worker drains, or after
-                // CALIBRATION_DEFER_MAX anyway rather than waiting forever
-                AdmitClass::Calibrate
-                    if sched.is_idle()
-                        || p.since.elapsed() > CALIBRATION_DEFER_MAX =>
-                {
-                    admit!(p.job, p.since, false)
+        // A parked job's class only changes when a lease resolves (the
+        // registry's release generation bumps), a park deadline passes, or
+        // the scheduler drains — busy iterations where none of that
+        // happened skip the linear re-classification entirely.
+        let gen = registry.lease_release_generation();
+        let park_deadline = CALIBRATION_DEFER_MAX.min(cfg.steal_after);
+        let rescan_due = !deferred.is_empty()
+            && (gen != lease_gen
+                || sched.is_idle()
+                || deferred.iter().any(|p| p.since.elapsed() >= park_deadline));
+        if rescan_due {
+            lease_gen = gen;
+            for _ in 0..deferred.len() {
+                let p = deferred.pop_front().expect("len checked");
+                let steal = p.since.elapsed() >= cfg.steal_after;
+                match classify(p.key.as_ref(), registry) {
+                    AdmitClass::Plain => admit!(p.job, p.since, false),
+                    // local calibration: run once the worker drains, or after
+                    // CALIBRATION_DEFER_MAX anyway rather than waiting forever
+                    AdmitClass::Calibrate
+                        if sched.is_idle()
+                            || p.since.elapsed() > CALIBRATION_DEFER_MAX =>
+                    {
+                        admit!(p.job, p.since, false)
+                    }
+                    // a peer's lease outstanding past patience: steal it
+                    AdmitClass::WaitRemote if steal => admit!(p.job, p.since, true),
+                    _ => deferred.push_back(p),
                 }
-                // a peer's lease outstanding past patience: steal it
-                AdmitClass::WaitRemote if steal => admit!(p.job, p.since, true),
-                _ => deferred.push_back(p),
             }
         }
 
@@ -748,7 +991,7 @@ fn worker_loop<M: ForwardModel>(
                 }
             }
         }
-        metrics.set_gauge("queue_depth", queue.depth() as i64);
+        publish_queue_gauges(metrics, queue);
         if sched.is_idle() {
             // calibration decodes run inline at admission — fold their
             // transfer accounting in even though no step will run
@@ -802,6 +1045,12 @@ fn worker_loop<M: ForwardModel>(
                     for &(live, _bucket) in &report.window_groups {
                         metrics.observe("window_bucket_occupancy", live as f64);
                     }
+                    // predicted-remaining spread of each co-scheduled group
+                    // (DESIGN.md §15): high drag means stragglers padded
+                    // through passes their groupmates didn't need
+                    for &drag in &report.alignment_drag {
+                        metrics.observe("group_alignment_drag", drag as f64);
+                    }
                     for &(id, n) in &report.accepted {
                         metrics.observe("accepted_per_step", n as f64);
                         if n == 0 {
@@ -822,6 +1071,19 @@ fn worker_loop<M: ForwardModel>(
                         log::warn!("worker {wid}: retired unknown sequence {id}");
                         continue;
                     };
+                    // settle the forecast: release its backlog share, score
+                    // its accuracy, and refine the ms-per-pass EMA behind
+                    // retry_after_ms
+                    let predicted = inf.job.forecast.total_passes;
+                    queue.note_active(-(predicted as i64));
+                    let actual = (res.full_passes + res.window_passes) as f64;
+                    metrics.observe(
+                        "forecast_error",
+                        (predicted as f64 - actual).abs(),
+                    );
+                    queue.note_pass_ms(
+                        inf.admitted.elapsed().as_secs_f64() * 1e3 / actual.max(1.0),
+                    );
                     // fold the decode back into the registry: drift
                     // detection + optional EMA refinement
                     if let Some((key, epoch)) = &inf.osdt_key {
@@ -847,8 +1109,10 @@ fn worker_loop<M: ForwardModel>(
                 }
                 if sched.is_idle() {
                     // don't leave a phantom occupancy on the gauge once the
-                    // worker drains (peak + histogram keep the history)
+                    // worker drains (peak + histogram keep the history), and
+                    // settle the backlog gauge the retirements just reduced
                     metrics.set_gauge("batch_occupancy", 0);
+                    publish_queue_gauges(metrics, queue);
                 }
             }
             Err(e) => {
@@ -858,12 +1122,14 @@ fn worker_loop<M: ForwardModel>(
                 log::error!("worker {wid}: scheduler step failed: {msg}");
                 metrics.add("scheduler_step_failures", 1);
                 for (_, inf) in inflight.drain() {
+                    queue.note_active(-(inf.job.forecast.total_passes as i64));
                     metrics.add("requests_failed", 1);
                     let _ = inf.job.resp.send(Response::failure(inf.job.req.id, &msg));
                 }
                 let fusion = sched.fusion();
                 sched = engine.scheduler::<Box<dyn Policy>>(max_active);
                 sched.set_fusion(fusion);
+                sched.set_align_band(cfg.align_band);
                 metrics.set_gauge("batch_occupancy", 0);
             }
         }
@@ -897,6 +1163,15 @@ fn publish_model_stats<M: ForwardModel>(
         d(now.cache_download_bytes, last.cache_download_bytes),
     );
     *last = now;
+}
+
+/// The one place both queue gauges are published (submit + worker loop):
+/// `queue_depth` and its §15 companion `predicted_backlog` move together
+/// by construction instead of drifting apart from independent call sites.
+fn publish_queue_gauges(metrics: &Registry, queue: &JobQueue) {
+    let (depth, backlog) = queue.load_stats();
+    metrics.set_gauge("queue_depth", depth as i64);
+    metrics.set_gauge("predicted_backlog", backlog);
 }
 
 /// Park a job that cannot be admitted right now, counting why.
@@ -938,6 +1213,7 @@ fn make_response(
         // whole latency stands in for TTFT (an honest upper bound)
         ttft_ms: ttft_ms.unwrap_or(latency * 1e3),
         error: None,
+        retry_after_ms: None,
     }
 }
 
@@ -1007,6 +1283,7 @@ mod tests {
                     task: "synth-math".into(),
                     prompt: "Q: 2+2=?".into(),
                     policy: spec.into(),
+                    slo_ms: None,
                 })
             })
             .collect();
@@ -1106,6 +1383,7 @@ mod tests {
                 task: "synth-math".into(),
                 prompt: format!("Q: {i}+1=?"),
                 policy: "static:0.85".into(),
+                slo_ms: None,
             }));
         }
         for rx in rxs {
@@ -1147,6 +1425,7 @@ mod tests {
                 task: "synth-math".into(),
                 prompt: format!("Q: {i}+2=?"),
                 policy: "static:0.9".into(),
+                slo_ms: None,
             }));
         }
         for rx in rxs {
@@ -1192,6 +1471,7 @@ mod tests {
                     task: "synth-math".into(),
                     prompt: p.clone(),
                     policy: "static:0.9".into(),
+                    slo_ms: None,
                 })
             })
             .collect();
@@ -1220,6 +1500,164 @@ mod tests {
         c.shutdown();
     }
 
+    /// A queued job with a hand-set forecast cost, for queue-level tests.
+    fn queued_job(id: u64, cost: usize, enqueued: Instant) -> Job {
+        let (tx, _rx) = channel();
+        let mut forecast = CostModel::worst_case(&tiny_config());
+        forecast.total_passes = cost;
+        Job {
+            req: Request {
+                id,
+                task: "synth-math".into(),
+                prompt: "Q: 1+1=?".into(),
+                policy: "static:0.9".into(),
+                slo_ms: None,
+            },
+            resp: tx,
+            enqueued,
+            forecast,
+        }
+    }
+
+    fn pop_id(q: &JobQueue) -> u64 {
+        match q.try_pop() {
+            Popped::Job(j) => j.req.id,
+            _ => panic!("queue drained early"),
+        }
+    }
+
+    #[test]
+    fn predictive_pop_prefers_short_jobs_with_fifo_tiebreak() {
+        let q = JobQueue::new(true);
+        let now = Instant::now();
+        for (id, cost) in [(0, 30), (1, 5), (2, 5), (3, 80)] {
+            assert!(q.push(queued_job(id, cost, now)));
+        }
+        // cheapest first; the two cost-5 jobs keep their arrival order
+        // (a strictly-less scan, not min_by, which keeps the last minimum)
+        let order: Vec<u64> = (0..4).map(|_| pop_id(&q)).collect();
+        assert_eq!(order, vec![1, 2, 0, 3]);
+    }
+
+    #[test]
+    fn fifo_queue_preserves_arrival_order() {
+        let q = JobQueue::new(false);
+        let now = Instant::now();
+        for (id, cost) in [(0, 30), (1, 5), (2, 80)] {
+            assert!(q.push(queued_job(id, cost, now)));
+        }
+        let order: Vec<u64> = (0..3).map(|_| pop_id(&q)).collect();
+        assert_eq!(order, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn aged_spjf_bounds_starvation() {
+        // the starvation bound: a job of cost C is guaranteed the front
+        // slot once C - age·AGING_PASSES_PER_SEC drops below any fresh
+        // job's cost, i.e. within C / AGING_PASSES_PER_SEC seconds of
+        // waiting. Pre-age a long job past that bound and verify no swarm
+        // of fresh short jobs outranks it.
+        let q = JobQueue::new(true);
+        let aged = Instant::now()
+            .checked_sub(Duration::from_secs_f64(100.0 / AGING_PASSES_PER_SEC))
+            .expect("monotonic clock shorter than the aging bound");
+        assert!(q.push(queued_job(7, 100, aged)));
+        for id in 0..8 {
+            assert!(q.push(queued_job(id, 1, Instant::now())));
+        }
+        assert_eq!(pop_id(&q), 7, "aged long job must schedule first");
+    }
+
+    #[test]
+    fn shedding_rejects_with_finite_retry_and_never_cancels_inflight() {
+        // watermark fits exactly one worst-case tiny_config request
+        // (3 blocks × 32 passes + 3 refreshes = 99 predicted passes): the
+        // first submit is admitted, the burst behind it sheds at admission
+        let c = start_sim(CoordinatorConfig {
+            workers: 1,
+            shed_watermark: 120,
+            ..CoordinatorConfig::default()
+        });
+        let rxs: Vec<_> = (0..4)
+            .map(|i| {
+                c.submit(Request {
+                    id: 0,
+                    task: "synth-math".into(),
+                    prompt: format!("Q: {i}+1=?"),
+                    policy: "static:0.9".into(),
+                    slo_ms: None,
+                })
+            })
+            .collect();
+        let mut shed = 0u64;
+        let mut completed = 0u64;
+        for rx in rxs {
+            let r = rx.recv().unwrap();
+            match r.retry_after_ms {
+                Some(retry) => {
+                    assert!(retry.is_finite() && retry > 0.0, "retry {retry}");
+                    assert!(
+                        r.error.as_deref().unwrap_or("").contains("shed"),
+                        "{:?}",
+                        r.error
+                    );
+                    shed += 1;
+                }
+                None => {
+                    // admitted requests are never cancelled: they complete
+                    assert!(r.error.is_none(), "{:?}", r.error);
+                    assert!(r.steps > 0);
+                    completed += 1;
+                }
+            }
+        }
+        assert!(completed >= 1, "first admitted request must complete");
+        assert!(shed >= 1, "backlog over the watermark must shed");
+        assert_eq!(c.metrics.counter_value("requests_shed"), shed);
+        assert_eq!(c.metrics.counter_value("requests_completed"), completed);
+        c.shutdown();
+    }
+
+    #[test]
+    fn slo_budget_sheds_unmeetable_requests() {
+        let c = start_sim(CoordinatorConfig {
+            slo_ms: 0.5, // far below 99 predicted passes at the ms prior
+            ..CoordinatorConfig::default()
+        });
+        let r = c.generate("synth-math", "Q: 1+2=?", "static:0.9").unwrap();
+        assert!(r.error.as_deref().unwrap_or("").contains("slo"), "{:?}", r.error);
+        let retry = r.retry_after_ms.expect("slo shed must carry a retry hint");
+        assert!(retry.is_finite() && retry > 0.0);
+        // an explicit generous per-request budget overrides the default
+        let rx = c.submit(Request {
+            id: 0,
+            task: "synth-math".into(),
+            prompt: "Q: 3+4=?".into(),
+            policy: "static:0.9".into(),
+            slo_ms: Some(60_000.0),
+        });
+        let ok = rx.recv().unwrap();
+        assert!(ok.error.is_none(), "{:?}", ok.error);
+        assert_eq!(c.metrics.counter_value("requests_shed"), 1);
+        c.shutdown();
+    }
+
+    #[test]
+    fn predicted_backlog_settles_to_zero() {
+        let c = start_sim(CoordinatorConfig::default());
+        let r = c.generate("synth-math", "Q: 1+2=?", "static:0.9").unwrap();
+        assert!(r.error.is_none(), "{:?}", r.error);
+        let deadline = Instant::now() + Duration::from_secs(2);
+        loop {
+            if c.metrics.gauge("predicted_backlog").load(Ordering::Relaxed) == 0 {
+                break;
+            }
+            assert!(Instant::now() < deadline, "predicted_backlog never drained");
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        c.shutdown();
+    }
+
     #[test]
     fn shutdown_serves_already_queued_jobs() {
         let c = start_sim(CoordinatorConfig::default());
@@ -1230,6 +1668,7 @@ mod tests {
                     task: "synth-math".into(),
                     prompt: format!("Q: {i}+4=?"),
                     policy: "static:0.9".into(),
+                    slo_ms: None,
                 })
             })
             .collect();

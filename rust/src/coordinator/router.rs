@@ -159,6 +159,7 @@ impl Router {
             task: task.into(),
             prompt: prompt.into(),
             policy: policy.into(),
+            slo_ms: None,
         })
         .recv()
     }
@@ -220,6 +221,7 @@ mod tests {
             task: task.into(),
             prompt: format!("Q: {i}+1=?"),
             policy: "static:0.9".into(),
+            slo_ms: None,
         }
     }
 
@@ -282,6 +284,7 @@ mod tests {
                     task: "synth-math".into(),
                     prompt: "Q: 2+2=?".into(),
                     policy: "osdt:block:q1:0.75:0.2".into(),
+                    slo_ms: None,
                 })
             })
             .collect();

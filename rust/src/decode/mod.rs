@@ -19,9 +19,11 @@
 //!   all run the same scheduler loop, so batching × KV cache × any policy
 //!   compose.
 
+pub mod predict;
 pub mod scheduler;
 pub mod task;
 
+pub use predict::{CostModel, StepForecast};
 pub use scheduler::{PolicyRef, StepReport, StepScheduler};
 pub use task::{DecodeTask, PassKind};
 

@@ -1,0 +1,224 @@
+//! Cost forecasts from calibrated acceptance trajectories (DESIGN.md §15).
+//!
+//! A schema-3 [`Profile`] carries the calibration decode's per-(block, step)
+//! acceptance trajectory — which determines, before a request ever runs, how
+//! many window passes its decode is expected to need: the trajectory depth of
+//! each block, shortened by the §14 elision jumps (elided runs execute no
+//! pass, and a run that covers the rest of a block retires it early after one
+//! landing pass). [`CostModel::forecast`] turns that into a [`StepForecast`]
+//! the coordinator uses for shortest-predicted-job-first admission, the
+//! scheduler for alignment-aware grouping, and the shedding watermark for an
+//! honest `retry_after_ms`.
+//!
+//! Forecasts are **advisory only**: nothing in the decode path consults them,
+//! so a wrong forecast can reorder or delay work but can never change a
+//! single emitted token (pinned by the token-identity property tests in
+//! `tests/predictive_scheduling.rs`).
+//!
+//! Calibration-pending fallback: with no profile (or a block with no
+//! recorded trajectory) the prior is the layout-derived worst case — one
+//! window pass per position in the block, the liveness bound (every pass
+//! commits ≥ 1 position).
+
+use crate::model::ModelConfig;
+use crate::policy::Profile;
+
+/// Predicted cost of one request, in units of forward passes.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StepForecast {
+    /// Predicted window passes still to run, per gen block.
+    pub per_block: Vec<usize>,
+    /// Sum of [`StepForecast::per_block`].
+    pub remaining_window_passes: usize,
+    /// Window passes plus one block-boundary refresh per block — the
+    /// model-call count the backlog gauge and `retry_after_ms` scale by.
+    pub total_passes: usize,
+    /// False when the prior fell back to the layout-derived worst case
+    /// (no profile, or a profile without an acceptance trajectory).
+    pub calibrated: bool,
+}
+
+impl StepForecast {
+    /// Predicted passes remaining once a decode has reached `block` /
+    /// `step` (schedule index): full blocks still ahead plus what is left
+    /// of the active block. Monotonically non-increasing as (block, step)
+    /// advances — the scheduler's alignment signal.
+    pub fn remaining_from(&self, block: usize, step: usize) -> usize {
+        let ahead: usize = self.per_block.iter().skip(block + 1).sum();
+        let current = self.per_block.get(block).copied().unwrap_or(0);
+        ahead + current.saturating_sub(step)
+    }
+}
+
+/// Forecasting rule: trajectory depth per block with elision jumps applied.
+/// Holds the same floor the live planner runs with, so the forecast and the
+/// execution walk the same predicted-empty runs.
+#[derive(Clone, Copy, Debug)]
+pub struct CostModel {
+    /// `Some(floor)` mirrors `--step-elision on --elide-floor F`; `None`
+    /// forecasts the naive (un-elided) schedule.
+    elide_floor: Option<f64>,
+}
+
+impl CostModel {
+    pub fn new(elide_floor: Option<f64>) -> Self {
+        CostModel { elide_floor }
+    }
+
+    /// Layout-derived worst case: `block_len` window passes per block
+    /// (liveness commits ≥ 1 position per pass), marked uncalibrated.
+    pub fn worst_case(cfg: &ModelConfig) -> StepForecast {
+        let per_block = vec![cfg.block_len; cfg.num_blocks];
+        Self::from_per_block(per_block, cfg, false)
+    }
+
+    /// Forecast a fresh request. `None` (or a profile without an
+    /// acceptance trajectory) falls back to [`CostModel::worst_case`].
+    pub fn forecast(&self, profile: Option<&Profile>, cfg: &ModelConfig) -> StepForecast {
+        let Some(profile) = profile else {
+            return Self::worst_case(cfg);
+        };
+        let any_data = (0..cfg.num_blocks).any(|b| profile.trajectory_steps(b) > 0);
+        if !any_data {
+            return Self::worst_case(cfg);
+        }
+        let per_block = (0..cfg.num_blocks)
+            .map(|b| self.block_passes_from(profile, cfg, b, 0))
+            .collect();
+        Self::from_per_block(per_block, cfg, true)
+    }
+
+    /// Predicted window passes of block `b` from schedule step `start` on.
+    /// Walks the trajectory exactly as the §14 planner would: a
+    /// predicted-empty run is jumped (no pass); a run that reaches the end
+    /// of the trajectory retires the block after one landing pass; every
+    /// other step costs one pass. Blocks without trajectory data cost the
+    /// worst case. The walk only ever skips steps, so the elision-aware
+    /// count is ≤ the naive trajectory depth.
+    fn block_passes_from(
+        &self,
+        profile: &Profile,
+        cfg: &ModelConfig,
+        block: usize,
+        start: usize,
+    ) -> usize {
+        let depth = profile.trajectory_steps(block);
+        if depth == 0 {
+            return cfg.block_len.saturating_sub(start);
+        }
+        if start >= depth {
+            return 0;
+        }
+        let Some(floor) = self.elide_floor else {
+            return depth - start;
+        };
+        let mut s = start;
+        let mut passes = 0usize;
+        while s < depth {
+            let run = profile.predict_empty_run(block, s, floor);
+            if run > 0 {
+                s += run;
+                if s >= depth {
+                    // rest of block predicted empty: one argmax landing
+                    // pass retires it early (DESIGN.md §14)
+                    passes += 1;
+                    break;
+                }
+            } else {
+                passes += 1;
+                s += 1;
+            }
+        }
+        passes
+    }
+
+    fn from_per_block(
+        per_block: Vec<usize>,
+        cfg: &ModelConfig,
+        calibrated: bool,
+    ) -> StepForecast {
+        let remaining: usize = per_block.iter().sum();
+        StepForecast {
+            remaining_window_passes: remaining,
+            // one fwd_full_kv refresh per block that has work to do
+            total_passes: remaining + cfg.num_blocks,
+            per_block,
+            calibrated,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::fixtures::tiny_config;
+    use crate::policy::Metric;
+
+    fn profile_with(accepts: Vec<Vec<f64>>) -> Profile {
+        let taus = accepts.iter().map(|row| vec![0.9; row.len()]).collect();
+        Profile::step_block(taus, Metric::Mean).with_accepts(accepts)
+    }
+
+    #[test]
+    fn worst_case_prior_is_layout_derived() {
+        let cfg = tiny_config();
+        let f = CostModel::new(None).forecast(None, &cfg);
+        assert!(!f.calibrated);
+        assert_eq!(f.per_block, vec![cfg.block_len; cfg.num_blocks]);
+        assert_eq!(f.remaining_window_passes, cfg.block_len * cfg.num_blocks);
+        assert_eq!(f.total_passes, f.remaining_window_passes + cfg.num_blocks);
+    }
+
+    #[test]
+    fn naive_forecast_is_trajectory_depth() {
+        let cfg = tiny_config();
+        let p = profile_with(vec![vec![2.0, 1.0, 3.0]; cfg.num_blocks]);
+        let f = CostModel::new(None).forecast(Some(&p), &cfg);
+        assert!(f.calibrated);
+        assert_eq!(f.per_block, vec![3; cfg.num_blocks]);
+    }
+
+    #[test]
+    fn elision_jumps_shorten_forecast() {
+        let cfg = tiny_config();
+        // steps 1-2 predicted empty (< floor 1.5), step 3 productive
+        let p = profile_with(vec![vec![2.0, 0.0, 1.0, 3.0]; cfg.num_blocks]);
+        let naive = CostModel::new(None).forecast(Some(&p), &cfg);
+        let elided = CostModel::new(Some(1.5)).forecast(Some(&p), &cfg);
+        assert_eq!(naive.per_block, vec![4; cfg.num_blocks]);
+        // pass at step 0, jump over 1-2, pass at step 3
+        assert_eq!(elided.per_block, vec![2; cfg.num_blocks]);
+        assert!(elided.remaining_window_passes < naive.remaining_window_passes);
+    }
+
+    #[test]
+    fn trailing_empty_run_costs_one_landing_pass() {
+        let cfg = tiny_config();
+        // everything after step 0 predicted empty → early retirement
+        let p = profile_with(vec![vec![4.0, 0.0, 0.0, 0.0, 1.0]; cfg.num_blocks]);
+        let f = CostModel::new(Some(1.5)).forecast(Some(&p), &cfg);
+        assert_eq!(f.per_block, vec![2; cfg.num_blocks]);
+    }
+
+    #[test]
+    fn remaining_from_is_monotone_nonincreasing() {
+        let cfg = tiny_config();
+        let p = profile_with(vec![vec![2.0, 0.5, 1.0, 3.0, 2.0]; cfg.num_blocks]);
+        for model in [CostModel::new(None), CostModel::new(Some(1.5))] {
+            let f = model.forecast(Some(&p), &cfg);
+            let mut prev = f.remaining_from(0, 0);
+            assert_eq!(prev, f.remaining_window_passes);
+            for b in 0..cfg.num_blocks {
+                for s in 0..=cfg.block_len {
+                    let now = f.remaining_from(b, s);
+                    assert!(
+                        now <= prev,
+                        "forecast rose at block {b} step {s}: {now} > {prev}"
+                    );
+                    prev = now;
+                }
+            }
+            assert_eq!(f.remaining_from(cfg.num_blocks, 0), 0);
+        }
+    }
+}

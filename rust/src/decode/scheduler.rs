@@ -28,7 +28,12 @@ use crate::policy::{PlanContext, Policy, StepRule};
 use crate::runtime::AcceptRule;
 
 use super::task::{DecodeTask, PassKind};
-use super::{DecodeResult, ForwardModel};
+use super::{DecodeResult, ForwardModel, StepForecast};
+
+/// Alignment-aware promotion passes over a waiting entry at most this many
+/// times before force-promoting it regardless of band fit — the fairness
+/// valve that bounds how long a misaligned row can wait behind aligned ones.
+const MAX_PROMOTE_SKIPS: u32 = 8;
 
 /// Anything that can lend a `&dyn Policy` for a step decision. Lets the
 /// scheduler hold owned policies (`Box<dyn Policy>` — the coordinator's
@@ -57,6 +62,21 @@ struct Entry<P: PolicyRef> {
     /// this sequence's first block-boundary refresh instead of a model
     /// call (pages stay pinned while the sequence waits for a slot).
     prefix: Option<PrefixHit>,
+    /// Admission-time cost forecast (DESIGN.md §15). Advisory only: it
+    /// steers promotion order and grouping, never a decode decision.
+    forecast: Option<StepForecast>,
+    /// Times alignment-aware promotion passed over this waiting entry.
+    skipped: u32,
+}
+
+impl<P: PolicyRef> Entry<P> {
+    /// Predicted window passes left for this sequence at its current
+    /// schedule position — the alignment signal promotion compares.
+    fn predicted_remaining(&self) -> Option<usize> {
+        self.forecast
+            .as_ref()
+            .map(|f| f.remaining_from(self.task.block(), self.task.step_in_block()))
+    }
 }
 
 /// What one scheduler step did.
@@ -109,6 +129,11 @@ pub struct StepReport {
     /// exposed no host K/V, so the prefix-sharing index could not be
     /// populated (DESIGN.md §13 limitation, observable via metrics).
     pub prefix_sharing_skipped_device: usize,
+    /// Per co-executed window/fused group with ≥ 2 forecast-stamped rows:
+    /// the spread (max − min) of predicted remaining passes across the
+    /// group — the `group_alignment_drag` histogram's raw material. High
+    /// values mean a near-done straggler shared buckets with fresh rows.
+    pub alignment_drag: Vec<usize>,
 }
 
 /// FIFO continuous-batching scheduler over one forward model.
@@ -127,10 +152,15 @@ pub struct StepScheduler<'m, M: ForwardModel, P: PolicyRef> {
     /// confidence traces from *every* policy — e.g. a registry running EMA
     /// refinement — switch this off.
     fused: bool,
-    /// Admitted, waiting for a free slot (FIFO).
+    /// Admitted, waiting for a free slot (FIFO when `align_band == 0`).
     waiting: VecDeque<Entry<P>>,
     /// Running sequences; at most `max_active`.
     active: Vec<Entry<P>>,
+    /// Alignment band for forecast-aware promotion (0 = plain FIFO):
+    /// prefer filling a free slot with a waiting row whose predicted
+    /// remaining passes land within `align_band` of the closest-to-done
+    /// active row, so grouped rows retire together (DESIGN.md §15).
+    align_band: usize,
 }
 
 impl<'m, M: ForwardModel, P: PolicyRef> StepScheduler<'m, M, P> {
@@ -165,6 +195,7 @@ impl<'m, M: ForwardModel, P: PolicyRef> StepScheduler<'m, M, P> {
             fused: true,
             waiting: VecDeque::new(),
             active: Vec::new(),
+            align_band: 0,
         }
     }
 
@@ -205,11 +236,35 @@ impl<'m, M: ForwardModel, P: PolicyRef> StepScheduler<'m, M, P> {
         self.fused
     }
 
+    /// Set the alignment band for forecast-aware promotion. `0` (the
+    /// default) restores plain FIFO promotion. Like fusion, the band only
+    /// changes *when* sequences run, never what they decode.
+    pub fn set_align_band(&mut self, band: usize) {
+        self.align_band = band;
+    }
+
+    pub fn align_band(&self) -> usize {
+        self.align_band
+    }
+
     /// Admit a sequence; it joins the shared passes at the next step
     /// boundary (immediately if a slot is free). `id` must be unique among
     /// currently scheduled sequences. There is no admission cap — beyond
     /// `max_active`, sequences queue FIFO.
     pub fn admit(&mut self, id: u64, layout: Vec<u32>, policy: P) -> Result<()> {
+        self.admit_with_forecast(id, layout, policy, None)
+    }
+
+    /// [`StepScheduler::admit`] with an admission-time cost forecast
+    /// attached. The forecast feeds alignment-aware promotion and the
+    /// per-group drag report; it is never consulted by the decode itself.
+    pub fn admit_with_forecast(
+        &mut self,
+        id: u64,
+        layout: Vec<u32>,
+        policy: P,
+        forecast: Option<StepForecast>,
+    ) -> Result<()> {
         if self.waiting.iter().any(|e| e.id == id)
             || self.active.iter().any(|e| e.id == id)
         {
@@ -223,7 +278,14 @@ impl<'m, M: ForwardModel, P: PolicyRef> StepScheduler<'m, M, P> {
             .shared
             .as_ref()
             .and_then(|s| s.probe(task.tokens()));
-        self.waiting.push_back(Entry { id, task, policy, prefix });
+        self.waiting.push_back(Entry {
+            id,
+            task,
+            policy,
+            prefix,
+            forecast,
+            skipped: 0,
+        });
         Ok(())
     }
 
@@ -250,14 +312,72 @@ impl<'m, M: ForwardModel, P: PolicyRef> StepScheduler<'m, M, P> {
         self.max_active
     }
 
-    /// Fill free active slots from the waiting queue (FIFO).
+    /// Fill free active slots from the waiting queue. With `align_band ==
+    /// 0` this is plain FIFO; otherwise each slot prefers the earliest
+    /// waiting row whose predicted remaining passes land within the band
+    /// of the closest-to-done active row, falling back to the queue front
+    /// so a slot never idles while work waits. Passed-over rows accrue a
+    /// skip count and are force-promoted at [`MAX_PROMOTE_SKIPS`].
     fn promote(&mut self) {
         while self.active.len() < self.max_active {
-            match self.waiting.pop_front() {
-                Some(e) => self.active.push(e),
-                None => break,
+            let Some(idx) = self.next_waiting() else { break };
+            for e in self.waiting.iter_mut().take(idx) {
+                e.skipped += 1;
+            }
+            let e = self.waiting.remove(idx).expect("index from next_waiting");
+            self.active.push(e);
+        }
+    }
+
+    /// Index into `waiting` of the next row to promote, or `None` when
+    /// the queue is empty.
+    fn next_waiting(&self) -> Option<usize> {
+        if self.waiting.is_empty() {
+            return None;
+        }
+        if self.align_band == 0 {
+            return Some(0);
+        }
+        // fairness valve: anything passed over too often goes first
+        if let Some(i) = self
+            .waiting
+            .iter()
+            .position(|e| e.skipped >= MAX_PROMOTE_SKIPS)
+        {
+            return Some(i);
+        }
+        // anchor on the active row closest to retirement; with no
+        // forecast-stamped active rows there is nothing to align to
+        let Some(anchor) = self
+            .active
+            .iter()
+            .filter_map(Entry::predicted_remaining)
+            .min()
+        else {
+            return Some(0);
+        };
+        let aligned = self.waiting.iter().position(|e| {
+            e.predicted_remaining()
+                .map_or(true, |p| p.abs_diff(anchor) <= self.align_band)
+        });
+        Some(aligned.unwrap_or(0))
+    }
+
+    /// Spread (max − min) of predicted remaining passes across a group's
+    /// forecast-stamped rows; `None` below two data points (a singleton
+    /// has no one to drag).
+    fn group_drag(entries: &[Entry<P>], idxs: impl Iterator<Item = usize>) -> Option<usize> {
+        let mut lo = usize::MAX;
+        let mut hi = 0usize;
+        let mut n = 0usize;
+        for i in idxs {
+            if let Some(p) = entries[i].predicted_remaining() {
+                lo = lo.min(p);
+                hi = hi.max(p);
+                n += 1;
             }
         }
+        (n >= 2).then(|| hi - lo)
     }
 
     /// Advance every active sequence by one policy decision, then retire
@@ -453,6 +573,9 @@ impl<'m, M: ForwardModel, P: PolicyRef> StepScheduler<'m, M, P> {
             let bucket = self.bucket_for(chunk.len());
             report.padding_rows += bucket - chunk.len();
             report.window_groups.push((chunk.len(), bucket));
+            if let Some(drag) = Self::group_drag(&self.active, chunk.iter().copied()) {
+                report.alignment_drag.push(drag);
+            }
             let mut starts: Vec<usize> = Vec::with_capacity(chunk.len());
             let out = {
                 let mut windows: Vec<&[u32]> = Vec::with_capacity(chunk.len());
@@ -500,6 +623,9 @@ impl<'m, M: ForwardModel, P: PolicyRef> StepScheduler<'m, M, P> {
             let bucket = self.bucket_for(chunk.len());
             report.padding_rows += bucket - chunk.len();
             report.window_groups.push((chunk.len(), bucket));
+            if let Some(drag) = Self::group_drag(&self.active, chunk.iter().map(|&(i, _)| i)) {
+                report.alignment_drag.push(drag);
+            }
             let mut starts: Vec<usize> = Vec::with_capacity(chunk.len());
             let out = {
                 let mut windows: Vec<&[u32]> = Vec::with_capacity(chunk.len());
@@ -676,6 +802,120 @@ mod tests {
         assert_eq!(on.tokens, off.tokens, "fusion must not change tokens");
         assert_eq!(on.steps, off.steps);
         assert_eq!(on.fallback_steps, off.fallback_steps);
+    }
+
+    fn forecast(per_block: Vec<usize>) -> StepForecast {
+        let remaining: usize = per_block.iter().sum();
+        StepForecast {
+            remaining_window_passes: remaining,
+            total_passes: remaining + per_block.len(),
+            per_block,
+            calibrated: true,
+        }
+    }
+
+    fn accepted_ids(r: &StepReport) -> Vec<u64> {
+        let mut ids: Vec<u64> = r.accepted.iter().map(|&(id, _)| id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        ids
+    }
+
+    #[test]
+    fn alignment_band_prefers_aligned_waiting_rows() {
+        let m = SimModel::math_like(11);
+        let p = StaticThreshold::new(0.9);
+        let mut s = StepScheduler::new(&m, CacheConfig::disabled(), 2);
+        s.set_align_band(8);
+        assert_eq!(s.align_band(), 8);
+        let long = || forecast(vec![32, 32, 32]);
+        let short = forecast(vec![1, 1, 1]);
+        s.admit_with_forecast(0, m.layout_from_seed(0), &p as &dyn Policy, Some(long()))
+            .unwrap();
+        s.admit_with_forecast(1, m.layout_from_seed(1), &p as &dyn Policy, Some(short))
+            .unwrap();
+        s.admit_with_forecast(2, m.layout_from_seed(2), &p as &dyn Policy, Some(long()))
+            .unwrap();
+        // two slots: seq 0 anchors, seq 1 (predicted 3 vs 96) is out of
+        // band, seq 2 is aligned and jumps the queue
+        let r = s.step().unwrap();
+        assert_eq!(r.occupancy, 2);
+        assert_eq!(accepted_ids(&r), vec![0, 2], "aligned row promoted first");
+        assert_eq!(s.waiting_len(), 1);
+        // the passed-over row still completes — no starvation
+        let results = s.drain().unwrap();
+        assert_eq!(results.len() + r.retired.len(), 3);
+        assert!(s.is_idle());
+    }
+
+    #[test]
+    fn misaligned_rows_never_idle_a_slot() {
+        let m = SimModel::math_like(12);
+        let p = StaticThreshold::new(0.9);
+        let mut s = StepScheduler::new(&m, CacheConfig::disabled(), 2);
+        s.set_align_band(1);
+        s.admit_with_forecast(0, m.layout_from_seed(0), &p as &dyn Policy, Some(forecast(vec![32, 32, 32])))
+            .unwrap();
+        s.step().unwrap(); // seq 0 occupies a slot and advances
+        s.admit_with_forecast(1, m.layout_from_seed(1), &p as &dyn Policy, Some(forecast(vec![1, 1, 1])))
+            .unwrap();
+        // seq 1 is far outside the band, but it is the only candidate and
+        // a slot is free: promotion must fall back to the queue front
+        let r = s.step().unwrap();
+        assert_eq!(r.occupancy, 2, "a free slot never idles while work waits");
+    }
+
+    #[test]
+    fn forced_promotion_caps_skips() {
+        let m = SimModel::math_like(13);
+        let p = StaticThreshold::new(0.9);
+        let mut s = StepScheduler::new(&m, CacheConfig::disabled(), 2);
+        s.set_align_band(1);
+        s.admit_with_forecast(0, m.layout_from_seed(0), &p as &dyn Policy, Some(forecast(vec![32, 32, 32])))
+            .unwrap();
+        s.step().unwrap(); // seq 0 active, anchor ≈ 96 remaining
+        s.admit_with_forecast(1, m.layout_from_seed(1), &p as &dyn Policy, Some(forecast(vec![1, 1, 1])))
+            .unwrap();
+        s.admit_with_forecast(2, m.layout_from_seed(2), &p as &dyn Policy, Some(forecast(vec![32, 32, 32])))
+            .unwrap();
+        // seq 1 has exhausted its skip budget: the fairness valve promotes
+        // it ahead of the better-aligned seq 2
+        s.waiting.get_mut(0).unwrap().skipped = MAX_PROMOTE_SKIPS;
+        let r = s.step().unwrap();
+        assert_eq!(r.occupancy, 2);
+        assert!(
+            accepted_ids(&r).contains(&1),
+            "skip-capped row must be force-promoted"
+        );
+        assert_eq!(s.waiting_len(), 1, "aligned seq 2 waits its turn");
+    }
+
+    #[test]
+    fn alignment_drag_reported_for_forecast_groups() {
+        let m = SimModel::math_like(14);
+        let p = StaticThreshold::new(0.9);
+        let mut s = StepScheduler::new(&m, CacheConfig::block_boundary(), 2);
+        s.admit_with_forecast(0, m.layout_from_seed(0), &p as &dyn Policy, Some(forecast(vec![32, 32, 32])))
+            .unwrap();
+        s.admit_with_forecast(1, m.layout_from_seed(1), &p as &dyn Policy, Some(forecast(vec![32, 32, 32])))
+            .unwrap();
+        let r0 = s.step().unwrap(); // batch-1 refreshes: no co-executed group
+        assert!(r0.alignment_drag.is_empty(), "refreshes never group");
+        let r1 = s.step().unwrap(); // both in-block: one fused group of two
+        assert_eq!(r1.window_passes, 2);
+        assert_eq!(
+            r1.alignment_drag.len(),
+            1,
+            "a two-row forecast group reports its drag"
+        );
+        // plain admit (no forecast) contributes no drag samples
+        let mut bare = StepScheduler::new(&m, CacheConfig::block_boundary(), 2);
+        bare.admit(0, m.layout_from_seed(0), &p as &dyn Policy).unwrap();
+        bare.admit(1, m.layout_from_seed(1), &p as &dyn Policy).unwrap();
+        bare.step().unwrap();
+        let b1 = bare.step().unwrap();
+        assert_eq!(b1.window_passes, 2);
+        assert!(b1.alignment_drag.is_empty());
     }
 
     #[test]

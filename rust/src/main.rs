@@ -35,7 +35,7 @@ const VALUE_FLAGS: &[&str] = &[
     "max-batch", "batch-wait-ms", "mode", "metric", "profile-dir", "tau",
     "refresh-interval", "save", "drift-floor", "ema-alpha", "cache-residency",
     "metrics-addr", "kv-page-len", "prefix-sharing", "step-elision",
-    "elide-floor",
+    "elide-floor", "admission", "align-band", "shed-watermark", "slo-ms",
 ];
 
 fn main() {
@@ -101,6 +101,16 @@ STEP ELISION (serve):
                         trajectory predicts are empty; retire blocks early
                         (Phase-2 OSDT decodes only; default off)
   --elide-floor F      predicted acceptances below F count as an empty step
+
+PREDICTIVE SCHEDULING (serve):
+  --admission predictive|fifo  admission order: forecast-cost priority with
+                        wait-time aging (default) or plain FIFO
+  --align-band N       co-schedule rows whose predicted remaining window
+                        passes are within N of each other (0 = off)
+  --shed-watermark N   shed new requests once the predicted backlog (queue
+                        + active, in forward passes) would exceed N (0 = off)
+  --slo-ms MS          default per-request deadline budget; requests whose
+                        forecast can't meet it are shed with retry_after_ms
 
 POLICY SPECS:
   sequential[:k] | static[:tau] | factor[:f] | osdt:MODE:METRIC:KAPPA:EPS
@@ -186,6 +196,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
             other => bail!("unknown --step-elision {other:?} (on|off)"),
         },
         elide_floor: args.get_parse("elide-floor", defaults.elide_floor)?,
+        predictive: match args.get_or("admission", "predictive") {
+            "predictive" => true,
+            "fifo" => false,
+            other => bail!("unknown --admission {other:?} (predictive|fifo)"),
+        },
+        align_band: args.get_parse("align-band", defaults.align_band)?,
+        shed_watermark: args.get_parse("shed-watermark", defaults.shed_watermark)?,
+        slo_ms: args.get_parse("slo-ms", defaults.slo_ms)?,
     };
     let ccfg = CoordinatorConfig {
         workers: scfg.workers,
@@ -194,6 +212,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
         cache: cache_config(args)?,
         step_elision: scfg.step_elision,
         elide_floor: scfg.elide_floor,
+        predictive: scfg.predictive,
+        align_band: scfg.align_band,
+        shed_watermark: scfg.shed_watermark,
+        slo_ms: scfg.slo_ms,
         ..CoordinatorConfig::default()
     };
     let rcfg = RegistryConfig {

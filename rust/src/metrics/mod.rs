@@ -336,6 +336,16 @@ pub fn catalog() -> &'static [MetricSpec] {
              prompt, failed calibration, poisoned scheduler step).",
         ),
         counter(
+            "requests_shed",
+            "osdt_requests_shed_total",
+            "coordinator",
+            "Requests rejected at admission by the predictive-scheduling \
+             guardrails (predicted backlog over --shed-watermark, or a \
+             forecast that cannot meet the request's SLO budget); each \
+             carried a finite retry_after_ms. In-flight decodes are never \
+             shed (DESIGN.md \u{a7}15).",
+        ),
+        counter(
             "tokens_generated",
             "osdt_tokens_generated_total",
             "coordinator",
@@ -514,6 +524,14 @@ pub fn catalog() -> &'static [MetricSpec] {
             "Jobs waiting in the coordinator queue right now.",
         ),
         gauge(
+            "predicted_backlog",
+            "osdt_predicted_backlog",
+            "coordinator",
+            "Sum of forecast total passes across queued and active \
+             requests — the load signal the --shed-watermark guardrail \
+             compares against (DESIGN.md \u{a7}15).",
+        ),
+        gauge(
             "batch_occupancy",
             "osdt_batch_occupancy",
             "coordinator",
@@ -588,6 +606,37 @@ pub fn catalog() -> &'static [MetricSpec] {
              scheduler step that committed tokens for the request. \
              Calibration responses report their full decode latency (the \
              decode runs inline, outside the scheduler).",
+        ),
+        // -- predictive scheduling (DESIGN.md §15) -------------------------
+        histogram(
+            "predicted_steps",
+            "osdt_predicted_steps",
+            1.0,
+            COUNT_BUCKETS,
+            "coordinator",
+            "Forecast total passes per submitted request, stamped at \
+             admission (worst-case prior until the task calibrates).",
+        ),
+        histogram(
+            "forecast_error",
+            "osdt_forecast_error",
+            1.0,
+            COUNT_BUCKETS,
+            "coordinator",
+            "|forecast total passes \u{2212} executed passes| per retired \
+             decode — the cost model's accuracy; a rising p95 means \
+             profiles have drifted from real acceptance behaviour.",
+        ),
+        histogram(
+            "group_alignment_drag",
+            "osdt_group_alignment_drag",
+            1.0,
+            COUNT_BUCKETS,
+            "coordinator",
+            "Per co-executed window/fused group with \u{2265} 2 forecast \
+             rows: spread (max \u{2212} min) of predicted remaining passes \
+             — how badly grouped rows will retire apart. --align-band \
+             drives this toward 0.",
         ),
         // -- profile registry (fleet-wide) ---------------------------------
         counter(

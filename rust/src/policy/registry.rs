@@ -44,6 +44,7 @@
 //! one place no matter how many coordinators share the instance.
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
@@ -212,6 +213,11 @@ pub struct ProfileRegistry {
     store: Option<ProfileStore>,
     cfg: RegistryConfig,
     metrics: Arc<MetricsRegistry>,
+    /// Bumps whenever a lease resolves (fulfilled or abandoned) — the only
+    /// registry events that can change a parked request's admission class.
+    /// Coordinators snapshot it to skip re-classifying their parked queues
+    /// on iterations where no lease resolved.
+    release_gen: AtomicU64,
 }
 
 impl ProfileRegistry {
@@ -227,6 +233,7 @@ impl ProfileRegistry {
             store: None,
             cfg,
             metrics: Arc::new(MetricsRegistry::new()),
+            release_gen: AtomicU64::new(0),
         }
     }
 
@@ -268,6 +275,14 @@ impl ProfileRegistry {
 
     pub fn config(&self) -> &RegistryConfig {
         &self.cfg
+    }
+
+    /// Lease-release generation: increments on every fulfilled or
+    /// abandoned lease. Unchanged generation ⇒ no parked request's
+    /// admission class changed since it was read (time-based transitions
+    /// aside), so a coordinator may skip rescanning its parked queue.
+    pub fn lease_release_generation(&self) -> u64 {
+        self.release_gen.load(Ordering::Acquire)
     }
 
     /// Fleet-wide profile/lease metrics (separate from any coordinator's).
@@ -421,6 +436,7 @@ impl ProfileRegistry {
                 version,
             }
         };
+        self.release_gen.fetch_add(1, Ordering::AcqRel);
         self.cv.notify_all();
         self.persist(&record);
     }
@@ -440,6 +456,7 @@ impl ProfileRegistry {
             }
         };
         if released {
+            self.release_gen.fetch_add(1, Ordering::AcqRel);
             self.metrics.add("leases_abandoned", 1);
             self.cv.notify_all();
         } else {
@@ -795,6 +812,31 @@ mod tests {
         let calibrations: u64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
         assert_eq!(calibrations, 1, "single-flight violated");
         assert_eq!(reg.metrics().counter_value("calibrations_completed"), 1);
+    }
+
+    #[test]
+    fn release_generation_bumps_only_when_a_lease_resolves() {
+        let reg = ProfileRegistry::in_memory();
+        let g0 = reg.lease_release_generation();
+        let lease = match reg.acquire(&key()) {
+            Acquired::Lease(l) => l,
+            _ => panic!(),
+        };
+        // granting a lease changes nothing for parked peers
+        assert_eq!(reg.lease_release_generation(), g0);
+        lease.fulfill(profile(0.6), vec![0.6]);
+        let g1 = reg.lease_release_generation();
+        assert_eq!(g1, g0 + 1, "fulfill must bump the generation");
+        // plain Ready acquires don't bump
+        assert!(matches!(reg.acquire(&key()), Acquired::Ready(..)));
+        assert_eq!(reg.lease_release_generation(), g1);
+        // an abandoned lease (recalibration that failed) bumps too
+        assert!(reg.invalidate(&key()));
+        match reg.acquire(&key()) {
+            Acquired::Lease(l) => drop(l),
+            _ => panic!(),
+        }
+        assert_eq!(reg.lease_release_generation(), g1 + 1);
     }
 
     #[test]

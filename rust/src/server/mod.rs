@@ -7,6 +7,9 @@
 //! <- {"id":1,"completion":"A: 3+4=7. #### 7","steps":9,"latency_ms":52.1,
 //!     "tokens_per_sec":1843.2,"full_passes":9,"window_passes":0,
 //!     "calibrated":false}
+//! -> {"task":"synth-math","prompt":"Q: 3+4=?","policy":"static:0.9",
+//!     "slo_ms":250}                      (optional per-request deadline)
+//! <- {"id":2,...,"error":"shed: ...","retry_after_ms":83.0}   (if shed)
 //! -> {"cmd":"metrics"}
 //! <- {"metrics":"osdt_requests_completed_total 12\n..."}
 //! -> {"cmd":"ping"}
@@ -59,6 +62,9 @@ pub fn response_to_json(r: &Response) -> Json {
     if let Some(e) = &r.error {
         pairs.push(("error", Json::Str(e.clone())));
     }
+    if let Some(retry) = r.retry_after_ms {
+        pairs.push(("retry_after_ms", Json::Num(retry)));
+    }
     Json::obj(pairs)
 }
 
@@ -90,6 +96,7 @@ pub fn response_from_json(j: &Json) -> Result<Response> {
             .and_then(Json::as_bool)
             .unwrap_or(false),
         error: j.get("error").and_then(Json::as_str).map(str::to_string),
+        retry_after_ms: j.get("retry_after_ms").and_then(Json::as_f64),
     })
 }
 
@@ -295,6 +302,8 @@ fn request_from_json(j: &Json) -> Result<Request> {
         task: s("task")?,
         prompt: s("prompt")?,
         policy: s("policy")?,
+        // optional per-request deadline; absent inherits the server default
+        slo_ms: j.get("slo_ms").and_then(Json::as_f64),
     })
 }
 
@@ -391,11 +400,28 @@ impl Client {
     }
 
     pub fn generate(&mut self, task: &str, prompt: &str, policy: &str) -> Result<Response> {
-        let msg = Json::obj(vec![
+        self.generate_with_slo(task, prompt, policy, None)
+    }
+
+    /// [`Client::generate`] with a per-request deadline budget attached. A
+    /// server over its shed watermark (or unable to meet the budget)
+    /// rejects with `error` + a finite `retry_after_ms` instead of queueing.
+    pub fn generate_with_slo(
+        &mut self,
+        task: &str,
+        prompt: &str,
+        policy: &str,
+        slo_ms: Option<f64>,
+    ) -> Result<Response> {
+        let mut pairs = vec![
             ("task", Json::Str(task.into())),
             ("prompt", Json::Str(prompt.into())),
             ("policy", Json::Str(policy.into())),
-        ]);
+        ];
+        if let Some(slo) = slo_ms {
+            pairs.push(("slo_ms", Json::Num(slo)));
+        }
+        let msg = Json::obj(pairs);
         let j = self.roundtrip(&msg)?;
         if j.get("id").is_none() {
             if let Some(e) = j.get("error").and_then(Json::as_str) {
@@ -555,6 +581,7 @@ mod tests {
             calibrated: true,
             ttft_ms: 8.25,
             error: None,
+            retry_after_ms: None,
         };
         let back = response_from_json(&response_to_json(&r)).unwrap();
         assert_eq!(back.id, 7);
@@ -563,11 +590,32 @@ mod tests {
         assert!(back.calibrated);
         assert_eq!(back.ttft_ms, 8.25);
         assert!(back.error.is_none());
+        assert!(back.retry_after_ms.is_none(), "absent on the wire stays None");
         // older servers omit ttft_ms: the client defaults it to 0
         let mut j = response_to_json(&r);
         if let Json::Obj(m) = &mut j {
             m.remove("ttft_ms");
         }
         assert_eq!(response_from_json(&j).unwrap().ttft_ms, 0.0);
+        // a shed response carries its retry hint through the roundtrip
+        let shed = Response::shed(9, 83.5, "shed: predicted backlog over watermark".into());
+        let back = response_from_json(&response_to_json(&shed)).unwrap();
+        assert_eq!(back.retry_after_ms, Some(83.5));
+        assert!(back.error.unwrap().contains("shed"));
+    }
+
+    #[test]
+    fn slo_field_parses_over_wire() {
+        let (server, _coord) = start_stack();
+        let mut c = Client::connect(server.addr).unwrap();
+        // a generous per-request budget flows through the optional field
+        // and the request completes normally (shedding is off by default)
+        let r = c
+            .generate_with_slo("synth-math", "Q: 2+3=?", "static:0.9", Some(60_000.0))
+            .unwrap();
+        assert!(r.error.is_none(), "{:?}", r.error);
+        assert!(r.retry_after_ms.is_none());
+        assert!(r.steps > 0);
+        server.stop();
     }
 }

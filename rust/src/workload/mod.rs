@@ -140,6 +140,34 @@ pub fn mixed_trace(
         .collect()
 }
 
+/// Mixed-length heavy-tail trace (DESIGN.md §15): `heavy` requests drawn
+/// from the `long` dataset land immediately behind the first `short`
+/// arrival, and every other request draws from `short`. This is the
+/// adversarial shape for FIFO admission — the tail jobs hit the queue just
+/// as the backlog forms, so under FIFO the entire short class waits behind
+/// them, while predicted-cost admission defers exactly the tail. Arrivals
+/// are the same seeded Poisson process as `mixed_trace`.
+pub fn heavy_tail_trace(
+    short: &Dataset,
+    long: &Dataset,
+    rate: f64,
+    n: usize,
+    heavy: usize,
+    seed: u64,
+) -> Vec<TimedRequest> {
+    assert!(heavy < n, "tail ({heavy}) must be smaller than the trace ({n})");
+    let mut rng = Rng::new(seed ^ 0x7A11);
+    let mut t = 0.0;
+    (0..n)
+        .map(|i| {
+            t += rng.exponential(rate);
+            let ds = if (1..=heavy).contains(&i) { long } else { short };
+            let ex = rng.choose(&ds.examples);
+            TimedRequest { at: t, task: ds.task.clone(), prompt: ex.prompt.clone() }
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -199,6 +227,21 @@ mod tests {
         let trace = mixed_trace(&[demo_dataset(), qa], 5.0, 10, 3);
         assert_eq!(trace[0].task, "synth-math");
         assert_eq!(trace[1].task, "synth-qa");
+    }
+
+    #[test]
+    fn heavy_tail_trace_places_tail_behind_first_arrival() {
+        let mut long = demo_dataset();
+        long.task = "synth-long".into();
+        let trace = heavy_tail_trace(&demo_dataset(), &long, 100.0, 10, 2, 7);
+        assert_eq!(trace.len(), 10);
+        for w in trace.windows(2) {
+            assert!(w[1].at >= w[0].at);
+        }
+        for (i, r) in trace.iter().enumerate() {
+            let want = if (1..=2).contains(&i) { "synth-long" } else { "synth-math" };
+            assert_eq!(r.task, want, "request {i}");
+        }
     }
 
     #[test]

@@ -122,6 +122,7 @@ fn stuck_lease_is_stolen_and_supersedes_the_holder() {
                 task: "synth-math".into(),
                 prompt: format!("Q: {i}+2=?"),
                 policy: OSDT_SPEC.into(),
+                slo_ms: None,
             })
         })
         .collect();

@@ -1,0 +1,247 @@
+//! Integration tests for signature-driven predictive scheduling
+//! (DESIGN.md §15): admission order is pure scheduling — it moves waiting,
+//! never tokens — the aged shortest-predicted-job-first queue stays live
+//! under a flood of cheap jobs, and the cost model's elision-aware
+//! forecasts never exceed the naive schedule depth.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use osdt::cache::CacheConfig;
+use osdt::coordinator::{Coordinator, CoordinatorConfig, Request};
+use osdt::decode::CostModel;
+use osdt::model::fixtures::tiny_config;
+use osdt::policy::{
+    Acquired, DynamicMode, Metric, Profile, ProfileKey, ProfileRegistry,
+};
+use osdt::sim::SimModel;
+use osdt::util::prop;
+use osdt::util::rng::Rng;
+
+const POLICY: &str = "osdt:step-block:q1:1:0";
+
+/// Step-block profile whose per-block schedule is `depth` steps: a
+/// committing first step, `depth - 2` near-empty middle steps, and a cheap
+/// landing step that drains the block. On the plateau simulator the
+/// forecast for this trajectory is `depth` window passes per block.
+fn profile_with_depth(depth: usize) -> Profile {
+    assert!(depth >= 2);
+    let mut taus = vec![0.5];
+    taus.extend(std::iter::repeat(0.995).take(depth - 2));
+    taus.push(0.25);
+    let mut accepts = vec![8.0];
+    // accepts 2.0 sit above the default elide floor: the schedule keeps
+    // its full depth even on elision-enabled configurations
+    accepts.extend(std::iter::repeat(2.0).take(depth - 2));
+    accepts.push(9.0);
+    let blocks = tiny_config().num_blocks;
+    Profile::step_block(vec![taus; blocks], Metric::Q1)
+        .with_accepts(vec![accepts; blocks])
+}
+
+/// Registry pre-seeded with a cheap "synth-short" and an expensive
+/// "synth-long" trajectory, so every request decodes (and is forecast)
+/// from a real profile with no calibration in the test body.
+fn seeded_registry() -> Arc<ProfileRegistry> {
+    let registry = Arc::new(ProfileRegistry::in_memory());
+    for (task, depth) in [("synth-short", 5), ("synth-long", 25)] {
+        match registry.acquire(&ProfileKey::new(
+            task,
+            DynamicMode::StepBlock,
+            Metric::Q1,
+        )) {
+            Acquired::Lease(lease) => {
+                lease.fulfill(profile_with_depth(depth), vec![0.5; 4])
+            }
+            _ => panic!("seeding the {task} profile must grant the lease"),
+        }
+    }
+    registry
+}
+
+fn start(
+    predictive: bool,
+    align_band: usize,
+    max_batch: usize,
+) -> Arc<Coordinator> {
+    Arc::new(
+        Coordinator::start_with_registry(
+            CoordinatorConfig {
+                workers: 1,
+                max_batch,
+                batch_wait: Duration::from_millis(5),
+                cache: CacheConfig::block_boundary(),
+                predictive,
+                align_band,
+                ..CoordinatorConfig::default()
+            },
+            tiny_config(),
+            seeded_registry(),
+            |_| Ok(SimModel::plateau_like(7)),
+        )
+        .unwrap(),
+    )
+}
+
+fn request(i: usize) -> Request {
+    // every third request is expensive — the mixed-length workload whose
+    // ordering the admission policy is free to change
+    let task = if i % 3 == 0 { "synth-long" } else { "synth-short" };
+    Request {
+        id: 0,
+        task: task.into(),
+        prompt: format!("Q: {i}+1=?"),
+        policy: POLICY.into(),
+        slo_ms: None,
+    }
+}
+
+/// Scheduling is invisible in the output: FIFO, predicted-cost, and
+/// predicted-cost-plus-alignment admission must produce bit-identical
+/// completions and execute exactly the same forward passes for the same
+/// request set.
+#[test]
+fn admission_order_never_changes_tokens_or_passes() {
+    let mut arms = Vec::new();
+    for (label, predictive, band) in
+        [("fifo", false, 0), ("predictive", true, 0), ("aligned", true, 8)]
+    {
+        let coord = start(predictive, band, 2);
+        let rxs: Vec<_> =
+            (0..12).map(|i| coord.submit(request(i))).collect();
+        let completions: Vec<String> = rxs
+            .into_iter()
+            .map(|rx| {
+                let r = rx.recv().unwrap();
+                assert!(r.error.is_none(), "{label}: {:?}", r.error);
+                r.completion
+            })
+            .collect();
+        let passes = coord.metrics.counter_value("window_passes")
+            + coord.metrics.counter_value("full_passes");
+        arms.push((label, completions, passes));
+    }
+    for w in arms.windows(2) {
+        assert_eq!(
+            w[0].1, w[1].1,
+            "completions diverge between {} and {}",
+            w[0].0, w[1].0
+        );
+        assert_eq!(
+            w[0].2, w[1].2,
+            "executed passes diverge between {} and {}",
+            w[0].0, w[1].0
+        );
+    }
+}
+
+/// Aged SPJF liveness: an expensive job queued behind a continuing flood
+/// of cheap jobs still completes — wait-time aging bounds how long a
+/// cheaper newcomer can keep overtaking it (DESIGN.md §15).
+#[test]
+fn cheap_flood_cannot_starve_an_expensive_job() {
+    let coord = start(true, 0, 1);
+    // a first wave of cheap jobs builds the backlog the long job queues
+    // behind
+    let mut floods: Vec<_> = (0..8)
+        .map(|i| {
+            coord.submit(Request {
+                id: 0,
+                task: "synth-short".into(),
+                prompt: format!("Q: {i}+2=?"),
+                policy: POLICY.into(),
+                slo_ms: None,
+            })
+        })
+        .collect();
+    let long_rx = coord.submit(Request {
+        id: 0,
+        task: "synth-long".into(),
+        prompt: "Q: 9+9=?".into(),
+        policy: POLICY.into(),
+        slo_ms: None,
+    });
+    // adversarial arrivals: keep feeding fresh cheap jobs (each of which
+    // out-scores the long job until aging catches up) while it waits
+    let stop = Arc::new(AtomicBool::new(false));
+    let producer = {
+        let coord = coord.clone();
+        let stop = stop.clone();
+        std::thread::spawn(move || {
+            let mut rxs = Vec::new();
+            let mut i = 0usize;
+            while !stop.load(Ordering::Relaxed) {
+                rxs.push(coord.submit(Request {
+                    id: 0,
+                    task: "synth-short".into(),
+                    prompt: format!("Q: {i}+3=?"),
+                    policy: POLICY.into(),
+                    slo_ms: None,
+                }));
+                i += 1;
+                std::thread::sleep(Duration::from_micros(300));
+            }
+            rxs
+        })
+    };
+    let long = long_rx
+        .recv_timeout(Duration::from_secs(20))
+        .expect("expensive job starved by the cheap-job flood");
+    assert!(long.error.is_none(), "{:?}", long.error);
+    stop.store(true, Ordering::Relaxed);
+    let flood_rxs = producer.join().unwrap();
+    floods.extend(flood_rxs);
+    for rx in floods {
+        let r = rx.recv_timeout(Duration::from_secs(20)).unwrap();
+        assert!(r.error.is_none(), "{:?}", r.error);
+    }
+}
+
+/// The elision-aware forecast can only remove passes from the naive
+/// schedule: for random acceptance trajectories, a cost model with an
+/// elide floor never predicts more total passes than one without.
+#[test]
+fn prop_elision_aware_forecast_never_exceeds_naive() {
+    let cfg = tiny_config();
+    prop::forall(
+        "elision-forecast-bounded",
+        80,
+        |r: &mut Rng| {
+            let depth = 2 + r.below(10) as usize;
+            let floor = 0.5 + r.next_f64() * 2.0;
+            let seed = r.next_u64();
+            (depth, floor, seed)
+        },
+        |&(depth, floor, seed)| {
+            let mut rng = Rng::new(seed);
+            let blocks = cfg.num_blocks;
+            let taus = vec![vec![0.9; depth]; blocks];
+            let accepts: Vec<Vec<f64>> = (0..blocks)
+                .map(|_| {
+                    (0..depth).map(|_| rng.next_f64() * 8.0).collect()
+                })
+                .collect();
+            let profile = Profile::step_block(taus, Metric::Q1)
+                .with_accepts(accepts);
+            let naive =
+                CostModel::new(None).forecast(Some(&profile), &cfg);
+            let elided = CostModel::new(Some(floor))
+                .forecast(Some(&profile), &cfg);
+            if !naive.calibrated || !elided.calibrated {
+                return Err("seeded profile must yield a calibrated forecast".into());
+            }
+            if elided.total_passes > naive.total_passes {
+                return Err(format!(
+                    "elision-aware forecast {} > naive {} (depth {depth}, floor {floor:.2})",
+                    elided.total_passes, naive.total_passes
+                ));
+            }
+            // both must still pay the per-block full passes
+            if elided.total_passes < blocks {
+                return Err("forecast lost the full-pass floor".into());
+            }
+            Ok(())
+        },
+    );
+}

@@ -95,6 +95,7 @@ fn fleet_calibrates_once_with_token_identical_outputs() {
                 task: "synth-math".into(),
                 prompt: prompt.into(),
                 policy: SPEC.into(),
+                slo_ms: None,
             })
         })
         .collect();

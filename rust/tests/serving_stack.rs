@@ -101,6 +101,7 @@ fn mixed_policies_in_one_batch() {
                 task: "synth-math".into(),
                 prompt: format!("Q: {i}+3=?"),
                 policy: pol.to_string(),
+                slo_ms: None,
             }),
         ));
     }

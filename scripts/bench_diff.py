@@ -23,6 +23,13 @@ strictly fewer passes than its matched elide-off row. These run on the
 deterministic analytic simulator, so violations are hard errors even
 under a seed baseline.
 
+Predictive-admission rows (cache "fifo"/"predictive", DESIGN.md §15)
+carry predicted_steps_p50 / forecast_abs_err_p95 / shed_rate and get the
+same treatment: the forecast error must be a finite non-negative number,
+the median forecast a positive pass count, and the shed rate exactly 0 —
+the bench never configures a watermark or SLO, so any shed is a bug, not
+noise. Hard errors in BOTH artifacts, even under a seed baseline.
+
 Exit codes: 0 pass/warn-only, 1 regression, 2 usage or schema error.
 Stdlib only.
 """
@@ -31,6 +38,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import math
 import sys
 
 SCHEMA = 2
@@ -110,6 +118,63 @@ def check_elision(doc, path):
     return problems
 
 
+def check_predictive(doc, path):
+    """Self-consistency of FIFO-vs-predictive admission rows (cache
+    "fifo"/"predictive", DESIGN.md §15).
+
+    The admission A/B runs on the deterministic analytic simulator with no
+    shed watermark or SLO budget configured, so these are hard invariants,
+    not runner-noise measurements: both rows must carry the
+    predictive-scheduling fields, forecast_abs_err_p95 must be a finite
+    non-negative number (an empty forecast-error histogram serializes as
+    null — the cost model never scored a retirement), predicted_steps_p50
+    must be a positive pass count, and shed_rate must be exactly 0 — the
+    guardrails firing with nothing armed is a bug. Violations are errors
+    even under a "seed" baseline. Artifacts predating the predictive rows
+    (no fifo/predictive cache labels) pass vacuously.
+    """
+    problems = []
+    rows = {key(r): r for r in doc["rows"]}
+    fields = ("predicted_steps_p50", "forecast_abs_err_p95", "shed_rate")
+    for k, pred in rows.items():
+        policy, cache, residency, rate = k
+        if cache != "predictive":
+            continue
+        fifo = rows.get((policy, "fifo", residency, rate))
+        if fifo is None:
+            problems.append(f"{path}: {fmt_key(k)} has no matching fifo row")
+            continue
+        missing = [
+            f"{path}: {label} row for {policy} @{rate}rps has no numeric {field}"
+            for field in fields
+            for row, label in ((pred, "predictive"), (fifo, "fifo"))
+            if not isinstance(row.get(field), (int, float))
+        ]
+        if missing:
+            problems.extend(missing)
+            continue
+        for row, label in ((pred, "predictive"), (fifo, "fifo")):
+            where = f"{path}: {label} row for {policy} @{rate}rps"
+            err = float(row["forecast_abs_err_p95"])
+            if not math.isfinite(err) or err < 0:
+                problems.append(
+                    f"{where} has forecast_abs_err_p95 {err!r} — must be a"
+                    " finite non-negative pass count"
+                )
+            p50 = float(row["predicted_steps_p50"])
+            if not math.isfinite(p50) or p50 <= 0:
+                problems.append(
+                    f"{where} has predicted_steps_p50 {p50!r} — forecasts"
+                    " were never stamped at admission"
+                )
+            if float(row["shed_rate"]) != 0.0:
+                problems.append(
+                    f"{where} shed {row['shed_rate']} of requests with no"
+                    " watermark or SLO configured"
+                )
+    return problems
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("baseline")
@@ -126,10 +191,13 @@ def main(argv=None):
     cur = load(args.current)
     warn_only = base.get("provenance") == "seed"
 
-    elision_problems = check_elision(base, args.baseline) + check_elision(
-        cur, args.current
+    hard_problems = (
+        check_elision(base, args.baseline)
+        + check_elision(cur, args.current)
+        + check_predictive(base, args.baseline)
+        + check_predictive(cur, args.current)
     )
-    for p in elision_problems:
+    for p in hard_problems:
         print(f"error: {p}")
 
     base_rows = {key(r): r for r in base["rows"]}
@@ -164,10 +232,10 @@ def main(argv=None):
         f"\n{len(matched)} row(s) compared, {len(regressions)} beyond "
         f"-{args.threshold:.0%} tokens/s"
     )
-    if elision_problems:
+    if hard_problems:
         # deterministic-sim invariants, not throughput noise: never waived
         # by a seed baseline
-        print("elision self-consistency FAILED")
+        print("bench self-consistency FAILED")
         return 1
     if regressions and warn_only:
         print(
