@@ -328,6 +328,107 @@ def test_artifacts_without_predictive_rows_pass_vacuously(tmp_path):
     assert bench_diff.check_predictive(doc, "x.json") == []
 
 
+def fleet_rows(
+    failover_ok=6, steady_shed=0.0, failover_tps=7200.0, drop_steady=False
+):
+    """A matched fleet-steady/fleet-failover pair as emitted by the
+    bench's fleet-tier A/B section (DESIGN.md §16)."""
+    rows = []
+    for cache in ("fleet-steady", "fleet-failover"):
+        if cache == "fleet-steady" and drop_steady:
+            continue
+        rows.append(
+            {
+                "policy": "static:0.9",
+                "cache": cache,
+                "residency": "sim",
+                "rate": 1000000,
+                "ok": 6 if cache == "fleet-steady" else failover_ok,
+                "n": 6,
+                "p50_ms": 3.5,
+                "p95_ms": 7.0 if cache == "fleet-steady" else 14.0,
+                "p99_ms": 9.0 if cache == "fleet-steady" else 19.0,
+                "ttft_p50_ms": 1.2,
+                "ttft_p95_ms": 2.6,
+                "ttft_p99_ms": 3.1,
+                "tok_p50_ms": 0.11,
+                "tok_p95_ms": 0.25,
+                "tok_p99_ms": 0.35,
+                "tokens_per_sec": (
+                    9000.0 if cache == "fleet-steady" else failover_tps
+                ),
+                "bytes_per_token": 160.0,
+                "cache_upload_bytes": 0,
+                "fused_frac": 0.0,
+                "bytes_per_step": 950.0,
+                "steps_executed": 96.0,
+                "steps_elided": 0.0,
+                "admission_p95_ms": 0.0,
+                "predicted_steps_p50": 0.0,
+                "forecast_abs_err_p95": 0.0,
+                "shed_rate": steady_shed if cache == "fleet-steady" else 0.0,
+                "occ_mean": 1.0,
+                "occ_peak": 1,
+            }
+        )
+    return rows
+
+
+def with_fleet(doc, **kwargs):
+    doc = copy.deepcopy(doc)
+    doc["rows"].extend(fleet_rows(**kwargs))
+    return doc
+
+
+def test_consistent_fleet_rows_pass(tmp_path):
+    doc = with_fleet(make_doc({"osdt": 900.0}))
+    assert run(tmp_path, doc, copy.deepcopy(doc)) == 0
+
+
+def test_fleet_failover_dropping_requests_fails_even_on_seed(tmp_path):
+    # zero-drop failover is a hard invariant, never waived by provenance
+    base = with_fleet(make_doc({"osdt": 900.0}, provenance="seed"))
+    cur = with_fleet(
+        make_doc({"osdt": 900.0}, provenance="seed"), failover_ok=5
+    )
+    assert run(tmp_path, base, cur) == 1
+
+
+def test_fleet_steady_shedding_fails(tmp_path):
+    doc = with_fleet(make_doc({"osdt": 900.0}))
+    cur = with_fleet(make_doc({"osdt": 900.0}), steady_shed=0.2)
+    assert run(tmp_path, doc, cur) == 1
+
+
+def test_fleet_zero_throughput_fails(tmp_path):
+    doc = with_fleet(make_doc({"osdt": 900.0}))
+    cur = with_fleet(make_doc({"osdt": 900.0}), failover_tps=0.0)
+    assert run(tmp_path, doc, cur) == 1
+
+
+def test_fleet_failover_without_matching_steady_row_fails(tmp_path):
+    doc = with_fleet(make_doc({"osdt": 900.0}))
+    cur = with_fleet(make_doc({"osdt": 900.0}), drop_steady=True)
+    assert run(tmp_path, doc, cur) == 1
+
+
+def test_fleet_row_missing_fields_fails(tmp_path):
+    doc = with_fleet(make_doc({"osdt": 900.0}))
+    cur = copy.deepcopy(doc)
+    for row in cur["rows"]:
+        if row["cache"] == "fleet-failover":
+            del row["ok"]
+            del row["shed_rate"]
+    assert run(tmp_path, doc, cur) == 1
+
+
+def test_artifacts_without_fleet_rows_pass_vacuously(tmp_path):
+    # pre-fleet artifacts carry no fleet-* rows and must keep gating
+    doc = make_doc({"osdt": 900.0})
+    assert run(tmp_path, doc, copy.deepcopy(doc)) == 0
+    assert bench_diff.check_fleet(doc, "x.json") == []
+
+
 def test_committed_snapshot_is_valid_and_warn_only(tmp_path):
     """The snapshot in bench/trajectory/ must parse, be schema 2, and be
     marked as bootstrap (warn-only) until CI replaces it with a measured
@@ -354,11 +455,14 @@ def test_committed_snapshot_is_valid_and_warn_only(tmp_path):
             "tok_p99_ms",
         ):
             assert isinstance(row[f], (int, float)), f"{f} missing in {row}"
-    # the elision and admission A/B pairs must be present and self-consistent
+    # the elision, admission, and fleet A/B pairs must be present and
+    # self-consistent
     caches = {r["cache"] for r in doc["rows"]}
     assert {"elide-off", "elide-on"} <= caches
     assert {"fifo", "predictive"} <= caches
+    assert {"fleet-steady", "fleet-failover"} <= caches
     assert bench_diff.check_elision(doc, str(snap)) == []
     assert bench_diff.check_predictive(doc, str(snap)) == []
+    assert bench_diff.check_fleet(doc, str(snap)) == []
     # diffing the snapshot against itself must pass its own gate
     assert bench_diff.main([str(snap), str(snap)]) == 0

@@ -43,11 +43,13 @@ use osdt::cache::{CacheConfig, Residency};
 use osdt::config::Args;
 use osdt::coordinator::{Coordinator, CoordinatorConfig, Request};
 use osdt::decode::ForwardModel;
+use osdt::fleet::{FleetRouter, ReplicaSpec, RouterConfig};
 use osdt::model::{fixtures::tiny_config, ModelConfig};
 use osdt::policy::{
     Acquired, DynamicMode, Metric, Profile, ProfileKey, ProfileRegistry,
 };
 use osdt::runtime::ModelRuntime;
+use osdt::server::{Client, RetryPolicy, Server};
 use osdt::sim::SimModel;
 use osdt::util::json::Json;
 use osdt::util::stats::Histogram;
@@ -488,6 +490,202 @@ fn shared_prefix_datasets(k: usize) -> Vec<Dataset> {
     }]
 }
 
+/// One fleet-tier run plus the router counters the §16 inline assertions
+/// need alongside the measured point.
+struct FleetOutcome {
+    point: Point,
+    retries: u64,
+    replica_failures: u64,
+}
+
+/// Drive the shared arrival trace through the process-tier router
+/// (DESIGN.md §16): two in-process sim replicas on the same seed behind a
+/// real `FleetRouter` on TCP, measured from a retrying line-protocol
+/// client. `kill_at` tears down replica 0 (server + coordinator)
+/// immediately before that trace index, so the router must notice the
+/// transport failure mid-trace and fail the request over to the survivor.
+///
+/// The admission/forecast histograms live inside each replica's
+/// coordinator and are not observable through the wire, so those Point
+/// fields are recorded as 0 here — diff tooling never gates them on
+/// fleet rows.
+fn run_fleet_point(
+    label: &'static str,
+    kill_at: Option<usize>,
+    model_cfg: &ModelConfig,
+    datasets: &[Dataset],
+    n: usize,
+    rate: f64,
+    seed: u64,
+) -> Result<FleetOutcome> {
+    let mut replicas: Vec<Option<(Server, Arc<Coordinator>)>> = Vec::new();
+    let mut specs = Vec::new();
+    for id in 0..2 {
+        // both replicas share the sim seed, so completions are
+        // token-identical no matter which one serves a request
+        let coord = Arc::new(Coordinator::start(
+            CoordinatorConfig::default(),
+            model_cfg.clone(),
+            |_| Ok(SimModel::math_like(5)),
+        )?);
+        let server = Server::start("127.0.0.1:0", coord.clone())?;
+        specs.push(ReplicaSpec { id, addr: server.addr.to_string() });
+        replicas.push(Some((server, coord)));
+    }
+    // metric handles outlive the teardown of their coordinator: the dead
+    // replica's counters freeze at death and still sum correctly
+    let coords: Vec<Arc<Coordinator>> = replicas
+        .iter()
+        .map(|r| r.as_ref().unwrap().1.clone())
+        .collect();
+    let router = FleetRouter::start(RouterConfig {
+        replicas: specs,
+        health_interval: Duration::from_millis(50),
+        request_timeout: Duration::from_secs(10),
+        max_retries: 4,
+        backoff_base: Duration::from_millis(5),
+        backoff_max: Duration::from_millis(40),
+        ..RouterConfig::default()
+    })?;
+    let mut client = Client::connect(router.addr)?;
+    let retry = RetryPolicy {
+        max_retries: 6,
+        backoff_base: Duration::from_millis(10),
+        backoff_max: Duration::from_millis(80),
+        seed,
+    };
+    let policy = "static:0.9";
+    // warm-up outside the timed region, mirroring `run_point`
+    for ds in datasets {
+        let r = client.generate_with_retry(
+            &ds.task,
+            &ds.examples[0].prompt,
+            policy,
+            &retry,
+        )?;
+        if let Some(e) = r.error {
+            bail!("fleet warm-up failed: {e}");
+        }
+    }
+    std::thread::sleep(STATS_SETTLE);
+    let c0 = |name: &str| -> u64 {
+        coords.iter().map(|c| c.metrics.counter_value(name)).sum()
+    };
+    let steps0 = c0("scheduler_steps");
+    let seq_steps0 = c0("scheduled_seq_steps");
+    let up0 = c0("bytes_uploaded");
+    let down0 = c0("bytes_downloaded");
+    let cache_up0 = c0("cache_bytes_uploaded");
+    let window0 = c0("window_passes");
+    let fused0 = c0("fused_window_passes");
+    let saved0 = c0("prefix_sharing_saved_full_passes");
+    let full0 = c0("full_passes");
+    let elided0 = c0("steps_elided");
+
+    let trace = mixed_trace(datasets, rate, n, seed);
+    let mut lat = Histogram::latency();
+    let mut ttft = Histogram::latency();
+    let mut tok = Histogram::latency();
+    let t0 = Instant::now();
+    let mut ok = 0;
+    let mut completions = Vec::with_capacity(trace.len());
+    for (i, r) in trace.iter().enumerate() {
+        if Some(i) == kill_at {
+            if let Some((server, coord)) = replicas[0].take() {
+                // closing the listener is what kills the replica from the
+                // router's perspective; the idle coordinator's workers are
+                // joined when `coords` drops at the end of the run
+                server.stop();
+                drop(coord);
+            }
+        }
+        let due = Duration::from_secs_f64(r.at);
+        if let Some(wait) = due.checked_sub(t0.elapsed()) {
+            std::thread::sleep(wait);
+        }
+        let sent = Instant::now();
+        let resp =
+            client.generate_with_retry(&r.task, &r.prompt, policy, &retry)?;
+        let e2e_us = sent.elapsed().as_secs_f64() * 1e6;
+        if resp.error.is_none() {
+            ok += 1;
+            ttft.record(resp.ttft_ms * 1e3);
+            tok.record(e2e_us / model_cfg.gen_len as f64);
+        }
+        completions.push(resp.completion);
+        lat.record(e2e_us);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    std::thread::sleep(STATS_SETTLE);
+    let steps = (c0("scheduler_steps") - steps0).max(1);
+    let seq_steps = c0("scheduled_seq_steps") - seq_steps0;
+    let transferred =
+        (c0("bytes_uploaded") - up0) + (c0("bytes_downloaded") - down0);
+    let cache_upload_bytes = c0("cache_bytes_uploaded") - cache_up0;
+    let window_passes = c0("window_passes") - window0;
+    let fused_passes = c0("fused_window_passes") - fused0;
+    let saved_passes = c0("prefix_sharing_saved_full_passes") - saved0;
+    let full_passes = c0("full_passes") - full0;
+    let steps_elided = c0("steps_elided") - elided0;
+    let tokens = (ok * model_cfg.gen_len).max(1);
+    let rm = router.metrics();
+    let outcome = FleetOutcome {
+        point: Point {
+            policy: policy.to_string(),
+            cache: label,
+            residency: "sim",
+            rate,
+            ok,
+            n,
+            p50_ms: lat.quantile(0.5) / 1e3,
+            p95_ms: lat.quantile(0.95) / 1e3,
+            p99_ms: lat.quantile(0.99) / 1e3,
+            ttft_p50_ms: ttft.quantile(0.5) / 1e3,
+            ttft_p95_ms: ttft.quantile(0.95) / 1e3,
+            ttft_p99_ms: ttft.quantile(0.99) / 1e3,
+            tok_p50_ms: tok.quantile(0.5) / 1e3,
+            tok_p95_ms: tok.quantile(0.95) / 1e3,
+            tok_p99_ms: tok.quantile(0.99) / 1e3,
+            tokens_per_sec: (ok * model_cfg.gen_len) as f64 / wall,
+            bytes_per_token: transferred as f64 / tokens as f64,
+            cache_upload_bytes,
+            fused_frac: fused_passes as f64 / window_passes.max(1) as f64,
+            bytes_per_step: transferred as f64 / steps as f64,
+            prefix_hit_rate: saved_passes as f64 / ok.max(1) as f64,
+            steps_executed: full_passes + window_passes,
+            steps_elided,
+            admission_p95_ms: 0.0,
+            predicted_steps_p50: 0.0,
+            forecast_abs_err_p95: 0.0,
+            shed_rate: rm.counter_value("fleet_requests_shed") as f64
+                / n as f64,
+            occ_mean: seq_steps as f64 / steps as f64,
+            occ_peak: coords
+                .iter()
+                .map(|c| {
+                    c.metrics
+                        .gauge("batch_occupancy_peak")
+                        .load(Ordering::Relaxed)
+                })
+                .max()
+                .unwrap_or(0),
+            completions,
+        },
+        retries: rm.counter_value("fleet_request_retries"),
+        replica_failures: rm.counter_value("fleet_replica_failures"),
+    };
+    router.stop();
+    for slot in replicas.iter_mut() {
+        if let Some((server, coord)) = slot.take() {
+            server.stop();
+            drop(coord);
+        }
+    }
+    // last Arcs: dropping them joins each coordinator's workers
+    drop(coords);
+    Ok(outcome)
+}
+
 fn main() -> Result<()> {
     osdt::util::logging::init();
     let args = Args::parse(
@@ -917,6 +1115,81 @@ fn main() -> Result<()> {
         );
     }
     points.extend(sched_points);
+
+    // --- Fleet tier A/B (DESIGN.md §16): the same trace driven through
+    // the process-tier router over TCP, steady (both replicas up) vs
+    // failover (replica 0 torn down mid-trace). Both arms run burst
+    // arrivals on sim replicas sharing one seed, so failover is pure
+    // rerouting: completions must be token-identical across arms and no
+    // request may be dropped — the client's jittered-backoff retries plus
+    // the router's transport-failure retries absorb the death entirely.
+    // The arms always run on the simulator (the fleet tier is process
+    // topology, not a model path), so full mode needs no artifacts here.
+    let fleet_cfg = tiny_config();
+    let fleet_data = sim_datasets();
+    let (fleet_n, fleet_rate) = (n, 1e6);
+    let steady = run_fleet_point(
+        "fleet-steady",
+        None,
+        &fleet_cfg,
+        &fleet_data,
+        fleet_n,
+        fleet_rate,
+        seed,
+    )?;
+    let failover = run_fleet_point(
+        "fleet-failover",
+        Some(fleet_n / 2),
+        &fleet_cfg,
+        &fleet_data,
+        fleet_n,
+        fleet_rate,
+        seed,
+    )?;
+    {
+        let (s, f) = (&steady.point, &failover.point);
+        if s.ok != fleet_n {
+            bail!("fleet steady arm dropped requests: {}/{fleet_n}", s.ok);
+        }
+        if f.ok != fleet_n {
+            bail!(
+                "fleet failover dropped requests: {}/{fleet_n} — retries \
+                 did not absorb the replica death",
+                f.ok
+            );
+        }
+        if s.completions != f.completions {
+            bail!(
+                "failover changed completions — rerouting to the survivor \
+                 corrupted tokens"
+            );
+        }
+        if steady.replica_failures != 0 || steady.retries != 0 {
+            bail!(
+                "steady fleet arm saw {} replica failure(s) and {} \
+                 retrie(s) with nobody killed",
+                steady.replica_failures,
+                steady.retries
+            );
+        }
+        // the killed replica is noticed either by a failed forward (which
+        // increments the retry counter) or by the next health ping; burst
+        // arrivals make the former overwhelmingly likely, but only the
+        // disjunction is deterministic
+        if failover.replica_failures == 0 && failover.retries == 0 {
+            bail!("replica death mid-trace was never noticed by the router");
+        }
+        eprintln!(
+            "[fleet] steady {:.1} tok/s; failover {:.1} tok/s, {} router \
+             retrie(s), {} replica failure(s), token-identical, 0 dropped",
+            s.tokens_per_sec,
+            f.tokens_per_sec,
+            failover.retries,
+            failover.replica_failures
+        );
+    }
+    points.push(steady.point);
+    points.push(failover.point);
 
     let checked = check_token_identity(&points)?;
     if checked > 0 {

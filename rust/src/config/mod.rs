@@ -82,6 +82,10 @@ pub struct ServerConfig {
     pub shed_watermark: usize,
     /// Default per-request deadline budget, ms (0 = none). CLI: `--slo-ms`.
     pub slo_ms: f64,
+    /// Per-connection socket read/write timeout, ms (0 = no timeout): a
+    /// stalled or half-dead peer cannot pin an `osdt-conn` thread
+    /// forever. CLI: `--conn-timeout-ms`.
+    pub conn_timeout_ms: u64,
 }
 
 impl Default for ServerConfig {
@@ -102,6 +106,7 @@ impl Default for ServerConfig {
             align_band: 0,
             shed_watermark: 0,
             slo_ms: 0.0,
+            conn_timeout_ms: 30_000,
         }
     }
 }
@@ -213,6 +218,16 @@ impl Args {
             .and_then(|(_, v)| v.as_deref())
     }
 
+    /// Every occurrence of a repeatable value flag, in order (e.g.
+    /// `serve-fleet --replica=A --replica=B`).
+    pub fn get_all(&self, name: &str) -> Vec<&str> {
+        self.flags
+            .iter()
+            .filter(|(k, _)| k == name)
+            .filter_map(|(_, v)| v.as_deref())
+            .collect()
+    }
+
     pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
         self.get(name).unwrap_or(default)
     }
@@ -311,5 +326,17 @@ mod tests {
     #[test]
     fn args_missing_value_errors() {
         assert!(Args::parse(sv(&["--addr"]), &["addr"]).is_err());
+    }
+
+    #[test]
+    fn args_get_all_keeps_order_and_get_takes_last() {
+        let a = Args::parse(
+            sv(&["--replica=127.0.0.1:1", "--replica=127.0.0.1:2"]),
+            &[],
+        )
+        .unwrap();
+        assert_eq!(a.get_all("replica"), vec!["127.0.0.1:1", "127.0.0.1:2"]);
+        assert_eq!(a.get("replica"), Some("127.0.0.1:2"));
+        assert!(a.get_all("missing").is_empty());
     }
 }

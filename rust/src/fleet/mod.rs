@@ -1,0 +1,36 @@
+//! Fleet tier: a standalone router process in front of N supervised
+//! replica processes (DESIGN.md §16).
+//!
+//! The single-process server (`server::Server`) remains the unit of
+//! execution; this module adds the process topology around it:
+//!
+//! - [`state`] — the supervisor's durable `state.json` (pidfile +
+//!   lockfile + replica table + profile generation mirror) with atomic
+//!   persistence and stale-state detection.
+//! - [`router`] — `serve-fleet`: a thread-per-connection TCP daemon
+//!   speaking the existing JSON line protocol, forwarding each request
+//!   to the least-loaded healthy replica, retrying idempotent requests
+//!   on survivors with jittered exponential backoff, and degrading to
+//!   §15 shedding (finite `retry_after_ms`) when capacity is gone.
+//! - [`supervisor`] — `fleet run`: spawns the router and replicas as
+//!   detached process-group leaders (they survive a supervisor crash),
+//!   heartbeats them, respawns the dead with exponential backoff on
+//!   their original ports, serializes rolling restarts behind router
+//!   drains, and mirrors the ProfileStore generation counter into
+//!   `state.json` so operators can watch cross-process invalidation.
+//!
+//! Profiles stay exactly-once fleet-wide through the cross-process
+//! calibration lease in `policy::registry` (`RegistryConfig::cross_process`)
+//! — replicas share one `--profile-dir` and coordinate through
+//! version-stamped ProfileStore files plus a generation counter, never
+//! through the supervisor (which only observes).
+
+pub mod router;
+pub mod state;
+pub mod supervisor;
+
+pub use router::{
+    probe_ping, roundtrip_line, FleetRouter, ReplicaSpec, RouterConfig,
+};
+pub use state::{FleetState, ReplicaState, StaleState};
+pub use supervisor::{FleetConfig, Supervisor};

@@ -1,0 +1,317 @@
+//! Durable fleet state: `state.json` is the supervisor's pidfile,
+//! lockfile, and replica table in one document.
+//!
+//! The file is written atomically (temp + rename in the same directory)
+//! on every supervisor tick, so readers never observe a torn document.
+//! On startup the supervisor loads any existing file and classifies it
+//! ([`FleetState::staleness`]): a live supervisor PID means a second
+//! supervisor must refuse to start; a dead PID means the previous
+//! supervisor crashed and the file is *stale* — its replica entries are
+//! probed individually and either adopted (still alive) or respawned.
+
+use std::net::TcpListener;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+use crate::util::procfs::pid_alive;
+
+/// `state.json` schema version; bumped on incompatible layout changes.
+pub const FLEET_STATE_SCHEMA: u32 = 1;
+
+/// One replica row in the supervisor's table.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ReplicaState {
+    /// Stable replica index; ports are allocated once per id, so the
+    /// router's replica table never changes across respawns.
+    pub id: usize,
+    pub pid: u32,
+    /// Serving address (`host:port`) the replica listens on.
+    pub addr: String,
+    /// Times this slot has been respawned since the supervisor started.
+    pub respawns: u64,
+}
+
+/// The whole durable fleet document.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FleetState {
+    pub schema: u32,
+    pub supervisor_pid: u32,
+    /// Supervisor control socket (`fleet status` / `rolling-restart` /
+    /// `stop` speak JSON lines here).
+    pub control_addr: String,
+    pub router_pid: u32,
+    pub router_addr: String,
+    /// Mirror of the shared ProfileStore generation counter — bumped
+    /// exactly once per fleet-wide (re)calibration, so operators can
+    /// read invalidation progress without touching the store.
+    pub profile_generation: u64,
+    pub replicas: Vec<ReplicaState>,
+}
+
+/// Startup classification of an existing `state.json`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StaleState {
+    /// No state file: a fresh start.
+    Absent,
+    /// The recorded supervisor PID is alive — a second supervisor must
+    /// not start against the same directory.
+    Live,
+    /// The recorded supervisor PID is dead: the previous supervisor
+    /// crashed (or was SIGKILLed) and left the file behind. Replicas
+    /// listed in it may still be running and should be adopted.
+    Stale,
+}
+
+impl FleetState {
+    pub fn new(control_addr: String) -> FleetState {
+        FleetState {
+            schema: FLEET_STATE_SCHEMA,
+            supervisor_pid: std::process::id(),
+            control_addr,
+            router_pid: 0,
+            router_addr: String::new(),
+            profile_generation: 0,
+            replicas: Vec::new(),
+        }
+    }
+
+    /// Path of `state.json` under a fleet directory.
+    pub fn path_in(dir: &Path) -> PathBuf {
+        dir.join("state.json")
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("schema", Json::Num(self.schema as f64)),
+            ("supervisor_pid", Json::Num(self.supervisor_pid as f64)),
+            ("control_addr", Json::Str(self.control_addr.clone())),
+            (
+                "router",
+                Json::obj(vec![
+                    ("pid", Json::Num(self.router_pid as f64)),
+                    ("addr", Json::Str(self.router_addr.clone())),
+                ]),
+            ),
+            (
+                "profile_generation",
+                Json::Num(self.profile_generation as f64),
+            ),
+            (
+                "replicas",
+                Json::Arr(
+                    self.replicas
+                        .iter()
+                        .map(|r| {
+                            Json::obj(vec![
+                                ("id", Json::Num(r.id as f64)),
+                                ("pid", Json::Num(r.pid as f64)),
+                                ("addr", Json::Str(r.addr.clone())),
+                                ("respawns", Json::Num(r.respawns as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<FleetState> {
+        fn num(j: &Json, k: &str) -> Result<usize> {
+            j.get(k)
+                .and_then(Json::as_usize)
+                .with_context(|| format!("missing/bad field {k:?}"))
+        }
+        fn text(j: &Json, k: &str) -> Result<String> {
+            j.get(k)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .with_context(|| format!("missing/bad field {k:?}"))
+        }
+        let schema = num(j, "schema")? as u32;
+        if schema != FLEET_STATE_SCHEMA {
+            bail!("state.json schema {schema} != {FLEET_STATE_SCHEMA}");
+        }
+        let router = j.get("router").context("missing field \"router\"")?;
+        let rows = j
+            .get("replicas")
+            .and_then(Json::as_arr)
+            .context("missing/bad field \"replicas\"")?;
+        let mut replicas = Vec::new();
+        for r in rows {
+            replicas.push(ReplicaState {
+                id: num(r, "id")?,
+                pid: num(r, "pid")? as u32,
+                addr: text(r, "addr")?,
+                respawns: num(r, "respawns")? as u64,
+            });
+        }
+        Ok(FleetState {
+            schema,
+            supervisor_pid: num(j, "supervisor_pid")? as u32,
+            control_addr: text(j, "control_addr")?,
+            router_pid: num(router, "pid")? as u32,
+            router_addr: text(router, "addr")?,
+            profile_generation: num(j, "profile_generation")? as u64,
+            replicas,
+        })
+    }
+
+    /// Atomically persist to `state.json` under `dir` (temp + rename in
+    /// the same directory, so a crash never leaves a torn file).
+    pub fn save(&self, dir: &Path) -> Result<()> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating fleet dir {}", dir.display()))?;
+        let tmp = dir.join(format!(".state.tmp.{}", std::process::id()));
+        let path = Self::path_in(dir);
+        std::fs::write(&tmp, format!("{}\n", self.to_json()))
+            .with_context(|| format!("writing {}", tmp.display()))?;
+        std::fs::rename(&tmp, &path).with_context(|| {
+            let _ = std::fs::remove_file(&tmp);
+            format!("renaming into {}", path.display())
+        })
+    }
+
+    /// Load `state.json` from `dir`; Ok(None) if absent.
+    pub fn load(dir: &Path) -> Result<Option<FleetState>> {
+        let path = Self::path_in(dir);
+        let text = match std::fs::read_to_string(&path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                return Ok(None)
+            }
+            Err(e) => {
+                return Err(e)
+                    .with_context(|| format!("reading {}", path.display()))
+            }
+        };
+        let j = Json::parse(&text)
+            .with_context(|| format!("parsing {}", path.display()))?;
+        Ok(Some(Self::from_json(&j)?))
+    }
+
+    /// Classify an existing state file for startup stale-detection.
+    pub fn staleness(dir: &Path) -> Result<StaleState> {
+        match Self::load(dir)? {
+            None => Ok(StaleState::Absent),
+            Some(st) if pid_alive(st.supervisor_pid) => Ok(StaleState::Live),
+            Some(_) => Ok(StaleState::Stale),
+        }
+    }
+
+    /// Remove `state.json` (supervisor clean shutdown).
+    pub fn remove(dir: &Path) -> Result<()> {
+        let path = Self::path_in(dir);
+        match std::fs::remove_file(&path) {
+            Ok(()) => Ok(()),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(()),
+            Err(e) => {
+                Err(e).with_context(|| format!("removing {}", path.display()))
+            }
+        }
+    }
+}
+
+/// Allocate a free loopback port: bind :0, read the assignment, drop
+/// the listener. The tiny race window (another process grabbing the
+/// port before our child binds it) is acceptable for the supervisor —
+/// a replica that loses the race fails its first heartbeat and is
+/// respawned on the same port once it frees up.
+pub fn free_port() -> Result<u16> {
+    let l = TcpListener::bind("127.0.0.1:0").context("binding :0")?;
+    Ok(l.local_addr().context("reading bound addr")?.port())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "osdt-fleet-state-{tag}-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn sample() -> FleetState {
+        let mut st = FleetState::new("127.0.0.1:9100".into());
+        st.router_pid = 41;
+        st.router_addr = "127.0.0.1:9101".into();
+        st.profile_generation = 3;
+        st.replicas = vec![
+            ReplicaState {
+                id: 0,
+                pid: 42,
+                addr: "127.0.0.1:9102".into(),
+                respawns: 0,
+            },
+            ReplicaState {
+                id: 1,
+                pid: 43,
+                addr: "127.0.0.1:9103".into(),
+                respawns: 2,
+            },
+        ];
+        st
+    }
+
+    #[test]
+    fn roundtrips_through_json() {
+        let st = sample();
+        let parsed =
+            FleetState::from_json(&Json::parse(&st.to_json().to_string()).unwrap())
+                .unwrap();
+        assert_eq!(parsed, st);
+    }
+
+    #[test]
+    fn save_load_remove() {
+        let dir = tmpdir("slr");
+        let st = sample();
+        st.save(&dir).unwrap();
+        assert_eq!(FleetState::load(&dir).unwrap(), Some(st));
+        FleetState::remove(&dir).unwrap();
+        assert_eq!(FleetState::load(&dir).unwrap(), None);
+        // Idempotent removal.
+        FleetState::remove(&dir).unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn staleness_classification() {
+        let dir = tmpdir("stale");
+        assert_eq!(FleetState::staleness(&dir).unwrap(), StaleState::Absent);
+        // A state file naming our own (live) PID reads as Live.
+        let mut st = sample();
+        st.supervisor_pid = std::process::id();
+        st.save(&dir).unwrap();
+        assert_eq!(FleetState::staleness(&dir).unwrap(), StaleState::Live);
+        // A dead supervisor PID reads as Stale.
+        st.supervisor_pid = u32::MAX;
+        st.save(&dir).unwrap();
+        assert_eq!(FleetState::staleness(&dir).unwrap(), StaleState::Stale);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn rejects_unknown_schema() {
+        let mut j = sample().to_json();
+        if let Json::Obj(m) = &mut j {
+            m.insert("schema".into(), Json::Num(99.0));
+        }
+        assert!(FleetState::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn free_port_is_bindable() {
+        let p = free_port().unwrap();
+        assert!(p > 0);
+        // Immediately rebindable by us (SO_REUSEADDR not even needed on
+        // a cleanly dropped listener).
+        TcpListener::bind(("127.0.0.1", p)).unwrap();
+    }
+}

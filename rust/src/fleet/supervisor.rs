@@ -1,0 +1,941 @@
+//! The fleet supervisor: spawns and babysits one router process plus N
+//! replica processes, all detached into their own process groups so
+//! they survive a supervisor crash (`fleet start` / `fleet run`).
+//!
+//! Robustness mechanics, in the order they matter during an incident:
+//!
+//! - **Durable state** — `state.json` ([`FleetState`]) is persisted
+//!   atomically every heartbeat. On startup an existing file is
+//!   classified: a *live* supervisor PID refuses the second start, a
+//!   *stale* one (previous supervisor crashed) has its replica rows
+//!   probed individually — still-serving replicas are **adopted** on
+//!   their recorded ports, dead ones respawned. Nothing is restarted
+//!   that didn't need to be.
+//! - **Heartbeat** — each tick reaps exited children, probes every
+//!   process (`/proc` liveness + a protocol ping), and respawns the
+//!   dead with jittered exponential backoff per slot, so a crash-looping
+//!   replica cannot hot-spin the supervisor. Ports are allocated once
+//!   per slot; respawns reuse them, so the router's table never changes.
+//! - **Rolling restart** — one replica at a time: drain at the router,
+//!   wait for in-flight work to finish, SIGKILL, respawn on the same
+//!   port, wait healthy, undrain. The heartbeat skips only the slot
+//!   under restart, so an *unrelated* replica dying mid-rolling-restart
+//!   is still auto-respawned.
+//!
+//! The supervisor never touches profiles: replicas share one
+//! `--profile-dir` with `--fleet-locks=on` and coordinate recalibration
+//! among themselves (DESIGN.md §16); the supervisor only mirrors the
+//! store's generation counter into `state.json` for operators.
+
+use std::fs::File;
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::unix::process::CommandExt;
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::fleet::router::{probe_ping, roundtrip_line};
+use crate::fleet::state::{free_port, FleetState, ReplicaState, StaleState};
+use crate::metrics;
+use crate::policy::ProfileStore;
+use crate::util::json::Json;
+use crate::util::procfs::{pid_alive, send_signal};
+use crate::util::rng::Rng;
+
+/// Slot id used for the router (replica ids are dense from 0).
+const ROUTER_SLOT: usize = usize::MAX;
+/// Sentinel for "no replica is under rolling restart".
+const NO_RESTART: usize = usize::MAX - 1;
+
+/// Supervisor configuration (`fleet run` flags map 1:1 onto this).
+#[derive(Clone, Debug)]
+pub struct FleetConfig {
+    /// Fleet home: `state.json`, the shared `profiles/` store, and
+    /// per-process log files all live here.
+    pub dir: PathBuf,
+    /// Binary to spawn for router and replicas (defaults to the
+    /// supervisor's own executable).
+    pub binary: PathBuf,
+    pub replicas: usize,
+    /// Replica model backend (`sim` needs no artifacts; anything else
+    /// must be routable by `serve` via `replica_args`).
+    pub backend: String,
+    /// Shared sim seed — every replica decodes token-identically, which
+    /// is what makes failover transparent in the smoke/chaos tests.
+    pub sim_seed: u64,
+    /// Router listen address (port 0 = allocate once at startup).
+    pub router_addr: String,
+    /// Supervisor control socket (port 0 = ephemeral; recorded in
+    /// `state.json` for `fleet status|stop|rolling-restart`).
+    pub control_addr: String,
+    /// Heartbeat period: dead processes are detected within one.
+    pub heartbeat: Duration,
+    /// First respawn backoff; doubles per consecutive failure up to
+    /// `respawn_max`, jittered into [d/2, d).
+    pub respawn_base: Duration,
+    pub respawn_max: Duration,
+    /// Router per-request retry budget (forwarded to `serve-fleet`).
+    pub max_retries: usize,
+    /// Router per-attempt timeout (forwarded to `serve-fleet`).
+    pub request_timeout: Duration,
+    /// Extra flags appended to every replica's `serve` command line
+    /// (e.g. `--artifacts=...` for a real-model fleet).
+    pub replica_args: Vec<String>,
+    /// Start even if `state.json` names a live supervisor (last resort;
+    /// normally refused).
+    pub force: bool,
+    /// Jitter PRNG seed (deterministic for tests).
+    pub seed: u64,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig {
+            dir: PathBuf::from("fleet-state"),
+            binary: std::env::current_exe()
+                .unwrap_or_else(|_| PathBuf::from("osdt")),
+            replicas: 2,
+            backend: "sim".into(),
+            sim_seed: 5,
+            router_addr: "127.0.0.1:0".into(),
+            control_addr: "127.0.0.1:0".into(),
+            heartbeat: Duration::from_millis(500),
+            respawn_base: Duration::from_millis(200),
+            respawn_max: Duration::from_secs(5),
+            max_retries: 3,
+            request_timeout: Duration::from_secs(30),
+            replica_args: Vec::new(),
+            force: false,
+            seed: 1,
+        }
+    }
+}
+
+/// Command line for one replica process: the ordinary single-process
+/// `serve`, pointed at the shared profile store with cross-process
+/// calibration leases on.
+fn replica_cmdline(cfg: &FleetConfig, addr: &str) -> Vec<String> {
+    let mut args = vec![
+        "serve".to_string(),
+        format!("--addr={addr}"),
+        format!("--backend={}", cfg.backend),
+        format!("--sim-seed={}", cfg.sim_seed),
+        format!("--profile-dir={}", cfg.dir.join("profiles").display()),
+        "--fleet-locks=on".to_string(),
+    ];
+    args.extend(cfg.replica_args.iter().cloned());
+    args
+}
+
+/// Command line for the router process (`serve-fleet`).
+fn router_cmdline(
+    cfg: &FleetConfig,
+    router_addr: &str,
+    replica_addrs: &[String],
+) -> Vec<String> {
+    let mut args =
+        vec!["serve-fleet".to_string(), format!("--addr={router_addr}")];
+    for addr in replica_addrs {
+        args.push(format!("--replica={addr}"));
+    }
+    args.push(format!("--health-interval-ms={}", cfg.heartbeat.as_millis()));
+    args.push(format!(
+        "--request-timeout-ms={}",
+        cfg.request_timeout.as_millis()
+    ));
+    args.push(format!("--max-retries={}", cfg.max_retries));
+    args
+}
+
+/// Jittered exponential respawn backoff for the `exp`-th consecutive
+/// failure of one slot.
+fn respawn_backoff(cfg: &FleetConfig, exp: u32, rng: &mut Rng) -> Duration {
+    let full = cfg
+        .respawn_base
+        .saturating_mul(1u32 << exp.min(16))
+        .min(cfg.respawn_max);
+    full / 2
+        + Duration::from_secs_f64(full.as_secs_f64() / 2.0 * rng.next_f64())
+}
+
+/// One supervised process slot (replica or the router).
+struct Slot {
+    /// Replica id, or [`ROUTER_SLOT`] for the router.
+    id: usize,
+    addr: String,
+    pid: u32,
+    /// Present when this supervisor spawned the process; adopted
+    /// processes (stale-state recovery) have no child handle and are
+    /// managed purely by PID.
+    child: Option<Child>,
+    respawns: u64,
+    fail_streak: u32,
+    backoff_exp: u32,
+    next_respawn_at: Instant,
+}
+
+impl Slot {
+    fn adopted(id: usize, addr: String, pid: u32, respawns: u64) -> Slot {
+        Slot {
+            id,
+            addr,
+            pid,
+            child: None,
+            respawns,
+            fail_streak: 0,
+            backoff_exp: 0,
+            next_respawn_at: Instant::now(),
+        }
+    }
+
+    fn label(&self) -> String {
+        if self.id == ROUTER_SLOT {
+            "router".to_string()
+        } else {
+            format!("replica {}", self.id)
+        }
+    }
+}
+
+struct Inner {
+    cfg: FleetConfig,
+    metrics: Arc<metrics::Registry>,
+    store: ProfileStore,
+    control_addr: String,
+    router_addr: String,
+    /// Replica addresses in id order — fixed at startup, reused across
+    /// respawns, fed to every router spawn.
+    replica_addrs: Vec<String>,
+    /// Replica slots in id order, router slot last.
+    slots: Mutex<Vec<Slot>>,
+    rng: Mutex<Rng>,
+    restarting: AtomicUsize,
+    stop: AtomicBool,
+}
+
+impl Inner {
+    /// Spawn one detached worker process appending to `<dir>/<tag>.log`.
+    fn spawn_process(&self, tag: &str, args: &[String]) -> Result<Child> {
+        let log_path = self.cfg.dir.join(format!("{tag}.log"));
+        let log = File::options()
+            .create(true)
+            .append(true)
+            .open(&log_path)
+            .with_context(|| format!("opening {}", log_path.display()))?;
+        let err = log.try_clone().context("cloning log handle")?;
+        let mut cmd = Command::new(&self.cfg.binary);
+        cmd.args(args)
+            .stdin(Stdio::null())
+            .stdout(Stdio::from(log))
+            .stderr(Stdio::from(err))
+            // New process group: a supervisor crash (or its controlling
+            // terminal going away) must not take the workers down.
+            .process_group(0);
+        cmd.spawn().with_context(|| {
+            format!("spawning {} {}", self.cfg.binary.display(), args.join(" "))
+        })
+    }
+
+    fn spawn_slot_process(&self, id: usize, addr: &str) -> Result<Child> {
+        if id == ROUTER_SLOT {
+            self.spawn_process(
+                "router",
+                &router_cmdline(&self.cfg, addr, &self.replica_addrs),
+            )
+        } else {
+            self.spawn_process(
+                &format!("replica-{id}"),
+                &replica_cmdline(&self.cfg, addr),
+            )
+        }
+    }
+
+    /// Kill a slot's process (if any) and reap the child handle.
+    fn kill_slot(&self, slot: &mut Slot) {
+        if slot.pid != 0 && pid_alive(slot.pid) {
+            send_signal(slot.pid, "KILL");
+        }
+        if let Some(mut child) = slot.child.take() {
+            let _ = child.kill();
+            let _ = child.wait();
+        }
+    }
+
+    /// Respawn a slot on its original address, with backoff bookkeeping.
+    fn respawn_slot(&self, slot: &mut Slot, now: Instant) {
+        self.kill_slot(slot);
+        match self.spawn_slot_process(slot.id, &slot.addr.clone()) {
+            Ok(child) => {
+                slot.pid = child.id();
+                slot.child = Some(child);
+                slot.respawns += 1;
+                self.metrics.add("fleet_respawns", 1);
+                log::warn!(
+                    "{} respawned on {} (pid {}, respawn #{})",
+                    slot.label(),
+                    slot.addr,
+                    slot.pid,
+                    slot.respawns
+                );
+            }
+            Err(e) => {
+                slot.pid = 0;
+                log::error!("{} respawn failed: {e:#}", slot.label());
+            }
+        }
+        let backoff = respawn_backoff(
+            &self.cfg,
+            slot.backoff_exp,
+            &mut self.rng.lock().unwrap(),
+        );
+        slot.next_respawn_at = now + backoff;
+        slot.backoff_exp = slot.backoff_exp.saturating_add(1);
+    }
+
+    /// One heartbeat: reap, probe, respawn, persist.
+    fn tick(&self) {
+        let probe_to = self.cfg.heartbeat.min(Duration::from_millis(250));
+        let now = Instant::now();
+        let restarting = self.restarting.load(Ordering::Relaxed);
+        {
+            let mut slots = self.slots.lock().unwrap();
+            for slot in slots.iter_mut() {
+                if slot.id == restarting {
+                    continue; // rolling restart owns this slot right now
+                }
+                if let Some(child) = slot.child.as_mut() {
+                    if let Ok(Some(status)) = child.try_wait() {
+                        log::warn!("{} exited: {status}", slot.label());
+                        slot.child = None;
+                    }
+                }
+                let alive = slot.pid != 0 && pid_alive(slot.pid);
+                if alive && probe_ping(&slot.addr, probe_to) {
+                    slot.fail_streak = 0;
+                    slot.backoff_exp = 0;
+                    continue;
+                }
+                slot.fail_streak = slot.fail_streak.saturating_add(1);
+                // A dead PID respawns immediately (subject to backoff);
+                // a live-but-unresponsive one gets a grace heartbeat
+                // before being killed and respawned.
+                if (!alive || slot.fail_streak >= 2)
+                    && now >= slot.next_respawn_at
+                {
+                    self.respawn_slot(slot, now);
+                }
+            }
+        }
+        if let Err(e) = self.persist() {
+            log::warn!("persisting state.json failed: {e:#}");
+        }
+    }
+
+    /// Write the current fleet document to `state.json`.
+    fn persist(&self) -> Result<()> {
+        let mut st = FleetState::new(self.control_addr.clone());
+        st.router_addr = self.router_addr.clone();
+        st.profile_generation = self.store.generation();
+        {
+            let slots = self.slots.lock().unwrap();
+            for s in slots.iter() {
+                if s.id == ROUTER_SLOT {
+                    st.router_pid = s.pid;
+                } else {
+                    st.replicas.push(ReplicaState {
+                        id: s.id,
+                        pid: s.pid,
+                        addr: s.addr.clone(),
+                        respawns: s.respawns,
+                    });
+                }
+            }
+        }
+        st.save(&self.cfg.dir)
+    }
+
+    /// Status document for the control socket (and `fleet status`).
+    fn status_doc(&self) -> Json {
+        let slots = self.slots.lock().unwrap();
+        let mut rows = Vec::new();
+        let mut router = Json::Null;
+        for s in slots.iter() {
+            let doc = Json::obj(vec![
+                ("id", Json::Num(s.id as f64)),
+                ("addr", Json::Str(s.addr.clone())),
+                ("pid", Json::Num(s.pid as f64)),
+                ("alive", Json::Bool(s.pid != 0 && pid_alive(s.pid))),
+                ("respawns", Json::Num(s.respawns as f64)),
+            ]);
+            if s.id == ROUTER_SLOT {
+                router = Json::obj(vec![
+                    ("addr", Json::Str(s.addr.clone())),
+                    ("pid", Json::Num(s.pid as f64)),
+                    ("alive", Json::Bool(s.pid != 0 && pid_alive(s.pid))),
+                ]);
+            } else {
+                rows.push(doc);
+            }
+        }
+        drop(slots);
+        Json::obj(vec![
+            ("supervisor_pid", Json::Num(std::process::id() as f64)),
+            ("router", router),
+            ("replicas", Json::Arr(rows)),
+            (
+                "profile_generation",
+                Json::Num(self.store.generation() as f64),
+            ),
+            (
+                "stale_states_recovered",
+                Json::Num(
+                    self.metrics.counter_value("fleet_stale_states_recovered")
+                        as f64,
+                ),
+            ),
+        ])
+    }
+
+    /// Drain → wait idle → kill → respawn → wait healthy → undrain, for
+    /// one replica. The heartbeat skips exactly this slot meanwhile.
+    fn restart_one(&self, id: usize) -> Result<()> {
+        let router = self.router_addr.clone();
+        let to = Duration::from_secs(2);
+        self.restarting.store(id, Ordering::SeqCst);
+        let done = (|| -> Result<()> {
+            roundtrip_line(
+                &router,
+                &format!(r#"{{"cmd":"drain","replica":{id}}}"#),
+                to,
+            )
+            .context("draining at router")?;
+            // Wait for in-flight work on the drained replica to finish.
+            let deadline = Instant::now() + self.cfg.request_timeout;
+            loop {
+                let status = roundtrip_line(
+                    &router,
+                    r#"{"cmd":"fleet-status"}"#,
+                    to,
+                )?;
+                let outstanding = status
+                    .get("replicas")
+                    .and_then(Json::as_arr)
+                    .context("no replicas in router status")?
+                    .iter()
+                    .find(|r| {
+                        r.get("id").and_then(Json::as_f64)
+                            == Some(id as f64)
+                    })
+                    .and_then(|r| r.get("outstanding"))
+                    .and_then(Json::as_f64)
+                    .unwrap_or(0.0);
+                if outstanding == 0.0 {
+                    break;
+                }
+                if Instant::now() > deadline {
+                    bail!("replica {id} never went idle under drain");
+                }
+                std::thread::sleep(Duration::from_millis(20));
+            }
+            // Kill and respawn on the same port.
+            {
+                let mut slots = self.slots.lock().unwrap();
+                let slot = slots
+                    .iter_mut()
+                    .find(|s| s.id == id)
+                    .with_context(|| format!("no replica {id}"))?;
+                slot.fail_streak = 0;
+                slot.backoff_exp = 0;
+                slot.next_respawn_at = Instant::now();
+                self.respawn_slot(slot, Instant::now());
+            }
+            // Wait for the replacement to serve pings.
+            let addr = {
+                let slots = self.slots.lock().unwrap();
+                slots.iter().find(|s| s.id == id).unwrap().addr.clone()
+            };
+            let deadline = Instant::now() + self.cfg.request_timeout;
+            while !probe_ping(&addr, to) {
+                if Instant::now() > deadline {
+                    bail!("replica {id} not healthy after restart");
+                }
+                std::thread::sleep(Duration::from_millis(20));
+            }
+            Ok(())
+        })();
+        // Always undrain and release the slot, even on failure.
+        let _ = roundtrip_line(
+            &router,
+            &format!(r#"{{"cmd":"undrain","replica":{id}}}"#),
+            to,
+        );
+        self.restarting.store(NO_RESTART, Ordering::SeqCst);
+        done
+    }
+
+    /// Orchestrated rolling restart: every replica, one at a time.
+    fn rolling_restart(&self) -> Result<usize> {
+        self.metrics.add("fleet_rolling_restarts", 1);
+        let ids: Vec<usize> = {
+            let slots = self.slots.lock().unwrap();
+            slots
+                .iter()
+                .filter(|s| s.id != ROUTER_SLOT)
+                .map(|s| s.id)
+                .collect()
+        };
+        for id in &ids {
+            self.restart_one(*id)
+                .with_context(|| format!("rolling restart of replica {id}"))?;
+        }
+        let _ = self.persist();
+        Ok(ids.len())
+    }
+}
+
+/// A running fleet supervisor. [`Supervisor::start`] spawns (or adopts)
+/// the router and replicas, then heartbeats them until `shutdown`.
+pub struct Supervisor {
+    inner: Arc<Inner>,
+    pub control_addr: String,
+    pub router_addr: String,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    shut_down: bool,
+}
+
+impl Supervisor {
+    pub fn start(mut cfg: FleetConfig) -> Result<Supervisor> {
+        std::fs::create_dir_all(&cfg.dir).with_context(|| {
+            format!("creating fleet dir {}", cfg.dir.display())
+        })?;
+        // Startup stale-state detection (DESIGN.md §16).
+        let metrics = Arc::new(metrics::Registry::new());
+        let prior = match FleetState::staleness(&cfg.dir)? {
+            StaleState::Live if !cfg.force => {
+                let st = FleetState::load(&cfg.dir)?.unwrap();
+                bail!(
+                    "a supervisor (pid {}) is already running for {} — \
+                     stop it first or pass --force",
+                    st.supervisor_pid,
+                    cfg.dir.display()
+                );
+            }
+            StaleState::Live => FleetState::load(&cfg.dir)?,
+            StaleState::Stale => {
+                metrics.add("fleet_stale_states_recovered", 1);
+                let st = FleetState::load(&cfg.dir)?;
+                log::warn!(
+                    "stale state.json (dead supervisor {}): probing {} \
+                     recorded replicas for adoption",
+                    st.as_ref().map(|s| s.supervisor_pid).unwrap_or(0),
+                    st.as_ref().map(|s| s.replicas.len()).unwrap_or(0)
+                );
+                st
+            }
+            StaleState::Absent => None,
+        };
+
+        let store = ProfileStore::new(cfg.dir.join("profiles"))?;
+
+        // Excess recorded replicas (a prior, larger fleet) are killed
+        // rather than silently leaked.
+        if let Some(st) = prior.as_ref() {
+            for r in st.replicas.iter().filter(|r| r.id >= cfg.replicas) {
+                if pid_alive(r.pid) {
+                    log::warn!(
+                        "killing surplus recorded replica {} (pid {})",
+                        r.id,
+                        r.pid
+                    );
+                    send_signal(r.pid, "KILL");
+                }
+            }
+            // Reuse the recorded router address so a surviving router
+            // can be adopted instead of orphaned on its old port.
+            if !st.router_addr.is_empty() {
+                cfg.router_addr = st.router_addr.clone();
+            }
+        }
+
+        // Concretize port-0 addresses once; slots keep them forever.
+        if cfg.router_addr.ends_with(":0") {
+            cfg.router_addr = format!("127.0.0.1:{}", free_port()?);
+        }
+        let mut replica_addrs = Vec::with_capacity(cfg.replicas);
+        for id in 0..cfg.replicas {
+            let from_prior = prior
+                .as_ref()
+                .and_then(|st| st.replicas.iter().find(|r| r.id == id))
+                .map(|r| r.addr.clone());
+            match from_prior {
+                Some(addr) => replica_addrs.push(addr),
+                None => {
+                    replica_addrs.push(format!("127.0.0.1:{}", free_port()?))
+                }
+            }
+        }
+
+        // Control socket binds first so `fleet start` can wait on it.
+        let control = TcpListener::bind(&cfg.control_addr)
+            .with_context(|| format!("binding {}", cfg.control_addr))?;
+        let control_addr = control.local_addr()?.to_string();
+        control.set_nonblocking(true)?;
+
+        let inner = Arc::new(Inner {
+            metrics,
+            store,
+            control_addr: control_addr.clone(),
+            router_addr: cfg.router_addr.clone(),
+            replica_addrs: replica_addrs.clone(),
+            slots: Mutex::new(Vec::new()),
+            rng: Mutex::new(Rng::new(cfg.seed ^ 0x5afe_f1ee)),
+            restarting: AtomicUsize::new(NO_RESTART),
+            stop: AtomicBool::new(false),
+            cfg,
+        });
+
+        // Build slots: adopt live recorded processes, spawn the rest.
+        {
+            let probe_to = Duration::from_millis(250);
+            let mut slots = Vec::new();
+            for (id, addr) in replica_addrs.iter().enumerate() {
+                let recorded = prior
+                    .as_ref()
+                    .and_then(|st| st.replicas.iter().find(|r| r.id == id));
+                let adoptable = recorded
+                    .map(|r| pid_alive(r.pid) && probe_ping(&r.addr, probe_to))
+                    .unwrap_or(false);
+                let mut slot = match (adoptable, recorded) {
+                    (true, Some(r)) => {
+                        log::info!(
+                            "adopting live replica {id} (pid {}) on {}",
+                            r.pid,
+                            r.addr
+                        );
+                        Slot::adopted(id, r.addr.clone(), r.pid, r.respawns)
+                    }
+                    _ => Slot::adopted(id, addr.clone(), 0, 0),
+                };
+                if slot.pid == 0 {
+                    let child = inner.spawn_slot_process(id, addr)?;
+                    slot.pid = child.id();
+                    slot.child = Some(child);
+                }
+                slots.push(slot);
+            }
+            // Router slot last; adopt it too when it survived.
+            let router_adoptable = prior
+                .as_ref()
+                .map(|st| {
+                    st.router_addr == inner.router_addr
+                        && pid_alive(st.router_pid)
+                        && probe_ping(&st.router_addr, probe_to)
+                })
+                .unwrap_or(false);
+            let mut router_slot = if router_adoptable {
+                let st = prior.as_ref().unwrap();
+                log::info!(
+                    "adopting live router (pid {}) on {}",
+                    st.router_pid,
+                    st.router_addr
+                );
+                Slot::adopted(
+                    ROUTER_SLOT,
+                    st.router_addr.clone(),
+                    st.router_pid,
+                    0,
+                )
+            } else {
+                Slot::adopted(ROUTER_SLOT, inner.router_addr.clone(), 0, 0)
+            };
+            if router_slot.pid == 0 {
+                let child = inner
+                    .spawn_slot_process(ROUTER_SLOT, &inner.router_addr)?;
+                router_slot.pid = child.id();
+                router_slot.child = Some(child);
+            }
+            slots.push(router_slot);
+            *inner.slots.lock().unwrap() = slots;
+        }
+        inner.persist()?;
+
+        let mut handles = Vec::new();
+        // Heartbeat thread.
+        {
+            let inn = inner.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name("osdt-fleet-heartbeat".into())
+                    .spawn(move || {
+                        while !inn.stop.load(Ordering::Relaxed) {
+                            std::thread::sleep(inn.cfg.heartbeat);
+                            if inn.stop.load(Ordering::Relaxed) {
+                                break;
+                            }
+                            inn.tick();
+                        }
+                    })?,
+            );
+        }
+        // Control socket thread.
+        {
+            let inn = inner.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name("osdt-fleet-control".into())
+                    .spawn(move || {
+                        while !inn.stop.load(Ordering::Relaxed) {
+                            match control.accept() {
+                                Ok((stream, _)) => {
+                                    let inn2 = inn.clone();
+                                    let _ = std::thread::Builder::new()
+                                        .name("osdt-fleet-ctl-conn".into())
+                                        .spawn(move || {
+                                            let _ =
+                                                control_conn(stream, &inn2);
+                                        });
+                                }
+                                Err(e)
+                                    if e.kind()
+                                        == std::io::ErrorKind::WouldBlock =>
+                                {
+                                    std::thread::sleep(Duration::from_millis(
+                                        10,
+                                    ));
+                                }
+                                Err(e) => {
+                                    log::warn!("control accept error: {e}");
+                                    break;
+                                }
+                            }
+                        }
+                    })?,
+            );
+        }
+
+        Ok(Supervisor {
+            control_addr,
+            router_addr: inner.router_addr.clone(),
+            inner,
+            handles,
+            shut_down: false,
+        })
+    }
+
+    /// The supervisor's own metric registry (`fleet_respawns`,
+    /// `fleet_stale_states_recovered`, `fleet_rolling_restarts`).
+    pub fn metrics(&self) -> Arc<metrics::Registry> {
+        self.inner.metrics.clone()
+    }
+
+    /// Block until every replica and the router answer pings, or the
+    /// timeout elapses. Returns whether the fleet came up.
+    pub fn wait_all_healthy(&self, timeout: Duration) -> bool {
+        let deadline = Instant::now() + timeout;
+        let addrs: Vec<String> = {
+            let slots = self.inner.slots.lock().unwrap();
+            slots.iter().map(|s| s.addr.clone()).collect()
+        };
+        loop {
+            let ok = addrs
+                .iter()
+                .all(|a| probe_ping(a, Duration::from_millis(250)));
+            if ok {
+                return true;
+            }
+            if Instant::now() > deadline {
+                return false;
+            }
+            std::thread::sleep(Duration::from_millis(50));
+        }
+    }
+
+    /// Drain/kill/respawn every replica, one at a time.
+    pub fn rolling_restart(&self) -> Result<usize> {
+        self.inner.rolling_restart()
+    }
+
+    /// True once `stop` was requested (control socket or [`Supervisor::stop`]).
+    pub fn stopped(&self) -> bool {
+        self.inner.stop.load(Ordering::Relaxed)
+    }
+
+    /// Request shutdown without tearing down (the run loop calls
+    /// [`Supervisor::shutdown`] after this).
+    pub fn stop(&self) {
+        self.inner.stop.store(true, Ordering::Relaxed);
+    }
+
+    /// Stop supervision, kill every worker, reap, and remove
+    /// `state.json` (clean shutdown — the next start is `Absent`).
+    pub fn shutdown(mut self) {
+        self.teardown();
+    }
+
+    fn teardown(&mut self) {
+        if self.shut_down {
+            return;
+        }
+        self.shut_down = true;
+        self.inner.stop.store(true, Ordering::Relaxed);
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+        let mut slots = self.inner.slots.lock().unwrap();
+        for slot in slots.iter_mut() {
+            self.inner.kill_slot(slot);
+            slot.pid = 0;
+        }
+        drop(slots);
+        let _ = FleetState::remove(&self.inner.cfg.dir);
+    }
+}
+
+impl Drop for Supervisor {
+    fn drop(&mut self) {
+        // Panicking tests must not leak worker processes.
+        self.teardown();
+    }
+}
+
+/// Control-socket connection: JSON lines, one command per line.
+fn control_conn(stream: TcpStream, inn: &Arc<Inner>) -> Result<()> {
+    let reader = BufReader::new(stream.try_clone()?);
+    let mut writer = BufWriter::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let reply = match Json::parse(&line) {
+            Err(e) => {
+                Json::obj(vec![("error", Json::Str(format!("bad json: {e}")))])
+            }
+            Ok(j) => match j.get("cmd").and_then(Json::as_str) {
+                Some("ping") => Json::obj(vec![("pong", Json::Bool(true))]),
+                Some("metrics") => Json::obj(vec![(
+                    "metrics",
+                    Json::Str(inn.metrics.render()),
+                )]),
+                Some("fleet-status") => inn.status_doc(),
+                Some("rolling-restart") => match inn.rolling_restart() {
+                    Ok(n) => {
+                        Json::obj(vec![("restarted", Json::Num(n as f64))])
+                    }
+                    Err(e) => Json::obj(vec![(
+                        "error",
+                        Json::Str(format!("{e:#}")),
+                    )]),
+                },
+                Some("stop") => {
+                    inn.stop.store(true, Ordering::Relaxed);
+                    Json::obj(vec![("stopping", Json::Bool(true))])
+                }
+                Some(other) => Json::obj(vec![(
+                    "error",
+                    Json::Str(format!("unknown cmd {other:?}")),
+                )]),
+                None => Json::obj(vec![(
+                    "error",
+                    Json::Str("control socket takes cmd objects".into()),
+                )]),
+            },
+        };
+        writeln!(writer, "{reply}")?;
+        writer.flush()?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn replica_cmdline_shares_profile_store_and_enables_fleet_locks() {
+        let cfg = FleetConfig {
+            dir: PathBuf::from("/tmp/fleet-x"),
+            sim_seed: 9,
+            replica_args: vec!["--workers=2".into()],
+            ..FleetConfig::default()
+        };
+        let args = replica_cmdline(&cfg, "127.0.0.1:7001");
+        assert_eq!(args[0], "serve");
+        assert!(args.contains(&"--addr=127.0.0.1:7001".to_string()));
+        assert!(args.contains(&"--backend=sim".to_string()));
+        assert!(args.contains(&"--sim-seed=9".to_string()));
+        assert!(args
+            .contains(&"--profile-dir=/tmp/fleet-x/profiles".to_string()));
+        assert!(args.contains(&"--fleet-locks=on".to_string()));
+        // Extra args ride along at the end.
+        assert_eq!(args.last().unwrap(), "--workers=2");
+    }
+
+    #[test]
+    fn router_cmdline_lists_every_replica_in_order() {
+        let cfg = FleetConfig {
+            max_retries: 5,
+            heartbeat: Duration::from_millis(100),
+            ..FleetConfig::default()
+        };
+        let args = router_cmdline(
+            &cfg,
+            "127.0.0.1:7000",
+            &["127.0.0.1:7001".into(), "127.0.0.1:7002".into()],
+        );
+        assert_eq!(args[0], "serve-fleet");
+        assert_eq!(args[1], "--addr=127.0.0.1:7000");
+        assert_eq!(args[2], "--replica=127.0.0.1:7001");
+        assert_eq!(args[3], "--replica=127.0.0.1:7002");
+        assert!(args.contains(&"--health-interval-ms=100".to_string()));
+        assert!(args.contains(&"--max-retries=5".to_string()));
+    }
+
+    #[test]
+    fn respawn_backoff_doubles_and_caps_with_jitter() {
+        let cfg = FleetConfig {
+            respawn_base: Duration::from_millis(100),
+            respawn_max: Duration::from_millis(400),
+            ..FleetConfig::default()
+        };
+        let mut rng = Rng::new(3);
+        for (exp, full_ms) in
+            [(0u32, 100.0f64), (1, 200.0), (2, 400.0), (9, 400.0)]
+        {
+            let d = respawn_backoff(&cfg, exp, &mut rng).as_secs_f64() * 1e3;
+            assert!(
+                d >= full_ms / 2.0 - 1e-9 && d < full_ms + 1e-9,
+                "exp {exp}: {d}ms outside [{}, {})",
+                full_ms / 2.0,
+                full_ms
+            );
+        }
+    }
+
+    #[test]
+    fn second_supervisor_refuses_a_live_state_file() {
+        let dir = std::env::temp_dir().join(format!(
+            "osdt-sup-live-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        // A state file naming our own (live) PID must refuse startup
+        // before any process is spawned.
+        let st = FleetState::new("127.0.0.1:1".into());
+        st.save(&dir).unwrap();
+        let err = Supervisor::start(FleetConfig {
+            dir: dir.clone(),
+            binary: PathBuf::from("/nonexistent-osdt"),
+            ..FleetConfig::default()
+        })
+        .unwrap_err();
+        assert!(err.to_string().contains("already running"), "{err:#}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

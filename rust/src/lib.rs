@@ -36,6 +36,7 @@ pub mod config;
 pub mod coordinator;
 pub mod decode;
 pub mod eval;
+pub mod fleet;
 pub mod metrics;
 pub mod model;
 pub mod policy;

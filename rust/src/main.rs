@@ -1,33 +1,44 @@
 //! `osdt` — CLI for the OSDT diffusion-LM serving stack.
 //!
 //! Subcommands:
-//!   generate   decode one prompt and print the completion
-//!   serve      run the TCP JSON-line server
-//!   eval       accuracy/throughput of a policy over a task's eval split
-//!   calibrate  run Phase-1 calibration for a task and persist the profile
-//!   traces     dump confidence trajectories (Figure 1 raw data)
-//!   info       print model/artifact metadata
+//!   generate     decode one prompt and print the completion
+//!   serve        run the TCP JSON-line server (one replica process)
+//!   serve-fleet  run the fleet router in front of replica processes
+//!   fleet        supervise a fleet: start|run|status|stop|rolling-restart|smoke
+//!   eval         accuracy/throughput of a policy over a task's eval split
+//!   calibrate    run Phase-1 calibration for a task and persist the profile
+//!   traces       dump confidence trajectories (Figure 1 raw data)
+//!   info         print model/artifact metadata
 //!
 //! Common flags: --artifacts DIR (default "artifacts"), --policy SPEC,
 //! --task NAME, --cache, --n N. Policy specs: see `config` module docs.
 
+use std::path::PathBuf;
 use std::sync::Arc;
+use std::time::Duration;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
 use osdt::bench::{self, RunOpts};
 use osdt::cache::{CacheConfig, Residency};
 use osdt::config::{Args, ServerConfig};
 use osdt::coordinator::{Coordinator, CoordinatorConfig};
 use osdt::decode::Engine;
+use osdt::fleet::{
+    FleetConfig, FleetRouter, FleetState, ReplicaSpec, RouterConfig,
+    StaleState, Supervisor,
+};
 use osdt::model::ModelConfig;
 use osdt::policy::{
     Calibrator, DynamicMode, Metric, ProfileRecord, ProfileRegistry, ProfileStore,
     RegistryConfig, StaticThreshold,
 };
 use osdt::runtime::ModelRuntime;
-use osdt::server::Server;
+use osdt::server::{Client, RetryPolicy, Server};
+use osdt::sim::{Chaos, SimModel};
 use osdt::tokenizer::Tokenizer;
+use osdt::util::json::Json;
+use osdt::util::procfs::{pid_alive, send_signal};
 use osdt::workload::Dataset;
 
 const VALUE_FLAGS: &[&str] = &[
@@ -36,6 +47,11 @@ const VALUE_FLAGS: &[&str] = &[
     "refresh-interval", "save", "drift-floor", "ema-alpha", "cache-residency",
     "metrics-addr", "kv-page-len", "prefix-sharing", "step-elision",
     "elide-floor", "admission", "align-band", "shed-watermark", "slo-ms",
+    // serving robustness / fleet tier
+    "backend", "sim-seed", "chaos-die-after", "fleet-locks",
+    "conn-timeout-ms", "replica", "health-interval-ms", "request-timeout-ms",
+    "max-retries", "shed-outstanding", "dir", "replicas", "router-addr",
+    "control-addr", "heartbeat-ms", "replica-arg",
 ];
 
 fn main() {
@@ -53,6 +69,8 @@ fn run(raw: Vec<String>) -> Result<()> {
     match cmd {
         "generate" => cmd_generate(&args),
         "serve" => cmd_serve(&args),
+        "serve-fleet" => cmd_serve_fleet(&args),
+        "fleet" => cmd_fleet(&args),
         "eval" => cmd_eval(&args),
         "calibrate" => cmd_calibrate(&args),
         "traces" => cmd_traces(&args),
@@ -74,7 +92,13 @@ COMMANDS:
   generate   --prompt 'Q: 3+4=?' [--policy static:0.9] [--cache]
   serve      [--addr 127.0.0.1:7474] [--workers 1] [--max-batch 4] [--cache]
              [--profile-dir DIR] [--drift-floor 0.95] [--ema-alpha 0]
-             [--metrics-addr HOST:PORT]
+             [--metrics-addr HOST:PORT] [--backend pjrt|sim]
+             [--conn-timeout-ms 30000] [--fleet-locks on|off]
+  serve-fleet --replica HOST:PORT [--replica ...] [--addr 127.0.0.1:7575]
+             [--health-interval-ms 500] [--max-retries 3]
+             [--request-timeout-ms 30000] [--shed-outstanding 0]
+  fleet      start|run|status|stop|rolling-restart|smoke [--dir fleet-state]
+             [--replicas 2] [--backend sim] [--heartbeat-ms 500] [--force]
   eval       --task synth-math [--policy osdt:block:q1:0.75:0.2] [--n 64]
   calibrate  --task synth-math [--mode block] [--metric q1] [--profile-dir profiles]
   traces     --task synth-math [--n 8] [--tau 0.9]
@@ -111,6 +135,20 @@ PREDICTIVE SCHEDULING (serve):
                         + active, in forward passes) would exceed N (0 = off)
   --slo-ms MS          default per-request deadline budget; requests whose
                         forecast can't meet it are shed with retry_after_ms
+
+FLEET TIER (serve-fleet / fleet, DESIGN.md §16):
+  --backend sim|pjrt   replica model backend; `sim` needs no artifacts and
+                        is what `fleet smoke` and the chaos tests use
+  --sim-seed N         shared sim seed (replicas decode token-identically)
+  --chaos-die-after N  abort this replica process on its N-th forward pass
+                        (deterministic mid-decode death for chaos tests)
+  --fleet-locks on|off cross-process calibration leases + generation-counter
+                        invalidation through the shared --profile-dir
+  --conn-timeout-ms MS per-connection socket timeout on `serve` (0 = off)
+  --dir DIR            fleet home: state.json, shared profiles/, logs
+  --replicas N         replica processes to supervise (default 2)
+  --heartbeat-ms MS    supervisor heartbeat / dead-replica detection period
+  --force              start even if state.json names a live supervisor
 
 POLICY SPECS:
   sequential[:k] | static[:tau] | factor[:f] | osdt:MODE:METRIC:KAPPA:EPS
@@ -178,8 +216,6 @@ fn cmd_generate(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    let dir = args.get_or("artifacts", "artifacts").to_string();
-    let cfg = ModelConfig::load(&dir)?;
     let defaults = ServerConfig::default();
     let scfg = ServerConfig {
         addr: args.get_or("addr", &defaults.addr).to_string(),
@@ -204,6 +240,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         align_band: args.get_parse("align-band", defaults.align_band)?,
         shed_watermark: args.get_parse("shed-watermark", defaults.shed_watermark)?,
         slo_ms: args.get_parse("slo-ms", defaults.slo_ms)?,
+        conn_timeout_ms: args.get_parse("conn-timeout-ms", defaults.conn_timeout_ms)?,
     };
     let ccfg = CoordinatorConfig {
         workers: scfg.workers,
@@ -221,6 +258,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let rcfg = RegistryConfig {
         drift_floor: scfg.drift_floor,
         ema_alpha: scfg.ema_alpha,
+        // Fleet replicas share one --profile-dir: cross-process leases +
+        // generation-counter invalidation (DESIGN.md §16).
+        cross_process: match args.get_or("fleet-locks", "off") {
+            "on" => true,
+            "off" => false,
+            other => bail!("unknown --fleet-locks {other:?} (on|off)"),
+        },
         ..RegistryConfig::default()
     };
     let registry = Arc::new(match &scfg.profile_dir {
@@ -235,24 +279,54 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
         None => ProfileRegistry::with_config(rcfg),
     });
-    let residency = cache_residency(args)?;
-    let coord = Arc::new(Coordinator::start_with_registry(
-        ccfg,
-        cfg,
-        registry,
-        move |wid| {
-            log::info!("worker {wid}: loading runtime from {dir} ({residency:?} KV residency)");
+    let coord = match args.get_or("backend", "pjrt") {
+        "pjrt" => {
+            let dir = args.get_or("artifacts", "artifacts").to_string();
             let cfg = ModelConfig::load(&dir)?;
-            let rt = ModelRuntime::load(&cfg)?;
-            rt.set_residency(residency);
-            Ok(rt)
-        },
-    )?);
+            let residency = cache_residency(args)?;
+            Arc::new(Coordinator::start_with_registry(
+                ccfg,
+                cfg,
+                registry,
+                move |wid| {
+                    log::info!("worker {wid}: loading runtime from {dir} ({residency:?} KV residency)");
+                    let cfg = ModelConfig::load(&dir)?;
+                    let rt = ModelRuntime::load(&cfg)?;
+                    rt.set_residency(residency);
+                    Ok(rt)
+                },
+            )?)
+        }
+        // Artifact-free simulator backend: the fleet smoke/chaos tests
+        // run real replica *processes* without real model weights.
+        "sim" => {
+            let sim_seed = args.get_parse("sim-seed", 5u64)?;
+            let die_after = args.get_parse("chaos-die-after", 0u64)?;
+            let chaos = Chaos::new();
+            if die_after > 0 {
+                chaos.die_after(die_after);
+                log::warn!("chaos armed: abort on forward pass #{die_after}");
+            }
+            Arc::new(Coordinator::start_with_registry(
+                ccfg,
+                osdt::model::fixtures::tiny_config(),
+                registry,
+                move |_wid| {
+                    Ok(SimModel::math_like(sim_seed).with_chaos(chaos.clone()))
+                },
+            )?)
+        }
+        other => bail!("unknown --backend {other:?} (pjrt|sim)"),
+    };
     // Prometheus exposition reads the same registries the coordinator and
     // profile registry mutate — clone the Arcs before `coord` moves into
     // the TCP server.
     let metric_sources = vec![coord.metrics.clone(), coord.registry.metrics().clone()];
-    let server = Server::start(&scfg.addr, coord)?;
+    let server = Server::start_with_timeout(
+        &scfg.addr,
+        coord,
+        Duration::from_millis(scfg.conn_timeout_ms),
+    )?;
     println!("osdt serving on {}", server.addr);
     let _metrics = match &scfg.metrics_addr {
         Some(addr) => {
@@ -264,7 +338,354 @@ fn cmd_serve(args: &Args) -> Result<()> {
     };
     // serve until killed
     loop {
-        std::thread::sleep(std::time::Duration::from_secs(3600));
+        std::thread::sleep(Duration::from_secs(3600));
+    }
+}
+
+fn cmd_serve_fleet(args: &Args) -> Result<()> {
+    let replicas: Vec<ReplicaSpec> = args
+        .get_all("replica")
+        .into_iter()
+        .enumerate()
+        .map(|(id, addr)| ReplicaSpec { id, addr: addr.to_string() })
+        .collect();
+    ensure!(
+        !replicas.is_empty(),
+        "serve-fleet needs at least one --replica HOST:PORT"
+    );
+    let d = RouterConfig::default();
+    let n = replicas.len();
+    let router = FleetRouter::start(RouterConfig {
+        addr: args.get_or("addr", "127.0.0.1:7575").to_string(),
+        replicas,
+        health_interval: Duration::from_millis(
+            args.get_parse("health-interval-ms", 500u64)?,
+        ),
+        request_timeout: Duration::from_millis(
+            args.get_parse("request-timeout-ms", 30_000u64)?,
+        ),
+        max_retries: args.get_parse("max-retries", d.max_retries)?,
+        shed_outstanding: args
+            .get_parse("shed-outstanding", d.shed_outstanding)?,
+        ..d
+    })?;
+    println!("osdt fleet router on {} ({n} replicas)", router.addr);
+    // route until killed (the router lives in background threads)
+    loop {
+        std::thread::sleep(Duration::from_secs(3600));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// fleet: supervise a router + N replica processes (DESIGN.md §16)
+// ---------------------------------------------------------------------------
+
+fn cmd_fleet(args: &Args) -> Result<()> {
+    match args.positional.get(1).map(String::as_str) {
+        Some("run") => fleet_run(args),
+        Some("start") => fleet_start(args),
+        Some("status") => fleet_status(args),
+        Some("stop") => fleet_stop(args),
+        Some("rolling-restart") => fleet_rolling_restart(args),
+        Some("smoke") => fleet_smoke(args),
+        other => bail!(
+            "fleet needs a subcommand (got {other:?}): \
+             start|run|status|stop|rolling-restart|smoke"
+        ),
+    }
+}
+
+fn fleet_config(args: &Args) -> Result<FleetConfig> {
+    let d = FleetConfig::default();
+    Ok(FleetConfig {
+        dir: PathBuf::from(args.get_or("dir", "fleet-state")),
+        replicas: args.get_parse("replicas", d.replicas)?,
+        backend: args.get_or("backend", "sim").to_string(),
+        sim_seed: args.get_parse("sim-seed", d.sim_seed)?,
+        router_addr: args.get_or("router-addr", "127.0.0.1:0").to_string(),
+        control_addr: args.get_or("control-addr", "127.0.0.1:0").to_string(),
+        heartbeat: Duration::from_millis(
+            args.get_parse("heartbeat-ms", d.heartbeat.as_millis() as u64)?,
+        ),
+        max_retries: args.get_parse("max-retries", d.max_retries)?,
+        request_timeout: Duration::from_millis(args.get_parse(
+            "request-timeout-ms",
+            d.request_timeout.as_millis() as u64,
+        )?),
+        replica_args: args
+            .get_all("replica-arg")
+            .into_iter()
+            .map(String::from)
+            .collect(),
+        force: args.has("force"),
+        ..d
+    })
+}
+
+/// Run the supervisor in the foreground (what `fleet start` detaches).
+fn fleet_run(args: &Args) -> Result<()> {
+    let sup = Supervisor::start(fleet_config(args)?)?;
+    println!(
+        "fleet supervisor up: control {} router {}",
+        sup.control_addr, sup.router_addr
+    );
+    while !sup.stopped() {
+        std::thread::sleep(Duration::from_millis(200));
+    }
+    sup.shutdown();
+    println!("fleet supervisor stopped");
+    Ok(())
+}
+
+/// Detach a `fleet run` supervisor and wait for its `state.json`.
+fn fleet_start(args: &Args) -> Result<()> {
+    use std::os::unix::process::CommandExt;
+    let cfg = fleet_config(args)?;
+    if matches!(FleetState::staleness(&cfg.dir)?, StaleState::Live) && !cfg.force
+    {
+        bail!(
+            "a supervisor is already running for {} (fleet stop first, \
+             or --force)",
+            cfg.dir.display()
+        );
+    }
+    std::fs::create_dir_all(&cfg.dir)?;
+    let log = std::fs::File::options()
+        .create(true)
+        .append(true)
+        .open(cfg.dir.join("supervisor.log"))?;
+    let err = log.try_clone()?;
+    let mut cmd = std::process::Command::new(std::env::current_exe()?);
+    cmd.args([
+        "fleet".to_string(),
+        "run".to_string(),
+        format!("--dir={}", cfg.dir.display()),
+        format!("--replicas={}", cfg.replicas),
+        format!("--backend={}", cfg.backend),
+        format!("--sim-seed={}", cfg.sim_seed),
+        format!("--router-addr={}", cfg.router_addr),
+        format!("--control-addr={}", cfg.control_addr),
+        format!("--heartbeat-ms={}", cfg.heartbeat.as_millis()),
+        format!("--max-retries={}", cfg.max_retries),
+        format!("--request-timeout-ms={}", cfg.request_timeout.as_millis()),
+    ])
+    .stdin(std::process::Stdio::null())
+    .stdout(std::process::Stdio::from(log))
+    .stderr(std::process::Stdio::from(err))
+    .process_group(0);
+    if cfg.force {
+        cmd.arg("--force");
+    }
+    for ra in &cfg.replica_args {
+        cmd.arg(format!("--replica-arg={ra}"));
+    }
+    let child = cmd.spawn().context("spawning fleet run")?;
+    let deadline = std::time::Instant::now() + Duration::from_secs(30);
+    loop {
+        if let Ok(Some(st)) = FleetState::load(&cfg.dir) {
+            // Only trust a file written by *our* child (an older stale
+            // file may still be sitting there).
+            if st.supervisor_pid == child.id() {
+                println!(
+                    "fleet up: supervisor pid {} control {} router {}",
+                    st.supervisor_pid, st.control_addr, st.router_addr
+                );
+                return Ok(());
+            }
+        }
+        ensure!(
+            std::time::Instant::now() < deadline,
+            "supervisor did not come up (see {}/supervisor.log)",
+            cfg.dir.display()
+        );
+        std::thread::sleep(Duration::from_millis(100));
+    }
+}
+
+/// Resolve the live control socket from `state.json`.
+fn fleet_control_addr(args: &Args) -> Result<String> {
+    let dir = PathBuf::from(args.get_or("dir", "fleet-state"));
+    let st = FleetState::load(&dir)?.with_context(|| {
+        format!("no state.json under {} (is the fleet running?)", dir.display())
+    })?;
+    ensure!(
+        pid_alive(st.supervisor_pid),
+        "state.json names a dead supervisor (pid {}) — stale state; \
+         `fleet start` recovers it",
+        st.supervisor_pid
+    );
+    Ok(st.control_addr)
+}
+
+fn fleet_status(args: &Args) -> Result<()> {
+    let addr = fleet_control_addr(args)?;
+    let j = osdt::fleet::roundtrip_line(
+        &addr,
+        r#"{"cmd":"fleet-status"}"#,
+        Duration::from_secs(5),
+    )?;
+    if let Some(e) = j.get("error").and_then(Json::as_str) {
+        bail!("supervisor error: {e}");
+    }
+    println!(
+        "supervisor pid {}  profile generation {}",
+        j.get("supervisor_pid").and_then(Json::as_f64).unwrap_or(0.0) as u64,
+        j.get("profile_generation").and_then(Json::as_f64).unwrap_or(0.0)
+            as u64,
+    );
+    if let Some(r) = j.get("router") {
+        println!(
+            "router   pid {:>7}  {}  alive={}",
+            r.get("pid").and_then(Json::as_f64).unwrap_or(0.0) as u64,
+            r.get("addr").and_then(Json::as_str).unwrap_or("?"),
+            r.get("alive").and_then(Json::as_bool).unwrap_or(false),
+        );
+    }
+    for row in j.get("replicas").and_then(Json::as_arr).unwrap_or(&[]) {
+        println!(
+            "replica {} pid {:>7}  {}  alive={} respawns={}",
+            row.get("id").and_then(Json::as_f64).unwrap_or(0.0) as u64,
+            row.get("pid").and_then(Json::as_f64).unwrap_or(0.0) as u64,
+            row.get("addr").and_then(Json::as_str).unwrap_or("?"),
+            row.get("alive").and_then(Json::as_bool).unwrap_or(false),
+            row.get("respawns").and_then(Json::as_f64).unwrap_or(0.0) as u64,
+        );
+    }
+    Ok(())
+}
+
+fn fleet_stop(args: &Args) -> Result<()> {
+    let dir = PathBuf::from(args.get_or("dir", "fleet-state"));
+    let st = FleetState::load(&dir)?
+        .with_context(|| format!("no state.json under {}", dir.display()))?;
+    let addr = fleet_control_addr(args)?;
+    let _ = osdt::fleet::roundtrip_line(
+        &addr,
+        r#"{"cmd":"stop"}"#,
+        Duration::from_secs(5),
+    )?;
+    let deadline = std::time::Instant::now() + Duration::from_secs(30);
+    while pid_alive(st.supervisor_pid) {
+        ensure!(
+            std::time::Instant::now() < deadline,
+            "supervisor pid {} did not exit",
+            st.supervisor_pid
+        );
+        std::thread::sleep(Duration::from_millis(100));
+    }
+    println!("fleet stopped");
+    Ok(())
+}
+
+fn fleet_rolling_restart(args: &Args) -> Result<()> {
+    let addr = fleet_control_addr(args)?;
+    // Serialized drains can legitimately take a while under load.
+    let j = osdt::fleet::roundtrip_line(
+        &addr,
+        r#"{"cmd":"rolling-restart"}"#,
+        Duration::from_secs(300),
+    )?;
+    if let Some(e) = j.get("error").and_then(Json::as_str) {
+        bail!("rolling restart failed: {e}");
+    }
+    println!(
+        "rolling restart complete: {} replica(s) cycled",
+        j.get("restarted").and_then(Json::as_f64).unwrap_or(0.0) as u64
+    );
+    Ok(())
+}
+
+/// Self-contained end-to-end check: start a 2-replica sim fleet in a
+/// temp dir, SIGKILL one replica mid-service, assert transparent
+/// failover and respawn, tear everything down. Exits non-zero on any
+/// violated invariant — `scripts/check_rust.sh fleet-smoke` runs this.
+fn fleet_smoke(args: &Args) -> Result<()> {
+    let base = fleet_config(args)?;
+    let dir = std::env::temp_dir()
+        .join(format!("osdt-fleet-smoke-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let cfg = FleetConfig {
+        dir: dir.clone(),
+        backend: "sim".into(),
+        replicas: base.replicas.max(2),
+        heartbeat: Duration::from_millis(250),
+        respawn_base: Duration::from_millis(100),
+        respawn_max: Duration::from_millis(500),
+        request_timeout: Duration::from_secs(10),
+        ..base
+    };
+    println!(
+        "fleet smoke: {} sim replicas under {}",
+        cfg.replicas,
+        dir.display()
+    );
+    let sup = Supervisor::start(cfg)?;
+    let result = fleet_smoke_run(&sup, &dir);
+    sup.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+    result?;
+    println!("fleet smoke: PASS");
+    Ok(())
+}
+
+fn fleet_smoke_run(sup: &Supervisor, dir: &std::path::Path) -> Result<()> {
+    ensure!(
+        sup.wait_all_healthy(Duration::from_secs(30)),
+        "fleet never became healthy"
+    );
+    let retry = RetryPolicy {
+        max_retries: 5,
+        backoff_base: Duration::from_millis(50),
+        backoff_max: Duration::from_millis(400),
+        seed: 1,
+    };
+    let mut c = Client::connect(sup.router_addr.as_str())?;
+    let baseline =
+        c.generate_with_retry("synth-math", "Q: 6+7=?", "static:0.9", &retry)?;
+    ensure!(baseline.error.is_none(), "baseline: {:?}", baseline.error);
+    let victim = FleetState::load(dir)?
+        .context("state.json missing")?
+        .replicas[0]
+        .pid;
+    println!("fleet smoke: SIGKILL replica 0 (pid {victim})");
+    ensure!(send_signal(victim, "KILL"), "kill {victim} failed");
+    // Failover: requests keep succeeding, tokens stay identical (shared
+    // sim seed), because the router retries on the survivor.
+    for i in 0..5 {
+        let r = c.generate_with_retry(
+            "synth-math",
+            "Q: 6+7=?",
+            "static:0.9",
+            &retry,
+        )?;
+        ensure!(r.error.is_none(), "request {i} post-kill: {:?}", r.error);
+        ensure!(
+            r.completion == baseline.completion,
+            "token corruption after failover (request {i})"
+        );
+    }
+    println!("fleet smoke: failover OK (tokens identical)");
+    // The supervisor must respawn replica 0 under a fresh pid.
+    let deadline = std::time::Instant::now() + Duration::from_secs(30);
+    loop {
+        let st = FleetState::load(dir)?.context("state.json missing")?;
+        let r0 = st
+            .replicas
+            .iter()
+            .find(|r| r.id == 0)
+            .context("replica 0 missing from state.json")?;
+        if r0.pid != victim && r0.pid != 0 && pid_alive(r0.pid) {
+            println!(
+                "fleet smoke: replica 0 respawned (pid {} -> {})",
+                victim, r0.pid
+            );
+            return Ok(());
+        }
+        ensure!(
+            std::time::Instant::now() < deadline,
+            "replica 0 was never respawned"
+        );
+        std::thread::sleep(Duration::from_millis(100));
     }
 }
 

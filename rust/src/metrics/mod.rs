@@ -752,6 +752,102 @@ pub fn catalog() -> &'static [MetricSpec] {
             "Cosine similarity of each observed decode's confidence \
              signature against the profile's drift reference.",
         ),
+        // -- cross-process profile coordination (policy/registry) ----------
+        counter(
+            "profile_cross_adoptions",
+            "osdt_profile_cross_adoptions_total",
+            "policy/registry",
+            "Profiles adopted from the shared ProfileStore because a peer \
+             process calibrated (or recalibrated) them first.",
+        ),
+        counter(
+            "cross_lease_conflicts",
+            "osdt_cross_lease_conflicts_total",
+            "policy/registry",
+            "Cross-process calibration leases lost to a peer that already \
+             holds the store-level lease file (the loser waits and adopts).",
+        ),
+        counter(
+            "cross_lease_takeovers",
+            "osdt_cross_lease_takeovers_total",
+            "policy/registry",
+            "Expired cross-process lease files broken and taken over \
+             (holder crashed without releasing).",
+        ),
+        // -- server front-end ----------------------------------------------
+        counter(
+            "connection_timeouts",
+            "osdt_connection_timeouts_total",
+            "server",
+            "Client connections closed because a read or write exceeded \
+             the per-connection timeout (--conn-timeout-ms).",
+        ),
+        // -- fleet router --------------------------------------------------
+        counter(
+            "fleet_requests_routed",
+            "osdt_fleet_requests_routed_total",
+            "fleet/router",
+            "Requests forwarded to a replica and answered (including \
+             answers that carry an application-level error).",
+        ),
+        counter(
+            "fleet_request_retries",
+            "osdt_fleet_request_retries_total",
+            "fleet/router",
+            "Transport-level forward failures retried on a surviving \
+             replica after jittered backoff.",
+        ),
+        counter(
+            "fleet_requests_shed",
+            "osdt_fleet_requests_shed_total",
+            "fleet/router",
+            "Requests shed at the router (no healthy replica, retry \
+             budget exhausted, or backlog over the fleet watermark) with \
+             a finite retry_after_ms hint.",
+        ),
+        counter(
+            "fleet_replica_failures",
+            "osdt_fleet_replica_failures_total",
+            "fleet/router",
+            "Healthy-to-unhealthy transitions: a replica stopped \
+             answering probes or dropped a forwarded request.",
+        ),
+        gauge(
+            "fleet_replicas_healthy",
+            "osdt_fleet_replicas_healthy",
+            "fleet/router",
+            "Replicas currently answering health probes.",
+        ),
+        gauge(
+            "fleet_replicas_draining",
+            "osdt_fleet_replicas_draining",
+            "fleet/router",
+            "Replicas administratively drained (serving in-flight work \
+             but receiving no new requests).",
+        ),
+        // -- fleet supervisor ----------------------------------------------
+        counter(
+            "fleet_respawns",
+            "osdt_fleet_respawns_total",
+            "fleet/supervisor",
+            "Worker processes (replicas or the router) respawned after a \
+             death, a hung heartbeat, or a rolling restart.",
+        ),
+        counter(
+            "fleet_stale_states_recovered",
+            "osdt_fleet_stale_states_recovered_total",
+            "fleet/supervisor",
+            "Startups that found a stale state.json (dead supervisor \
+             PID), probed its recorded replicas, and adopted the \
+             survivors.",
+        ),
+        counter(
+            "fleet_rolling_restarts",
+            "osdt_fleet_rolling_restarts_total",
+            "fleet/supervisor",
+            "Orchestrated rolling restarts started (each drains, kills, \
+             respawns, and re-verifies every replica in turn).",
+        ),
     ];
     CATALOG
 }

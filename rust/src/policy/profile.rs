@@ -458,6 +458,154 @@ impl ProfileStore {
         }
         Ok(out)
     }
+
+    // -- cross-process invalidation (DESIGN.md §16) ----------------------
+
+    fn generation_path(&self) -> PathBuf {
+        self.dir.join(GENERATION_FILE)
+    }
+
+    /// Fleet-wide profile generation: bumped exactly once per fulfilled
+    /// calibration anywhere in the fleet. 0 while the file is absent.
+    /// Peers compare it against their last-synced value to decide when
+    /// to re-scan the store for newer profile versions.
+    pub fn generation(&self) -> u64 {
+        std::fs::read_to_string(self.generation_path())
+            .ok()
+            .and_then(|s| s.trim().parse().ok())
+            .unwrap_or(0)
+    }
+
+    /// Bump the generation counter (temp + rename). Callers hold the
+    /// per-key calibration lease, so concurrent bumps are for *different*
+    /// keys; losing a counter race costs at most one extra store scan on
+    /// a peer, never a missed invalidation (peers compare per-record
+    /// `version`s, the generation is only the cheap change signal).
+    pub fn bump_generation(&self) -> Result<u64> {
+        let next = self.generation() + 1;
+        let tmp = self.dir.join(format!(
+            ".tmp.gen.{}.{}",
+            std::process::id(),
+            TMP_SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        std::fs::write(&tmp, format!("{next}\n"))
+            .with_context(|| format!("writing {}", tmp.display()))?;
+        if let Err(e) = std::fs::rename(&tmp, self.generation_path()) {
+            std::fs::remove_file(&tmp).ok();
+            return Err(e).context("renaming generation file");
+        }
+        Ok(next)
+    }
+
+    fn lease_path(&self, task: &str, mode: DynamicMode, metric: Metric) -> PathBuf {
+        self.dir.join(format!(
+            ".lease.{}.{}.{}",
+            encode_task(task),
+            mode.as_str(),
+            metric.as_str()
+        ))
+    }
+
+    /// Try to take the *cross-process* calibration lease for one key:
+    /// `O_CREAT|O_EXCL` on a lease file holding `pid created_unix_ms`.
+    /// `Ok(Some)` — the caller holds the fleet-wide lease (released when
+    /// the [`StoreLease`] drops). `Ok(None)` — a live peer process holds
+    /// it. A lease whose recorded holder is dead (checked via `/proc`) or
+    /// whose age exceeds `ttl` is broken and taken over, so a SIGKILLed
+    /// calibrator cannot wedge the key fleet-wide.
+    pub fn try_lease(
+        &self,
+        task: &str,
+        mode: DynamicMode,
+        metric: Metric,
+        ttl: std::time::Duration,
+    ) -> Result<Option<StoreLease>> {
+        let path = self.lease_path(task, mode, metric);
+        let mut broke_stale = false;
+        for _ in 0..4 {
+            match std::fs::OpenOptions::new()
+                .write(true)
+                .create_new(true)
+                .open(&path)
+            {
+                Ok(mut f) => {
+                    use std::io::Write;
+                    writeln!(f, "{} {}", std::process::id(), unix_ms())
+                        .with_context(|| format!("writing {}", path.display()))?;
+                    return Ok(Some(StoreLease { path, took_over: broke_stale }));
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => {
+                    let content =
+                        std::fs::read_to_string(&path).unwrap_or_default();
+                    let mut it = content.split_whitespace();
+                    let pid: u32 =
+                        it.next().and_then(|s| s.parse().ok()).unwrap_or(0);
+                    let created: u64 =
+                        it.next().and_then(|s| s.parse().ok()).unwrap_or(0);
+                    let expired =
+                        unix_ms().saturating_sub(created) > ttl.as_millis() as u64;
+                    if crate::util::procfs::pid_alive(pid) && !expired {
+                        return Ok(None);
+                    }
+                    // Dead or expired holder: break the lease and retry
+                    // the exclusive create (bounded — two breakers racing
+                    // resolve within a couple of iterations, and a loser
+                    // reporting Ok(None) merely waits a round).
+                    broke_stale = true;
+                    let _ = std::fs::remove_file(&path);
+                }
+                Err(e) => {
+                    return Err(e).with_context(|| {
+                        format!("creating lease {}", path.display())
+                    })
+                }
+            }
+        }
+        Ok(None)
+    }
+
+    /// Forcibly take the cross-process lease regardless of its holder —
+    /// the file analogue of `ProfileRegistry::acquire_stealing`, used
+    /// when an in-memory steal has already decided the outstanding
+    /// calibration is past its patience.
+    pub fn force_lease(
+        &self,
+        task: &str,
+        mode: DynamicMode,
+        metric: Metric,
+    ) -> Result<StoreLease> {
+        let path = self.lease_path(task, mode, metric);
+        let took_over = path.exists();
+        std::fs::write(&path, format!("{} {}\n", std::process::id(), unix_ms()))
+            .with_context(|| format!("writing lease {}", path.display()))?;
+        Ok(StoreLease { path, took_over })
+    }
+}
+
+/// Name of the fleet-wide generation counter file inside a store dir.
+const GENERATION_FILE: &str = ".generation";
+
+fn unix_ms() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_millis() as u64)
+        .unwrap_or(0)
+}
+
+/// Held cross-process calibration lease; the lease file is removed on
+/// drop (fulfilled or abandoned — the in-memory lease protocol decides
+/// which, the file only fences *other processes*).
+#[derive(Debug)]
+pub struct StoreLease {
+    path: PathBuf,
+    /// The lease was taken from a dead/expired/stolen-from holder.
+    pub took_over: bool,
+}
+
+impl Drop for StoreLease {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.path);
+    }
 }
 
 #[cfg(test)]
@@ -699,6 +847,98 @@ mod tests {
                 "stray file {name:?}"
             );
         }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn generation_counter_bumps_and_survives_reopen() {
+        let (store, dir) = tmp_store("gen");
+        assert_eq!(store.generation(), 0, "absent file reads as 0");
+        assert_eq!(store.bump_generation().unwrap(), 1);
+        assert_eq!(store.bump_generation().unwrap(), 2);
+        // a second store handle on the same dir (another process in
+        // production) observes the same counter
+        let peer = ProfileStore::new(&dir).unwrap();
+        assert_eq!(peer.generation(), 2);
+        // the counter file is ignored by warm-start scans
+        assert!(store.load_all().unwrap().is_empty());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn store_lease_is_exclusive_and_released_on_drop() {
+        let (store, dir) = tmp_store("lease");
+        let ttl = std::time::Duration::from_secs(60);
+        let lease = store
+            .try_lease("t", DynamicMode::Block, Metric::Q1, ttl)
+            .unwrap()
+            .expect("first taker holds the lease");
+        assert!(!lease.took_over);
+        // our own (live) pid holds it: a peer store on the same dir is
+        // refused — exactly the two-replica single-flight case
+        let peer = ProfileStore::new(&dir).unwrap();
+        assert!(peer
+            .try_lease("t", DynamicMode::Block, Metric::Q1, ttl)
+            .unwrap()
+            .is_none());
+        // a different key is independent
+        assert!(peer
+            .try_lease("t2", DynamicMode::Block, Metric::Q1, ttl)
+            .unwrap()
+            .is_some());
+        drop(lease);
+        assert!(store
+            .try_lease("t", DynamicMode::Block, Metric::Q1, ttl)
+            .unwrap()
+            .is_some());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn dead_holder_lease_is_taken_over() {
+        let (store, dir) = tmp_store("leasedead");
+        let ttl = std::time::Duration::from_secs(60);
+        // hand-write a lease naming a dead pid, as a SIGKILLed replica
+        // would leave behind
+        std::fs::write(
+            dir.join(".lease.t.block.q1"),
+            format!("{} {}\n", u32::MAX, 0),
+        )
+        .unwrap();
+        let lease = store
+            .try_lease("t", DynamicMode::Block, Metric::Q1, ttl)
+            .unwrap()
+            .expect("dead holder must be broken");
+        drop(lease);
+        // an *expired* lease from a live pid is broken too
+        std::fs::write(
+            dir.join(".lease.t.block.q1"),
+            format!("{} {}\n", std::process::id(), 0),
+        )
+        .unwrap();
+        assert!(store
+            .try_lease(
+                "t",
+                DynamicMode::Block,
+                Metric::Q1,
+                std::time::Duration::from_millis(1),
+            )
+            .unwrap()
+            .is_some());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn force_lease_steals_from_a_live_holder() {
+        let (store, dir) = tmp_store("leaseforce");
+        let ttl = std::time::Duration::from_secs(60);
+        let _held = store
+            .try_lease("t", DynamicMode::Block, Metric::Q1, ttl)
+            .unwrap()
+            .unwrap();
+        let stolen =
+            store.force_lease("t", DynamicMode::Block, Metric::Q1).unwrap();
+        assert!(stolen.took_over);
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -52,7 +52,7 @@ use anyhow::Result;
 
 use crate::metrics::Registry as MetricsRegistry;
 
-use super::profile::{ProfileRecord, ProfileStore};
+use super::profile::{ProfileRecord, ProfileStore, StoreLease};
 use super::{CalibrationTrace, Calibrator, DynamicMode, Metric, Profile};
 
 /// Identity of a calibrated profile.
@@ -139,6 +139,20 @@ pub struct RegistryConfig {
     /// — the skipped steps were never executed — so they get their own
     /// staleness trigger. The counter resets on recalibration.
     pub misprediction_floor: u64,
+    /// Coordinate calibration leases *across processes* through the
+    /// attached [`ProfileStore`] (DESIGN.md §16): lease grants are fenced
+    /// by an exclusive lease file, fulfilled calibrations bump the store's
+    /// generation counter, and peers adopt newer on-disk profile versions
+    /// instead of recalibrating. No-op without a store. CLI:
+    /// `serve --fleet-locks on`.
+    pub cross_process: bool,
+    /// Age past which a cross-process lease file whose holder cannot be
+    /// confirmed dead is broken anyway (clock-skew-safe upper bound on a
+    /// calibration decode).
+    pub cross_lease_ttl: Duration,
+    /// Minimum spacing between cross-process store-generation checks; the
+    /// store is only re-scanned when the generation actually moved.
+    pub sync_interval: Duration,
 }
 
 impl Default for RegistryConfig {
@@ -147,6 +161,9 @@ impl Default for RegistryConfig {
             drift_floor: 0.95,
             ema_alpha: 0.0,
             misprediction_floor: 8,
+            cross_process: false,
+            cross_lease_ttl: Duration::from_secs(60),
+            sync_interval: Duration::from_millis(250),
         }
     }
 }
@@ -172,6 +189,10 @@ pub struct CalibrationLease<'r> {
     key: ProfileKey,
     seq: u64,
     fulfilled: bool,
+    /// Cross-process lease file fencing peer *processes* while this lease
+    /// is outstanding (None when `cross_process` is off). Released on
+    /// drop, after fulfill/abandon has resolved the in-memory lease.
+    _store_lease: Option<StoreLease>,
 }
 
 impl CalibrationLease<'_> {
@@ -218,6 +239,13 @@ pub struct ProfileRegistry {
     /// Coordinators snapshot it to skip re-classifying their parked queues
     /// on iterations where no lease resolved.
     release_gen: AtomicU64,
+    /// Cross-process sync throttle (see [`ProfileRegistry::maybe_sync`]).
+    sync: Mutex<SyncState>,
+}
+
+struct SyncState {
+    last_check: Instant,
+    last_gen: u64,
 }
 
 impl ProfileRegistry {
@@ -234,6 +262,10 @@ impl ProfileRegistry {
             cfg,
             metrics: Arc::new(MetricsRegistry::new()),
             release_gen: AtomicU64::new(0),
+            sync: Mutex::new(SyncState {
+                last_check: Instant::now(),
+                last_gen: 0,
+            }),
         }
     }
 
@@ -269,6 +301,9 @@ impl ProfileRegistry {
             }
         }
         reg.metrics.add("profile_warm_starts", n as u64);
+        // The warm start already reflects the store's current content:
+        // record the generation so the first maybe_sync doesn't rescan.
+        reg.sync.lock().unwrap().last_gen = store.generation();
         reg.store = Some(store);
         Ok(reg)
     }
@@ -306,6 +341,7 @@ impl ProfileRegistry {
     }
 
     fn acquire_inner(&self, key: &ProfileKey, steal: bool) -> Acquired<'_> {
+        self.maybe_sync();
         let mut slots = self.slots.lock().unwrap();
         let slot = slots
             .entry(key.clone())
@@ -320,29 +356,46 @@ impl ProfileRegistry {
                 self.metrics.add("profile_stale_serves", 1);
                 Acquired::Ready(e.profile.clone(), e.epoch)
             }
-            (Some(_), false) => {
-                slot.lease_seq += 1;
-                slot.leased = true;
-                self.metrics.add("leases_granted", 1);
-                Acquired::Lease(CalibrationLease {
-                    registry: self,
-                    key: key.clone(),
-                    seq: slot.lease_seq,
-                    fulfilled: false,
-                })
-            }
-            (None, false) => {
-                slot.lease_seq += 1;
-                slot.leased = true;
-                self.metrics.add("profile_misses", 1);
-                self.metrics.add("leases_granted", 1);
-                Acquired::Lease(CalibrationLease {
-                    registry: self,
-                    key: key.clone(),
-                    seq: slot.lease_seq,
-                    fulfilled: false,
-                })
-            }
+            (Some(_), false) => match self.cross_lease(key, steal) {
+                CrossLease::Granted(sl) => {
+                    slot.lease_seq += 1;
+                    slot.leased = true;
+                    self.metrics.add("leases_granted", 1);
+                    Acquired::Lease(CalibrationLease {
+                        registry: self,
+                        key: key.clone(),
+                        seq: slot.lease_seq,
+                        fulfilled: false,
+                        _store_lease: sl,
+                    })
+                }
+                // a peer *process* holds the recalibration: keep serving
+                // the stale profile, exactly like a local in-flight lease
+                CrossLease::PeerHolds => {
+                    self.metrics.add("profile_stale_serves", 1);
+                    let e = slot.entry.as_ref().expect("entry matched Some");
+                    Acquired::Ready(e.profile.clone(), e.epoch)
+                }
+            },
+            (None, false) => match self.cross_lease(key, steal) {
+                CrossLease::Granted(sl) => {
+                    slot.lease_seq += 1;
+                    slot.leased = true;
+                    self.metrics.add("profile_misses", 1);
+                    self.metrics.add("leases_granted", 1);
+                    Acquired::Lease(CalibrationLease {
+                        registry: self,
+                        key: key.clone(),
+                        seq: slot.lease_seq,
+                        fulfilled: false,
+                        _store_lease: sl,
+                    })
+                }
+                CrossLease::PeerHolds => {
+                    self.metrics.add("profile_waits", 1);
+                    Acquired::InFlight
+                }
+            },
             (None, true) => {
                 if steal {
                     // takeover becomes the *current* lease: the superseded
@@ -350,15 +403,71 @@ impl ProfileRegistry {
                     slot.lease_seq += 1;
                     slot.leased = true;
                     self.metrics.add("lease_takeovers", 1);
+                    let sl = match self.cross_lease(key, true) {
+                        CrossLease::Granted(sl) => sl,
+                        CrossLease::PeerHolds => None, // unreachable on steal
+                    };
                     Acquired::Lease(CalibrationLease {
                         registry: self,
                         key: key.clone(),
                         seq: slot.lease_seq,
                         fulfilled: false,
+                        _store_lease: sl,
                     })
                 } else {
                     self.metrics.add("profile_waits", 1);
                     Acquired::InFlight
+                }
+            }
+        }
+    }
+
+    /// Take the cross-process lease file for `key` (no-op `Granted(None)`
+    /// when cross-process mode is off or no store is attached). `steal`
+    /// forces the takeover — the in-memory protocol has already decided
+    /// the outstanding holder is past its patience. I/O errors fail open
+    /// to local-only single-flight: a broken shared filesystem degrades
+    /// to at-most-once *per process*, never to a stalled fleet.
+    fn cross_lease(&self, key: &ProfileKey, steal: bool) -> CrossLease {
+        if !self.cfg.cross_process {
+            return CrossLease::Granted(None);
+        }
+        let Some(store) = &self.store else {
+            return CrossLease::Granted(None);
+        };
+        if steal {
+            match store.force_lease(&key.task, key.mode, key.metric) {
+                Ok(sl) => {
+                    if sl.took_over {
+                        self.metrics.add("cross_lease_takeovers", 1);
+                    }
+                    CrossLease::Granted(Some(sl))
+                }
+                Err(e) => {
+                    log::warn!("cross-lease force for {key}: {e:#}");
+                    CrossLease::Granted(None)
+                }
+            }
+        } else {
+            match store.try_lease(
+                &key.task,
+                key.mode,
+                key.metric,
+                self.cfg.cross_lease_ttl,
+            ) {
+                Ok(Some(sl)) => {
+                    if sl.took_over {
+                        self.metrics.add("cross_lease_takeovers", 1);
+                    }
+                    CrossLease::Granted(Some(sl))
+                }
+                Ok(None) => {
+                    self.metrics.add("cross_lease_conflicts", 1);
+                    CrossLease::PeerHolds
+                }
+                Err(e) => {
+                    log::warn!("cross-lease attempt for {key}: {e:#}");
+                    CrossLease::Granted(None)
                 }
             }
         }
@@ -370,6 +479,7 @@ impl ProfileRegistry {
     /// request that lands the recalibration lease runs it inline rather
     /// than parking every same-key request behind the drift event.
     pub fn peek(&self, key: &ProfileKey) -> PeekState {
+        self.maybe_sync();
         let slots = self.slots.lock().unwrap();
         match slots.get(key) {
             None => PeekState::WouldCalibrate,
@@ -383,10 +493,14 @@ impl ProfileRegistry {
 
     /// Block until `key` has a usable profile (or `timeout`); used by
     /// callers with nothing better to do than wait on a peer's calibration.
+    /// In cross-process mode the wait is chunked at `sync_interval` so a
+    /// fulfill in a *peer process* (no local condvar notify) is still
+    /// observed promptly via the store's generation counter.
     pub fn wait_ready(&self, key: &ProfileKey, timeout: Duration) -> Option<Profile> {
         let deadline = Instant::now() + timeout;
-        let mut slots = self.slots.lock().unwrap();
         loop {
+            self.maybe_sync();
+            let slots = self.slots.lock().unwrap();
             if let Some(e) = slots.get(key).and_then(|s| s.entry.as_ref()) {
                 return Some(e.profile.clone());
             }
@@ -394,8 +508,93 @@ impl ProfileRegistry {
             if left.is_zero() {
                 return None;
             }
-            let (guard, _) = self.cv.wait_timeout(slots, left).unwrap();
-            slots = guard;
+            let chunk = if self.cfg.cross_process {
+                left.min(self.cfg.sync_interval)
+            } else {
+                left
+            };
+            // Guard drops at loop end; re-checked after every wakeup.
+            let _ = self.cv.wait_timeout(slots, chunk).unwrap();
+        }
+    }
+
+    /// Rate-limited cross-process sync: when the shared store's generation
+    /// counter has moved past what this process last saw, re-scan the
+    /// store and adopt any record whose version is newer than the local
+    /// one. Adoption — not recalibration: the peer that fulfilled the
+    /// lease already paid the calibration decode, which is what makes a
+    /// drift event on one replica recalibrate exactly once fleet-wide.
+    /// No-op unless `cross_process` is on and a store is attached.
+    pub fn maybe_sync(&self) {
+        if !self.cfg.cross_process || self.store.is_none() {
+            return;
+        }
+        {
+            let mut sync = self.sync.lock().unwrap();
+            if sync.last_check.elapsed() < self.cfg.sync_interval {
+                return;
+            }
+            sync.last_check = Instant::now();
+            let gen = self.store.as_ref().expect("checked above").generation();
+            if gen == sync.last_gen {
+                return;
+            }
+            sync.last_gen = gen;
+        }
+        self.sync_from_store();
+    }
+
+    /// Unconditional store re-scan: adopt every on-disk record whose
+    /// version is newer than the in-memory one. Public so tests and the
+    /// admin path can force a sync without waiting out the throttle.
+    pub fn sync_from_store(&self) {
+        let Some(store) = &self.store else { return };
+        let records = match store.load_all() {
+            Ok(r) => r,
+            Err(e) => {
+                log::warn!("cross-process store scan failed: {e:#}");
+                return;
+            }
+        };
+        let mut adopted = 0u64;
+        {
+            let mut slots = self.slots.lock().unwrap();
+            for rec in records {
+                let key = ProfileKey::new(
+                    rec.task.clone(),
+                    rec.profile.mode,
+                    rec.profile.metric,
+                );
+                let slot = slots.entry(key).or_insert_with(|| Slot {
+                    entry: None,
+                    leased: false,
+                    lease_seq: 0,
+                });
+                let version = rec.version.max(1);
+                let local = slot.entry.as_ref().map(|e| e.version).unwrap_or(0);
+                if version <= local {
+                    continue;
+                }
+                slot.entry = Some(ProfileEntry {
+                    profile: rec.profile,
+                    signature: rec.signature,
+                    drift_ref: vec![],
+                    version,
+                    epoch: version,
+                    stale: false,
+                    observed: 0,
+                    mispredicted: 0,
+                    warm_started: true,
+                });
+                adopted += 1;
+            }
+        }
+        if adopted > 0 {
+            self.metrics.add("profile_cross_adoptions", adopted);
+            // Adoption changes parked requests' admission class exactly
+            // like a local fulfill: bump + wake waiters.
+            self.release_gen.fetch_add(1, Ordering::AcqRel);
+            self.cv.notify_all();
         }
     }
 
@@ -469,6 +668,14 @@ impl ProfileRegistry {
             if let Err(e) = store.save(record) {
                 self.metrics.add("profile_persist_errors", 1);
                 log::warn!("persisting profile {}: {e:#}", record.task);
+            }
+            // Signal peers *after* the record is on disk, so a generation
+            // bump always points at a readable newer version.
+            if self.cfg.cross_process {
+                if let Err(e) = store.bump_generation() {
+                    self.metrics.add("profile_persist_errors", 1);
+                    log::warn!("bumping profile generation: {e:#}");
+                }
             }
         }
     }
@@ -625,6 +832,15 @@ impl ProfileRegistry {
         });
         out
     }
+}
+
+/// Outcome of a cross-process lease-file attempt.
+enum CrossLease {
+    /// The caller may calibrate; holds the lease file when Some (None when
+    /// cross-process mode is off or the filesystem failed open).
+    Granted(Option<StoreLease>),
+    /// A live peer process holds the fleet-wide lease.
+    PeerHolds,
 }
 
 /// What `acquire` would do for a key right now.
@@ -1016,6 +1232,156 @@ mod tests {
         assert!(entry.warm_started);
         assert_eq!(entry.signature, vec![0.4, 0.9]);
         assert_eq!(reg.metrics().counter_value("profile_warm_starts"), 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    fn cross_cfg() -> RegistryConfig {
+        RegistryConfig {
+            cross_process: true,
+            // sync on every call so tests need no sleeps
+            sync_interval: Duration::ZERO,
+            ..RegistryConfig::default()
+        }
+    }
+
+    fn cross_pair(tag: &str) -> (ProfileRegistry, ProfileRegistry, std::path::PathBuf) {
+        let dir = std::env::temp_dir().join(format!(
+            "osdt_registry_cross_{tag}_{}",
+            std::process::id()
+        ));
+        std::fs::remove_dir_all(&dir).ok();
+        let a = ProfileRegistry::with_store(
+            ProfileStore::new(&dir).unwrap(),
+            cross_cfg(),
+        )
+        .unwrap();
+        let b = ProfileRegistry::with_store(
+            ProfileStore::new(&dir).unwrap(),
+            cross_cfg(),
+        )
+        .unwrap();
+        (a, b, dir)
+    }
+
+    #[test]
+    fn cross_process_lease_is_single_flight_across_instances() {
+        let (a, b, dir) = cross_pair("sf");
+        // instance A (replica 1) takes the fleet-wide lease
+        let lease = match a.acquire(&key()) {
+            Acquired::Lease(l) => l,
+            _ => panic!("first fleet-wide acquire must lease"),
+        };
+        // instance B (replica 2, sharing the store dir) is fenced by the
+        // lease *file*, not by A's in-memory state
+        assert!(matches!(b.acquire(&key()), Acquired::InFlight));
+        assert_eq!(b.metrics().counter_value("cross_lease_conflicts"), 1);
+        assert_eq!(b.metrics().counter_value("leases_granted"), 0);
+        // A fulfills: persists the record and bumps the store generation
+        lease.fulfill(profile(0.6), vec![0.6]);
+        // B's next acquire observes the generation, adopts the on-disk
+        // profile, and serves it without ever calibrating
+        match b.acquire(&key()) {
+            Acquired::Ready(p, _) => assert!((p.tau(0, 0) - 0.6).abs() < 1e-12),
+            _ => panic!("peer fulfill must be adopted, not recalibrated"),
+        }
+        assert_eq!(b.metrics().counter_value("profile_cross_adoptions"), 1);
+        assert_eq!(b.metrics().counter_value("calibrations_completed"), 0);
+        assert_eq!(a.metrics().counter_value("calibrations_completed"), 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn wait_ready_observes_a_peer_process_fulfill() {
+        let (a, b, dir) = cross_pair("wait");
+        let lease = match a.acquire(&key()) {
+            Acquired::Lease(l) => l,
+            _ => panic!(),
+        };
+        assert!(matches!(b.acquire(&key()), Acquired::InFlight));
+        // B parks; A fulfills from another thread. B has no local condvar
+        // signal for this — only the chunked cross-process sync sees it.
+        let waiter = std::thread::spawn(move || {
+            b.wait_ready(&key(), Duration::from_secs(5)).map(|p| p.tau(0, 0))
+        });
+        std::thread::sleep(Duration::from_millis(30));
+        lease.fulfill(profile(0.7), vec![0.7]);
+        let tau = waiter.join().unwrap().expect("peer fulfill never observed");
+        assert!((tau - 0.7).abs() < 1e-12);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn drift_on_one_replica_recalibrates_exactly_once_fleet_wide() {
+        let (a, b, dir) = cross_pair("drift");
+        // replica A calibrates; replica B adopts
+        match a.acquire(&key()) {
+            Acquired::Lease(l) => l.fulfill(profile(0.6), vec![0.6]),
+            _ => panic!(),
+        }
+        assert!(matches!(b.acquire(&key()), Acquired::Ready(..)));
+        // drift detected on B only
+        assert!(b.invalidate(&key()));
+        let lease = match b.acquire(&key()) {
+            Acquired::Lease(l) => l,
+            _ => panic!("stale profile must grant the recalibration lease"),
+        };
+        // while B recalibrates, A keeps serving its (fresh-to-A) profile
+        assert!(matches!(a.acquire(&key()), Acquired::Ready(..)));
+        lease.fulfill(profile(0.4), vec![0.4]);
+        // A adopts version 2 from disk instead of recalibrating
+        match a.acquire(&key()) {
+            Acquired::Ready(p, _) => assert!((p.tau(0, 0) - 0.4).abs() < 1e-12),
+            _ => panic!("peer recalibration must be adopted"),
+        }
+        assert_eq!(a.get(&key()).unwrap().version, 2);
+        assert_eq!(a.metrics().counter_value("profile_cross_adoptions"), 1);
+        // exactly one calibration + one recalibration happened fleet-wide
+        assert_eq!(a.metrics().counter_value("calibrations_completed"), 1);
+        assert_eq!(b.metrics().counter_value("calibrations_completed"), 1);
+        assert_eq!(b.metrics().counter_value("recalibrations"), 1);
+        assert_eq!(a.metrics().counter_value("recalibrations"), 0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn dead_peer_lease_file_is_taken_over() {
+        let dir = std::env::temp_dir().join(format!(
+            "osdt_registry_cross_deadpeer_{}",
+            std::process::id()
+        ));
+        std::fs::remove_dir_all(&dir).ok();
+        let store = ProfileStore::new(&dir).unwrap();
+        // a SIGKILLed replica left its lease file behind (dead pid)
+        std::fs::write(
+            dir.join(".lease.synth-math.block.q1"),
+            format!("{} 0\n", u32::MAX),
+        )
+        .unwrap();
+        let reg =
+            ProfileRegistry::with_store(ProfileStore::new(&dir).unwrap(), cross_cfg())
+                .unwrap();
+        drop(store);
+        match reg.acquire(&key()) {
+            Acquired::Lease(l) => l.fulfill(profile(0.5), vec![0.5]),
+            _ => panic!("dead holder's lease must be broken, not waited on"),
+        }
+        assert_eq!(reg.metrics().counter_value("cross_lease_takeovers"), 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn abandoned_cross_lease_releases_the_fleet() {
+        let (a, b, dir) = cross_pair("abandon");
+        {
+            let _lease = match a.acquire(&key()) {
+                Acquired::Lease(l) => l,
+                _ => panic!(),
+            };
+            assert!(matches!(b.acquire(&key()), Acquired::InFlight));
+            // A's calibration fails; the lease (and its file) drop
+        }
+        // B can now take the fleet-wide lease itself
+        assert!(matches!(b.acquire(&key()), Acquired::Lease(_)));
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -36,15 +36,17 @@
 //! connection.
 
 use std::io::{BufRead, BufReader, BufWriter, Write};
-use std::net::{TcpListener, TcpStream};
+use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
+use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
 use crate::coordinator::{Coordinator, Request, Response};
 use crate::policy::{DynamicMode, Metric, ProfileKey};
 use crate::util::json::Json;
+use crate::util::rng::Rng;
 
 /// Serialize a coordinator response to its wire form.
 pub fn response_to_json(r: &Response) -> Json {
@@ -109,8 +111,26 @@ pub struct Server {
 
 impl Server {
     /// Bind `addr` (use port 0 for an ephemeral port) and serve requests on
-    /// `coordinator` until stopped.
+    /// `coordinator` until stopped, with the default connection timeout.
     pub fn start(addr: &str, coordinator: Arc<Coordinator>) -> Result<Server> {
+        let default_ms = crate::config::ServerConfig::default().conn_timeout_ms;
+        Self::start_with_timeout(
+            addr,
+            coordinator,
+            Duration::from_millis(default_ms),
+        )
+    }
+
+    /// [`Server::start`] with an explicit per-connection socket timeout:
+    /// every accepted stream gets read/write timeouts, so a stalled or
+    /// half-dead peer is disconnected (and counted in
+    /// `connection_timeouts`) instead of pinning its `osdt-conn` thread
+    /// forever. `Duration::ZERO` disables the timeout.
+    pub fn start_with_timeout(
+        addr: &str,
+        coordinator: Arc<Coordinator>,
+        conn_timeout: Duration,
+    ) -> Result<Server> {
         let listener = TcpListener::bind(addr)
             .with_context(|| format!("binding {addr}"))?;
         let local = listener.local_addr()?;
@@ -125,6 +145,12 @@ impl Server {
                     match listener.accept() {
                         Ok((stream, peer)) => {
                             log::debug!("connection from {peer}");
+                            if !conn_timeout.is_zero() {
+                                stream.set_read_timeout(Some(conn_timeout)).ok();
+                                stream
+                                    .set_write_timeout(Some(conn_timeout))
+                                    .ok();
+                            }
                             let coord = coordinator.clone();
                             let _ = std::thread::Builder::new()
                                 .name("osdt-conn".into())
@@ -164,11 +190,30 @@ impl Drop for Server {
     }
 }
 
+/// Socket-timeout error kinds (Linux reports `WouldBlock`, other
+/// platforms `TimedOut`, for a blocking socket with SO_RCVTIMEO).
+fn is_timeout(kind: std::io::ErrorKind) -> bool {
+    matches!(
+        kind,
+        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+    )
+}
+
 fn handle_conn(stream: TcpStream, coord: &Coordinator) -> Result<()> {
     let reader = BufReader::new(stream.try_clone()?);
     let mut writer = BufWriter::new(stream);
     for line in reader.lines() {
-        let line = line?;
+        let line = match line {
+            Ok(l) => l,
+            // The per-connection socket timeout fired: the peer stalled.
+            // Close (don't kill the server) and count it.
+            Err(e) if is_timeout(e.kind()) => {
+                coord.metrics.add("connection_timeouts", 1);
+                log::debug!("connection idle past timeout; closing");
+                return Ok(());
+            }
+            Err(e) => return Err(e.into()),
+        };
         if line.trim().is_empty() {
             continue;
         }
@@ -213,8 +258,15 @@ fn handle_conn(stream: TcpStream, coord: &Coordinator) -> Result<()> {
                 }
             }
         };
-        writeln!(writer, "{reply}")?;
-        writer.flush()?;
+        if let Err(e) = writeln!(writer, "{reply}").and_then(|_| writer.flush())
+        {
+            if is_timeout(e.kind()) {
+                coord.metrics.add("connection_timeouts", 1);
+                log::debug!("write stalled past timeout; closing");
+                return Ok(());
+            }
+            return Err(e.into());
+        }
     }
     Ok(())
 }
@@ -307,19 +359,77 @@ fn request_from_json(j: &Json) -> Result<Request> {
     })
 }
 
+/// Client-side retry policy for idempotent requests: jittered
+/// exponential backoff with a bounded retry budget, honoring the
+/// server's §15 `retry_after_ms` shed hint when one is present.
+#[derive(Clone, Debug)]
+pub struct RetryPolicy {
+    /// Retries after the first attempt (total attempts = this + 1).
+    pub max_retries: usize,
+    /// First-retry backoff; doubles per retry up to `backoff_max`, then
+    /// jittered into [d/2, d).
+    pub backoff_base: Duration,
+    pub backoff_max: Duration,
+    /// Jitter PRNG seed (deterministic for tests).
+    pub seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            max_retries: 3,
+            backoff_base: Duration::from_millis(50),
+            backoff_max: Duration::from_secs(2),
+            seed: 1,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// Pure backoff schedule: the sleep before retry `attempt`
+    /// (0-based). A finite server `retry_after_ms` hint acts as a floor
+    /// — the server knows its backlog better than our schedule does.
+    pub fn backoff_for(
+        &self,
+        attempt: usize,
+        retry_after_ms: Option<f64>,
+        rng: &mut Rng,
+    ) -> Duration {
+        let full = self
+            .backoff_base
+            .saturating_mul(1u32 << attempt.min(16) as u32)
+            .min(self.backoff_max);
+        let jittered = full / 2
+            + Duration::from_secs_f64(
+                full.as_secs_f64() / 2.0 * rng.next_f64(),
+            );
+        match retry_after_ms {
+            Some(ms) if ms.is_finite() && ms > 0.0 => {
+                jittered.max(Duration::from_secs_f64(ms / 1e3))
+            }
+            _ => jittered,
+        }
+    }
+}
+
 /// Blocking line-protocol client.
 pub struct Client {
     reader: BufReader<TcpStream>,
     writer: BufWriter<TcpStream>,
+    /// Peer address, kept so retries can reconnect after a transport
+    /// failure (None only if the OS cannot report it).
+    peer: Option<SocketAddr>,
 }
 
 impl Client {
     pub fn connect(addr: impl std::net::ToSocketAddrs) -> Result<Client> {
         let stream = TcpStream::connect(addr).context("connecting")?;
         stream.set_nodelay(true).ok();
+        let peer = stream.peer_addr().ok();
         Ok(Client {
             reader: BufReader::new(stream.try_clone()?),
             writer: BufWriter::new(stream),
+            peer,
         })
     }
 
@@ -429,6 +539,62 @@ impl Client {
             }
         }
         response_from_json(&j)
+    }
+
+    /// [`Client::generate`] with a bounded retry budget. Decode requests
+    /// are idempotent (same prompt + policy → same tokens), so two
+    /// failure classes are retried after a jittered backoff:
+    ///
+    /// - transport failures (connection dropped, server died) —
+    ///   reconnects to the same peer before the next attempt;
+    /// - §15 shed responses — sleeps at least the server's
+    ///   `retry_after_ms` hint, then retries on the live connection.
+    ///
+    /// When the budget is exhausted the last error (or shed response) is
+    /// returned as-is.
+    pub fn generate_with_retry(
+        &mut self,
+        task: &str,
+        prompt: &str,
+        policy: &str,
+        retry: &RetryPolicy,
+    ) -> Result<Response> {
+        let mut rng = Rng::new(retry.seed ^ 0x9e37_79b9);
+        for attempt in 0.. {
+            match self.generate(task, prompt, policy) {
+                Ok(r) => {
+                    let shed = r
+                        .error
+                        .as_deref()
+                        .map(|e| e.starts_with("shed"))
+                        .unwrap_or(false);
+                    if !shed || attempt >= retry.max_retries {
+                        return Ok(r);
+                    }
+                    std::thread::sleep(retry.backoff_for(
+                        attempt,
+                        r.retry_after_ms,
+                        &mut rng,
+                    ));
+                }
+                Err(e) => {
+                    if attempt >= retry.max_retries {
+                        return Err(e);
+                    }
+                    std::thread::sleep(retry.backoff_for(
+                        attempt,
+                        None,
+                        &mut rng,
+                    ));
+                    if let Some(peer) = self.peer {
+                        if let Ok(fresh) = Client::connect(peer) {
+                            *self = fresh;
+                        }
+                    }
+                }
+            }
+        }
+        unreachable!("retry loop returns from within");
     }
 }
 
@@ -602,6 +768,126 @@ mod tests {
         let back = response_from_json(&response_to_json(&shed)).unwrap();
         assert_eq!(back.retry_after_ms, Some(83.5));
         assert!(back.error.unwrap().contains("shed"));
+    }
+
+    #[test]
+    fn idle_connection_times_out_and_is_counted() {
+        let coord = Arc::new(
+            Coordinator::start(CoordinatorConfig::default(), tiny_config(), |_| {
+                Ok(SimModel::math_like(3))
+            })
+            .unwrap(),
+        );
+        let server = Server::start_with_timeout(
+            "127.0.0.1:0",
+            coord.clone(),
+            Duration::from_millis(100),
+        )
+        .unwrap();
+        // A request/response cycle well under the timeout is unaffected
+        // (client closed cleanly afterwards: no timeout counted for it).
+        {
+            let mut c = Client::connect(server.addr).unwrap();
+            assert!(c.ping().unwrap());
+        }
+        // An idle raw connection is closed once the socket timeout fires:
+        // our blocking read observes EOF instead of hanging.
+        let idle = TcpStream::connect(server.addr).unwrap();
+        idle.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        let mut r = BufReader::new(idle);
+        let mut line = String::new();
+        let n = r.read_line(&mut line).unwrap();
+        assert_eq!(n, 0, "server should close the idle connection");
+        assert_eq!(coord.metrics.counter_value("connection_timeouts"), 1);
+        // The server keeps serving fresh connections afterwards.
+        let mut c = Client::connect(server.addr).unwrap();
+        assert!(c.ping().unwrap());
+        server.stop();
+    }
+
+    #[test]
+    fn retry_backoff_schedule_doubles_caps_and_honors_hints() {
+        let rp = RetryPolicy {
+            backoff_base: Duration::from_millis(10),
+            backoff_max: Duration::from_millis(40),
+            ..RetryPolicy::default()
+        };
+        let mut rng = Rng::new(11);
+        for (attempt, full_ms) in
+            [(0usize, 10.0f64), (1, 20.0), (2, 40.0), (7, 40.0)]
+        {
+            let d =
+                rp.backoff_for(attempt, None, &mut rng).as_secs_f64() * 1e3;
+            assert!(
+                d >= full_ms / 2.0 - 1e-9 && d < full_ms + 1e-9,
+                "attempt {attempt}: {d}ms outside [{}, {})",
+                full_ms / 2.0,
+                full_ms
+            );
+        }
+        // A finite server hint floors the schedule...
+        let d = rp.backoff_for(0, Some(500.0), &mut rng);
+        assert!(d >= Duration::from_millis(500), "{d:?}");
+        // ...but infinite/zero hints are ignored.
+        let d = rp.backoff_for(0, Some(f64::INFINITY), &mut rng);
+        assert!(d < Duration::from_millis(10), "{d:?}");
+        let d = rp.backoff_for(0, Some(0.0), &mut rng);
+        assert!(d < Duration::from_millis(10), "{d:?}");
+    }
+
+    #[test]
+    fn retry_budget_is_bounded_and_reconnects() {
+        use std::sync::atomic::AtomicUsize;
+        // A server that accepts and immediately hangs up: every attempt
+        // is a transport failure, so the client must reconnect per retry
+        // and give up after exactly max_retries + 1 attempts.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let accepted = Arc::new(AtomicUsize::new(0));
+        let accepted2 = accepted.clone();
+        let h = std::thread::spawn(move || {
+            // First accept feeds Client::connect; the next two feed the
+            // reconnects after failed attempts 0 and 1 (the final
+            // attempt exhausts the budget without reconnecting).
+            for _ in 0..3 {
+                if let Ok((s, _)) = listener.accept() {
+                    accepted2.fetch_add(1, Ordering::SeqCst);
+                    drop(s);
+                }
+            }
+        });
+        let mut c = Client::connect(addr).unwrap();
+        let rp = RetryPolicy {
+            max_retries: 2,
+            backoff_base: Duration::from_millis(1),
+            backoff_max: Duration::from_millis(2),
+            ..RetryPolicy::default()
+        };
+        let err = c
+            .generate_with_retry("synth-math", "Q: 1+1=?", "static:0.9", &rp)
+            .unwrap_err();
+        assert!(!err.to_string().is_empty());
+        h.join().unwrap();
+        // Exactly 1 connect + max_retries reconnects: the budget bounds
+        // both the attempt count and the reconnect storm.
+        assert_eq!(accepted.load(Ordering::SeqCst), 3);
+    }
+
+    #[test]
+    fn retry_returns_success_immediately() {
+        let (server, _coord) = start_stack();
+        let mut c = Client::connect(server.addr).unwrap();
+        let r = c
+            .generate_with_retry(
+                "synth-math",
+                "Q: 2+2=?",
+                "static:0.9",
+                &RetryPolicy::default(),
+            )
+            .unwrap();
+        assert!(r.error.is_none(), "{:?}", r.error);
+        assert!(!r.completion.is_empty());
+        server.stop();
     }
 
     #[test]

@@ -31,6 +31,7 @@ use crate::runtime::ConfOut;
 pub struct Chaos {
     fail_budget: AtomicU64,
     injected: AtomicU64,
+    die_budget: AtomicU64,
 }
 
 impl Chaos {
@@ -46,6 +47,43 @@ impl Chaos {
     /// How many failures have actually been injected so far.
     pub fn injected(&self) -> u64 {
         self.injected.load(Ordering::SeqCst)
+    }
+
+    /// Arm a *process-level* fault: the `n`-th forward pass from now
+    /// aborts the whole process (SIGABRT), mimicking a replica dying
+    /// mid-decode. `serve --chaos-die-after N` arms this in a child
+    /// replica so fleet chaos tests can kill one deterministically.
+    pub fn die_after(&self, n: u64) {
+        self.die_budget.store(n, Ordering::SeqCst);
+    }
+
+    /// Remaining forward passes before the armed process death fires
+    /// (0 = disarmed). Lets tests verify the countdown without dying.
+    pub fn die_budget(&self) -> u64 {
+        self.die_budget.load(Ordering::SeqCst)
+    }
+
+    /// Countdown toward the armed process death, if any.
+    fn maybe_die(&self) {
+        let mut cur = self.die_budget.load(Ordering::SeqCst);
+        while cur > 0 {
+            match self.die_budget.compare_exchange(
+                cur,
+                cur - 1,
+                Ordering::SeqCst,
+                Ordering::SeqCst,
+            ) {
+                Ok(_) => {
+                    if cur == 1 {
+                        // SIGKILL-grade exit: no unwinding, no cleanup
+                        // — exactly what the supervisor must tolerate.
+                        std::process::abort();
+                    }
+                    return;
+                }
+                Err(seen) => cur = seen,
+            }
+        }
     }
 
     /// Decrement-if-positive on the budget; true means "fail this pass".
@@ -150,9 +188,10 @@ impl SimModel {
         self
     }
 
-    /// Fail this pass if the chaos hook is armed.
+    /// Fail this pass (or abort the process) if the chaos hook is armed.
     fn trip(&self) -> Result<()> {
         if let Some(c) = &self.chaos {
+            c.maybe_die();
             if c.should_fail() {
                 bail!("chaos: injected forward failure");
             }
@@ -382,6 +421,21 @@ mod tests {
         assert!(m.fwd_full_kv(&l).is_err());
         assert!(m.fwd_conf(&[l.as_slice()]).is_ok(), "budget exhausted");
         assert_eq!(chaos.injected(), 2);
+    }
+
+    #[test]
+    fn die_budget_counts_down_per_forward_pass() {
+        // Can't cross the abort in-process; verify the countdown wiring
+        // and that a disarmed hook never decrements.
+        let chaos = Chaos::new();
+        let m = SimModel::math_like(2).with_chaos(chaos.clone());
+        let l = m.layout_from_seed(0);
+        assert!(m.fwd_conf(&[l.as_slice()]).is_ok());
+        assert_eq!(chaos.die_budget(), 0, "disarmed hook stays at zero");
+        chaos.die_after(5);
+        m.fwd_conf(&[l.as_slice()]).unwrap();
+        m.fwd_full_kv(&l).unwrap();
+        assert_eq!(chaos.die_budget(), 3, "each forward pass counts down");
     }
 
     #[test]

@@ -4,6 +4,7 @@
 
 pub mod json;
 pub mod logging;
+pub mod procfs;
 pub mod prop;
 pub mod rng;
 pub mod stats;

@@ -1,0 +1,76 @@
+//! Minimal `/proc`-based process introspection plus a signal helper.
+//!
+//! The vendored registry has no `libc`/`nix`, so liveness checks read
+//! `/proc/<pid>/stat` directly and signals go through the external
+//! `kill(1)` binary — both are fine for the supervisor's control plane,
+//! which operates on human-scale timescales (heartbeats, restarts).
+
+use std::process::Command;
+
+/// True iff `pid` names a live, non-zombie process.
+///
+/// Parses the state character from `/proc/<pid>/stat`. The comm field is
+/// parenthesised and may itself contain spaces or parentheses, so the
+/// state char is located after the *last* `)` in the line. A zombie
+/// (`Z`) has exited and only awaits reaping — for supervision purposes
+/// it is dead.
+pub fn pid_alive(pid: u32) -> bool {
+    if pid == 0 {
+        return false;
+    }
+    let stat = match std::fs::read_to_string(format!("/proc/{pid}/stat")) {
+        Ok(s) => s,
+        Err(_) => return false,
+    };
+    match stat.rsplit(')').next().and_then(|rest| {
+        rest.split_whitespace().next().and_then(|s| s.chars().next())
+    }) {
+        Some('Z') => false,
+        Some(_) => true,
+        None => false,
+    }
+}
+
+/// Send `signal` (a `kill(1)` name or number, e.g. "TERM", "KILL", "9")
+/// to `pid`. Returns true if the signal was delivered (the process
+/// existed and we had permission).
+pub fn send_signal(pid: u32, signal: &str) -> bool {
+    Command::new("kill")
+        .arg(format!("-{signal}"))
+        .arg(pid.to_string())
+        .status()
+        .map(|s| s.success())
+        .unwrap_or(false)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn own_pid_is_alive() {
+        assert!(pid_alive(std::process::id()));
+    }
+
+    #[test]
+    fn pid_zero_and_absurd_pid_are_dead() {
+        assert!(!pid_alive(0));
+        // PIDs are bounded by /proc/sys/kernel/pid_max (<= 2^22 by
+        // default); u32::MAX cannot name a live process.
+        assert!(!pid_alive(u32::MAX));
+    }
+
+    #[test]
+    fn signal_zero_probes_liveness() {
+        assert!(send_signal(std::process::id(), "0"));
+        assert!(!send_signal(u32::MAX, "0"));
+    }
+
+    #[test]
+    fn dead_child_is_not_alive_after_reap() {
+        let mut child = Command::new("true").spawn().unwrap();
+        let pid = child.id();
+        child.wait().unwrap();
+        assert!(!pid_alive(pid));
+    }
+}

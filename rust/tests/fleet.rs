@@ -1,0 +1,434 @@
+//! Process-level chaos: the fleet tier (supervisor + router + replica
+//! *processes*) under real SIGKILLs, crashed supervisors, and rolling
+//! restarts (DESIGN.md §16).
+//!
+//! Unlike `tests/chaos.rs` (in-process fault injection through
+//! `sim::Chaos`), every scenario here spawns the actual `osdt` binary
+//! (`CARGO_BIN_EXE_osdt`) and kills real PIDs. The invariants:
+//!
+//! 1. a SIGKILLed replica is detected within heartbeats, in-flight and
+//!    subsequent requests fail over with token-identical completions,
+//!    and the slot respawns on its original port;
+//! 2. `--chaos-die-after` aborts a replica *mid-decode* (no unwinding,
+//!    no reply) and the router retries on the survivor without token
+//!    corruption;
+//! 3. a stale `state.json` (dead supervisor PID) is detected on the
+//!    next start and still-live replicas are adopted, not restarted;
+//! 4. a rolling restart under sustained load drops zero requests and
+//!    triggers zero fleet-wide recalibrations;
+//! 5. a replica dying mid-rolling-restart is still respawned — the
+//!    fleet converges to fully healthy.
+
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use osdt::fleet::state::free_port;
+use osdt::fleet::{
+    probe_ping, roundtrip_line, FleetConfig, FleetRouter, FleetState,
+    ReplicaSpec, ReplicaState, RouterConfig, Supervisor,
+};
+use osdt::policy::ProfileStore;
+use osdt::server::{Client, RetryPolicy};
+use osdt::util::json::Json;
+use osdt::util::procfs::{pid_alive, send_signal};
+
+const OSDT_SPEC: &str = "osdt:block:q1:0.75:0.2";
+
+fn binary() -> PathBuf {
+    PathBuf::from(env!("CARGO_BIN_EXE_osdt"))
+}
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir()
+        .join(format!("osdt-fleet-test-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// Fast-heartbeat fleet config for tests: deaths are detected in
+/// ~150ms and respawns retry within half a second.
+fn fleet_cfg(tag: &str, replicas: usize) -> FleetConfig {
+    FleetConfig {
+        dir: tmpdir(tag),
+        binary: binary(),
+        replicas,
+        heartbeat: Duration::from_millis(150),
+        respawn_base: Duration::from_millis(50),
+        respawn_max: Duration::from_millis(400),
+        request_timeout: Duration::from_secs(10),
+        ..FleetConfig::default()
+    }
+}
+
+/// Generous client-side retry budget: requests during an outage window
+/// must eventually land (shed responses carry finite hints and are
+/// retried; transport drops reconnect).
+fn retry() -> RetryPolicy {
+    RetryPolicy {
+        max_retries: 10,
+        backoff_base: Duration::from_millis(25),
+        backoff_max: Duration::from_millis(250),
+        seed: 7,
+    }
+}
+
+/// Spawn a bare single-process replica (`serve --backend=sim`).
+fn spawn_serve(addr: &str, extra: &[&str]) -> Child {
+    let mut cmd = Command::new(binary());
+    cmd.arg("serve")
+        .arg(format!("--addr={addr}"))
+        .arg("--backend=sim")
+        .arg("--sim-seed=5")
+        .stdin(Stdio::null())
+        .stdout(Stdio::null())
+        .stderr(Stdio::null());
+    for a in extra {
+        cmd.arg(a);
+    }
+    cmd.spawn().unwrap()
+}
+
+fn wait_ping(addr: &str, timeout: Duration) {
+    let deadline = Instant::now() + timeout;
+    while !probe_ping(addr, Duration::from_millis(250)) {
+        assert!(Instant::now() < deadline, "{addr} never served pings");
+        std::thread::sleep(Duration::from_millis(25));
+    }
+}
+
+/// Parse one counter out of a rendered Prometheus text blob.
+fn counter_in(render: &str, family: &str) -> u64 {
+    let prefix = format!("osdt_{family}_total ");
+    render
+        .lines()
+        .find_map(|l| l.strip_prefix(&prefix))
+        .and_then(|v| v.trim().parse().ok())
+        .unwrap_or(0)
+}
+
+#[test]
+fn sigkilled_replica_fails_over_and_respawns_on_its_port() {
+    let cfg = fleet_cfg("sigkill", 2);
+    let dir = cfg.dir.clone();
+    let heartbeat = cfg.heartbeat;
+    let sup = Supervisor::start(cfg).unwrap();
+    assert!(
+        sup.wait_all_healthy(Duration::from_secs(30)),
+        "fleet never became healthy"
+    );
+
+    let mut c = Client::connect(sup.router_addr.as_str()).unwrap();
+    let retry = retry();
+    let baseline = c
+        .generate_with_retry("synth-math", "Q: 2+3=?", "static:0.9", &retry)
+        .unwrap();
+    assert!(baseline.error.is_none(), "{:?}", baseline.error);
+
+    // SIGKILL replica 0 (the real process, per state.json).
+    let st = FleetState::load(&dir).unwrap().unwrap();
+    let victim = st.replicas.iter().find(|r| r.id == 0).unwrap().clone();
+    assert!(pid_alive(victim.pid));
+    assert!(send_signal(victim.pid, "KILL"));
+
+    // Every request during the outage is either served by the survivor
+    // or shed with a finite hint and retried by the client helper —
+    // never dropped, and never token-corrupted (shared sim seed).
+    for i in 0..5 {
+        let r = c
+            .generate_with_retry("synth-math", "Q: 2+3=?", "static:0.9", &retry)
+            .unwrap();
+        assert!(r.error.is_none(), "request {i}: {:?}", r.error);
+        assert_eq!(
+            r.completion, baseline.completion,
+            "failover corrupted tokens (request {i})"
+        );
+    }
+
+    // The router noticed the death (failed forward or health probe).
+    std::thread::sleep(heartbeat * 2);
+    let m = roundtrip_line(
+        &sup.router_addr,
+        r#"{"cmd":"metrics"}"#,
+        Duration::from_secs(2),
+    )
+    .unwrap();
+    let render = m.get("metrics").and_then(Json::as_str).unwrap().to_string();
+    assert!(
+        counter_in(&render, "fleet_replica_failures") >= 1,
+        "router never marked the SIGKILLed replica unhealthy:\n{render}"
+    );
+
+    // The supervisor respawns the slot on its original port.
+    let deadline = Instant::now() + Duration::from_secs(20);
+    loop {
+        let st = FleetState::load(&dir).unwrap().unwrap();
+        let row = st.replicas.iter().find(|r| r.id == 0).unwrap();
+        if row.pid != 0
+            && row.pid != victim.pid
+            && pid_alive(row.pid)
+            && probe_ping(&row.addr, Duration::from_millis(250))
+        {
+            assert_eq!(row.addr, victim.addr, "respawn must reuse the port");
+            break;
+        }
+        assert!(Instant::now() < deadline, "replica 0 never respawned");
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    assert!(sup.metrics().counter_value("fleet_respawns") >= 1);
+    sup.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn chaos_abort_mid_decode_fails_over_with_identical_tokens() {
+    // One replica armed to abort() on its first forward pass — a
+    // SIGKILL-grade death *mid-decode* (no unwinding, no reply line) —
+    // plus one healthy survivor on the same sim seed.
+    let doomed_addr = format!("127.0.0.1:{}", free_port().unwrap());
+    let healthy_addr = format!("127.0.0.1:{}", free_port().unwrap());
+    let mut doomed = spawn_serve(&doomed_addr, &["--chaos-die-after=1"]);
+    let mut healthy = spawn_serve(&healthy_addr, &[]);
+    wait_ping(&doomed_addr, Duration::from_secs(30));
+    wait_ping(&healthy_addr, Duration::from_secs(30));
+
+    // Baseline straight from the survivor.
+    let mut direct = Client::connect(healthy_addr.as_str()).unwrap();
+    let baseline =
+        direct.generate("synth-math", "Q: 7+8=?", "static:0.9").unwrap();
+    assert!(baseline.error.is_none(), "{:?}", baseline.error);
+
+    let router = FleetRouter::start(RouterConfig {
+        replicas: vec![
+            ReplicaSpec { id: 0, addr: doomed_addr.clone() },
+            ReplicaSpec { id: 1, addr: healthy_addr.clone() },
+        ],
+        health_interval: Duration::from_millis(100),
+        request_timeout: Duration::from_secs(10),
+        max_retries: 3,
+        backoff_base: Duration::from_millis(5),
+        backoff_max: Duration::from_millis(40),
+        ..RouterConfig::default()
+    })
+    .unwrap();
+
+    // Ties go to the lowest id, so the first forward lands on the doomed
+    // replica and dies mid-decode. The router must retry on the survivor
+    // and hand back token-identical output.
+    let mut c = Client::connect(router.addr).unwrap();
+    let r = c.generate("synth-math", "Q: 7+8=?", "static:0.9").unwrap();
+    assert!(r.error.is_none(), "{:?}", r.error);
+    assert_eq!(r.completion, baseline.completion, "failover corrupted tokens");
+    let m = router.metrics();
+    assert!(m.counter_value("fleet_request_retries") >= 1, "no retry recorded");
+    assert!(m.counter_value("fleet_replica_failures") >= 1);
+
+    // The doomed process really died (abort, not a clean exit).
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let status = loop {
+        if let Some(s) = doomed.try_wait().unwrap() {
+            break s;
+        }
+        if Instant::now() > deadline {
+            let _ = doomed.kill();
+            let _ = doomed.wait();
+            panic!("armed replica survived its fatal forward pass");
+        }
+        std::thread::sleep(Duration::from_millis(25));
+    };
+    assert!(!status.success(), "abort() must not exit cleanly");
+
+    router.stop();
+    let _ = healthy.kill();
+    let _ = healthy.wait();
+}
+
+#[test]
+fn stale_state_file_is_detected_and_live_replica_adopted() {
+    let dir = tmpdir("stale");
+    let addr = format!("127.0.0.1:{}", free_port().unwrap());
+    let mut orphan = spawn_serve(&addr, &[]);
+    wait_ping(&addr, Duration::from_secs(30));
+    let orphan_pid = orphan.id();
+
+    // Forge the aftermath of a crashed supervisor: state.json names a
+    // dead supervisor PID but a live, still-serving replica.
+    let mut st = FleetState::new("127.0.0.1:1".into());
+    st.supervisor_pid = u32::MAX;
+    st.replicas = vec![ReplicaState {
+        id: 0,
+        pid: orphan_pid,
+        addr: addr.clone(),
+        respawns: 3,
+    }];
+    st.save(&dir).unwrap();
+
+    let mut cfg = fleet_cfg("stale-sup", 1);
+    let spare = std::mem::replace(&mut cfg.dir, dir.clone());
+    let _ = std::fs::remove_dir_all(&spare); // fleet_cfg's tmpdir, unused
+    let sup = Supervisor::start(cfg).unwrap();
+    assert_eq!(
+        sup.metrics().counter_value("fleet_stale_states_recovered"),
+        1,
+        "stale state must be detected and counted"
+    );
+    assert!(sup.wait_all_healthy(Duration::from_secs(30)));
+
+    // Adopted, not respawned: same PID, respawn history preserved.
+    let now = FleetState::load(&dir).unwrap().unwrap();
+    let row = now.replicas.iter().find(|r| r.id == 0).unwrap();
+    assert_eq!(row.pid, orphan_pid, "live replica must be adopted");
+    assert_eq!(row.respawns, 3, "respawn count survives adoption");
+    assert_eq!(sup.metrics().counter_value("fleet_respawns"), 0);
+
+    // Serving works through the freshly spawned router.
+    let mut c = Client::connect(sup.router_addr.as_str()).unwrap();
+    let r = c
+        .generate_with_retry("synth-math", "Q: 6+1=?", "static:0.9", &retry())
+        .unwrap();
+    assert!(r.error.is_none(), "{:?}", r.error);
+
+    // Clean shutdown kills the adopted process and removes state.json,
+    // so the *next* start is Absent, not Stale.
+    sup.shutdown();
+    assert_eq!(FleetState::load(&dir).unwrap(), None);
+    let _ = orphan.wait(); // reap the SIGKILLed child
+    assert!(!pid_alive(orphan_pid));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn rolling_restart_under_load_drops_nothing_and_recalibrates_nothing() {
+    let cfg = fleet_cfg("rolling", 2);
+    let dir = cfg.dir.clone();
+    let sup = Supervisor::start(cfg).unwrap();
+    assert!(sup.wait_all_healthy(Duration::from_secs(30)));
+    let router_addr = sup.router_addr.clone();
+
+    // Warm the shared profile once: the first OSDT request calibrates
+    // and bumps the fleet-wide store generation.
+    let mut c = Client::connect(router_addr.as_str()).unwrap();
+    let warm = c
+        .generate_with_retry("synth-math", "Q: 1+2=?", OSDT_SPEC, &retry())
+        .unwrap();
+    assert!(warm.error.is_none(), "{:?}", warm.error);
+    let store = ProfileStore::new(dir.join("profiles")).unwrap();
+    let gen_before = store.generation();
+    assert!(gen_before >= 1, "calibration must bump the store generation");
+
+    let st = FleetState::load(&dir).unwrap().unwrap();
+    let mut pids_before: Vec<(usize, u32)> =
+        st.replicas.iter().map(|r| (r.id, r.pid)).collect();
+    pids_before.sort_unstable();
+
+    // Sustained load from a second connection while the fleet rolls.
+    let stop = Arc::new(AtomicBool::new(false));
+    let load = {
+        let stop = stop.clone();
+        let addr = router_addr.clone();
+        std::thread::spawn(move || -> (u64, Vec<String>) {
+            let mut c = Client::connect(addr.as_str()).unwrap();
+            let retry = retry();
+            let mut ok = 0u64;
+            let mut failures = Vec::new();
+            while !stop.load(Ordering::Relaxed) {
+                match c.generate_with_retry(
+                    "synth-math",
+                    "Q: 4+5=?",
+                    OSDT_SPEC,
+                    &retry,
+                ) {
+                    Ok(r) if r.error.is_none() => ok += 1,
+                    Ok(r) => failures.push(format!("{:?}", r.error)),
+                    Err(e) => failures.push(format!("{e:#}")),
+                }
+            }
+            (ok, failures)
+        })
+    };
+    std::thread::sleep(Duration::from_millis(200));
+
+    let restarted = sup.rolling_restart().unwrap();
+    assert_eq!(restarted, 2);
+    std::thread::sleep(Duration::from_millis(200));
+    stop.store(true, Ordering::Relaxed);
+    let (completed, failures) = load.join().unwrap();
+    assert!(failures.is_empty(), "dropped requests: {failures:?}");
+    assert!(completed > 0, "load thread never completed a request");
+
+    // Every replica is a new process on its old port...
+    let st = FleetState::load(&dir).unwrap().unwrap();
+    for r in &st.replicas {
+        let old = pids_before.iter().find(|(id, _)| *id == r.id).unwrap().1;
+        assert_ne!(r.pid, old, "replica {} was not restarted", r.id);
+        assert!(pid_alive(r.pid));
+    }
+    // ...and the restart caused zero fleet-wide recalibrations: the new
+    // processes adopt the stored profile instead of re-deriving it.
+    assert_eq!(
+        store.generation(),
+        gen_before,
+        "rolling restart must not recalibrate"
+    );
+    assert_eq!(sup.metrics().counter_value("fleet_rolling_restarts"), 1);
+    assert!(sup.metrics().counter_value("fleet_respawns") >= 2);
+    sup.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn replica_death_mid_rolling_restart_still_converges_healthy() {
+    let cfg = fleet_cfg("mid-roll", 2);
+    let dir = cfg.dir.clone();
+    let sup = Supervisor::start(cfg).unwrap();
+    assert!(sup.wait_all_healthy(Duration::from_secs(30)));
+
+    let st = FleetState::load(&dir).unwrap().unwrap();
+    let bystander = st.replicas.iter().find(|r| r.id == 1).unwrap().clone();
+
+    // Rolling restart walks replicas in id order (0 first). Kill the
+    // *other* replica while the restart is busy with replica 0: the
+    // heartbeat skips only the slot under restart, so the bystander's
+    // death must still be noticed and respawned.
+    std::thread::scope(|s| {
+        let rolling = s.spawn(|| sup.rolling_restart());
+        std::thread::sleep(Duration::from_millis(50));
+        assert!(send_signal(bystander.pid, "KILL"));
+        let result = rolling.join().unwrap();
+        assert!(result.is_ok(), "rolling restart failed: {result:?}");
+    });
+
+    // Converges: both replicas alive, serving, on their original ports,
+    // and the bystander runs a new PID.
+    let deadline = Instant::now() + Duration::from_secs(20);
+    loop {
+        let st = FleetState::load(&dir).unwrap().unwrap();
+        let all_up = st.replicas.len() == 2
+            && st.replicas.iter().all(|r| {
+                r.pid != 0
+                    && pid_alive(r.pid)
+                    && probe_ping(&r.addr, Duration::from_millis(250))
+            });
+        if all_up {
+            let row = st.replicas.iter().find(|r| r.id == 1).unwrap();
+            assert_eq!(row.addr, bystander.addr);
+            assert_ne!(row.pid, bystander.pid);
+            break;
+        }
+        assert!(Instant::now() < deadline, "fleet never converged: {st:?}");
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    let mut c = Client::connect(sup.router_addr.as_str()).unwrap();
+    let r = c
+        .generate_with_retry("synth-math", "Q: 9+9=?", "static:0.9", &retry())
+        .unwrap();
+    assert!(r.error.is_none(), "{:?}", r.error);
+    // Two rolling respawns plus the bystander's heartbeat respawn (the
+    // exact count depends on interleaving; at least the two rolls).
+    assert!(sup.metrics().counter_value("fleet_respawns") >= 2);
+    sup.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}

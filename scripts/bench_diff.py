@@ -30,6 +30,16 @@ the median forecast a positive pass count, and the shed rate exactly 0 —
 the bench never configures a watermark or SLO, so any shed is a bug, not
 noise. Hard errors in BOTH artifacts, even under a seed baseline.
 
+Fleet-tier rows (cache "fleet-steady"/"fleet-failover", DESIGN.md §16)
+come in pairs: the same burst trace routed through the process-tier
+router with both replicas up vs with one torn down mid-trace. Failover
+is pure rerouting on the deterministic simulator, so both rows must
+complete every request (ok == n, zero drops even with a replica dying
+mid-trace) and report a positive tokens/s; the steady row must shed
+nothing. Hard errors in BOTH artifacts, even under a seed baseline.
+(Token identity across the arms is asserted inside the bench itself —
+completions never reach the JSON artifact.)
+
 Exit codes: 0 pass/warn-only, 1 regression, 2 usage or schema error.
 Stdlib only.
 """
@@ -175,6 +185,65 @@ def check_predictive(doc, path):
     return problems
 
 
+def check_fleet(doc, path):
+    """Self-consistency of fleet-tier A/B rows (cache "fleet-steady"/
+    "fleet-failover", DESIGN.md §16).
+
+    The fleet arms run the same deterministic burst trace through the
+    process-tier router, once with both sim replicas up and once with
+    replica 0 killed mid-trace. Failover is pure rerouting — the client's
+    retries plus the router's transport-failure retries must absorb the
+    death entirely — so zero dropped requests (ok == n) is a hard
+    invariant of BOTH rows, not a throughput measurement: violations are
+    errors even under a "seed" baseline. The steady row additionally must
+    shed nothing (no replica died, the shed guardrail firing is a bug).
+    Artifacts predating the fleet rows (no fleet-* cache labels) pass
+    vacuously.
+    """
+    problems = []
+    rows = {key(r): r for r in doc["rows"]}
+    for k, failover in rows.items():
+        policy, cache, residency, rate = k
+        if cache != "fleet-failover":
+            continue
+        steady = rows.get((policy, "fleet-steady", residency, rate))
+        if steady is None:
+            problems.append(
+                f"{path}: {fmt_key(k)} has no matching fleet-steady row"
+            )
+            continue
+        for row, label in ((failover, "fleet-failover"), (steady, "fleet-steady")):
+            where = f"{path}: {label} row for {policy} @{rate}rps"
+            missing = [
+                f for f in ("ok", "n", "tokens_per_sec", "shed_rate")
+                if not isinstance(row.get(f), (int, float))
+            ]
+            if missing:
+                problems.append(f"{where} has no numeric {', '.join(missing)}")
+                continue
+            if float(row["ok"]) != float(row["n"]):
+                why = (
+                    "retries did not absorb the replica death"
+                    if label == "fleet-failover"
+                    else "requests went missing with both replicas up"
+                )
+                problems.append(
+                    f"{where} dropped requests: ok {row['ok']} != n"
+                    f" {row['n']} — {why}"
+                )
+            if float(row["tokens_per_sec"]) <= 0:
+                problems.append(
+                    f"{where} reports tokens_per_sec {row['tokens_per_sec']}"
+                    " — the fleet arm never served"
+                )
+        if float(steady.get("shed_rate", 0)) != 0.0:
+            problems.append(
+                f"{path}: fleet-steady row for {policy} @{rate}rps shed"
+                f" {steady['shed_rate']} of requests with both replicas up"
+            )
+    return problems
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("baseline")
@@ -196,6 +265,8 @@ def main(argv=None):
         + check_elision(cur, args.current)
         + check_predictive(base, args.baseline)
         + check_predictive(cur, args.current)
+        + check_fleet(base, args.baseline)
+        + check_fleet(cur, args.current)
     )
     for p in hard_problems:
         print(f"error: {p}")

@@ -2,15 +2,16 @@
 # Consolidated Rust CI entry point: one script, one source of truth for the
 # flags, shared by every workflow job and runnable locally.
 #
-#     scripts/check_rust.sh [fmt|clippy|build|test|bench-gate|all]
+#     scripts/check_rust.sh [fmt|clippy|build|test|bench-gate|fleet-smoke|all]
 #
 # Modes map 1:1 onto the CI jobs in .github/workflows/ci.yml:
-#   fmt        cargo fmt --all --check
-#   clippy     cargo clippy --workspace --all-targets -- -D warnings
-#   build      cargo build --release --workspace --all-targets
-#   test       cargo build --benches + cargo test -q --workspace
-#   bench-gate serving_load smoke bench + bench_diff trajectory gate
-#   all        everything above, in that order (default)
+#   fmt         cargo fmt --all --check
+#   clippy      cargo clippy --workspace --all-targets -- -D warnings
+#   build       cargo build --release --workspace --all-targets
+#   test        cargo build --benches + cargo test -q --workspace
+#   bench-gate  serving_load smoke bench + bench_diff trajectory gate
+#   fleet-smoke supervisor + 2 sim replicas, SIGKILL one, assert failover
+#   all         everything above, in that order (default)
 #
 # Containers without a Rust toolchain (artifact-only dev images) get a
 # clear diagnostic instead of a bash stack trace; set ALLOW_MISSING_RUST=1
@@ -54,17 +55,25 @@ do_bench_gate() {
     run cargo bench --bench serving_load -- --smoke --seed 7 --json BENCH_serving.json
     run python3 scripts/bench_diff.py bench/trajectory/BENCH_serving.json BENCH_serving.json
 }
+do_fleet_smoke() {
+    # end-to-end process-tier drill (DESIGN.md §16): start a supervisor
+    # with two sim replicas and a router, take a baseline completion,
+    # SIGKILL one replica, assert token-identical failover and a respawn
+    # on the original port, then tear the fleet down
+    run cargo run --release -q -- fleet smoke
+}
 
 case "$mode" in
-    fmt)        do_fmt ;;
-    clippy)     do_clippy ;;
-    build)      do_build ;;
-    test)       do_test ;;
-    bench-gate) do_bench_gate ;;
-    all)        do_fmt; do_clippy; do_build; do_test; do_bench_gate ;;
+    fmt)         do_fmt ;;
+    clippy)      do_clippy ;;
+    build)       do_build ;;
+    test)        do_test ;;
+    bench-gate)  do_bench_gate ;;
+    fleet-smoke) do_fleet_smoke ;;
+    all)         do_fmt; do_clippy; do_build; do_test; do_bench_gate; do_fleet_smoke ;;
     *)
         echo "check_rust: unknown mode '$mode'" \
-            "(fmt|clippy|build|test|bench-gate|all)" >&2
+            "(fmt|clippy|build|test|bench-gate|fleet-smoke|all)" >&2
         exit 2
         ;;
 esac
